@@ -1,0 +1,101 @@
+//! Custom application: the paper's §5 portability claim — "to estimate the
+//! energy-optimal frequency and number of active cores for a NEW
+//! application, only a performance characterization is needed" (the power
+//! model is application-agnostic and fitted once per machine).
+//!
+//! This example defines a user-supplied workload profile (a hypothetical
+//! stencil code), characterizes it through the public API, reuses the
+//! machine's existing power model, and prints the optimal configuration
+//! per input size — plus a time-constrained variant (§2.3's constraint
+//! hook).
+//!
+//! Run: `cargo run --release --example custom_app`
+
+use ecopt::characterize::characterize;
+use ecopt::config::{CampaignSpec, NodeSpec, SvrSpec};
+use ecopt::energy::{config_grid, Constraints, EnergyModel};
+use ecopt::powermodel::{stress_campaign, PowerModel, StressConfig};
+use ecopt::svr::SvrModel;
+use ecopt::workloads::runner::RunConfig;
+use ecopt::workloads::AppProfile;
+
+fn main() -> anyhow::Result<()> {
+    let node = NodeSpec::default();
+
+    // The machine's power model: fitted ONCE, reused for every app.
+    let obs = stress_campaign(&node, &StressConfig::default())?;
+    let (power, fit) = PowerModel::fit(&obs)?;
+    println!(
+        "machine power model (fitted once): p({:.3} f^3 + {:.3} f) + {:.2} + {:.2} s  (APE {:.2}%)\n",
+        power.c1, power.c2, power.c3, power.c4, fit.ape_pct
+    );
+
+    // A user-defined workload: a memory-heavy 3-D stencil with moderate
+    // scalability. Only this profile + a characterization run is needed.
+    let stencil = AppProfile {
+        name: "stencil3d".into(),
+        w_base: 200.0,
+        input_scale: 1.9,
+        serial_frac: 0.01,
+        sync_rel: 0.015,
+        sync_abs_s: 0.002,
+        mem_frac: 0.55, // heavily memory-bound: DVFS is cheap here
+        stall_frac: 0.05,
+        barrier_util: 0.8,
+        frames: 120,
+        artifact: "fluidanimate".into(), // nearest compute analogue
+    };
+
+    let campaign = CampaignSpec {
+        freq_step_mhz: 200, // 6 frequencies keep this example snappy
+        inputs: vec![1, 2, 3],
+        ..Default::default()
+    };
+    println!(
+        "characterizing '{}' over {} configurations...",
+        stencil.name,
+        campaign.sample_count()
+    );
+    let ch = characterize(&node, &campaign, &stencil, &RunConfig { dt: 0.25, ..Default::default() })?;
+    let svr = SvrModel::train(&ch.train_samples(), &SvrSpec::default())?;
+    println!("trained SVR: {} support vectors\n", svr.n_support);
+
+    let em = EnergyModel::new(power, svr, node.clone());
+    let grid = config_grid(&campaign, &node);
+
+    println!("input   optimal config          predicted");
+    for input in [1u32, 2, 3] {
+        let opt = em.optimize(&grid, input, &Constraints::default())?;
+        println!(
+            "  {}     {:.1} GHz x {:>2} cores      {:>7.1} s  {:>8.2} kJ",
+            input,
+            opt.f_mhz as f64 / 1000.0,
+            opt.cores,
+            opt.pred_time_s,
+            opt.pred_energy_j / 1000.0
+        );
+    }
+
+    // §2.3: constraints — same surface, bounded execution time.
+    let unconstrained = em.optimize(&grid, 3, &Constraints::default())?;
+    let deadline = unconstrained.pred_time_s * 0.8;
+    match em.optimize(
+        &grid,
+        3,
+        &Constraints {
+            max_time_s: Some(deadline),
+            ..Default::default()
+        },
+    ) {
+        Ok(fast) => println!(
+            "\nwith a {:.0}s deadline (input 3): {:.1} GHz x {} cores, {:.2} kJ (+{:.1}% energy)",
+            deadline,
+            fast.f_mhz as f64 / 1000.0,
+            fast.cores,
+            fast.pred_energy_j / 1000.0,
+            (fast.pred_energy_j / unconstrained.pred_energy_j - 1.0) * 100.0
+        ),
+        Err(_) => println!("\nno configuration meets a {deadline:.0}s deadline"),
+    }
+    Ok(())
+}

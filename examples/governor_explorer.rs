@@ -1,0 +1,79 @@
+//! Governor explorer: run one workload under every cpufreq governor and
+//! compare time / energy / mean frequency — the §3.2 cast of characters.
+//!
+//! Run: `cargo run --release --example governor_explorer [app] [cores]`
+
+use ecopt::config::NodeSpec;
+use ecopt::governors::by_name;
+use ecopt::node::{power::PowerProcess, Node};
+use ecopt::workloads::app_by_name;
+use ecopt::workloads::runner::{run, RunConfig};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let app_name = args.first().map(|s| s.as_str()).unwrap_or("fluidanimate");
+    let cores: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(16);
+    let input = 2;
+
+    let spec = NodeSpec::default();
+    let mut node = Node::new(spec.clone())?;
+    let power = PowerProcess::new(spec.power.clone());
+    let app = app_by_name(app_name)?;
+
+    println!("workload {app_name}, input {input}, {cores} cores\n");
+    println!(
+        "{:<16} {:>9} {:>11} {:>12} {:>9}",
+        "governor", "time (s)", "energy (kJ)", "mean power", "mean GHz"
+    );
+
+    let governors = [
+        "performance",
+        "powersave",
+        "ondemand",
+        "conservative",
+        "userspace:1800",
+    ];
+    let mut results = Vec::new();
+    for name in governors {
+        let mut gov = by_name(name, &node)?;
+        let r = run(
+            &mut node,
+            &mut gov,
+            &power,
+            &app,
+            input,
+            cores,
+            &RunConfig::default(),
+        )?;
+        println!(
+            "{:<16} {:>9.1} {:>11.2} {:>10.1} W {:>9.2}",
+            name,
+            r.wall_time_s,
+            r.energy_j / 1000.0,
+            r.mean_power_w,
+            r.mean_freq_ghz
+        );
+        results.push((name, r));
+    }
+
+    let best = results
+        .iter()
+        .min_by(|a, b| a.1.energy_j.total_cmp(&b.1.energy_j))
+        .unwrap();
+    let fastest = results
+        .iter()
+        .min_by(|a, b| a.1.wall_time_s.total_cmp(&b.1.wall_time_s))
+        .unwrap();
+    println!(
+        "\nleast energy: {} ({:.2} kJ); fastest: {} ({:.1} s)",
+        best.0,
+        best.1.energy_j / 1000.0,
+        fastest.0,
+        fastest.1.wall_time_s
+    );
+    println!(
+        "note: none of these pick the core count — that is the gap the paper's\n\
+         methodology fills (see `cargo run --release --example full_reproduction`)."
+    );
+    Ok(())
+}

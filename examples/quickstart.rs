@@ -1,0 +1,84 @@
+//! Quickstart: the whole methodology in ~60 lines.
+//!
+//! 1. Fit the application-agnostic power model (paper Eq. 7) from a
+//!    simulated IPMI stress campaign.
+//! 2. Characterize one application (swaptions) on a reduced grid and
+//!    train the SVR performance model.
+//! 3. Minimize E = P x T over the configuration grid and print the
+//!    energy-optimal (frequency, cores) — then validate it by actually
+//!    running that configuration on the simulated node.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use ecopt::config::{CampaignSpec, ExperimentConfig, SvrSpec};
+use ecopt::coordinator::Coordinator;
+use ecopt::energy::{config_grid, Constraints, EnergyModel};
+use ecopt::governors::Userspace;
+use ecopt::node::{power::PowerProcess, Node};
+use ecopt::workloads::runner::{run, RunConfig};
+use ecopt::workloads::app_by_name;
+
+fn main() -> anyhow::Result<()> {
+    // A reduced campaign (6 frequencies x 16 core counts x 3 inputs) so the
+    // quickstart finishes in seconds; the full paper grid is the default.
+    // (Campaign frequencies must lie on the node's 100 MHz DVFS ladder.)
+    let cfg = ExperimentConfig {
+        campaign: CampaignSpec {
+            freq_step_mhz: 200,
+            core_max: 16,
+            inputs: vec![1, 2, 3],
+            ..Default::default()
+        },
+        svr: SvrSpec {
+            folds: 5,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let coord = Coordinator::new(cfg.clone()).with_run_config(RunConfig {
+        dt: 0.2,
+        ..Default::default()
+    });
+
+    // --- 1. power model -----------------------------------------------------
+    let (_, power_model, fit) = coord.fit_power()?;
+    println!(
+        "power model:  P(f,p,s) = p({:.3} f^3 + {:.3} f) + {:.2} + {:.2} s",
+        power_model.c1, power_model.c2, power_model.c3, power_model.c4
+    );
+    println!("              APE {:.2}%  RMSE {:.2} W\n", fit.ape_pct, fit.rmse_w);
+
+    // --- 2. performance model -----------------------------------------------
+    let app = app_by_name("swaptions")?;
+    let (ch, svr, cv, _, _) = coord.model_app(&app)?;
+    println!(
+        "performance model: {} samples, {} SVs, CV MAE {:.2} s / PAE {:.2}%\n",
+        ch.samples.len(),
+        svr.n_support,
+        cv.mae,
+        cv.pae_pct
+    );
+
+    // --- 3. optimize + validate ----------------------------------------------
+    let em = EnergyModel::new(power_model, svr, cfg.node.clone());
+    let grid = config_grid(&cfg.campaign, &cfg.node);
+    let opt = em.optimize(&grid, 2, &Constraints::default())?;
+    println!(
+        "energy-optimal config for input 2: {:.2} GHz on {} cores (predicted {:.1} s, {:.2} kJ)",
+        opt.f_mhz as f64 / 1000.0,
+        opt.cores,
+        opt.pred_time_s,
+        opt.pred_energy_j / 1000.0
+    );
+
+    let mut node = Node::new(cfg.node.clone())?;
+    let power = PowerProcess::new(cfg.node.power.clone());
+    let mut gov = Userspace::new(opt.f_mhz);
+    let r = run(&mut node, &mut gov, &power, &app, 2, opt.cores, &RunConfig::default())?;
+    println!(
+        "measured at that config:          {:.1} s, {:.2} kJ",
+        r.wall_time_s,
+        r.energy_j / 1000.0
+    );
+    Ok(())
+}

@@ -1,0 +1,72 @@
+"""AOT pipeline: lower every L2 model to HLO *text* + a shape manifest.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the published ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import SHAPES
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True).
+
+    return_tuple=True wraps the outputs in a single tuple so the Rust side
+    unwraps with to_tuple() uniformly regardless of arity.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_all(out_dir: pathlib.Path) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest = {"format": "hlo-text", "artifacts": {}}
+    for name, (fn, specs) in SHAPES.items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        out_avals = jax.eval_shape(fn, *specs)
+        if not isinstance(out_avals, (tuple, list)):
+            out_avals = (out_avals,)
+        manifest["artifacts"][name] = {
+            "file": path.name,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": [{"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs],
+            "outputs": [
+                {"shape": list(a.shape), "dtype": str(a.dtype)} for a in out_avals
+            ],
+        }
+        print(f"  {name}: {len(text)} chars, {len(specs)} inputs")
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2) + "\n")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output dir")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+    print(f"lowering {len(SHAPES)} models -> {out}/")
+    build_all(out)
+    print("AOT done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Pallas ray-tracing kernel (PARSEC raytrace analogue).
+
+PARSEC's raytrace shoots one primary ray per pixel into a BVH; the hot loop
+is intersection + shading.  We keep the same per-pixel structure with a
+flat sphere list (the scene is small enough that the BVH is irrelevant to
+the energy methodology): each grid step intersects a (BLOCK_RAYS, 6) tile
+of rays against ALL spheres held in VMEM, selects the nearest hit, and
+Lambert-shades it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_RAYS = 256
+
+
+def _raytrace_kernel(ray_ref, sph_ref, light_ref, o_ref):
+    rays = ray_ref[...]  # (BR, 6)
+    spheres = sph_ref[...]  # (S, 4)
+    light = light_ref[...]  # (1, 3)
+
+    o = rays[:, None, 0:3]
+    d = rays[:, None, 3:6]
+    c = spheres[None, :, 0:3]
+    r = spheres[None, :, 3]
+
+    oc = o - c
+    b = jnp.sum(oc * d, axis=-1)
+    cterm = jnp.sum(oc * oc, axis=-1) - r * r
+    disc = b * b - cterm
+    hit = disc > 0.0
+    sq = jnp.sqrt(jnp.where(hit, disc, 0.0))
+    t = -b - sq
+    valid = hit & (t > 1e-4)
+    big = jnp.float32(3.0e38)
+    t = jnp.where(valid, t, big)
+
+    t_min = jnp.min(t, axis=1)
+    idx = jnp.argmin(t, axis=1)
+    hit_any = t_min < big
+
+    t_safe = jnp.where(hit_any, t_min, 0.0)
+    point = rays[:, 0:3] + rays[:, 3:6] * t_safe[:, None]
+    center = spheres[idx, 0:3]
+    radius = spheres[idx, 3]
+    normal = (point - center) / radius[:, None]
+    lambert = jnp.maximum(jnp.sum(normal * light, axis=-1), 0.0)
+    o_ref[...] = jnp.where(hit_any, lambert, 0.0)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rays",))
+def raytrace(
+    rays: jax.Array,
+    spheres: jax.Array,
+    light: jax.Array,
+    *,
+    block_rays: int = BLOCK_RAYS,
+) -> jax.Array:
+    """Shade (R, 6) rays against (S, 4) spheres; matches ``ref.raytrace``.
+
+    R must be a multiple of ``block_rays``. light: (3,) unit vector.
+    Returns (R,) Lambert intensities (0 on miss).
+    """
+    rn, six = rays.shape
+    s = spheres.shape[0]
+    assert six == 6 and spheres.shape[1] == 4
+    assert rn % block_rays == 0, f"rays {rn} % block {block_rays} != 0"
+    out = pl.pallas_call(
+        _raytrace_kernel,
+        out_shape=jax.ShapeDtypeStruct((rn, 1), jnp.float32),
+        grid=(rn // block_rays,),
+        in_specs=[
+            pl.BlockSpec((block_rays, 6), lambda i: (i, 0)),
+            pl.BlockSpec((s, 4), lambda i: (0, 0)),
+            pl.BlockSpec((1, 3), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rays, 1), lambda i: (i, 0)),
+        interpret=True,
+    )(rays.astype(jnp.float32), spheres.astype(jnp.float32), light.astype(jnp.float32).reshape(1, 3))
+    return out[:, 0]

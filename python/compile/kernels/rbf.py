@@ -1,0 +1,153 @@
+"""Pallas RBF Gram-matrix / SVR-decision kernels (L1 hot spot).
+
+The performance model's prediction path is dominated by the RBF Gram matrix
+between the query grid (all candidate (f, p, N) configurations) and the
+trained support vectors.  This kernel tiles that computation for VMEM:
+
+  * the squared distance is expanded as ||x||^2 + ||y||^2 - 2 x y^T so the
+    dominant term is a (BM x D) @ (D x BN) matmul that maps onto the MXU;
+  * tiles of BM x BN outputs are produced per grid step, with the x-tile,
+    y-tile and output tile simultaneously resident (BM*D + BN*D + BM*BN
+    floats of VMEM — ~196 KiB at BM=BN=128, D=3..8, f32).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so the kernel is lowered to plain HLO (see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. 128 matches the MXU systolic-array edge; for the
+# shapes this paper needs (352-query grid x <=2048 SVs) the whole problem
+# fits in a handful of tiles.
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _pad_rows(a: jax.Array, multiple: int) -> jax.Array:
+    """Zero-pad the leading dim of ``a`` up to the next multiple."""
+    m = a.shape[0]
+    rem = (-m) % multiple
+    if rem == 0:
+        return a
+    pad = [(0, rem)] + [(0, 0)] * (a.ndim - 1)
+    return jnp.pad(a, pad)
+
+
+def _rbf_gram_kernel(x_ref, y_ref, g_ref, o_ref):
+    """One (BM, BN) tile of exp(-gamma * ||x_i - y_j||^2).
+
+    x_ref: (BM, D) tile of queries, y_ref: (BN, D) tile of centers,
+    g_ref: (1, 1) gamma, o_ref: (BM, BN) output tile.
+    """
+    x = x_ref[...]
+    y = y_ref[...]
+    gamma = g_ref[0, 0]
+    # ||x||^2 + ||y||^2 - 2 x.y^T ; the matmul term dominates and is MXU-bound.
+    xx = jnp.sum(x * x, axis=1)[:, None]
+    yy = jnp.sum(y * y, axis=1)[None, :]
+    xy = jnp.dot(x, y.T, preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(xx + yy - 2.0 * xy, 0.0)
+    o_ref[...] = jnp.exp(-gamma * d2)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def rbf_gram(
+    x: jax.Array,
+    y: jax.Array,
+    gamma: jax.Array,
+    *,
+    block_m: int = BLOCK_M,
+    block_n: int = BLOCK_N,
+) -> jax.Array:
+    """Tiled RBF Gram matrix; semantics match ``ref.rbf_gram``.
+
+    x: (M, D), y: (N, D), gamma: scalar array. Returns (M, N) float32.
+    Inputs are zero-padded to tile multiples; the padded rows are sliced
+    away before returning, so any M, N >= 1 works.
+    """
+    m, d = x.shape
+    n, d2 = y.shape
+    assert d == d2, f"feature dims differ: {d} vs {d2}"
+    xp = _pad_rows(x.astype(jnp.float32), block_m)
+    yp = _pad_rows(y.astype(jnp.float32), block_n)
+    g = jnp.reshape(gamma.astype(jnp.float32), (1, 1))
+    mp, np_ = xp.shape[0], yp.shape[0]
+
+    out = pl.pallas_call(
+        _rbf_gram_kernel,
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        grid=(mp // block_m, np_ // block_n),
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        interpret=True,
+    )(xp, yp, g)
+    return out[:m, :n]
+
+
+def _svr_decision_kernel(q_ref, sv_ref, dual_ref, g_ref, o_ref):
+    """One BM-row slab of the decision function.
+
+    Computes the full Gram row-block against ALL support vectors at once
+    (they are passed as a single block: the SV set is small enough for
+    VMEM at this problem's scale) and contracts with the dual coefficients.
+    q_ref: (BM, D); sv_ref: (N, D); dual_ref: (N, 1); o_ref: (BM, 1).
+    """
+    q = q_ref[...]
+    sv = sv_ref[...]
+    dual = dual_ref[...]
+    gamma = g_ref[0, 0]
+    qq = jnp.sum(q * q, axis=1)[:, None]
+    ss = jnp.sum(sv * sv, axis=1)[None, :]
+    qs = jnp.dot(q, sv.T, preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(qq + ss - 2.0 * qs, 0.0)
+    k = jnp.exp(-gamma * d2)
+    o_ref[...] = jnp.dot(k, dual, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def svr_decision(
+    q: jax.Array,
+    sv: jax.Array,
+    dual: jax.Array,
+    b: jax.Array,
+    gamma: jax.Array,
+    *,
+    block_m: int = BLOCK_M,
+) -> jax.Array:
+    """Fused Gram + contraction; semantics match ``ref.svr_decision``.
+
+    q: (M, D) queries, sv: (N, D) padded support set, dual: (N,) signed
+    dual coefficients (zero entries = padding), b/gamma scalars.
+    Returns (M,) predictions.
+    """
+    m, d = q.shape
+    n = sv.shape[0]
+    qp = _pad_rows(q.astype(jnp.float32), block_m)
+    mp = qp.shape[0]
+    g = jnp.reshape(gamma.astype(jnp.float32), (1, 1))
+    dual2 = dual.astype(jnp.float32).reshape(n, 1)
+
+    out = pl.pallas_call(
+        _svr_decision_kernel,
+        out_shape=jax.ShapeDtypeStruct((mp, 1), jnp.float32),
+        grid=(mp // block_m,),
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, 1), lambda i: (i, 0)),
+        interpret=True,
+    )(qp, sv.astype(jnp.float32), dual2, g)
+    return out[:m, 0] + b.astype(jnp.float32)

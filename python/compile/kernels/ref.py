@@ -1,0 +1,192 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: each Pallas kernel in
+``rbf.py`` / ``blackscholes.py`` / ``swaptions.py`` / ``raytrace.py`` /
+``fluidanimate.py`` is checked against the function of the same name here
+by ``python/tests/``.  Keep these boring and obviously correct — no tiling,
+no tricks, straight dense jnp.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import erf
+
+# ---------------------------------------------------------------------------
+# RBF Gram matrix / SVR decision function (performance-model hot spot)
+# ---------------------------------------------------------------------------
+
+
+def rbf_gram(x: jax.Array, y: jax.Array, gamma: jax.Array) -> jax.Array:
+    """K[i, j] = exp(-gamma * ||x_i - y_j||^2) for x:(M,D), y:(N,D)."""
+    d2 = jnp.sum((x[:, None, :] - y[None, :, :]) ** 2, axis=-1)
+    return jnp.exp(-gamma * d2)
+
+
+def svr_decision(
+    q: jax.Array, sv: jax.Array, dual: jax.Array, b: jax.Array, gamma: jax.Array
+) -> jax.Array:
+    """epsilon-SVR decision function f(q) = sum_j dual_j K(q, sv_j) + b.
+
+    q:(M,D) query points, sv:(N,D) support vectors, dual:(N,) signed dual
+    coefficients (alpha - alpha*), b scalar bias.  Entries of ``dual`` that
+    are exactly zero correspond to padding (non-support vectors).
+    """
+    return rbf_gram(q, sv, gamma) @ dual + b
+
+
+# ---------------------------------------------------------------------------
+# Blackscholes: analytic European option pricing
+# ---------------------------------------------------------------------------
+
+
+def _norm_cdf(x: jax.Array) -> jax.Array:
+    return 0.5 * (1.0 + erf(x / jnp.sqrt(2.0).astype(x.dtype)))
+
+
+def blackscholes(
+    spot: jax.Array,
+    strike: jax.Array,
+    rate: jax.Array,
+    vol: jax.Array,
+    tte: jax.Array,
+    is_call: jax.Array,
+) -> jax.Array:
+    """Black-Scholes European option prices.
+
+    All inputs are (B,) arrays; ``is_call`` is 1.0 for calls, 0.0 for puts.
+    Mirrors the computation of PARSEC's blackscholes inner loop.
+    """
+    sqrt_t = jnp.sqrt(tte)
+    d1 = (jnp.log(spot / strike) + (rate + 0.5 * vol * vol) * tte) / (vol * sqrt_t)
+    d2 = d1 - vol * sqrt_t
+    disc = strike * jnp.exp(-rate * tte)
+    call = spot * _norm_cdf(d1) - disc * _norm_cdf(d2)
+    put = disc * _norm_cdf(-d2) - spot * _norm_cdf(-d1)
+    return jnp.where(is_call > 0.5, call, put)
+
+
+# ---------------------------------------------------------------------------
+# Swaptions: HJM-style Monte-Carlo payoff (PARSEC swaptions analogue)
+# ---------------------------------------------------------------------------
+
+
+def swaption_payoffs(normals: jax.Array, params: jax.Array) -> jax.Array:
+    """Per-path discounted swaption payoffs.
+
+    normals: (PATHS, STEPS) standard-normal draws.
+    params:  (4,) = [r0, sigma, strike, dt].
+
+    Simulates a one-factor short-rate path r_{t+1} = r_t + sigma*sqrt(dt)*z
+    (the HJM simulation collapsed to its driving factor, as in PARSEC's
+    HJM_SimPath), accumulates the discount factor along the path, and pays
+    max(r_T - strike, 0) discounted — one payoff per path, (PATHS,).
+    """
+    r0, sigma, strike, dt = params[0], params[1], params[2], params[3]
+    sqdt = jnp.sqrt(dt)
+
+    def step(carry, z):
+        r, disc = carry
+        r_new = r + sigma * sqdt * z
+        disc_new = disc + r_new * dt
+        return (r_new, disc_new), None
+
+    paths = normals.shape[0]
+    init = (jnp.full((paths,), r0, normals.dtype), jnp.zeros((paths,), normals.dtype))
+    (r_final, disc), _ = jax.lax.scan(step, init, normals.T)
+    return jnp.maximum(r_final - strike, 0.0) * jnp.exp(-disc)
+
+
+def swaption_price(normals: jax.Array, params: jax.Array) -> jax.Array:
+    """Monte-Carlo swaption price: mean of the per-path payoffs, shape (1,)."""
+    return jnp.mean(swaption_payoffs(normals, params), keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# Raytrace: ray/sphere nearest-hit + Lambert shading (PARSEC raytrace analogue)
+# ---------------------------------------------------------------------------
+
+
+def raytrace(rays: jax.Array, spheres: jax.Array, light: jax.Array) -> jax.Array:
+    """Shade a batch of rays against a fixed set of spheres.
+
+    rays:    (R, 6)  = [ox, oy, oz, dx, dy, dz]  (directions unit-norm)
+    spheres: (S, 4)  = [cx, cy, cz, radius]
+    light:   (3,)    unit vector towards the light
+    returns: (R,)    Lambert intensity of the nearest hit, 0.0 on miss.
+    """
+    o = rays[:, None, 0:3]  # (R,1,3)
+    d = rays[:, None, 3:6]  # (R,1,3)
+    c = spheres[None, :, 0:3]  # (1,S,3)
+    r = spheres[None, :, 3]  # (1,S)
+
+    oc = o - c
+    b = jnp.sum(oc * d, axis=-1)  # (R,S)
+    cterm = jnp.sum(oc * oc, axis=-1) - r * r
+    disc = b * b - cterm
+    hit = disc > 0.0
+    sq = jnp.sqrt(jnp.where(hit, disc, 0.0))
+    t = -b - sq  # nearest root
+    valid = hit & (t > 1e-4)
+    t = jnp.where(valid, t, jnp.inf)
+
+    t_min = jnp.min(t, axis=1)  # (R,)
+    idx = jnp.argmin(t, axis=1)  # (R,)
+    hit_any = jnp.isfinite(t_min)
+
+    t_safe = jnp.where(hit_any, t_min, 0.0)
+    point = rays[:, 0:3] + rays[:, 3:6] * t_safe[:, None]
+    center = spheres[idx, 0:3]
+    radius = spheres[idx, 3]
+    normal = (point - center) / radius[:, None]
+    lambert = jnp.maximum(jnp.sum(normal * light[None, :], axis=-1), 0.0)
+    return jnp.where(hit_any, lambert, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Fluidanimate: SPH density + pressure-force step (PARSEC fluidanimate analogue)
+# ---------------------------------------------------------------------------
+
+
+def sph_density(pos: jax.Array, h: jax.Array) -> jax.Array:
+    """Poly6-style SPH densities for particle positions pos:(N,3).
+
+    rho_i = sum_j max(0, h^2 - ||x_i - x_j||^2)^3  (unnormalised poly6).
+    """
+    diff = pos[:, None, :] - pos[None, :, :]
+    r2 = jnp.sum(diff * diff, axis=-1)
+    w = jnp.maximum(h * h - r2, 0.0)
+    return jnp.sum(w * w * w, axis=1)
+
+
+def sph_forces(pos: jax.Array, rho: jax.Array, h: jax.Array, k: jax.Array) -> jax.Array:
+    """Pressure-gradient forces from a spiky-style kernel.
+
+    F_i = sum_{j != i} -k * (p_i + p_j)/2 * (h - r)^2 * (x_i - x_j)/r
+    with p = k * rho (ideal-gas EOS, rest density folded into k).
+    """
+    diff = pos[:, None, :] - pos[None, :, :]  # (N,N,3)
+    r2 = jnp.sum(diff * diff, axis=-1)
+    r = jnp.sqrt(jnp.maximum(r2, 1e-12))
+    w = jnp.maximum(h - r, 0.0)
+    press = k * rho
+    pavg = 0.5 * (press[:, None] + press[None, :])
+    n = pos.shape[0]
+    mask = 1.0 - jnp.eye(n, dtype=pos.dtype)
+    coef = -k * pavg * w * w / r * mask
+    return jnp.sum(coef[:, :, None] * diff, axis=1)
+
+
+def sph_step(pos: jax.Array, vel: jax.Array, params: jax.Array):
+    """One explicit-Euler SPH step.  params: (4,) = [h, k, dt, damping].
+
+    Returns (new_pos, new_vel, rho).
+    """
+    h, k, dt, damping = params[0], params[1], params[2], params[3]
+    rho = sph_density(pos, h)
+    f = sph_forces(pos, rho, h, k)
+    gravity = jnp.array([0.0, -9.8, 0.0], pos.dtype)
+    vel_new = (vel + dt * (f + gravity[None, :])) * damping
+    pos_new = pos + dt * vel_new
+    return pos_new, vel_new, rho

@@ -1,0 +1,133 @@
+"""L2 JAX models — the computations the Rust coordinator executes via PJRT.
+
+Each public ``*_model`` function here is AOT-lowered by ``aot.py`` into one
+HLO-text artifact with the fixed shapes in ``SHAPES``.  They call the L1
+Pallas kernels (``kernels/``) so kernel + surrounding graph lower into a
+single fused HLO module.  Python never runs at serving time: the Rust side
+loads these artifacts once and feeds them buffers.
+
+Artifacts
+---------
+``svr_energy``    — the paper's deployed decision path: SVR time prediction
+                    over the full (f, p) configuration grid, the CMOS power
+                    model (Eq. 7), and the energy surface E = P x T (Eq. 8).
+``blackscholes``  — PARSEC blackscholes batch pricing.
+``swaptions``     — PARSEC swaptions HJM Monte-Carlo pricing.
+``raytrace``      — PARSEC raytrace frame shading.
+``fluidanimate``  — PARSEC fluidanimate SPH step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import blackscholes as bs_kernel
+from .kernels import fluidanimate as fluid_kernel
+from .kernels import raytrace as rt_kernel
+from .kernels import rbf as rbf_kernel
+from .kernels import swaptions as sw_kernel
+
+# ---------------------------------------------------------------------------
+# Fixed AOT shapes (must match rust/src/runtime/artifacts.rs)
+# ---------------------------------------------------------------------------
+
+MAX_SV = 2048  # padded support-vector capacity (train set is <= 1760 rows)
+FEATURES = 3  # (frequency, cores, input size), standardized
+GRID_POINTS = 352  # 11 frequencies x 32 core counts
+BS_BATCH = 4096
+SW_PATHS = 2048
+SW_STEPS = 16
+RT_RAYS = 4096
+RT_SPHERES = 16
+FLUID_PARTICLES = 512
+
+F32 = jnp.float32
+
+
+def power_eq7(f_ghz: jax.Array, p_cores: jax.Array, powc: jax.Array, s: jax.Array) -> jax.Array:
+    """Paper Eq. (7): P(f,p,s) = p*(c1 f^3 + c2 f) + c3 + c4 s.
+
+    f_ghz, p_cores: (G,) grids; powc: (4,) = [c1, c2, c3, c4]; s: (1,).
+    Returns (G,) watts.
+    """
+    c1, c2, c3, c4 = powc[0], powc[1], powc[2], powc[3]
+    return p_cores * (c1 * f_ghz**3 + c2 * f_ghz) + c3 + c4 * s[0]
+
+
+def svr_energy_model(
+    sv: jax.Array,  # (MAX_SV, FEATURES) scaled support vectors (zero-padded)
+    dual: jax.Array,  # (MAX_SV,) signed dual coefs (zero = padding)
+    b: jax.Array,  # (1,) bias
+    gamma: jax.Array,  # (1,) RBF gamma (in scaled-feature space)
+    grid_scaled: jax.Array,  # (GRID_POINTS, FEATURES) scaled query grid
+    grid_fp: jax.Array,  # (GRID_POINTS, 2) raw [f GHz, p cores] per query
+    powc: jax.Array,  # (4,) fitted power coefficients c1..c4
+    sockets: jax.Array,  # (1,) active socket count
+):
+    """The deployed decision path (paper Eqs. 7+8 over the whole grid).
+
+    Returns (pred_time_s, power_w, energy_j), each (GRID_POINTS,).
+    Predicted times are clamped to a 1 ms floor: the SVR is unconstrained
+    and can dip negative far outside its training support; energy must
+    stay positive for the argmin to be meaningful.
+    """
+    t_hat = rbf_kernel.svr_decision(grid_scaled, sv, dual, b[0], gamma[0])
+    t_hat = jnp.maximum(t_hat, 1e-3)
+    p_hat = power_eq7(grid_fp[:, 0], grid_fp[:, 1], powc, sockets)
+    energy = p_hat * t_hat
+    return t_hat, p_hat, energy
+
+
+def blackscholes_model(options: jax.Array):
+    """Price a (BS_BATCH, 6) option batch -> ((BS_BATCH,) prices,)."""
+    return (bs_kernel.blackscholes_batch(options),)
+
+
+def swaptions_model(normals: jax.Array, params: jax.Array):
+    """HJM MC pricing -> (price (1,), payoffs (SW_PATHS,))."""
+    payoffs = sw_kernel.swaption_payoffs(normals, params)
+    return jnp.mean(payoffs, keepdims=True), payoffs
+
+
+def raytrace_model(rays: jax.Array, spheres: jax.Array, light: jax.Array):
+    """Shade a frame of rays -> ((RT_RAYS,) intensities,)."""
+    return (rt_kernel.raytrace(rays, spheres, light),)
+
+
+def fluidanimate_model(pos: jax.Array, vel: jax.Array, params: jax.Array):
+    """One SPH step -> (new_pos, new_vel, rho)."""
+    return fluid_kernel.sph_step(pos, vel, params)
+
+
+# ---------------------------------------------------------------------------
+# AOT registry: name -> (fn, [input ShapeDtypeStructs])
+# ---------------------------------------------------------------------------
+
+
+def _s(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+SHAPES = {
+    "svr_energy": (
+        svr_energy_model,
+        [
+            _s(MAX_SV, FEATURES),
+            _s(MAX_SV),
+            _s(1),
+            _s(1),
+            _s(GRID_POINTS, FEATURES),
+            _s(GRID_POINTS, 2),
+            _s(4),
+            _s(1),
+        ],
+    ),
+    "blackscholes": (blackscholes_model, [_s(BS_BATCH, 6)]),
+    "swaptions": (swaptions_model, [_s(SW_PATHS, SW_STEPS), _s(4)]),
+    "raytrace": (raytrace_model, [_s(RT_RAYS, 6), _s(RT_SPHERES, 4), _s(3)]),
+    "fluidanimate": (
+        fluidanimate_model,
+        [_s(FLUID_PARTICLES, 3), _s(FLUID_PARTICLES, 3), _s(4)],
+    ),
+}

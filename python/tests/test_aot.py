@@ -1,0 +1,69 @@
+"""AOT pipeline tests: artifacts parse, manifest is accurate, build is stable."""
+
+import json
+import pathlib
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.build_all(out)
+    return out, manifest
+
+
+def test_all_artifacts_written(built):
+    out, manifest = built
+    for name in model.SHAPES:
+        assert (out / f"{name}.hlo.txt").exists(), name
+        assert name in manifest["artifacts"]
+    assert (out / "manifest.json").exists()
+
+
+def test_hlo_text_is_parseable_hlo(built):
+    out, _ = built
+    for name in model.SHAPES:
+        text = (out / f"{name}.hlo.txt").read_text()
+        assert text.startswith("HloModule"), f"{name} does not look like HLO text"
+        assert "ENTRY" in text
+
+
+def test_manifest_shapes_match_registry(built):
+    _, manifest = built
+    for name, (fn, specs) in model.SHAPES.items():
+        entry = manifest["artifacts"][name]
+        assert len(entry["inputs"]) == len(specs)
+        for got, spec in zip(entry["inputs"], specs):
+            assert got["shape"] == list(spec.shape)
+            assert got["dtype"] == "float32"
+
+
+def test_manifest_roundtrips_as_json(built):
+    out, manifest = built
+    loaded = json.loads((out / "manifest.json").read_text())
+    assert loaded == manifest
+
+
+def test_build_is_deterministic(built):
+    """Same registry -> byte-identical HLO (hashes stable across builds)."""
+    out, manifest = built
+    with tempfile.TemporaryDirectory() as d:
+        second = aot.build_all(pathlib.Path(d))
+    for name in model.SHAPES:
+        assert (
+            manifest["artifacts"][name]["sha256"]
+            == second["artifacts"][name]["sha256"]
+        ), name
+
+
+def test_svr_energy_artifact_declares_three_outputs(built):
+    _, manifest = built
+    outs = manifest["artifacts"]["svr_energy"]["outputs"]
+    assert len(outs) == 3
+    for o in outs:
+        assert o["shape"] == [model.GRID_POINTS]

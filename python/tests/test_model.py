@@ -1,0 +1,98 @@
+"""L2 model-level tests: Eq. 7 power, Eq. 8 energy surface, AOT shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def _svr_inputs(seed=0, n_sv=300):
+    rs = np.random.RandomState(seed)
+    sv = np.zeros((model.MAX_SV, model.FEATURES), np.float32)
+    dual = np.zeros(model.MAX_SV, np.float32)
+    sv[:n_sv] = rs.randn(n_sv, model.FEATURES)
+    dual[:n_sv] = rs.randn(n_sv)
+    b = np.array([12.0], np.float32)
+    gamma = np.array([0.5], np.float32)
+    grid_scaled = rs.randn(model.GRID_POINTS, model.FEATURES).astype(np.float32)
+    freqs = np.linspace(1.2, 2.2, 11)
+    cores = np.arange(1, 33)
+    ff, pp = np.meshgrid(freqs, cores, indexing="ij")
+    grid_fp = np.stack([ff.ravel(), pp.ravel()], axis=1).astype(np.float32)
+    powc = np.array([0.29, 0.97, 198.59, 9.18], np.float32)
+    sockets = np.array([2.0], np.float32)
+    return sv, dual, b, gamma, grid_scaled, grid_fp, powc, sockets
+
+
+def test_power_eq7_matches_paper_eq9():
+    """Eq. 9's fitted numbers at a few hand-computed points."""
+    powc = jnp.array([0.29, 0.97, 198.59, 9.18], jnp.float32)
+    s = jnp.array([2.0], jnp.float32)
+    f = jnp.array([2.2], jnp.float32)
+    p = jnp.array([32.0], jnp.float32)
+    got = float(model.power_eq7(f, p, powc, s)[0])
+    want = 32 * (0.29 * 2.2**3 + 0.97 * 2.2) + 198.59 + 9.18 * 2
+    assert abs(got - want) < 1e-2
+
+
+def test_power_eq7_monotone_in_p_and_f():
+    powc = jnp.array([0.29, 0.97, 198.59, 9.18], jnp.float32)
+    s = jnp.array([2.0], jnp.float32)
+    f = jnp.linspace(1.2, 2.2, 11)
+    for p in [1.0, 16.0, 32.0]:
+        pw = np.asarray(model.power_eq7(f, jnp.full((11,), p), powc, s))
+        assert (np.diff(pw) > 0).all()
+    p = jnp.arange(1.0, 33.0)
+    pw = np.asarray(model.power_eq7(jnp.full((32,), 2.0), p, powc, s))
+    assert (np.diff(pw) > 0).all()
+
+
+def test_svr_energy_model_consistency():
+    """energy == power * clamped time, power matches Eq. 7 exactly."""
+    args = _svr_inputs()
+    t, p, e = model.svr_energy_model(*[jnp.array(a) for a in args])
+    t, p, e = np.asarray(t), np.asarray(p), np.asarray(e)
+    np.testing.assert_allclose(e, p * t, rtol=1e-5)
+    assert (t >= 1e-3).all()
+
+    sv, dual, b, gamma, grid_scaled, grid_fp, powc, sockets = args
+    want_p = grid_fp[:, 1] * (powc[0] * grid_fp[:, 0] ** 3 + powc[1] * grid_fp[:, 0]) + powc[2] + powc[3] * sockets[0]
+    np.testing.assert_allclose(p, want_p, rtol=1e-5)
+
+
+def test_svr_energy_model_time_matches_oracle():
+    args = _svr_inputs(seed=1)
+    sv, dual, b, gamma, grid_scaled, *_ = args
+    t, _, _ = model.svr_energy_model(*[jnp.array(a) for a in args])
+    want = ref.svr_decision(
+        jnp.array(grid_scaled), jnp.array(sv), jnp.array(dual), jnp.float32(b[0]), jnp.float32(gamma[0])
+    )
+    want = np.maximum(np.asarray(want), 1e-3)
+    np.testing.assert_allclose(np.asarray(t), want, rtol=1e-4, atol=1e-3)
+
+
+def test_svr_energy_model_clamps_negative_predictions():
+    args = list(_svr_inputs(seed=2))
+    args[1] = np.zeros(model.MAX_SV, np.float32)  # dual = 0
+    args[2] = np.array([-50.0], np.float32)  # bias -50 -> raw pred negative
+    t, _, e = model.svr_energy_model(*[jnp.array(a) for a in args])
+    np.testing.assert_allclose(np.asarray(t), 1e-3, atol=1e-9)
+    assert (np.asarray(e) > 0).all()
+
+
+def test_shapes_registry_evaluates():
+    """Every AOT entry must trace with its declared input shapes."""
+    for name, (fn, specs) in model.SHAPES.items():
+        out = jax.eval_shape(fn, *specs)
+        if not isinstance(out, (tuple, list)):
+            out = (out,)
+        for aval in out:
+            assert all(dim > 0 for dim in aval.shape), f"{name}: bad out shape {aval.shape}"
+
+
+def test_grid_points_consistent_with_paper_grid():
+    """11 frequencies x 32 core counts = 352, the paper's search space."""
+    assert model.GRID_POINTS == 11 * 32

@@ -1,0 +1,264 @@
+"""PARSEC-analogue Pallas workload kernels vs pure-jnp oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import blackscholes as bsk
+from compile.kernels import fluidanimate as flk
+from compile.kernels import raytrace as rtk
+from compile.kernels import ref
+from compile.kernels import swaptions as swk
+
+# ---------------------------------------------------------------------------
+# blackscholes
+# ---------------------------------------------------------------------------
+
+
+def _options(b, seed=0):
+    rs = np.random.RandomState(seed)
+    return np.stack(
+        [
+            rs.uniform(50, 150, b),
+            rs.uniform(50, 150, b),
+            rs.uniform(0.005, 0.08, b),
+            rs.uniform(0.05, 0.9, b),
+            rs.uniform(0.1, 3.0, b),
+            (rs.rand(b) > 0.5).astype(float),
+        ],
+        axis=1,
+    ).astype(np.float32)
+
+
+@pytest.mark.parametrize("b", [256, 512, 4096])
+def test_blackscholes_matches_ref(b):
+    opt = _options(b)
+    got = bsk.blackscholes_batch(jnp.array(opt))
+    want = ref.blackscholes(*[jnp.array(opt[:, i]) for i in range(6)])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_blackscholes_put_call_parity():
+    """C - P = S - K e^{-rT} for identical parameters."""
+    b = 256
+    opt = _options(b, seed=3)
+    call = opt.copy()
+    call[:, 5] = 1.0
+    put = opt.copy()
+    put[:, 5] = 0.0
+    c = np.asarray(bsk.blackscholes_batch(jnp.array(call)))
+    p = np.asarray(bsk.blackscholes_batch(jnp.array(put)))
+    s, k, r, t = opt[:, 0], opt[:, 1], opt[:, 2], opt[:, 4]
+    np.testing.assert_allclose(c - p, s - k * np.exp(-r * t), rtol=1e-3, atol=5e-3)
+
+
+def test_blackscholes_deep_itm_call_approaches_intrinsic():
+    b = 256
+    opt = _options(b, seed=4)
+    opt[:, 0] = 500.0  # spot
+    opt[:, 1] = 50.0  # strike
+    opt[:, 3] = 0.1  # low vol
+    opt[:, 4] = 0.1  # short tenor
+    opt[:, 5] = 1.0
+    prices = np.asarray(bsk.blackscholes_batch(jnp.array(opt)))
+    intrinsic = opt[:, 0] - opt[:, 1] * np.exp(-opt[:, 2] * opt[:, 4])
+    np.testing.assert_allclose(prices, intrinsic, rtol=1e-3)
+
+
+def test_blackscholes_prices_nonnegative():
+    opt = _options(4096, seed=5)
+    prices = np.asarray(bsk.blackscholes_batch(jnp.array(opt)))
+    assert (prices >= -1e-3).all()
+    assert np.isfinite(prices).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), block=st.sampled_from([64, 128, 256]))
+def test_blackscholes_hypothesis(seed, block):
+    opt = _options(512, seed=seed)
+    got = bsk.blackscholes_batch(jnp.array(opt), block=block)
+    want = ref.blackscholes(*[jnp.array(opt[:, i]) for i in range(6)])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# swaptions
+# ---------------------------------------------------------------------------
+
+
+def test_swaptions_matches_ref():
+    rs = np.random.RandomState(7)
+    z = rs.randn(2048, 16).astype(np.float32)
+    p = np.array([0.05, 0.02, 0.04, 0.25], np.float32)
+    got = swk.swaption_payoffs(jnp.array(z), jnp.array(p))
+    want = ref.swaption_payoffs(jnp.array(z), jnp.array(p))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_swaptions_price_is_mean_payoff():
+    rs = np.random.RandomState(8)
+    z = rs.randn(512, 16).astype(np.float32)
+    p = np.array([0.06, 0.015, 0.05, 0.5], np.float32)
+    price = np.asarray(swk.swaption_price(jnp.array(z), jnp.array(p)))
+    payoffs = np.asarray(swk.swaption_payoffs(jnp.array(z), jnp.array(p)))
+    np.testing.assert_allclose(price[0], payoffs.mean(), rtol=1e-5)
+
+
+def test_swaptions_zero_vol_deterministic():
+    """sigma=0 -> payoff = max(r0-K,0)*exp(-r0*T) on every path."""
+    z = np.random.RandomState(9).randn(256, 16).astype(np.float32)
+    r0, strike, dt = 0.08, 0.05, 0.25
+    p = np.array([r0, 0.0, strike, dt], np.float32)
+    payoffs = np.asarray(swk.swaption_payoffs(jnp.array(z), jnp.array(p)))
+    want = max(r0 - strike, 0.0) * np.exp(-r0 * 16 * dt)
+    np.testing.assert_allclose(payoffs, want, rtol=1e-5)
+
+
+def test_swaptions_otm_strike_worthless():
+    z = np.random.RandomState(10).randn(256, 16).astype(np.float32)
+    p = np.array([0.05, 0.001, 10.0, 0.25], np.float32)  # strike 10 >> any rate
+    payoffs = np.asarray(swk.swaption_payoffs(jnp.array(z), jnp.array(p)))
+    assert (payoffs == 0.0).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    sigma=st.floats(0.0, 0.1),
+    strike=st.floats(0.0, 0.2),
+)
+def test_swaptions_hypothesis(seed, sigma, strike):
+    z = np.random.RandomState(seed).randn(512, 16).astype(np.float32)
+    p = np.array([0.05, sigma, strike, 0.25], np.float32)
+    got = swk.swaption_payoffs(jnp.array(z), jnp.array(p))
+    want = ref.swaption_payoffs(jnp.array(z), jnp.array(p))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# raytrace
+# ---------------------------------------------------------------------------
+
+
+def _scene(r=512, s=16, seed=11):
+    rs = np.random.RandomState(seed)
+    rays = np.zeros((r, 6), np.float32)
+    rays[:, 0:3] = rs.uniform(-1, 1, (r, 3))
+    d = rs.randn(r, 3)
+    d /= np.linalg.norm(d, axis=1, keepdims=True)
+    rays[:, 3:6] = d
+    spheres = np.concatenate(
+        [rs.uniform(-4, 4, (s, 3)), rs.uniform(0.3, 1.2, (s, 1))], axis=1
+    ).astype(np.float32)
+    light = np.array([0.577, 0.577, 0.577], np.float32)
+    return rays, spheres, light
+
+
+def test_raytrace_matches_ref():
+    rays, spheres, light = _scene(1024)
+    got = rtk.raytrace(jnp.array(rays), jnp.array(spheres), jnp.array(light))
+    want = ref.raytrace(jnp.array(rays), jnp.array(spheres), jnp.array(light))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_raytrace_all_miss_is_black():
+    rays, _, light = _scene(256, seed=12)
+    far = np.array([[1000.0, 1000.0, 1000.0, 0.001]], np.float32).repeat(16, 0)
+    out = np.asarray(rtk.raytrace(jnp.array(rays), jnp.array(far), jnp.array(light)))
+    assert (out == 0.0).all()
+
+
+def test_raytrace_head_on_hit_unit_intensity():
+    """Ray straight at a sphere, light along the hit normal -> intensity 1."""
+    rays = np.zeros((256, 6), np.float32)
+    rays[:, 2] = -5.0  # origin z=-5
+    rays[:, 5] = 1.0  # direction +z
+    spheres = np.array([[0.0, 0.0, 0.0, 1.0]], np.float32).repeat(16, 0)
+    spheres[1:, 0] = 100.0  # park the rest far away
+    light = np.array([0.0, 0.0, -1.0], np.float32)  # toward the camera
+    out = np.asarray(rtk.raytrace(jnp.array(rays), jnp.array(spheres), jnp.array(light)))
+    np.testing.assert_allclose(out, 1.0, atol=1e-5)
+
+
+def test_raytrace_intensity_bounded():
+    rays, spheres, light = _scene(2048, seed=13)
+    out = np.asarray(rtk.raytrace(jnp.array(rays), jnp.array(spheres), jnp.array(light)))
+    assert (out >= 0.0).all() and (out <= 1.0 + 1e-6).all()
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_raytrace_hypothesis(seed):
+    rays, spheres, light = _scene(512, seed=seed)
+    got = rtk.raytrace(jnp.array(rays), jnp.array(spheres), jnp.array(light))
+    want = ref.raytrace(jnp.array(rays), jnp.array(spheres), jnp.array(light))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fluidanimate
+# ---------------------------------------------------------------------------
+
+
+def _particles(n=256, seed=14):
+    rs = np.random.RandomState(seed)
+    pos = rs.uniform(0, 1, (n, 3)).astype(np.float32)
+    vel = (rs.randn(n, 3) * 0.1).astype(np.float32)
+    return pos, vel
+
+
+def test_sph_density_matches_ref():
+    pos, _ = _particles(512)
+    h = jnp.float32(0.3)
+    got = flk.sph_density(jnp.array(pos), h)
+    want = ref.sph_density(jnp.array(pos), h)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_sph_forces_matches_ref():
+    pos, _ = _particles(256, seed=15)
+    h, k = jnp.float32(0.3), jnp.float32(1.5)
+    rho = ref.sph_density(jnp.array(pos), h)
+    got = flk.sph_forces(jnp.array(pos), rho, h, k)
+    want = ref.sph_forces(jnp.array(pos), rho, h, k)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_sph_step_matches_ref():
+    pos, vel = _particles(256, seed=16)
+    params = np.array([0.3, 1.5, 0.005, 0.99], np.float32)
+    got = flk.sph_step(jnp.array(pos), jnp.array(vel), jnp.array(params))
+    want = ref.sph_step(jnp.array(pos), jnp.array(vel), jnp.array(params))
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-3, atol=1e-3)
+
+
+def test_sph_forces_newton_third_law():
+    """Pairwise pressure forces must cancel: sum_i F_i ~ 0."""
+    pos, _ = _particles(256, seed=17)
+    h, k = jnp.float32(0.4), jnp.float32(2.0)
+    rho = ref.sph_density(jnp.array(pos), h)
+    f = np.asarray(flk.sph_forces(jnp.array(pos), rho, h, k))
+    total = np.abs(f.sum(axis=0))
+    scale = np.abs(f).sum() + 1e-9
+    assert (total / scale < 1e-4).all(), f"net force {total} vs scale {scale}"
+
+
+def test_sph_density_self_contribution():
+    """Isolated particles: density = h^6 (self term only)."""
+    pos = np.array([[0, 0, 0], [100, 0, 0], [0, 100, 0], [0, 0, 100]], np.float32)
+    pos = np.vstack([pos] * 32)  # 128 rows, tile-aligned
+    pos += np.arange(128)[:, None].astype(np.float32) * 1000.0
+    h = 0.25
+    rho = np.asarray(flk.sph_density(jnp.array(pos), jnp.float32(h)))
+    np.testing.assert_allclose(rho, h**6, rtol=1e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), h=st.floats(0.1, 0.6))
+def test_sph_density_hypothesis(seed, h):
+    pos, _ = _particles(256, seed=seed)
+    got = flk.sph_density(jnp.array(pos), jnp.float32(h))
+    want = ref.sph_density(jnp.array(pos), jnp.float32(h))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

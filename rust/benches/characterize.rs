@@ -1,0 +1,41 @@
+//! E3 / Figs. 2–5: the §3.4 characterization campaign (the paper's
+//! "one to two days of machine time" stage, simulated). Benchmarks one
+//! app over a reduced and over the per-input full-frequency grid.
+
+use ecopt::characterize::characterize;
+use ecopt::config::{CampaignSpec, NodeSpec};
+use ecopt::workloads::app_by_name;
+use ecopt::workloads::runner::RunConfig;
+
+use ecopt::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("characterize");
+    let node = NodeSpec::default();
+    let run_cfg = RunConfig { dt: 0.25, ..Default::default() };
+
+    for app_name in ["swaptions", "raytrace"] {
+        let app = app_by_name(app_name).unwrap();
+        let small = CampaignSpec {
+            freq_step_mhz: 500,
+            core_max: 8,
+            inputs: vec![1],
+            ..Default::default()
+        };
+        b.bench(&format!("{app_name}_3f_x_8c_x_1n"), || {
+            let c = characterize(&node, &small, &app, &run_cfg).unwrap();
+            assert_eq!(c.samples.len(), 24);
+        });
+    }
+
+    // One full-frequency sweep (11 x 32 x 1) for the fastest app.
+    let app = app_by_name("blackscholes").unwrap();
+    let full_f = CampaignSpec {
+        inputs: vec![1],
+        ..Default::default()
+    };
+    b.bench("blackscholes_full_11f_x_32c_x_1n", || {
+        let c = characterize(&node, &full_f, &app, &run_cfg).unwrap();
+        assert_eq!(c.samples.len(), 352);
+    });
+}

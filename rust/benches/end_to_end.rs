@@ -1,0 +1,38 @@
+//! E6+E7 / Fig. 10 + headline: the full pipeline (power fit ->
+//! characterize -> train -> optimize -> governor comparison -> report)
+//! on a reduced grid — the end-to-end cost of the methodology.
+
+use ecopt::config::{CampaignSpec, ExperimentConfig, SvrSpec};
+use ecopt::coordinator::Coordinator;
+use ecopt::report;
+use ecopt::util::bench::Bench;
+use ecopt::workloads::runner::RunConfig;
+
+fn main() {
+    let mut b = Bench::new("end_to_end");
+    let cfg = ExperimentConfig {
+        campaign: CampaignSpec {
+            freq_step_mhz: 500,
+            core_max: 8,
+            inputs: vec![1, 2],
+            ..Default::default()
+        },
+        svr: SvrSpec { folds: 3, ..Default::default() },
+        workloads: vec!["swaptions".into()],
+        ..Default::default()
+    };
+    let run_cfg = RunConfig { dt: 0.25, ..Default::default() };
+
+    b.bench("pipeline_1app_3f_8c_2n", || {
+        let mut coord = Coordinator::new(cfg.clone()).with_run_config(run_cfg.clone());
+        let res = coord.run_all().unwrap();
+        assert_eq!(res.apps.len(), 1);
+    });
+
+    let mut coord = Coordinator::new(cfg.clone()).with_run_config(run_cfg);
+    let res = coord.run_all().unwrap();
+    b.bench("render_full_report", || {
+        let r = report::full_report(&res, &cfg.campaign);
+        assert!(r.contains("Headline"));
+    });
+}

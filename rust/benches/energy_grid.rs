@@ -1,0 +1,60 @@
+//! E4 / Figs. 6–9: the energy surface E = P x T over the full 352-point
+//! configuration grid — pure-Rust evaluation vs the deployed PJRT
+//! `svr_energy` artifact (Pallas RBF + Eq. 7 + Eq. 8 fused in HLO).
+
+use std::path::Path;
+
+use ecopt::config::{CampaignSpec, NodeSpec, SvrSpec};
+use ecopt::energy::{config_grid, Constraints, EnergyModel};
+use ecopt::powermodel::PowerModel;
+use ecopt::runtime::PjrtRuntime;
+use ecopt::svr::{SvrModel, TrainSample};
+use ecopt::util::bench::Bench;
+
+fn fixture_model() -> EnergyModel {
+    let mut samples = Vec::new();
+    for f in (1200u32..=2200).step_by(200) {
+        for p in [1usize, 2, 4, 8, 16, 24, 32] {
+            for n in 1..=3u32 {
+                let t = 120.0 * n as f64 * (0.06 + 0.94 / p as f64) * 2200.0 / f as f64;
+                samples.push(TrainSample { f_mhz: f, cores: p, input: n, time_s: t });
+            }
+        }
+    }
+    let svr = SvrModel::train(&samples, &SvrSpec::default()).unwrap();
+    EnergyModel::new(PowerModel::paper_eq9(), svr, NodeSpec::default())
+}
+
+fn main() {
+    let mut b = Bench::new("energy_grid");
+    let em = fixture_model();
+    let grid = config_grid(&CampaignSpec::default(), &NodeSpec::default());
+
+    b.bench("rust_surface_352pts", || {
+        let s = em.surface(&grid, 2);
+        assert_eq!(s.len(), 352);
+    });
+
+    b.bench("rust_optimize_352pts", || {
+        let o = em.optimize(&grid, 2, &Constraints::default()).unwrap();
+        assert!(o.pred_energy_j > 0.0);
+    });
+
+    match PjrtRuntime::cpu(Path::new("artifacts")) {
+        Ok(mut rt) => {
+            rt.load("svr_energy").unwrap();
+            b.bench("pjrt_optimize_352pts (deployed path)", || {
+                let o = em
+                    .optimize_via_runtime(&mut rt, &grid, 2, &Constraints::default())
+                    .unwrap();
+                assert!(o.pred_energy_j > 0.0);
+            });
+            // input marshalling alone (padded SVs + grid scaling)
+            b.bench("artifact_input_marshalling", || {
+                let i = em.artifact_inputs(&grid, 2).unwrap();
+                assert_eq!(i.len(), 8);
+            });
+        }
+        Err(e) => eprintln!("SKIP pjrt benches: {e}"),
+    }
+}

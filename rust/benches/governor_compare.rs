@@ -1,0 +1,45 @@
+//! E5 / Tables 2–5: one ondemand-vs-proposed comparison row (the §4.2
+//! harness): 11 governor-driven runs + 1 userspace run + model argmin.
+
+use ecopt::compare::compare_one;
+use ecopt::config::{CampaignSpec, NodeSpec, SvrSpec};
+use ecopt::energy::{config_grid, EnergyModel};
+use ecopt::governors::Ondemand;
+use ecopt::node::{power::PowerProcess, Node};
+use ecopt::powermodel::PowerModel;
+use ecopt::svr::{SvrModel, TrainSample};
+use ecopt::util::bench::Bench;
+use ecopt::workloads::app_by_name;
+use ecopt::workloads::runner::{run, RunConfig};
+
+fn main() {
+    let mut b = Bench::new("governor_compare");
+    let node_spec = NodeSpec::default();
+    let app = app_by_name("blackscholes").unwrap();
+
+    // Single ondemand run (the unit of the sweep).
+    let mut node = Node::new(node_spec.clone()).unwrap();
+    let power = PowerProcess::new(node_spec.power.clone());
+    let cfg = RunConfig { dt: 0.25, ..Default::default() };
+    b.bench("ondemand_run_16c_input1", || {
+        let mut gov = Ondemand::new(node.ladder());
+        let r = run(&mut node, &mut gov, &power, &app, 1, 16, &cfg).unwrap();
+        assert!(r.energy_j > 0.0);
+    });
+
+    // Full comparison row (11-count sweep + proposed).
+    let mut samples = Vec::new();
+    for f in (1200u32..=2200).step_by(200) {
+        for p in [1usize, 2, 4, 8, 16, 32] {
+            let t = app.exec_time(f, p, 1);
+            samples.push(TrainSample { f_mhz: f, cores: p, input: 1, time_s: t });
+        }
+    }
+    let svr = SvrModel::train(&samples, &SvrSpec::default()).unwrap();
+    let em = EnergyModel::new(PowerModel::paper_eq9(), svr, node_spec.clone());
+    let grid = config_grid(&CampaignSpec::default(), &node_spec);
+    b.bench("comparison_row_input1 (11 od runs + proposed)", || {
+        let row = compare_one(&node_spec, &app, 1, &em, &grid, &cfg).unwrap();
+        assert!(row.ondemand_all.len() == 11);
+    });
+}

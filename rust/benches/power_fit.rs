@@ -1,0 +1,34 @@
+//! E1 / Fig. 1: the §3.3 stress campaign + Eq. 7 multi-linear regression.
+//! Measures the full fit path (352 stress points, 1 Hz sampling, lstsq).
+
+use ecopt::config::NodeSpec;
+use ecopt::powermodel::{stress_campaign, PowerModel, StressConfig};
+use ecopt::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("power_fit");
+    let spec = NodeSpec::default();
+    let cfg = StressConfig::default();
+
+    b.bench("stress_campaign_352pts", || {
+        let obs = stress_campaign(&spec, &cfg).unwrap();
+        assert_eq!(obs.len(), 352);
+    });
+
+    let obs = stress_campaign(&spec, &cfg).unwrap();
+    b.bench("fit_eq7_regression", || {
+        let (m, rep) = PowerModel::fit(&obs).unwrap();
+        assert!(m.c3 > 100.0 && rep.ape_pct < 2.0);
+    });
+
+    let (m, _) = PowerModel::fit(&obs).unwrap();
+    b.bench("predict_full_grid_352", || {
+        let mut acc = 0.0;
+        for f in (1200..=2200).step_by(100) {
+            for p in 1..=32 {
+                acc += m.predict(f as f64 / 1000.0, p, if p <= 16 { 1 } else { 2 });
+            }
+        }
+        assert!(acc > 0.0);
+    });
+}

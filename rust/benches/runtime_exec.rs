@@ -1,0 +1,78 @@
+//! Runtime hot path: PJRT execution latency per artifact — the deployed
+//! decision path (svr_energy) and the four workload compute kernels.
+//! This is the L3 <-> PJRT boundary the perf pass optimizes.
+
+use std::path::Path;
+
+use ecopt::runtime::{PjrtRuntime, TensorF32};
+use ecopt::util::bench::Bench;
+
+fn main() {
+    let mut rt = match PjrtRuntime::cpu(Path::new("artifacts")) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("SKIP runtime_exec: {e} (run `make artifacts`)");
+            return;
+        }
+    };
+    rt.load_all().unwrap();
+    let mut b = Bench::new("runtime_exec");
+
+    let bs_in = TensorF32::new(
+        vec![4096, 6],
+        (0..4096 * 6)
+            .map(|i| [100.0, 95.0, 0.02, 0.3, 1.0, (i % 2) as f32][i % 6])
+            .collect(),
+    )
+    .unwrap();
+    b.bench("blackscholes_4096", || {
+        rt.execute("blackscholes", std::slice::from_ref(&bs_in)).unwrap();
+    });
+
+    let sw_in = [
+        TensorF32::new(vec![2048, 16], vec![0.1; 2048 * 16]).unwrap(),
+        TensorF32::vec1(&[0.05, 0.02, 0.04, 0.25]),
+    ];
+    b.bench("swaptions_2048x16", || {
+        rt.execute("swaptions", &sw_in).unwrap();
+    });
+
+    let rt_in = [
+        TensorF32::new(vec![4096, 6], {
+            let mut v = vec![0.0f32; 4096 * 6];
+            for i in 0..4096 {
+                v[i * 6 + 5] = 1.0;
+            }
+            v
+        })
+        .unwrap(),
+        TensorF32::new(vec![16, 4], vec![1.0; 64]).unwrap(),
+        TensorF32::vec1(&[0.577, 0.577, 0.577]),
+    ];
+    b.bench("raytrace_4096x16", || {
+        rt.execute("raytrace", &rt_in).unwrap();
+    });
+
+    let fl_in = [
+        TensorF32::new(vec![512, 3], (0..1536).map(|i| i as f32 * 0.01).collect()).unwrap(),
+        TensorF32::zeros(vec![512, 3]),
+        TensorF32::vec1(&[0.3, 1.5, 0.005, 0.99]),
+    ];
+    b.bench("fluidanimate_512", || {
+        rt.execute("fluidanimate", &fl_in).unwrap();
+    });
+
+    let sv_in = [
+        TensorF32::zeros(vec![2048, 3]),
+        TensorF32::zeros(vec![2048]),
+        TensorF32::vec1(&[10.0]),
+        TensorF32::vec1(&[0.5]),
+        TensorF32::zeros(vec![352, 3]),
+        TensorF32::new(vec![352, 2], (0..704).map(|i| 1.0 + (i % 32) as f32).collect()).unwrap(),
+        TensorF32::vec1(&[0.29, 0.97, 198.59, 9.18]),
+        TensorF32::vec1(&[2.0]),
+    ];
+    b.bench("svr_energy_2048sv_352grid (decision path)", || {
+        rt.execute("svr_energy", &sv_in).unwrap();
+    });
+}

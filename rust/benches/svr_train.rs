@@ -1,0 +1,43 @@
+//! E2 / Table 1: SVR training (SMO) and 10-fold cross-validation on a
+//! real characterization sample set at the paper's hyper-parameters.
+
+use ecopt::characterize::characterize;
+use ecopt::config::{CampaignSpec, NodeSpec, SvrSpec};
+use ecopt::svr::{cross_validate, SvrModel};
+use ecopt::util::bench::Bench;
+use ecopt::workloads::app_by_name;
+use ecopt::workloads::runner::RunConfig;
+
+fn main() {
+    let mut b = Bench::new("svr_train");
+    let node = NodeSpec::default();
+    // Characterize once (fixture), then bench the modeling stages.
+    let campaign = CampaignSpec {
+        freq_step_mhz: 200, // 6 freqs x 32 cores x 3 inputs = 576 samples
+        inputs: vec![1, 2, 3],
+        ..Default::default()
+    };
+    let app = app_by_name("swaptions").unwrap();
+    let ch = characterize(&node, &campaign, &app, &RunConfig { dt: 0.25, ..Default::default() })
+        .unwrap();
+    let samples = ch.train_samples();
+    let spec = SvrSpec::default();
+
+    b.bench(&format!("smo_train_{}_samples", samples.len()), || {
+        let m = SvrModel::train(&samples, &spec).unwrap();
+        assert!(m.n_support > 0);
+    });
+
+    let model = SvrModel::train(&samples, &spec).unwrap();
+    let queries: Vec<_> = samples.iter().map(|s| (s.f_mhz, s.cores, s.input)).collect();
+    b.bench(&format!("predict_{}_queries", queries.len()), || {
+        let p = model.predict(&queries);
+        assert_eq!(p.len(), queries.len());
+    });
+
+    let cv_spec = SvrSpec { folds: 5, ..Default::default() };
+    b.bench("cross_validate_5fold", || {
+        let rep = cross_validate(&samples, &cv_spec).unwrap();
+        assert!(rep.pae_pct < 25.0);
+    });
+}

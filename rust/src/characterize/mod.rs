@@ -1,0 +1,268 @@
+//! Characterization campaign orchestrator (paper §3.4, system S10).
+//!
+//! Runs an application at every (frequency, cores, input) combination of
+//! the campaign grid under the userspace governor, recording measured
+//! execution time and IPMI-integrated energy. The paper's campaign took
+//! 1–2 days of machine time per application; the simulated campaign runs
+//! the same 1760 points in seconds, parallelized across OS threads (each
+//! worker owns its own simulated node — they are independent machines).
+
+use crate::config::{CampaignSpec, Mhz, NodeSpec};
+use crate::util::json::{FromJson, Json, ToJson};
+use crate::governors::Userspace;
+use crate::node::power::PowerProcess;
+use crate::node::Node;
+use crate::svr::TrainSample;
+use crate::workloads::runner::{run, RunConfig};
+use crate::workloads::AppProfile;
+use crate::{Error, Result};
+
+/// One measured campaign point (a [`TrainSample`] plus the energy ground
+/// truth the SVR never sees but Figs. 6–9 compare against).
+#[derive(Debug, Clone, Copy)]
+pub struct CharSample {
+    pub f_mhz: Mhz,
+    pub cores: usize,
+    pub input: u32,
+    pub time_s: f64,
+    pub energy_j: f64,
+    pub mean_power_w: f64,
+}
+
+impl CharSample {
+    pub fn to_train(&self) -> TrainSample {
+        TrainSample {
+            f_mhz: self.f_mhz,
+            cores: self.cores,
+            input: self.input,
+            time_s: self.time_s,
+        }
+    }
+}
+
+/// Full characterization of one application.
+#[derive(Debug, Clone)]
+pub struct Characterization {
+    pub app: String,
+    pub samples: Vec<CharSample>,
+}
+
+impl Characterization {
+    /// Training view of the samples.
+    pub fn train_samples(&self) -> Vec<TrainSample> {
+        self.samples.iter().map(|s| s.to_train()).collect()
+    }
+
+    /// Samples for one input size (figure slices).
+    pub fn for_input(&self, input: u32) -> Vec<CharSample> {
+        self.samples
+            .iter()
+            .filter(|s| s.input == input)
+            .copied()
+            .collect()
+    }
+
+    /// Measured sample at an exact configuration, if present.
+    pub fn at(&self, f: Mhz, p: usize, input: u32) -> Option<CharSample> {
+        self.samples
+            .iter()
+            .find(|s| s.f_mhz == f && s.cores == p && s.input == input)
+            .copied()
+    }
+
+    /// Persist to JSON.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().dump())?;
+        Ok(())
+    }
+
+    /// Load from JSON.
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        Self::from_json(&Json::parse(&std::fs::read_to_string(path)?)?)
+    }
+}
+
+/// Run the full campaign for one application, parallelized over threads.
+pub fn characterize(
+    node_spec: &NodeSpec,
+    campaign: &CampaignSpec,
+    app: &AppProfile,
+    run_cfg: &RunConfig,
+) -> Result<Characterization> {
+    let freqs = campaign.frequencies();
+    let cores = campaign.cores();
+    if freqs.is_empty() || cores.is_empty() || campaign.inputs.is_empty() {
+        return Err(Error::Config("empty campaign grid".into()));
+    }
+    for p in &cores {
+        if *p == 0 || *p > node_spec.total_cores() {
+            return Err(Error::BadCoreCount {
+                requested: *p,
+                available: node_spec.total_cores(),
+            });
+        }
+    }
+
+    // Build the work list deterministically (f-major, like the paper grid).
+    let mut points = Vec::with_capacity(campaign.sample_count());
+    for &f in &freqs {
+        for &p in &cores {
+            for &n in &campaign.inputs {
+                points.push((f, p, n));
+            }
+        }
+    }
+
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(points.len().max(1));
+    let chunk = points.len().div_ceil(workers);
+
+    let results: Vec<Result<Vec<CharSample>>> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (w, slice) in points.chunks(chunk).enumerate() {
+            let node_spec = node_spec.clone();
+            let app = app.clone();
+            let base_cfg = run_cfg.clone();
+            handles.push(scope.spawn(move || -> Result<Vec<CharSample>> {
+                // Each worker owns an independent simulated node.
+                let mut node = Node::new(node_spec.clone())?;
+                let power = PowerProcess::new(node_spec.power.clone());
+                let mut out = Vec::with_capacity(slice.len());
+                for (i, &(f, p, n)) in slice.iter().enumerate() {
+                    let mut gov = Userspace::new(f);
+                    let cfg = RunConfig {
+                        // Unique deterministic seed per grid point.
+                        seed: base_cfg
+                            .seed
+                            .wrapping_mul(0x100000001B3)
+                            .wrapping_add((w * 1_000_000 + i) as u64),
+                        ..base_cfg.clone()
+                    };
+                    let r = run(&mut node, &mut gov, &power, &app, n, p, &cfg)?;
+                    out.push(CharSample {
+                        f_mhz: f,
+                        cores: p,
+                        input: n,
+                        time_s: r.wall_time_s,
+                        energy_j: r.energy_j,
+                        mean_power_w: r.mean_power_w,
+                    });
+                }
+                Ok(out)
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    });
+
+    let mut samples = Vec::with_capacity(points.len());
+    for r in results {
+        samples.extend(r?);
+    }
+    // Restore grid order (threads may interleave chunks, but chunks are
+    // contiguous so a sort by (f, p, n) gives the canonical layout).
+    samples.sort_by_key(|s| (s.f_mhz, s.cores, s.input));
+    Ok(Characterization {
+        app: app.name.clone(),
+        samples,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::app_by_name;
+
+    fn tiny_campaign() -> CampaignSpec {
+        CampaignSpec {
+            freq_min_mhz: 1200,
+            freq_max_mhz: 2200,
+            freq_step_mhz: 500, // 1200, 1700, 2200
+            core_min: 1,
+            core_max: 8,
+            inputs: vec![1, 2],
+            ..Default::default()
+        }
+    }
+
+    fn fast_cfg() -> RunConfig {
+        RunConfig {
+            dt: 0.25,
+            work_noise: 0.0,
+            seed: 9,
+            max_sim_s: 1e6,
+        }
+    }
+
+    #[test]
+    fn campaign_covers_grid_in_order() {
+        let app = app_by_name("blackscholes").unwrap();
+        let c = characterize(&NodeSpec::default(), &tiny_campaign(), &app, &fast_cfg()).unwrap();
+        assert_eq!(c.samples.len(), 3 * 8 * 2);
+        assert_eq!(c.samples[0].f_mhz, 1200);
+        assert_eq!(c.samples[0].cores, 1);
+        assert_eq!(c.samples[0].input, 1);
+        let last = c.samples.last().unwrap();
+        assert_eq!((last.f_mhz, last.cores, last.input), (2200, 8, 2));
+    }
+
+    #[test]
+    fn measured_times_track_analytic_model() {
+        let app = app_by_name("swaptions").unwrap();
+        let c = characterize(&NodeSpec::default(), &tiny_campaign(), &app, &fast_cfg()).unwrap();
+        for s in &c.samples {
+            let want = app.exec_time(s.f_mhz, s.cores, s.input);
+            let err = (s.time_s - want).abs() / want;
+            assert!(err < 0.05, "({},{},{}): {} vs {want}", s.f_mhz, s.cores, s.input, s.time_s);
+        }
+    }
+
+    #[test]
+    fn energy_positive_and_consistent() {
+        let app = app_by_name("fluidanimate").unwrap();
+        let c = characterize(&NodeSpec::default(), &tiny_campaign(), &app, &fast_cfg()).unwrap();
+        for s in &c.samples {
+            assert!(s.energy_j > 0.0);
+            assert!((s.mean_power_w - s.energy_j / s.time_s).abs() < 5.0);
+        }
+    }
+
+    #[test]
+    fn lookup_and_slicing() {
+        let app = app_by_name("raytrace").unwrap();
+        let c = characterize(&NodeSpec::default(), &tiny_campaign(), &app, &fast_cfg()).unwrap();
+        assert!(c.at(1700, 4, 2).is_some());
+        assert!(c.at(1500, 4, 2).is_none());
+        assert_eq!(c.for_input(1).len(), 3 * 8);
+        assert_eq!(c.train_samples().len(), c.samples.len());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let app = app_by_name("blackscholes").unwrap();
+        let mut small = tiny_campaign();
+        small.core_max = 2;
+        small.inputs = vec![1];
+        let c = characterize(&NodeSpec::default(), &small, &app, &fast_cfg()).unwrap();
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        let path = dir.path().join("char.json");
+        c.save(&path).unwrap();
+        let back = Characterization::load(&path).unwrap();
+        assert_eq!(back.samples.len(), c.samples.len());
+        assert_eq!(back.app, c.app);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let app = app_by_name("swaptions").unwrap();
+        let mut small = tiny_campaign();
+        small.core_max = 2;
+        let a = characterize(&NodeSpec::default(), &small, &app, &fast_cfg()).unwrap();
+        let b = characterize(&NodeSpec::default(), &small, &app, &fast_cfg()).unwrap();
+        for (x, y) in a.samples.iter().zip(&b.samples) {
+            assert_eq!(x.time_s, y.time_s);
+            assert_eq!(x.energy_j, y.energy_j);
+        }
+    }
+}

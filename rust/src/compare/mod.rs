@@ -1,0 +1,231 @@
+//! Governor-comparison harness (paper §4.2, system S11).
+//!
+//! For each (application, input): run the Linux *ondemand* governor at the
+//! paper's core counts (1, 2, 4, 8, …, 28, 30, 32 — the governor does not
+//! choose core counts, so the user must), keep the best and worst energy;
+//! run the *proposed* configuration (energy-model argmin, actuated through
+//! userspace + hotplug); report the paper's Save-Min / Save-Max columns.
+
+use crate::config::{Mhz, NodeSpec};
+use crate::energy::{EnergyModel, Constraints};
+use crate::governors::{Ondemand, Userspace};
+use crate::node::power::PowerProcess;
+use crate::node::Node;
+use crate::workloads::runner::{run, RunConfig, RunResult};
+use crate::workloads::AppProfile;
+use crate::{Error, Result};
+
+/// The core counts the paper sweeps for the ondemand baseline.
+pub fn ondemand_core_counts(total: usize) -> Vec<usize> {
+    let mut v = vec![1, 2, 4, 8, 12, 16, 20, 24, 28, 30, 32];
+    v.retain(|p| *p <= total);
+    v
+}
+
+/// Power-of-two core counts (Fig. 10's x-axis groups).
+pub fn pow2_core_counts(total: usize) -> Vec<usize> {
+    let mut v = vec![1, 2, 4, 8, 16, 32];
+    v.retain(|p| *p <= total);
+    v
+}
+
+/// One measured governor run, summarized.
+#[derive(Debug, Clone)]
+pub struct GovernorRun {
+    pub cores: usize,
+    pub mean_freq_ghz: f64,
+    pub energy_j: f64,
+    pub time_s: f64,
+}
+
+impl From<&RunResult> for GovernorRun {
+    fn from(r: &RunResult) -> Self {
+        GovernorRun {
+            cores: r.cores,
+            mean_freq_ghz: r.mean_freq_ghz,
+            energy_j: r.energy_j,
+            time_s: r.wall_time_s,
+        }
+    }
+}
+
+/// One row of Tables 2–5.
+#[derive(Debug, Clone)]
+pub struct ComparisonRow {
+    pub app: String,
+    pub input: u32,
+    /// Best (minimum-energy) ondemand run over the core-count sweep.
+    pub ondemand_min: GovernorRun,
+    /// Worst (maximum-energy) ondemand run.
+    pub ondemand_max: GovernorRun,
+    /// The proposed configuration (predicted by the energy model).
+    pub proposed_f_mhz: Mhz,
+    pub proposed_cores: usize,
+    /// Measured energy of the proposed configuration.
+    pub proposed: GovernorRun,
+    /// All ondemand runs (Fig. 10 needs the full sweep).
+    pub ondemand_all: Vec<GovernorRun>,
+}
+
+impl ComparisonRow {
+    /// Paper's "Min. Save (%)": savings vs the ondemand best case.
+    pub fn save_min_pct(&self) -> f64 {
+        (self.ondemand_min.energy_j / self.proposed.energy_j - 1.0) * 100.0
+    }
+
+    /// Paper's "Max. Save (%)": savings vs the ondemand worst case.
+    pub fn save_max_pct(&self) -> f64 {
+        (self.ondemand_max.energy_j / self.proposed.energy_j - 1.0) * 100.0
+    }
+}
+
+/// Compare the proposed approach against ondemand for one app + input.
+pub fn compare_one(
+    node_spec: &NodeSpec,
+    app: &AppProfile,
+    input: u32,
+    model: &EnergyModel,
+    grid: &[(Mhz, usize)],
+    run_cfg: &RunConfig,
+) -> Result<ComparisonRow> {
+    let mut node = Node::new(node_spec.clone())?;
+    let power = PowerProcess::new(node_spec.power.clone());
+
+    // --- ondemand sweep over the paper's core counts.
+    let mut runs = Vec::new();
+    for (i, p) in ondemand_core_counts(node_spec.total_cores()).into_iter().enumerate() {
+        let mut gov = Ondemand::new(node.ladder());
+        let cfg = RunConfig {
+            seed: run_cfg.seed.wrapping_add(i as u64 * 7919),
+            ..run_cfg.clone()
+        };
+        let r = run(&mut node, &mut gov, &power, app, input, p, &cfg)?;
+        runs.push(GovernorRun::from(&r));
+    }
+    let min = runs
+        .iter()
+        .min_by(|a, b| a.energy_j.total_cmp(&b.energy_j))
+        .ok_or_else(|| Error::Data("empty ondemand sweep".into()))?
+        .clone();
+    let max = runs
+        .iter()
+        .max_by(|a, b| a.energy_j.total_cmp(&b.energy_j))
+        .ok_or_else(|| Error::Data("empty ondemand sweep".into()))?
+        .clone();
+
+    // --- proposed configuration: model argmin, actuated via userspace.
+    let opt = model.optimize(grid, input, &Constraints::default())?;
+    let mut gov = Userspace::new(opt.f_mhz);
+    let cfg = RunConfig {
+        seed: run_cfg.seed.wrapping_add(0xBEEF),
+        ..run_cfg.clone()
+    };
+    let r = run(&mut node, &mut gov, &power, app, input, opt.cores, &cfg)?;
+
+    Ok(ComparisonRow {
+        app: app.name.clone(),
+        input,
+        ondemand_min: min,
+        ondemand_max: max,
+        proposed_f_mhz: opt.f_mhz,
+        proposed_cores: opt.cores,
+        proposed: GovernorRun::from(&r),
+        ondemand_all: runs,
+    })
+}
+
+/// Aggregate savings over a set of comparison rows (the paper's headline:
+/// avg 6 % vs best case, ~790 % vs worst case, max 1298 %, min 59 %).
+#[derive(Debug, Clone)]
+pub struct SavingsSummary {
+    pub avg_save_min_pct: f64,
+    pub avg_save_max_pct: f64,
+    pub best_save_max_pct: f64,
+    pub worst_save_max_pct: f64,
+    pub best_save_min_pct: f64,
+    pub rows: usize,
+}
+
+pub fn summarize(rows: &[ComparisonRow]) -> SavingsSummary {
+    let n = rows.len().max(1) as f64;
+    SavingsSummary {
+        avg_save_min_pct: rows.iter().map(|r| r.save_min_pct()).sum::<f64>() / n,
+        avg_save_max_pct: rows.iter().map(|r| r.save_max_pct()).sum::<f64>() / n,
+        best_save_max_pct: rows
+            .iter()
+            .map(|r| r.save_max_pct())
+            .fold(f64::NEG_INFINITY, f64::max),
+        worst_save_max_pct: rows
+            .iter()
+            .map(|r| r.save_max_pct())
+            .fold(f64::INFINITY, f64::min),
+        best_save_min_pct: rows
+            .iter()
+            .map(|r| r.save_min_pct())
+            .fold(f64::NEG_INFINITY, f64::max),
+        rows: rows.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn core_count_lists() {
+        assert_eq!(
+            ondemand_core_counts(32),
+            vec![1, 2, 4, 8, 12, 16, 20, 24, 28, 30, 32]
+        );
+        assert_eq!(ondemand_core_counts(8), vec![1, 2, 4, 8]);
+        assert_eq!(pow2_core_counts(32), vec![1, 2, 4, 8, 16, 32]);
+    }
+
+    #[test]
+    fn savings_math() {
+        let run = |e: f64| GovernorRun {
+            cores: 1,
+            mean_freq_ghz: 2.0,
+            energy_j: e,
+            time_s: 1.0,
+        };
+        let row = ComparisonRow {
+            app: "x".into(),
+            input: 1,
+            ondemand_min: run(110.0),
+            ondemand_max: run(500.0),
+            proposed_f_mhz: 2200,
+            proposed_cores: 32,
+            proposed: run(100.0),
+            ondemand_all: vec![],
+        };
+        assert!((row.save_min_pct() - 10.0).abs() < 1e-9);
+        assert!((row.save_max_pct() - 400.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_aggregates() {
+        let run = |e: f64| GovernorRun {
+            cores: 1,
+            mean_freq_ghz: 2.0,
+            energy_j: e,
+            time_s: 1.0,
+        };
+        let mk = |min: f64, max: f64| ComparisonRow {
+            app: "x".into(),
+            input: 1,
+            ondemand_min: run(min),
+            ondemand_max: run(max),
+            proposed_f_mhz: 2200,
+            proposed_cores: 32,
+            proposed: run(100.0),
+            ondemand_all: vec![],
+        };
+        let rows = vec![mk(110.0, 300.0), mk(90.0, 500.0)];
+        let s = summarize(&rows);
+        assert!((s.avg_save_min_pct - 0.0).abs() < 1e-9); // (10 + -10)/2
+        assert!((s.avg_save_max_pct - 300.0).abs() < 1e-9); // (200+400)/2
+        assert!((s.best_save_max_pct - 400.0).abs() < 1e-9);
+        assert!((s.worst_save_max_pct - 200.0).abs() < 1e-9);
+    }
+}

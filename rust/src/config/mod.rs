@@ -1,0 +1,532 @@
+//! Configuration system: JSON-serializable specs for every subsystem.
+//!
+//! The defaults mirror the paper's testbed (§3.2): a dual-socket Intel Xeon
+//! E5-2698 v3 node (2 x 16 cores), non-turbo ladder 1.2–2.3 GHz in 100 MHz
+//! steps, IPMI power sampling at ~1 Hz, and the characterization campaign
+//! of §3.4 (f in 1.2..=2.2, p in 1..=32, 5 input sizes).
+//!
+//! Config files are JSON (the offline image has no TOML crate); every
+//! field is optional and falls back to the paper's defaults.
+
+use crate::util::json::{FromJson, Json, ToJson};
+use crate::{Error, Result};
+
+/// Frequency in megahertz. The simulator works in integer MHz to keep the
+/// DVFS ladder exact; convert with [`mhz_to_ghz`] at model boundaries.
+pub type Mhz = u32;
+
+/// Convert MHz to the GHz floats the paper's equations use.
+pub fn mhz_to_ghz(f: Mhz) -> f64 {
+    f as f64 / 1000.0
+}
+
+/// Hardware description of the simulated node.
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    /// Number of processor sockets (paper: 2).
+    pub sockets: usize,
+    /// Physical cores per socket (paper: 16; HT disabled).
+    pub cores_per_socket: usize,
+    /// Lowest DVFS frequency in MHz (paper: 1200).
+    pub freq_min_mhz: Mhz,
+    /// Highest non-turbo DVFS frequency in MHz (paper: 2300).
+    pub freq_max_mhz: Mhz,
+    /// Ladder step in MHz (paper: 100).
+    pub freq_step_mhz: Mhz,
+    /// Ground-truth power process parameters (what IPMI "sees").
+    pub power: PowerProcessSpec,
+}
+
+impl Default for NodeSpec {
+    fn default() -> Self {
+        NodeSpec {
+            sockets: 2,
+            cores_per_socket: 16,
+            freq_min_mhz: 1200,
+            freq_max_mhz: 2300,
+            freq_step_mhz: 100,
+            power: PowerProcessSpec::default(),
+        }
+    }
+}
+
+impl NodeSpec {
+    /// Total physical cores.
+    pub fn total_cores(&self) -> usize {
+        self.sockets * self.cores_per_socket
+    }
+
+    /// The full DVFS ladder in MHz, ascending.
+    pub fn ladder(&self) -> Vec<Mhz> {
+        let mut v = Vec::new();
+        let mut f = self.freq_min_mhz;
+        while f <= self.freq_max_mhz {
+            v.push(f);
+            f += self.freq_step_mhz;
+        }
+        v
+    }
+
+    /// Validate invariants; returns self for chaining.
+    pub fn validate(self) -> Result<Self> {
+        if self.sockets == 0 || self.cores_per_socket == 0 {
+            return Err(Error::Config("node must have >= 1 socket and core".into()));
+        }
+        if self.freq_min_mhz == 0
+            || self.freq_step_mhz == 0
+            || self.freq_max_mhz < self.freq_min_mhz
+        {
+            return Err(Error::Config(format!(
+                "bad frequency ladder: {}..{} step {}",
+                self.freq_min_mhz, self.freq_max_mhz, self.freq_step_mhz
+            )));
+        }
+        Ok(self)
+    }
+}
+
+impl ToJson for NodeSpec {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("sockets", Json::Num(self.sockets as f64)),
+            ("cores_per_socket", Json::Num(self.cores_per_socket as f64)),
+            ("freq_min_mhz", Json::Num(self.freq_min_mhz as f64)),
+            ("freq_max_mhz", Json::Num(self.freq_max_mhz as f64)),
+            ("freq_step_mhz", Json::Num(self.freq_step_mhz as f64)),
+            ("power", self.power.to_json()),
+        ])
+    }
+}
+
+impl FromJson for NodeSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let d = NodeSpec::default();
+        Ok(NodeSpec {
+            sockets: opt_usize(j, "sockets", d.sockets)?,
+            cores_per_socket: opt_usize(j, "cores_per_socket", d.cores_per_socket)?,
+            freq_min_mhz: opt_u32(j, "freq_min_mhz", d.freq_min_mhz)?,
+            freq_max_mhz: opt_u32(j, "freq_max_mhz", d.freq_max_mhz)?,
+            freq_step_mhz: opt_u32(j, "freq_step_mhz", d.freq_step_mhz)?,
+            power: match j.opt("power") {
+                Some(p) => PowerProcessSpec::from_json(p)?,
+                None => d.power,
+            },
+        })
+    }
+}
+
+/// Ground-truth power process of the simulated node. This is what the
+/// paper's *physical machine* was: the power-model fit (Eq. 7) has to
+/// recover these dynamics from noisy 1 Hz samples without being told them.
+///
+/// `P(f,p,s,u) = p*(gt_c1*f^3 + gt_c2*f)*(idle_frac + (1-idle_frac)*u)
+///               + gt_static + gt_socket*s + noise`
+///
+/// with `u` the per-core utilization (stress tests pin u=1) and f in GHz.
+/// The defaults are deliberately *near but not equal to* the paper's fitted
+/// Eq. 9 coefficients (0.29/0.97/198.59/9.18), so the regression in
+/// `powermodel` does real work.
+#[derive(Debug, Clone)]
+pub struct PowerProcessSpec {
+    pub gt_c1: f64,
+    pub gt_c2: f64,
+    pub gt_static: f64,
+    pub gt_socket: f64,
+    /// Fraction of a core's dynamic power still drawn when idle (clock
+    /// ungated but stalled) — makes utilization matter.
+    pub idle_frac: f64,
+    /// Std-dev of the Gaussian measurement noise in watts (IPMI channel).
+    pub noise_w: f64,
+    /// Slow sinusoidal thermal drift amplitude in watts (fan/VR effects).
+    pub drift_w: f64,
+    /// Thermal drift period in seconds.
+    pub drift_period_s: f64,
+}
+
+impl Default for PowerProcessSpec {
+    fn default() -> Self {
+        PowerProcessSpec {
+            gt_c1: 0.2850,
+            gt_c2: 1.02,
+            gt_static: 197.8,
+            gt_socket: 9.4,
+            idle_frac: 0.12,
+            noise_w: 1.8,
+            drift_w: 0.9,
+            drift_period_s: 210.0,
+        }
+    }
+}
+
+impl ToJson for PowerProcessSpec {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("gt_c1", Json::Num(self.gt_c1)),
+            ("gt_c2", Json::Num(self.gt_c2)),
+            ("gt_static", Json::Num(self.gt_static)),
+            ("gt_socket", Json::Num(self.gt_socket)),
+            ("idle_frac", Json::Num(self.idle_frac)),
+            ("noise_w", Json::Num(self.noise_w)),
+            ("drift_w", Json::Num(self.drift_w)),
+            ("drift_period_s", Json::Num(self.drift_period_s)),
+        ])
+    }
+}
+
+impl FromJson for PowerProcessSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let d = PowerProcessSpec::default();
+        Ok(PowerProcessSpec {
+            gt_c1: opt_f64(j, "gt_c1", d.gt_c1)?,
+            gt_c2: opt_f64(j, "gt_c2", d.gt_c2)?,
+            gt_static: opt_f64(j, "gt_static", d.gt_static)?,
+            gt_socket: opt_f64(j, "gt_socket", d.gt_socket)?,
+            idle_frac: opt_f64(j, "idle_frac", d.idle_frac)?,
+            noise_w: opt_f64(j, "noise_w", d.noise_w)?,
+            drift_w: opt_f64(j, "drift_w", d.drift_w)?,
+            drift_period_s: opt_f64(j, "drift_period_s", d.drift_period_s)?,
+        })
+    }
+}
+
+/// Characterization campaign parameters (paper §3.4).
+#[derive(Debug, Clone)]
+pub struct CampaignSpec {
+    /// Lowest characterized frequency in MHz (paper: 1200).
+    pub freq_min_mhz: Mhz,
+    /// Highest characterized frequency in MHz (paper: 2200 — one step
+    /// below the ladder max, which is left to the governors).
+    pub freq_max_mhz: Mhz,
+    /// Step in MHz (paper: 100).
+    pub freq_step_mhz: Mhz,
+    /// Core counts to sweep (paper: every 1..=32).
+    pub core_min: usize,
+    pub core_max: usize,
+    /// Input sizes to sweep (paper: 1..=5).
+    pub inputs: Vec<u32>,
+    /// RNG seed for measurement noise (reproducibility).
+    pub seed: u64,
+}
+
+impl Default for CampaignSpec {
+    fn default() -> Self {
+        CampaignSpec {
+            freq_min_mhz: 1200,
+            freq_max_mhz: 2200,
+            freq_step_mhz: 100,
+            core_min: 1,
+            core_max: 32,
+            inputs: vec![1, 2, 3, 4, 5],
+            seed: 0xEC0_97,
+        }
+    }
+}
+
+impl CampaignSpec {
+    /// Characterized frequencies, ascending (paper: 11 values).
+    pub fn frequencies(&self) -> Vec<Mhz> {
+        let mut v = Vec::new();
+        let mut f = self.freq_min_mhz;
+        while f <= self.freq_max_mhz {
+            v.push(f);
+            f += self.freq_step_mhz;
+        }
+        v
+    }
+
+    /// Characterized core counts, ascending (paper: 32 values).
+    pub fn cores(&self) -> Vec<usize> {
+        (self.core_min..=self.core_max).collect()
+    }
+
+    /// Total sample count of the campaign for one application.
+    pub fn sample_count(&self) -> usize {
+        self.frequencies().len() * self.cores().len() * self.inputs.len()
+    }
+}
+
+impl ToJson for CampaignSpec {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("freq_min_mhz", Json::Num(self.freq_min_mhz as f64)),
+            ("freq_max_mhz", Json::Num(self.freq_max_mhz as f64)),
+            ("freq_step_mhz", Json::Num(self.freq_step_mhz as f64)),
+            ("core_min", Json::Num(self.core_min as f64)),
+            ("core_max", Json::Num(self.core_max as f64)),
+            (
+                "inputs",
+                Json::Arr(self.inputs.iter().map(|i| Json::Num(*i as f64)).collect()),
+            ),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+}
+
+impl FromJson for CampaignSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let d = CampaignSpec::default();
+        let inputs = match j.opt("inputs") {
+            Some(arr) => arr
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_u32())
+                .collect::<Result<Vec<u32>>>()?,
+            None => d.inputs.clone(),
+        };
+        Ok(CampaignSpec {
+            freq_min_mhz: opt_u32(j, "freq_min_mhz", d.freq_min_mhz)?,
+            freq_max_mhz: opt_u32(j, "freq_max_mhz", d.freq_max_mhz)?,
+            freq_step_mhz: opt_u32(j, "freq_step_mhz", d.freq_step_mhz)?,
+            core_min: opt_usize(j, "core_min", d.core_min)?,
+            core_max: opt_usize(j, "core_max", d.core_max)?,
+            inputs,
+            seed: match j.opt("seed") {
+                Some(s) => s.as_u64()?,
+                None => d.seed,
+            },
+        })
+    }
+}
+
+/// SVR hyper-parameters (paper §3.4: RBF kernel, C = 10e3, gamma = 0.5,
+/// tuned by grid search; 90/10 split; 10-fold CV).
+#[derive(Debug, Clone)]
+pub struct SvrSpec {
+    pub c: f64,
+    pub gamma: f64,
+    pub epsilon: f64,
+    /// Fraction of the characterization set used for training.
+    pub train_fraction: f64,
+    /// k for k-fold cross-validation.
+    pub folds: usize,
+    /// Standardize features before the RBF kernel. The paper's gamma=0.5
+    /// is calibrated on RAW features (f in GHz ~2, cores 1-32, input 1-5);
+    /// standardizing compresses the core axis and underfits the 1/p cliff.
+    pub scale_features: bool,
+    /// SMO convergence tolerance.
+    pub tol: f64,
+    /// Hard cap on SMO pair updates.
+    pub max_iter: usize,
+    /// Split/fold shuffling seed.
+    pub seed: u64,
+}
+
+impl Default for SvrSpec {
+    fn default() -> Self {
+        SvrSpec {
+            c: 10_000.0,
+            gamma: 0.5,
+            epsilon: 0.5,
+            train_fraction: 0.9,
+            folds: 10,
+            scale_features: false,
+            tol: 1e-3,
+            max_iter: 200_000,
+            seed: 0x5EED,
+        }
+    }
+}
+
+impl ToJson for SvrSpec {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("c", Json::Num(self.c)),
+            ("gamma", Json::Num(self.gamma)),
+            ("epsilon", Json::Num(self.epsilon)),
+            ("train_fraction", Json::Num(self.train_fraction)),
+            ("folds", Json::Num(self.folds as f64)),
+            ("scale_features", Json::Bool(self.scale_features)),
+            ("tol", Json::Num(self.tol)),
+            ("max_iter", Json::Num(self.max_iter as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+}
+
+impl FromJson for SvrSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let d = SvrSpec::default();
+        Ok(SvrSpec {
+            c: opt_f64(j, "c", d.c)?,
+            gamma: opt_f64(j, "gamma", d.gamma)?,
+            epsilon: opt_f64(j, "epsilon", d.epsilon)?,
+            train_fraction: opt_f64(j, "train_fraction", d.train_fraction)?,
+            folds: opt_usize(j, "folds", d.folds)?,
+            scale_features: match j.opt("scale_features") {
+                Some(b) => b.as_bool()?,
+                None => d.scale_features,
+            },
+            tol: opt_f64(j, "tol", d.tol)?,
+            max_iter: opt_usize(j, "max_iter", d.max_iter)?,
+            seed: match j.opt("seed") {
+                Some(s) => s.as_u64()?,
+                None => d.seed,
+            },
+        })
+    }
+}
+
+/// Top-level experiment configuration (what the CLI loads from JSON).
+#[derive(Debug, Clone, Default)]
+pub struct ExperimentConfig {
+    pub node: NodeSpec,
+    pub campaign: CampaignSpec,
+    pub svr: SvrSpec,
+    /// Workloads to run; empty = all four PARSEC analogues.
+    pub workloads: Vec<String>,
+    /// Directory with AOT artifacts (manifest.json + *.hlo.txt).
+    pub artifacts_dir: String,
+}
+
+impl ExperimentConfig {
+    /// Parse from a JSON string (missing fields use paper defaults).
+    pub fn from_json_str(s: &str) -> Result<Self> {
+        Self::from_json(&Json::parse(s)?)
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        Self::from_json_str(&std::fs::read_to_string(path)?)
+    }
+
+    /// Serialize (for `ecopt config --dump`).
+    pub fn dump(&self) -> String {
+        self.to_json().dump()
+    }
+}
+
+impl ToJson for ExperimentConfig {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("node", self.node.to_json()),
+            ("campaign", self.campaign.to_json()),
+            ("svr", self.svr.to_json()),
+            (
+                "workloads",
+                Json::Arr(self.workloads.iter().map(|w| Json::Str(w.clone())).collect()),
+            ),
+            ("artifacts_dir", Json::Str(self.artifacts_dir.clone())),
+        ])
+    }
+}
+
+impl FromJson for ExperimentConfig {
+    fn from_json(j: &Json) -> Result<Self> {
+        let workloads = match j.opt("workloads") {
+            Some(arr) => arr
+                .as_arr()?
+                .iter()
+                .map(|v| Ok(v.as_str()?.to_string()))
+                .collect::<Result<Vec<String>>>()?,
+            None => Vec::new(),
+        };
+        Ok(ExperimentConfig {
+            node: match j.opt("node") {
+                Some(n) => NodeSpec::from_json(n)?,
+                None => NodeSpec::default(),
+            },
+            campaign: match j.opt("campaign") {
+                Some(c) => CampaignSpec::from_json(c)?,
+                None => CampaignSpec::default(),
+            },
+            svr: match j.opt("svr") {
+                Some(s) => SvrSpec::from_json(s)?,
+                None => SvrSpec::default(),
+            },
+            workloads,
+            artifacts_dir: match j.opt("artifacts_dir") {
+                Some(a) => a.as_str()?.to_string(),
+                None => "artifacts".to_string(),
+            },
+        })
+    }
+}
+
+// --- small field helpers ----------------------------------------------------
+
+fn opt_f64(j: &Json, key: &str, default: f64) -> Result<f64> {
+    match j.opt(key) {
+        Some(v) => v.as_f64(),
+        None => Ok(default),
+    }
+}
+
+fn opt_usize(j: &Json, key: &str, default: usize) -> Result<usize> {
+    match j.opt(key) {
+        Some(v) => v.as_usize(),
+        None => Ok(default),
+    }
+}
+
+fn opt_u32(j: &Json, key: &str, default: Mhz) -> Result<Mhz> {
+    match j.opt(key) {
+        Some(v) => v.as_u32(),
+        None => Ok(default),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_node_matches_paper_testbed() {
+        let n = NodeSpec::default();
+        assert_eq!(n.total_cores(), 32);
+        assert_eq!(n.ladder().len(), 12); // 1.2..=2.3 GHz
+        assert_eq!(*n.ladder().first().unwrap(), 1200);
+        assert_eq!(*n.ladder().last().unwrap(), 2300);
+    }
+
+    #[test]
+    fn default_campaign_matches_paper() {
+        let c = CampaignSpec::default();
+        assert_eq!(c.frequencies().len(), 11); // 1.2..=2.2
+        assert_eq!(c.cores().len(), 32);
+        assert_eq!(c.inputs.len(), 5);
+        assert_eq!(c.sample_count(), 11 * 32 * 5);
+    }
+
+    #[test]
+    fn node_validation_rejects_nonsense() {
+        let mut n = NodeSpec {
+            sockets: 0,
+            ..Default::default()
+        };
+        assert!(n.clone().validate().is_err());
+        n.sockets = 2;
+        n.freq_max_mhz = 100;
+        assert!(n.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = ExperimentConfig::default();
+        let s = cfg.dump();
+        let back = ExperimentConfig::from_json_str(&s).unwrap();
+        assert_eq!(back.node.total_cores(), 32);
+        assert_eq!(back.campaign.inputs, vec![1, 2, 3, 4, 5]);
+        assert_eq!(back.svr.c, 10_000.0);
+        assert_eq!(back.campaign.seed, cfg.campaign.seed);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let cfg = ExperimentConfig::from_json_str(r#"{"node": {"sockets": 1}}"#).unwrap();
+        assert_eq!(cfg.node.sockets, 1);
+        assert_eq!(cfg.node.cores_per_socket, 16);
+        assert_eq!(cfg.campaign.inputs.len(), 5);
+        assert_eq!(cfg.artifacts_dir, "artifacts");
+    }
+
+    #[test]
+    fn bad_json_rejected() {
+        assert!(ExperimentConfig::from_json_str("{").is_err());
+        assert!(ExperimentConfig::from_json_str(r#"{"node": {"sockets": -2}}"#).is_err());
+    }
+
+    #[test]
+    fn mhz_ghz_conversion() {
+        assert!((mhz_to_ghz(2200) - 2.2).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,306 @@
+//! Experiment coordinator (L3 glue, system S14): the end-to-end pipeline
+//! that turns a config into the paper's results —
+//!
+//! 1. **fit**: stress campaign → Eq. 7 power model (§3.3);
+//! 2. **characterize**: per-app campaign over the (f, p, N) grid (§3.4),
+//!    apps dispatched to a worker pool;
+//! 3. **model**: 90/10 split, SVR training, 10-fold CV (Table 1);
+//! 4. **optimize**: energy-surface argmin per (app, input) — through the
+//!    PJRT `svr_energy` artifact when a runtime is supplied, pure Rust
+//!    otherwise;
+//! 5. **compare**: ondemand sweep vs the proposed configuration
+//!    (Tables 2–5, Fig. 10).
+//!
+//! All stages are cacheable to JSON so examples and benches can re-use
+//! expensive phases.
+
+use std::path::Path;
+
+use crate::characterize::{characterize, Characterization};
+use crate::compare::{compare_one, summarize, ComparisonRow, SavingsSummary};
+use crate::config::ExperimentConfig;
+use crate::energy::{config_grid, EnergyModel};
+use crate::powermodel::{stress_campaign, FitReport, PowerModel, PowerObs, StressConfig};
+use crate::runtime::PjrtRuntime;
+use crate::svr::{cross_validate, train_test_split, CvReport, SvrModel};
+use crate::util::json::{FromJson, ToJson};
+use crate::util::{mae, pae};
+use crate::workloads::runner::RunConfig;
+use crate::workloads::{app_by_name, parsec_apps, AppProfile};
+use crate::{Error, Result};
+
+/// Per-application results bundle.
+#[derive(Debug, Clone)]
+pub struct AppResults {
+    pub app: String,
+    pub characterization: Characterization,
+    pub svr: SvrModel,
+    pub cv: CvReport,
+    /// Held-out test-set errors (the 90/10 split's 10 %).
+    pub test_mae: f64,
+    pub test_pae_pct: f64,
+    pub comparisons: Vec<ComparisonRow>,
+}
+
+/// Everything the report generator needs.
+#[derive(Debug, Clone)]
+pub struct ExperimentResults {
+    pub power_obs: Vec<PowerObs>,
+    pub power_model: PowerModel,
+    pub power_fit: FitReport,
+    pub apps: Vec<AppResults>,
+    pub summary: SavingsSummary,
+}
+
+impl ExperimentResults {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().dump())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_json(&crate::util::json::Json::parse(&std::fs::read_to_string(path)?)?)
+    }
+
+    pub fn app(&self, name: &str) -> Result<&AppResults> {
+        self.apps
+            .iter()
+            .find(|a| a.app == name)
+            .ok_or_else(|| Error::UnknownWorkload(name.to_string()))
+    }
+}
+
+/// Pipeline driver.
+pub struct Coordinator {
+    pub cfg: ExperimentConfig,
+    pub run_cfg: RunConfig,
+    /// Optional PJRT runtime: when present, the optimize stage goes
+    /// through the AOT `svr_energy` artifact (the deployed path).
+    runtime: Option<PjrtRuntime>,
+}
+
+impl Coordinator {
+    pub fn new(cfg: ExperimentConfig) -> Self {
+        let run_cfg = RunConfig {
+            seed: cfg.campaign.seed,
+            ..Default::default()
+        };
+        Coordinator {
+            cfg,
+            run_cfg,
+            runtime: None,
+        }
+    }
+
+    /// Attach a PJRT runtime (deployed decision path).
+    pub fn with_runtime(mut self, rt: PjrtRuntime) -> Self {
+        self.runtime = Some(rt);
+        self
+    }
+
+    /// Use a custom simulator configuration (benches/tests).
+    pub fn with_run_config(mut self, rc: RunConfig) -> Self {
+        self.run_cfg = rc;
+        self
+    }
+
+    /// The workload set: configured names, or all four PARSEC analogues.
+    pub fn workloads(&self) -> Result<Vec<AppProfile>> {
+        if self.cfg.workloads.is_empty() {
+            Ok(parsec_apps())
+        } else {
+            self.cfg.workloads.iter().map(|n| app_by_name(n)).collect()
+        }
+    }
+
+    /// Stage 1: stress campaign + Eq. 7 fit.
+    pub fn fit_power(&self) -> Result<(Vec<PowerObs>, PowerModel, FitReport)> {
+        let stress = StressConfig {
+            freq_min_mhz: self.cfg.campaign.freq_min_mhz,
+            freq_max_mhz: self.cfg.campaign.freq_max_mhz,
+            freq_step_mhz: self.cfg.campaign.freq_step_mhz,
+            seed: self.cfg.campaign.seed ^ 0xF00D,
+            ..Default::default()
+        };
+        let obs = stress_campaign(&self.cfg.node, &stress)?;
+        let (model, report) = PowerModel::fit(&obs)?;
+        Ok((obs, model, report))
+    }
+
+    /// Stage 2+3 for one app: characterize, split, train, validate.
+    pub fn model_app(&self, app: &AppProfile) -> Result<(Characterization, SvrModel, CvReport, f64, f64)> {
+        let ch = characterize(&self.cfg.node, &self.cfg.campaign, app, &self.run_cfg)?;
+        let samples = ch.train_samples();
+        let (train, test) = train_test_split(&samples, &self.cfg.svr);
+        let svr = SvrModel::train(&train, &self.cfg.svr)?;
+        let cv = cross_validate(&samples, &self.cfg.svr)?;
+        let queries: Vec<_> = test.iter().map(|s| (s.f_mhz, s.cores, s.input)).collect();
+        let pred = svr.predict(&queries);
+        let truth: Vec<f64> = test.iter().map(|s| s.time_s).collect();
+        Ok((ch, svr, cv, mae(&truth, &pred), pae(&truth, &pred)))
+    }
+
+    /// Stages 4+5 for one app: optimize each input and compare vs ondemand.
+    pub fn compare_app(
+        &mut self,
+        app: &AppProfile,
+        svr: &SvrModel,
+        power: &PowerModel,
+    ) -> Result<Vec<ComparisonRow>> {
+        let grid = config_grid(&self.cfg.campaign, &self.cfg.node);
+        let model = EnergyModel::new(*power, svr.clone(), self.cfg.node.clone());
+        let mut rows = Vec::new();
+        for &input in &self.cfg.campaign.inputs {
+            // Deployed path: cross-check the PJRT artifact against the pure
+            // Rust surface when a runtime is attached (they must agree).
+            if let Some(rt) = self.runtime.as_mut() {
+                let via_rt = model.optimize_via_runtime(rt, &grid, input, &Default::default())?;
+                let via_rs = model.optimize(&grid, input, &Default::default())?;
+                if via_rt.f_mhz != via_rs.f_mhz || via_rt.cores != via_rs.cores {
+                    crate::warn_log!(
+                        "{} input {}: PJRT argmin ({} MHz, {}) != Rust argmin ({} MHz, {})",
+                        app.name,
+                        input,
+                        via_rt.f_mhz,
+                        via_rt.cores,
+                        via_rs.f_mhz,
+                        via_rs.cores
+                    );
+                }
+            }
+            let row = compare_one(&self.cfg.node, app, input, &model, &grid, &self.run_cfg)?;
+            rows.push(row);
+        }
+        Ok(rows)
+    }
+
+    /// Run the whole pipeline.
+    pub fn run_all(&mut self) -> Result<ExperimentResults> {
+        let (obs, power_model, power_fit) = self.fit_power()?;
+        crate::info!(
+            "power model fitted: P = p({:.3} f^3 + {:.3} f) + {:.2} + {:.2} s (APE {:.2}%, RMSE {:.2} W)",
+            power_model.c1,
+            power_model.c2,
+            power_model.c3,
+            power_model.c4,
+            power_fit.ape_pct,
+            power_fit.rmse_w
+        );
+
+        let apps = self.workloads()?;
+        let mut results = Vec::new();
+        let mut all_rows = Vec::new();
+        for app in &apps {
+            crate::info!("{}: characterizing + training", app.name);
+            let (ch, svr, cv, test_mae, test_pae) = self.model_app(app)?;
+            let comparisons = self.compare_app(app, &svr, &power_model)?;
+            all_rows.extend(comparisons.clone());
+            results.push(AppResults {
+                app: app.name.clone(),
+                characterization: ch,
+                svr,
+                cv,
+                test_mae,
+                test_pae_pct: test_pae,
+                comparisons,
+            });
+        }
+        let summary = summarize(&all_rows);
+        Ok(ExperimentResults {
+            power_obs: obs,
+            power_model,
+            power_fit,
+            apps: results,
+            summary,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CampaignSpec, SvrSpec};
+
+    /// A shrunken experiment that still exercises every stage.
+    fn small_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            campaign: CampaignSpec {
+                freq_step_mhz: 500, // 1200, 1700, 2200
+                core_max: 8,
+                inputs: vec![1, 2],
+                ..Default::default()
+            },
+            svr: SvrSpec {
+                c: 1000.0,
+                epsilon: 0.5,
+                folds: 3,
+                max_iter: 100_000,
+                ..Default::default()
+            },
+            workloads: vec!["swaptions".into()],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn full_pipeline_small() {
+        let mut coord = Coordinator::new(small_cfg()).with_run_config(RunConfig {
+            dt: 0.25,
+            work_noise: 0.005,
+            seed: 42,
+            max_sim_s: 1e6,
+        });
+        let res = coord.run_all().unwrap();
+        assert_eq!(res.apps.len(), 1);
+        let app = &res.apps[0];
+        assert_eq!(app.characterization.samples.len(), 3 * 8 * 2);
+        assert_eq!(app.comparisons.len(), 2);
+        // The proposed approach must beat the ondemand WORST case for a
+        // scalable app (the paper's strongest claim).
+        for row in &app.comparisons {
+            assert!(
+                row.save_max_pct() > 0.0,
+                "input {}: save_max {}",
+                row.input,
+                row.save_max_pct()
+            );
+        }
+        // Power fit recovered something Eq. 9-shaped.
+        assert!(res.power_model.c3 > 150.0 && res.power_model.c3 < 250.0);
+        assert!(res.power_fit.ape_pct < 3.0);
+    }
+
+    #[test]
+    fn results_save_load() {
+        let mut coord = Coordinator::new(ExperimentConfig {
+            campaign: CampaignSpec {
+                freq_step_mhz: 500, // 1200, 1700, 2200
+                core_max: 4,
+                inputs: vec![1, 2],
+                ..Default::default()
+            },
+            svr: SvrSpec {
+                folds: 2,
+                c: 500.0,
+                max_iter: 50_000,
+                ..Default::default()
+            },
+            workloads: vec!["blackscholes".into()],
+            ..Default::default()
+        })
+        .with_run_config(RunConfig {
+            dt: 0.25,
+            work_noise: 0.0,
+            seed: 7,
+            max_sim_s: 1e6,
+        });
+        let res = coord.run_all().unwrap();
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        let p = dir.path().join("results.json");
+        res.save(&p).unwrap();
+        let back = ExperimentResults::load(&p).unwrap();
+        assert_eq!(back.apps.len(), res.apps.len());
+        assert!(back.app("blackscholes").is_ok());
+        assert!(back.app("nope").is_err());
+    }
+}

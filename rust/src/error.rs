@@ -1,0 +1,64 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for all ecopt subsystems.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Configuration parsing / validation problems.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// A requested frequency is not on the node's DVFS ladder.
+    #[error("frequency {0} MHz not on the DVFS ladder")]
+    BadFrequency(u32),
+
+    /// A requested core count exceeds the node's capacity or is zero.
+    #[error("invalid core count {requested} (node has {available})")]
+    BadCoreCount { requested: usize, available: usize },
+
+    /// An unknown workload name was requested.
+    #[error("unknown workload '{0}'")]
+    UnknownWorkload(String),
+
+    /// An unknown governor name was requested.
+    #[error("unknown governor '{0}'")]
+    UnknownGovernor(String),
+
+    /// Characterization / training data problems (empty sets, NaNs...).
+    #[error("data error: {0}")]
+    Data(String),
+
+    /// SVR training failed to converge or was given inconsistent inputs.
+    #[error("svr error: {0}")]
+    Svr(String),
+
+    /// Linear algebra failure (singular system in the power-model fit).
+    #[error("linear algebra error: {0}")]
+    Linalg(String),
+
+    /// PJRT runtime failures (artifact loading, compilation, execution).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Artifact manifest problems (missing files, shape mismatches).
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// I/O wrapper.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// JSON parse/shape errors (in-tree `util::json`).
+    #[error("json error: {0}")]
+    Json(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

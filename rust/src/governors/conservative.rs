@@ -1,0 +1,147 @@
+//! The `conservative` governor: like ondemand but moves one ladder step at
+//! a time (designed for battery-powered systems; included because the
+//! paper's §3.2 lists it among the available baselines).
+
+use crate::config::Mhz;
+use crate::governors::Governor;
+use crate::node::Node;
+use crate::Result;
+
+#[derive(Debug, Clone)]
+pub struct ConservativeTunables {
+    /// Step up when load exceeds this percentage (kernel default: 80).
+    pub up_threshold: f64,
+    /// Step down when load falls below this percentage (kernel default: 20).
+    pub down_threshold: f64,
+    /// Sampling period in seconds.
+    pub sampling_period_s: f64,
+}
+
+impl Default for ConservativeTunables {
+    fn default() -> Self {
+        ConservativeTunables {
+            up_threshold: 80.0,
+            down_threshold: 20.0,
+            sampling_period_s: 0.1,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct Conservative {
+    tun: ConservativeTunables,
+    ladder: Vec<Mhz>,
+}
+
+impl Conservative {
+    pub fn new(ladder: &[Mhz]) -> Self {
+        Self::with_tunables(ladder, ConservativeTunables::default())
+    }
+
+    pub fn with_tunables(ladder: &[Mhz], tun: ConservativeTunables) -> Self {
+        assert!(tun.up_threshold > tun.down_threshold);
+        Conservative {
+            tun,
+            ladder: ladder.to_vec(),
+        }
+    }
+
+    fn step(&self, f: Mhz, up: bool) -> Mhz {
+        let idx = self.ladder.iter().position(|x| *x == f).unwrap_or(0);
+        if up {
+            self.ladder[(idx + 1).min(self.ladder.len() - 1)]
+        } else {
+            self.ladder[idx.saturating_sub(1)]
+        }
+    }
+}
+
+impl Governor for Conservative {
+    fn name(&self) -> &'static str {
+        "conservative"
+    }
+
+    fn sampling_period_s(&self) -> f64 {
+        self.tun.sampling_period_s
+    }
+
+    fn sample(&mut self, node: &mut Node) -> Result<()> {
+        for core in 0..node.total_cores() {
+            if !node.is_online(core) {
+                continue;
+            }
+            let load = node.util(core) * 100.0;
+            let f_cur = node.freq(core);
+            let f_next = if load > self.tun.up_threshold {
+                self.step(f_cur, true)
+            } else if load < self.tun.down_threshold {
+                self.step(f_cur, false)
+            } else {
+                f_cur
+            };
+            if f_next != f_cur {
+                node.set_freq(core, f_next)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NodeSpec;
+
+    fn node() -> Node {
+        Node::new(NodeSpec::default()).unwrap()
+    }
+
+    #[test]
+    fn steps_up_one_at_a_time() {
+        let mut n = node();
+        n.set_freq_all(1200).unwrap();
+        n.set_util(0, 1.0);
+        let mut g = Conservative::new(n.ladder());
+        g.sample(&mut n).unwrap();
+        assert_eq!(n.freq(0), 1300);
+        g.sample(&mut n).unwrap();
+        assert_eq!(n.freq(0), 1400);
+    }
+
+    #[test]
+    fn steps_down_when_idle() {
+        let mut n = node();
+        n.set_util(0, 0.0);
+        let mut g = Conservative::new(n.ladder());
+        g.sample(&mut n).unwrap();
+        assert_eq!(n.freq(0), 2200);
+    }
+
+    #[test]
+    fn holds_in_deadband() {
+        let mut n = node();
+        n.set_freq_all(1800).unwrap();
+        n.set_util(0, 0.5);
+        let mut g = Conservative::new(n.ladder());
+        for _ in 0..10 {
+            g.sample(&mut n).unwrap();
+        }
+        assert_eq!(n.freq(0), 1800);
+    }
+
+    #[test]
+    fn saturates_at_ladder_ends() {
+        let mut n = node();
+        let mut g = Conservative::new(n.ladder());
+        n.set_util(0, 1.0);
+        for _ in 0..50 {
+            g.sample(&mut n).unwrap();
+        }
+        assert_eq!(n.freq(0), 2300);
+        n.set_util(0, 0.0);
+        for _ in 0..50 {
+            g.sample(&mut n).unwrap();
+        }
+        assert_eq!(n.freq(0), 1200);
+    }
+}

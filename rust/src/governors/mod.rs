@@ -1,0 +1,100 @@
+//! Linux cpufreq governor re-implementations (baseline S4, paper §3.2).
+//!
+//! The paper compares against the `acpi-cpufreq` driver's governors:
+//! *Performance* and *Powersave* (static max/min), *Userspace* (fixed,
+//! user-chosen — this is what the proposed approach drives), *Ondemand*
+//! (the Linux default and the paper's comparison baseline) and
+//! *Conservative*. Each governor runs one policy per core, exactly like
+//! the paper's kernel-2.6.32 setup, and is ticked on its own sampling
+//! cadence by the workload simulator.
+
+mod conservative;
+mod ondemand;
+mod statics;
+
+pub use conservative::Conservative;
+pub use ondemand::Ondemand;
+pub use statics::{Performance, Powersave, Userspace};
+
+use crate::config::Mhz;
+use crate::node::Node;
+use crate::Result;
+
+/// A per-node frequency-scaling policy. Implementations observe per-core
+/// utilization and update per-core frequencies through the node handle.
+pub trait Governor: Send {
+    /// Governor name as exposed in
+    /// `/sys/devices/system/cpu/cpu*/cpufreq/scaling_governor`.
+    fn name(&self) -> &'static str;
+
+    /// Sampling period in seconds (how often `sample` should be called).
+    fn sampling_period_s(&self) -> f64;
+
+    /// Observe the node and apply new per-core frequencies.
+    fn sample(&mut self, node: &mut Node) -> Result<()>;
+
+    /// Reset internal state (between runs).
+    fn reset(&mut self) {}
+}
+
+impl Governor for Box<dyn Governor> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+    fn sampling_period_s(&self) -> f64 {
+        (**self).sampling_period_s()
+    }
+    fn sample(&mut self, node: &mut Node) -> Result<()> {
+        (**self).sample(node)
+    }
+    fn reset(&mut self) {
+        (**self).reset()
+    }
+}
+
+/// Construct a governor by its Linux name.
+pub fn by_name(name: &str, node: &Node) -> Result<Box<dyn Governor>> {
+    let ladder = node.ladder().to_vec();
+    match name {
+        "performance" => Ok(Box::new(Performance::new(&ladder))),
+        "powersave" => Ok(Box::new(Powersave::new(&ladder))),
+        "ondemand" => Ok(Box::new(Ondemand::new(&ladder))),
+        "conservative" => Ok(Box::new(Conservative::new(&ladder))),
+        other if other.starts_with("userspace") => {
+            // "userspace:1800" pins 1.8 GHz.
+            let f = other
+                .split(':')
+                .nth(1)
+                .and_then(|s| s.parse::<Mhz>().ok())
+                .unwrap_or_else(|| *ladder.last().unwrap());
+            Ok(Box::new(Userspace::new(f)))
+        }
+        other => Err(crate::Error::UnknownGovernor(other.to_string())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NodeSpec;
+
+    #[test]
+    fn by_name_resolves_all() {
+        let node = Node::new(NodeSpec::default()).unwrap();
+        for n in ["performance", "powersave", "ondemand", "conservative", "userspace:1800"] {
+            let g = by_name(n, &node).unwrap();
+            assert!(!g.name().is_empty());
+        }
+        assert!(by_name("turbo-boost", &node).is_err());
+    }
+
+    #[test]
+    fn userspace_parses_frequency() {
+        let node = Node::new(NodeSpec::default()).unwrap();
+        let mut g = by_name("userspace:1500", &node).unwrap();
+        let mut n = Node::new(NodeSpec::default()).unwrap();
+        g.sample(&mut n).unwrap();
+        assert_eq!(n.freq(0), 1500);
+        assert_eq!(n.freq(31), 1500);
+    }
+}

@@ -1,0 +1,127 @@
+//! The trivial governors: Performance (pin max), Powersave (pin min) and
+//! Userspace (pin a user-chosen frequency — the proposed approach's
+//! actuation mechanism, §3.2).
+
+use crate::config::Mhz;
+use crate::governors::Governor;
+use crate::node::Node;
+use crate::Result;
+
+/// Pins every core to the ladder maximum.
+#[derive(Debug)]
+pub struct Performance {
+    fmax: Mhz,
+}
+
+impl Performance {
+    pub fn new(ladder: &[Mhz]) -> Self {
+        Performance {
+            fmax: *ladder.last().expect("non-empty ladder"),
+        }
+    }
+}
+
+impl Governor for Performance {
+    fn name(&self) -> &'static str {
+        "performance"
+    }
+    fn sampling_period_s(&self) -> f64 {
+        f64::INFINITY // static: sampled once at run start
+    }
+    fn sample(&mut self, node: &mut Node) -> Result<()> {
+        node.set_freq_all(self.fmax)
+    }
+}
+
+/// Pins every core to the ladder minimum.
+#[derive(Debug)]
+pub struct Powersave {
+    fmin: Mhz,
+}
+
+impl Powersave {
+    pub fn new(ladder: &[Mhz]) -> Self {
+        Powersave {
+            fmin: *ladder.first().expect("non-empty ladder"),
+        }
+    }
+}
+
+impl Governor for Powersave {
+    fn name(&self) -> &'static str {
+        "powersave"
+    }
+    fn sampling_period_s(&self) -> f64 {
+        f64::INFINITY
+    }
+    fn sample(&mut self, node: &mut Node) -> Result<()> {
+        node.set_freq_all(self.fmin)
+    }
+}
+
+/// Pins every core to a fixed user-selected frequency. The proposed
+/// methodology actuates its chosen configuration through this governor
+/// plus core hotplug, exactly as §3.2 describes.
+#[derive(Debug)]
+pub struct Userspace {
+    f: Mhz,
+}
+
+impl Userspace {
+    pub fn new(f: Mhz) -> Self {
+        Userspace { f }
+    }
+
+    pub fn set_speed(&mut self, f: Mhz) {
+        self.f = f;
+    }
+}
+
+impl Governor for Userspace {
+    fn name(&self) -> &'static str {
+        "userspace"
+    }
+    fn sampling_period_s(&self) -> f64 {
+        f64::INFINITY
+    }
+    fn sample(&mut self, node: &mut Node) -> Result<()> {
+        node.set_freq_all(self.f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NodeSpec;
+
+    fn node() -> Node {
+        Node::new(NodeSpec::default()).unwrap()
+    }
+
+    #[test]
+    fn performance_pins_max() {
+        let mut n = node();
+        n.set_freq_all(1200).unwrap();
+        let mut g = Performance::new(n.ladder());
+        g.sample(&mut n).unwrap();
+        assert!(n.freqs().iter().all(|f| *f == 2300));
+    }
+
+    #[test]
+    fn powersave_pins_min() {
+        let mut n = node();
+        let mut g = Powersave::new(n.ladder());
+        g.sample(&mut n).unwrap();
+        assert!(n.freqs().iter().all(|f| *f == 1200));
+    }
+
+    #[test]
+    fn userspace_pins_requested_and_rejects_off_ladder() {
+        let mut n = node();
+        let mut g = Userspace::new(1700);
+        g.sample(&mut n).unwrap();
+        assert!(n.freqs().iter().all(|f| *f == 1700));
+        g.set_speed(1234); // off ladder -> error surfaces
+        assert!(g.sample(&mut n).is_err());
+    }
+}

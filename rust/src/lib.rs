@@ -1,0 +1,42 @@
+//! # ecopt — Energy-Optimal Configurations for Single-Node HPC Applications
+//!
+//! A full-system reproduction of Silva et al. (CS.DC 2018): find the
+//! (frequency, #active-cores) configuration that minimizes the energy of a
+//! single-node shared-memory HPC application, using
+//!
+//! * an **application-agnostic power model** of the architecture
+//!   (`powermodel`, paper Eq. 7) fitted from simulated IPMI measurements,
+//! * an **architecture-aware performance model** of the application
+//!   (`svr`, ε-SVR with RBF kernel, paper §2.2) trained from a
+//!   characterization campaign (`characterize`, paper §3.4), and
+//! * an **energy model** `E = P × T` (`energy`, paper Eq. 8) minimized over
+//!   the configuration grid.
+//!
+//! The original testbed (dual Xeon E5-2698v3, IPMI sensors, PARSEC 3.0) is
+//! replaced by simulated substrates with the same observable behaviour:
+//! a cycle-level-enough node simulator (`node`), an IPMI sampling channel
+//! (`sensors`), the Linux cpufreq governors (`governors`), and analytic +
+//! real-compute PARSEC workload analogues (`workloads`). The deployed
+//! decision path executes AOT-compiled JAX/Pallas artifacts through the
+//! PJRT runtime (`runtime`); Python never runs at request time.
+//!
+//! See `DESIGN.md` for the system inventory and per-experiment index.
+
+pub mod characterize;
+pub mod compare;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod error;
+pub mod governors;
+pub mod node;
+pub mod persist;
+pub mod powermodel;
+pub mod report;
+pub mod runtime;
+pub mod sensors;
+pub mod svr;
+pub mod util;
+pub mod workloads;
+
+pub use error::{Error, Result};

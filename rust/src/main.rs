@@ -1,0 +1,229 @@
+//! `ecopt` — CLI for the energy-optimal-configuration pipeline.
+//!
+//! Subcommands map to the pipeline stages (see `coordinator`):
+//!
+//! ```text
+//! ecopt fit-power                  # stress campaign + Eq. 7 fit
+//! ecopt characterize --app NAME    # §3.4 campaign for one app
+//! ecopt optimize --app NAME -n 3   # energy-optimal (f, p) via PJRT
+//! ecopt compare [--app NAME]       # ondemand vs proposed (Tables 2-5)
+//! ecopt report [--all|--only X]    # tables + figures [--cache FILE]
+//! ecopt config --dump              # print the effective JSON config
+//! ```
+//!
+//! Global flags: `--config FILE` (JSON), `--artifacts DIR`.
+//! (The CLI parser is hand-rolled; the offline image has no clap.)
+
+use std::path::PathBuf;
+
+use ecopt::config::ExperimentConfig;
+use ecopt::coordinator::{Coordinator, ExperimentResults};
+use ecopt::energy::{config_grid, EnergyModel};
+use ecopt::report;
+use ecopt::runtime::PjrtRuntime;
+use ecopt::workloads::app_by_name;
+
+const USAGE: &str = "\
+ecopt — Energy-Optimal Configurations for Single-Node HPC Applications
+       (reproduction of Silva et al., CS.DC 2018)
+
+USAGE: ecopt [--config FILE.json] [--artifacts DIR] <COMMAND> [ARGS]
+
+COMMANDS:
+  fit-power                     stress campaign + power-model fit (Fig. 1)
+  characterize --app NAME [--out FILE]
+                                (f, p, N) campaign + SVR training (Figs. 2-5)
+  optimize --app NAME [-n N] [--no-pjrt]
+                                energy-optimal configuration (Eq. 8 argmin)
+  compare [--app NAME]          full pipeline + ondemand comparison (Tables 2-5)
+  report [--all] [--only WHAT] [--cache FILE]
+                                render paper artifacts; WHAT = 1-5, f1-f10, headline
+  config --dump                 print the effective configuration
+  help                          this text
+";
+
+/// Minimal flag parser: collects `--key value`, `--flag`, and positionals.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                // `--key value` unless the next token is another flag/end.
+                let next_is_value = argv
+                    .get(i + 1)
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false);
+                if next_is_value {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(name.to_string(), String::new());
+                    i += 1;
+                }
+            } else if a == "-n" {
+                if let Some(v) = argv.get(i + 1) {
+                    flags.insert("input".into(), v.clone());
+                }
+                i += 2;
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    fn require(&self, name: &str) -> anyhow::Result<&str> {
+        self.get(name)
+            .filter(|s| !s.is_empty())
+            .ok_or_else(|| anyhow::anyhow!("missing required flag --{name}\n\n{USAGE}"))
+    }
+}
+
+fn load_config(args: &Args) -> anyhow::Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(p) => ExperimentConfig::load(std::path::Path::new(p))?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(a) = args.get("artifacts") {
+        cfg.artifacts_dir = a.to_string();
+    }
+    Ok(cfg)
+}
+
+fn results(args: &Args) -> anyhow::Result<(ExperimentResults, ExperimentConfig)> {
+    let cfg = load_config(args)?;
+    let cache: Option<PathBuf> = args.get("cache").map(PathBuf::from);
+    if let Some(path) = &cache {
+        if path.exists() {
+            eprintln!("loading cached results from {}", path.display());
+            return Ok((ExperimentResults::load(path)?, cfg));
+        }
+    }
+    let rt = PjrtRuntime::cpu(std::path::Path::new(&cfg.artifacts_dir)).ok();
+    let mut coord = Coordinator::new(cfg.clone());
+    if let Some(rt) = rt {
+        eprintln!("PJRT runtime attached (platform: {})", rt.platform());
+        coord = coord.with_runtime(rt);
+    } else {
+        eprintln!("no artifacts found — running pure-Rust decision path");
+    }
+    let res = coord.run_all()?;
+    if let Some(path) = &cache {
+        res.save(path)?;
+        eprintln!("cached results to {}", path.display());
+    }
+    Ok((res, cfg))
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+
+    match cmd {
+        "fit-power" => {
+            let cfg = load_config(&args)?;
+            let coord = Coordinator::new(cfg);
+            let (_, model, report) = coord.fit_power()?;
+            println!(
+                "P(f,p,s) = p({:.3} f^3 + {:.3} f) + {:.2} + {:.2} s",
+                model.c1, model.c2, model.c3, model.c4
+            );
+            println!(
+                "APE {:.2}%  RMSE {:.2} W  over {} samples (paper: 0.75%, 2.38 W)",
+                report.ape_pct, report.rmse_w, report.n_samples
+            );
+        }
+        "characterize" => {
+            let cfg = load_config(&args)?;
+            let app = args.require("app")?.to_string();
+            let coord = Coordinator::new(cfg);
+            let profile = app_by_name(&app)?;
+            let (ch, _, cv, test_mae, test_pae) = coord.model_app(&profile)?;
+            println!(
+                "{app}: {} samples | CV MAE {:.2}s PAE {:.2}% | test MAE {:.2}s PAE {:.2}%",
+                ch.samples.len(),
+                cv.mae,
+                cv.pae_pct,
+                test_mae,
+                test_pae
+            );
+            if let Some(path) = args.get("out") {
+                ch.save(std::path::Path::new(path))?;
+                println!("characterization written to {path}");
+            }
+        }
+        "optimize" => {
+            let cfg = load_config(&args)?;
+            let app = args.require("app")?.to_string();
+            let input: u32 = args.get("input").unwrap_or("3").parse()?;
+            let coord = Coordinator::new(cfg.clone());
+            let profile = app_by_name(&app)?;
+            let (_, model, _) = coord.fit_power()?;
+            let (_, svr, _, _, _) = coord.model_app(&profile)?;
+            let em = EnergyModel::new(model, svr, cfg.node.clone());
+            let grid = config_grid(&cfg.campaign, &cfg.node);
+            let opt = if args.has("no-pjrt") {
+                em.optimize(&grid, input, &Default::default())?
+            } else {
+                let mut rt = PjrtRuntime::cpu(std::path::Path::new(&cfg.artifacts_dir))?;
+                em.optimize_via_runtime(&mut rt, &grid, input, &Default::default())?
+            };
+            println!(
+                "{app} input {input}: run at {:.1} GHz on {} cores (predicted {:.1} s, {:.2} kJ)",
+                opt.f_mhz as f64 / 1000.0,
+                opt.cores,
+                opt.pred_time_s,
+                opt.pred_energy_j / 1000.0
+            );
+        }
+        "compare" => {
+            let mut cfg = load_config(&args)?;
+            if let Some(a) = args.get("app") {
+                cfg.workloads = vec![a.to_string()];
+            }
+            let mut coord = Coordinator::new(cfg);
+            let res = coord.run_all()?;
+            for a in &res.apps {
+                println!("{}", report::table_comparison(a));
+            }
+            println!("{}", report::headline(&res));
+        }
+        "report" => {
+            let (res, cfg) = results(&args)?;
+            match args.get("only") {
+                Some(what) if !what.is_empty() => {
+                    println!("{}", report::render(&res, &cfg.campaign, what)?)
+                }
+                _ => println!("{}", report::full_report(&res, &cfg.campaign)),
+            }
+        }
+        "config" => {
+            let cfg = load_config(&args)?;
+            println!("{}", cfg.dump());
+        }
+        "help" | "--help" | "-h" => println!("{USAGE}"),
+        other => {
+            eprintln!("unknown command '{other}'\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,276 @@
+//! Simulated single HPC node (substrate S1).
+//!
+//! Replaces the paper's dual-socket Xeon E5-2698 v3 testbed. The node
+//! exposes exactly the knobs the paper's methodology uses:
+//!
+//! * a DVFS ladder driven per-core (the `acpi-cpufreq` role) — see
+//!   [`Node::set_freq`] / [`Node::set_freq_all`];
+//! * core hotplug (the "Linux virtual files" of §3.2) — [`Node::set_online_cores`];
+//! * per-core utilization state set by the workload simulator and observed
+//!   by governors;
+//! * a ground-truth power process ([`power::PowerProcess`]) observable only
+//!   through the IPMI sensor channel (`sensors`).
+
+pub mod power;
+
+use crate::config::{Mhz, NodeSpec};
+use crate::{Error, Result};
+
+/// Mutable state of the simulated node.
+#[derive(Debug, Clone)]
+pub struct Node {
+    spec: NodeSpec,
+    ladder: Vec<Mhz>,
+    /// Current DVFS frequency per core (even offline cores keep a setting,
+    /// like real sysfs).
+    core_freq: Vec<Mhz>,
+    /// Hotplug state per core.
+    online: Vec<bool>,
+    /// Instantaneous utilization per core in [0, 1], set by the workload
+    /// simulator each tick.
+    util: Vec<f64>,
+}
+
+impl Node {
+    /// Create a node with all cores online at maximum frequency (Linux
+    /// boot state with the performance governor).
+    pub fn new(spec: NodeSpec) -> Result<Self> {
+        let spec = spec.validate()?;
+        let n = spec.total_cores();
+        let ladder = spec.ladder();
+        let fmax = *ladder.last().expect("non-empty ladder");
+        Ok(Node {
+            spec,
+            ladder,
+            core_freq: vec![fmax; n],
+            online: vec![true; n],
+            util: vec![0.0; n],
+        })
+    }
+
+    /// The hardware spec this node was built from.
+    pub fn spec(&self) -> &NodeSpec {
+        &self.spec
+    }
+
+    /// The DVFS ladder (ascending MHz).
+    pub fn ladder(&self) -> &[Mhz] {
+        &self.ladder
+    }
+
+    /// Total physical cores.
+    pub fn total_cores(&self) -> usize {
+        self.spec.total_cores()
+    }
+
+    /// Snap an arbitrary frequency request to the nearest ladder entry
+    /// (clamped to the ladder ends) — cpufreq's resolution behaviour.
+    pub fn snap_to_ladder(&self, f: Mhz) -> Mhz {
+        let lo = self.spec.freq_min_mhz;
+        let hi = self.spec.freq_max_mhz;
+        let f = f.clamp(lo, hi);
+        let step = self.spec.freq_step_mhz;
+        let down = lo + ((f - lo) / step) * step;
+        let up = (down + step).min(hi);
+        if f - down <= up - f {
+            down
+        } else {
+            up
+        }
+    }
+
+    /// Set one core's frequency. Errors if the value is not on the ladder
+    /// (use [`Node::snap_to_ladder`] first for governor-style requests).
+    pub fn set_freq(&mut self, core: usize, f: Mhz) -> Result<()> {
+        if !self.ladder.contains(&f) {
+            return Err(Error::BadFrequency(f));
+        }
+        if core >= self.core_freq.len() {
+            return Err(Error::BadCoreCount {
+                requested: core + 1,
+                available: self.total_cores(),
+            });
+        }
+        self.core_freq[core] = f;
+        Ok(())
+    }
+
+    /// Set every core's frequency (userspace-governor style).
+    pub fn set_freq_all(&mut self, f: Mhz) -> Result<()> {
+        if !self.ladder.contains(&f) {
+            return Err(Error::BadFrequency(f));
+        }
+        self.core_freq.fill(f);
+        Ok(())
+    }
+
+    /// Current frequency of a core.
+    pub fn freq(&self, core: usize) -> Mhz {
+        self.core_freq[core]
+    }
+
+    /// Bring exactly `p` cores online, socket 0 first (the paper activates
+    /// cores contiguously); the rest go offline. Idle cores' utilization is
+    /// reset.
+    pub fn set_online_cores(&mut self, p: usize) -> Result<()> {
+        let total = self.total_cores();
+        if p == 0 || p > total {
+            return Err(Error::BadCoreCount {
+                requested: p,
+                available: total,
+            });
+        }
+        for (i, on) in self.online.iter_mut().enumerate() {
+            *on = i < p;
+        }
+        for i in p..total {
+            self.util[i] = 0.0;
+        }
+        Ok(())
+    }
+
+    /// Number of online cores.
+    pub fn online_cores(&self) -> usize {
+        self.online.iter().filter(|b| **b).count()
+    }
+
+    /// Whether a specific core is online.
+    pub fn is_online(&self, core: usize) -> bool {
+        self.online[core]
+    }
+
+    /// Sockets with at least one online core (the paper's `s` in Eq. 7).
+    /// Offline sockets are assumed package-gated.
+    pub fn active_sockets(&self) -> usize {
+        let per = self.spec.cores_per_socket;
+        (0..self.spec.sockets)
+            .filter(|s| self.online[s * per..(s + 1) * per].iter().any(|b| *b))
+            .count()
+    }
+
+    /// Set a core's utilization (workload simulator hook). Values are
+    /// clamped to [0, 1]; offline cores are forced to 0.
+    pub fn set_util(&mut self, core: usize, u: f64) {
+        self.util[core] = if self.online[core] {
+            u.clamp(0.0, 1.0)
+        } else {
+            0.0
+        };
+    }
+
+    /// Current utilization of a core.
+    pub fn util(&self, core: usize) -> f64 {
+        self.util[core]
+    }
+
+    /// Utilizations of all cores (governor observation).
+    pub fn utils(&self) -> &[f64] {
+        &self.util
+    }
+
+    /// Per-core frequencies (governor observation).
+    pub fn freqs(&self) -> &[Mhz] {
+        &self.core_freq
+    }
+
+    /// Time-weighted helper: mean frequency over *online* cores, in GHz.
+    pub fn mean_online_freq_ghz(&self) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for (i, on) in self.online.iter().enumerate() {
+            if *on {
+                sum += self.core_freq[i] as f64;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64 / 1000.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node() -> Node {
+        Node::new(NodeSpec::default()).unwrap()
+    }
+
+    #[test]
+    fn boots_all_online_max_freq() {
+        let n = node();
+        assert_eq!(n.online_cores(), 32);
+        assert_eq!(n.active_sockets(), 2);
+        assert_eq!(n.freq(0), 2300);
+    }
+
+    #[test]
+    fn hotplug_socket_accounting() {
+        let mut n = node();
+        n.set_online_cores(16).unwrap();
+        assert_eq!(n.active_sockets(), 1, "16 cores fit in socket 0");
+        n.set_online_cores(17).unwrap();
+        assert_eq!(n.active_sockets(), 2);
+        n.set_online_cores(1).unwrap();
+        assert_eq!(n.active_sockets(), 1);
+    }
+
+    #[test]
+    fn hotplug_rejects_bad_counts() {
+        let mut n = node();
+        assert!(n.set_online_cores(0).is_err());
+        assert!(n.set_online_cores(33).is_err());
+    }
+
+    #[test]
+    fn offline_core_util_forced_zero() {
+        let mut n = node();
+        n.set_util(31, 1.0);
+        assert_eq!(n.util(31), 1.0);
+        n.set_online_cores(8).unwrap();
+        assert_eq!(n.util(31), 0.0);
+        n.set_util(31, 0.9);
+        assert_eq!(n.util(31), 0.0);
+    }
+
+    #[test]
+    fn freq_validation() {
+        let mut n = node();
+        assert!(n.set_freq_all(1250).is_err()); // off-ladder
+        assert!(n.set_freq_all(1200).is_ok());
+        assert!(n.set_freq(0, 2200).is_ok());
+        assert!(n.set_freq(99, 2200).is_err());
+    }
+
+    #[test]
+    fn snap_to_ladder_behaviour() {
+        let n = node();
+        assert_eq!(n.snap_to_ladder(1249), 1200);
+        assert_eq!(n.snap_to_ladder(1251), 1300);
+        assert_eq!(n.snap_to_ladder(100), 1200);
+        assert_eq!(n.snap_to_ladder(9999), 2300);
+        assert_eq!(n.snap_to_ladder(1800), 1800);
+    }
+
+    #[test]
+    fn mean_online_freq_tracks_active_set() {
+        let mut n = node();
+        n.set_online_cores(2).unwrap();
+        n.set_freq(0, 1200).unwrap();
+        n.set_freq(1, 2200).unwrap();
+        n.set_freq(31, 2300).unwrap(); // offline, ignored
+        assert!((n.mean_online_freq_ghz() - 1.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn util_clamped() {
+        let mut n = node();
+        n.set_util(0, 7.0);
+        assert_eq!(n.util(0), 1.0);
+        n.set_util(0, -3.0);
+        assert_eq!(n.util(0), 0.0);
+    }
+}

@@ -1,0 +1,157 @@
+//! Ground-truth power process of the simulated node (substrate S2).
+//!
+//! This plays the role of the *physical machine's* electrical behaviour:
+//! a CMOS-shaped per-core dynamic term, a leakage term linear in f, a big
+//! static floor (the paper's testbed idles near 200 W), a per-socket
+//! overhead, utilization-dependent clock gating, slow thermal drift, and
+//! Gaussian sensor-channel noise. The methodology must *recover* Eq. 7's
+//! coefficients from 1 Hz samples of this process — it is never told them.
+
+use crate::config::{mhz_to_ghz, PowerProcessSpec};
+use crate::node::Node;
+use crate::util::rng::Rng;
+
+/// Stateless evaluator for the ground-truth power draw.
+#[derive(Debug, Clone)]
+pub struct PowerProcess {
+    spec: PowerProcessSpec,
+}
+
+impl PowerProcess {
+    pub fn new(spec: PowerProcessSpec) -> Self {
+        PowerProcess { spec }
+    }
+
+    pub fn spec(&self) -> &PowerProcessSpec {
+        &self.spec
+    }
+
+    /// Deterministic (noise-free, drift-free) component of the node power
+    /// in watts at the node's current DVFS/hotplug/utilization state.
+    pub fn base_watts(&self, node: &Node) -> f64 {
+        let s = &self.spec;
+        let mut dynamic = 0.0;
+        for core in 0..node.total_cores() {
+            if !node.is_online(core) {
+                continue;
+            }
+            let f = mhz_to_ghz(node.freq(core));
+            let gate = s.idle_frac + (1.0 - s.idle_frac) * node.util(core);
+            dynamic += (s.gt_c1 * f * f * f + s.gt_c2 * f) * gate;
+        }
+        s.gt_static + s.gt_socket * node.active_sockets() as f64 + dynamic
+    }
+
+    /// Observable instantaneous power at simulated time `t` (seconds):
+    /// base + thermal drift + Gaussian noise. This is what the IPMI
+    /// channel samples.
+    pub fn instantaneous_watts(&self, node: &Node, t: f64, rng: &mut Rng) -> f64 {
+        let s = &self.spec;
+        let drift = s.drift_w * (2.0 * std::f64::consts::PI * t / s.drift_period_s).sin();
+        let noise = rng.gaussian() * s.noise_w;
+        (self.base_watts(node) + drift + noise).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NodeSpec;
+
+    fn setup() -> (Node, PowerProcess) {
+        let spec = NodeSpec::default();
+        let pp = PowerProcess::new(spec.power.clone());
+        (Node::new(spec).unwrap(), pp)
+    }
+
+    #[test]
+    fn idle_power_near_static_floor() {
+        let (mut node, pp) = setup();
+        node.set_online_cores(1).unwrap();
+        node.set_freq_all(1200).unwrap();
+        let w = pp.base_watts(&node);
+        // static + 1 socket + one idle-gated core: ~208-209 W
+        assert!(w > 200.0 && w < 215.0, "idle power {w}");
+    }
+
+    #[test]
+    fn power_monotone_in_cores_freq_util() {
+        let (mut node, pp) = setup();
+        node.set_freq_all(1800).unwrap();
+        let mut last = 0.0;
+        for p in [1, 8, 16, 24, 32] {
+            node.set_online_cores(p).unwrap();
+            for c in 0..p {
+                node.set_util(c, 1.0);
+            }
+            let w = pp.base_watts(&node);
+            assert!(w > last, "p={p}: {w} <= {last}");
+            last = w;
+        }
+        // frequency monotonicity at p = 32
+        let mut lastf = 0.0;
+        for f in [1200, 1600, 2000, 2300] {
+            node.set_freq_all(f).unwrap();
+            let w = pp.base_watts(&node);
+            assert!(w > lastf);
+            lastf = w;
+        }
+        // utilization lowers power when cores idle
+        node.set_freq_all(2300).unwrap();
+        let busy = pp.base_watts(&node);
+        for c in 0..32 {
+            node.set_util(c, 0.0);
+        }
+        assert!(pp.base_watts(&node) < busy);
+    }
+
+    #[test]
+    fn full_load_in_paper_ballpark() {
+        // Paper Fig. 1: ~350 W at 32 cores / 2.2 GHz on their node.
+        let (mut node, pp) = setup();
+        node.set_online_cores(32).unwrap();
+        node.set_freq_all(2200).unwrap();
+        for c in 0..32 {
+            node.set_util(c, 1.0);
+        }
+        let w = pp.base_watts(&node);
+        assert!(w > 300.0 && w < 420.0, "full load {w}");
+    }
+
+    #[test]
+    fn noise_is_zero_mean_and_bounded() {
+        let (mut node, pp) = setup();
+        node.set_online_cores(32).unwrap();
+        for c in 0..32 {
+            node.set_util(c, 1.0);
+        }
+        let base = pp.base_watts(&node);
+        let mut rng = Rng::seed_from_u64(7);
+        let n = 5000;
+        let mut sum = 0.0;
+        for i in 0..n {
+            sum += pp.instantaneous_watts(&node, i as f64, &mut rng);
+        }
+        let mean = sum / n as f64;
+        assert!(
+            (mean - base).abs() < 0.5,
+            "mean {mean} deviates from base {base}"
+        );
+    }
+
+    #[test]
+    fn instantaneous_never_negative() {
+        let spec = PowerProcessSpec {
+            gt_static: 0.1,
+            gt_socket: 0.0,
+            noise_w: 50.0,
+            ..Default::default()
+        };
+        let node = Node::new(NodeSpec::default()).unwrap();
+        let pp = PowerProcess::new(spec);
+        let mut rng = Rng::seed_from_u64(1);
+        for i in 0..2000 {
+            assert!(pp.instantaneous_watts(&node, i as f64, &mut rng) >= 0.0);
+        }
+    }
+}

@@ -1,0 +1,444 @@
+//! Hand-written JSON (de)serialization for every persisted type.
+//!
+//! The offline image has no serde/serde_json; `util::json` provides the
+//! value type and parser, and this module implements [`ToJson`] /
+//! [`FromJson`] for the result bundles that examples, benches and the CLI
+//! cache to disk (`ExperimentResults` and everything it contains).
+
+use crate::characterize::{CharSample, Characterization};
+use crate::compare::{ComparisonRow, GovernorRun, SavingsSummary};
+use crate::coordinator::{AppResults, ExperimentResults};
+use crate::powermodel::{FitReport, PowerModel, PowerObs};
+use crate::svr::{CvReport, Standardizer, SvrModel};
+use crate::util::json::{FromJson, Json, ToJson};
+use crate::Result;
+
+// ---------------------------------------------------------------------------
+// powermodel
+// ---------------------------------------------------------------------------
+
+impl ToJson for PowerObs {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("f_mhz", Json::Num(self.f_mhz as f64)),
+            ("cores", Json::Num(self.cores as f64)),
+            ("sockets", Json::Num(self.sockets as f64)),
+            ("watts", Json::Num(self.watts)),
+        ])
+    }
+}
+
+impl FromJson for PowerObs {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(PowerObs {
+            f_mhz: j.get("f_mhz")?.as_u32()?,
+            cores: j.get("cores")?.as_usize()?,
+            sockets: j.get("sockets")?.as_usize()?,
+            watts: j.get("watts")?.as_f64()?,
+        })
+    }
+}
+
+impl ToJson for PowerModel {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("c1", Json::Num(self.c1)),
+            ("c2", Json::Num(self.c2)),
+            ("c3", Json::Num(self.c3)),
+            ("c4", Json::Num(self.c4)),
+        ])
+    }
+}
+
+impl FromJson for PowerModel {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(PowerModel {
+            c1: j.get("c1")?.as_f64()?,
+            c2: j.get("c2")?.as_f64()?,
+            c3: j.get("c3")?.as_f64()?,
+            c4: j.get("c4")?.as_f64()?,
+        })
+    }
+}
+
+impl ToJson for FitReport {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ape_pct", Json::Num(self.ape_pct)),
+            ("rmse_w", Json::Num(self.rmse_w)),
+            ("n_samples", Json::Num(self.n_samples as f64)),
+        ])
+    }
+}
+
+impl FromJson for FitReport {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(FitReport {
+            ape_pct: j.get("ape_pct")?.as_f64()?,
+            rmse_w: j.get("rmse_w")?.as_f64()?,
+            n_samples: j.get("n_samples")?.as_usize()?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// characterize
+// ---------------------------------------------------------------------------
+
+impl ToJson for CharSample {
+    fn to_json(&self) -> Json {
+        // Compact row form: the full campaign has 1760 samples per app.
+        Json::Arr(vec![
+            Json::Num(self.f_mhz as f64),
+            Json::Num(self.cores as f64),
+            Json::Num(self.input as f64),
+            Json::Num(self.time_s),
+            Json::Num(self.energy_j),
+            Json::Num(self.mean_power_w),
+        ])
+    }
+}
+
+impl FromJson for CharSample {
+    fn from_json(j: &Json) -> Result<Self> {
+        let a = j.as_arr()?;
+        if a.len() != 6 {
+            return Err(crate::Error::Json(format!(
+                "CharSample row needs 6 fields, got {}",
+                a.len()
+            )));
+        }
+        Ok(CharSample {
+            f_mhz: a[0].as_u32()?,
+            cores: a[1].as_usize()?,
+            input: a[2].as_u32()?,
+            time_s: a[3].as_f64()?,
+            energy_j: a[4].as_f64()?,
+            mean_power_w: a[5].as_f64()?,
+        })
+    }
+}
+
+impl ToJson for Characterization {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("app", Json::Str(self.app.clone())),
+            ("samples", Json::arr(&self.samples)),
+        ])
+    }
+}
+
+impl FromJson for Characterization {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Characterization {
+            app: j.get("app")?.as_str()?.to_string(),
+            samples: Vec::<CharSample>::from_json(j.get("samples")?)?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// svr
+// ---------------------------------------------------------------------------
+
+impl ToJson for Standardizer {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("means", Json::f64s(&self.means)),
+            ("stds", Json::f64s(&self.stds)),
+        ])
+    }
+}
+
+impl FromJson for Standardizer {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Standardizer {
+            means: j.get("means")?.to_f64_vec()?,
+            stds: j.get("stds")?.to_f64_vec()?,
+        })
+    }
+}
+
+impl ToJson for SvrModel {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("train_x", Json::f64s(&self.train_x)),
+            ("beta", Json::f64s(&self.beta)),
+            ("b", Json::Num(self.b)),
+            ("gamma", Json::Num(self.gamma)),
+            ("scaler", self.scaler.to_json()),
+            ("iterations", Json::Num(self.iterations as f64)),
+            ("n_support", Json::Num(self.n_support as f64)),
+        ])
+    }
+}
+
+impl FromJson for SvrModel {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(SvrModel {
+            train_x: j.get("train_x")?.to_f64_vec()?,
+            beta: j.get("beta")?.to_f64_vec()?,
+            b: j.get("b")?.as_f64()?,
+            gamma: j.get("gamma")?.as_f64()?,
+            scaler: Standardizer::from_json(j.get("scaler")?)?,
+            iterations: j.get("iterations")?.as_usize()?,
+            n_support: j.get("n_support")?.as_usize()?,
+        })
+    }
+}
+
+impl ToJson for CvReport {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("folds", Json::Num(self.folds as f64)),
+            ("mae", Json::Num(self.mae)),
+            ("pae_pct", Json::Num(self.pae_pct)),
+            (
+                "per_fold",
+                Json::Arr(
+                    self.per_fold
+                        .iter()
+                        .map(|(m, p)| Json::Arr(vec![Json::Num(*m), Json::Num(*p)]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+impl FromJson for CvReport {
+    fn from_json(j: &Json) -> Result<Self> {
+        let mut per_fold = Vec::new();
+        for pair in j.get("per_fold")?.as_arr()? {
+            let a = pair.as_arr()?;
+            per_fold.push((a[0].as_f64()?, a[1].as_f64()?));
+        }
+        Ok(CvReport {
+            folds: j.get("folds")?.as_usize()?,
+            mae: j.get("mae")?.as_f64()?,
+            pae_pct: j.get("pae_pct")?.as_f64()?,
+            per_fold,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// compare
+// ---------------------------------------------------------------------------
+
+impl ToJson for GovernorRun {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cores", Json::Num(self.cores as f64)),
+            ("mean_freq_ghz", Json::Num(self.mean_freq_ghz)),
+            ("energy_j", Json::Num(self.energy_j)),
+            ("time_s", Json::Num(self.time_s)),
+        ])
+    }
+}
+
+impl FromJson for GovernorRun {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(GovernorRun {
+            cores: j.get("cores")?.as_usize()?,
+            mean_freq_ghz: j.get("mean_freq_ghz")?.as_f64()?,
+            energy_j: j.get("energy_j")?.as_f64()?,
+            time_s: j.get("time_s")?.as_f64()?,
+        })
+    }
+}
+
+impl ToJson for ComparisonRow {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("app", Json::Str(self.app.clone())),
+            ("input", Json::Num(self.input as f64)),
+            ("ondemand_min", self.ondemand_min.to_json()),
+            ("ondemand_max", self.ondemand_max.to_json()),
+            ("proposed_f_mhz", Json::Num(self.proposed_f_mhz as f64)),
+            ("proposed_cores", Json::Num(self.proposed_cores as f64)),
+            ("proposed", self.proposed.to_json()),
+            ("ondemand_all", Json::arr(&self.ondemand_all)),
+        ])
+    }
+}
+
+impl FromJson for ComparisonRow {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(ComparisonRow {
+            app: j.get("app")?.as_str()?.to_string(),
+            input: j.get("input")?.as_u32()?,
+            ondemand_min: GovernorRun::from_json(j.get("ondemand_min")?)?,
+            ondemand_max: GovernorRun::from_json(j.get("ondemand_max")?)?,
+            proposed_f_mhz: j.get("proposed_f_mhz")?.as_u32()?,
+            proposed_cores: j.get("proposed_cores")?.as_usize()?,
+            proposed: GovernorRun::from_json(j.get("proposed")?)?,
+            ondemand_all: Vec::<GovernorRun>::from_json(j.get("ondemand_all")?)?,
+        })
+    }
+}
+
+impl ToJson for SavingsSummary {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("avg_save_min_pct", Json::Num(self.avg_save_min_pct)),
+            ("avg_save_max_pct", Json::Num(self.avg_save_max_pct)),
+            ("best_save_max_pct", Json::Num(self.best_save_max_pct)),
+            ("worst_save_max_pct", Json::Num(self.worst_save_max_pct)),
+            ("best_save_min_pct", Json::Num(self.best_save_min_pct)),
+            ("rows", Json::Num(self.rows as f64)),
+        ])
+    }
+}
+
+impl FromJson for SavingsSummary {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(SavingsSummary {
+            avg_save_min_pct: j.get("avg_save_min_pct")?.as_f64()?,
+            avg_save_max_pct: j.get("avg_save_max_pct")?.as_f64()?,
+            best_save_max_pct: j.get("best_save_max_pct")?.as_f64()?,
+            worst_save_max_pct: j.get("worst_save_max_pct")?.as_f64()?,
+            best_save_min_pct: j.get("best_save_min_pct")?.as_f64()?,
+            rows: j.get("rows")?.as_usize()?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// coordinator
+// ---------------------------------------------------------------------------
+
+impl ToJson for AppResults {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("app", Json::Str(self.app.clone())),
+            ("characterization", self.characterization.to_json()),
+            ("svr", self.svr.to_json()),
+            ("cv", self.cv.to_json()),
+            ("test_mae", Json::Num(self.test_mae)),
+            ("test_pae_pct", Json::Num(self.test_pae_pct)),
+            ("comparisons", Json::arr(&self.comparisons)),
+        ])
+    }
+}
+
+impl FromJson for AppResults {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(AppResults {
+            app: j.get("app")?.as_str()?.to_string(),
+            characterization: Characterization::from_json(j.get("characterization")?)?,
+            svr: SvrModel::from_json(j.get("svr")?)?,
+            cv: CvReport::from_json(j.get("cv")?)?,
+            test_mae: j.get("test_mae")?.as_f64()?,
+            test_pae_pct: j.get("test_pae_pct")?.as_f64()?,
+            comparisons: Vec::<ComparisonRow>::from_json(j.get("comparisons")?)?,
+        })
+    }
+}
+
+impl ToJson for ExperimentResults {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("power_obs", Json::arr(&self.power_obs)),
+            ("power_model", self.power_model.to_json()),
+            ("power_fit", self.power_fit.to_json()),
+            ("apps", Json::arr(&self.apps)),
+            ("summary", self.summary.to_json()),
+        ])
+    }
+}
+
+impl FromJson for ExperimentResults {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(ExperimentResults {
+            power_obs: Vec::<PowerObs>::from_json(j.get("power_obs")?)?,
+            power_model: PowerModel::from_json(j.get("power_model")?)?,
+            power_fit: FitReport::from_json(j.get("power_fit")?)?,
+            apps: Vec::<AppResults>::from_json(j.get("apps")?)?,
+            summary: SavingsSummary::from_json(j.get("summary")?)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_obs_roundtrip() {
+        let o = PowerObs {
+            f_mhz: 1800,
+            cores: 16,
+            sockets: 1,
+            watts: 260.5,
+        };
+        let back = PowerObs::from_json(&Json::parse(&o.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back.f_mhz, 1800);
+        assert_eq!(back.watts, 260.5);
+    }
+
+    #[test]
+    fn char_sample_compact_roundtrip() {
+        let s = CharSample {
+            f_mhz: 2200,
+            cores: 32,
+            input: 3,
+            time_s: 48.25,
+            energy_j: 16980.0,
+            mean_power_w: 351.9,
+        };
+        let back = CharSample::from_json(&Json::parse(&s.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back.cores, 32);
+        assert_eq!(back.time_s, 48.25);
+        assert_eq!(back.energy_j, 16980.0);
+    }
+
+    #[test]
+    fn svr_model_roundtrip() {
+        let m = SvrModel {
+            train_x: vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6],
+            beta: vec![1.5, -1.5],
+            b: 0.25,
+            gamma: 0.5,
+            scaler: Standardizer {
+                means: vec![1.0, 2.0, 3.0],
+                stds: vec![0.5, 1.0, 2.0],
+            },
+            iterations: 128,
+            n_support: 2,
+        };
+        let back = SvrModel::from_json(&Json::parse(&m.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back.beta, m.beta);
+        assert_eq!(back.scaler.means, m.scaler.means);
+        assert_eq!(back.iterations, 128);
+    }
+
+    #[test]
+    fn comparison_row_roundtrip() {
+        let run = GovernorRun {
+            cores: 8,
+            mean_freq_ghz: 2.1,
+            energy_j: 5000.0,
+            time_s: 20.0,
+        };
+        let row = ComparisonRow {
+            app: "swaptions".into(),
+            input: 2,
+            ondemand_min: run.clone(),
+            ondemand_max: run.clone(),
+            proposed_f_mhz: 2200,
+            proposed_cores: 32,
+            proposed: run.clone(),
+            ondemand_all: vec![run],
+        };
+        let back = ComparisonRow::from_json(&Json::parse(&row.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back.app, "swaptions");
+        assert_eq!(back.ondemand_all.len(), 1);
+        assert_eq!(back.proposed_cores, 32);
+    }
+
+    #[test]
+    fn missing_field_is_an_error() {
+        assert!(PowerModel::from_json(&Json::parse(r#"{"c1": 1}"#).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,233 @@
+//! Application-agnostic power model (paper §2.1 + §3.3, system S7).
+//!
+//! `P(f, p, s) = p*(c1 f^3 + c2 f) + c3 + c4 s`  (Eq. 7)
+//!
+//! The coefficients are found by multi-linear regression over stress-test
+//! measurements: the node is pinned to every (frequency, core-count)
+//! combination at 100 % load, IPMI samples power at 1 Hz, and the mean of
+//! each test becomes one observation (§3.3). Validation reports the
+//! paper's metrics: absolute percentage error (Eq. 10) and RMSE.
+
+use crate::config::{mhz_to_ghz, Mhz, NodeSpec};
+use crate::node::power::PowerProcess;
+use crate::node::Node;
+use crate::sensors::IpmiMeter;
+use crate::util::{lstsq, mape, rmse};
+use crate::{Error, Result};
+
+/// One stress-test observation.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerObs {
+    pub f_mhz: Mhz,
+    pub cores: usize,
+    pub sockets: usize,
+    pub watts: f64,
+}
+
+/// Fitted Eq. 7 coefficients.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerModel {
+    pub c1: f64,
+    pub c2: f64,
+    pub c3: f64,
+    pub c4: f64,
+}
+
+/// Fit-quality report (paper §3.3: APE 0.75 %, RMSE 2.38 W).
+#[derive(Debug, Clone)]
+pub struct FitReport {
+    /// Mean absolute percentage error, % (Eq. 10).
+    pub ape_pct: f64,
+    /// Root mean squared error, watts.
+    pub rmse_w: f64,
+    pub n_samples: usize,
+}
+
+impl PowerModel {
+    /// Evaluate Eq. 7 in watts. `f_ghz` in GHz.
+    pub fn predict(&self, f_ghz: f64, cores: usize, sockets: usize) -> f64 {
+        cores as f64 * (self.c1 * f_ghz.powi(3) + self.c2 * f_ghz)
+            + self.c3
+            + self.c4 * sockets as f64
+    }
+
+    /// Multi-linear regression over observations (design matrix columns:
+    /// `[p f^3, p f, 1, s]`).
+    pub fn fit(obs: &[PowerObs]) -> Result<(PowerModel, FitReport)> {
+        if obs.len() < 8 {
+            return Err(Error::Data(format!(
+                "power fit needs more observations, got {}",
+                obs.len()
+            )));
+        }
+        let mut x = Vec::with_capacity(obs.len() * 4);
+        let mut y = Vec::with_capacity(obs.len());
+        for o in obs {
+            if !o.watts.is_finite() {
+                return Err(Error::Data("non-finite power observation".into()));
+            }
+            let f = mhz_to_ghz(o.f_mhz);
+            let p = o.cores as f64;
+            x.extend_from_slice(&[p * f * f * f, p * f, 1.0, o.sockets as f64]);
+            y.push(o.watts);
+        }
+        let beta = lstsq(&x, &y, 4)?;
+        let model = PowerModel {
+            c1: beta[0],
+            c2: beta[1],
+            c3: beta[2],
+            c4: beta[3],
+        };
+        let yhat: Vec<f64> = obs
+            .iter()
+            .map(|o| model.predict(mhz_to_ghz(o.f_mhz), o.cores, o.sockets))
+            .collect();
+        let report = FitReport {
+            ape_pct: mape(&y, &yhat),
+            rmse_w: rmse(&y, &yhat),
+            n_samples: obs.len(),
+        };
+        Ok((model, report))
+    }
+
+    /// Coefficients as `[c1, c2, c3, c4]` (the AOT artifact's `powc` input).
+    pub fn coeffs(&self) -> [f64; 4] {
+        [self.c1, self.c2, self.c3, self.c4]
+    }
+
+    /// The paper's fitted model (Eq. 9) — handy as a baseline in tests and
+    /// benches.
+    pub fn paper_eq9() -> PowerModel {
+        PowerModel {
+            c1: 0.29,
+            c2: 0.97,
+            c3: 198.59,
+            c4: 9.18,
+        }
+    }
+}
+
+/// Stress-campaign configuration.
+#[derive(Debug, Clone)]
+pub struct StressConfig {
+    /// Seconds of 1 Hz sampling per (f, p) point (paper stresses each
+    /// point long enough for a stable mean).
+    pub dwell_s: f64,
+    /// Lowest/highest stressed frequency (paper: 1.2–2.2 GHz).
+    pub freq_min_mhz: Mhz,
+    pub freq_max_mhz: Mhz,
+    pub freq_step_mhz: Mhz,
+    pub seed: u64,
+}
+
+impl Default for StressConfig {
+    fn default() -> Self {
+        StressConfig {
+            dwell_s: 30.0,
+            freq_min_mhz: 1200,
+            freq_max_mhz: 2200,
+            freq_step_mhz: 100,
+            seed: 0xF17,
+        }
+    }
+}
+
+/// Run the §3.3 stress campaign on a simulated node: pin every (f, p)
+/// combination at full utilization, record the mean IPMI power.
+pub fn stress_campaign(spec: &NodeSpec, cfg: &StressConfig) -> Result<Vec<PowerObs>> {
+    let mut node = Node::new(spec.clone())?;
+    let power = PowerProcess::new(spec.power.clone());
+    let mut obs = Vec::new();
+    let mut f = cfg.freq_min_mhz;
+    let mut test_idx = 0u64;
+    while f <= cfg.freq_max_mhz {
+        for p in 1..=spec.total_cores() {
+            node.set_online_cores(p)?;
+            node.set_freq_all(f)?;
+            for c in 0..p {
+                node.set_util(c, 1.0);
+            }
+            // Fresh meter per test = the paper's cool-down between tests
+            // (no cross-test thermal state in the simulated process).
+            let mut meter = IpmiMeter::new(cfg.seed.wrapping_add(test_idx));
+            meter.advance(&node, &power, 0.0, cfg.dwell_s);
+            obs.push(PowerObs {
+                f_mhz: f,
+                cores: p,
+                sockets: node.active_sockets(),
+                watts: meter.mean_watts(),
+            });
+            test_idx += 1;
+        }
+        f += cfg.freq_step_mhz;
+    }
+    Ok(obs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn campaign() -> Vec<PowerObs> {
+        stress_campaign(&NodeSpec::default(), &StressConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn campaign_covers_full_grid() {
+        let obs = campaign();
+        assert_eq!(obs.len(), 11 * 32);
+        assert!(obs.iter().any(|o| o.f_mhz == 1200 && o.cores == 1));
+        assert!(obs.iter().any(|o| o.f_mhz == 2200 && o.cores == 32));
+    }
+
+    #[test]
+    fn fit_recovers_ground_truth_shape() {
+        let spec = NodeSpec::default();
+        let obs = campaign();
+        let (m, rep) = PowerModel::fit(&obs).unwrap();
+        // The ground truth (with util=1) is exactly Eq. 7-shaped, so the
+        // fit must recover the generator's coefficients closely.
+        assert!((m.c1 - spec.power.gt_c1).abs() < 0.05, "c1 {}", m.c1);
+        assert!((m.c2 - spec.power.gt_c2).abs() < 0.3, "c2 {}", m.c2);
+        assert!((m.c3 - spec.power.gt_static).abs() < 5.0, "c3 {}", m.c3);
+        assert!((m.c4 - spec.power.gt_socket).abs() < 5.0, "c4 {}", m.c4);
+        // Paper §3.3: APE 0.75 %, RMSE 2.38 W. Ours should land nearby.
+        assert!(rep.ape_pct < 2.0, "APE {}", rep.ape_pct);
+        assert!(rep.rmse_w < 6.0, "RMSE {}", rep.rmse_w);
+    }
+
+    #[test]
+    fn predictions_monotone() {
+        let (m, _) = PowerModel::fit(&campaign()).unwrap();
+        let mut last = 0.0;
+        for p in 1..=32 {
+            let w = m.predict(2.0, p, 2);
+            assert!(w > last);
+            last = w;
+        }
+        assert!(m.predict(2.2, 16, 2) > m.predict(1.2, 16, 2));
+    }
+
+    #[test]
+    fn paper_eq9_values() {
+        let m = PowerModel::paper_eq9();
+        // Paper's inequality: even at max config, dynamic+socket < static.
+        let dynamic = 32.0 * (m.c1 * 2.2f64.powi(3) + m.c2 * 2.2) + m.c4 * 2.0;
+        assert!(dynamic < m.c3);
+    }
+
+    #[test]
+    fn fit_rejects_degenerate_inputs() {
+        assert!(PowerModel::fit(&[]).is_err());
+        let one = vec![
+            PowerObs {
+                f_mhz: 2000,
+                cores: 4,
+                sockets: 1,
+                watts: f64::NAN,
+            };
+            10
+        ];
+        assert!(PowerModel::fit(&one).is_err());
+    }
+}

@@ -1,0 +1,371 @@
+//! Report generator (system S12): renders every table and figure of the
+//! paper's evaluation from an [`ExperimentResults`] bundle.
+//!
+//! * Fig. 1 — power-model fit: measured vs modeled power per (f, p);
+//! * Table 1 — SVR cross-validation MAE/PAE per application;
+//! * Figs. 2–5 — performance model vs measurements (input 3);
+//! * Figs. 6–9 — measured vs modeled energy (input 3);
+//! * Tables 2–5 — ondemand min/max vs proposed, with savings;
+//! * Fig. 10 — energy normalized to the proposed approach.
+//!
+//! Tables render as markdown; figures render as TSV series (x, series...,
+//! one row per x) — plot-ready without a plotting dependency.
+
+use std::fmt::Write as _;
+
+use crate::config::{mhz_to_ghz, CampaignSpec};
+use crate::coordinator::{AppResults, ExperimentResults};
+use crate::compare::pow2_core_counts;
+use crate::energy::EnergyModel;
+use crate::{Error, Result};
+
+/// Paper table order: Table 2..5 = these apps in this order.
+pub const TABLE_APPS: [&str; 4] = ["fluidanimate", "raytrace", "swaptions", "blackscholes"];
+
+/// Fig 2..5 / 6..9 order follows the paper's figure captions.
+pub const FIG_PERF_APPS: [&str; 4] = ["fluidanimate", "raytrace", "swaptions", "blackscholes"];
+
+/// Fig. 1 — TSV: cores, then one measured+modeled column pair per freq.
+pub fn fig1_power_fit(res: &ExperimentResults, campaign: &CampaignSpec) -> String {
+    let freqs = campaign.frequencies();
+    let mut out = String::from("# Fig 1: power model fitting (watts)\ncores");
+    for f in &freqs {
+        let g = mhz_to_ghz(*f);
+        let _ = write!(out, "\tmeasured@{g:.1}GHz\tmodeled@{g:.1}GHz");
+    }
+    out.push('\n');
+    let max_cores = res.power_obs.iter().map(|o| o.cores).max().unwrap_or(0);
+    for p in 1..=max_cores {
+        let _ = write!(out, "{p}");
+        for f in &freqs {
+            let meas = res
+                .power_obs
+                .iter()
+                .find(|o| o.f_mhz == *f && o.cores == p)
+                .map(|o| o.watts)
+                .unwrap_or(f64::NAN);
+            let sockets = res
+                .power_obs
+                .iter()
+                .find(|o| o.f_mhz == *f && o.cores == p)
+                .map(|o| o.sockets)
+                .unwrap_or(1);
+            let model = res.power_model.predict(mhz_to_ghz(*f), p, sockets);
+            let _ = write!(out, "\t{meas:.2}\t{model:.2}");
+        }
+        out.push('\n');
+    }
+    let _ = write!(
+        out,
+        "# fit: P = p({:.3} f^3 + {:.3} f) + {:.2} + {:.2} s | APE {:.2}% RMSE {:.2} W (paper: 0.75%, 2.38 W)\n",
+        res.power_model.c1,
+        res.power_model.c2,
+        res.power_model.c3,
+        res.power_model.c4,
+        res.power_fit.ape_pct,
+        res.power_fit.rmse_w
+    );
+    out
+}
+
+/// Table 1 — markdown: per-app cross-validation errors.
+pub fn table1_cv(res: &ExperimentResults) -> String {
+    let mut out = String::from(
+        "# Table 1: Performance-Model's Cross validation Errors\n\
+         | Application | MAE | PAE | (paper MAE) | (paper PAE) |\n\
+         |---|---|---|---|---|\n",
+    );
+    let paper: [(&str, f64, f64); 4] = [
+        ("blackscholes", 2.01, 4.6),
+        ("fluidanimate", 6.65, 1.89),
+        ("raytrace", 3.77, 0.87),
+        ("swaptions", 2.29, 2.56),
+    ];
+    for (name, pm, pp) in paper {
+        if let Ok(a) = res.app(name) {
+            let _ = writeln!(
+                out,
+                "| {name} | {:.2} | {:.2}% | {pm} | {pp}% |",
+                a.cv.mae, a.cv.pae_pct
+            );
+        }
+    }
+    out
+}
+
+/// Figs. 2–5 — TSV per app: execution time vs cores, measured + modeled,
+/// one series per frequency, at the given input (paper uses input 3).
+pub fn fig_perf_model(app: &AppResults, campaign: &CampaignSpec, input: u32) -> String {
+    let freqs = campaign.frequencies();
+    let mut out = format!(
+        "# Fig: {} performance model, input {} (seconds)\ncores",
+        app.app, input
+    );
+    for f in &freqs {
+        let g = mhz_to_ghz(*f);
+        let _ = write!(out, "\tmeasured@{g:.1}GHz\tmodeled@{g:.1}GHz");
+    }
+    out.push('\n');
+    let cores: Vec<usize> = campaign.cores();
+    for p in cores {
+        let _ = write!(out, "{p}");
+        for f in &freqs {
+            let meas = app
+                .characterization
+                .at(*f, p, input)
+                .map(|s| s.time_s)
+                .unwrap_or(f64::NAN);
+            let model = app.svr.predict_one(*f, p, input);
+            let _ = write!(out, "\t{meas:.2}\t{model:.2}");
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Figs. 6–9 — TSV per app: measured vs modeled ENERGY at the given input.
+pub fn fig_energy_model(
+    res: &ExperimentResults,
+    app: &AppResults,
+    campaign: &CampaignSpec,
+    input: u32,
+) -> String {
+    let freqs = campaign.frequencies();
+    let node = crate::config::NodeSpec::default();
+    let em = EnergyModel::new(res.power_model, app.svr.clone(), node);
+    let mut out = format!(
+        "# Fig: {} energy measured vs modeled, input {} (joules)\ncores",
+        app.app, input
+    );
+    for f in &freqs {
+        let g = mhz_to_ghz(*f);
+        let _ = write!(out, "\tmeasured@{g:.1}GHz\tmodeled@{g:.1}GHz");
+    }
+    out.push('\n');
+    for p in campaign.cores() {
+        let _ = write!(out, "{p}");
+        for f in &freqs {
+            let meas = app
+                .characterization
+                .at(*f, p, input)
+                .map(|s| s.energy_j)
+                .unwrap_or(f64::NAN);
+            let t = app.svr.predict_one(*f, p, input).max(1e-3);
+            let w = res
+                .power_model
+                .predict(mhz_to_ghz(*f), p, em.sockets_for(p));
+            let _ = write!(out, "\t{meas:.1}\t{:.1}", w * t);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Tables 2–5 — markdown, one per app, matching the paper's columns.
+pub fn table_comparison(app: &AppResults) -> String {
+    let mut out = format!(
+        "# Table: {} minimal energy\n\
+         | Input | Ondemand-Min Freq (cores) | E (kJ) | Ondemand-Max Freq (cores) | E (kJ) | Proposed Freq (cores) | E (kJ) | Min Save (%) | Max Save (%) |\n\
+         |---|---|---|---|---|---|---|---|---|\n",
+        app.app
+    );
+    for row in &app.comparisons {
+        let _ = writeln!(
+            out,
+            "| {} | {:.2} ({}) | {:.2} | {:.2} ({}) | {:.2} | {:.1} ({}) | {:.2} | {:.2} | {:.2} |",
+            row.input,
+            row.ondemand_min.mean_freq_ghz,
+            row.ondemand_min.cores,
+            row.ondemand_min.energy_j / 1000.0,
+            row.ondemand_max.mean_freq_ghz,
+            row.ondemand_max.cores,
+            row.ondemand_max.energy_j / 1000.0,
+            mhz_to_ghz(row.proposed_f_mhz),
+            row.proposed_cores,
+            row.proposed.energy_j / 1000.0,
+            row.save_min_pct(),
+            row.save_max_pct(),
+        );
+    }
+    out
+}
+
+/// Fig. 10 — TSV: per (app, input), ondemand energy at power-of-2 core
+/// counts normalized to the proposed approach's energy (=1.0).
+pub fn fig10_normalized(res: &ExperimentResults) -> String {
+    let mut out = String::from(
+        "# Fig 10: ondemand energy relative to proposed (proposed = 1.0)\napp\tinput",
+    );
+    for p in pow2_core_counts(32) {
+        let _ = write!(out, "\tondemand@{p}c");
+    }
+    out.push_str("\tproposed\n");
+    for app in &res.apps {
+        for row in &app.comparisons {
+            let _ = write!(out, "{}\t{}", app.app, row.input);
+            for p in pow2_core_counts(32) {
+                let e = row
+                    .ondemand_all
+                    .iter()
+                    .find(|r| r.cores == p)
+                    .map(|r| r.energy_j / row.proposed.energy_j)
+                    .unwrap_or(f64::NAN);
+                let _ = write!(out, "\t{e:.2}");
+            }
+            out.push_str("\t1.00\n");
+        }
+    }
+    out
+}
+
+/// Headline summary (abstract numbers: ~14x worst case, 23 % best case,
+/// 6 % average vs best, ~790 % average vs worst).
+pub fn headline(res: &ExperimentResults) -> String {
+    let s = &res.summary;
+    format!(
+        "# Headline (paper: avg 6% vs ondemand-best, avg ~790% vs ondemand-worst, max 1298%, min 59%)\n\
+         rows compared:          {}\n\
+         avg save vs od-best:    {:.1}%\n\
+         avg save vs od-worst:   {:.1}%\n\
+         best save vs od-best:   {:.1}%\n\
+         best save vs od-worst:  {:.1}%  ({:.1}x)\n\
+         min  save vs od-worst:  {:.1}%\n",
+        s.rows,
+        s.avg_save_min_pct,
+        s.avg_save_max_pct,
+        s.best_save_min_pct,
+        s.best_save_max_pct,
+        s.best_save_max_pct / 100.0 + 1.0,
+        s.worst_save_max_pct,
+    )
+}
+
+/// Render everything (the `ecopt report --all` output).
+pub fn full_report(res: &ExperimentResults, campaign: &CampaignSpec) -> String {
+    let mut out = String::new();
+    out.push_str(&fig1_power_fit(res, campaign));
+    out.push('\n');
+    out.push_str(&table1_cv(res));
+    out.push('\n');
+    for name in FIG_PERF_APPS {
+        if let Ok(a) = res.app(name) {
+            out.push_str(&fig_perf_model(a, campaign, 3));
+            out.push('\n');
+            out.push_str(&fig_energy_model(res, a, campaign, 3));
+            out.push('\n');
+        }
+    }
+    for name in TABLE_APPS {
+        if let Ok(a) = res.app(name) {
+            out.push_str(&table_comparison(a));
+            out.push('\n');
+        }
+    }
+    out.push_str(&fig10_normalized(res));
+    out.push('\n');
+    out.push_str(&headline(res));
+    out
+}
+
+/// Render one numbered artifact ("1".."5" tables, "f1".."f10" figures).
+pub fn render(res: &ExperimentResults, campaign: &CampaignSpec, what: &str) -> Result<String> {
+    match what {
+        "f1" => Ok(fig1_power_fit(res, campaign)),
+        "1" => Ok(table1_cv(res)),
+        "f2" | "f3" | "f4" | "f5" => {
+            let idx = what[1..].parse::<usize>().unwrap() - 2;
+            let app = res.app(FIG_PERF_APPS[idx])?;
+            Ok(fig_perf_model(app, campaign, 3))
+        }
+        "f6" | "f7" | "f8" | "f9" => {
+            let idx = what[1..].parse::<usize>().unwrap() - 6;
+            let app = res.app(FIG_PERF_APPS[idx])?;
+            Ok(fig_energy_model(res, app, campaign, 3))
+        }
+        "2" | "3" | "4" | "5" => {
+            let idx = what.parse::<usize>().unwrap() - 2;
+            let app = res.app(TABLE_APPS[idx])?;
+            Ok(table_comparison(app))
+        }
+        "f10" => Ok(fig10_normalized(res)),
+        "headline" => Ok(headline(res)),
+        other => Err(Error::Config(format!(
+            "unknown report artifact '{other}' (use 1-5, f1-f10, headline)"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CampaignSpec, ExperimentConfig, SvrSpec};
+    use crate::coordinator::Coordinator;
+    use crate::workloads::runner::RunConfig;
+
+    fn tiny_results() -> (ExperimentResults, CampaignSpec) {
+        let campaign = CampaignSpec {
+            freq_step_mhz: 500,
+            core_max: 4,
+            inputs: vec![1, 3],
+            ..Default::default()
+        };
+        let cfg = ExperimentConfig {
+            campaign: campaign.clone(),
+            svr: SvrSpec {
+                folds: 2,
+                c: 500.0,
+                max_iter: 50_000,
+                ..Default::default()
+            },
+            workloads: vec!["swaptions".into()],
+            ..Default::default()
+        };
+        let mut coord = Coordinator::new(cfg).with_run_config(RunConfig {
+            dt: 0.25,
+            work_noise: 0.0,
+            seed: 5,
+            max_sim_s: 1e6,
+        });
+        (coord.run_all().unwrap(), campaign)
+    }
+
+    #[test]
+    fn all_artifacts_render() {
+        let (res, campaign) = tiny_results();
+        for what in ["f1", "1", "4", "f4", "f8", "f10", "headline"] {
+            let s = render(&res, &campaign, what).unwrap();
+            assert!(!s.is_empty(), "{what} rendered empty");
+        }
+        assert!(render(&res, &campaign, "f99").is_err());
+    }
+
+    #[test]
+    fn table_savings_recomputable() {
+        let (res, _) = tiny_results();
+        let app = &res.apps[0];
+        let table = table_comparison(app);
+        // Both savings columns must appear, consistent with the row math.
+        for row in &app.comparisons {
+            let min_pct = format!("{:.2}", row.save_min_pct());
+            assert!(table.contains(&min_pct), "missing {min_pct} in table");
+        }
+    }
+
+    #[test]
+    fn fig10_normalizes_to_one() {
+        let (res, _) = tiny_results();
+        let fig = fig10_normalized(&res);
+        for line in fig.lines().skip(2) {
+            assert!(line.ends_with("1.00"), "bad normalization row: {line}");
+        }
+    }
+
+    #[test]
+    fn full_report_contains_everything() {
+        let (res, campaign) = tiny_results();
+        let r = full_report(&res, &campaign);
+        assert!(r.contains("Fig 1"));
+        assert!(r.contains("Table 1"));
+        assert!(r.contains("Headline"));
+    }
+}

@@ -1,0 +1,240 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. The AOT pipeline writes `manifest.json` next to the HLO
+//! text files; this module parses and validates it so shape mismatches are
+//! caught at load time, not as cryptic PJRT errors mid-run.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{FromJson, Json, ToJson};
+use crate::{Error, Result};
+
+/// Shape + dtype of one tensor in an artifact's signature.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+impl ToJson for TensorSpec {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "shape",
+                Json::Arr(self.shape.iter().map(|d| Json::Num(*d as f64)).collect()),
+            ),
+            ("dtype", Json::Str(self.dtype.clone())),
+        ])
+    }
+}
+
+impl FromJson for TensorSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<Vec<usize>>>()?;
+        Ok(TensorSpec {
+            shape,
+            dtype: j.get("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// HLO text filename, relative to the manifest.
+    pub file: String,
+    /// SHA-256 of the HLO text (build provenance).
+    pub sha256: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ToJson for ArtifactSpec {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("file", Json::Str(self.file.clone())),
+            ("sha256", Json::Str(self.sha256.clone())),
+            ("inputs", Json::arr(&self.inputs)),
+            ("outputs", Json::arr(&self.outputs)),
+        ])
+    }
+}
+
+impl FromJson for ArtifactSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(ArtifactSpec {
+            file: j.get("file")?.as_str()?.to_string(),
+            sha256: j.get("sha256")?.as_str()?.to_string(),
+            inputs: Vec::<TensorSpec>::from_json(j.get("inputs")?)?,
+            outputs: Vec::<TensorSpec>::from_json(j.get("outputs")?)?,
+        })
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format: String,
+    pub artifacts: HashMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load and validate `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let j = Json::parse(&text)?;
+        let mut artifacts = HashMap::new();
+        for (name, spec) in j.get("artifacts")?.as_obj()? {
+            artifacts.insert(name.clone(), ArtifactSpec::from_json(spec)?);
+        }
+        let m = Manifest {
+            format: j.get("format")?.as_str()?.to_string(),
+            artifacts,
+        };
+        m.validate(dir)?;
+        Ok(m)
+    }
+
+    /// Check the manifest's internal consistency and that every referenced
+    /// HLO file exists.
+    pub fn validate(&self, dir: &Path) -> Result<()> {
+        if self.format != "hlo-text" {
+            return Err(Error::Artifact(format!(
+                "unsupported artifact format '{}'",
+                self.format
+            )));
+        }
+        for (name, spec) in &self.artifacts {
+            let p = dir.join(&spec.file);
+            if !p.exists() {
+                return Err(Error::Artifact(format!(
+                    "artifact '{name}' references missing file {}",
+                    p.display()
+                )));
+            }
+            if spec.inputs.is_empty() || spec.outputs.is_empty() {
+                return Err(Error::Artifact(format!(
+                    "artifact '{name}' has empty signature"
+                )));
+            }
+            for t in spec.inputs.iter().chain(&spec.outputs) {
+                if t.dtype != "float32" {
+                    return Err(Error::Artifact(format!(
+                        "artifact '{name}': only float32 supported, got {}",
+                        t.dtype
+                    )));
+                }
+                if t.shape.iter().any(|d| *d == 0) {
+                    return Err(Error::Artifact(format!(
+                        "artifact '{name}': zero-sized dim in {:?}",
+                        t.shape
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Spec for a named artifact.
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("unknown artifact '{name}'")))
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, dir: &Path, name: &str) -> Result<PathBuf> {
+        Ok(dir.join(&self.get(name)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir::TempDir;
+
+    fn sample_manifest(dir: &Path) -> Manifest {
+        std::fs::write(dir.join("foo.hlo.txt"), "HloModule foo").unwrap();
+        let json = r#"{
+            "format": "hlo-text",
+            "artifacts": {
+                "foo": {
+                    "file": "foo.hlo.txt",
+                    "sha256": "00",
+                    "inputs": [{"shape": [2, 3], "dtype": "float32"}],
+                    "outputs": [{"shape": [2], "dtype": "float32"}]
+                }
+            }
+        }"#;
+        std::fs::write(dir.join("manifest.json"), json).unwrap();
+        Manifest::load(dir).unwrap()
+    }
+
+    #[test]
+    fn loads_valid_manifest() {
+        let dir = TempDir::new().unwrap();
+        let m = sample_manifest(dir.path());
+        let spec = m.get("foo").unwrap();
+        assert_eq!(spec.inputs[0].elements(), 6);
+        assert!(m.hlo_path(dir.path(), "foo").unwrap().exists());
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let dir = TempDir::new().unwrap();
+        let m = sample_manifest(dir.path());
+        assert!(m.get("bar").is_err());
+    }
+
+    #[test]
+    fn missing_file_fails_validation() {
+        let dir = TempDir::new().unwrap();
+        let mut m = sample_manifest(dir.path());
+        m.artifacts.get_mut("foo").unwrap().file = "gone.hlo.txt".into();
+        assert!(m.validate(dir.path()).is_err());
+    }
+
+    #[test]
+    fn non_f32_rejected() {
+        let dir = TempDir::new().unwrap();
+        let mut m = sample_manifest(dir.path());
+        m.artifacts.get_mut("foo").unwrap().inputs[0].dtype = "int64".into();
+        assert!(m.validate(dir.path()).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_hint() {
+        let dir = TempDir::new().unwrap();
+        let err = Manifest::load(dir.path()).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn spec_json_roundtrip() {
+        let dir = TempDir::new().unwrap();
+        let m = sample_manifest(dir.path());
+        let spec = m.get("foo").unwrap();
+        let back =
+            ArtifactSpec::from_json(&Json::parse(&spec.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back.inputs, spec.inputs);
+        assert_eq!(back.file, spec.file);
+    }
+}

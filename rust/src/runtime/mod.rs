@@ -1,0 +1,208 @@
+//! PJRT runtime (substrate S6): load AOT artifacts and execute them on the
+//! request path — Python never runs here.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`. All
+//! artifacts are compiled once at startup; execution validates shapes
+//! against the manifest before touching PJRT.
+
+pub mod artifacts;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+pub use artifacts::{ArtifactSpec, Manifest, TensorSpec};
+
+use crate::{Error, Result};
+
+/// A host tensor of f32 values with an explicit shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorF32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorF32 {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Runtime(format!(
+                "tensor shape {:?} wants {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            )));
+        }
+        Ok(TensorF32 { shape, data })
+    }
+
+    /// Zero-filled tensor.
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        TensorF32 {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    /// 1-D tensor from a slice.
+    pub fn vec1(data: &[f32]) -> Self {
+        TensorF32 {
+            shape: vec![data.len()],
+            data: data.to_vec(),
+        }
+    }
+
+    fn matches(&self, spec: &TensorSpec) -> bool {
+        self.shape == spec.shape
+    }
+}
+
+/// One compiled executable plus its manifest signature.
+struct Loaded {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ArtifactSpec,
+}
+
+/// The PJRT CPU runtime holding every compiled artifact.
+pub struct PjrtRuntime {
+    dir: PathBuf,
+    manifest: Manifest,
+    loaded: HashMap<String, Loaded>,
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU runtime over an artifacts directory. Artifacts are
+    /// compiled lazily on first use (see [`PjrtRuntime::execute`]) or
+    /// eagerly via [`PjrtRuntime::load_all`].
+    pub fn cpu(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtRuntime {
+            dir: artifacts_dir.to_path_buf(),
+            manifest,
+            loaded: HashMap::new(),
+            client,
+        })
+    }
+
+    /// The parsed manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one artifact (no-op if already compiled).
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.loaded.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let path = self.manifest.hlo_path(&self.dir, name)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.loaded.insert(name.to_string(), Loaded { exe, spec });
+        Ok(())
+    }
+
+    /// Compile every artifact in the manifest.
+    pub fn load_all(&mut self) -> Result<Vec<String>> {
+        let names: Vec<String> = self.manifest.artifacts.keys().cloned().collect();
+        for n in &names {
+            self.load(n)?;
+        }
+        Ok(names)
+    }
+
+    /// Execute an artifact with shape-checked inputs; returns one host
+    /// tensor per declared output. Compiles on first use.
+    pub fn execute(&mut self, name: &str, inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
+        self.load(name)?;
+        let loaded = self.loaded.get(name).expect("just loaded");
+
+        // Shape validation against the manifest signature.
+        if inputs.len() != loaded.spec.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: expected {} inputs, got {}",
+                loaded.spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&loaded.spec.inputs).enumerate() {
+            if !t.matches(spec) {
+                return Err(Error::Runtime(format!(
+                    "{name}: input {i} shape {:?} != manifest {:?}",
+                    t.shape, spec.shape
+                )));
+            }
+        }
+
+        // Host -> device literals.
+        let mut lits = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            let dims: Vec<i64> = t.shape.iter().map(|d| *d as i64).collect();
+            let lit = xla::Literal::vec1(&t.data);
+            let lit = if t.shape.len() == 1 {
+                lit
+            } else {
+                lit.reshape(&dims)?
+            };
+            lits.push(lit);
+        }
+
+        // Execute; aot.py lowers with return_tuple=True, so the single
+        // result is a tuple of the declared outputs.
+        let result = loaded.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != loaded.spec.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: executable returned {} outputs, manifest says {}",
+                parts.len(),
+                loaded.spec.outputs.len()
+            )));
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.into_iter().zip(&loaded.spec.outputs) {
+            let data = lit.to_vec::<f32>()?;
+            if data.len() != spec.elements() {
+                return Err(Error::Runtime(format!(
+                    "{name}: output has {} elements, manifest says {}",
+                    data.len(),
+                    spec.elements()
+                )));
+            }
+            outs.push(TensorF32 {
+                shape: spec.shape.clone(),
+                data,
+            });
+        }
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_validation() {
+        assert!(TensorF32::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(TensorF32::new(vec![2, 3], vec![0.0; 5]).is_err());
+        let z = TensorF32::zeros(vec![4, 2]);
+        assert_eq!(z.data.len(), 8);
+        let v = TensorF32::vec1(&[1.0, 2.0]);
+        assert_eq!(v.shape, vec![2]);
+    }
+
+    #[test]
+    fn missing_artifacts_dir_is_a_clean_error() {
+        let err = PjrtRuntime::cpu(Path::new("/nonexistent/artifacts"));
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,214 @@
+//! IPMI sensor simulator (substrate S3).
+//!
+//! The paper measures power through IPMI at ~1 sample/second and computes
+//! energy by integrating those samples over the run (§3.3, §4.1). This
+//! module reproduces that measurement channel: a sampler that reads the
+//! node's ground-truth power process on a fixed cadence (with optional
+//! sample dropouts — real BMCs miss beats), quantizes like a BMC ADC, and
+//! an energy meter that trapezoid-integrates the sample stream.
+
+use crate::node::power::PowerProcess;
+use crate::node::Node;
+use crate::util::rng::Rng;
+use crate::util::stats::trapezoid;
+
+/// One timestamped power reading.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerSample {
+    /// Simulated time in seconds since the meter started.
+    pub t_s: f64,
+    /// Measured power in watts (noisy, quantized).
+    pub watts: f64,
+}
+
+/// IPMI-style sampler + energy integrator over simulated time.
+#[derive(Debug)]
+pub struct IpmiMeter {
+    /// Sampling period in seconds (paper: ~1.0).
+    period_s: f64,
+    /// BMC ADC quantization step in watts (0 disables).
+    quantum_w: f64,
+    /// Probability of missing a sample beat (failure injection).
+    dropout: f64,
+    rng: Rng,
+    samples: Vec<PowerSample>,
+    next_sample_t: f64,
+}
+
+impl IpmiMeter {
+    /// Standard 1 Hz meter with 0.1 W quantization and no dropouts.
+    pub fn new(seed: u64) -> Self {
+        Self::with_params(1.0, 0.1, 0.0, seed)
+    }
+
+    pub fn with_params(period_s: f64, quantum_w: f64, dropout: f64, seed: u64) -> Self {
+        assert!(period_s > 0.0, "sampling period must be positive");
+        assert!((0.0..1.0).contains(&dropout), "dropout must be in [0,1)");
+        IpmiMeter {
+            period_s,
+            quantum_w,
+            dropout,
+            rng: Rng::seed_from_u64(seed),
+            samples: Vec::new(),
+            next_sample_t: 0.0,
+        }
+    }
+
+    /// Advance simulated time from `t` by `dt`, sampling the power process
+    /// at every 1 Hz beat that falls inside `(t, t+dt]`.
+    pub fn advance(&mut self, node: &Node, power: &PowerProcess, t: f64, dt: f64) {
+        let end = t + dt;
+        while self.next_sample_t <= end {
+            let ts = self.next_sample_t;
+            self.next_sample_t += self.period_s;
+            if self.dropout > 0.0 && self.rng.f64() < self.dropout {
+                continue; // missed beat
+            }
+            let mut w = power.instantaneous_watts(node, ts, &mut self.rng);
+            if self.quantum_w > 0.0 {
+                w = (w / self.quantum_w).round() * self.quantum_w;
+            }
+            self.samples.push(PowerSample { t_s: ts, watts: w });
+        }
+    }
+
+    /// All samples collected so far.
+    pub fn samples(&self) -> &[PowerSample] {
+        &self.samples
+    }
+
+    /// Trapezoid-integrated energy in joules over the collected samples
+    /// (the paper's §4.1 procedure). Returns 0 for < 2 samples.
+    pub fn energy_joules(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let ts: Vec<f64> = self.samples.iter().map(|s| s.t_s).collect();
+        let ws: Vec<f64> = self.samples.iter().map(|s| s.watts).collect();
+        trapezoid(&ts, &ws)
+    }
+
+    /// Mean measured power in watts (0 if no samples).
+    pub fn mean_watts(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().map(|s| s.watts).sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Drop collected samples and restart the beat clock at `t = 0`.
+    pub fn reset(&mut self) {
+        self.samples.clear();
+        self.next_sample_t = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{NodeSpec, PowerProcessSpec};
+
+    fn quiet_setup() -> (Node, PowerProcess) {
+        // Noise-free process for exact assertions.
+        let mut spec = NodeSpec::default();
+        spec.power = PowerProcessSpec {
+            noise_w: 0.0,
+            drift_w: 0.0,
+            ..spec.power
+        };
+        let pp = PowerProcess::new(spec.power.clone());
+        (Node::new(spec).unwrap(), pp)
+    }
+
+    #[test]
+    fn one_hz_sampling_count() {
+        let (node, pp) = quiet_setup();
+        let mut m = IpmiMeter::new(1);
+        m.advance(&node, &pp, 0.0, 10.0);
+        // beats at t = 0,1,...,10 inclusive
+        assert_eq!(m.samples().len(), 11);
+    }
+
+    #[test]
+    fn sampling_across_many_small_ticks() {
+        let (node, pp) = quiet_setup();
+        let mut a = IpmiMeter::new(1);
+        let mut b = IpmiMeter::new(1);
+        a.advance(&node, &pp, 0.0, 10.0);
+        let mut t = 0.0;
+        while t < 10.0 {
+            b.advance(&node, &pp, t, 0.1);
+            t += 0.1;
+        }
+        assert_eq!(a.samples().len(), b.samples().len());
+    }
+
+    #[test]
+    fn constant_power_energy_exact() {
+        let (mut node, pp) = quiet_setup();
+        node.set_online_cores(32).unwrap();
+        node.set_freq_all(2200).unwrap();
+        for c in 0..32 {
+            node.set_util(c, 1.0);
+        }
+        let w = pp.base_watts(&node);
+        let mut m = IpmiMeter::with_params(1.0, 0.0, 0.0, 2);
+        m.advance(&node, &pp, 0.0, 100.0);
+        let e = m.energy_joules();
+        assert!(
+            (e - w * 100.0).abs() < 1e-6,
+            "energy {e} vs expected {}",
+            w * 100.0
+        );
+    }
+
+    #[test]
+    fn quantization_applied() {
+        let (node, pp) = quiet_setup();
+        let mut m = IpmiMeter::with_params(1.0, 0.5, 0.0, 3);
+        m.advance(&node, &pp, 0.0, 5.0);
+        for s in m.samples() {
+            let q = s.watts / 0.5;
+            assert!((q - q.round()).abs() < 1e-9, "unquantized sample {}", s.watts);
+        }
+    }
+
+    #[test]
+    fn dropouts_thin_the_stream_but_energy_survives() {
+        let (mut node, pp) = quiet_setup();
+        node.set_online_cores(32).unwrap();
+        for c in 0..32 {
+            node.set_util(c, 1.0);
+        }
+        let w = pp.base_watts(&node);
+        let mut m = IpmiMeter::with_params(1.0, 0.0, 0.3, 4);
+        m.advance(&node, &pp, 0.0, 500.0);
+        let n = m.samples().len();
+        assert!(n > 250 && n < 450, "dropout count {n}");
+        // Trapezoid over the surviving samples still integrates constant
+        // power almost exactly (gaps just widen the trapezoids).
+        let dur = m.samples().last().unwrap().t_s - m.samples()[0].t_s;
+        assert!((m.energy_joules() - w * dur).abs() / (w * dur) < 1e-9);
+    }
+
+    #[test]
+    fn reset_restarts_beats() {
+        let (node, pp) = quiet_setup();
+        let mut m = IpmiMeter::new(5);
+        m.advance(&node, &pp, 0.0, 3.0);
+        m.reset();
+        assert!(m.samples().is_empty());
+        m.advance(&node, &pp, 0.0, 3.0);
+        assert_eq!(m.samples()[0].t_s, 0.0);
+    }
+
+    #[test]
+    fn too_few_samples_zero_energy() {
+        let (node, pp) = quiet_setup();
+        let mut m = IpmiMeter::new(6);
+        assert_eq!(m.energy_joules(), 0.0);
+        m.advance(&node, &pp, 0.0, 0.5); // single beat at t=0
+        assert_eq!(m.samples().len(), 1);
+        assert_eq!(m.energy_joules(), 0.0);
+    }
+}

@@ -1,0 +1,131 @@
+//! k-fold cross-validation of the SVR performance model (paper §3.4,
+//! Table 1: per-application MAE and PAE from 10-fold CV).
+
+use crate::config::SvrSpec;
+use crate::svr::{SvrModel, TrainSample};
+use crate::util::{mae, pae};
+use crate::util::stats::shuffled_indices;
+use crate::{Error, Result};
+
+/// Cross-validation summary (averages over folds).
+#[derive(Debug, Clone)]
+pub struct CvReport {
+    pub folds: usize,
+    /// Mean absolute error in seconds (Table 1 "MAE").
+    pub mae: f64,
+    /// Percentage absolute error (Table 1 "PAE").
+    pub pae_pct: f64,
+    /// Per-fold (mae, pae) pairs.
+    pub per_fold: Vec<(f64, f64)>,
+}
+
+/// Run k-fold CV: shuffle deterministically, hold one fold out at a time,
+/// train on the rest, score MAE/PAE on the held-out fold.
+pub fn cross_validate(samples: &[TrainSample], spec: &SvrSpec) -> Result<CvReport> {
+    let k = spec.folds;
+    if k < 2 {
+        return Err(Error::Svr(format!("k-fold needs k >= 2, got {k}")));
+    }
+    if samples.len() < k * 2 {
+        return Err(Error::Svr(format!(
+            "too few samples ({}) for {k}-fold CV",
+            samples.len()
+        )));
+    }
+    let idx = shuffled_indices(samples.len(), spec.seed);
+    let fold_size = samples.len() / k;
+
+    let mut per_fold = Vec::with_capacity(k);
+    for fold in 0..k {
+        let lo = fold * fold_size;
+        let hi = if fold == k - 1 {
+            samples.len()
+        } else {
+            lo + fold_size
+        };
+        let test_idx = &idx[lo..hi];
+        let train_idx: Vec<usize> = idx[..lo].iter().chain(&idx[hi..]).copied().collect();
+
+        let train: Vec<TrainSample> = train_idx.iter().map(|i| samples[*i]).collect();
+        let test: Vec<TrainSample> = test_idx.iter().map(|i| samples[*i]).collect();
+
+        let model = SvrModel::train(&train, spec)?;
+        let queries: Vec<(u32, usize, u32)> =
+            test.iter().map(|s| (s.f_mhz, s.cores, s.input)).collect();
+        let pred = model.predict(&queries);
+        let truth: Vec<f64> = test.iter().map(|s| s.time_s).collect();
+        per_fold.push((mae(&truth, &pred), pae(&truth, &pred)));
+    }
+
+    let mae_avg = per_fold.iter().map(|f| f.0).sum::<f64>() / k as f64;
+    let pae_avg = per_fold.iter().map(|f| f.1).sum::<f64>() / k as f64;
+    Ok(CvReport {
+        folds: k,
+        mae: mae_avg,
+        pae_pct: pae_avg,
+        per_fold,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SvrSpec;
+
+    fn samples() -> Vec<TrainSample> {
+        let mut out = Vec::new();
+        for fi in 0..6 {
+            let f = 1200 + fi * 200;
+            for p in [1usize, 2, 4, 8, 16, 32] {
+                for n in 1..=3u32 {
+                    let work = 80.0 * 2.0f64.powi(n as i32 - 1);
+                    let t = work * (0.1 + 0.9 / p as f64) * 2200.0 / f as f64;
+                    out.push(TrainSample {
+                        f_mhz: f,
+                        cores: p,
+                        input: n,
+                        time_s: t,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    fn spec() -> SvrSpec {
+        SvrSpec {
+            c: 1000.0,
+            epsilon: 0.3,
+            folds: 5,
+            max_iter: 100_000,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn cv_reports_reasonable_errors() {
+        let rep = cross_validate(&samples(), &spec()).unwrap();
+        assert_eq!(rep.folds, 5);
+        assert_eq!(rep.per_fold.len(), 5);
+        // Smooth synthetic surface: CV PAE should be below ~20 %.
+        assert!(rep.pae_pct < 20.0, "PAE {}", rep.pae_pct);
+        assert!(rep.mae > 0.0);
+    }
+
+    #[test]
+    fn cv_is_deterministic() {
+        let a = cross_validate(&samples(), &spec()).unwrap();
+        let b = cross_validate(&samples(), &spec()).unwrap();
+        assert_eq!(a.mae, b.mae);
+        assert_eq!(a.pae_pct, b.pae_pct);
+    }
+
+    #[test]
+    fn cv_rejects_bad_k() {
+        let mut s = spec();
+        s.folds = 1;
+        assert!(cross_validate(&samples(), &s).is_err());
+        s.folds = 10;
+        assert!(cross_validate(&samples()[..12], &s).is_err());
+    }
+}

@@ -1,0 +1,108 @@
+//! Hyper-parameter grid search (paper §3.4: "a grid search was used to
+//! tune the model parameters", landing on C = 10·10³, γ = 0.5).
+//!
+//! Scores each (C, γ) pair by k-fold CV MAE and returns the winner.
+
+use crate::config::SvrSpec;
+use crate::svr::cv::cross_validate;
+use crate::svr::TrainSample;
+use crate::{Error, Result};
+
+/// One evaluated grid point.
+#[derive(Debug, Clone)]
+pub struct GridPoint {
+    pub c: f64,
+    pub gamma: f64,
+    pub mae: f64,
+    pub pae_pct: f64,
+}
+
+/// Grid-search outcome.
+#[derive(Debug, Clone)]
+pub struct GridSearchResult {
+    pub best: GridPoint,
+    pub evaluated: Vec<GridPoint>,
+}
+
+/// Search the (C, γ) grid with k-fold CV; lowest MAE wins.
+pub fn grid_search(
+    samples: &[TrainSample],
+    base: &SvrSpec,
+    cs: &[f64],
+    gammas: &[f64],
+) -> Result<GridSearchResult> {
+    if cs.is_empty() || gammas.is_empty() {
+        return Err(Error::Svr("empty hyper-parameter grid".into()));
+    }
+    let mut evaluated = Vec::with_capacity(cs.len() * gammas.len());
+    for &c in cs {
+        for &gamma in gammas {
+            let spec = SvrSpec {
+                c,
+                gamma,
+                ..base.clone()
+            };
+            let rep = cross_validate(samples, &spec)?;
+            evaluated.push(GridPoint {
+                c,
+                gamma,
+                mae: rep.mae,
+                pae_pct: rep.pae_pct,
+            });
+        }
+    }
+    let best = evaluated
+        .iter()
+        .min_by(|a, b| a.mae.total_cmp(&b.mae))
+        .expect("non-empty grid")
+        .clone();
+    Ok(GridSearchResult { best, evaluated })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn samples() -> Vec<TrainSample> {
+        let mut out = Vec::new();
+        for fi in 0..5 {
+            let f = 1200 + fi * 250;
+            for p in [1usize, 2, 4, 8, 16] {
+                for n in 1..=3u32 {
+                    let t = 50.0 * n as f64 * (0.1 + 0.9 / p as f64) * 2200.0 / f as f64;
+                    out.push(TrainSample {
+                        f_mhz: f,
+                        cores: p,
+                        input: n,
+                        time_s: t,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn picks_lowest_mae_point() {
+        let base = SvrSpec {
+            folds: 3,
+            epsilon: 0.2,
+            max_iter: 50_000,
+            ..Default::default()
+        };
+        let res = grid_search(&samples(), &base, &[10.0, 1000.0], &[0.1, 0.5]).unwrap();
+        assert_eq!(res.evaluated.len(), 4);
+        let min = res
+            .evaluated
+            .iter()
+            .map(|p| p.mae)
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(res.best.mae, min);
+    }
+
+    #[test]
+    fn empty_grid_errors() {
+        let base = SvrSpec::default();
+        assert!(grid_search(&samples(), &base, &[], &[0.5]).is_err());
+    }
+}

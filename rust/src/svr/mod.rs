@@ -1,0 +1,261 @@
+//! Architecture-aware application performance model (paper §2.2/§3.4,
+//! system S8): ε-SVR with an RBF kernel predicting execution time from
+//! (frequency, active cores, input size).
+//!
+//! Training runs in Rust (SMO, `smo.rs`) over characterization samples;
+//! the *deployed* prediction path runs through the AOT `svr_energy` PJRT
+//! artifact (the L1 Pallas RBF kernel), fed with the padded support set
+//! this module exports.
+
+pub mod cv;
+pub mod gridsearch;
+pub mod scale;
+pub mod smo;
+
+pub use cv::{cross_validate, CvReport};
+pub use gridsearch::{grid_search, GridSearchResult};
+pub use scale::Standardizer;
+
+use crate::config::{mhz_to_ghz, Mhz, SvrSpec};
+use crate::{Error, Result};
+
+/// Number of features: (frequency GHz, cores, input size).
+pub const DIMS: usize = 3;
+
+/// One characterization sample (one row of the §3.4 campaign).
+#[derive(Debug, Clone, Copy)]
+pub struct TrainSample {
+    pub f_mhz: Mhz,
+    pub cores: usize,
+    pub input: u32,
+    /// Measured execution time, seconds.
+    pub time_s: f64,
+}
+
+impl TrainSample {
+    /// Raw (unscaled) feature row.
+    pub fn features(&self) -> [f64; DIMS] {
+        [mhz_to_ghz(self.f_mhz), self.cores as f64, self.input as f64]
+    }
+}
+
+/// A trained SVR performance model.
+#[derive(Debug, Clone)]
+pub struct SvrModel {
+    /// Scaled training features (row-major, DIMS wide) — the support set.
+    pub train_x: Vec<f64>,
+    /// Signed dual coefficients (zero for non-SVs).
+    pub beta: Vec<f64>,
+    pub b: f64,
+    pub gamma: f64,
+    pub scaler: Standardizer,
+    /// Training diagnostics.
+    pub iterations: usize,
+    pub n_support: usize,
+}
+
+impl SvrModel {
+    /// Train on characterization samples with the given hyper-parameters.
+    pub fn train(samples: &[TrainSample], spec: &SvrSpec) -> Result<SvrModel> {
+        if samples.len() < 10 {
+            return Err(Error::Svr(format!(
+                "need >= 10 training samples, got {}",
+                samples.len()
+            )));
+        }
+        let mut raw = Vec::with_capacity(samples.len() * DIMS);
+        let mut y = Vec::with_capacity(samples.len());
+        for s in samples {
+            if !s.time_s.is_finite() || s.time_s <= 0.0 {
+                return Err(Error::Data(format!(
+                    "bad execution time {} in training set",
+                    s.time_s
+                )));
+            }
+            raw.extend_from_slice(&s.features());
+            y.push(s.time_s);
+        }
+        let scaler = if spec.scale_features {
+            Standardizer::fit(&raw, DIMS)?
+        } else {
+            Standardizer::identity(DIMS)
+        };
+        let x = scaler.transform(&raw);
+        let k = smo::rbf_kernel_matrix(&x, &x, DIMS, spec.gamma);
+        let sol = smo::solve_epsilon_svr(&k, &y, spec.c, spec.epsilon, spec.tol, spec.max_iter)?;
+        let n_support = sol.n_support();
+        Ok(SvrModel {
+            train_x: x,
+            beta: sol.beta,
+            b: sol.b,
+            gamma: spec.gamma,
+            scaler,
+            iterations: sol.iterations,
+            n_support,
+        })
+    }
+
+    /// Predict execution times (seconds) for raw (f, p, N) queries.
+    pub fn predict(&self, queries: &[(Mhz, usize, u32)]) -> Vec<f64> {
+        let mut q = Vec::with_capacity(queries.len() * DIMS);
+        for (f, p, n) in queries {
+            q.extend_from_slice(&[mhz_to_ghz(*f), *p as f64, *n as f64]);
+        }
+        let qs = self.scaler.transform(&q);
+        smo::predict(&self.beta, self.b, &self.train_x, &qs, DIMS, self.gamma)
+    }
+
+    /// Predict one configuration.
+    pub fn predict_one(&self, f: Mhz, p: usize, n: u32) -> f64 {
+        self.predict(&[(f, p, n)])[0]
+    }
+
+    /// Export the padded (support-set, duals) pair for the AOT
+    /// `svr_energy` artifact: `max_sv` rows, zeros beyond the training set.
+    /// Returns `(sv_flat_f32, dual_f32)`.
+    pub fn export_padded(&self, max_sv: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        let l = self.beta.len();
+        if l > max_sv {
+            return Err(Error::Svr(format!(
+                "training set {l} exceeds artifact capacity {max_sv}"
+            )));
+        }
+        let mut sv = vec![0.0f32; max_sv * DIMS];
+        let mut dual = vec![0.0f32; max_sv];
+        for i in 0..l {
+            for d in 0..DIMS {
+                sv[i * DIMS + d] = self.train_x[i * DIMS + d] as f32;
+            }
+            dual[i] = self.beta[i] as f32;
+        }
+        Ok((sv, dual))
+    }
+
+    /// Scale a raw query grid for the AOT artifact (row-major f32).
+    pub fn scale_queries_f32(&self, queries: &[(Mhz, usize, u32)]) -> Vec<f32> {
+        let mut q = Vec::with_capacity(queries.len() * DIMS);
+        for (f, p, n) in queries {
+            q.extend_from_slice(&[mhz_to_ghz(*f), *p as f64, *n as f64]);
+        }
+        self.scaler
+            .transform(&q)
+            .into_iter()
+            .map(|v| v as f32)
+            .collect()
+    }
+}
+
+/// Deterministic 90/10 (or per-spec) train/test split of a sample set.
+pub fn train_test_split(
+    samples: &[TrainSample],
+    spec: &SvrSpec,
+) -> (Vec<TrainSample>, Vec<TrainSample>) {
+    let idx = crate::util::stats::shuffled_indices(samples.len(), spec.seed);
+    let n_train = ((samples.len() as f64) * spec.train_fraction).round() as usize;
+    let train = idx[..n_train].iter().map(|i| samples[*i]).collect();
+    let test = idx[n_train..].iter().map(|i| samples[*i]).collect();
+    (train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic Amdahl-shaped dataset, the kind the campaign produces.
+    fn synthetic_samples() -> Vec<TrainSample> {
+        let mut out = Vec::new();
+        for fi in 0..6 {
+            let f = 1200 + fi * 200;
+            for p in [1usize, 2, 4, 8, 16, 32] {
+                for n in 1..=3u32 {
+                    let work = 100.0 * 1.8f64.powi(n as i32 - 1);
+                    let t = work * (0.05 + 0.95 / p as f64) * (2.2 / mhz_to_ghz(f));
+                    out.push(TrainSample {
+                        f_mhz: f,
+                        cores: p,
+                        input: n,
+                        time_s: t,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    fn spec() -> SvrSpec {
+        SvrSpec {
+            c: 1000.0,
+            gamma: 0.5,
+            epsilon: 0.5,
+            max_iter: 200_000,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn train_and_interpolate() {
+        let samples = synthetic_samples();
+        let m = SvrModel::train(&samples, &spec()).unwrap();
+        // In-sample predictions within a few percent.
+        let mut rel = 0.0f64;
+        for s in &samples {
+            let p = m.predict_one(s.f_mhz, s.cores, s.input);
+            rel = rel.max(((p - s.time_s) / s.time_s).abs());
+        }
+        assert!(rel < 0.25, "worst in-sample relative error {rel}");
+        // Interpolation at an unseen frequency is sane (between neighbours).
+        let p = m.predict_one(1500, 8, 2);
+        let lo = m.predict_one(1400, 8, 2);
+        let hi = m.predict_one(1600, 8, 2);
+        assert!(p <= lo * 1.05 && p >= hi * 0.95, "p={p} lo={lo} hi={hi}");
+    }
+
+    #[test]
+    fn rejects_degenerate_training() {
+        assert!(SvrModel::train(&[], &spec()).is_err());
+        let bad = vec![
+            TrainSample {
+                f_mhz: 2000,
+                cores: 1,
+                input: 1,
+                time_s: -1.0,
+            };
+            20
+        ];
+        assert!(SvrModel::train(&bad, &spec()).is_err());
+    }
+
+    #[test]
+    fn export_padded_layout() {
+        let m = SvrModel::train(&synthetic_samples(), &spec()).unwrap();
+        let l = m.beta.len();
+        let (sv, dual) = m.export_padded(256).unwrap();
+        assert_eq!(sv.len(), 256 * DIMS);
+        assert_eq!(dual.len(), 256);
+        // Padding region is zero.
+        assert!(dual[l..].iter().all(|v| *v == 0.0));
+        assert!(sv[l * DIMS..].iter().all(|v| *v == 0.0));
+        // Capacity overflow is an error.
+        assert!(m.export_padded(l - 1).is_err());
+    }
+
+    #[test]
+    fn split_fractions() {
+        let samples = synthetic_samples();
+        let (tr, te) = train_test_split(&samples, &SvrSpec::default());
+        assert_eq!(tr.len() + te.len(), samples.len());
+        let frac = tr.len() as f64 / samples.len() as f64;
+        assert!((frac - 0.9).abs() < 0.02, "train fraction {frac}");
+    }
+
+    #[test]
+    fn predictions_deterministic() {
+        let samples = synthetic_samples();
+        let m1 = SvrModel::train(&samples, &spec()).unwrap();
+        let m2 = SvrModel::train(&samples, &spec()).unwrap();
+        assert_eq!(
+            m1.predict_one(1800, 8, 2),
+            m2.predict_one(1800, 8, 2)
+        );
+    }
+}

@@ -1,0 +1,98 @@
+//! Feature standardization. The SVR operates on z-scored features
+//! (frequency GHz, core count, input size); gamma = 0.5 from the paper is
+//! meaningful in this scaled space. The scaler is part of the persisted
+//! model so the deployed decision path scales queries identically.
+
+use crate::util::stats::{mean, std_dev};
+use crate::{Error, Result};
+
+/// Per-dimension z-score standardizer.
+#[derive(Debug, Clone)]
+pub struct Standardizer {
+    pub means: Vec<f64>,
+    pub stds: Vec<f64>,
+}
+
+impl Standardizer {
+    /// Identity scaler (means 0, stds 1) — used when `scale_features` is
+    /// off so the rest of the pipeline stays uniform.
+    pub fn identity(dims: usize) -> Self {
+        Standardizer {
+            means: vec![0.0; dims],
+            stds: vec![1.0; dims],
+        }
+    }
+
+    /// Fit on row-major data (`rows` x `dims`).
+    pub fn fit(data: &[f64], dims: usize) -> Result<Self> {
+        if dims == 0 || data.is_empty() || data.len() % dims != 0 {
+            return Err(Error::Data(format!(
+                "standardizer: bad data ({} values, {} dims)",
+                data.len(),
+                dims
+            )));
+        }
+        let rows = data.len() / dims;
+        let mut means = Vec::with_capacity(dims);
+        let mut stds = Vec::with_capacity(dims);
+        for d in 0..dims {
+            let col: Vec<f64> = (0..rows).map(|r| data[r * dims + d]).collect();
+            means.push(mean(&col));
+            stds.push(std_dev(&col));
+        }
+        Ok(Standardizer { means, stds })
+    }
+
+    pub fn dims(&self) -> usize {
+        self.means.len()
+    }
+
+    /// Scale one row in place.
+    pub fn transform_row(&self, row: &mut [f64]) {
+        debug_assert_eq!(row.len(), self.dims());
+        for (d, v) in row.iter_mut().enumerate() {
+            *v = (*v - self.means[d]) / self.stds[d];
+        }
+    }
+
+    /// Scale row-major data, returning a new vector.
+    pub fn transform(&self, data: &[f64]) -> Vec<f64> {
+        let dims = self.dims();
+        let mut out = data.to_vec();
+        for row in out.chunks_mut(dims) {
+            self.transform_row(row);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_transform_zero_mean_unit_var() {
+        let data = vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0, 4.0, 40.0];
+        let s = Standardizer::fit(&data, 2).unwrap();
+        let t = s.transform(&data);
+        for d in 0..2 {
+            let col: Vec<f64> = (0..4).map(|r| t[r * 2 + d]).collect();
+            assert!(mean(&col).abs() < 1e-12);
+            assert!((std_dev(&col) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn constant_column_safe() {
+        let data = vec![5.0, 1.0, 5.0, 2.0, 5.0, 3.0];
+        let s = Standardizer::fit(&data, 2).unwrap();
+        let t = s.transform(&data);
+        assert!(t[0].abs() < 1e-12); // (5-5)/1
+    }
+
+    #[test]
+    fn rejects_misaligned_data() {
+        assert!(Standardizer::fit(&[1.0, 2.0, 3.0], 2).is_err());
+        assert!(Standardizer::fit(&[], 3).is_err());
+    }
+}

@@ -1,0 +1,421 @@
+//! Sequential Minimal Optimization solver for ε-SVR (paper §2.2).
+//!
+//! LIBSVM's formulation: ε-SVR over `l` samples becomes a 2l-variable
+//! box-constrained QP with labels y_s = +1 for s < l (the α side) and −1
+//! otherwise (the α* side):
+//!
+//! ```text
+//!   min ½ aᵀ Q̂ a + pᵀ a    s.t.  Σ_s y_s a_s = 0,  0 ≤ a_s ≤ C
+//!   Q̂[s,t] = y_s y_t K(x_{s mod l}, x_{t mod l}),   p = [ε − y ; ε + y]
+//! ```
+//!
+//! Solved by first-order maximal-violating-pair SMO. For the selected pair
+//! (i, j), the feasible direction is `Δa_i = y_i t, Δa_j = −y_j t` with
+//!
+//! ```text
+//!   t* = (v_i − v_j) / (K_ii + K_jj − 2 K_ij),   v_s = −y_s G_s
+//! ```
+//!
+//! clipped to the box; the gradient then updates as
+//! `G_s += y_s · t · (K[s,i] − K[s,j])`. The trained regressor is
+//! `f(x) = Σ_i β_i K(x_i, x) + b` with `β = α − α*` and
+//! `b = (Gmax + Gmin) / 2` from the final violating-pair values.
+
+use crate::{Error, Result};
+
+/// Dense RBF kernel matrix between row-major sets (f64, training-side).
+/// `a` is (ra x dims), `b` is (rb x dims); returns (ra x rb) row-major.
+pub fn rbf_kernel_matrix(a: &[f64], b: &[f64], dims: usize, gamma: f64) -> Vec<f64> {
+    let ra = a.len() / dims;
+    let rb = b.len() / dims;
+    let mut k = vec![0.0; ra * rb];
+    for i in 0..ra {
+        let xi = &a[i * dims..(i + 1) * dims];
+        for j in 0..rb {
+            let xj = &b[j * dims..(j + 1) * dims];
+            let mut d2 = 0.0;
+            for d in 0..dims {
+                let diff = xi[d] - xj[d];
+                d2 += diff * diff;
+            }
+            k[i * rb + j] = (-gamma * d2).exp();
+        }
+    }
+    k
+}
+
+/// SMO solver output.
+#[derive(Debug, Clone)]
+pub struct SmoSolution {
+    /// Signed dual coefficients β_i = α_i − α*_i, one per training row.
+    pub beta: Vec<f64>,
+    /// Bias term of the decision function.
+    pub b: f64,
+    /// Pair updates performed.
+    pub iterations: usize,
+    /// Final KKT violation (≤ tol on clean convergence).
+    pub violation: f64,
+}
+
+impl SmoSolution {
+    /// Number of support vectors (non-zero dual coefficients).
+    pub fn n_support(&self) -> usize {
+        self.beta.iter().filter(|b| b.abs() > 1e-12).count()
+    }
+}
+
+#[inline]
+fn sign(s: usize, l: usize) -> f64 {
+    if s < l {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+#[inline]
+fn kidx(s: usize, l: usize) -> usize {
+    if s < l {
+        s
+    } else {
+        s - l
+    }
+}
+
+/// Solve ε-SVR given a precomputed kernel matrix `k` (l x l, row-major)
+/// and targets `y` (length l).
+pub fn solve_epsilon_svr(
+    k: &[f64],
+    y: &[f64],
+    c: f64,
+    epsilon: f64,
+    tol: f64,
+    max_iter: usize,
+) -> Result<SmoSolution> {
+    let l = y.len();
+    if l == 0 {
+        return Err(Error::Svr("empty training set".into()));
+    }
+    if k.len() != l * l {
+        return Err(Error::Svr(format!(
+            "kernel matrix is {} elements, expected {}",
+            k.len(),
+            l * l
+        )));
+    }
+    if c <= 0.0 || epsilon < 0.0 || tol <= 0.0 {
+        return Err(Error::Svr(format!(
+            "bad hyper-parameters C={c} eps={epsilon} tol={tol}"
+        )));
+    }
+    if y.iter().any(|v| !v.is_finite()) {
+        return Err(Error::Svr("non-finite training target".into()));
+    }
+
+    let n = 2 * l;
+    let mut alpha = vec![0.0f64; n];
+    // At a = 0 the gradient equals p = [ε − y ; ε + y].
+    let mut grad: Vec<f64> = (0..n)
+        .map(|s| {
+            if s < l {
+                epsilon - y[s]
+            } else {
+                epsilon + y[s - l]
+            }
+        })
+        .collect();
+
+    let mut iterations = 0usize;
+    #[allow(unused_assignments)]
+    let (mut g_max, mut g_min) = (f64::NEG_INFINITY, f64::INFINITY);
+    // Contiguous copy of the kernel diagonal: the WSS2 gain formula reads
+    // K[s,s] for every candidate — strided access over the full matrix
+    // would miss cache once per candidate at realistic l.
+    let diag: Vec<f64> = (0..l).map(|s| k[s * l + s]).collect();
+    // i_up from the previous fused pass (bootstrap: full scan below).
+    #[allow(unused_assignments)]
+    let mut i_up = usize::MAX;
+
+    // Fused selection helper: scan all 2l variables for g_max/i_up and
+    // g_min (stopping criterion only; j comes from the second-order rule).
+    macro_rules! full_select {
+        () => {{
+            g_max = f64::NEG_INFINITY;
+            g_min = f64::INFINITY;
+            i_up = usize::MAX;
+            for s in 0..n {
+                let ys = sign(s, l);
+                let v = -ys * grad[s];
+                let in_up = (ys > 0.0 && alpha[s] < c) || (ys < 0.0 && alpha[s] > 0.0);
+                let in_low = (ys > 0.0 && alpha[s] > 0.0) || (ys < 0.0 && alpha[s] < c);
+                if in_up && v > g_max {
+                    g_max = v;
+                    i_up = s;
+                }
+                if in_low && v < g_min {
+                    g_min = v;
+                }
+            }
+        }};
+    }
+
+    full_select!();
+
+    loop {
+        if i_up == usize::MAX || g_max - g_min <= tol || iterations >= max_iter {
+            break;
+        }
+
+        // --- second-order working-set selection (LIBSVM WSS2): among
+        // I_low candidates with v_j < g_max, maximize the analytic
+        // objective decrease (g_max - v_j)^2 / quad(i, j).
+        let i = i_up;
+        let ki = kidx(i, l);
+        let row_i = &k[ki * l..(ki + 1) * l];
+        let kii = row_i[ki];
+        let mut j_low = usize::MAX;
+        let mut best_gain = 0.0f64;
+        for s in 0..n {
+            let ys = sign(s, l);
+            let in_low = (ys > 0.0 && alpha[s] > 0.0) || (ys < 0.0 && alpha[s] < c);
+            if !in_low {
+                continue;
+            }
+            let v = -ys * grad[s];
+            let diff = g_max - v;
+            if diff <= 0.0 {
+                continue;
+            }
+            let ks = kidx(s, l);
+            let quad = (kii + diag[ks] - 2.0 * row_i[ks]).max(1e-12);
+            let gain = diff * diff / quad;
+            if gain > best_gain {
+                best_gain = gain;
+                j_low = s;
+            }
+        }
+        if j_low == usize::MAX {
+            break;
+        }
+
+        // --- analytic two-variable step along (Δa_i, Δa_j) = (y_i t, −y_j t).
+        let j = j_low;
+        let (yi, yj) = (sign(i, l), sign(j, l));
+        let kj = kidx(j, l);
+        let vj = -yj * grad[j];
+        let quad = (kii + diag[kj] - 2.0 * row_i[kj]).max(1e-12);
+        let mut t = (g_max - vj) / quad;
+        let lim_i = if yi > 0.0 { c - alpha[i] } else { alpha[i] };
+        let lim_j = if yj > 0.0 { alpha[j] } else { c - alpha[j] };
+        t = t.min(lim_i).min(lim_j);
+        if !(t > 0.0) {
+            break; // numerically stuck: the pair cannot move
+        }
+
+        alpha[i] += yi * t;
+        alpha[j] -= yj * t;
+        alpha[i] = alpha[i].clamp(0.0, c);
+        alpha[j] = alpha[j].clamp(0.0, c);
+
+        // --- fused gradient maintenance + next selection:
+        // G_s += y_s t (K[s,i] − K[s,j]) for both label copies of each
+        // kernel row entry, evaluating the selection criteria in the same
+        // pass so the working-set scan costs no extra traversal.
+        let row_j = &k[kj * l..(kj + 1) * l];
+        g_max = f64::NEG_INFINITY;
+        g_min = f64::INFINITY;
+        i_up = usize::MAX;
+        for s in 0..l {
+            let dk = t * (row_i[s] - row_j[s]);
+            let gp = grad[s] + dk; // y = +1 copy
+            let gm = grad[s + l] - dk; // y = −1 copy
+            grad[s] = gp;
+            grad[s + l] = gm;
+
+            let ap = alpha[s];
+            let am = alpha[s + l];
+            let vp = -gp;
+            let vm = gm;
+            if ap < c && vp > g_max {
+                g_max = vp;
+                i_up = s;
+            }
+            if am > 0.0 && vm > g_max {
+                g_max = vm;
+                i_up = s + l;
+            }
+            if ap > 0.0 && vp < g_min {
+                g_min = vp;
+            }
+            if am < c && vm < g_min {
+                g_min = vm;
+            }
+        }
+        iterations += 1;
+    }
+
+    let b = if g_max.is_finite() && g_min.is_finite() {
+        (g_max + g_min) / 2.0
+    } else {
+        0.0
+    };
+    let beta: Vec<f64> = (0..l).map(|i| alpha[i] - alpha[i + l]).collect();
+    Ok(SmoSolution {
+        beta,
+        b,
+        iterations,
+        violation: (g_max - g_min).max(0.0),
+    })
+}
+
+/// Evaluate the trained regressor on query rows (row-major, `dims` wide).
+pub fn predict(
+    beta: &[f64],
+    b: f64,
+    train_x: &[f64],
+    query_x: &[f64],
+    dims: usize,
+    gamma: f64,
+) -> Vec<f64> {
+    let q = query_x.len() / dims;
+    let mut out = vec![b; q];
+    for (i, bi) in beta.iter().enumerate() {
+        if bi.abs() < 1e-12 {
+            continue; // not a support vector
+        }
+        let xi = &train_x[i * dims..(i + 1) * dims];
+        for (qi, o) in out.iter_mut().enumerate() {
+            let xq = &query_x[qi * dims..(qi + 1) * dims];
+            let mut d2 = 0.0;
+            for d in 0..dims {
+                let diff = xi[d] - xq[d];
+                d2 += diff * diff;
+            }
+            *o += bi * (-gamma * d2).exp();
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Train on a 1-D function and check interpolation quality.
+    fn train_1d(f: impl Fn(f64) -> f64, gamma: f64, c: f64, eps: f64) -> (Vec<f64>, SmoSolution) {
+        let xs: Vec<f64> = (0..60).map(|i| i as f64 / 10.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| f(*x)).collect();
+        let k = rbf_kernel_matrix(&xs, &xs, 1, gamma);
+        let sol = solve_epsilon_svr(&k, &ys, c, eps, 1e-4, 100_000).unwrap();
+        (xs, sol)
+    }
+
+    #[test]
+    fn fits_constant_function() {
+        let (xs, sol) = train_1d(|_| 7.5, 0.5, 100.0, 0.01);
+        let pred = predict(&sol.beta, sol.b, &xs, &xs, 1, 0.5);
+        for p in pred {
+            assert!((p - 7.5).abs() < 0.05, "pred {p}");
+        }
+    }
+
+    #[test]
+    fn fits_linear_function_within_epsilon() {
+        let (xs, sol) = train_1d(|x| 2.0 * x + 1.0, 0.5, 1000.0, 0.05);
+        let pred = predict(&sol.beta, sol.b, &xs, &xs, 1, 0.5);
+        for (x, p) in xs.iter().zip(&pred) {
+            let want = 2.0 * x + 1.0;
+            assert!((p - want).abs() < 0.15, "x={x}: {p} vs {want}");
+        }
+    }
+
+    #[test]
+    fn fits_smooth_nonlinear_function() {
+        let (xs, sol) = train_1d(|x| (x).sin() * 3.0 + 5.0, 1.0, 1000.0, 0.02);
+        let pred = predict(&sol.beta, sol.b, &xs, &xs, 1, 1.0);
+        let mut worst = 0.0f64;
+        for (x, p) in xs.iter().zip(&pred) {
+            worst = worst.max((p - (x.sin() * 3.0 + 5.0)).abs());
+        }
+        assert!(worst < 0.2, "worst error {worst}");
+    }
+
+    #[test]
+    fn equality_constraint_preserved() {
+        let (_, sol) = train_1d(|x| x * x - 3.0, 0.5, 500.0, 0.05);
+        let sum: f64 = sol.beta.iter().sum();
+        assert!(sum.abs() < 1e-6, "sum beta = {sum}");
+    }
+
+    #[test]
+    fn duals_respect_box() {
+        let c = 50.0;
+        let xs: Vec<f64> = (0..40).map(|i| i as f64 / 5.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x.cos() * 10.0).collect();
+        let k = rbf_kernel_matrix(&xs, &xs, 1, 0.8);
+        let sol = solve_epsilon_svr(&k, &ys, c, 0.01, 1e-4, 100_000).unwrap();
+        for b in &sol.beta {
+            assert!(b.abs() <= c + 1e-9, "beta {b} outside box");
+        }
+    }
+
+    #[test]
+    fn epsilon_tube_sparsifies() {
+        // Large epsilon -> most points inside the tube -> few SVs.
+        let (_, tight) = train_1d(|x| x.sin(), 0.5, 100.0, 0.001);
+        let (_, loose) = train_1d(|x| x.sin(), 0.5, 100.0, 0.5);
+        assert!(
+            loose.n_support() < tight.n_support(),
+            "loose {} vs tight {}",
+            loose.n_support(),
+            tight.n_support()
+        );
+    }
+
+    #[test]
+    fn converges_below_tolerance() {
+        let (_, sol) = train_1d(|x| 0.3 * x, 0.5, 100.0, 0.01);
+        assert!(sol.violation <= 1e-4 + 1e-9, "violation {}", sol.violation);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(solve_epsilon_svr(&[], &[], 1.0, 0.1, 1e-3, 10).is_err());
+        assert!(solve_epsilon_svr(&[1.0], &[1.0], -1.0, 0.1, 1e-3, 10).is_err());
+        assert!(solve_epsilon_svr(&[1.0, 1.0], &[1.0], 1.0, 0.1, 1e-3, 10).is_err());
+        assert!(solve_epsilon_svr(&[1.0], &[f64::NAN], 1.0, 0.1, 1e-3, 10).is_err());
+    }
+
+    #[test]
+    fn kernel_matrix_properties() {
+        let a = vec![0.0, 1.0, 0.0, 0.0, 1.0, 1.0]; // 3 points in 2-D
+        let k = rbf_kernel_matrix(&a, &a, 2, 0.5);
+        for i in 0..3 {
+            assert!((k[i * 3 + i] - 1.0).abs() < 1e-12);
+            for j in 0..3 {
+                assert!((k[i * 3 + j] - k[j * 3 + i]).abs() < 1e-12);
+                assert!(k[i * 3 + j] > 0.0 && k[i * 3 + j] <= 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn multidim_regression() {
+        // f(x) = x0 + 2 x1 over a small 2-D grid.
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..12 {
+            for j in 0..12 {
+                let (a, b) = (i as f64 / 4.0, j as f64 / 4.0);
+                xs.extend_from_slice(&[a, b]);
+                ys.push(a + 2.0 * b);
+            }
+        }
+        let k = rbf_kernel_matrix(&xs, &xs, 2, 0.5);
+        let sol = solve_epsilon_svr(&k, &ys, 1000.0, 0.05, 1e-4, 200_000).unwrap();
+        let pred = predict(&sol.beta, sol.b, &xs, &xs, 2, 0.5);
+        let mae: f64 =
+            ys.iter().zip(&pred).map(|(a, b)| (a - b).abs()).sum::<f64>() / ys.len() as f64;
+        assert!(mae < 0.1, "MAE {mae}");
+    }
+}

@@ -1,0 +1,141 @@
+//! Minimal benchmark harness (replaces `criterion`, unavailable offline).
+//!
+//! Each `cargo bench` target builds a [`Bench`] and registers closures;
+//! the harness warms up, runs timed iterations until a time budget or an
+//! iteration cap is hit, and prints mean / p50 / p95 / min in
+//! criterion-like one-line format. A `--quick` CLI flag (or
+//! `ECOPT_BENCH_QUICK=1`) shrinks budgets for CI smoke runs.
+
+use std::time::{Duration, Instant};
+
+/// Statistics of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchStats {
+    fn fmt_dur(d: Duration) -> String {
+        let ns = d.as_nanos();
+        if ns < 1_000 {
+            format!("{ns} ns")
+        } else if ns < 1_000_000 {
+            format!("{:.2} µs", ns as f64 / 1e3)
+        } else if ns < 1_000_000_000 {
+            format!("{:.2} ms", ns as f64 / 1e6)
+        } else {
+            format!("{:.3} s", ns as f64 / 1e9)
+        }
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} mean {:>10}  p50 {:>10}  p95 {:>10}  min {:>10}  ({} iters)",
+            self.name,
+            Self::fmt_dur(self.mean),
+            Self::fmt_dur(self.p50),
+            Self::fmt_dur(self.p95),
+            Self::fmt_dur(self.min),
+            self.iters
+        )
+    }
+}
+
+/// Benchmark runner for one `cargo bench` target.
+pub struct Bench {
+    group: String,
+    budget: Duration,
+    max_iters: usize,
+    min_iters: usize,
+    results: Vec<BenchStats>,
+}
+
+impl Bench {
+    /// Create a runner; reads `--quick` / `ECOPT_BENCH_QUICK` to shrink
+    /// the per-benchmark time budget.
+    pub fn new(group: &str) -> Self {
+        let quick = std::env::args().any(|a| a == "--quick")
+            || std::env::var("ECOPT_BENCH_QUICK").is_ok();
+        let budget = if quick {
+            Duration::from_millis(300)
+        } else {
+            Duration::from_secs(3)
+        };
+        println!("== bench group: {group} (budget {budget:?}/case) ==");
+        Bench {
+            group: group.to_string(),
+            budget,
+            max_iters: if quick { 20 } else { 200 },
+            min_iters: 3,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` repeatedly; prints and records the stats.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchStats {
+        // Warm-up: one untimed call.
+        f();
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while (start.elapsed() < self.budget && samples.len() < self.max_iters)
+            || samples.len() < self.min_iters
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let iters = samples.len();
+        let mean = samples.iter().sum::<Duration>() / iters as u32;
+        let stats = BenchStats {
+            name: format!("{}/{}", self.group, name),
+            iters,
+            mean,
+            p50: samples[iters / 2],
+            p95: samples[(iters * 95 / 100).min(iters - 1)],
+            min: samples[0],
+        };
+        println!("{stats}");
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// All recorded stats.
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_records() {
+        std::env::set_var("ECOPT_BENCH_QUICK", "1");
+        let mut b = Bench::new("test");
+        let mut acc = 0u64;
+        let s = b.bench("noop", || {
+            acc = acc.wrapping_add(1);
+        });
+        assert!(s.iters >= 3);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(BenchStats::fmt_dur(Duration::from_nanos(500)).contains("ns"));
+        assert!(BenchStats::fmt_dur(Duration::from_micros(50)).contains("µs"));
+        assert!(BenchStats::fmt_dur(Duration::from_millis(50)).contains("ms"));
+        assert!(BenchStats::fmt_dur(Duration::from_secs(5)).ends_with("s"));
+    }
+}

@@ -1,0 +1,180 @@
+//! Minimal dense linear algebra: enough for the multi-linear regression of
+//! the power model (Eq. 7 has 4 coefficients) and small normal-equation
+//! systems. Row-major `Vec<f64>` matrices; no external dependencies.
+
+use crate::{Error, Result};
+
+/// Solve `A x = b` for square `A` (n x n, row-major) by Gaussian elimination
+/// with partial pivoting. `A` and `b` are consumed.
+pub fn solve(mut a: Vec<f64>, mut b: Vec<f64>) -> Result<Vec<f64>> {
+    let n = b.len();
+    if a.len() != n * n {
+        return Err(Error::Linalg(format!(
+            "solve: A is {} elements, expected {}x{}",
+            a.len(),
+            n,
+            n
+        )));
+    }
+    for col in 0..n {
+        // Partial pivot: largest |a[row][col]| among remaining rows.
+        let mut pivot = col;
+        let mut best = a[col * n + col].abs();
+        for row in (col + 1)..n {
+            let v = a[row * n + col].abs();
+            if v > best {
+                best = v;
+                pivot = row;
+            }
+        }
+        if best < 1e-12 {
+            return Err(Error::Linalg(format!("singular matrix at column {col}")));
+        }
+        if pivot != col {
+            for k in 0..n {
+                a.swap(col * n + k, pivot * n + k);
+            }
+            b.swap(col, pivot);
+        }
+        // Eliminate below.
+        let diag = a[col * n + col];
+        for row in (col + 1)..n {
+            let factor = a[row * n + col] / diag;
+            if factor == 0.0 {
+                continue;
+            }
+            for k in col..n {
+                a[row * n + k] -= factor * a[col * n + k];
+            }
+            b[row] -= factor * b[col];
+        }
+    }
+    // Back substitution.
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut acc = b[row];
+        for k in (row + 1)..n {
+            acc -= a[row * n + k] * x[k];
+        }
+        x[row] = acc / a[row * n + row];
+    }
+    Ok(x)
+}
+
+/// Least squares `min ||X beta - y||^2` via the normal equations
+/// `(X^T X) beta = X^T y`. `x` is (rows x cols) row-major.
+///
+/// Fine for the well-conditioned low-dimensional fits this crate needs
+/// (power model: 4 columns over ~350 observations).
+pub fn lstsq(x: &[f64], y: &[f64], cols: usize) -> Result<Vec<f64>> {
+    let rows = y.len();
+    if x.len() != rows * cols {
+        return Err(Error::Linalg(format!(
+            "lstsq: X is {} elements, expected {}x{}",
+            x.len(),
+            rows,
+            cols
+        )));
+    }
+    if rows < cols {
+        return Err(Error::Linalg(format!(
+            "lstsq: underdetermined system ({rows} rows < {cols} cols)"
+        )));
+    }
+    let mut xtx = vec![0.0; cols * cols];
+    let mut xty = vec![0.0; cols];
+    for r in 0..rows {
+        let row = &x[r * cols..(r + 1) * cols];
+        for i in 0..cols {
+            xty[i] += row[i] * y[r];
+            for j in i..cols {
+                xtx[i * cols + j] += row[i] * row[j];
+            }
+        }
+    }
+    // Mirror the upper triangle.
+    for i in 0..cols {
+        for j in 0..i {
+            xtx[i * cols + j] = xtx[j * cols + i];
+        }
+    }
+    solve(xtx, xty)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solve_identity() {
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let b = vec![3.0, -2.0];
+        let x = solve(a, b).unwrap();
+        assert_eq!(x, vec![3.0, -2.0]);
+    }
+
+    #[test]
+    fn solve_2x2() {
+        // [2 1; 1 3] x = [5; 10] -> x = [1, 3]
+        let x = solve(vec![2.0, 1.0, 1.0, 3.0], vec![5.0, 10.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_needs_pivoting() {
+        // Zero on the initial diagonal forces a row swap.
+        let x = solve(vec![0.0, 1.0, 1.0, 0.0], vec![2.0, 3.0]).unwrap();
+        assert!((x[0] - 3.0).abs() < 1e-12);
+        assert!((x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_singular_errors() {
+        let r = solve(vec![1.0, 2.0, 2.0, 4.0], vec![1.0, 2.0]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn solve_dimension_mismatch_errors() {
+        assert!(solve(vec![1.0, 2.0, 3.0], vec![1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn lstsq_exact_fit() {
+        // y = 2*x1 + 3*x2, no noise -> exact recovery.
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..10 {
+            let a = i as f64;
+            let b = (i * i) as f64 * 0.1;
+            x.extend_from_slice(&[a, b]);
+            y.push(2.0 * a + 3.0 * b);
+        }
+        let beta = lstsq(&x, &y, 2).unwrap();
+        assert!((beta[0] - 2.0).abs() < 1e-9);
+        assert!((beta[1] - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lstsq_overdetermined_noisy() {
+        // y = 5 + 0.5 x with symmetric noise: intercept/slope recovered
+        // to within the noise scale.
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..200 {
+            let t = i as f64 / 10.0;
+            let noise = if i % 2 == 0 { 0.01 } else { -0.01 };
+            x.extend_from_slice(&[1.0, t]);
+            y.push(5.0 + 0.5 * t + noise);
+        }
+        let beta = lstsq(&x, &y, 2).unwrap();
+        assert!((beta[0] - 5.0).abs() < 0.05, "intercept {}", beta[0]);
+        assert!((beta[1] - 0.5).abs() < 0.01, "slope {}", beta[1]);
+    }
+
+    #[test]
+    fn lstsq_underdetermined_errors() {
+        assert!(lstsq(&[1.0, 2.0], &[1.0], 2).is_err());
+    }
+}

@@ -1,0 +1,82 @@
+//! Leveled stderr logging (replaces `tracing`, unavailable offline).
+//!
+//! Controlled by `ECOPT_LOG` = `error` | `warn` | `info` (default) |
+//! `debug`. Use the [`crate::info!`] / [`crate::warn!`] / [`crate::debug!`]
+//! macros.
+
+use std::sync::OnceLock;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LEVEL: OnceLock<Level> = OnceLock::new();
+
+/// The configured level (parsed once from `ECOPT_LOG`).
+pub fn level() -> Level {
+    *LEVEL.get_or_init(|| match std::env::var("ECOPT_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        _ => Level::Info,
+    })
+}
+
+/// Whether a message at `l` should print.
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+#[doc(hidden)]
+pub fn emit(l: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(l) {
+        let tag = match l {
+            Level::Error => "ERROR",
+            Level::Warn => " WARN",
+            Level::Info => " INFO",
+            Level::Debug => "DEBUG",
+        };
+        eprintln!("[{tag}] {args}");
+    }
+}
+
+/// Log at info level.
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => { $crate::util::logging::emit($crate::util::logging::Level::Info, format_args!($($t)*)) }
+}
+
+/// Log at warn level.
+#[macro_export]
+macro_rules! warn_log {
+    ($($t:tt)*) => { $crate::util::logging::emit($crate::util::logging::Level::Warn, format_args!($($t)*)) }
+}
+
+/// Log at debug level.
+#[macro_export]
+macro_rules! debug_log {
+    ($($t:tt)*) => { $crate::util::logging::emit($crate::util::logging::Level::Debug, format_args!($($t)*)) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_level_is_info() {
+        assert!(enabled(Level::Info));
+        assert!(enabled(Level::Warn));
+        assert!(enabled(Level::Error));
+    }
+
+    #[test]
+    fn macros_compile_and_run() {
+        crate::info!("info {}", 1);
+        crate::warn_log!("warn {}", 2);
+        crate::debug_log!("debug {}", 3);
+    }
+}

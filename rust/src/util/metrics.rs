@@ -1,0 +1,89 @@
+//! Validation metrics used throughout the paper: MAE, PAE (the paper's
+//! "percentage absolute error", Eq. 10), MAPE and RMSE.
+
+/// Mean absolute error: mean |y - yhat|.
+pub fn mae(y: &[f64], yhat: &[f64]) -> f64 {
+    assert_eq!(y.len(), yhat.len());
+    if y.is_empty() {
+        return 0.0;
+    }
+    y.iter()
+        .zip(yhat)
+        .map(|(a, b)| (a - b).abs())
+        .sum::<f64>()
+        / y.len() as f64
+}
+
+/// Paper Eq. 10 — sum of per-sample relative absolute errors expressed as a
+/// mean percentage: `100/n * sum |y_i - yhat_i| / y_i`. The paper calls
+/// this the (percentage) absolute error; samples with `y_i == 0` are
+/// skipped to keep the metric finite.
+pub fn pae(y: &[f64], yhat: &[f64]) -> f64 {
+    assert_eq!(y.len(), yhat.len());
+    let mut total = 0.0;
+    let mut n = 0usize;
+    for (a, b) in y.iter().zip(yhat) {
+        if *a != 0.0 {
+            total += ((a - b) / a).abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        100.0 * total / n as f64
+    }
+}
+
+/// Mean absolute percentage error — alias for [`pae`] (the paper uses the
+/// two names interchangeably in §3.3/§3.4).
+pub fn mape(y: &[f64], yhat: &[f64]) -> f64 {
+    pae(y, yhat)
+}
+
+/// Root mean squared error.
+pub fn rmse(y: &[f64], yhat: &[f64]) -> f64 {
+    assert_eq!(y.len(), yhat.len());
+    if y.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = y.iter().zip(yhat).map(|(a, b)| (a - b) * (a - b)).sum();
+    (s / y.len() as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mae_basic() {
+        assert_eq!(mae(&[1.0, 2.0, 3.0], &[1.0, 2.0, 3.0]), 0.0);
+        assert_eq!(mae(&[1.0, 2.0], &[2.0, 4.0]), 1.5);
+    }
+
+    #[test]
+    fn pae_basic() {
+        // errors: 10% and 50% -> mean 30%
+        let v = pae(&[10.0, 2.0], &[11.0, 3.0]);
+        assert!((v - 30.0).abs() < 1e-9, "{v}");
+    }
+
+    #[test]
+    fn pae_skips_zero_truth() {
+        let v = pae(&[0.0, 10.0], &[5.0, 11.0]);
+        assert!((v - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rmse_basic() {
+        let v = rmse(&[0.0, 0.0], &[3.0, 4.0]);
+        assert!((v - (12.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_inputs_are_zero() {
+        assert_eq!(mae(&[], &[]), 0.0);
+        assert_eq!(pae(&[], &[]), 0.0);
+        assert_eq!(rmse(&[], &[]), 0.0);
+    }
+}

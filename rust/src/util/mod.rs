@@ -1,0 +1,25 @@
+//! Shared infrastructure, all in-tree (the image builds offline against a
+//! minimal vendored crate set — see Cargo.toml):
+//!
+//! * [`linalg`] — dense solves for the power-model regression;
+//! * [`metrics`] — MAE / PAE (Eq. 10) / RMSE;
+//! * [`stats`] — means, trapezoid integration, deterministic shuffles;
+//! * [`rng`] — xoshiro256++ deterministic RNG (replaces `rand`);
+//! * [`json`] — JSON value/parser/writer (replaces `serde_json`);
+//! * [`bench`] — benchmark harness (replaces `criterion`);
+//! * [`prop`] — property-testing helper (replaces `proptest`);
+//! * [`tempdir`] — scoped temp dirs for tests (replaces `tempfile`);
+//! * [`logging`] — leveled stderr logging (replaces `tracing`).
+
+pub mod bench;
+pub mod json;
+pub mod linalg;
+pub mod logging;
+pub mod metrics;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod tempdir;
+
+pub use linalg::{lstsq, solve};
+pub use metrics::{mae, mape, pae, rmse};

@@ -1,0 +1,76 @@
+//! Tiny property-testing helper (replaces `proptest`, unavailable
+//! offline). Runs a closure over many seeded random cases; on failure it
+//! reports the seed so the case can be replayed deterministically.
+//!
+//! ```no_run
+//! # // no_run: doctest binaries miss the libstdc++ rpath the xla crate
+//! # // needs at load time; the same example runs in unit tests below.
+//! use ecopt::util::prop::property;
+//! property("sum is commutative", 200, |rng| {
+//!     let a = rng.range_f64(-1e6, 1e6);
+//!     let b = rng.range_f64(-1e6, 1e6);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Run `cases` random cases of `f`. Panics (with the failing seed) if any
+/// case panics. Case seeds derive from a fixed base so runs are
+/// reproducible; set `ECOPT_PROP_SEED` to change the base.
+pub fn property<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(name: &str, cases: u32, f: F) {
+    let base: u64 = std::env::var("ECOPT_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xECD7_2026);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::seed_from_u64(seed);
+            f(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {msg}\n\
+                 replay: ECOPT_PROP_SEED={base} (case {case})"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        property("abs is nonnegative", 100, |rng| {
+            let x = rng.range_f64(-100.0, 100.0);
+            assert!(x.abs() >= 0.0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports_seed() {
+        property("always fails", 5, |_rng| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn cases_see_different_randomness() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static LAST: AtomicU64 = AtomicU64::new(0);
+        property("distinct streams", 10, |rng| {
+            let v = rng.next_u64();
+            let prev = LAST.swap(v, Ordering::SeqCst);
+            assert_ne!(v, prev);
+        });
+    }
+}

@@ -1,0 +1,101 @@
+//! Small statistics helpers: mean/std for feature standardization, a
+//! trapezoidal integrator for energy, and a deterministic shuffle for
+//! train/test splits (the characterization pipeline must be reproducible).
+
+use crate::util::rng::Rng;
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation; returns 1.0 for constant/empty input so
+/// standardization never divides by zero.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let m = mean(xs);
+    let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64;
+    let sd = var.sqrt();
+    if sd < 1e-12 {
+        1.0
+    } else {
+        sd
+    }
+}
+
+/// Trapezoidal integral of irregularly-sampled `(t, y)` points.
+/// This is how the paper turns 1 Hz IPMI power samples into energy.
+pub fn trapezoid(ts: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(ts.len(), ys.len());
+    let mut acc = 0.0;
+    for i in 1..ts.len() {
+        acc += 0.5 * (ys[i] + ys[i - 1]) * (ts[i] - ts[i - 1]);
+    }
+    acc
+}
+
+/// Deterministic index shuffle (seeded), for train/test splits and k-fold
+/// partitioning.
+pub fn shuffled_indices(n: usize, seed: u64) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut rng = Rng::seed_from_u64(seed);
+    rng.shuffle(&mut idx);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((std_dev(&[1.0, 2.0, 3.0]) - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn std_constant_is_one() {
+        assert_eq!(std_dev(&[5.0, 5.0, 5.0]), 1.0);
+        assert_eq!(std_dev(&[]), 1.0);
+    }
+
+    #[test]
+    fn trapezoid_constant_power() {
+        // 100 W for 10 s = 1000 J, regardless of sampling.
+        let ts: Vec<f64> = (0..=10).map(|i| i as f64).collect();
+        let ys = vec![100.0; 11];
+        assert!((trapezoid(&ts, &ys) - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trapezoid_linear_ramp() {
+        // P(t) = t over [0, 4] -> 8 J.
+        let ts = vec![0.0, 1.0, 2.0, 3.0, 4.0];
+        let ys = ts.clone();
+        assert!((trapezoid(&ts, &ys) - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trapezoid_irregular_sampling() {
+        let ts = vec![0.0, 0.5, 2.0];
+        let ys = vec![10.0, 10.0, 10.0];
+        assert!((trapezoid(&ts, &ys) - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shuffle_is_deterministic_and_permutation() {
+        let a = shuffled_indices(100, 42);
+        let b = shuffled_indices(100, 42);
+        let c = shuffled_indices(100, 43);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

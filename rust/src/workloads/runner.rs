@@ -1,0 +1,388 @@
+//! Tick-based execution simulator: runs one application at one
+//! configuration under a governor, producing the observables the paper
+//! measures — wall time, IPMI-integrated energy, and mean frequency.
+//!
+//! The simulator advances simulated time in small ticks. Each tick it
+//! (1) exposes the current phase's per-core utilization to the node,
+//! (2) lets the governor resample on its own cadence, (3) progresses the
+//! phase's remaining work at a rate set by the active cores' frequencies,
+//! and (4) lets the IPMI meter sample the ground-truth power process.
+
+use crate::governors::Governor;
+use crate::node::power::PowerProcess;
+use crate::node::Node;
+use crate::sensors::IpmiMeter;
+use crate::util::rng::Rng;
+use crate::workloads::{AppProfile, Phase, PhaseKind};
+use crate::{Error, Result};
+
+/// Simulator knobs.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Tick length in simulated seconds.
+    pub dt: f64,
+    /// Multiplicative run-to-run work noise (OS jitter), std-dev. The
+    /// paper's measured times are noisy; the SVR has to smooth this.
+    pub work_noise: f64,
+    /// RNG seed (work noise + measurement noise).
+    pub seed: u64,
+    /// Safety cap on simulated seconds.
+    pub max_sim_s: f64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dt: 0.1,
+            work_noise: 0.01,
+            seed: 1,
+            max_sim_s: 100_000.0,
+        }
+    }
+}
+
+/// Observables of one run — the row the characterization campaign records.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub app: String,
+    pub input: u32,
+    pub cores: usize,
+    pub governor: String,
+    /// Wall-clock execution time, seconds.
+    pub wall_time_s: f64,
+    /// IPMI trapezoid-integrated energy, joules.
+    pub energy_j: f64,
+    /// Time-weighted mean frequency of the online cores, GHz (the paper's
+    /// "Mean Freq." columns).
+    pub mean_freq_ghz: f64,
+    /// Mean measured power, watts.
+    pub mean_power_w: f64,
+    /// Number of IPMI samples taken.
+    pub n_samples: usize,
+}
+
+/// Run `app` at input size `input` on `p` cores under `governor`.
+///
+/// The node is reconfigured (hotplug) and the governor drives frequencies
+/// for the whole run. Returns the measured observables.
+pub fn run(
+    node: &mut Node,
+    governor: &mut dyn Governor,
+    power: &PowerProcess,
+    app: &AppProfile,
+    input: u32,
+    p: usize,
+    cfg: &RunConfig,
+) -> Result<RunResult> {
+    if p == 0 || p > node.total_cores() {
+        return Err(Error::BadCoreCount {
+            requested: p,
+            available: node.total_cores(),
+        });
+    }
+    node.set_online_cores(p)?;
+    governor.reset();
+
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    // Box-Muller-ish cheap jitter: uniform +/- sqrt(3)*sigma has the right
+    // variance and bounded support (no negative work).
+    let jitter = 1.0 + (rng.f64() * 2.0 - 1.0) * 3.0f64.sqrt() * cfg.work_noise;
+
+    // Build the phase schedule: frames x (serial, parallel, barrier).
+    let mut phases: Vec<Phase> = Vec::with_capacity(app.frames as usize * 3);
+    for _ in 0..app.frames {
+        for ph in app.frame_phases(input, p) {
+            let mut ph = ph;
+            ph.work *= jitter;
+            if ph.work > 0.0 {
+                phases.push(ph);
+            }
+        }
+    }
+
+    // Decorrelate the meter RNG stream from the work-noise stream while
+    // staying deterministic per seed.
+    let mut meter = IpmiMeter::new(cfg.seed ^ 0x9E37_79B9_7F4A_7C15);
+    let mut t = 0.0f64;
+    let mut freq_time_integral = 0.0f64;
+    let mut gov_window = f64::INFINITY; // force a sample on the first tick
+    let mut util_accum = vec![0.0f64; node.total_cores()];
+    let mut phase_idx = 0usize;
+    let mut remaining = phases.first().map(|p| p.work).unwrap_or(0.0);
+
+    // Static governors (userspace/performance/powersave) report an
+    // infinite sampling period: frequencies never change after the first
+    // sample, so the tick length only bounds phase-slicing granularity
+    // (slices are exact anyway) and the simulation can take long strides.
+    // Dynamic governors need cfg.dt resolution for their load windows.
+    let is_static = governor.sampling_period_s().is_infinite();
+    let dt = if is_static { cfg.dt.max(1.0) } else { cfg.dt };
+
+    // Cached per-phase state, refreshed on phase change or governor
+    // sample (frequency changes shift the feedback utilization).
+    let mut cached_kind: Option<PhaseKind> = None;
+    let mut cached_rate = 0.0f64;
+    let mut cached_freq_ghz = node.mean_online_freq_ghz();
+
+    while phase_idx < phases.len() {
+        if t > cfg.max_sim_s {
+            return Err(Error::Data(format!(
+                "run exceeded {} simulated seconds ({} {}x{})",
+                cfg.max_sim_s, app.name, input, p
+            )));
+        }
+
+        // (1) Governor cadence: like the kernel, the governor observes the
+        // load AVERAGED over its sampling window, not an instantaneous
+        // phase snapshot — applications whose phases are shorter than the
+        // window (most PARSEC frames) present a blended load it cannot
+        // deconstruct. This is the effect that costs ondemand energy in
+        // the paper's comparison.
+        gov_window += dt;
+        if gov_window >= governor.sampling_period_s() {
+            for c in 0..p {
+                node.set_util(c, (util_accum[c] / gov_window).min(1.0));
+            }
+            governor.sample(node)?;
+            util_accum.iter_mut().for_each(|u| *u = 0.0);
+            gov_window = 0.0;
+            cached_kind = None; // frequencies may have moved
+            cached_freq_ghz = node.mean_online_freq_ghz();
+        }
+
+        // (2) Progress work within this tick, possibly crossing phases;
+        // per-core busy time accumulates per sub-slice and the IPMI meter
+        // samples the phase actually active at each beat.
+        let mut budget = dt;
+        while budget > 0.0 && phase_idx < phases.len() {
+            let kind = phases[phase_idx].kind;
+            if cached_kind != Some(kind) {
+                apply_phase_utils(node, app, kind, p);
+                cached_rate = phase_rate(node, app, kind, p);
+                cached_kind = Some(kind);
+            }
+            let rate = cached_rate;
+            let t_finish = if rate > 0.0 { remaining / rate } else { f64::INFINITY };
+            let slice = t_finish.min(budget);
+            if !is_static {
+                for c in 0..p {
+                    util_accum[c] += node.util(c) * slice;
+                }
+            }
+            meter.advance(node, power, t + (dt - budget), slice);
+            freq_time_integral += cached_freq_ghz * slice;
+            if t_finish <= budget {
+                budget -= t_finish;
+                phase_idx += 1;
+                remaining = phases.get(phase_idx).map(|p| p.work).unwrap_or(0.0);
+            } else {
+                remaining -= rate * budget;
+                budget = 0.0;
+            }
+        }
+
+        // Exact end-of-run accounting: the final tick may end mid-budget.
+        t += dt - budget.max(0.0);
+        if budget > 0.0 {
+            break;
+        }
+    }
+
+    let energy = meter.energy_joules();
+    Ok(RunResult {
+        app: app.name.clone(),
+        input,
+        cores: p,
+        governor: governor.name().to_string(),
+        wall_time_s: t,
+        energy_j: energy,
+        mean_freq_ghz: if t > 0.0 { freq_time_integral / t } else { 0.0 },
+        mean_power_w: if t > 0.0 { energy / t } else { 0.0 },
+        n_samples: meter.samples().len(),
+    })
+}
+
+/// Per-phase observed utilization (what the governor sees).
+///
+/// Utilization feeds back on frequency like the kernel's load tracking:
+/// a phase with demand `d` (busy fraction at the ladder maximum) keeps the
+/// core busy for `d * f_max / f` of the wall clock at frequency `f` — the
+/// same work takes longer at a lower clock. This feedback is what lets
+/// ondemand find a mid-ladder equilibrium for partially-stalled apps and
+/// race to max for compute-bound ones.
+fn apply_phase_utils(node: &mut Node, app: &AppProfile, kind: PhaseKind, p: usize) {
+    let f_max = *node.ladder().last().expect("non-empty ladder") as f64;
+    let scaled = |demand: f64, f: crate::config::Mhz| (demand * f_max / f as f64).min(1.0);
+    match kind {
+        PhaseKind::Serial => {
+            node.set_util(0, scaled(1.0, node.freq(0)));
+            for c in 1..p {
+                node.set_util(c, 0.02); // workers sleep during serial sections
+            }
+        }
+        PhaseKind::Parallel => {
+            for c in 0..p {
+                node.set_util(c, scaled(1.0 - app.stall_frac, node.freq(c)));
+            }
+        }
+        PhaseKind::Barrier => {
+            for c in 0..p {
+                node.set_util(c, app.barrier_util);
+            }
+        }
+    }
+}
+
+/// Work consumption rate for the current phase.
+/// Serial/Parallel: core-seconds (at f_ref) per second; Barrier: 1 (wall).
+fn phase_rate(node: &Node, app: &AppProfile, kind: PhaseKind, p: usize) -> f64 {
+    match kind {
+        PhaseKind::Serial => app.speed_ratio(node.freq(0)),
+        PhaseKind::Parallel => {
+            let mut sum = 0.0;
+            for c in 0..p {
+                sum += app.speed_ratio(node.freq(c));
+            }
+            sum / (1.0 + app.sync_rel * (p as f64 - 1.0))
+        }
+        PhaseKind::Barrier => 1.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{NodeSpec, PowerProcessSpec};
+    use crate::governors::{by_name, Userspace};
+    use crate::workloads::app_by_name;
+
+    fn quiet_node() -> (Node, PowerProcess) {
+        let mut spec = NodeSpec::default();
+        spec.power = PowerProcessSpec {
+            noise_w: 0.0,
+            drift_w: 0.0,
+            ..spec.power
+        };
+        let pp = PowerProcess::new(spec.power.clone());
+        (Node::new(spec).unwrap(), pp)
+    }
+
+    fn noiseless_cfg() -> RunConfig {
+        RunConfig {
+            dt: 0.05,
+            work_noise: 0.0,
+            seed: 3,
+            max_sim_s: 1e6,
+        }
+    }
+
+    #[test]
+    fn userspace_run_matches_analytic_time() {
+        let (mut node, pp) = quiet_node();
+        let app = app_by_name("swaptions").unwrap();
+        let cfg = noiseless_cfg();
+        for (f, p) in [(2200u32, 32usize), (1200, 1), (1800, 8)] {
+            let mut gov = Userspace::new(f);
+            let r = run(&mut node, &mut gov, &pp, &app, 2, p, &cfg).unwrap();
+            let want = app.exec_time(f, p, 2);
+            let err = (r.wall_time_s - want).abs() / want;
+            assert!(
+                err < 0.02,
+                "f={f} p={p}: simulated {} vs analytic {want}",
+                r.wall_time_s
+            );
+        }
+    }
+
+    #[test]
+    fn energy_consistent_with_power_envelope() {
+        let (mut node, pp) = quiet_node();
+        let app = app_by_name("fluidanimate").unwrap();
+        let mut gov = Userspace::new(2200);
+        let r = run(&mut node, &mut gov, &pp, &app, 1, 32, &noiseless_cfg()).unwrap();
+        // Mean power must sit between idle floor and the full-load draw.
+        assert!(r.mean_power_w > 200.0 && r.mean_power_w < 420.0, "{}", r.mean_power_w);
+        assert!(r.energy_j > 0.0);
+        assert!((r.energy_j / r.wall_time_s - r.mean_power_w).abs() < 1.0);
+    }
+
+    #[test]
+    fn mean_freq_is_pinned_under_userspace() {
+        let (mut node, pp) = quiet_node();
+        let app = app_by_name("blackscholes").unwrap();
+        let mut gov = Userspace::new(1500);
+        let r = run(&mut node, &mut gov, &pp, &app, 1, 4, &noiseless_cfg()).unwrap();
+        assert!((r.mean_freq_ghz - 1.5).abs() < 1e-6, "{}", r.mean_freq_ghz);
+    }
+
+    #[test]
+    fn ondemand_runs_compute_bound_high() {
+        // swaptions at few cores: parallel work dominates every governor
+        // window, so the blended load keeps ondemand high on the ladder.
+        // (At 32 cores the serial/barrier dips can trap it low — the
+        // erratic behaviour the paper's comparison exploits.)
+        let (mut node, pp) = quiet_node();
+        let app = app_by_name("swaptions").unwrap();
+        let mut gov = by_name("ondemand", &node).unwrap();
+        let r = run(&mut node, &mut gov, &pp, &app, 1, 4, &noiseless_cfg()).unwrap();
+        assert!(
+            r.mean_freq_ghz > 1.85,
+            "ondemand should sit high for compute-bound: {}",
+            r.mean_freq_ghz
+        );
+    }
+
+    #[test]
+    fn ondemand_sits_lower_for_stalled_app() {
+        let (mut node, pp) = quiet_node();
+        let rt = app_by_name("raytrace").unwrap(); // stall 0.25 + long barriers
+        let mut gov = by_name("ondemand", &node).unwrap();
+        let r = run(&mut node, &mut gov, &pp, &rt, 1, 4, &noiseless_cfg()).unwrap();
+        let (mut node2, pp2) = quiet_node();
+        let app = app_by_name("swaptions").unwrap();
+        let mut gov2 = by_name("ondemand", &node2).unwrap();
+        let hi = run(&mut node2, &mut gov2, &pp2, &app, 1, 4, &noiseless_cfg()).unwrap();
+        assert!(
+            r.mean_freq_ghz < 2.0 && r.mean_freq_ghz < hi.mean_freq_ghz,
+            "stalled app should sit lower: raytrace {} vs swaptions {}",
+            r.mean_freq_ghz,
+            hi.mean_freq_ghz
+        );
+    }
+
+    #[test]
+    fn more_cores_faster_for_scalable_app() {
+        let (mut node, pp) = quiet_node();
+        let app = app_by_name("swaptions").unwrap();
+        let cfg = noiseless_cfg();
+        let mut gov = Userspace::new(2200);
+        let t1 = run(&mut node, &mut gov, &pp, &app, 3, 1, &cfg).unwrap().wall_time_s;
+        let t32 = run(&mut node, &mut gov, &pp, &app, 3, 32, &cfg).unwrap().wall_time_s;
+        assert!(t1 / t32 > 20.0, "speedup {}", t1 / t32);
+    }
+
+    #[test]
+    fn work_noise_perturbs_wall_time() {
+        let (mut node, pp) = quiet_node();
+        let app = app_by_name("blackscholes").unwrap();
+        let mut cfg = RunConfig {
+            work_noise: 0.05,
+            ..noiseless_cfg()
+        };
+        let mut gov = Userspace::new(2200);
+        cfg.seed = 10;
+        let a = run(&mut node, &mut gov, &pp, &app, 1, 8, &cfg).unwrap().wall_time_s;
+        cfg.seed = 11;
+        let b = run(&mut node, &mut gov, &pp, &app, 1, 8, &cfg).unwrap().wall_time_s;
+        assert!((a - b).abs() > 1e-6, "different seeds must differ: {a} vs {b}");
+    }
+
+    #[test]
+    fn rejects_bad_core_count() {
+        let (mut node, pp) = quiet_node();
+        let app = app_by_name("swaptions").unwrap();
+        let mut gov = Userspace::new(2200);
+        assert!(run(&mut node, &mut gov, &pp, &app, 1, 0, &noiseless_cfg()).is_err());
+        assert!(run(&mut node, &mut gov, &pp, &app, 1, 64, &noiseless_cfg()).is_err());
+    }
+}

@@ -1,0 +1,165 @@
+//! Cross-module integration tests: the full experiment pipeline on reduced
+//! grids, report generation, persistence, and the paper's qualitative
+//! claims (§4.1/§4.2) as assertions.
+
+use ecopt::config::{CampaignSpec, ExperimentConfig, SvrSpec};
+use ecopt::coordinator::{Coordinator, ExperimentResults};
+use ecopt::report;
+use ecopt::util::tempdir::TempDir;
+use ecopt::workloads::runner::RunConfig;
+
+fn small_cfg(apps: &[&str]) -> ExperimentConfig {
+    ExperimentConfig {
+        campaign: CampaignSpec {
+            freq_step_mhz: 500, // 1200, 1700, 2200
+            core_max: 8,
+            inputs: vec![1, 2, 3],
+            ..Default::default()
+        },
+        svr: SvrSpec {
+            folds: 3,
+            max_iter: 150_000,
+            ..Default::default()
+        },
+        workloads: apps.iter().map(|s| s.to_string()).collect(),
+        ..Default::default()
+    }
+}
+
+fn fast_run() -> RunConfig {
+    RunConfig {
+        dt: 0.25,
+        work_noise: 0.005,
+        seed: 77,
+        max_sim_s: 1e6,
+    }
+}
+
+fn run_pipeline(apps: &[&str]) -> (ExperimentResults, CampaignSpec) {
+    let cfg = small_cfg(apps);
+    let campaign = cfg.campaign.clone();
+    let mut coord = Coordinator::new(cfg).with_run_config(fast_run());
+    (coord.run_all().unwrap(), campaign)
+}
+
+#[test]
+fn pipeline_beats_ondemand_worst_everywhere() {
+    // The paper's strongest claim (§4.2): "In all cases, the method
+    // proposed here outperformed the worst case of the Ondemand governor."
+    let (res, _) = run_pipeline(&["swaptions", "blackscholes"]);
+    for app in &res.apps {
+        for row in &app.comparisons {
+            assert!(
+                row.save_max_pct() > 0.0,
+                "{} input {}: proposed ({:.0} J) did not beat ondemand-worst ({:.0} J)",
+                app.app,
+                row.input,
+                row.proposed.energy_j,
+                row.ondemand_max.energy_j
+            );
+        }
+    }
+}
+
+#[test]
+fn ondemand_worst_is_single_core_for_scalable_apps() {
+    // §4.2: "the energy consumption of the DVFS scheme was larger for
+    // smaller numbers of cores".
+    let (res, _) = run_pipeline(&["swaptions"]);
+    for row in &res.apps[0].comparisons {
+        assert_eq!(
+            row.ondemand_max.cores, 1,
+            "input {}: worst ondemand case should be 1 core",
+            row.input
+        );
+        assert!(row.ondemand_min.cores >= 4, "best case should use many cores");
+    }
+}
+
+#[test]
+fn energy_model_consistency_in_results() {
+    // Every characterization sample: energy ~ mean_power * time.
+    let (res, _) = run_pipeline(&["fluidanimate"]);
+    let app = &res.apps[0];
+    for s in &app.characterization.samples {
+        assert!(s.energy_j > 0.0 && s.time_s > 0.0);
+        let implied = s.energy_j / s.time_s;
+        assert!(
+            (implied - s.mean_power_w).abs() < 10.0,
+            "power bookkeeping off: {} vs {}",
+            implied,
+            s.mean_power_w
+        );
+    }
+    // CV errors are sane for a smooth simulated surface.
+    assert!(app.cv.pae_pct < 15.0, "CV PAE {}", app.cv.pae_pct);
+}
+
+#[test]
+fn report_artifacts_render_and_are_consistent() {
+    let (res, campaign) = run_pipeline(&["swaptions", "raytrace", "fluidanimate", "blackscholes"]);
+    let full = report::full_report(&res, &campaign);
+    assert!(full.contains("Fig 1"));
+    assert!(full.contains("Table 1"));
+    assert!(full.contains("Fig 10"));
+    assert!(full.contains("Headline"));
+    for what in ["1", "2", "3", "4", "5", "f1", "f2", "f6", "f10", "headline"] {
+        let r = report::render(&res, &campaign, what).unwrap();
+        assert!(!r.trim().is_empty(), "{what} empty");
+    }
+    // Table 1 includes all four apps.
+    let t1 = report::table1_cv(&res);
+    for app in ["blackscholes", "fluidanimate", "raytrace", "swaptions"] {
+        assert!(t1.contains(app), "table 1 missing {app}");
+    }
+}
+
+#[test]
+fn results_roundtrip_through_json() {
+    let (res, _) = run_pipeline(&["blackscholes"]);
+    let dir = TempDir::new().unwrap();
+    let path = dir.path().join("results.json");
+    res.save(&path).unwrap();
+    let back = ExperimentResults::load(&path).unwrap();
+    assert_eq!(back.apps.len(), res.apps.len());
+    let (a, b) = (&res.apps[0], &back.apps[0]);
+    assert_eq!(a.characterization.samples.len(), b.characterization.samples.len());
+    assert_eq!(a.svr.beta.len(), b.svr.beta.len());
+    assert_eq!(a.comparisons.len(), b.comparisons.len());
+    assert!((a.cv.mae - b.cv.mae).abs() < 1e-12);
+    // The reloaded SVR predicts identically.
+    let q = [(1700u32, 4usize, 2u32)];
+    assert_eq!(a.svr.predict(&q), b.svr.predict(&q));
+}
+
+#[test]
+fn power_fit_recovers_eq9_shape() {
+    let cfg = small_cfg(&[]);
+    let coord = Coordinator::new(cfg).with_run_config(fast_run());
+    let (obs, model, fit) = coord.fit_power().unwrap();
+    assert_eq!(obs.len(), 3 * 32);
+    // Paper §4.1's inequality: dynamic + socket power < static floor even
+    // at the maximum configuration (this is what makes race-to-idle win).
+    let dynamic = 32.0 * (model.c1 * 2.2f64.powi(3) + model.c2 * 2.2) + model.c4 * 2.0;
+    assert!(
+        dynamic < model.c3,
+        "dynamic {dynamic} should stay below static {}",
+        model.c3
+    );
+    assert!(fit.ape_pct < 2.0, "APE {}", fit.ape_pct);
+}
+
+#[test]
+fn characterization_campaign_is_deterministic() {
+    let (a, _) = run_pipeline(&["swaptions"]);
+    let (b, _) = run_pipeline(&["swaptions"]);
+    let (sa, sb) = (
+        &a.apps[0].characterization.samples,
+        &b.apps[0].characterization.samples,
+    );
+    assert_eq!(sa.len(), sb.len());
+    for (x, y) in sa.iter().zip(sb) {
+        assert_eq!(x.time_s, y.time_s);
+        assert_eq!(x.energy_j, y.energy_j);
+    }
+}

@@ -1,0 +1,298 @@
+//! Property-based invariant tests (in-tree `util::prop` harness): each
+//! property runs many seeded random cases; failures report a replay seed.
+
+use ecopt::config::{mhz_to_ghz, CampaignSpec, NodeSpec, SvrSpec};
+use ecopt::energy::{config_grid, Constraints, EnergyModel};
+use ecopt::governors::{by_name, Governor};
+use ecopt::node::{power::PowerProcess, Node};
+use ecopt::powermodel::{PowerModel, PowerObs};
+use ecopt::sensors::IpmiMeter;
+use ecopt::svr::{smo, SvrModel, TrainSample};
+use ecopt::util::json::{FromJson, Json, ToJson};
+use ecopt::util::prop::property;
+use ecopt::util::stats::trapezoid;
+
+#[test]
+fn prop_power_model_monotone_in_cores_and_freq() {
+    property("power model monotone", 100, |rng| {
+        // Any physically-plausible fit (positive dynamic coefficients)
+        // must be monotone in p and f.
+        let m = PowerModel {
+            c1: rng.range_f64(0.05, 1.0),
+            c2: rng.range_f64(0.1, 3.0),
+            c3: rng.range_f64(50.0, 300.0),
+            c4: rng.range_f64(0.0, 30.0),
+        };
+        let f1 = rng.range_f64(1.2, 2.1);
+        let f2 = f1 + rng.range_f64(0.05, 0.2);
+        let p = 1 + rng.below(32);
+        assert!(m.predict(f2, p, 2) > m.predict(f1, p, 2));
+        assert!(m.predict(f1, p + 1, 2) > m.predict(f1, p, 2));
+    });
+}
+
+#[test]
+fn prop_power_fit_recovers_exact_eq7_data() {
+    property("exact Eq.7 data is recovered", 40, |rng| {
+        let truth = PowerModel {
+            c1: rng.range_f64(0.1, 0.6),
+            c2: rng.range_f64(0.3, 2.0),
+            c3: rng.range_f64(100.0, 250.0),
+            c4: rng.range_f64(2.0, 20.0),
+        };
+        let mut obs = Vec::new();
+        for f in (1200..=2200).step_by(200) {
+            for p in 1..=32usize {
+                let s = if p <= 16 { 1 } else { 2 };
+                obs.push(PowerObs {
+                    f_mhz: f,
+                    cores: p,
+                    sockets: s,
+                    watts: truth.predict(mhz_to_ghz(f), p, s),
+                });
+            }
+        }
+        let (fit, rep) = PowerModel::fit(&obs).unwrap();
+        assert!((fit.c1 - truth.c1).abs() < 1e-6, "c1 {} vs {}", fit.c1, truth.c1);
+        assert!((fit.c3 - truth.c3).abs() < 1e-6);
+        assert!(rep.rmse_w < 1e-6);
+    });
+}
+
+#[test]
+fn prop_governors_never_leave_ladder() {
+    property("governor frequencies stay on the ladder", 30, |rng| {
+        let spec = NodeSpec::default();
+        let ladder = spec.ladder();
+        let mut node = Node::new(spec).unwrap();
+        let names = ["ondemand", "conservative", "performance", "powersave"];
+        let mut gov = by_name(names[rng.below(4)], &node).unwrap();
+        let p = 1 + rng.below(32);
+        node.set_online_cores(p).unwrap();
+        for _ in 0..50 {
+            for c in 0..p {
+                let u = rng.f64();
+                node.set_util(c, u);
+            }
+            gov.sample(&mut node).unwrap();
+            for c in 0..node.total_cores() {
+                assert!(ladder.contains(&node.freq(c)), "off-ladder {}", node.freq(c));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_meter_energy_equals_trapezoid_of_samples() {
+    property("meter energy == trapezoid(samples)", 30, |rng| {
+        let mut spec = NodeSpec::default();
+        spec.power.noise_w = rng.range_f64(0.0, 5.0);
+        spec.power.drift_w = rng.range_f64(0.0, 2.0);
+        let pp = PowerProcess::new(spec.power.clone());
+        let mut node = Node::new(spec).unwrap();
+        node.set_online_cores(1 + rng.below(32)).unwrap();
+        let mut m = IpmiMeter::new(rng.next_u64());
+        m.advance(&node, &pp, 0.0, rng.range_f64(5.0, 60.0));
+        let ts: Vec<f64> = m.samples().iter().map(|s| s.t_s).collect();
+        let ws: Vec<f64> = m.samples().iter().map(|s| s.watts).collect();
+        assert!((m.energy_joules() - trapezoid(&ts, &ws)).abs() < 1e-9);
+        assert!(ws.iter().all(|w| *w >= 0.0));
+    });
+}
+
+#[test]
+fn prop_smo_respects_box_and_equality() {
+    property("SMO duals respect box + sum-to-zero", 25, |rng| {
+        let l = 10 + rng.below(40);
+        let c = rng.range_f64(1.0, 1000.0);
+        let gamma = rng.range_f64(0.05, 2.0);
+        let mut xs = Vec::with_capacity(l);
+        let mut ys = Vec::with_capacity(l);
+        for _ in 0..l {
+            let x = rng.range_f64(0.0, 10.0);
+            xs.push(x);
+            ys.push((x * 0.7).sin() * rng.range_f64(1.0, 5.0) + x);
+        }
+        let k = smo::rbf_kernel_matrix(&xs, &xs, 1, gamma);
+        let sol = smo::solve_epsilon_svr(&k, &ys, c, 0.1, 1e-3, 50_000).unwrap();
+        let sum: f64 = sol.beta.iter().sum();
+        assert!(sum.abs() < 1e-6, "equality constraint violated: {sum}");
+        for b in &sol.beta {
+            assert!(b.abs() <= c + 1e-9, "box violated: {b} > {c}");
+        }
+        assert!(sol.b.is_finite());
+    });
+}
+
+#[test]
+fn prop_svr_predictions_finite_and_bounded() {
+    property("SVR predictions finite, bounded by dual mass", 15, |rng| {
+        let mut samples = Vec::new();
+        for f in (1200u32..=2200).step_by(500) {
+            for p in [1usize, 2, 4, 8] {
+                for n in 1..=2u32 {
+                    samples.push(TrainSample {
+                        f_mhz: f,
+                        cores: p,
+                        input: n,
+                        time_s: rng.range_f64(5.0, 500.0),
+                    });
+                }
+            }
+        }
+        let spec = SvrSpec {
+            c: rng.range_f64(100.0, 20_000.0),
+            gamma: rng.range_f64(0.1, 1.0),
+            epsilon: rng.range_f64(0.01, 1.0),
+            max_iter: 30_000,
+            ..Default::default()
+        };
+        let m = SvrModel::train(&samples, &spec).unwrap();
+        // |f(x)| <= sum |beta| + |b| for an RBF kernel (K in (0, 1]).
+        let bound: f64 = m.beta.iter().map(|b| b.abs()).sum::<f64>() + m.b.abs();
+        for _ in 0..20 {
+            let f = 1200 + (rng.below(11) as u32) * 100;
+            let p = 1 + rng.below(32);
+            let n = 1 + rng.below(5) as u32;
+            let pred = m.predict_one(f, p, n);
+            assert!(pred.is_finite());
+            assert!(pred.abs() <= bound + 1e-6, "pred {pred} exceeds bound {bound}");
+        }
+    });
+}
+
+#[test]
+fn prop_optimizer_argmin_is_true_minimum() {
+    property("grid argmin is the true surface minimum", 10, |rng| {
+        let mut samples = Vec::new();
+        for f in (1200u32..=2200).step_by(250) {
+            for p in [1usize, 4, 8, 16, 32] {
+                for n in 1..=2u32 {
+                    let t = rng.range_f64(50.0, 80.0) * n as f64 * (0.1 + 0.9 / p as f64)
+                        * 2200.0
+                        / f as f64;
+                    samples.push(TrainSample {
+                        f_mhz: f,
+                        cores: p,
+                        input: n,
+                        time_s: t,
+                    });
+                }
+            }
+        }
+        let svr = SvrModel::train(&samples, &SvrSpec::default()).unwrap();
+        let node = NodeSpec::default();
+        let em = EnergyModel::new(PowerModel::paper_eq9(), svr, node.clone());
+        let grid = config_grid(&CampaignSpec::default(), &node);
+        let n = 1 + rng.below(2) as u32;
+        let opt = em.optimize(&grid, n, &Constraints::default()).unwrap();
+        let min = em
+            .surface(&grid, n)
+            .iter()
+            .map(|p| p.energy_j)
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(opt.pred_energy_j, min);
+        assert!(opt.pred_energy_j > 0.0);
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_arbitrary_values() {
+    property("json roundtrips arbitrary trees", 200, |rng| {
+        fn gen(rng: &mut ecopt::util::rng::Rng, depth: usize) -> Json {
+            match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.f64() > 0.5),
+                2 => Json::Num((rng.range_f64(-1e9, 1e9) * 1000.0).round() / 1000.0),
+                3 => Json::Str(format!("s{}-\"quoted\"\n{}", rng.next_u64(), rng.below(100))),
+                4 => Json::Arr((0..rng.below(4)).map(|_| gen(rng, depth - 1)).collect()),
+                _ => Json::obj(
+                    [("a", gen(rng, depth - 1)), ("b", gen(rng, depth - 1))].into(),
+                ),
+            }
+        }
+        let v = gen(rng, 3);
+        let back = Json::parse(&v.dump()).unwrap();
+        assert_eq!(v, back);
+    });
+}
+
+#[test]
+fn prop_node_state_invariants() {
+    property("node hotplug/socket/util invariants", 100, |rng| {
+        let spec = NodeSpec::default();
+        let mut node = Node::new(spec).unwrap();
+        let p = 1 + rng.below(32);
+        node.set_online_cores(p).unwrap();
+        assert_eq!(node.online_cores(), p);
+        let expect_sockets = p.div_ceil(16);
+        assert_eq!(node.active_sockets(), expect_sockets);
+        // utils clamp + offline forcing
+        for _ in 0..10 {
+            let c = rng.below(32);
+            node.set_util(c, rng.range_f64(-2.0, 3.0));
+            let u = node.util(c);
+            assert!((0.0..=1.0).contains(&u));
+            if c >= p {
+                assert_eq!(u, 0.0);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_comparison_row_savings_sign_consistency() {
+    property("savings formulas consistent with energies", 100, |rng| {
+        use ecopt::compare::{ComparisonRow, GovernorRun};
+        let run = |e: f64| GovernorRun {
+            cores: 1,
+            mean_freq_ghz: 2.0,
+            energy_j: e,
+            time_s: 1.0,
+        };
+        let prop = rng.range_f64(10.0, 1000.0);
+        let lo = rng.range_f64(10.0, 1000.0);
+        let hi = lo * rng.range_f64(1.0, 20.0);
+        let row = ComparisonRow {
+            app: "x".into(),
+            input: 1,
+            ondemand_min: run(lo),
+            ondemand_max: run(hi),
+            proposed_f_mhz: 2200,
+            proposed_cores: 32,
+            proposed: run(prop),
+            ondemand_all: vec![],
+        };
+        assert!(row.save_max_pct() >= row.save_min_pct() - 1e-9);
+        assert_eq!(row.save_min_pct() > 0.0, lo > prop);
+        assert_eq!(row.save_max_pct() > 0.0, hi > prop);
+    });
+}
+
+#[test]
+fn prop_persisted_models_predict_identically() {
+    property("SvrModel JSON roundtrip preserves predictions", 10, |rng| {
+        let mut samples = Vec::new();
+        for f in (1200u32..=2200).step_by(500) {
+            for p in [1usize, 2, 8, 16] {
+                samples.push(TrainSample {
+                    f_mhz: f,
+                    cores: p,
+                    input: 1,
+                    time_s: rng.range_f64(10.0, 300.0),
+                });
+            }
+        }
+        let m = SvrModel::train(&samples, &SvrSpec { max_iter: 20_000, ..Default::default() })
+            .unwrap();
+        let back = SvrModel::from_json(&Json::parse(&m.to_json().dump()).unwrap()).unwrap();
+        for _ in 0..5 {
+            let q = (
+                1200 + (rng.below(11) as u32) * 100,
+                1 + rng.below(32),
+                1 + rng.below(5) as u32,
+            );
+            assert_eq!(m.predict(&[q]), back.predict(&[q]));
+        }
+    });
+}

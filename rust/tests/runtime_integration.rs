@@ -1,0 +1,233 @@
+//! PJRT runtime integration tests: load the real AOT artifacts and verify
+//! the numerics of every compute kernel through invariants that need no
+//! oracle (put-call parity, zero-vol determinism, all-miss frames, SPH
+//! self-density), plus the full `svr_energy` decision-path artifact
+//! against the pure-Rust energy surface.
+//!
+//! These tests need `make artifacts` to have run; they skip (pass
+//! trivially, with a note) when `artifacts/` is absent so `cargo test`
+//! works standalone.
+
+use std::path::Path;
+
+use ecopt::config::{CampaignSpec, NodeSpec, SvrSpec};
+use ecopt::energy::{config_grid, Constraints, EnergyModel};
+use ecopt::powermodel::PowerModel;
+use ecopt::runtime::{PjrtRuntime, TensorF32};
+use ecopt::svr::{SvrModel, TrainSample};
+
+fn runtime() -> Option<PjrtRuntime> {
+    let dir = Path::new("artifacts");
+    match PjrtRuntime::cpu(dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP: artifacts not available ({e}) — run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_covers_all_models() {
+    let Some(rt) = runtime() else { return };
+    for name in [
+        "svr_energy",
+        "blackscholes",
+        "swaptions",
+        "raytrace",
+        "fluidanimate",
+    ] {
+        assert!(rt.manifest().get(name).is_ok(), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn blackscholes_put_call_parity() {
+    let Some(mut rt) = runtime() else { return };
+    // Same parameters, call vs put: C - P = S - K e^{-rT}.
+    let b = 4096;
+    let mut call_rows = Vec::with_capacity(b * 6);
+    for i in 0..b {
+        let x = i as f32 / b as f32;
+        call_rows.extend_from_slice(&[
+            60.0 + 80.0 * x,
+            90.0 + 20.0 * x,
+            0.01 + 0.04 * x,
+            0.15 + 0.4 * x,
+            0.25 + 2.0 * x,
+            1.0,
+        ]);
+    }
+    let mut put_rows = call_rows.clone();
+    for i in 0..b {
+        put_rows[i * 6 + 5] = 0.0;
+    }
+    let c = rt
+        .execute("blackscholes", &[TensorF32::new(vec![b, 6], call_rows.clone()).unwrap()])
+        .unwrap();
+    let p = rt
+        .execute("blackscholes", &[TensorF32::new(vec![b, 6], put_rows).unwrap()])
+        .unwrap();
+    for i in 0..b {
+        let (s, k, r, t) = (
+            call_rows[i * 6],
+            call_rows[i * 6 + 1],
+            call_rows[i * 6 + 2],
+            call_rows[i * 6 + 4],
+        );
+        let lhs = c[0].data[i] - p[0].data[i];
+        let rhs = s - k * (-r * t).exp();
+        assert!(
+            (lhs - rhs).abs() < 0.05,
+            "parity violated at {i}: {lhs} vs {rhs}"
+        );
+    }
+}
+
+#[test]
+fn swaptions_zero_vol_is_deterministic() {
+    let Some(mut rt) = runtime() else { return };
+    let normals = TensorF32::new(vec![2048, 16], vec![0.7; 2048 * 16]).unwrap();
+    let (r0, strike, dt) = (0.08f32, 0.05f32, 0.25f32);
+    let params = TensorF32::vec1(&[r0, 0.0, strike, dt]);
+    let out = rt.execute("swaptions", &[normals, params]).unwrap();
+    let want = (r0 - strike).max(0.0) * (-r0 * 16.0 * dt).exp();
+    assert!(
+        (out[0].data[0] - want).abs() < 1e-5,
+        "price {} vs analytic {want}",
+        out[0].data[0]
+    );
+    // every per-path payoff identical
+    for v in &out[1].data {
+        assert!((v - want).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn raytrace_miss_everything_is_black() {
+    let Some(mut rt) = runtime() else { return };
+    let mut rays = vec![0.0f32; 4096 * 6];
+    for i in 0..4096 {
+        rays[i * 6 + 5] = 1.0; // all rays straight +z from origin
+    }
+    // all spheres parked far behind the camera
+    let mut spheres = Vec::new();
+    for _ in 0..16 {
+        spheres.extend_from_slice(&[0.0, 0.0, -1000.0, 0.5]);
+    }
+    let out = rt
+        .execute(
+            "raytrace",
+            &[
+                TensorF32::new(vec![4096, 6], rays).unwrap(),
+                TensorF32::new(vec![16, 4], spheres).unwrap(),
+                TensorF32::vec1(&[0.0, 1.0, 0.0]),
+            ],
+        )
+        .unwrap();
+    assert!(out[0].data.iter().all(|v| *v == 0.0));
+}
+
+#[test]
+fn fluidanimate_isolated_particles_self_density() {
+    let Some(mut rt) = runtime() else { return };
+    // Particles far apart: density = h^6 exactly (self term only).
+    let mut pos = Vec::with_capacity(512 * 3);
+    for i in 0..512 {
+        pos.extend_from_slice(&[i as f32 * 100.0, 0.0, 0.0]);
+    }
+    let h = 0.3f32;
+    let out = rt
+        .execute(
+            "fluidanimate",
+            &[
+                TensorF32::new(vec![512, 3], pos).unwrap(),
+                TensorF32::zeros(vec![512, 3]),
+                TensorF32::vec1(&[h, 1.5, 0.005, 0.99]),
+            ],
+        )
+        .unwrap();
+    let want = h.powi(6);
+    for rho in &out[2].data {
+        assert!((rho - want).abs() / want < 1e-3, "rho {rho} vs {want}");
+    }
+}
+
+#[test]
+fn svr_energy_artifact_matches_rust_surface() {
+    let Some(mut rt) = runtime() else { return };
+    // Train a small real SVR, then compare the PJRT energy surface with
+    // the pure-Rust evaluation point by point.
+    let mut samples = Vec::new();
+    for fi in 0..6 {
+        let f = 1200 + fi * 200;
+        for p in [1usize, 2, 4, 8, 16, 32] {
+            for n in 1..=3u32 {
+                let t = 150.0 * n as f64 * (0.08 + 0.92 / p as f64) * 2200.0 / f as f64;
+                samples.push(TrainSample {
+                    f_mhz: f,
+                    cores: p,
+                    input: n,
+                    time_s: t,
+                });
+            }
+        }
+    }
+    let svr = SvrModel::train(&samples, &SvrSpec::default()).unwrap();
+    let node = NodeSpec::default();
+    let em = EnergyModel::new(PowerModel::paper_eq9(), svr, node.clone());
+    let grid = config_grid(&CampaignSpec::default(), &node);
+
+    // Full surface agreement (times within f32 tolerance).
+    let inputs = em.artifact_inputs(&grid, 2).unwrap();
+    let outs = rt.execute("svr_energy", &inputs).unwrap();
+    let rust_surface = em.surface(&grid, 2);
+    for (i, pt) in rust_surface.iter().enumerate() {
+        let t_pjrt = outs[0].data[i] as f64;
+        assert!(
+            (t_pjrt - pt.pred_time_s).abs() < 0.05 * pt.pred_time_s.max(1.0),
+            "time mismatch at {i}: pjrt {t_pjrt} vs rust {}",
+            pt.pred_time_s
+        );
+    }
+
+    // And the deployed argmin agrees with the pure-Rust argmin.
+    let via_rt = em
+        .optimize_via_runtime(&mut rt, &grid, 2, &Constraints::default())
+        .unwrap();
+    let via_rs = em.optimize(&grid, 2, &Constraints::default()).unwrap();
+    assert_eq!(via_rt.f_mhz, via_rs.f_mhz, "frequency argmin disagrees");
+    assert_eq!(via_rt.cores, via_rs.cores, "core-count argmin disagrees");
+}
+
+#[test]
+fn execute_rejects_wrong_shapes() {
+    let Some(mut rt) = runtime() else { return };
+    let bad = TensorF32::zeros(vec![7, 6]);
+    assert!(rt.execute("blackscholes", &[bad]).is_err());
+    assert!(rt
+        .execute("blackscholes", &[TensorF32::zeros(vec![4096, 6]), TensorF32::zeros(vec![1])])
+        .is_err());
+}
+
+#[test]
+fn repeated_execution_is_stable() {
+    let Some(mut rt) = runtime() else { return };
+    let input = TensorF32::new(
+        vec![4096, 6],
+        (0..4096 * 6)
+            .map(|i| match i % 6 {
+                0 => 100.0,
+                1 => 95.0,
+                2 => 0.02,
+                3 => 0.3,
+                4 => 1.0,
+                _ => 1.0,
+            })
+            .collect(),
+    )
+    .unwrap();
+    let a = rt.execute("blackscholes", &[input.clone()]).unwrap();
+    let b = rt.execute("blackscholes", &[input]).unwrap();
+    assert_eq!(a[0].data, b[0].data, "PJRT execution must be deterministic");
+}
