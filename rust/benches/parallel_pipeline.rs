@@ -1,0 +1,84 @@
+//! Parallel experiment engine: 1-thread vs N-thread wall time for the
+//! characterization campaign and the end-to-end small-grid pipeline
+//! (ISSUE 1 acceptance: ≥ 2x pipeline speedup on a 4-core host).
+//!
+//! The outputs are bit-identical across thread counts (asserted here too,
+//! cheaply, via sample counts — the strict byte-level check lives in
+//! `tests/determinism.rs`); only wall time may differ.
+
+use ecopt::characterize::characterize;
+use ecopt::config::{CampaignSpec, ExperimentConfig, NodeSpec, SvrSpec};
+use ecopt::coordinator::Coordinator;
+use ecopt::util::bench::Bench;
+use ecopt::workloads::app_by_name;
+use ecopt::workloads::runner::RunConfig;
+
+fn main() {
+    let mut b = Bench::new("parallel_pipeline");
+    let hw = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4);
+
+    // Characterization fan-out: 6 freqs x 16 cores x 2 inputs = 192 points.
+    let node = NodeSpec::default();
+    let campaign = CampaignSpec {
+        freq_step_mhz: 200,
+        core_max: 16,
+        inputs: vec![1, 2],
+        ..Default::default()
+    };
+    let app = app_by_name("swaptions").unwrap();
+    for threads in [1usize, hw] {
+        let rc = RunConfig {
+            dt: 0.25,
+            threads,
+            ..Default::default()
+        };
+        b.bench(&format!("characterize_192pts_{threads}t"), || {
+            let c = characterize(&node, &campaign, &app, &rc).unwrap();
+            assert_eq!(c.samples.len(), 192);
+        });
+    }
+
+    // End-to-end small-grid pipeline (stress fit + characterize + SVR/CV
+    // + optimize + governor comparison).
+    let cfg = ExperimentConfig {
+        campaign: CampaignSpec {
+            freq_step_mhz: 500,
+            core_max: 8,
+            inputs: vec![1, 2],
+            ..Default::default()
+        },
+        svr: SvrSpec {
+            folds: 3,
+            ..Default::default()
+        },
+        workloads: vec!["swaptions".into()],
+        ..Default::default()
+    };
+    for threads in [1usize, hw] {
+        let rc = RunConfig {
+            dt: 0.25,
+            threads,
+            ..Default::default()
+        };
+        b.bench(&format!("pipeline_small_{threads}t"), || {
+            let mut coord = Coordinator::new(cfg.clone()).with_run_config(rc.clone());
+            let res = coord.run_all().unwrap();
+            assert_eq!(res.apps.len(), 1);
+        });
+    }
+
+    // Headline speedups (mean over mean).
+    let r = b.results();
+    if r.len() == 4 {
+        let speedup = |a: usize, b: usize| {
+            r[a].mean.as_secs_f64() / r[b].mean.as_secs_f64().max(1e-12)
+        };
+        println!(
+            "characterize speedup 1t -> {hw}t: {:.2}x",
+            speedup(0, 1)
+        );
+        println!("pipeline    speedup 1t -> {hw}t: {:.2}x", speedup(2, 3));
+    }
+}

@@ -8,14 +8,20 @@
 //! worker owns its own simulated node — they are independent machines).
 
 use crate::config::{CampaignSpec, Mhz, NodeSpec};
-use crate::util::json::{FromJson, Json, ToJson};
 use crate::governors::Userspace;
 use crate::node::power::PowerProcess;
 use crate::node::Node;
 use crate::svr::TrainSample;
+use crate::util::json::{FromJson, Json, ToJson};
+use crate::util::pool::WorkerPool;
+use crate::util::rng::Rng;
 use crate::workloads::runner::{run, RunConfig};
 use crate::workloads::AppProfile;
 use crate::{Error, Result};
+
+/// Seed-domain separator: characterization RNG streams never collide with
+/// the comparison harness streams derived from the same base seed.
+const CHAR_SEED_DOMAIN: u64 = 0xC4A2_AC7E_0000_0001;
 
 /// One measured campaign point (a [`TrainSample`] plus the energy ground
 /// truth the SVR never sees but Figs. 6–9 compare against).
@@ -112,57 +118,35 @@ pub fn characterize(
             }
         }
     }
+    // Canonical (f, p, n) layout regardless of the config's input order —
+    // the sample order (and therefore every per-point seed) depends only
+    // on the grid itself.
+    points.sort_unstable();
 
-    let workers = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
-        .min(points.len().max(1));
-    let chunk = points.len().div_ceil(workers);
-
-    let results: Vec<Result<Vec<CharSample>>> = std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for (w, slice) in points.chunks(chunk).enumerate() {
-            let node_spec = node_spec.clone();
-            let app = app.clone();
-            let base_cfg = run_cfg.clone();
-            handles.push(scope.spawn(move || -> Result<Vec<CharSample>> {
-                // Each worker owns an independent simulated node.
-                let mut node = Node::new(node_spec.clone())?;
-                let power = PowerProcess::new(node_spec.power.clone());
-                let mut out = Vec::with_capacity(slice.len());
-                for (i, &(f, p, n)) in slice.iter().enumerate() {
-                    let mut gov = Userspace::new(f);
-                    let cfg = RunConfig {
-                        // Unique deterministic seed per grid point.
-                        seed: base_cfg
-                            .seed
-                            .wrapping_mul(0x100000001B3)
-                            .wrapping_add((w * 1_000_000 + i) as u64),
-                        ..base_cfg.clone()
-                    };
-                    let r = run(&mut node, &mut gov, &power, &app, n, p, &cfg)?;
-                    out.push(CharSample {
-                        f_mhz: f,
-                        cores: p,
-                        input: n,
-                        time_s: r.wall_time_s,
-                        energy_j: r.energy_j,
-                        mean_power_w: r.mean_power_w,
-                    });
-                }
-                Ok(out)
-            }));
-        }
-        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
-    });
-
-    let mut samples = Vec::with_capacity(points.len());
-    for r in results {
-        samples.extend(r?);
-    }
-    // Restore grid order (threads may interleave chunks, but chunks are
-    // contiguous so a sort by (f, p, n) gives the canonical layout).
-    samples.sort_by_key(|s| (s.f_mhz, s.cores, s.input));
+    // Fan the grid out over the worker pool. Each point gets a fresh
+    // simulated node (independent machines) and an RNG stream derived from
+    // its *global grid index*, so the measured numbers are bit-identical
+    // for any thread count — the pool returns results in grid order.
+    let pool = WorkerPool::new(run_cfg.threads);
+    let samples: Vec<CharSample> = pool.try_run(points.len(), |i| {
+        let (f, p, n) = points[i];
+        let mut node = Node::new(node_spec.clone())?;
+        let power = PowerProcess::new(node_spec.power.clone());
+        let mut gov = Userspace::new(f);
+        let cfg = RunConfig {
+            seed: Rng::split_seed(run_cfg.seed ^ CHAR_SEED_DOMAIN, i as u64),
+            ..run_cfg.clone()
+        };
+        let r = run(&mut node, &mut gov, &power, app, n, p, &cfg)?;
+        Ok(CharSample {
+            f_mhz: f,
+            cores: p,
+            input: n,
+            time_s: r.wall_time_s,
+            energy_j: r.energy_j,
+            mean_power_w: r.mean_power_w,
+        })
+    })?;
     Ok(Characterization {
         app: app.name.clone(),
         samples,
@@ -192,6 +176,7 @@ mod tests {
             work_noise: 0.0,
             seed: 9,
             max_sim_s: 1e6,
+            ..Default::default()
         }
     }
 
@@ -263,6 +248,29 @@ mod tests {
         for (x, y) in a.samples.iter().zip(&b.samples) {
             assert_eq!(x.time_s, y.time_s);
             assert_eq!(x.energy_j, y.energy_j);
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        // The determinism contract: 1 worker and 4 workers must measure
+        // bit-identical campaigns (noise included).
+        let app = app_by_name("raytrace").unwrap();
+        let mut small = tiny_campaign();
+        small.core_max = 4;
+        let noisy = |threads: usize| RunConfig {
+            work_noise: 0.02,
+            threads,
+            ..fast_cfg()
+        };
+        let seq = characterize(&NodeSpec::default(), &small, &app, &noisy(1)).unwrap();
+        let par = characterize(&NodeSpec::default(), &small, &app, &noisy(4)).unwrap();
+        assert_eq!(seq.samples.len(), par.samples.len());
+        for (x, y) in seq.samples.iter().zip(&par.samples) {
+            assert_eq!((x.f_mhz, x.cores, x.input), (y.f_mhz, y.cores, y.input));
+            assert_eq!(x.time_s, y.time_s);
+            assert_eq!(x.energy_j, y.energy_j);
+            assert_eq!(x.mean_power_w, y.mean_power_w);
         }
     }
 }

@@ -7,13 +7,25 @@
 //! userspace + hotplug); report the paper's Save-Min / Save-Max columns.
 
 use crate::config::{Mhz, NodeSpec};
-use crate::energy::{EnergyModel, Constraints};
+use crate::energy::{Constraints, EnergyModel};
 use crate::governors::{Ondemand, Userspace};
 use crate::node::power::PowerProcess;
 use crate::node::Node;
+use crate::util::pool::WorkerPool;
+use crate::util::rng::Rng;
 use crate::workloads::runner::{run, RunConfig, RunResult};
 use crate::workloads::AppProfile;
 use crate::{Error, Result};
+
+/// Seed-domain separator for comparison-harness RNG streams (disjoint
+/// from the characterization campaign's streams).
+const CMP_SEED_DOMAIN: u64 = 0xC4A2_AC7E_0000_0002;
+
+/// Stream id for one governor run: the input size tags the high bits so
+/// every (input, sweep-slot) pair draws decorrelated noise.
+fn cmp_stream(input: u32, slot: u64) -> u64 {
+    ((input as u64) << 32) | slot
+}
 
 /// The core counts the paper sweeps for the ondemand baseline.
 pub fn ondemand_core_counts(total: usize) -> Vec<usize> {
@@ -88,20 +100,24 @@ pub fn compare_one(
     grid: &[(Mhz, usize)],
     run_cfg: &RunConfig,
 ) -> Result<ComparisonRow> {
-    let mut node = Node::new(node_spec.clone())?;
-    let power = PowerProcess::new(node_spec.power.clone());
-
-    // --- ondemand sweep over the paper's core counts.
-    let mut runs = Vec::new();
-    for (i, p) in ondemand_core_counts(node_spec.total_cores()).into_iter().enumerate() {
+    // --- ondemand sweep over the paper's core counts, fanned out over the
+    // worker pool. Every run boots a fresh node (the paper reboots into
+    // each configuration) and draws noise from its own sweep-slot stream,
+    // so the sweep is bit-identical for any thread count.
+    let counts = ondemand_core_counts(node_spec.total_cores());
+    let pool = WorkerPool::new(run_cfg.threads);
+    let runs: Vec<GovernorRun> = pool.try_run(counts.len(), |i| {
+        let p = counts[i];
+        let mut node = Node::new(node_spec.clone())?;
+        let power = PowerProcess::new(node_spec.power.clone());
         let mut gov = Ondemand::new(node.ladder());
         let cfg = RunConfig {
-            seed: run_cfg.seed.wrapping_add(i as u64 * 7919),
+            seed: Rng::split_seed(run_cfg.seed ^ CMP_SEED_DOMAIN, cmp_stream(input, i as u64)),
             ..run_cfg.clone()
         };
         let r = run(&mut node, &mut gov, &power, app, input, p, &cfg)?;
-        runs.push(GovernorRun::from(&r));
-    }
+        Ok(GovernorRun::from(&r))
+    })?;
     let min = runs
         .iter()
         .min_by(|a, b| a.energy_j.total_cmp(&b.energy_j))
@@ -113,11 +129,14 @@ pub fn compare_one(
         .ok_or_else(|| Error::Data("empty ondemand sweep".into()))?
         .clone();
 
-    // --- proposed configuration: model argmin, actuated via userspace.
+    // --- proposed configuration: model argmin, actuated via userspace on
+    // a fresh node.
     let opt = model.optimize(grid, input, &Constraints::default())?;
+    let mut node = Node::new(node_spec.clone())?;
+    let power = PowerProcess::new(node_spec.power.clone());
     let mut gov = Userspace::new(opt.f_mhz);
     let cfg = RunConfig {
-        seed: run_cfg.seed.wrapping_add(0xBEEF),
+        seed: Rng::split_seed(run_cfg.seed ^ CMP_SEED_DOMAIN, cmp_stream(input, 0xBEEF)),
         ..run_cfg.clone()
     };
     let r = run(&mut node, &mut gov, &power, app, input, opt.cores, &cfg)?;

@@ -1,15 +1,25 @@
-//! Experiment coordinator (L3 glue, system S14): the end-to-end pipeline
-//! that turns a config into the paper's results —
+//! Experiment coordinator (L3 glue, system S14): the **parallel experiment
+//! engine** that turns a config into the paper's results —
 //!
-//! 1. **fit**: stress campaign → Eq. 7 power model (§3.3);
-//! 2. **characterize**: per-app campaign over the (f, p, N) grid (§3.4),
-//!    apps dispatched to a worker pool;
-//! 3. **model**: 90/10 split, SVR training, 10-fold CV (Table 1);
+//! 1. **fit**: stress campaign → Eq. 7 power model (§3.3) — the 352 stress
+//!    tests fan out over the worker pool;
+//! 2. **characterize**: per-app campaign over the (f, p, N) grid (§3.4) —
+//!    every grid point is an independent pooled job;
+//! 3. **model**: 90/10 split, SVR training, 10-fold CV (Table 1) — apps
+//!    train concurrently;
 //! 4. **optimize**: energy-surface argmin per (app, input) — through the
 //!    PJRT `svr_energy` artifact when a runtime is supplied, pure Rust
 //!    otherwise;
 //! 5. **compare**: ondemand sweep vs the proposed configuration
-//!    (Tables 2–5, Fig. 10).
+//!    (Tables 2–5, Fig. 10) — each sweep fans its governor runs out.
+//!
+//! # Determinism contract
+//!
+//! Every pooled job seeds its RNG from its job index via the split-seed
+//! API (`util::rng::Rng::split_seed`) and results are merged in job-index
+//! order, so [`Coordinator::run_all`] produces **byte-identical**
+//! serialized [`ExperimentResults`] for any `RunConfig::threads` value —
+//! locked down by `tests/determinism.rs`.
 //!
 //! All stages are cacheable to JSON so examples and benches can re-use
 //! expensive phases.
@@ -24,6 +34,7 @@ use crate::powermodel::{stress_campaign, FitReport, PowerModel, PowerObs, Stress
 use crate::runtime::PjrtRuntime;
 use crate::svr::{cross_validate, train_test_split, CvReport, SvrModel};
 use crate::util::json::{FromJson, ToJson};
+use crate::util::pool::WorkerPool;
 use crate::util::{mae, pae};
 use crate::workloads::runner::RunConfig;
 use crate::workloads::{app_by_name, parsec_apps, AppProfile};
@@ -113,13 +124,14 @@ impl Coordinator {
         }
     }
 
-    /// Stage 1: stress campaign + Eq. 7 fit.
+    /// Stage 1: stress campaign + Eq. 7 fit (tests fan out over the pool).
     pub fn fit_power(&self) -> Result<(Vec<PowerObs>, PowerModel, FitReport)> {
         let stress = StressConfig {
             freq_min_mhz: self.cfg.campaign.freq_min_mhz,
             freq_max_mhz: self.cfg.campaign.freq_max_mhz,
             freq_step_mhz: self.cfg.campaign.freq_step_mhz,
             seed: self.cfg.campaign.seed ^ 0xF00D,
+            threads: self.run_cfg.threads,
             ..Default::default()
         };
         let obs = stress_campaign(&self.cfg.node, &stress)?;
@@ -174,7 +186,10 @@ impl Coordinator {
         Ok(rows)
     }
 
-    /// Run the whole pipeline.
+    /// Run the whole pipeline through the parallel experiment engine.
+    ///
+    /// Output is byte-identical for any `RunConfig::threads` value (see
+    /// the module docs for the determinism contract).
     pub fn run_all(&mut self) -> Result<ExperimentResults> {
         let (obs, power_model, power_fit) = self.fit_power()?;
         crate::info!(
@@ -188,20 +203,62 @@ impl Coordinator {
         );
 
         let apps = self.workloads()?;
-        let mut results = Vec::new();
-        let mut all_rows = Vec::new();
+        let pool = WorkerPool::new(self.run_cfg.threads);
+
+        // Stage 2: characterization campaigns. Each campaign fans its grid
+        // points out over the pool internally, so apps run back-to-back
+        // with the hardware saturated throughout.
+        let mut chars: Vec<Characterization> = Vec::with_capacity(apps.len());
         for app in &apps {
-            crate::info!("{}: characterizing + training", app.name);
-            let (ch, svr, cv, test_mae, test_pae) = self.model_app(app)?;
-            let comparisons = self.compare_app(app, &svr, &power_model)?;
+            crate::info!(
+                "{}: characterizing ({} grid points, {} workers)",
+                app.name,
+                self.cfg.campaign.sample_count(),
+                pool.threads()
+            );
+            chars.push(characterize(&self.cfg.node, &self.cfg.campaign, app, &self.run_cfg)?);
+        }
+
+        // Stage 3: split + SVR training + cross-validation, one pooled job
+        // per app (SMO itself is single-threaded and deterministic).
+        struct Modeled {
+            svr: SvrModel,
+            cv: CvReport,
+            test_mae: f64,
+            test_pae: f64,
+        }
+        let svr_spec = &self.cfg.svr;
+        let modeled: Vec<Modeled> = pool.try_run(apps.len(), |i| {
+            let samples = chars[i].train_samples();
+            let (train, test) = train_test_split(&samples, svr_spec);
+            let svr = SvrModel::train(&train, svr_spec)?;
+            let cv = cross_validate(&samples, svr_spec)?;
+            let queries: Vec<_> = test.iter().map(|s| (s.f_mhz, s.cores, s.input)).collect();
+            let pred = svr.predict(&queries);
+            let truth: Vec<f64> = test.iter().map(|s| s.time_s).collect();
+            Ok(Modeled {
+                svr,
+                cv,
+                test_mae: mae(&truth, &pred),
+                test_pae: pae(&truth, &pred),
+            })
+        })?;
+
+        // Stages 4+5: optimize + governor comparison per (app, input) —
+        // `compare_app` does the PJRT cross-check and each row's ondemand
+        // sweep fans out inside `compare_one`.
+        let mut results = Vec::with_capacity(apps.len());
+        let mut all_rows = Vec::new();
+        for ((app, ch), m) in apps.iter().zip(chars).zip(modeled) {
+            let comparisons = self.compare_app(app, &m.svr, &power_model)?;
             all_rows.extend(comparisons.clone());
             results.push(AppResults {
                 app: app.name.clone(),
                 characterization: ch,
-                svr,
-                cv,
-                test_mae,
-                test_pae_pct: test_pae,
+                svr: m.svr,
+                cv: m.cv,
+                test_mae: m.test_mae,
+                test_pae_pct: m.test_pae,
                 comparisons,
             });
         }
@@ -249,6 +306,7 @@ mod tests {
             work_noise: 0.005,
             seed: 42,
             max_sim_s: 1e6,
+            ..Default::default()
         });
         let res = coord.run_all().unwrap();
         assert_eq!(res.apps.len(), 1);
@@ -293,6 +351,7 @@ mod tests {
             work_noise: 0.0,
             seed: 7,
             max_sim_s: 1e6,
+            ..Default::default()
         });
         let res = coord.run_all().unwrap();
         let dir = crate::util::tempdir::TempDir::new().unwrap();

@@ -20,6 +20,11 @@ use crate::{Error, Result};
 pub const MAX_SV: usize = 2048;
 pub const GRID_POINTS: usize = 352;
 
+/// Query-block width of the batched energy-grid evaluator: a block of
+/// scaled grid queries (3 f64 each) stays L1-resident while the support
+/// set streams through once per block.
+pub const ENERGY_QUERY_BLOCK: usize = 64;
+
 /// One point of the energy surface.
 #[derive(Debug, Clone, Copy)]
 pub struct EnergyPoint {
@@ -94,23 +99,40 @@ impl EnergyModel {
     }
 
     /// Evaluate the full energy surface for input size `n` (pure Rust).
+    ///
+    /// This is the **batched** evaluator: all grid points are scored
+    /// against all support vectors in one cache-blocked pass
+    /// (`smo::predict_blocked`) instead of point at a time. Results are
+    /// bit-identical to [`EnergyModel::surface_pointwise`].
     pub fn surface(&self, grid: &[(Mhz, usize)], n: u32) -> Vec<EnergyPoint> {
         let queries: Vec<(Mhz, usize, u32)> = grid.iter().map(|(f, p)| (*f, *p, n)).collect();
-        let times = self.svr.predict(&queries);
+        let times = self.svr.predict_blocked(&queries, ENERGY_QUERY_BLOCK);
         grid.iter()
             .zip(times)
-            .map(|((f, p), t)| {
-                let t = t.max(1e-3); // same clamp as the L2 model
-                let w = self.power.predict(mhz_to_ghz(*f), *p, self.sockets_for(*p));
-                EnergyPoint {
-                    f_mhz: *f,
-                    cores: *p,
-                    pred_time_s: t,
-                    power_w: w,
-                    energy_j: w * t,
-                }
-            })
+            .map(|((f, p), t)| self.point(*f, *p, t))
             .collect()
+    }
+
+    /// Reference point-at-a-time evaluation of the energy surface (one
+    /// SVR query per grid point). Kept as the oracle the property suite
+    /// compares the batched path against.
+    pub fn surface_pointwise(&self, grid: &[(Mhz, usize)], n: u32) -> Vec<EnergyPoint> {
+        grid.iter()
+            .map(|(f, p)| self.point(*f, *p, self.svr.predict_one(*f, *p, n)))
+            .collect()
+    }
+
+    /// Assemble one energy point from a predicted time.
+    fn point(&self, f: Mhz, p: usize, t: f64) -> EnergyPoint {
+        let t = t.max(1e-3); // same clamp as the L2 model
+        let w = self.power.predict(mhz_to_ghz(f), p, self.sockets_for(p));
+        EnergyPoint {
+            f_mhz: f,
+            cores: p,
+            pred_time_s: t,
+            power_w: w,
+            energy_j: w * t,
+        }
     }
 
     /// Grid-argmin of the energy surface subject to constraints.
@@ -297,6 +319,23 @@ mod tests {
         let opt = m.optimize(&grid, 2, &Constraints::default()).unwrap();
         assert!(opt.cores >= 24, "cores {}", opt.cores);
         assert!(opt.f_mhz >= 1900, "f {}", opt.f_mhz);
+    }
+
+    #[test]
+    fn batched_surface_matches_pointwise_bitwise() {
+        let m = model();
+        let grid = config_grid(&CampaignSpec::default(), &NodeSpec::default());
+        for n in 1..=3u32 {
+            let batched = m.surface(&grid, n);
+            let pointwise = m.surface_pointwise(&grid, n);
+            assert_eq!(batched.len(), pointwise.len());
+            for (a, b) in batched.iter().zip(&pointwise) {
+                assert_eq!((a.f_mhz, a.cores), (b.f_mhz, b.cores));
+                assert_eq!(a.pred_time_s, b.pred_time_s, "time at ({}, {})", a.f_mhz, a.cores);
+                assert_eq!(a.power_w, b.power_w);
+                assert_eq!(a.energy_j, b.energy_j);
+            }
+        }
     }
 
     #[test]

@@ -1,57 +1,85 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-implemented `Display`/`Error` — the offline
+//! image has no `thiserror`).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error for all ecopt subsystems.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Configuration parsing / validation problems.
-    #[error("config error: {0}")]
     Config(String),
 
     /// A requested frequency is not on the node's DVFS ladder.
-    #[error("frequency {0} MHz not on the DVFS ladder")]
     BadFrequency(u32),
 
     /// A requested core count exceeds the node's capacity or is zero.
-    #[error("invalid core count {requested} (node has {available})")]
     BadCoreCount { requested: usize, available: usize },
 
     /// An unknown workload name was requested.
-    #[error("unknown workload '{0}'")]
     UnknownWorkload(String),
 
     /// An unknown governor name was requested.
-    #[error("unknown governor '{0}'")]
     UnknownGovernor(String),
 
     /// Characterization / training data problems (empty sets, NaNs...).
-    #[error("data error: {0}")]
     Data(String),
 
     /// SVR training failed to converge or was given inconsistent inputs.
-    #[error("svr error: {0}")]
     Svr(String),
 
     /// Linear algebra failure (singular system in the power-model fit).
-    #[error("linear algebra error: {0}")]
     Linalg(String),
 
     /// PJRT runtime failures (artifact loading, compilation, execution).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Artifact manifest problems (missing files, shape mismatches).
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// I/O wrapper.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// JSON parse/shape errors (in-tree `util::json`).
-    #[error("json error: {0}")]
     Json(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::BadFrequency(mhz) => {
+                write!(f, "frequency {mhz} MHz not on the DVFS ladder")
+            }
+            Error::BadCoreCount {
+                requested,
+                available,
+            } => write!(f, "invalid core count {requested} (node has {available})"),
+            Error::UnknownWorkload(name) => write!(f, "unknown workload '{name}'"),
+            Error::UnknownGovernor(name) => write!(f, "unknown governor '{name}'"),
+            Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Svr(m) => write!(f, "svr error: {m}"),
+            Error::Linalg(m) => write!(f, "linear algebra error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -62,3 +90,31 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_contract() {
+        assert_eq!(
+            Error::BadFrequency(1250).to_string(),
+            "frequency 1250 MHz not on the DVFS ladder"
+        );
+        assert_eq!(
+            Error::BadCoreCount {
+                requested: 64,
+                available: 32
+            }
+            .to_string(),
+            "invalid core count 64 (node has 32)"
+        );
+        assert!(Error::Artifact("x".into()).to_string().starts_with("artifact error:"));
+    }
+
+    #[test]
+    fn io_source_is_preserved() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

@@ -12,6 +12,7 @@ use crate::config::{mhz_to_ghz, Mhz, NodeSpec};
 use crate::node::power::PowerProcess;
 use crate::node::Node;
 use crate::sensors::IpmiMeter;
+use crate::util::pool::WorkerPool;
 use crate::util::{lstsq, mape, rmse};
 use crate::{Error, Result};
 
@@ -118,6 +119,8 @@ pub struct StressConfig {
     pub freq_max_mhz: Mhz,
     pub freq_step_mhz: Mhz,
     pub seed: u64,
+    /// Worker threads for the campaign fan-out (0 = all hardware threads).
+    pub threads: usize,
 }
 
 impl Default for StressConfig {
@@ -128,40 +131,48 @@ impl Default for StressConfig {
             freq_max_mhz: 2200,
             freq_step_mhz: 100,
             seed: 0xF17,
+            threads: 0,
         }
     }
 }
 
 /// Run the §3.3 stress campaign on a simulated node: pin every (f, p)
 /// combination at full utilization, record the mean IPMI power.
+///
+/// Tests fan out over the worker pool; every test owns a fresh node and a
+/// meter seeded from its global (f-major) test index, so the observation
+/// list is bit-identical for any thread count.
 pub fn stress_campaign(spec: &NodeSpec, cfg: &StressConfig) -> Result<Vec<PowerObs>> {
-    let mut node = Node::new(spec.clone())?;
-    let power = PowerProcess::new(spec.power.clone());
-    let mut obs = Vec::new();
+    let mut tests = Vec::new();
     let mut f = cfg.freq_min_mhz;
-    let mut test_idx = 0u64;
     while f <= cfg.freq_max_mhz {
         for p in 1..=spec.total_cores() {
-            node.set_online_cores(p)?;
-            node.set_freq_all(f)?;
-            for c in 0..p {
-                node.set_util(c, 1.0);
-            }
-            // Fresh meter per test = the paper's cool-down between tests
-            // (no cross-test thermal state in the simulated process).
-            let mut meter = IpmiMeter::new(cfg.seed.wrapping_add(test_idx));
-            meter.advance(&node, &power, 0.0, cfg.dwell_s);
-            obs.push(PowerObs {
-                f_mhz: f,
-                cores: p,
-                sockets: node.active_sockets(),
-                watts: meter.mean_watts(),
-            });
-            test_idx += 1;
+            tests.push((f, p));
         }
         f += cfg.freq_step_mhz;
     }
-    Ok(obs)
+
+    let pool = WorkerPool::new(cfg.threads);
+    pool.try_run(tests.len(), |i| {
+        let (f, p) = tests[i];
+        // Each test runs on an independent node — the paper's cool-down
+        // between tests (no cross-test thermal state).
+        let mut node = Node::new(spec.clone())?;
+        let power = PowerProcess::new(spec.power.clone());
+        node.set_online_cores(p)?;
+        node.set_freq_all(f)?;
+        for c in 0..p {
+            node.set_util(c, 1.0);
+        }
+        let mut meter = IpmiMeter::new(cfg.seed.wrapping_add(i as u64));
+        meter.advance(&node, &power, 0.0, cfg.dwell_s);
+        Ok(PowerObs {
+            f_mhz: f,
+            cores: p,
+            sockets: node.active_sockets(),
+            watts: meter.mean_watts(),
+        })
+    })
 }
 
 #[cfg(test)]

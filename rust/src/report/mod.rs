@@ -325,6 +325,7 @@ mod tests {
             work_noise: 0.0,
             seed: 5,
             max_sim_s: 1e6,
+            ..Default::default()
         });
         (coord.run_all().unwrap(), campaign)
     }

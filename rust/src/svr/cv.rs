@@ -1,10 +1,17 @@
 //! k-fold cross-validation of the SVR performance model (paper §3.4,
 //! Table 1: per-application MAE and PAE from 10-fold CV).
+//!
+//! When features are unscaled (the default), all folds draw their kernel
+//! rows from **one shared LRU cache** over the full sample set: a row used
+//! by `k−1` folds is computed once instead of `k−1` times, which removes
+//! the dominant `exp` cost of repeated fold training. Fold results are
+//! bit-identical to training each fold standalone (same row arithmetic,
+//! same solver trajectory).
 
 use crate::config::SvrSpec;
-use crate::svr::{SvrModel, TrainSample};
-use crate::util::{mae, pae};
+use crate::svr::{smo, SvrModel, TrainSample, DIMS};
 use crate::util::stats::shuffled_indices;
+use crate::util::{mae, pae};
 use crate::{Error, Result};
 
 /// Cross-validation summary (averages over folds).
@@ -35,6 +42,18 @@ pub fn cross_validate(samples: &[TrainSample], spec: &SvrSpec) -> Result<CvRepor
     let idx = shuffled_indices(samples.len(), spec.seed);
     let fold_size = samples.len() / k;
 
+    // Shared kernel cache across folds (unscaled features only: per-fold
+    // standardizers would change the kernel geometry fold to fold).
+    let mut shared: Option<smo::KernelCache> = if spec.scale_features {
+        None
+    } else {
+        let mut raw = Vec::with_capacity(samples.len() * DIMS);
+        for s in samples {
+            raw.extend_from_slice(&s.features());
+        }
+        Some(smo::KernelCache::new(&raw, DIMS, spec.gamma, 0))
+    };
+
     let mut per_fold = Vec::with_capacity(k);
     for fold in 0..k {
         let lo = fold * fold_size;
@@ -46,10 +65,16 @@ pub fn cross_validate(samples: &[TrainSample], spec: &SvrSpec) -> Result<CvRepor
         let test_idx = &idx[lo..hi];
         let train_idx: Vec<usize> = idx[..lo].iter().chain(&idx[hi..]).copied().collect();
 
-        let train: Vec<TrainSample> = train_idx.iter().map(|i| samples[*i]).collect();
         let test: Vec<TrainSample> = test_idx.iter().map(|i| samples[*i]).collect();
 
-        let model = SvrModel::train(&train, spec)?;
+        let model = match shared.as_mut() {
+            Some(cache) => SvrModel::train_with_shared_kernel(samples, &train_idx, spec, cache)?,
+            None => {
+                let train: Vec<TrainSample> =
+                    train_idx.iter().map(|i| samples[*i]).collect();
+                SvrModel::train(&train, spec)?
+            }
+        };
         let queries: Vec<(u32, usize, u32)> =
             test.iter().map(|s| (s.f_mhz, s.cores, s.input)).collect();
         let pred = model.predict(&queries);
@@ -118,6 +143,35 @@ mod tests {
         let b = cross_validate(&samples(), &spec()).unwrap();
         assert_eq!(a.mae, b.mae);
         assert_eq!(a.pae_pct, b.pae_pct);
+    }
+
+    #[test]
+    fn shared_kernel_cv_matches_standalone_folds() {
+        // The shared-cache fast path must reproduce standalone per-fold
+        // training bit for bit.
+        let samples = samples();
+        let spec = spec();
+        let rep = cross_validate(&samples, &spec).unwrap();
+        let idx = shuffled_indices(samples.len(), spec.seed);
+        let fold_size = samples.len() / spec.folds;
+        for fold in 0..spec.folds {
+            let lo = fold * fold_size;
+            let hi = if fold == spec.folds - 1 {
+                samples.len()
+            } else {
+                lo + fold_size
+            };
+            let train_idx: Vec<usize> = idx[..lo].iter().chain(&idx[hi..]).copied().collect();
+            let train: Vec<TrainSample> = train_idx.iter().map(|i| samples[*i]).collect();
+            let m = SvrModel::train(&train, &spec).unwrap();
+            let test: Vec<TrainSample> = idx[lo..hi].iter().map(|i| samples[*i]).collect();
+            let queries: Vec<(u32, usize, u32)> =
+                test.iter().map(|s| (s.f_mhz, s.cores, s.input)).collect();
+            let pred = m.predict(&queries);
+            let truth: Vec<f64> = test.iter().map(|s| s.time_s).collect();
+            assert_eq!(rep.per_fold[fold].0, mae(&truth, &pred), "fold {fold} MAE");
+            assert_eq!(rep.per_fold[fold].1, pae(&truth, &pred), "fold {fold} PAE");
+        }
     }
 
     #[test]

@@ -54,35 +54,118 @@ pub struct SvrModel {
     pub n_support: usize,
 }
 
-impl SvrModel {
-    /// Train on characterization samples with the given hyper-parameters.
-    pub fn train(samples: &[TrainSample], spec: &SvrSpec) -> Result<SvrModel> {
-        if samples.len() < 10 {
-            return Err(Error::Svr(format!(
-                "need >= 10 training samples, got {}",
-                samples.len()
+/// Validate samples and lay out (raw feature rows, targets).
+fn collect_features(samples: &[TrainSample]) -> Result<(Vec<f64>, Vec<f64>)> {
+    if samples.len() < 10 {
+        return Err(Error::Svr(format!(
+            "need >= 10 training samples, got {}",
+            samples.len()
+        )));
+    }
+    let mut raw = Vec::with_capacity(samples.len() * DIMS);
+    let mut y = Vec::with_capacity(samples.len());
+    for s in samples {
+        if !s.time_s.is_finite() || s.time_s <= 0.0 {
+            return Err(Error::Data(format!(
+                "bad execution time {} in training set",
+                s.time_s
             )));
         }
-        let mut raw = Vec::with_capacity(samples.len() * DIMS);
-        let mut y = Vec::with_capacity(samples.len());
-        for s in samples {
-            if !s.time_s.is_finite() || s.time_s <= 0.0 {
-                return Err(Error::Data(format!(
-                    "bad execution time {} in training set",
-                    s.time_s
-                )));
-            }
-            raw.extend_from_slice(&s.features());
-            y.push(s.time_s);
-        }
+        raw.extend_from_slice(&s.features());
+        y.push(s.time_s);
+    }
+    Ok((raw, y))
+}
+
+/// SMO options used for production training: full row cache + shrinking.
+fn train_smo_options() -> smo::SmoOptions {
+    smo::SmoOptions {
+        shrink: true,
+        shrink_every: 1024,
+    }
+}
+
+impl SvrModel {
+    /// Train on characterization samples with the given hyper-parameters.
+    ///
+    /// Kernel rows are served by an LRU [`smo::KernelCache`] (computed
+    /// lazily, each distinct row once) and the SMO solver runs with the
+    /// shrinking heuristic; see `smo` for the exactness guarantees.
+    pub fn train(samples: &[TrainSample], spec: &SvrSpec) -> Result<SvrModel> {
+        let (raw, y) = collect_features(samples)?;
         let scaler = if spec.scale_features {
             Standardizer::fit(&raw, DIMS)?
         } else {
             Standardizer::identity(DIMS)
         };
         let x = scaler.transform(&raw);
-        let k = smo::rbf_kernel_matrix(&x, &x, DIMS, spec.gamma);
-        let sol = smo::solve_epsilon_svr(&k, &y, spec.c, spec.epsilon, spec.tol, spec.max_iter)?;
+        let mut cache = smo::KernelCache::new(&x, DIMS, spec.gamma, 0);
+        let sol = smo::solve_epsilon_svr_cached(
+            &mut cache,
+            None,
+            &y,
+            spec.c,
+            spec.epsilon,
+            spec.tol,
+            spec.max_iter,
+            &train_smo_options(),
+        )?;
+        let n_support = sol.n_support();
+        Ok(SvrModel {
+            train_x: x,
+            beta: sol.beta,
+            b: sol.b,
+            gamma: spec.gamma,
+            scaler,
+            iterations: sol.iterations,
+            n_support,
+        })
+    }
+
+    /// Train on the subset `idx` of `all` with kernel rows served by a
+    /// cache shared across calls — the cross-validation fast path: each
+    /// global row is computed at most once and reused by every fold that
+    /// trains on it. Requires unscaled features (the default), because a
+    /// per-fold standardizer would change the kernel geometry per fold.
+    pub fn train_with_shared_kernel(
+        all: &[TrainSample],
+        idx: &[usize],
+        spec: &SvrSpec,
+        cache: &mut smo::KernelCache,
+    ) -> Result<SvrModel> {
+        if spec.scale_features {
+            return Err(Error::Svr(
+                "shared-kernel training requires scale_features = false".into(),
+            ));
+        }
+        if cache.len() != all.len() {
+            return Err(Error::Svr(format!(
+                "shared kernel cache holds {} points, sample set has {}",
+                cache.len(),
+                all.len()
+            )));
+        }
+        if cache.gamma() != spec.gamma {
+            return Err(Error::Svr(format!(
+                "shared kernel cache gamma {} != spec gamma {}",
+                cache.gamma(),
+                spec.gamma
+            )));
+        }
+        let subset: Vec<TrainSample> = idx.iter().map(|&i| all[i]).collect();
+        let (raw, y) = collect_features(&subset)?;
+        let scaler = Standardizer::identity(DIMS);
+        let x = scaler.transform(&raw);
+        let sol = smo::solve_epsilon_svr_cached(
+            &mut *cache,
+            Some(idx),
+            &y,
+            spec.c,
+            spec.epsilon,
+            spec.tol,
+            spec.max_iter,
+            &train_smo_options(),
+        )?;
         let n_support = sol.n_support();
         Ok(SvrModel {
             train_x: x,
@@ -108,6 +191,26 @@ impl SvrModel {
     /// Predict one configuration.
     pub fn predict_one(&self, f: Mhz, p: usize, n: u32) -> f64 {
         self.predict(&[(f, p, n)])[0]
+    }
+
+    /// Batched, cache-blocked prediction — bit-identical to
+    /// [`SvrModel::predict`] (see [`smo::predict_blocked`]). This is the
+    /// energy-grid evaluator's entry point.
+    pub fn predict_blocked(&self, queries: &[(Mhz, usize, u32)], query_block: usize) -> Vec<f64> {
+        let mut q = Vec::with_capacity(queries.len() * DIMS);
+        for (f, p, n) in queries {
+            q.extend_from_slice(&[mhz_to_ghz(*f), *p as f64, *n as f64]);
+        }
+        let qs = self.scaler.transform(&q);
+        smo::predict_blocked(
+            &self.beta,
+            self.b,
+            &self.train_x,
+            &qs,
+            DIMS,
+            self.gamma,
+            query_block,
+        )
     }
 
     /// Export the padded (support-set, duals) pair for the AOT
@@ -237,6 +340,36 @@ mod tests {
         assert!(sv[l * DIMS..].iter().all(|v| *v == 0.0));
         // Capacity overflow is an error.
         assert!(m.export_padded(l - 1).is_err());
+    }
+
+    #[test]
+    fn shared_kernel_training_matches_plain_bitwise() {
+        let samples = synthetic_samples();
+        let spec = spec();
+        let idx: Vec<usize> = (0..samples.len()).filter(|i| i % 4 != 0).collect();
+        let subset: Vec<TrainSample> = idx.iter().map(|&i| samples[i]).collect();
+        let plain = SvrModel::train(&subset, &spec).unwrap();
+
+        let mut raw = Vec::new();
+        for s in &samples {
+            raw.extend_from_slice(&s.features());
+        }
+        let mut cache = smo::KernelCache::new(&raw, DIMS, spec.gamma, 0);
+        let shared = SvrModel::train_with_shared_kernel(&samples, &idx, &spec, &mut cache).unwrap();
+        assert_eq!(plain.beta, shared.beta);
+        assert_eq!(plain.b, shared.b);
+        assert_eq!(plain.train_x, shared.train_x);
+        assert_eq!(plain.iterations, shared.iterations);
+
+        // A second overlapping "fold" must reuse cached rows.
+        let idx2: Vec<usize> = (0..samples.len()).filter(|i| i % 4 != 1).collect();
+        let misses_before = cache.misses();
+        let _ = SvrModel::train_with_shared_kernel(&samples, &idx2, &spec, &mut cache).unwrap();
+        assert!(cache.hits() > 0, "no cache reuse across folds");
+        assert!(
+            cache.misses() <= misses_before + idx2.len() as u64,
+            "rows recomputed despite cache"
+        );
     }
 
     #[test]

@@ -23,6 +23,23 @@
 
 use crate::{Error, Result};
 
+/// One RBF kernel row: `out[j] = K(xi, b_j)` over the row-major set `b`.
+/// Every kernel evaluation in this module funnels through this function,
+/// so the precomputed-matrix path, the cached path and the batched
+/// predictor produce bit-identical values.
+#[inline]
+pub fn rbf_row_into(xi: &[f64], b: &[f64], dims: usize, gamma: f64, out: &mut [f64]) {
+    for (j, o) in out.iter_mut().enumerate() {
+        let xj = &b[j * dims..(j + 1) * dims];
+        let mut d2 = 0.0;
+        for d in 0..dims {
+            let diff = xi[d] - xj[d];
+            d2 += diff * diff;
+        }
+        *o = (-gamma * d2).exp();
+    }
+}
+
 /// Dense RBF kernel matrix between row-major sets (f64, training-side).
 /// `a` is (ra x dims), `b` is (rb x dims); returns (ra x rb) row-major.
 pub fn rbf_kernel_matrix(a: &[f64], b: &[f64], dims: usize, gamma: f64) -> Vec<f64> {
@@ -31,17 +48,155 @@ pub fn rbf_kernel_matrix(a: &[f64], b: &[f64], dims: usize, gamma: f64) -> Vec<f
     let mut k = vec![0.0; ra * rb];
     for i in 0..ra {
         let xi = &a[i * dims..(i + 1) * dims];
-        for j in 0..rb {
-            let xj = &b[j * dims..(j + 1) * dims];
-            let mut d2 = 0.0;
-            for d in 0..dims {
-                let diff = xi[d] - xj[d];
-                d2 += diff * diff;
-            }
-            k[i * rb + j] = (-gamma * d2).exp();
-        }
+        rbf_row_into(xi, b, dims, gamma, &mut k[i * rb..(i + 1) * rb]);
     }
     k
+}
+
+/// LRU cache of RBF kernel rows over a fixed feature set.
+///
+/// The SMO solver touches two kernel rows per pair update and revisits a
+/// small working set of rows many times; cross-validation revisits the
+/// same *global* rows across folds. Caching rows (instead of precomputing
+/// the full `l x l` matrix) bounds memory at `capacity x l` and skips the
+/// `exp`-heavy recomputation on every revisit. Rows are computed with
+/// [`rbf_row_into`], so cached values are bit-identical to the dense
+/// matrix entries.
+#[derive(Debug)]
+pub struct KernelCache {
+    x: Vec<f64>,
+    dims: usize,
+    gamma: f64,
+    l: usize,
+    capacity: usize,
+    rows: Vec<Option<Box<[f64]>>>,
+    /// Last-use tick per row (0 = never cached).
+    stamp: Vec<u64>,
+    /// Indices currently resident.
+    resident: Vec<usize>,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+}
+
+impl KernelCache {
+    /// Cache over row-major features `x` (`l x dims`). `capacity_rows`
+    /// bounds resident rows; `0` means cache everything (clamped to at
+    /// least 2 — a pair update needs both of its rows resident).
+    pub fn new(x: &[f64], dims: usize, gamma: f64, capacity_rows: usize) -> KernelCache {
+        assert!(dims > 0 && x.len() % dims == 0, "misaligned feature data");
+        let l = x.len() / dims;
+        let capacity = if capacity_rows == 0 {
+            l.max(2)
+        } else {
+            capacity_rows.clamp(2, l.max(2))
+        };
+        KernelCache {
+            x: x.to_vec(),
+            dims,
+            gamma,
+            l,
+            capacity,
+            rows: (0..l).map(|_| None).collect(),
+            stamp: vec![0; l],
+            resident: Vec::new(),
+            clock: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Number of points in the feature set.
+    pub fn len(&self) -> usize {
+        self.l
+    }
+
+    /// True when the feature set is empty.
+    pub fn is_empty(&self) -> bool {
+        self.l == 0
+    }
+
+    /// Kernel gamma this cache was built with.
+    pub fn gamma(&self) -> f64 {
+        self.gamma
+    }
+
+    /// Cache-hit count (diagnostics).
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Cache-miss count (rows computed).
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Rows currently resident.
+    pub fn resident_rows(&self) -> usize {
+        self.resident.len()
+    }
+
+    fn ensure(&mut self, i: usize, protect: usize) {
+        self.clock += 1;
+        if self.rows[i].is_some() {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+            if self.resident.len() >= self.capacity {
+                // Evict the least-recently-used resident row, never the
+                // protected partner of the current pair.
+                let mut victim_pos = usize::MAX;
+                let mut victim_stamp = u64::MAX;
+                for (pos, &r) in self.resident.iter().enumerate() {
+                    if r == protect {
+                        continue;
+                    }
+                    if self.stamp[r] < victim_stamp {
+                        victim_stamp = self.stamp[r];
+                        victim_pos = pos;
+                    }
+                }
+                if victim_pos != usize::MAX {
+                    let victim = self.resident.swap_remove(victim_pos);
+                    self.rows[victim] = None;
+                }
+            }
+            let mut row = vec![0.0; self.l].into_boxed_slice();
+            let xi = &self.x[i * self.dims..(i + 1) * self.dims];
+            rbf_row_into(xi, &self.x, self.dims, self.gamma, &mut row);
+            self.rows[i] = Some(row);
+            self.resident.push(i);
+        }
+        self.stamp[i] = self.clock;
+    }
+
+    /// Full kernel row `K(x_i, ·)` (length [`KernelCache::len`]).
+    pub fn row(&mut self, i: usize) -> &[f64] {
+        self.ensure(i, usize::MAX);
+        self.rows[i].as_deref().expect("row just ensured")
+    }
+
+    /// Gather row `i` at `subset` positions into `out` (the
+    /// fold-local view used when a solve runs on a sample subset).
+    /// `subset = None` copies the full row.
+    pub fn gather_row(
+        &mut self,
+        i: usize,
+        subset: Option<&[usize]>,
+        protect: usize,
+        out: &mut [f64],
+    ) {
+        self.ensure(i, protect);
+        let row = self.rows[i].as_deref().expect("row just ensured");
+        match subset {
+            None => out.copy_from_slice(row),
+            Some(map) => {
+                for (s, &g) in map.iter().enumerate() {
+                    out[s] = row[g];
+                }
+            }
+        }
+    }
 }
 
 /// SMO solver output.
@@ -268,6 +423,331 @@ pub fn solve_epsilon_svr(
     })
 }
 
+/// Options for [`solve_epsilon_svr_cached`].
+#[derive(Debug, Clone)]
+pub struct SmoOptions {
+    /// Enable LIBSVM-style shrinking: bound variables whose gradient says
+    /// they cannot join a violating pair drop out of selection and
+    /// gradient maintenance; their gradients are reconstructed exactly
+    /// before final convergence is declared.
+    pub shrink: bool,
+    /// Pair updates between shrink passes (>= 1).
+    pub shrink_every: usize,
+}
+
+impl Default for SmoOptions {
+    fn default() -> Self {
+        SmoOptions {
+            shrink: false,
+            shrink_every: 1024,
+        }
+    }
+}
+
+/// Solve ε-SVR with kernel rows served by an LRU [`KernelCache`] instead
+/// of a precomputed matrix.
+///
+/// `subset` maps solver-local row indices to cache rows: `None` trains on
+/// the cache's full point set; `Some(idx)` trains on the subset
+/// `idx` (the cross-validation fast path — folds share one global cache).
+/// Targets `y` align with the local indices.
+///
+/// With shrinking disabled this walks the exact working-set trajectory of
+/// [`solve_epsilon_svr`] and returns **bit-identical** results (rows come
+/// from the same [`rbf_row_into`] arithmetic); the property suite locks
+/// that down. With shrinking enabled the trajectory may differ, but the
+/// solution still converges to the same tolerance on the full variable
+/// set (gradients are reconstructed exactly before termination).
+#[allow(clippy::too_many_arguments)]
+pub fn solve_epsilon_svr_cached(
+    cache: &mut KernelCache,
+    subset: Option<&[usize]>,
+    y: &[f64],
+    c: f64,
+    epsilon: f64,
+    tol: f64,
+    max_iter: usize,
+    opts: &SmoOptions,
+) -> Result<SmoSolution> {
+    let l = y.len();
+    if l == 0 {
+        return Err(Error::Svr("empty training set".into()));
+    }
+    match subset {
+        None => {
+            if cache.len() != l {
+                return Err(Error::Svr(format!(
+                    "kernel cache holds {} points, targets are {l}",
+                    cache.len()
+                )));
+            }
+        }
+        Some(map) => {
+            if map.len() != l {
+                return Err(Error::Svr(format!(
+                    "subset maps {} rows, targets are {l}",
+                    map.len()
+                )));
+            }
+            if map.iter().any(|&g| g >= cache.len()) {
+                return Err(Error::Svr("subset index outside kernel cache".into()));
+            }
+        }
+    }
+    if c <= 0.0 || epsilon < 0.0 || tol <= 0.0 {
+        return Err(Error::Svr(format!(
+            "bad hyper-parameters C={c} eps={epsilon} tol={tol}"
+        )));
+    }
+    if y.iter().any(|v| !v.is_finite()) {
+        return Err(Error::Svr("non-finite training target".into()));
+    }
+
+    let global = |s: usize| match subset {
+        None => s,
+        Some(map) => map[s],
+    };
+    let shrink_every = opts.shrink_every.max(1);
+
+    let n = 2 * l;
+    let mut alpha = vec![0.0f64; n];
+    // At a = 0 the gradient equals p = [ε − y ; ε + y].
+    let mut grad: Vec<f64> = (0..n)
+        .map(|s| {
+            if s < l {
+                epsilon - y[s]
+            } else {
+                epsilon + y[s - l]
+            }
+        })
+        .collect();
+    let mut active = vec![true; n];
+    // RBF diagonal: K(x, x) = exp(0) = 1 exactly.
+    let diag = vec![1.0f64; l];
+
+    let mut row_i = vec![0.0f64; l];
+    let mut row_j = vec![0.0f64; l];
+
+    let mut iterations = 0usize;
+    #[allow(unused_assignments)]
+    let (mut g_max, mut g_min) = (f64::NEG_INFINITY, f64::INFINITY);
+    #[allow(unused_assignments)]
+    let mut i_up = usize::MAX;
+    let mut shrunk = false;
+    let mut unshrunk = false;
+
+    macro_rules! full_select {
+        () => {{
+            g_max = f64::NEG_INFINITY;
+            g_min = f64::INFINITY;
+            i_up = usize::MAX;
+            for s in 0..n {
+                if !active[s] {
+                    continue;
+                }
+                let ys = sign(s, l);
+                let v = -ys * grad[s];
+                let in_up = (ys > 0.0 && alpha[s] < c) || (ys < 0.0 && alpha[s] > 0.0);
+                let in_low = (ys > 0.0 && alpha[s] > 0.0) || (ys < 0.0 && alpha[s] < c);
+                if in_up && v > g_max {
+                    g_max = v;
+                    i_up = s;
+                }
+                if in_low && v < g_min {
+                    g_min = v;
+                }
+            }
+        }};
+    }
+
+    // Exact gradient rebuild (G = p + Q̂·a via β = α − α*) followed by
+    // reactivation of every variable.
+    macro_rules! reconstruct_and_unshrink {
+        () => {{
+            let mut contrib = vec![0.0f64; l];
+            for i in 0..l {
+                let bi = alpha[i] - alpha[i + l];
+                if bi == 0.0 {
+                    continue;
+                }
+                cache.gather_row(global(i), subset, usize::MAX, &mut row_i);
+                for s in 0..l {
+                    contrib[s] += bi * row_i[s];
+                }
+            }
+            for s in 0..l {
+                grad[s] = epsilon - y[s] + contrib[s];
+                grad[s + l] = epsilon + y[s] - contrib[s];
+            }
+            for a in active.iter_mut() {
+                *a = true;
+            }
+            unshrunk = true;
+        }};
+    }
+
+    full_select!();
+
+    loop {
+        let converged = i_up == usize::MAX || g_max - g_min <= tol;
+        if converged || iterations >= max_iter {
+            if converged && shrunk && !unshrunk && iterations < max_iter {
+                // The *active* set converged; verify against the full set.
+                reconstruct_and_unshrink!();
+                full_select!();
+                if i_up == usize::MAX || g_max - g_min <= tol {
+                    break;
+                }
+                continue;
+            }
+            break;
+        }
+
+        if opts.shrink && !unshrunk && iterations > 0 && iterations % shrink_every == 0 {
+            // Retire bound variables that cannot currently be part of a
+            // maximal-violating pair.
+            for s in 0..n {
+                if !active[s] {
+                    continue;
+                }
+                let a = alpha[s];
+                if a > 0.0 && a < c {
+                    continue; // interior variables always stay active
+                }
+                let ys = sign(s, l);
+                let v = -ys * grad[s];
+                let in_up = (ys > 0.0 && a < c) || (ys < 0.0 && a > 0.0);
+                let keep = if in_up { v >= g_min } else { v <= g_max };
+                if !keep {
+                    active[s] = false;
+                    shrunk = true;
+                }
+            }
+        }
+
+        // --- second-order working-set selection (LIBSVM WSS2) over the
+        // active set, kernel row of i served by the cache.
+        let i = i_up;
+        let ki = kidx(i, l);
+        cache.gather_row(global(ki), subset, usize::MAX, &mut row_i);
+        let kii = row_i[ki];
+        let mut j_low = usize::MAX;
+        let mut best_gain = 0.0f64;
+        for s in 0..n {
+            if !active[s] {
+                continue;
+            }
+            let ys = sign(s, l);
+            let in_low = (ys > 0.0 && alpha[s] > 0.0) || (ys < 0.0 && alpha[s] < c);
+            if !in_low {
+                continue;
+            }
+            let v = -ys * grad[s];
+            let diff = g_max - v;
+            if diff <= 0.0 {
+                continue;
+            }
+            let ks = kidx(s, l);
+            let quad = (kii + diag[ks] - 2.0 * row_i[ks]).max(1e-12);
+            let gain = diff * diff / quad;
+            if gain > best_gain {
+                best_gain = gain;
+                j_low = s;
+            }
+        }
+        if j_low == usize::MAX {
+            if shrunk && !unshrunk {
+                reconstruct_and_unshrink!();
+                full_select!();
+                if i_up == usize::MAX || g_max - g_min <= tol {
+                    break;
+                }
+                continue;
+            }
+            break;
+        }
+
+        // --- analytic two-variable step (identical to the dense solver).
+        let j = j_low;
+        let (yi, yj) = (sign(i, l), sign(j, l));
+        let kj = kidx(j, l);
+        let vj = -yj * grad[j];
+        let quad = (kii + diag[kj] - 2.0 * row_i[kj]).max(1e-12);
+        let mut t = (g_max - vj) / quad;
+        let lim_i = if yi > 0.0 { c - alpha[i] } else { alpha[i] };
+        let lim_j = if yj > 0.0 { alpha[j] } else { c - alpha[j] };
+        t = t.min(lim_i).min(lim_j);
+        if !(t > 0.0) {
+            break; // numerically stuck: the pair cannot move
+        }
+
+        alpha[i] += yi * t;
+        alpha[j] -= yj * t;
+        alpha[i] = alpha[i].clamp(0.0, c);
+        alpha[j] = alpha[j].clamp(0.0, c);
+
+        // --- fused gradient maintenance + next selection over the active
+        // set; row_i stays protected while row_j is fetched.
+        cache.gather_row(global(kj), subset, global(ki), &mut row_j);
+        g_max = f64::NEG_INFINITY;
+        g_min = f64::INFINITY;
+        i_up = usize::MAX;
+        for s in 0..l {
+            let dk = t * (row_i[s] - row_j[s]);
+            if active[s] {
+                let gp = grad[s] + dk; // y = +1 copy
+                grad[s] = gp;
+                let ap = alpha[s];
+                let vp = -gp;
+                if ap < c && vp > g_max {
+                    g_max = vp;
+                    i_up = s;
+                }
+                if ap > 0.0 && vp < g_min {
+                    g_min = vp;
+                }
+            }
+            if active[s + l] {
+                let gm = grad[s + l] - dk; // y = −1 copy
+                grad[s + l] = gm;
+                let am = alpha[s + l];
+                let vm = gm;
+                if am > 0.0 && vm > g_max {
+                    g_max = vm;
+                    i_up = s + l;
+                }
+                if am < c && vm < g_min {
+                    g_min = vm;
+                }
+            }
+        }
+        iterations += 1;
+    }
+
+    // The loop can also exit via max_iter or a stuck pair while variables
+    // are still shrunk (stale gradients). Rebuild so b and the reported
+    // violation always describe the FULL variable set — the dense
+    // solver's semantics.
+    if shrunk && !unshrunk {
+        reconstruct_and_unshrink!();
+        full_select!();
+        debug_assert!(unshrunk, "reconstruction must mark unshrunk");
+    }
+
+    let b = if g_max.is_finite() && g_min.is_finite() {
+        (g_max + g_min) / 2.0
+    } else {
+        0.0
+    };
+    let beta: Vec<f64> = (0..l).map(|i| alpha[i] - alpha[i + l]).collect();
+    Ok(SmoSolution {
+        beta,
+        b,
+        iterations,
+        violation: (g_max - g_min).max(0.0),
+    })
+}
+
 /// Evaluate the trained regressor on query rows (row-major, `dims` wide).
 pub fn predict(
     beta: &[f64],
@@ -293,6 +773,49 @@ pub fn predict(
             }
             *o += bi * (-gamma * d2).exp();
         }
+    }
+    out
+}
+
+/// Batched, cache-blocked evaluation of the trained regressor.
+///
+/// Queries are processed in blocks sized to stay L1-resident while the
+/// support set streams once per block; non-support rows (|β| below the SV
+/// threshold) are skipped exactly like [`predict`]. Per query the partial
+/// sums accumulate in ascending support-vector order — the same addition
+/// sequence as [`predict`] — so results are **bit-identical** to the
+/// point-at-a-time path.
+pub fn predict_blocked(
+    beta: &[f64],
+    b: f64,
+    train_x: &[f64],
+    query_x: &[f64],
+    dims: usize,
+    gamma: f64,
+    query_block: usize,
+) -> Vec<f64> {
+    let q = query_x.len() / dims;
+    let block = query_block.max(1);
+    let mut out = vec![b; q];
+    let mut q0 = 0;
+    while q0 < q {
+        let q1 = (q0 + block).min(q);
+        for (i, bi) in beta.iter().enumerate() {
+            if bi.abs() < 1e-12 {
+                continue; // not a support vector
+            }
+            let xi = &train_x[i * dims..(i + 1) * dims];
+            for (qi, o) in out[q0..q1].iter_mut().enumerate() {
+                let xq = &query_x[(q0 + qi) * dims..(q0 + qi + 1) * dims];
+                let mut d2 = 0.0;
+                for d in 0..dims {
+                    let diff = xi[d] - xq[d];
+                    d2 += diff * diff;
+                }
+                *o += bi * (-gamma * d2).exp();
+            }
+        }
+        q0 = q1;
     }
     out
 }
@@ -396,6 +919,145 @@ mod tests {
                 assert!((k[i * 3 + j] - k[j * 3 + i]).abs() < 1e-12);
                 assert!(k[i * 3 + j] > 0.0 && k[i * 3 + j] <= 1.0);
             }
+        }
+    }
+
+    #[test]
+    fn kernel_cache_values_match_matrix() {
+        let xs: Vec<f64> = (0..30).map(|i| i as f64 / 3.0).collect();
+        let k = rbf_kernel_matrix(&xs, &xs, 1, 0.7);
+        let mut cache = KernelCache::new(&xs, 1, 0.7, 4);
+        // Access rows in a pattern that forces evictions and re-fetches.
+        for &i in &[0usize, 1, 2, 3, 4, 5, 0, 29, 1, 17, 0, 29] {
+            assert_eq!(cache.row(i), &k[i * 30..(i + 1) * 30], "row {i}");
+        }
+        assert!(cache.resident_rows() <= 4);
+        assert!(cache.hits() > 0 && cache.misses() > 0);
+    }
+
+    #[test]
+    fn kernel_cache_gather_subset() {
+        let xs: Vec<f64> = (0..20).map(|i| i as f64 / 2.0).collect();
+        let k = rbf_kernel_matrix(&xs, &xs, 1, 0.4);
+        let mut cache = KernelCache::new(&xs, 1, 0.4, 0);
+        let subset = [3usize, 7, 11, 19];
+        let mut buf = vec![0.0; subset.len()];
+        cache.gather_row(7, Some(&subset), usize::MAX, &mut buf);
+        for (s, &g) in subset.iter().enumerate() {
+            assert_eq!(buf[s], k[7 * 20 + g]);
+        }
+    }
+
+    #[test]
+    fn kernel_cache_eviction_protects_pair_partner() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let mut cache = KernelCache::new(&xs, 1, 0.5, 2);
+        let mut a = vec![0.0; 10];
+        let mut b = vec![0.0; 10];
+        cache.gather_row(0, None, usize::MAX, &mut a);
+        // Fetch many rows while protecting row 0: it must stay resident.
+        for i in 1..10 {
+            cache.gather_row(i, None, 0, &mut b);
+        }
+        let misses_before = cache.misses();
+        cache.gather_row(0, None, usize::MAX, &mut a);
+        assert_eq!(cache.misses(), misses_before, "protected row was evicted");
+    }
+
+    #[test]
+    fn cached_solver_matches_dense_solver_bitwise() {
+        // Same kernel arithmetic, same working-set walk: every output
+        // field must be exactly equal, for full caches and tiny LRU caches.
+        let xs: Vec<f64> = (0..50).map(|i| i as f64 / 7.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| (x * 0.9).sin() * 4.0 + 0.3 * x).collect();
+        let k = rbf_kernel_matrix(&xs, &xs, 1, 0.6);
+        let dense = solve_epsilon_svr(&k, &ys, 250.0, 0.05, 1e-4, 100_000).unwrap();
+        for cap in [0usize, 2, 3, 8] {
+            let mut cache = KernelCache::new(&xs, 1, 0.6, cap);
+            let cached = solve_epsilon_svr_cached(
+                &mut cache,
+                None,
+                &ys,
+                250.0,
+                0.05,
+                1e-4,
+                100_000,
+                &SmoOptions::default(),
+            )
+            .unwrap();
+            assert_eq!(cached.beta, dense.beta, "cap {cap}");
+            assert_eq!(cached.b, dense.b, "cap {cap}");
+            assert_eq!(cached.iterations, dense.iterations, "cap {cap}");
+            assert_eq!(cached.violation, dense.violation, "cap {cap}");
+        }
+    }
+
+    #[test]
+    fn cached_solver_subset_matches_dense_on_gathered_problem() {
+        let xs: Vec<f64> = (0..40).map(|i| i as f64 / 5.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x * x * 0.2 - x).collect();
+        let subset: Vec<usize> = (0..40).filter(|i| i % 3 != 0).collect();
+        let sub_x: Vec<f64> = subset.iter().map(|&i| xs[i]).collect();
+        let sub_y: Vec<f64> = subset.iter().map(|&i| ys[i]).collect();
+        let k = rbf_kernel_matrix(&sub_x, &sub_x, 1, 0.5);
+        let dense = solve_epsilon_svr(&k, &sub_y, 100.0, 0.05, 1e-4, 50_000).unwrap();
+        let mut cache = KernelCache::new(&xs, 1, 0.5, 0);
+        let cached = solve_epsilon_svr_cached(
+            &mut cache,
+            Some(&subset),
+            &sub_y,
+            100.0,
+            0.05,
+            1e-4,
+            50_000,
+            &SmoOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(cached.beta, dense.beta);
+        assert_eq!(cached.b, dense.b);
+        assert_eq!(cached.iterations, dense.iterations);
+    }
+
+    #[test]
+    fn shrinking_converges_to_equivalent_model() {
+        // Shrinking may walk a different trajectory, but the returned model
+        // must satisfy the same KKT tolerance and predict the same surface.
+        let xs: Vec<f64> = (0..60).map(|i| i as f64 / 6.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| (x * 0.8).cos() * 5.0 + x).collect();
+        let k = rbf_kernel_matrix(&xs, &xs, 1, 0.6);
+        let dense = solve_epsilon_svr(&k, &ys, 500.0, 0.02, 1e-4, 200_000).unwrap();
+        let mut cache = KernelCache::new(&xs, 1, 0.6, 0);
+        let opts = SmoOptions {
+            shrink: true,
+            shrink_every: 50,
+        };
+        let shr = solve_epsilon_svr_cached(
+            &mut cache, None, &ys, 500.0, 0.02, 1e-4, 200_000, &opts,
+        )
+        .unwrap();
+        assert!(shr.violation <= 1e-4 + 1e-9, "violation {}", shr.violation);
+        // Equality constraint survives shrinking exactly.
+        let sum: f64 = shr.beta.iter().sum();
+        assert!(sum.abs() < 1e-6, "sum beta {sum}");
+        for b in &shr.beta {
+            assert!(b.abs() <= 500.0 + 1e-9);
+        }
+        // Predictions agree within the epsilon-tube scale.
+        let pd = predict(&dense.beta, dense.b, &xs, &xs, 1, 0.6);
+        let ps = predict(&shr.beta, shr.b, &xs, &xs, 1, 0.6);
+        for (a, b) in pd.iter().zip(&ps) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn predict_blocked_matches_predict_bitwise() {
+        let (xs, sol) = train_1d(|x| (x * 0.5).sin() * 2.0 + 1.0, 0.8, 200.0, 0.02);
+        let queries: Vec<f64> = (0..500).map(|i| i as f64 / 83.0).collect();
+        let base = predict(&sol.beta, sol.b, &xs, &queries, 1, 0.8);
+        for block in [1usize, 7, 64, 1000] {
+            let blocked = predict_blocked(&sol.beta, sol.b, &xs, &queries, 1, 0.8, block);
+            assert_eq!(base, blocked, "block {block}");
         }
     }
 

@@ -4,7 +4,10 @@
 //! * [`linalg`] — dense solves for the power-model regression;
 //! * [`metrics`] — MAE / PAE (Eq. 10) / RMSE;
 //! * [`stats`] — means, trapezoid integration, deterministic shuffles;
-//! * [`rng`] — xoshiro256++ deterministic RNG (replaces `rand`);
+//! * [`rng`] — xoshiro256++ deterministic RNG with split-seed streams
+//!   (replaces `rand`);
+//! * [`pool`] — scoped-thread worker pool with a deterministic result
+//!   order (replaces `rayon`);
 //! * [`json`] — JSON value/parser/writer (replaces `serde_json`);
 //! * [`bench`] — benchmark harness (replaces `criterion`);
 //! * [`prop`] — property-testing helper (replaces `proptest`);
@@ -16,6 +19,7 @@ pub mod json;
 pub mod linalg;
 pub mod logging;
 pub mod metrics;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;
@@ -23,3 +27,4 @@ pub mod tempdir;
 
 pub use linalg::{lstsq, solve};
 pub use metrics::{mae, mape, pae, rmse};
+pub use pool::WorkerPool;

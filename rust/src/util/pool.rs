@@ -1,0 +1,281 @@
+//! Scoped-thread worker pool (std-only) — the execution layer of the
+//! parallel experiment engine.
+//!
+//! # Determinism contract
+//!
+//! [`WorkerPool::run`] executes `jobs` independent closures `f(0..jobs)`
+//! and returns their results **ordered by job index**, regardless of the
+//! thread count or scheduling. A job must derive all of its randomness
+//! from its index (see [`crate::util::rng::Rng::split_seed`]) and must not
+//! read shared mutable state; under that discipline the output of
+//! `run(n, f)` is **bit-identical** for 1 thread and for N threads — the
+//! property the determinism test suite locks down.
+//!
+//! Work distribution is dynamic (an atomic cursor, one job at a time), so
+//! heterogeneous job costs — e.g. 1-core vs 32-core characterization runs
+//! — balance automatically; the result order never depends on it.
+//!
+//! Worker panics propagate to the caller via `resume_unwind`, so test
+//! assertions inside jobs behave exactly as in sequential code.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+use crate::Result;
+
+/// A fixed-width pool of scoped worker threads.
+#[derive(Debug, Clone)]
+pub struct WorkerPool {
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Create a pool with `threads` workers; `0` means one worker per
+    /// available hardware thread.
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        } else {
+            threads
+        };
+        WorkerPool { threads }
+    }
+
+    /// Configured worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `jobs` closures and collect their results in job-index order.
+    ///
+    /// With one worker (or one job) everything runs inline on the calling
+    /// thread — no spawn overhead, identical results.
+    pub fn run<T, F>(&self, jobs: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if jobs == 0 {
+            return Vec::new();
+        }
+        let workers = self.threads.min(jobs);
+        if workers <= 1 {
+            return (0..jobs).map(f).collect();
+        }
+
+        let cursor = AtomicUsize::new(0);
+        let cursor_ref = &cursor;
+        let f_ref = &f;
+        let buckets: Vec<Vec<(usize, T)>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    scope.spawn(move || {
+                        let mut out = Vec::new();
+                        loop {
+                            let i = cursor_ref.fetch_add(1, Ordering::Relaxed);
+                            if i >= jobs {
+                                break;
+                            }
+                            out.push((i, f_ref(i)));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| match h.join() {
+                    Ok(v) => v,
+                    Err(panic) => std::panic::resume_unwind(panic),
+                })
+                .collect()
+        });
+
+        // Re-assemble in job order: scheduling cannot affect the output.
+        let mut slots: Vec<Option<T>> = (0..jobs).map(|_| None).collect();
+        for bucket in buckets {
+            for (i, v) in bucket {
+                slots[i] = Some(v);
+            }
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("pool job produced no result"))
+            .collect()
+    }
+
+    /// Like [`WorkerPool::run`] for fallible jobs: returns the first error
+    /// in job-index order, or all results.
+    ///
+    /// Fails fast: once any job errors, workers stop pulling new jobs
+    /// (in-flight jobs finish). The returned error is still deterministic
+    /// — the cursor hands out jobs in index order, so the lowest-index
+    /// failing job is always executed before cancellation can skip it.
+    pub fn try_run<T, F>(&self, jobs: usize, f: F) -> Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(usize) -> Result<T> + Sync,
+    {
+        if jobs == 0 {
+            return Ok(Vec::new());
+        }
+        let workers = self.threads.min(jobs);
+        if workers <= 1 {
+            let mut out = Vec::with_capacity(jobs);
+            for i in 0..jobs {
+                out.push(f(i)?);
+            }
+            return Ok(out);
+        }
+
+        let cursor = AtomicUsize::new(0);
+        let cancelled = AtomicBool::new(false);
+        let cursor_ref = &cursor;
+        let cancelled_ref = &cancelled;
+        let f_ref = &f;
+        let buckets: Vec<Vec<(usize, Result<T>)>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    scope.spawn(move || {
+                        let mut out = Vec::new();
+                        loop {
+                            if cancelled_ref.load(Ordering::Relaxed) {
+                                break;
+                            }
+                            let i = cursor_ref.fetch_add(1, Ordering::Relaxed);
+                            if i >= jobs {
+                                break;
+                            }
+                            let r = f_ref(i);
+                            if r.is_err() {
+                                cancelled_ref.store(true, Ordering::Relaxed);
+                            }
+                            out.push((i, r));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| match h.join() {
+                    Ok(v) => v,
+                    Err(panic) => std::panic::resume_unwind(panic),
+                })
+                .collect()
+        });
+
+        let mut slots: Vec<Option<Result<T>>> = (0..jobs).map(|_| None).collect();
+        for bucket in buckets {
+            for (i, r) in bucket {
+                slots[i] = Some(r);
+            }
+        }
+        let mut out = Vec::with_capacity(jobs);
+        let mut first_err: Option<crate::Error> = None;
+        for slot in slots {
+            match slot {
+                Some(Ok(v)) => out.push(v),
+                Some(Err(e)) => {
+                    first_err = first_err.or(Some(e));
+                }
+                None => {} // skipped after cancellation
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(out),
+        }
+    }
+}
+
+impl Default for WorkerPool {
+    fn default() -> Self {
+        WorkerPool::new(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn results_in_job_order() {
+        for threads in [1, 2, 4, 8] {
+            let pool = WorkerPool::new(threads);
+            let out = pool.run(100, |i| i * i);
+            assert_eq!(out.len(), 100);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i * i, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_job_runs_exactly_once() {
+        static COUNT: AtomicUsize = AtomicUsize::new(0);
+        let pool = WorkerPool::new(4);
+        let out = pool.run(257, |i| {
+            COUNT.fetch_add(1, Ordering::SeqCst);
+            i
+        });
+        assert_eq!(COUNT.load(Ordering::SeqCst), 257);
+        let distinct: HashSet<usize> = out.into_iter().collect();
+        assert_eq!(distinct.len(), 257);
+    }
+
+    #[test]
+    fn parallel_matches_sequential_bitwise() {
+        // Per-job seeded computation: the determinism contract in action.
+        let job = |i: usize| {
+            let mut rng = crate::util::rng::Rng::seed_from_u64(
+                crate::util::rng::Rng::split_seed(42, i as u64),
+            );
+            (0..50).map(|_| rng.f64()).sum::<f64>()
+        };
+        let seq = WorkerPool::new(1).run(64, job);
+        let par = WorkerPool::new(7).run(64, job);
+        assert_eq!(seq, par, "bit-identical across thread counts");
+    }
+
+    #[test]
+    fn zero_jobs_and_zero_threads() {
+        let pool = WorkerPool::new(0);
+        assert!(pool.threads() >= 1);
+        let out: Vec<usize> = pool.run(0, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn try_run_surfaces_first_error_in_order() {
+        let pool = WorkerPool::new(4);
+        let res = pool.try_run(10, |i| {
+            if i == 3 || i == 7 {
+                Err(crate::Error::Data(format!("job {i}")))
+            } else {
+                Ok(i)
+            }
+        });
+        match res {
+            Err(crate::Error::Data(m)) => assert_eq!(m, "job 3"),
+            other => panic!("expected Data error, got {other:?}"),
+        }
+        let ok = pool.try_run(10, Ok).unwrap();
+        assert_eq!(ok, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "job 5 panicked")]
+    fn worker_panics_propagate() {
+        let pool = WorkerPool::new(3);
+        pool.run(16, |i| {
+            if i == 5 {
+                panic!("job 5 panicked");
+            }
+            i
+        });
+    }
+}

@@ -28,6 +28,10 @@ pub struct RunConfig {
     pub seed: u64,
     /// Safety cap on simulated seconds.
     pub max_sim_s: f64,
+    /// Worker threads for campaign/comparison fan-out (0 = one per
+    /// hardware thread). Results are bit-identical for any value — see
+    /// `util::pool` for the determinism contract.
+    pub threads: usize,
 }
 
 impl Default for RunConfig {
@@ -37,6 +41,7 @@ impl Default for RunConfig {
             work_noise: 0.01,
             seed: 1,
             max_sim_s: 100_000.0,
+            threads: 0,
         }
     }
 }
@@ -273,6 +278,7 @@ mod tests {
             work_noise: 0.0,
             seed: 3,
             max_sim_s: 1e6,
+            ..Default::default()
         }
     }
 

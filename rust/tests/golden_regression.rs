@@ -1,0 +1,126 @@
+//! Golden regression test: pins the energy-optimal (frequency, cores)
+//! answer per (application, input) on a fixed-seed small grid, so future
+//! refactors cannot silently shift the paper's Tables 2–5 answers.
+//!
+//! Bootstrap protocol: the first run on a machine with a toolchain writes
+//! `tests/golden/optima.json` and passes (with a loud note to commit the
+//! file); every later run compares strictly. Delete the file and rerun to
+//! re-bless after an *intentional* behavior change. Only integer outputs
+//! (MHz, core counts) are pinned — argmin identity is robust to last-ulp
+//! libm differences across platforms, unlike raw float surfaces.
+
+use std::path::PathBuf;
+
+use ecopt::config::{CampaignSpec, ExperimentConfig, SvrSpec};
+use ecopt::coordinator::Coordinator;
+use ecopt::util::json::Json;
+use ecopt::workloads::runner::RunConfig;
+
+const ALL_APPS: [&str; 4] = ["fluidanimate", "raytrace", "swaptions", "blackscholes"];
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/optima.json")
+}
+
+/// One pinned row: (app, input, proposed MHz, proposed cores).
+fn observed_rows() -> Vec<(String, u32, u32, usize)> {
+    let cfg = ExperimentConfig {
+        campaign: CampaignSpec {
+            freq_step_mhz: 500, // 1200, 1700, 2200
+            core_max: 8,
+            inputs: vec![1, 2],
+            ..Default::default()
+        },
+        svr: SvrSpec {
+            folds: 3,
+            c: 1000.0,
+            epsilon: 0.5,
+            max_iter: 100_000,
+            ..Default::default()
+        },
+        workloads: ALL_APPS.iter().map(|s| s.to_string()).collect(),
+        ..Default::default()
+    };
+    let mut coord = Coordinator::new(cfg).with_run_config(RunConfig {
+        dt: 0.25,
+        work_noise: 0.0, // noise-free: the golden grid must be exact
+        seed: 0x601D, // "gold"
+        max_sim_s: 1e6,
+        threads: 0,
+    });
+    let res = coord.run_all().unwrap();
+    let mut rows = Vec::new();
+    for app in &res.apps {
+        for row in &app.comparisons {
+            rows.push((
+                app.app.clone(),
+                row.input,
+                row.proposed_f_mhz,
+                row.proposed_cores,
+            ));
+        }
+    }
+    rows
+}
+
+fn rows_to_json(rows: &[(String, u32, u32, usize)]) -> Json {
+    Json::obj(vec![
+        ("version", Json::Num(1.0)),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|(app, input, f, p)| {
+                        Json::obj(vec![
+                            ("app", Json::Str(app.clone())),
+                            ("input", Json::Num(*input as f64)),
+                            ("f_mhz", Json::Num(*f as f64)),
+                            ("cores", Json::Num(*p as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[test]
+fn energy_optima_pinned_on_fixed_seed_grid() {
+    let rows = observed_rows();
+    // Structural sanity holds on every run, golden file or not.
+    assert_eq!(rows.len(), ALL_APPS.len() * 2, "4 apps x 2 inputs");
+    for (app, input, f, p) in &rows {
+        assert!(
+            [1200, 1700, 2200].contains(f),
+            "{app} input {input}: off-grid frequency {f}"
+        );
+        assert!(
+            (1..=32).contains(p),
+            "{app} input {input}: core count {p} outside the node"
+        );
+    }
+
+    let path = golden_path();
+    let observed = rows_to_json(&rows).dump();
+    if !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &observed).unwrap();
+        eprintln!(
+            "golden_regression: BOOTSTRAPPED {} — commit this file to pin \
+             the Tables 2–5 optima",
+            path.display()
+        );
+        return;
+    }
+    let golden = std::fs::read_to_string(&path).unwrap();
+    // Compare parsed values (not raw bytes) so whitespace-only edits to
+    // the committed file stay immaterial.
+    let golden_v = Json::parse(&golden).unwrap();
+    let observed_v = Json::parse(&observed).unwrap();
+    assert_eq!(
+        golden_v, observed_v,
+        "energy-optimal configurations drifted from {} — if intentional, \
+         delete the file and rerun to re-bless",
+        path.display()
+    );
+}

@@ -32,6 +32,7 @@ fn fast_run() -> RunConfig {
         work_noise: 0.005,
         seed: 77,
         max_sim_s: 1e6,
+        ..Default::default()
     }
 }
 

@@ -270,6 +270,178 @@ fn prop_comparison_row_savings_sign_consistency() {
 }
 
 #[test]
+fn prop_cached_smo_matches_dense_smo_bitwise() {
+    // ISSUE 1: SMO with the LRU kernel-row cache must match SMO over the
+    // precomputed matrix exactly — beta, bias, and iteration count — on
+    // random problems, including tiny cache capacities that force heavy
+    // eviction traffic.
+    property("cached SMO == dense SMO (bitwise)", 20, |rng| {
+        let l = 12 + rng.below(30);
+        let gamma = rng.range_f64(0.1, 1.5);
+        let c = rng.range_f64(5.0, 2000.0);
+        let eps = rng.range_f64(0.01, 0.3);
+        let mut xs = Vec::with_capacity(l);
+        let mut ys = Vec::with_capacity(l);
+        for _ in 0..l {
+            let x = rng.range_f64(0.0, 8.0);
+            xs.push(x);
+            ys.push((x * 0.6).sin() * rng.range_f64(1.0, 6.0) + 0.4 * x);
+        }
+        let k = smo::rbf_kernel_matrix(&xs, &xs, 1, gamma);
+        let dense = smo::solve_epsilon_svr(&k, &ys, c, eps, 1e-3, 30_000).unwrap();
+        let cap = 2 + rng.below(l); // small caps exercise the LRU
+        let mut cache = smo::KernelCache::new(&xs, 1, gamma, cap);
+        let cached = smo::solve_epsilon_svr_cached(
+            &mut cache,
+            None,
+            &ys,
+            c,
+            eps,
+            1e-3,
+            30_000,
+            &smo::SmoOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(dense.beta, cached.beta, "beta diverged (cap {cap})");
+        assert_eq!(dense.b, cached.b, "bias diverged");
+        assert_eq!(dense.iterations, cached.iterations, "trajectory diverged");
+        assert_eq!(dense.violation, cached.violation);
+    });
+}
+
+#[test]
+fn prop_batched_energy_grid_matches_pointwise() {
+    // ISSUE 1: the batched, cache-blocked energy-grid evaluator must agree
+    // with point-by-point evaluation bit for bit, and the optimizer's
+    // argmin must be the pointwise surface minimum.
+    property("batched energy grid == pointwise", 8, |rng| {
+        let mut samples = Vec::new();
+        for f in (1200u32..=2200).step_by(250) {
+            for p in [1usize, 4, 8, 16, 32] {
+                for n in 1..=2u32 {
+                    let t = rng.range_f64(40.0, 90.0) * n as f64 * (0.1 + 0.9 / p as f64)
+                        * 2200.0
+                        / f as f64;
+                    samples.push(TrainSample {
+                        f_mhz: f,
+                        cores: p,
+                        input: n,
+                        time_s: t,
+                    });
+                }
+            }
+        }
+        let svr = SvrModel::train(&samples, &SvrSpec::default()).unwrap();
+        let node = NodeSpec::default();
+        let em = EnergyModel::new(PowerModel::paper_eq9(), svr, node.clone());
+        let grid = config_grid(&CampaignSpec::default(), &node);
+        let n = 1 + rng.below(2) as u32;
+        let batched = em.surface(&grid, n);
+        let pointwise = em.surface_pointwise(&grid, n);
+        for (a, b) in batched.iter().zip(&pointwise) {
+            assert_eq!(a.pred_time_s, b.pred_time_s, "({}, {})", a.f_mhz, a.cores);
+            assert_eq!(a.power_w, b.power_w);
+            assert_eq!(a.energy_j, b.energy_j);
+        }
+        let opt = em.optimize(&grid, n, &Constraints::default()).unwrap();
+        let min = pointwise
+            .iter()
+            .map(|p| p.energy_j)
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(opt.pred_energy_j, min);
+    });
+}
+
+#[test]
+fn prop_optimizer_never_violates_constraints() {
+    // ISSUE 1: whatever random `Constraints` we throw at it, the optimizer
+    // either errors (nothing feasible) or returns a config inside every
+    // bound — and it is the cheapest feasible grid point.
+    let mut samples = Vec::new();
+    for f in (1200u32..=2200).step_by(250) {
+        for p in [1usize, 2, 4, 8, 16, 32] {
+            for n in 1..=2u32 {
+                let t = 60.0 * n as f64 * (0.08 + 0.92 / p as f64) * 2200.0 / f as f64;
+                samples.push(TrainSample {
+                    f_mhz: f,
+                    cores: p,
+                    input: n,
+                    time_s: t,
+                });
+            }
+        }
+    }
+    let svr = SvrModel::train(&samples, &SvrSpec::default()).unwrap();
+    let node = NodeSpec::default();
+    let em = EnergyModel::new(PowerModel::paper_eq9(), svr, node.clone());
+    let grid = config_grid(&CampaignSpec::default(), &node);
+
+    property("constrained optimizer stays feasible", 60, |rng| {
+        let maybe = |rng: &mut ecopt::util::rng::Rng, lo: f64, hi: f64| {
+            if rng.f64() < 0.6 {
+                Some(rng.range_f64(lo, hi))
+            } else {
+                None
+            }
+        };
+        let mut min_f = maybe(rng, 1100.0, 2300.0).map(|v| v as u32);
+        let mut max_f = maybe(rng, 1100.0, 2300.0).map(|v| v as u32);
+        if let (Some(a), Some(b)) = (min_f, max_f) {
+            if a > b {
+                std::mem::swap(&mut min_f, &mut max_f);
+            }
+        }
+        let mut min_p = maybe(rng, 1.0, 33.0).map(|v| v as usize);
+        let mut max_p = maybe(rng, 1.0, 33.0).map(|v| v as usize);
+        if let (Some(a), Some(b)) = (min_p, max_p) {
+            if a > b {
+                std::mem::swap(&mut min_p, &mut max_p);
+            }
+        }
+        let cons = Constraints {
+            max_time_s: maybe(rng, 0.5, 400.0),
+            min_f_mhz: min_f,
+            max_f_mhz: max_f,
+            min_cores: min_p,
+            max_cores: max_p,
+        };
+        let input = 1 + rng.below(2) as u32;
+        let feasible = |p: &ecopt::energy::EnergyPoint| {
+            cons.max_time_s.map_or(true, |t| p.pred_time_s <= t)
+                && cons.min_f_mhz.map_or(true, |f| p.f_mhz >= f)
+                && cons.max_f_mhz.map_or(true, |f| p.f_mhz <= f)
+                && cons.min_cores.map_or(true, |c| p.cores >= c)
+                && cons.max_cores.map_or(true, |c| p.cores <= c)
+        };
+        let surface = em.surface_pointwise(&grid, input);
+        let brute = surface
+            .iter()
+            .filter(|p| feasible(p))
+            .map(|p| p.energy_j)
+            .fold(f64::INFINITY, f64::min);
+        match em.optimize(&grid, input, &cons) {
+            Ok(opt) => {
+                assert!(cons.min_f_mhz.map_or(true, |f| opt.f_mhz >= f), "min_f violated");
+                assert!(cons.max_f_mhz.map_or(true, |f| opt.f_mhz <= f), "max_f violated");
+                assert!(cons.min_cores.map_or(true, |c| opt.cores >= c), "min_cores violated");
+                assert!(cons.max_cores.map_or(true, |c| opt.cores <= c), "max_cores violated");
+                assert!(
+                    cons.max_time_s.map_or(true, |t| opt.pred_time_s <= t),
+                    "max_time violated"
+                );
+                assert_eq!(opt.pred_energy_j, brute, "not the cheapest feasible point");
+            }
+            Err(_) => {
+                assert!(
+                    brute.is_infinite(),
+                    "optimizer errored but feasible points exist (min {brute})"
+                );
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_persisted_models_predict_identically() {
     property("SvrModel JSON roundtrip preserves predictions", 10, |rng| {
         let mut samples = Vec::new();

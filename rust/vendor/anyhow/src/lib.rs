@@ -1,0 +1,109 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build image has no crates.io access, so this vendored crate provides
+//! the tiny subset the workspace uses: a message-carrying [`Error`], the
+//! [`Result`] alias, and the [`anyhow!`] / [`ensure!`] / [`bail!`] macros.
+//! Any `std::error::Error` converts into [`Error`] via `?`.
+
+use std::fmt;
+
+/// A dynamic error carrying a rendered message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `fn main() -> anyhow::Result<()>` prints through Debug; show the
+        // message, not a struct dump.
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+// Note: `Error` deliberately does NOT implement `std::error::Error`, so this
+// blanket conversion cannot collide with `impl<T> From<T> for T`.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — like `std::result::Result` with a defaulted error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($t:tt)*) => { $crate::Error::msg(format!($($t)*)) }
+}
+
+/// Return early with an error if a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!("condition failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+/// Return early with a formatted error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => { return Err($crate::anyhow!($($t)*)) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn message_roundtrip() {
+        let e = anyhow!("bad {} of {}", 1, 2);
+        assert_eq!(e.to_string(), "bad 1 of 2");
+        assert_eq!(format!("{e:?}"), "bad 1 of 2");
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        fn inner() -> Result<()> {
+            let _n: u32 = "nope".parse()?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn check(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x > 100 {
+                bail!("too big");
+            }
+            Ok(x)
+        }
+        assert!(check(5).is_ok());
+        assert!(check(-1).is_err());
+        assert!(check(101).is_err());
+    }
+}

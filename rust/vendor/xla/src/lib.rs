@@ -1,0 +1,170 @@
+//! Offline stub of the `xla` PJRT binding.
+//!
+//! The build image carries no libxla, so this vendored crate provides the
+//! exact API surface `ecopt::runtime` compiles against. Every operation
+//! that would touch PJRT returns [`Error`] with an "unavailable" message;
+//! the runtime layer treats that like missing artifacts and falls back to
+//! the pure-Rust decision path. Swapping in a real `xla` binding requires
+//! no source changes in `ecopt`.
+
+use std::fmt;
+use std::path::Path;
+
+/// XLA-layer error (message only in the stub).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: XLA/PJRT is not available in this offline build (stub crate)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Host literal: shape + f32 payload (the only dtype ecopt uses).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Vec<f32>,
+}
+
+impl Literal {
+    /// 1-D literal from a host slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            data: data.to_vec(),
+        }
+    }
+
+    /// Reshape to new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape to {:?} wants {} elements, literal has {}",
+                dims,
+                want,
+                self.data.len()
+            )));
+        }
+        Ok(Literal {
+            dims: dims.to_vec(),
+            data: self.data.clone(),
+        })
+    }
+
+    /// Literal dimensions.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Decompose a tuple literal — never produced by the stub.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+
+    /// Copy out typed host data — never produced by the stub.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+}
+
+/// Parsed HLO module handle (opaque in the stub).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an HLO text file — unavailable offline.
+    pub fn from_text_file(path: &Path) -> Result<HloModuleProto> {
+        Err(Error::unavailable(&format!(
+            "HloModuleProto::from_text_file({})",
+            path.display()
+        )))
+    }
+}
+
+/// Computation wrapper.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with host inputs — unavailable offline.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Create the CPU client — unavailable offline, so every consumer falls
+    /// back to its non-PJRT path.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("not available"));
+    }
+
+    #[test]
+    fn literal_shape_math() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.dims(), &[4]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert!(l.to_tuple().is_err());
+        assert!(l.to_vec::<f32>().is_err());
+    }
+}
