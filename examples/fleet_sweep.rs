@@ -1,0 +1,59 @@
+//! Fleet sweep: the architecture-transfer claim in one example.
+//!
+//! Runs the complete pipeline (stress -> Eq. 7 fit -> characterize ->
+//! SVR -> Eq. 8 argmin -> ondemand comparison) across every profile in
+//! the architecture registry — the paper's dual Xeon, a many-core
+//! low-frequency part, an aggressive-turbo desktop part, and an
+//! asymmetric big.LITTLE edge part — and prints the cross-architecture
+//! savings report showing how the energy-optimal (frequency, cores)
+//! shifts per machine.
+//!
+//! Run: `cargo run --release --example fleet_sweep`
+
+use ecopt::arch::registry;
+use ecopt::config::{CampaignSpec, ExperimentConfig, SvrSpec};
+use ecopt::coordinator::run_fleet;
+use ecopt::report;
+use ecopt::workloads::runner::RunConfig;
+
+fn main() -> anyhow::Result<()> {
+    // Reduced grids so the example finishes in seconds: 3 ladder points
+    // per profile (freq_points adapts to each ladder), 8 core counts,
+    // 2 input sizes, 2 applications.
+    let cfg = ExperimentConfig {
+        campaign: CampaignSpec {
+            freq_points: 3,
+            core_max: 8,
+            inputs: vec![1, 2],
+            ..Default::default()
+        },
+        svr: SvrSpec {
+            folds: 3,
+            c: 1000.0,
+            epsilon: 0.5,
+            max_iter: 100_000,
+            ..Default::default()
+        },
+        workloads: vec!["swaptions".into(), "raytrace".into()],
+        ..Default::default()
+    };
+    let rc = RunConfig {
+        dt: 0.25,
+        seed: cfg.campaign.seed,
+        ..Default::default()
+    };
+
+    let profiles = registry();
+    eprintln!(
+        "sweeping {} architecture profiles: {}",
+        profiles.len(),
+        profiles
+            .iter()
+            .map(|p| p.name.as_str())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    let fleet = run_fleet(&cfg, &rc, &profiles)?;
+    println!("{}", report::fleet_report(&fleet));
+    Ok(())
+}

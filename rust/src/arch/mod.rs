@@ -1,0 +1,649 @@
+//! Architecture registry (system S15): declarative node descriptors that
+//! turn the single hard-coded dual-Xeon testbed into an open-ended
+//! scenario engine.
+//!
+//! The paper's methodology is architecture-aware but application-agnostic:
+//! once a machine's DVFS ladder and power constants are characterized, the
+//! same pipeline (stress → Eq. 7 fit → ε-SVR → Eq. 8 argmin) should find
+//! its energy-optimal configuration. An [`ArchProfile`] captures exactly
+//! what that transfer needs:
+//!
+//! * the **DVFS ladder** (min/max/step, shared by all clusters — the
+//!   per-cluster-ladder generalization is deliberately out of scope);
+//! * the **core topology**: one or more [`ClusterSpec`]s (a cluster is a
+//!   socket on SMP parts, a big/LITTLE cluster on asymmetric parts), each
+//!   with physical cores, SMT threads per core, and a relative
+//!   performance scale;
+//! * **per-cluster power coefficients** (the ground truth the fitted
+//!   Eq. 7 model has to approximate) plus a node-level static floor and
+//!   noise/drift process;
+//! * **sensor characteristics** ([`SensorSpec`]): sampling period, ADC
+//!   quantization, and dropout rate of the power-measurement channel.
+//!
+//! [`registry`] ships four built-ins spanning the design space the
+//! related work (Calore et al., Coutinho et al.) shows shifts the optima:
+//! the paper-like dual Xeon, a many-core low-frequency part, an
+//! aggressive-turbo desktop part, and an asymmetric big.LITTLE edge part.
+//!
+//! Logical-CPU layout contract (everything downstream relies on it):
+//! clusters are laid out contiguously in declaration order; within a
+//! cluster, all physical-core primary threads come first, SMT sibling
+//! threads after — so activating `p` cores contiguously fills distinct
+//! physical cores of cluster 0 before touching siblings or cluster 1,
+//! matching how HPC operators pin threads.
+
+use crate::config::{Mhz, NodeSpec};
+use crate::util::json::{FromJson, Json, ToJson};
+use crate::{Error, Result};
+
+/// Power-measurement channel characteristics (what `sensors::IpmiMeter`
+/// is built from).
+#[derive(Debug, Clone)]
+pub struct SensorSpec {
+    /// Sampling period in seconds (IPMI ~1.0, RAPL-style ~0.2).
+    pub period_s: f64,
+    /// ADC quantization step in watts (0 disables).
+    pub quantum_w: f64,
+    /// Probability of missing a sample beat, in [0, 1).
+    pub dropout: f64,
+}
+
+impl Default for SensorSpec {
+    fn default() -> Self {
+        SensorSpec {
+            period_s: 1.0,
+            quantum_w: 0.1,
+            dropout: 0.0,
+        }
+    }
+}
+
+impl ToJson for SensorSpec {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("period_s", Json::Num(self.period_s)),
+            ("quantum_w", Json::Num(self.quantum_w)),
+            ("dropout", Json::Num(self.dropout)),
+        ])
+    }
+}
+
+impl FromJson for SensorSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let d = SensorSpec::default();
+        Ok(SensorSpec {
+            period_s: match j.opt("period_s") {
+                Some(v) => v.as_f64()?,
+                None => d.period_s,
+            },
+            quantum_w: match j.opt("quantum_w") {
+                Some(v) => v.as_f64()?,
+                None => d.quantum_w,
+            },
+            dropout: match j.opt("dropout") {
+                Some(v) => v.as_f64()?,
+                None => d.dropout,
+            },
+        })
+    }
+}
+
+/// One homogeneous group of cores: a socket on SMP machines, a big or
+/// LITTLE cluster on asymmetric ones.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    /// Cluster name ("socket0", "big", "little", ...).
+    pub name: String,
+    /// Physical cores in the cluster.
+    pub cores: usize,
+    /// SMT threads per physical core (1 = no SMT).
+    pub smt: usize,
+    /// Throughput of one primary thread relative to the reference core
+    /// (the paper's Xeon core = 1.0).
+    pub perf_scale: f64,
+    /// Extra throughput an SMT sibling thread adds, as a fraction of the
+    /// primary thread's (0.3 = a loaded sibling adds 30 %).
+    pub smt_perf: f64,
+    /// Extra dynamic power an SMT sibling thread draws, as a fraction of
+    /// the primary thread's.
+    pub smt_power: f64,
+    /// Per-core dynamic power, cubic term: W / GHz^3 (Eq. 7's c1 analogue).
+    pub dyn_c1: f64,
+    /// Per-core dynamic power, linear (leakage) term: W / GHz.
+    pub dyn_c2: f64,
+    /// Static power drawn while the cluster has >= 1 online core
+    /// (uncore/package overhead; Eq. 7's c4 analogue).
+    pub uncore_w: f64,
+    /// Fraction of a core's dynamic power still drawn when idle.
+    pub idle_frac: f64,
+}
+
+impl ClusterSpec {
+    /// Schedulable CPUs this cluster contributes (cores x SMT).
+    pub fn logical_cpus(&self) -> usize {
+        self.cores * self.smt
+    }
+}
+
+impl ToJson for ClusterSpec {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("cores", Json::Num(self.cores as f64)),
+            ("smt", Json::Num(self.smt as f64)),
+            ("perf_scale", Json::Num(self.perf_scale)),
+            ("smt_perf", Json::Num(self.smt_perf)),
+            ("smt_power", Json::Num(self.smt_power)),
+            ("dyn_c1", Json::Num(self.dyn_c1)),
+            ("dyn_c2", Json::Num(self.dyn_c2)),
+            ("uncore_w", Json::Num(self.uncore_w)),
+            ("idle_frac", Json::Num(self.idle_frac)),
+        ])
+    }
+}
+
+impl FromJson for ClusterSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(ClusterSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            cores: j.get("cores")?.as_usize()?,
+            smt: match j.opt("smt") {
+                Some(v) => v.as_usize()?,
+                None => 1,
+            },
+            perf_scale: match j.opt("perf_scale") {
+                Some(v) => v.as_f64()?,
+                None => 1.0,
+            },
+            smt_perf: match j.opt("smt_perf") {
+                Some(v) => v.as_f64()?,
+                None => 0.3,
+            },
+            smt_power: match j.opt("smt_power") {
+                Some(v) => v.as_f64()?,
+                None => 0.35,
+            },
+            dyn_c1: j.get("dyn_c1")?.as_f64()?,
+            dyn_c2: j.get("dyn_c2")?.as_f64()?,
+            uncore_w: j.get("uncore_w")?.as_f64()?,
+            idle_frac: match j.opt("idle_frac") {
+                Some(v) => v.as_f64()?,
+                None => 0.1,
+            },
+        })
+    }
+}
+
+/// Declarative description of one node architecture — everything `node`,
+/// `node::power`, `sensors`, and the campaign grids are constructed from.
+#[derive(Debug, Clone)]
+pub struct ArchProfile {
+    /// Registry key ("xeon-dual-e5-2698v3", ...).
+    pub name: String,
+    /// Clusters in activation order (cluster 0's cores come online first).
+    pub clusters: Vec<ClusterSpec>,
+    /// DVFS ladder, shared by all clusters.
+    pub freq_min_mhz: Mhz,
+    pub freq_max_mhz: Mhz,
+    pub freq_step_mhz: Mhz,
+    /// Node-level static power floor, watts (PSU, DRAM, board).
+    pub static_w: f64,
+    /// Gaussian measurement-channel noise std-dev, watts.
+    pub noise_w: f64,
+    /// Slow sinusoidal thermal drift amplitude, watts.
+    pub drift_w: f64,
+    /// Thermal drift period, seconds.
+    pub drift_period_s: f64,
+    /// Power-sensor channel characteristics.
+    pub sensor: SensorSpec,
+}
+
+impl ArchProfile {
+    /// Total schedulable CPUs across all clusters.
+    pub fn total_cores(&self) -> usize {
+        self.clusters.iter().map(|c| c.logical_cpus()).sum()
+    }
+
+    /// The full DVFS ladder in MHz, ascending.
+    pub fn ladder(&self) -> Vec<Mhz> {
+        let mut v = Vec::new();
+        let mut f = self.freq_min_mhz;
+        while f <= self.freq_max_mhz {
+            v.push(f);
+            f += self.freq_step_mhz;
+        }
+        v
+    }
+
+    /// Cluster index owning logical CPU `core` (see the layout contract in
+    /// the module docs). Panics if `core` is out of range.
+    pub fn cluster_of(&self, core: usize) -> usize {
+        let mut base = 0;
+        for (k, c) in self.clusters.iter().enumerate() {
+            base += c.logical_cpus();
+            if core < base {
+                return k;
+            }
+        }
+        panic!("core {core} beyond the {}-cpu node", self.total_cores());
+    }
+
+    /// Whether logical CPU `core` is an SMT sibling slot (not a physical
+    /// core's primary thread).
+    pub fn is_smt_sibling(&self, core: usize) -> bool {
+        let mut base = 0;
+        for c in &self.clusters {
+            let n = c.logical_cpus();
+            if core < base + n {
+                return core - base >= c.cores;
+            }
+            base += n;
+        }
+        panic!("core {core} beyond the {}-cpu node", self.total_cores());
+    }
+
+    /// Clusters powered when `p` CPUs are activated contiguously (the
+    /// generalization of the paper's per-socket accounting, Eq. 7's `s`).
+    pub fn active_clusters_for(&self, p: usize) -> usize {
+        let mut remaining = p;
+        let mut n = 0;
+        for c in &self.clusters {
+            if remaining == 0 {
+                break;
+            }
+            n += 1;
+            remaining = remaining.saturating_sub(c.logical_cpus());
+        }
+        n
+    }
+
+    /// Validate invariants; returns self for chaining.
+    pub fn validate(self) -> Result<Self> {
+        if self.clusters.is_empty() {
+            return Err(Error::Config(format!(
+                "profile '{}' has no clusters",
+                self.name
+            )));
+        }
+        for c in &self.clusters {
+            if c.cores == 0 || c.smt == 0 {
+                return Err(Error::Config(format!(
+                    "profile '{}' cluster '{}' must have >= 1 core and SMT thread",
+                    self.name, c.name
+                )));
+            }
+            if c.perf_scale <= 0.0 || c.dyn_c1 < 0.0 || c.dyn_c2 < 0.0 || c.uncore_w < 0.0 {
+                return Err(Error::Config(format!(
+                    "profile '{}' cluster '{}' has non-physical coefficients",
+                    self.name, c.name
+                )));
+            }
+            if !(0.0..=1.0).contains(&c.idle_frac) {
+                return Err(Error::Config(format!(
+                    "profile '{}' cluster '{}' idle_frac outside [0, 1]",
+                    self.name, c.name
+                )));
+            }
+        }
+        if self.freq_min_mhz == 0
+            || self.freq_step_mhz == 0
+            || self.freq_max_mhz < self.freq_min_mhz
+        {
+            return Err(Error::Config(format!(
+                "profile '{}': bad frequency ladder {}..{} step {}",
+                self.name, self.freq_min_mhz, self.freq_max_mhz, self.freq_step_mhz
+            )));
+        }
+        if self.sensor.period_s <= 0.0 || !(0.0..1.0).contains(&self.sensor.dropout) {
+            return Err(Error::Config(format!(
+                "profile '{}': bad sensor spec",
+                self.name
+            )));
+        }
+        Ok(self)
+    }
+
+    /// Adapt a legacy homogeneous [`NodeSpec`] (config-file path) into a
+    /// profile: one cluster per socket, identical coefficients, default
+    /// IPMI sensor. Behaviour is identical to the pre-registry simulator.
+    pub fn from_node_spec(spec: &NodeSpec) -> ArchProfile {
+        ArchProfile {
+            name: "custom-node".into(),
+            clusters: (0..spec.sockets)
+                .map(|s| ClusterSpec {
+                    name: format!("socket{s}"),
+                    cores: spec.cores_per_socket,
+                    smt: 1,
+                    perf_scale: 1.0,
+                    smt_perf: 0.0,
+                    smt_power: 0.0,
+                    dyn_c1: spec.power.gt_c1,
+                    dyn_c2: spec.power.gt_c2,
+                    uncore_w: spec.power.gt_socket,
+                    idle_frac: spec.power.idle_frac,
+                })
+                .collect(),
+            freq_min_mhz: spec.freq_min_mhz,
+            freq_max_mhz: spec.freq_max_mhz,
+            freq_step_mhz: spec.freq_step_mhz,
+            static_w: spec.power.gt_static,
+            noise_w: spec.power.noise_w,
+            drift_w: spec.power.drift_w,
+            drift_period_s: spec.power.drift_period_s,
+            sensor: SensorSpec::default(),
+        }
+    }
+}
+
+impl ToJson for ArchProfile {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("clusters", Json::arr(&self.clusters)),
+            ("freq_min_mhz", Json::Num(self.freq_min_mhz as f64)),
+            ("freq_max_mhz", Json::Num(self.freq_max_mhz as f64)),
+            ("freq_step_mhz", Json::Num(self.freq_step_mhz as f64)),
+            ("static_w", Json::Num(self.static_w)),
+            ("noise_w", Json::Num(self.noise_w)),
+            ("drift_w", Json::Num(self.drift_w)),
+            ("drift_period_s", Json::Num(self.drift_period_s)),
+            ("sensor", self.sensor.to_json()),
+        ])
+    }
+}
+
+impl FromJson for ArchProfile {
+    fn from_json(j: &Json) -> Result<Self> {
+        let mut clusters = Vec::new();
+        for c in j.get("clusters")?.as_arr()? {
+            clusters.push(ClusterSpec::from_json(c)?);
+        }
+        Ok(ArchProfile {
+            name: j.get("name")?.as_str()?.to_string(),
+            clusters,
+            freq_min_mhz: j.get("freq_min_mhz")?.as_u32()?,
+            freq_max_mhz: j.get("freq_max_mhz")?.as_u32()?,
+            freq_step_mhz: j.get("freq_step_mhz")?.as_u32()?,
+            static_w: j.get("static_w")?.as_f64()?,
+            noise_w: match j.opt("noise_w") {
+                Some(v) => v.as_f64()?,
+                None => 0.0,
+            },
+            drift_w: match j.opt("drift_w") {
+                Some(v) => v.as_f64()?,
+                None => 0.0,
+            },
+            drift_period_s: match j.opt("drift_period_s") {
+                Some(v) => v.as_f64()?,
+                None => 200.0,
+            },
+            sensor: match j.opt("sensor") {
+                Some(s) => SensorSpec::from_json(s)?,
+                None => SensorSpec::default(),
+            },
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built-in registry
+// ---------------------------------------------------------------------------
+
+/// The paper's testbed: dual-socket Xeon E5-2698 v3, 2 x 16 cores, HT off,
+/// 1.2–2.3 GHz, ~200 W static floor, 1 Hz IPMI. Numerically identical to
+/// `ArchProfile::from_node_spec(&NodeSpec::default())` apart from the name.
+pub fn xeon_dual() -> ArchProfile {
+    let mut p = ArchProfile::from_node_spec(&NodeSpec::default());
+    p.name = "xeon-dual-e5-2698v3".into();
+    for c in &mut p.clusters {
+        c.name = c.name.replace("socket", "xeon-socket");
+    }
+    p
+}
+
+/// A many-core low-frequency part (Knights-Landing-like): one cluster of
+/// 32 simple in-order cores with 2-way SMT (64 CPUs), 0.8–1.6 GHz, weak
+/// per-core dynamic power but a large uncore/mesh overhead, fast RAPL-ish
+/// sensor.
+pub fn manycore() -> ArchProfile {
+    ArchProfile {
+        name: "manycore-knl64".into(),
+        clusters: vec![ClusterSpec {
+            name: "tiles".into(),
+            cores: 32,
+            smt: 2,
+            perf_scale: 0.55,
+            smt_perf: 0.30,
+            smt_power: 0.35,
+            dyn_c1: 0.085,
+            dyn_c2: 0.38,
+            uncore_w: 18.0,
+            idle_frac: 0.10,
+        }],
+        freq_min_mhz: 800,
+        freq_max_mhz: 1600,
+        freq_step_mhz: 100,
+        static_w: 118.0,
+        noise_w: 1.2,
+        drift_w: 0.5,
+        drift_period_s: 180.0,
+        sensor: SensorSpec {
+            period_s: 0.5,
+            quantum_w: 0.25,
+            dropout: 0.0,
+        },
+    }
+}
+
+/// An aggressive-turbo desktop part (i9-like): 8 fast cores with SMT,
+/// 2.2–4.6 GHz — the cubic term dominates the small static floor, so the
+/// energy optimum sits well below the ladder top.
+pub fn desktop_turbo() -> ArchProfile {
+    ArchProfile {
+        name: "desktop-turbo-i9".into(),
+        clusters: vec![ClusterSpec {
+            name: "core-complex".into(),
+            cores: 8,
+            smt: 2,
+            perf_scale: 1.35,
+            smt_perf: 0.25,
+            smt_power: 0.30,
+            dyn_c1: 0.22,
+            dyn_c2: 0.60,
+            uncore_w: 14.0,
+            idle_frac: 0.06,
+        }],
+        freq_min_mhz: 2200,
+        freq_max_mhz: 4600,
+        freq_step_mhz: 200,
+        static_w: 32.0,
+        noise_w: 0.7,
+        drift_w: 0.4,
+        drift_period_s: 120.0,
+        sensor: SensorSpec {
+            period_s: 0.2,
+            quantum_w: 0.0625,
+            dropout: 0.0,
+        },
+    }
+}
+
+/// An asymmetric big.LITTLE mobile/edge part: 4 big cores + 4 LITTLE cores
+/// at 45 % of big-core throughput, 0.6–2.4 GHz, a ~1.6 W static floor, and
+/// a lossy 1 Hz PMIC sensor (2 % dropout).
+pub fn mobile_biglittle() -> ArchProfile {
+    ArchProfile {
+        name: "mobile-biglittle".into(),
+        clusters: vec![
+            ClusterSpec {
+                name: "big".into(),
+                cores: 4,
+                smt: 1,
+                perf_scale: 1.0,
+                smt_perf: 0.0,
+                smt_power: 0.0,
+                dyn_c1: 0.14,
+                dyn_c2: 0.22,
+                uncore_w: 0.9,
+                idle_frac: 0.05,
+            },
+            ClusterSpec {
+                name: "little".into(),
+                cores: 4,
+                smt: 1,
+                perf_scale: 0.45,
+                smt_perf: 0.0,
+                smt_power: 0.0,
+                dyn_c1: 0.035,
+                dyn_c2: 0.08,
+                uncore_w: 0.5,
+                idle_frac: 0.05,
+            },
+        ],
+        freq_min_mhz: 600,
+        freq_max_mhz: 2400,
+        freq_step_mhz: 200,
+        static_w: 1.6,
+        noise_w: 0.06,
+        drift_w: 0.03,
+        drift_period_s: 60.0,
+        sensor: SensorSpec {
+            period_s: 1.0,
+            quantum_w: 0.01,
+            dropout: 0.02,
+        },
+    }
+}
+
+/// The built-in profiles, in canonical fleet order.
+pub fn registry() -> Vec<ArchProfile> {
+    vec![xeon_dual(), manycore(), desktop_turbo(), mobile_biglittle()]
+}
+
+/// Look up a built-in profile by name.
+pub fn profile_by_name(name: &str) -> Result<ArchProfile> {
+    registry()
+        .into_iter()
+        .find(|p| p.name == name)
+        .ok_or_else(|| Error::UnknownArch(name.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_four_valid_profiles() {
+        let r = registry();
+        assert_eq!(r.len(), 4);
+        let mut names = std::collections::HashSet::new();
+        for p in r {
+            assert!(names.insert(p.name.clone()), "duplicate profile {}", p.name);
+            let p = p.validate().unwrap();
+            assert!(p.total_cores() >= 8);
+            assert!(p.ladder().len() >= 4, "{}: thin ladder", p.name);
+            assert_eq!(*p.ladder().first().unwrap(), p.freq_min_mhz);
+            assert_eq!(*p.ladder().last().unwrap(), p.freq_max_mhz);
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(profile_by_name("xeon-dual-e5-2698v3").is_ok());
+        assert!(profile_by_name("mobile-biglittle").is_ok());
+        assert!(profile_by_name("sparc-t5").is_err());
+    }
+
+    #[test]
+    fn xeon_profile_matches_node_spec_defaults() {
+        let p = xeon_dual();
+        let spec = NodeSpec::default();
+        assert_eq!(p.total_cores(), spec.total_cores());
+        assert_eq!(p.ladder(), spec.ladder());
+        assert_eq!(p.clusters.len(), 2);
+        assert_eq!(p.static_w, spec.power.gt_static);
+        assert_eq!(p.clusters[0].dyn_c1, spec.power.gt_c1);
+        assert_eq!(p.clusters[0].uncore_w, spec.power.gt_socket);
+    }
+
+    #[test]
+    fn cluster_mapping_and_smt_layout() {
+        // manycore: 32 primaries then 32 siblings, all cluster 0.
+        let m = manycore();
+        assert_eq!(m.total_cores(), 64);
+        assert_eq!(m.cluster_of(0), 0);
+        assert_eq!(m.cluster_of(63), 0);
+        assert!(!m.is_smt_sibling(0));
+        assert!(!m.is_smt_sibling(31));
+        assert!(m.is_smt_sibling(32));
+        assert!(m.is_smt_sibling(63));
+
+        // big.LITTLE: cores 0-3 big, 4-7 little, no siblings.
+        let b = mobile_biglittle();
+        assert_eq!(b.total_cores(), 8);
+        assert_eq!(b.cluster_of(0), 0);
+        assert_eq!(b.cluster_of(3), 0);
+        assert_eq!(b.cluster_of(4), 1);
+        assert_eq!(b.cluster_of(7), 1);
+        assert!(!b.is_smt_sibling(7));
+    }
+
+    #[test]
+    fn active_clusters_contiguous_activation() {
+        let b = mobile_biglittle();
+        assert_eq!(b.active_clusters_for(0), 0);
+        assert_eq!(b.active_clusters_for(1), 1);
+        assert_eq!(b.active_clusters_for(4), 1);
+        assert_eq!(b.active_clusters_for(5), 2);
+        assert_eq!(b.active_clusters_for(8), 2);
+
+        let x = xeon_dual();
+        assert_eq!(x.active_clusters_for(16), 1);
+        assert_eq!(x.active_clusters_for(17), 2);
+    }
+
+    #[test]
+    fn validation_rejects_nonsense() {
+        let mut p = manycore();
+        p.clusters[0].cores = 0;
+        assert!(p.validate().is_err());
+
+        let mut p = desktop_turbo();
+        p.freq_step_mhz = 0;
+        assert!(p.validate().is_err());
+
+        let mut p = mobile_biglittle();
+        p.sensor.dropout = 1.5;
+        assert!(p.validate().is_err());
+
+        let mut p = xeon_dual();
+        p.clusters.clear();
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for p in registry() {
+            let back = ArchProfile::from_json(&Json::parse(&p.to_json().dump()).unwrap()).unwrap();
+            assert_eq!(back.name, p.name);
+            assert_eq!(back.total_cores(), p.total_cores());
+            assert_eq!(back.clusters.len(), p.clusters.len());
+            assert_eq!(back.sensor.period_s, p.sensor.period_s);
+            assert_eq!(back.clusters[0].dyn_c1, p.clusters[0].dyn_c1);
+        }
+    }
+
+    #[test]
+    fn from_node_spec_is_behaviour_preserving_topology() {
+        let spec = NodeSpec {
+            sockets: 4,
+            cores_per_socket: 8,
+            ..Default::default()
+        };
+        let p = ArchProfile::from_node_spec(&spec);
+        assert_eq!(p.clusters.len(), 4);
+        assert_eq!(p.total_cores(), 32);
+        assert_eq!(p.active_clusters_for(9), 2);
+        assert_eq!(p.cluster_of(31), 3);
+    }
+}

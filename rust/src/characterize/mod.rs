@@ -7,6 +7,7 @@
 //! the same 1760 points in seconds, parallelized across OS threads (each
 //! worker owns its own simulated node — they are independent machines).
 
+use crate::arch::ArchProfile;
 use crate::config::{CampaignSpec, Mhz, NodeSpec};
 use crate::governors::Userspace;
 use crate::node::power::PowerProcess;
@@ -88,9 +89,22 @@ impl Characterization {
     }
 }
 
-/// Run the full campaign for one application, parallelized over threads.
+/// Run the full campaign for one application on a legacy homogeneous
+/// [`NodeSpec`] (adapter over [`characterize_arch`]).
 pub fn characterize(
     node_spec: &NodeSpec,
+    campaign: &CampaignSpec,
+    app: &AppProfile,
+    run_cfg: &RunConfig,
+) -> Result<Characterization> {
+    characterize_arch(&ArchProfile::from_node_spec(node_spec), campaign, app, run_cfg)
+}
+
+/// Run the full campaign for one application on an architecture profile,
+/// parallelized over threads. The campaign grid must lie on the
+/// profile's DVFS ladder and core range (see `CampaignSpec::adapted_to`).
+pub fn characterize_arch(
+    arch: &ArchProfile,
     campaign: &CampaignSpec,
     app: &AppProfile,
     run_cfg: &RunConfig,
@@ -101,10 +115,10 @@ pub fn characterize(
         return Err(Error::Config("empty campaign grid".into()));
     }
     for p in &cores {
-        if *p == 0 || *p > node_spec.total_cores() {
+        if *p == 0 || *p > arch.total_cores() {
             return Err(Error::BadCoreCount {
                 requested: *p,
-                available: node_spec.total_cores(),
+                available: arch.total_cores(),
             });
         }
     }
@@ -130,8 +144,8 @@ pub fn characterize(
     let pool = WorkerPool::new(run_cfg.threads);
     let samples: Vec<CharSample> = pool.try_run(points.len(), |i| {
         let (f, p, n) = points[i];
-        let mut node = Node::new(node_spec.clone())?;
-        let power = PowerProcess::new(node_spec.power.clone());
+        let mut node = Node::from_profile(arch.clone())?;
+        let power = PowerProcess::from_profile(arch);
         let mut gov = Userspace::new(f);
         let cfg = RunConfig {
             seed: Rng::split_seed(run_cfg.seed ^ CHAR_SEED_DOMAIN, i as u64),

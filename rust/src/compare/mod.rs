@@ -6,6 +6,7 @@
 //! run the *proposed* configuration (energy-model argmin, actuated through
 //! userspace + hotplug); report the paper's Save-Min / Save-Max columns.
 
+use crate::arch::ArchProfile;
 use crate::config::{Mhz, NodeSpec};
 use crate::energy::{Constraints, EnergyModel};
 use crate::governors::{Ondemand, Userspace};
@@ -27,10 +28,15 @@ fn cmp_stream(input: u32, slot: u64) -> u64 {
     ((input as u64) << 32) | slot
 }
 
-/// The core counts the paper sweeps for the ondemand baseline.
+/// The core counts the paper sweeps for the ondemand baseline, extended
+/// with the node's full CPU count for architectures beyond 32 cores
+/// (identical to the paper's list on the 32-core testbed).
 pub fn ondemand_core_counts(total: usize) -> Vec<usize> {
     let mut v = vec![1, 2, 4, 8, 12, 16, 20, 24, 28, 30, 32];
+    v.push(total);
     v.retain(|p| *p <= total);
+    v.sort_unstable();
+    v.dedup();
     v
 }
 
@@ -91,9 +97,30 @@ impl ComparisonRow {
     }
 }
 
-/// Compare the proposed approach against ondemand for one app + input.
+/// Compare the proposed approach against ondemand for one app + input on
+/// a legacy homogeneous [`NodeSpec`] (adapter over [`compare_one_arch`]).
 pub fn compare_one(
     node_spec: &NodeSpec,
+    app: &AppProfile,
+    input: u32,
+    model: &EnergyModel,
+    grid: &[(Mhz, usize)],
+    run_cfg: &RunConfig,
+) -> Result<ComparisonRow> {
+    compare_one_arch(
+        &ArchProfile::from_node_spec(node_spec),
+        app,
+        input,
+        model,
+        grid,
+        run_cfg,
+    )
+}
+
+/// Compare the proposed approach against ondemand for one app + input on
+/// an architecture profile.
+pub fn compare_one_arch(
+    arch: &ArchProfile,
     app: &AppProfile,
     input: u32,
     model: &EnergyModel,
@@ -104,12 +131,12 @@ pub fn compare_one(
     // worker pool. Every run boots a fresh node (the paper reboots into
     // each configuration) and draws noise from its own sweep-slot stream,
     // so the sweep is bit-identical for any thread count.
-    let counts = ondemand_core_counts(node_spec.total_cores());
+    let counts = ondemand_core_counts(arch.total_cores());
     let pool = WorkerPool::new(run_cfg.threads);
     let runs: Vec<GovernorRun> = pool.try_run(counts.len(), |i| {
         let p = counts[i];
-        let mut node = Node::new(node_spec.clone())?;
-        let power = PowerProcess::new(node_spec.power.clone());
+        let mut node = Node::from_profile(arch.clone())?;
+        let power = PowerProcess::from_profile(arch);
         let mut gov = Ondemand::new(node.ladder());
         let cfg = RunConfig {
             seed: Rng::split_seed(run_cfg.seed ^ CMP_SEED_DOMAIN, cmp_stream(input, i as u64)),
@@ -132,8 +159,8 @@ pub fn compare_one(
     // --- proposed configuration: model argmin, actuated via userspace on
     // a fresh node.
     let opt = model.optimize(grid, input, &Constraints::default())?;
-    let mut node = Node::new(node_spec.clone())?;
-    let power = PowerProcess::new(node_spec.power.clone());
+    let mut node = Node::from_profile(arch.clone())?;
+    let power = PowerProcess::from_profile(arch);
     let mut gov = Userspace::new(opt.f_mhz);
     let cfg = RunConfig {
         seed: Rng::split_seed(run_cfg.seed ^ CMP_SEED_DOMAIN, cmp_stream(input, 0xBEEF)),
@@ -198,6 +225,12 @@ mod tests {
         );
         assert_eq!(ondemand_core_counts(8), vec![1, 2, 4, 8]);
         assert_eq!(pow2_core_counts(32), vec![1, 2, 4, 8, 16, 32]);
+        // Beyond-32 architectures always sweep their full CPU count too.
+        assert_eq!(
+            ondemand_core_counts(64),
+            vec![1, 2, 4, 8, 12, 16, 20, 24, 28, 30, 32, 64]
+        );
+        assert_eq!(ondemand_core_counts(30), vec![1, 2, 4, 8, 12, 16, 20, 24, 28, 30]);
     }
 
     #[test]

@@ -204,6 +204,11 @@ pub struct CampaignSpec {
     pub core_max: usize,
     /// Input sizes to sweep (paper: 1..=5).
     pub inputs: Vec<u32>,
+    /// Subsample the frequency sweep down to this many evenly-spaced
+    /// ladder points (0 = dense, every step). Shrinks campaigns uniformly
+    /// across architectures whose ladders have different spans — the knob
+    /// fleet tests and `ecopt fleet --quick` use.
+    pub freq_points: usize,
     /// RNG seed for measurement noise (reproducibility).
     pub seed: u64,
 }
@@ -217,13 +222,16 @@ impl Default for CampaignSpec {
             core_min: 1,
             core_max: 32,
             inputs: vec![1, 2, 3, 4, 5],
+            freq_points: 0,
             seed: 0xEC0_97,
         }
     }
 }
 
 impl CampaignSpec {
-    /// Characterized frequencies, ascending (paper: 11 values).
+    /// Characterized frequencies, ascending (paper: 11 values). With
+    /// `freq_points > 0` the dense sweep is subsampled to that many
+    /// evenly-spaced points (always keeping the endpoints).
     pub fn frequencies(&self) -> Vec<Mhz> {
         let mut v = Vec::new();
         let mut f = self.freq_min_mhz;
@@ -231,7 +239,66 @@ impl CampaignSpec {
             v.push(f);
             f += self.freq_step_mhz;
         }
-        v
+        let (k, n) = (self.freq_points, v.len());
+        if k == 0 || k >= n {
+            return v;
+        }
+        if k == 1 {
+            return vec![v[n / 2]];
+        }
+        (0..k).map(|i| v[i * (n - 1) / (k - 1)]).collect()
+    }
+
+    /// Project this campaign onto an architecture.
+    ///
+    /// The frequency sweep is the intersection of this campaign's bounds
+    /// with the profile's characterizable range (ladder minimum up to one
+    /// step below the ladder top — the paper leaves the top rung to the
+    /// governors), snapped onto the ladder grid, using this campaign's
+    /// step when it is coarser (rounded up to a ladder multiple so every
+    /// swept point stays on the ladder). When the intersection holds
+    /// fewer than two sweep points — the bounds were calibrated for a
+    /// different machine — the sweep falls back to the profile's full
+    /// characterizable range. The core sweep is capped at the profile's
+    /// CPU count; inputs, `freq_points` and the seed carry over. For any
+    /// campaign whose bounds already fit the profile (in particular the
+    /// default campaign on the paper's Xeon) this is the identity.
+    pub fn adapted_to(&self, arch: &crate::arch::ArchProfile) -> CampaignSpec {
+        let step = if self.freq_step_mhz > arch.freq_step_mhz {
+            arch.freq_step_mhz * self.freq_step_mhz.div_ceil(arch.freq_step_mhz)
+        } else {
+            arch.freq_step_mhz
+        };
+        let char_max = arch
+            .freq_max_mhz
+            .saturating_sub(arch.freq_step_mhz)
+            .max(arch.freq_min_mhz);
+        // Intersect with the profile range, snapping inward onto the grid.
+        let lo_raw = self.freq_min_mhz.clamp(arch.freq_min_mhz, char_max);
+        let hi_raw = self.freq_max_mhz.clamp(arch.freq_min_mhz, char_max);
+        let lo = arch.freq_min_mhz
+            + (lo_raw - arch.freq_min_mhz).div_ceil(arch.freq_step_mhz) * arch.freq_step_mhz;
+        let hi = arch.freq_min_mhz
+            + ((hi_raw - arch.freq_min_mhz) / arch.freq_step_mhz) * arch.freq_step_mhz;
+        let degenerate = hi < lo || (hi - lo) / step < 1;
+        let (freq_min_mhz, freq_max_mhz) = if degenerate {
+            (arch.freq_min_mhz, char_max)
+        } else {
+            (lo, hi)
+        };
+        let core_max = self.core_max.min(arch.total_cores());
+        CampaignSpec {
+            freq_min_mhz,
+            freq_max_mhz,
+            freq_step_mhz: step,
+            // Clamp the floor along with the cap so a campaign calibrated
+            // for a bigger machine still sweeps something on a small one.
+            core_min: self.core_min.clamp(1, core_max.max(1)),
+            core_max,
+            inputs: self.inputs.clone(),
+            freq_points: self.freq_points,
+            seed: self.seed,
+        }
     }
 
     /// Characterized core counts, ascending (paper: 32 values).
@@ -257,6 +324,7 @@ impl ToJson for CampaignSpec {
                 "inputs",
                 Json::Arr(self.inputs.iter().map(|i| Json::Num(*i as f64)).collect()),
             ),
+            ("freq_points", Json::Num(self.freq_points as f64)),
             ("seed", Json::Num(self.seed as f64)),
         ])
     }
@@ -280,6 +348,7 @@ impl FromJson for CampaignSpec {
             core_min: opt_usize(j, "core_min", d.core_min)?,
             core_max: opt_usize(j, "core_max", d.core_max)?,
             inputs,
+            freq_points: opt_usize(j, "freq_points", d.freq_points)?,
             seed: match j.opt("seed") {
                 Some(s) => s.as_u64()?,
                 None => d.seed,
@@ -372,6 +441,9 @@ pub struct ExperimentConfig {
     pub node: NodeSpec,
     pub campaign: CampaignSpec,
     pub svr: SvrSpec,
+    /// Registry architecture profile to simulate (see `arch::registry`).
+    /// `None` falls back to `node` interpreted as a homogeneous profile.
+    pub arch: Option<String>,
     /// Workloads to run; empty = all four PARSEC analogues.
     pub workloads: Vec<String>,
     /// Directory with AOT artifacts (manifest.json + *.hlo.txt).
@@ -379,6 +451,22 @@ pub struct ExperimentConfig {
 }
 
 impl ExperimentConfig {
+    /// Resolve the architecture this config simulates: the registry
+    /// profile named by `arch`, else `node` adapted into a homogeneous
+    /// profile (the pre-registry behaviour).
+    pub fn resolved_arch(&self) -> Result<crate::arch::ArchProfile> {
+        match &self.arch {
+            Some(name) => crate::arch::profile_by_name(name),
+            None => crate::arch::ArchProfile::from_node_spec(&self.node).validate(),
+        }
+    }
+
+    /// The campaign projected onto the resolved architecture — what every
+    /// pipeline stage (and any report over its results) must use.
+    pub fn effective_campaign(&self) -> Result<CampaignSpec> {
+        Ok(self.campaign.adapted_to(&self.resolved_arch()?))
+    }
+
     /// Parse from a JSON string (missing fields use paper defaults).
     pub fn from_json_str(s: &str) -> Result<Self> {
         Self::from_json(&Json::parse(s)?)
@@ -401,6 +489,13 @@ impl ToJson for ExperimentConfig {
             ("node", self.node.to_json()),
             ("campaign", self.campaign.to_json()),
             ("svr", self.svr.to_json()),
+            (
+                "arch",
+                match &self.arch {
+                    Some(a) => Json::Str(a.clone()),
+                    None => Json::Null,
+                },
+            ),
             (
                 "workloads",
                 Json::Arr(self.workloads.iter().map(|w| Json::Str(w.clone())).collect()),
@@ -432,6 +527,10 @@ impl FromJson for ExperimentConfig {
             svr: match j.opt("svr") {
                 Some(s) => SvrSpec::from_json(s)?,
                 None => SvrSpec::default(),
+            },
+            arch: match j.opt("arch") {
+                Some(Json::Null) | None => None,
+                Some(a) => Some(a.as_str()?.to_string()),
             },
             workloads,
             artifacts_dir: match j.opt("artifacts_dir") {
@@ -528,5 +627,75 @@ mod tests {
     #[test]
     fn mhz_ghz_conversion() {
         assert!((mhz_to_ghz(2200) - 2.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn freq_points_subsamples_evenly() {
+        let c = CampaignSpec {
+            freq_points: 3,
+            ..Default::default()
+        };
+        // Dense sweep is 1200..=2200 (11 points); keep ends + middle.
+        assert_eq!(c.frequencies(), vec![1200, 1700, 2200]);
+        let c1 = CampaignSpec {
+            freq_points: 1,
+            ..Default::default()
+        };
+        assert_eq!(c1.frequencies().len(), 1);
+        let big = CampaignSpec {
+            freq_points: 99,
+            ..Default::default()
+        };
+        assert_eq!(big.frequencies().len(), 11);
+        assert_eq!(c.sample_count(), 3 * 32 * 5);
+    }
+
+    #[test]
+    fn adapted_to_is_identity_on_paper_arch() {
+        let base = CampaignSpec::default();
+        let a = base.adapted_to(&crate::arch::xeon_dual());
+        assert_eq!(a.frequencies(), base.frequencies());
+        assert_eq!(a.core_max, 32);
+        assert_eq!(a.seed, base.seed);
+    }
+
+    #[test]
+    fn adapted_to_projects_onto_foreign_ladders() {
+        let base = CampaignSpec {
+            freq_step_mhz: 500,
+            core_max: 8,
+            ..Default::default()
+        };
+        let d = base.adapted_to(&crate::arch::desktop_turbo());
+        // 500 rounds up to a multiple of the 200 MHz ladder step.
+        assert_eq!(d.freq_step_mhz, 600);
+        assert_eq!(d.freq_min_mhz, 2200);
+        assert_eq!(d.freq_max_mhz, 4400);
+        for f in d.frequencies() {
+            assert_eq!((f - 2200) % 200, 0, "off-ladder frequency {f}");
+        }
+        let m = base.adapted_to(&crate::arch::manycore());
+        assert_eq!(m.core_max, 8, "base cap below the 64-CPU node");
+        assert_eq!(m.freq_max_mhz, 1500);
+    }
+
+    #[test]
+    fn adapted_to_honours_user_bounds_inside_the_ladder() {
+        // Explicit campaign bounds that fit the profile survive the
+        // projection (the pre-registry behaviour for config files).
+        let base = CampaignSpec {
+            freq_min_mhz: 1400,
+            freq_max_mhz: 1800,
+            ..Default::default()
+        };
+        let a = base.adapted_to(&crate::arch::xeon_dual());
+        assert_eq!(a.freq_min_mhz, 1400);
+        assert_eq!(a.freq_max_mhz, 1800);
+        assert_eq!(a.frequencies(), vec![1400, 1500, 1600, 1700, 1800]);
+        // Bounds calibrated for a different machine (no overlap worth
+        // sweeping) fall back to the profile's full characterizable range.
+        let d = base.adapted_to(&crate::arch::desktop_turbo());
+        assert_eq!(d.freq_min_mhz, 2200);
+        assert_eq!(d.freq_max_mhz, 4400);
     }
 }

@@ -1,7 +1,7 @@
 //! Experiment coordinator (L3 glue, system S14): the **parallel experiment
 //! engine** that turns a config into the paper's results —
 //!
-//! 1. **fit**: stress campaign → Eq. 7 power model (§3.3) — the 352 stress
+//! 1. **fit**: stress campaign → Eq. 7 power model (§3.3) — the stress
 //!    tests fan out over the worker pool;
 //! 2. **characterize**: per-app campaign over the (f, p, N) grid (§3.4) —
 //!    every grid point is an independent pooled job;
@@ -13,32 +13,53 @@
 //! 5. **compare**: ondemand sweep vs the proposed configuration
 //!    (Tables 2–5, Fig. 10) — each sweep fans its governor runs out.
 //!
+//! Since ISSUE 2 the pipeline is **architecture-parametric**: the
+//! coordinator resolves an [`ArchProfile`] (registry name in the config,
+//! an explicit override, or the legacy `NodeSpec` adapted), projects the
+//! campaign onto its DVFS ladder and core range, and every stage below
+//! is constructed from the profile. [`run_fleet`] fans the whole
+//! pipeline across a profile list — the cross-architecture sweep the
+//! ROADMAP's scenario-diversity goal asks for.
+//!
 //! # Determinism contract
 //!
 //! Every pooled job seeds its RNG from its job index via the split-seed
 //! API (`util::rng::Rng::split_seed`) and results are merged in job-index
 //! order, so [`Coordinator::run_all`] produces **byte-identical**
 //! serialized [`ExperimentResults`] for any `RunConfig::threads` value —
-//! locked down by `tests/determinism.rs`.
+//! locked down by `tests/determinism.rs`. Fleet runs extend the contract
+//! with a dedicated seed domain: member `i` of a fleet derives its
+//! campaign seed as `split_seed(base ^ FLEET_SEED_DOMAIN, i)`, so member
+//! pipelines are decorrelated from each other and from every
+//! single-architecture stream, and the fleet merge is index-ordered —
+//! fleet output is byte-identical for any thread count too.
 //!
 //! All stages are cacheable to JSON so examples and benches can re-use
 //! expensive phases.
 
 use std::path::Path;
 
-use crate::characterize::{characterize, Characterization};
-use crate::compare::{compare_one, summarize, ComparisonRow, SavingsSummary};
-use crate::config::ExperimentConfig;
-use crate::energy::{config_grid, EnergyModel};
-use crate::powermodel::{stress_campaign, FitReport, PowerModel, PowerObs, StressConfig};
+use crate::arch::ArchProfile;
+use crate::characterize::{characterize_arch, Characterization};
+use crate::compare::{compare_one_arch, summarize, ComparisonRow, SavingsSummary};
+use crate::config::{CampaignSpec, ExperimentConfig};
+use crate::energy::{config_grid_arch, EnergyModel};
+use crate::powermodel::{stress_campaign_arch, FitReport, PowerModel, PowerObs, StressConfig};
 use crate::runtime::PjrtRuntime;
 use crate::svr::{cross_validate, train_test_split, CvReport, SvrModel};
 use crate::util::json::{FromJson, ToJson};
 use crate::util::pool::WorkerPool;
+use crate::util::rng::Rng;
 use crate::util::{mae, pae};
 use crate::workloads::runner::RunConfig;
 use crate::workloads::{app_by_name, parsec_apps, AppProfile};
 use crate::{Error, Result};
+
+/// Seed-domain separator for fleet members: member `i`'s campaign seed is
+/// `split_seed(base_seed ^ FLEET_SEED_DOMAIN, i)`, disjoint from the
+/// characterization (…0001) and comparison (…0002) domains any single
+/// pipeline derives below it.
+pub const FLEET_SEED_DOMAIN: u64 = 0xC4A2_AC7E_0000_0003;
 
 /// Per-application results bundle.
 #[derive(Debug, Clone)]
@@ -56,6 +77,9 @@ pub struct AppResults {
 /// Everything the report generator needs.
 #[derive(Debug, Clone)]
 pub struct ExperimentResults {
+    /// Architecture profile the pipeline ran on (registry name, or
+    /// "custom-node" for legacy NodeSpec runs).
+    pub arch: String,
     pub power_obs: Vec<PowerObs>,
     pub power_model: PowerModel,
     pub power_fit: FitReport,
@@ -81,6 +105,37 @@ impl ExperimentResults {
     }
 }
 
+/// One architecture's results within a fleet sweep.
+#[derive(Debug, Clone)]
+pub struct FleetMember {
+    pub arch: String,
+    pub results: ExperimentResults,
+}
+
+/// Results of a [`run_fleet`] sweep, in profile order.
+#[derive(Debug, Clone)]
+pub struct FleetResults {
+    pub members: Vec<FleetMember>,
+}
+
+impl FleetResults {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().dump())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_json(&crate::util::json::Json::parse(&std::fs::read_to_string(path)?)?)
+    }
+
+    pub fn member(&self, arch: &str) -> Result<&FleetMember> {
+        self.members
+            .iter()
+            .find(|m| m.arch == arch)
+            .ok_or_else(|| Error::UnknownArch(arch.to_string()))
+    }
+}
+
 /// Pipeline driver.
 pub struct Coordinator {
     pub cfg: ExperimentConfig,
@@ -88,6 +143,8 @@ pub struct Coordinator {
     /// Optional PJRT runtime: when present, the optimize stage goes
     /// through the AOT `svr_energy` artifact (the deployed path).
     runtime: Option<PjrtRuntime>,
+    /// Explicit profile override (fleet members); beats `cfg.arch`.
+    arch_override: Option<ArchProfile>,
 }
 
 impl Coordinator {
@@ -100,7 +157,16 @@ impl Coordinator {
             cfg,
             run_cfg,
             runtime: None,
+            arch_override: None,
         }
+    }
+
+    /// Pin the pipeline to an explicit architecture profile (bypasses the
+    /// registry lookup; what fleet members use).
+    pub fn for_arch(cfg: ExperimentConfig, arch: ArchProfile) -> Self {
+        let mut c = Self::new(cfg);
+        c.arch_override = Some(arch);
+        c
     }
 
     /// Attach a PJRT runtime (deployed decision path).
@@ -115,6 +181,22 @@ impl Coordinator {
         self
     }
 
+    /// Resolve the architecture this pipeline simulates: the explicit
+    /// override, then the config's registry name, then the legacy
+    /// `NodeSpec` adapted into a homogeneous profile.
+    pub fn arch(&self) -> Result<ArchProfile> {
+        if let Some(a) = &self.arch_override {
+            return a.clone().validate();
+        }
+        self.cfg.resolved_arch()
+    }
+
+    /// The campaign projected onto the resolved architecture's ladder and
+    /// core range (identity for the paper's default config).
+    pub fn effective_campaign(&self) -> Result<CampaignSpec> {
+        Ok(self.cfg.campaign.adapted_to(&self.arch()?))
+    }
+
     /// The workload set: configured names, or all four PARSEC analogues.
     pub fn workloads(&self) -> Result<Vec<AppProfile>> {
         if self.cfg.workloads.is_empty() {
@@ -126,22 +208,26 @@ impl Coordinator {
 
     /// Stage 1: stress campaign + Eq. 7 fit (tests fan out over the pool).
     pub fn fit_power(&self) -> Result<(Vec<PowerObs>, PowerModel, FitReport)> {
+        let arch = self.arch()?;
+        let campaign = self.cfg.campaign.adapted_to(&arch);
         let stress = StressConfig {
-            freq_min_mhz: self.cfg.campaign.freq_min_mhz,
-            freq_max_mhz: self.cfg.campaign.freq_max_mhz,
-            freq_step_mhz: self.cfg.campaign.freq_step_mhz,
-            seed: self.cfg.campaign.seed ^ 0xF00D,
+            freq_min_mhz: campaign.freq_min_mhz,
+            freq_max_mhz: campaign.freq_max_mhz,
+            freq_step_mhz: campaign.freq_step_mhz,
+            seed: campaign.seed ^ 0xF00D,
             threads: self.run_cfg.threads,
             ..Default::default()
         };
-        let obs = stress_campaign(&self.cfg.node, &stress)?;
+        let obs = stress_campaign_arch(&arch, &stress)?;
         let (model, report) = PowerModel::fit(&obs)?;
         Ok((obs, model, report))
     }
 
     /// Stage 2+3 for one app: characterize, split, train, validate.
     pub fn model_app(&self, app: &AppProfile) -> Result<(Characterization, SvrModel, CvReport, f64, f64)> {
-        let ch = characterize(&self.cfg.node, &self.cfg.campaign, app, &self.run_cfg)?;
+        let arch = self.arch()?;
+        let campaign = self.cfg.campaign.adapted_to(&arch);
+        let ch = characterize_arch(&arch, &campaign, app, &self.run_cfg)?;
         let samples = ch.train_samples();
         let (train, test) = train_test_split(&samples, &self.cfg.svr);
         let svr = SvrModel::train(&train, &self.cfg.svr)?;
@@ -159,13 +245,26 @@ impl Coordinator {
         svr: &SvrModel,
         power: &PowerModel,
     ) -> Result<Vec<ComparisonRow>> {
-        let grid = config_grid(&self.cfg.campaign, &self.cfg.node);
-        let model = EnergyModel::new(*power, svr.clone(), self.cfg.node.clone());
+        let arch = self.arch()?;
+        let campaign = self.cfg.campaign.adapted_to(&arch);
+        let grid = config_grid_arch(&campaign, &arch);
+        let model = EnergyModel::for_arch(*power, svr.clone(), arch.clone());
         let mut rows = Vec::new();
-        for &input in &self.cfg.campaign.inputs {
+        for &input in &campaign.inputs {
             // Deployed path: cross-check the PJRT artifact against the pure
             // Rust surface when a runtime is attached (they must agree).
-            if let Some(rt) = self.runtime.as_mut() {
+            // The AOT artifact is compiled for the paper's fixed
+            // 352-point grid; registry architectures and freq_points
+            // produce other grid sizes, which skip the cross-check
+            // instead of failing the pipeline.
+            if self.runtime.is_some() && grid.len() != crate::energy::GRID_POINTS {
+                crate::debug_log!(
+                    "{}: grid has {} points (artifact wants {}), skipping PJRT cross-check",
+                    app.name,
+                    grid.len(),
+                    crate::energy::GRID_POINTS
+                );
+            } else if let Some(rt) = self.runtime.as_mut() {
                 let via_rt = model.optimize_via_runtime(rt, &grid, input, &Default::default())?;
                 let via_rs = model.optimize(&grid, input, &Default::default())?;
                 if via_rt.f_mhz != via_rs.f_mhz || via_rt.cores != via_rs.cores {
@@ -180,7 +279,7 @@ impl Coordinator {
                     );
                 }
             }
-            let row = compare_one(&self.cfg.node, app, input, &model, &grid, &self.run_cfg)?;
+            let row = compare_one_arch(&arch, app, input, &model, &grid, &self.run_cfg)?;
             rows.push(row);
         }
         Ok(rows)
@@ -191,9 +290,12 @@ impl Coordinator {
     /// Output is byte-identical for any `RunConfig::threads` value (see
     /// the module docs for the determinism contract).
     pub fn run_all(&mut self) -> Result<ExperimentResults> {
+        let arch = self.arch()?;
+        let campaign = self.cfg.campaign.adapted_to(&arch);
         let (obs, power_model, power_fit) = self.fit_power()?;
         crate::info!(
-            "power model fitted: P = p({:.3} f^3 + {:.3} f) + {:.2} + {:.2} s (APE {:.2}%, RMSE {:.2} W)",
+            "{}: power model fitted: P = p({:.3} f^3 + {:.3} f) + {:.2} + {:.2} s (APE {:.2}%, RMSE {:.2} W)",
+            arch.name,
             power_model.c1,
             power_model.c2,
             power_model.c3,
@@ -211,12 +313,13 @@ impl Coordinator {
         let mut chars: Vec<Characterization> = Vec::with_capacity(apps.len());
         for app in &apps {
             crate::info!(
-                "{}: characterizing ({} grid points, {} workers)",
+                "{}: characterizing {} ({} grid points, {} workers)",
+                arch.name,
                 app.name,
-                self.cfg.campaign.sample_count(),
+                campaign.sample_count(),
                 pool.threads()
             );
-            chars.push(characterize(&self.cfg.node, &self.cfg.campaign, app, &self.run_cfg)?);
+            chars.push(characterize_arch(&arch, &campaign, app, &self.run_cfg)?);
         }
 
         // Stage 3: split + SVR training + cross-validation, one pooled job
@@ -246,7 +349,7 @@ impl Coordinator {
 
         // Stages 4+5: optimize + governor comparison per (app, input) —
         // `compare_app` does the PJRT cross-check and each row's ondemand
-        // sweep fans out inside `compare_one`.
+        // sweep fans out inside `compare_one_arch`.
         let mut results = Vec::with_capacity(apps.len());
         let mut all_rows = Vec::new();
         for ((app, ch), m) in apps.iter().zip(chars).zip(modeled) {
@@ -264,6 +367,7 @@ impl Coordinator {
         }
         let summary = summarize(&all_rows);
         Ok(ExperimentResults {
+            arch: arch.name.clone(),
             power_obs: obs,
             power_model,
             power_fit,
@@ -271,6 +375,59 @@ impl Coordinator {
             summary,
         })
     }
+}
+
+/// The campaign a fleet member runs: the base campaign widened to the
+/// profile's **full** ladder (a fleet sweep characterizes each machine's
+/// own range — the base campaign's absolute bounds are calibrated for
+/// one machine and do not transfer), then projected via
+/// [`CampaignSpec::adapted_to`]. Idempotent under a second `adapted_to`,
+/// which `run_all` applies.
+pub fn fleet_member_campaign(base: &CampaignSpec, arch: &ArchProfile) -> CampaignSpec {
+    let mut c = base.clone();
+    c.freq_min_mhz = arch.freq_min_mhz;
+    c.freq_max_mhz = arch.freq_max_mhz;
+    c.adapted_to(arch)
+}
+
+/// Fan the full pipeline across a list of architecture profiles on the
+/// worker pool: one pooled job per profile, each running the complete
+/// stress → characterize → SVR → optimize → compare pipeline on its own
+/// simulated machine (stages fan out further on nested pools).
+///
+/// Member `i` derives its campaign seed via the fleet seed domain, the
+/// base campaign is projected onto each profile's ladder/core range, and
+/// members are merged in profile order — serialized [`FleetResults`] are
+/// **byte-identical for any thread count** (locked by
+/// `tests/determinism.rs`).
+pub fn run_fleet(
+    cfg: &ExperimentConfig,
+    run_cfg: &RunConfig,
+    profiles: &[ArchProfile],
+) -> Result<FleetResults> {
+    if profiles.is_empty() {
+        return Err(Error::Config("run_fleet needs at least one profile".into()));
+    }
+    let pool = WorkerPool::new(run_cfg.threads);
+    let members = pool.try_run(profiles.len(), |i| {
+        let arch = profiles[i].clone();
+        let member_seed = Rng::split_seed(cfg.campaign.seed ^ FLEET_SEED_DOMAIN, i as u64);
+        let mut member_cfg = cfg.clone();
+        member_cfg.campaign = fleet_member_campaign(&cfg.campaign, &arch);
+        member_cfg.campaign.seed = member_seed;
+        member_cfg.arch = Some(arch.name.clone());
+        let member_rc = RunConfig {
+            seed: member_seed,
+            ..run_cfg.clone()
+        };
+        let mut coord = Coordinator::for_arch(member_cfg, arch.clone()).with_run_config(member_rc);
+        let results = coord.run_all()?;
+        Ok(FleetMember {
+            arch: arch.name,
+            results,
+        })
+    })?;
+    Ok(FleetResults { members })
 }
 
 #[cfg(test)]
@@ -299,6 +456,16 @@ mod tests {
         }
     }
 
+    fn fast_rc(seed: u64) -> RunConfig {
+        RunConfig {
+            dt: 0.25,
+            work_noise: 0.005,
+            seed,
+            max_sim_s: 1e6,
+            ..Default::default()
+        }
+    }
+
     #[test]
     fn full_pipeline_small() {
         let mut coord = Coordinator::new(small_cfg()).with_run_config(RunConfig {
@@ -309,6 +476,7 @@ mod tests {
             ..Default::default()
         });
         let res = coord.run_all().unwrap();
+        assert_eq!(res.arch, "custom-node");
         assert_eq!(res.apps.len(), 1);
         let app = &res.apps[0];
         assert_eq!(app.characterization.samples.len(), 3 * 8 * 2);
@@ -326,6 +494,65 @@ mod tests {
         // Power fit recovered something Eq. 9-shaped.
         assert!(res.power_model.c3 > 150.0 && res.power_model.c3 < 250.0);
         assert!(res.power_fit.ape_pct < 3.0);
+    }
+
+    #[test]
+    fn registry_arch_config_runs_end_to_end() {
+        // A config that names a registry profile must run the whole
+        // pipeline on that architecture: campaign projected onto its
+        // ladder, grid answers on its ladder, arch name recorded.
+        let mut cfg = small_cfg();
+        cfg.campaign.freq_step_mhz = 100; // adapted to the 200 MHz ladder
+        cfg.campaign.freq_points = 3;
+        cfg.campaign.core_max = 6;
+        cfg.campaign.inputs = vec![1];
+        cfg.arch = Some("mobile-biglittle".into());
+        let mut coord = Coordinator::new(cfg).with_run_config(fast_rc(7));
+        let res = coord.run_all().unwrap();
+        assert_eq!(res.arch, "mobile-biglittle");
+        let arch = crate::arch::mobile_biglittle();
+        let ladder = arch.ladder();
+        let app = &res.apps[0];
+        assert_eq!(app.characterization.samples.len(), 3 * 6);
+        for s in &app.characterization.samples {
+            assert!(ladder.contains(&s.f_mhz), "off-ladder sample {}", s.f_mhz);
+            assert!(s.cores <= arch.total_cores());
+        }
+        for row in &app.comparisons {
+            assert!(ladder.contains(&row.proposed_f_mhz));
+            assert!(row.proposed_cores <= arch.total_cores());
+        }
+    }
+
+    #[test]
+    fn unknown_arch_name_is_an_error() {
+        let mut cfg = small_cfg();
+        cfg.arch = Some("vax-11".into());
+        let mut coord = Coordinator::new(cfg);
+        assert!(matches!(coord.run_all(), Err(Error::UnknownArch(_))));
+    }
+
+    #[test]
+    fn fleet_runs_two_profiles_with_distinct_answers() {
+        let mut cfg = small_cfg();
+        cfg.campaign.freq_step_mhz = 100; // dense ladder, then subsample
+        cfg.campaign.freq_points = 3;
+        cfg.campaign.core_max = 6;
+        cfg.campaign.inputs = vec![1];
+        let profiles = vec![crate::arch::xeon_dual(), crate::arch::manycore()];
+        let fleet = run_fleet(&cfg, &fast_rc(11), &profiles).unwrap();
+        assert_eq!(fleet.members.len(), 2);
+        assert_eq!(fleet.members[0].arch, "xeon-dual-e5-2698v3");
+        assert!(fleet.member("manycore-knl64").is_ok());
+        assert!(fleet.member("nope").is_err());
+        // The Xeon campaign sweeps 1200+ MHz, the manycore part tops out
+        // at 1500 MHz with disjoint grid points — the proposed optimum
+        // must shift across architectures.
+        let f_xeon = fleet.members[0].results.apps[0].comparisons[0].proposed_f_mhz;
+        let f_many = fleet.members[1].results.apps[0].comparisons[0].proposed_f_mhz;
+        assert!(f_xeon >= 1200, "xeon optimum {f_xeon}");
+        assert!(f_many <= 1500, "manycore optimum {f_many}");
+        assert_ne!(f_xeon, f_many, "optima did not shift across architectures");
     }
 
     #[test]
@@ -359,6 +586,7 @@ mod tests {
         res.save(&p).unwrap();
         let back = ExperimentResults::load(&p).unwrap();
         assert_eq!(back.apps.len(), res.apps.len());
+        assert_eq!(back.arch, res.arch);
         assert!(back.app("blackscholes").is_ok());
         assert!(back.app("nope").is_err());
     }

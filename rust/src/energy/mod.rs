@@ -10,6 +10,7 @@
 //!   + Eq. 8 fused in one HLO module), then an argmin over the returned
 //!   energy surface.
 
+use crate::arch::ArchProfile;
 use crate::config::{mhz_to_ghz, CampaignSpec, Mhz, NodeSpec};
 use crate::powermodel::PowerModel;
 use crate::runtime::{PjrtRuntime, TensorF32};
@@ -68,20 +69,26 @@ impl Constraints {
     }
 }
 
-/// The combined model: fitted power coefficients + trained SVR.
+/// The combined model: fitted power coefficients + trained SVR, bound to
+/// the architecture profile whose grid it scores.
 #[derive(Debug, Clone)]
 pub struct EnergyModel {
     pub power: PowerModel,
     pub svr: SvrModel,
-    pub node: NodeSpec,
+    pub arch: ArchProfile,
 }
 
 /// The deterministic configuration grid (frequency-major, matching the
-/// AOT artifact's `GRID_POINTS` layout).
+/// AOT artifact's `GRID_POINTS` layout) for a legacy homogeneous node.
 pub fn config_grid(campaign: &CampaignSpec, node: &NodeSpec) -> Vec<(Mhz, usize)> {
+    config_grid_arch(campaign, &ArchProfile::from_node_spec(node))
+}
+
+/// The deterministic configuration grid for an architecture profile.
+pub fn config_grid_arch(campaign: &CampaignSpec, arch: &ArchProfile) -> Vec<(Mhz, usize)> {
     let mut grid = Vec::new();
     for f in campaign.frequencies() {
-        for p in 1..=node.total_cores() {
+        for p in 1..=arch.total_cores() {
             grid.push((f, p));
         }
     }
@@ -89,13 +96,21 @@ pub fn config_grid(campaign: &CampaignSpec, node: &NodeSpec) -> Vec<(Mhz, usize)
 }
 
 impl EnergyModel {
+    /// Build from a legacy homogeneous [`NodeSpec`] (adapter over
+    /// [`EnergyModel::for_arch`]).
     pub fn new(power: PowerModel, svr: SvrModel, node: NodeSpec) -> Self {
-        EnergyModel { power, svr, node }
+        Self::for_arch(power, svr, ArchProfile::from_node_spec(&node))
     }
 
-    /// Sockets powered for `p` contiguously-activated cores.
+    /// Build for an architecture profile.
+    pub fn for_arch(power: PowerModel, svr: SvrModel, arch: ArchProfile) -> Self {
+        EnergyModel { power, svr, arch }
+    }
+
+    /// Clusters (sockets on SMP parts) powered for `p`
+    /// contiguously-activated cores — Eq. 7's `s`.
     pub fn sockets_for(&self, p: usize) -> usize {
-        p.div_ceil(self.node.cores_per_socket).min(self.node.sockets)
+        self.arch.active_clusters_for(p)
     }
 
     /// Evaluate the full energy surface for input size `n` (pure Rust).
@@ -175,12 +190,13 @@ impl EnergyModel {
         }
         // Upper bound on sockets for the surface: the artifact evaluates a
         // single socket count, so feed per-point sockets via... Eq. 7 is
-        // linear in s; we evaluate with the *maximum* sockets the grid can
-        // activate and correct per-point on the Rust side when needed.
-        // For the paper's contiguous activation, p <= 16 uses 1 socket.
-        // To stay faithful we pass s = 2 only when any grid point needs it;
-        // the argmin correction below handles mixed-socket grids.
-        let sockets = self.node.sockets as f32;
+        // linear in s; we evaluate with the *maximum* cluster count the
+        // grid can activate and correct per-point on the Rust side when
+        // needed. For the paper's contiguous activation, p <= 16 uses 1
+        // socket. To stay faithful we pass the full cluster count only
+        // when any grid point needs it; the argmin correction below
+        // handles mixed-cluster grids.
+        let sockets = self.arch.clusters.len() as f32;
         Ok(vec![
             TensorF32::new(vec![MAX_SV, 3], sv)?,
             TensorF32::new(vec![MAX_SV], dual)?,
@@ -213,11 +229,11 @@ impl EnergyModel {
         let powers = &outs[1].data;
         let mut best: Option<EnergyPoint> = None;
         for (i, (f, p)) in grid.iter().enumerate() {
-            // The artifact computed P with s = node.sockets; correct to the
-            // actual socket count for this core count (Eq. 7 linear in s).
+            // The artifact computed P with s = all clusters; correct to the
+            // actual cluster count for this core count (Eq. 7 linear in s).
             let s_actual = self.sockets_for(*p);
             let w = powers[i] as f64
-                - self.power.c4 * (self.node.sockets as f64 - s_actual as f64);
+                - self.power.c4 * (self.arch.clusters.len() as f64 - s_actual as f64);
             let t = times[i] as f64;
             let pt = EnergyPoint {
                 f_mhz: *f,
@@ -295,6 +311,27 @@ mod tests {
         assert_eq!(m.sockets_for(16), 1);
         assert_eq!(m.sockets_for(17), 2);
         assert_eq!(m.sockets_for(32), 2);
+    }
+
+    #[test]
+    fn arch_grid_covers_profile_ladder_and_cores() {
+        let arch = crate::arch::mobile_biglittle();
+        let campaign = CampaignSpec {
+            freq_min_mhz: arch.freq_min_mhz,
+            freq_max_mhz: arch.freq_max_mhz,
+            ..Default::default()
+        }
+        .adapted_to(&arch);
+        let grid = config_grid_arch(&campaign, &arch);
+        // 600..=2200 step 200 (9 freqs) x 8 CPUs.
+        assert_eq!(grid.len(), 9 * 8);
+        assert_eq!(grid[0], (600, 1));
+        assert_eq!(*grid.last().unwrap(), (2200, 8));
+        let ladder = arch.ladder();
+        for (f, p) in &grid {
+            assert!(ladder.contains(f), "off-ladder grid frequency {f}");
+            assert!(*p >= 1 && *p <= arch.total_cores());
+        }
     }
 
     #[test]

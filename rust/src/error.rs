@@ -21,6 +21,9 @@ pub enum Error {
     /// An unknown governor name was requested.
     UnknownGovernor(String),
 
+    /// An unknown architecture profile was requested from the registry.
+    UnknownArch(String),
+
     /// Characterization / training data problems (empty sets, NaNs...).
     Data(String),
 
@@ -56,6 +59,7 @@ impl fmt::Display for Error {
             } => write!(f, "invalid core count {requested} (node has {available})"),
             Error::UnknownWorkload(name) => write!(f, "unknown workload '{name}'"),
             Error::UnknownGovernor(name) => write!(f, "unknown governor '{name}'"),
+            Error::UnknownArch(name) => write!(f, "unknown architecture profile '{name}'"),
             Error::Data(m) => write!(f, "data error: {m}"),
             Error::Svr(m) => write!(f, "svr error: {m}"),
             Error::Linalg(m) => write!(f, "linear algebra error: {m}"),

@@ -12,8 +12,8 @@ mod conservative;
 mod ondemand;
 mod statics;
 
-pub use conservative::Conservative;
-pub use ondemand::Ondemand;
+pub use conservative::{Conservative, ConservativeTunables};
+pub use ondemand::{Ondemand, OndemandTunables};
 pub use statics::{Performance, Powersave, Userspace};
 
 use crate::config::Mhz;

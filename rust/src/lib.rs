@@ -40,6 +40,7 @@
 #![allow(clippy::type_complexity)]
 #![allow(clippy::too_many_arguments)]
 
+pub mod arch;
 pub mod characterize;
 pub mod compare;
 pub mod config;

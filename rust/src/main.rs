@@ -16,12 +16,14 @@
 
 use std::path::PathBuf;
 
+use ecopt::arch::{profile_by_name, registry};
 use ecopt::config::ExperimentConfig;
-use ecopt::coordinator::{Coordinator, ExperimentResults};
-use ecopt::energy::{config_grid, EnergyModel};
+use ecopt::coordinator::{run_fleet, Coordinator, ExperimentResults};
+use ecopt::energy::{config_grid_arch, EnergyModel};
 use ecopt::report;
 use ecopt::runtime::PjrtRuntime;
 use ecopt::workloads::app_by_name;
+use ecopt::workloads::runner::RunConfig;
 
 const USAGE: &str = "\
 ecopt — Energy-Optimal Configurations for Single-Node HPC Applications
@@ -38,6 +40,10 @@ COMMANDS:
   compare [--app NAME]          full pipeline + ondemand comparison (Tables 2-5)
   report [--all] [--only WHAT] [--cache FILE]
                                 render paper artifacts; WHAT = 1-5, f1-f10, headline
+  fleet [--profiles A,B] [--quick] [--out FILE] [--save FILE]
+                                full pipeline across the architecture registry,
+                                cross-architecture savings report
+  arch [--list]                 list the built-in architecture profiles
   config --dump                 print the effective configuration
   help                          this text
 ";
@@ -178,13 +184,20 @@ fn main() -> anyhow::Result<()> {
             let profile = app_by_name(&app)?;
             let (_, model, _) = coord.fit_power()?;
             let (_, svr, _, _, _) = coord.model_app(&profile)?;
-            let em = EnergyModel::new(model, svr, cfg.node.clone());
-            let grid = config_grid(&cfg.campaign, &cfg.node);
-            let opt = if args.has("no-pjrt") {
-                em.optimize(&grid, input, &Default::default())?
-            } else {
+            // Same architecture + adapted campaign the models were built
+            // on — a registry arch in the config changes the whole grid.
+            let arch = cfg.resolved_arch()?;
+            let campaign = cfg.effective_campaign()?;
+            let em = EnergyModel::for_arch(model, svr, arch.clone());
+            let grid = config_grid_arch(&campaign, &arch);
+            // The AOT artifact only serves the paper's fixed 352-point
+            // grid; other architectures/grids use the pure-Rust argmin.
+            let use_pjrt = !args.has("no-pjrt") && grid.len() == ecopt::energy::GRID_POINTS;
+            let opt = if use_pjrt {
                 let mut rt = PjrtRuntime::cpu(std::path::Path::new(&cfg.artifacts_dir))?;
                 em.optimize_via_runtime(&mut rt, &grid, input, &Default::default())?
+            } else {
+                em.optimize(&grid, input, &Default::default())?
             };
             println!(
                 "{app} input {input}: run at {:.1} GHz on {} cores (predicted {:.1} s, {:.2} kJ)",
@@ -208,11 +221,78 @@ fn main() -> anyhow::Result<()> {
         }
         "report" => {
             let (res, cfg) = results(&args)?;
+            // Figures index the characterization samples, which live on
+            // the resolved architecture's adapted grid.
+            let campaign = cfg.effective_campaign()?;
             match args.get("only") {
                 Some(what) if !what.is_empty() => {
-                    println!("{}", report::render(&res, &cfg.campaign, what)?)
+                    println!("{}", report::render(&res, &campaign, what)?)
                 }
-                _ => println!("{}", report::full_report(&res, &cfg.campaign)),
+                _ => println!("{}", report::full_report(&res, &campaign)),
+            }
+        }
+        "fleet" => {
+            let mut cfg = load_config(&args)?;
+            let profiles = match args.get("profiles") {
+                Some(csv) if !csv.is_empty() => csv
+                    .split(',')
+                    .map(|n| profile_by_name(n.trim()))
+                    .collect::<ecopt::Result<Vec<_>>>()?,
+                _ => registry(),
+            };
+            let mut rc = RunConfig {
+                seed: cfg.campaign.seed,
+                ..Default::default()
+            };
+            if args.has("quick") {
+                // CI-artifact mode: 3 frequencies per ladder, <= 8 cores,
+                // 2 inputs, coarse ticks — minutes, not hours.
+                cfg.campaign.freq_points = 3;
+                cfg.campaign.core_max = cfg.campaign.core_max.min(8);
+                cfg.campaign.inputs = vec![1, 2];
+                cfg.svr.folds = cfg.svr.folds.min(3);
+                rc.dt = 0.25;
+            }
+            eprintln!(
+                "fleet: {} profile(s): {}",
+                profiles.len(),
+                profiles.iter().map(|p| p.name.as_str()).collect::<Vec<_>>().join(", ")
+            );
+            let fleet = run_fleet(&cfg, &rc, &profiles)?;
+            if let Some(path) = args.get("save") {
+                fleet.save(std::path::Path::new(path))?;
+                eprintln!("fleet results cached to {path}");
+            }
+            let rendered = report::fleet_report(&fleet);
+            match args.get("out") {
+                Some(path) if !path.is_empty() => {
+                    std::fs::write(path, &rendered)?;
+                    eprintln!("fleet report written to {path}");
+                }
+                _ => println!("{rendered}"),
+            }
+        }
+        "arch" => {
+            for p in registry() {
+                let clusters: Vec<String> = p
+                    .clusters
+                    .iter()
+                    .map(|c| {
+                        format!("{} {}c x smt{} perf {:.2}", c.name, c.cores, c.smt, c.perf_scale)
+                    })
+                    .collect();
+                println!(
+                    "{:<22} {:>3} cpus | {:.1}-{:.1} GHz step {} MHz | {} | sensor {:.1}s/{}W/{:.0}% drop",
+                    p.name,
+                    p.total_cores(),
+                    p.freq_min_mhz as f64 / 1000.0,
+                    p.freq_max_mhz as f64 / 1000.0,
+                    p.freq_step_mhz,
+                    clusters.join(" + "),
+                    p.sensor.period_s,
+                    p.sensor.quantum_w,
+                    p.sensor.dropout * 100.0,
+                );
             }
         }
         "config" => {

@@ -1,7 +1,9 @@
 //! Simulated single HPC node (substrate S1).
 //!
-//! Replaces the paper's dual-socket Xeon E5-2698 v3 testbed. The node
-//! exposes exactly the knobs the paper's methodology uses:
+//! Replaces the paper's dual-socket Xeon E5-2698 v3 testbed — and, since
+//! the architecture registry (ISSUE 2), any [`crate::arch::ArchProfile`]:
+//! homogeneous SMP parts, SMT parts, and asymmetric big.LITTLE parts. The
+//! node exposes exactly the knobs the paper's methodology uses:
 //!
 //! * a DVFS ladder driven per-core (the `acpi-cpufreq` role) — see
 //!   [`Node::set_freq`] / [`Node::set_freq_all`];
@@ -9,17 +11,23 @@
 //! * per-core utilization state set by the workload simulator and observed
 //!   by governors;
 //! * a ground-truth power process ([`power::PowerProcess`]) observable only
-//!   through the IPMI sensor channel (`sensors`).
+//!   through the sensor channel (`sensors`).
+//!
+//! Cores are *logical CPUs* laid out per the profile's cluster contract
+//! (cluster-major, physical primaries before SMT siblings); the node
+//! caches each CPU's cluster, throughput scale and dynamic-power share so
+//! the runner and power process stay O(1) per core per tick.
 
 pub mod power;
 
+use crate::arch::{ArchProfile, SensorSpec};
 use crate::config::{Mhz, NodeSpec};
 use crate::{Error, Result};
 
 /// Mutable state of the simulated node.
 #[derive(Debug, Clone)]
 pub struct Node {
-    spec: NodeSpec,
+    arch: ArchProfile,
     ladder: Vec<Mhz>,
     /// Current DVFS frequency per core (even offline cores keep a setting,
     /// like real sysfs).
@@ -29,28 +37,67 @@ pub struct Node {
     /// Instantaneous utilization per core in [0, 1], set by the workload
     /// simulator each tick.
     util: Vec<f64>,
+    /// Cluster index per logical CPU (from the profile layout).
+    core_cluster: Vec<usize>,
+    /// Relative throughput per logical CPU (perf_scale, derated for SMT
+    /// sibling slots).
+    core_perf: Vec<f64>,
+    /// Dynamic-power share per logical CPU (1.0 for primaries, the
+    /// cluster's `smt_power` for sibling slots).
+    core_share: Vec<f64>,
 }
 
 impl Node {
-    /// Create a node with all cores online at maximum frequency (Linux
-    /// boot state with the performance governor).
+    /// Create a node from a legacy homogeneous [`NodeSpec`] (adapter over
+    /// [`Node::from_profile`]): all cores online at maximum frequency
+    /// (Linux boot state with the performance governor).
     pub fn new(spec: NodeSpec) -> Result<Self> {
         let spec = spec.validate()?;
-        let n = spec.total_cores();
-        let ladder = spec.ladder();
+        Self::from_profile(ArchProfile::from_node_spec(&spec))
+    }
+
+    /// Create a node from an architecture profile, all cores online at
+    /// maximum frequency.
+    pub fn from_profile(arch: ArchProfile) -> Result<Self> {
+        let arch = arch.validate()?;
+        let n = arch.total_cores();
+        let ladder = arch.ladder();
         let fmax = *ladder.last().expect("non-empty ladder");
+        let mut core_cluster = Vec::with_capacity(n);
+        let mut core_perf = Vec::with_capacity(n);
+        let mut core_share = Vec::with_capacity(n);
+        for (k, c) in arch.clusters.iter().enumerate() {
+            for slot in 0..c.logical_cpus() {
+                let sibling = slot >= c.cores;
+                core_cluster.push(k);
+                core_perf.push(if sibling {
+                    c.perf_scale * c.smt_perf
+                } else {
+                    c.perf_scale
+                });
+                core_share.push(if sibling { c.smt_power } else { 1.0 });
+            }
+        }
         Ok(Node {
-            spec,
+            arch,
             ladder,
             core_freq: vec![fmax; n],
             online: vec![true; n],
             util: vec![0.0; n],
+            core_cluster,
+            core_perf,
+            core_share,
         })
     }
 
-    /// The hardware spec this node was built from.
-    pub fn spec(&self) -> &NodeSpec {
-        &self.spec
+    /// The architecture profile this node was built from.
+    pub fn arch(&self) -> &ArchProfile {
+        &self.arch
+    }
+
+    /// The power-sensor characteristics of this architecture.
+    pub fn sensor(&self) -> &SensorSpec {
+        &self.arch.sensor
     }
 
     /// The DVFS ladder (ascending MHz).
@@ -58,18 +105,39 @@ impl Node {
         &self.ladder
     }
 
-    /// Total physical cores.
+    /// Total logical CPUs.
     pub fn total_cores(&self) -> usize {
-        self.spec.total_cores()
+        self.core_freq.len()
+    }
+
+    /// Number of clusters (sockets on SMP parts).
+    pub fn n_clusters(&self) -> usize {
+        self.arch.clusters.len()
+    }
+
+    /// Cluster owning logical CPU `core`.
+    pub fn cluster_of(&self, core: usize) -> usize {
+        self.core_cluster[core]
+    }
+
+    /// Relative throughput of logical CPU `core` (1.0 = reference core).
+    pub fn core_perf(&self, core: usize) -> f64 {
+        self.core_perf[core]
+    }
+
+    /// Dynamic-power share of logical CPU `core` (SMT siblings draw a
+    /// fraction of a primary thread's dynamic power).
+    pub fn core_dyn_share(&self, core: usize) -> f64 {
+        self.core_share[core]
     }
 
     /// Snap an arbitrary frequency request to the nearest ladder entry
     /// (clamped to the ladder ends) — cpufreq's resolution behaviour.
     pub fn snap_to_ladder(&self, f: Mhz) -> Mhz {
-        let lo = self.spec.freq_min_mhz;
-        let hi = self.spec.freq_max_mhz;
+        let lo = self.arch.freq_min_mhz;
+        let hi = self.arch.freq_max_mhz;
         let f = f.clamp(lo, hi);
-        let step = self.spec.freq_step_mhz;
+        let step = self.arch.freq_step_mhz;
         let down = lo + ((f - lo) / step) * step;
         let up = (down + step).min(hi);
         if f - down <= up - f {
@@ -109,9 +177,10 @@ impl Node {
         self.core_freq[core]
     }
 
-    /// Bring exactly `p` cores online, socket 0 first (the paper activates
-    /// cores contiguously); the rest go offline. Idle cores' utilization is
-    /// reset.
+    /// Bring exactly `p` cores online, in profile layout order (cluster 0
+    /// first, physical primaries before SMT siblings — the paper activates
+    /// cores contiguously); the rest go offline. Idle cores' utilization
+    /// is reset.
     pub fn set_online_cores(&mut self, p: usize) -> Result<()> {
         let total = self.total_cores();
         if p == 0 || p > total {
@@ -139,13 +208,25 @@ impl Node {
         self.online[core]
     }
 
-    /// Sockets with at least one online core (the paper's `s` in Eq. 7).
-    /// Offline sockets are assumed package-gated.
+    /// Whether cluster `k` has at least one online core.
+    pub fn cluster_active(&self, k: usize) -> bool {
+        self.core_cluster
+            .iter()
+            .zip(&self.online)
+            .any(|(c, on)| *c == k && *on)
+    }
+
+    /// Clusters with at least one online core. On SMP parts this is the
+    /// paper's `s` in Eq. 7 (offline sockets are package-gated); kept
+    /// under its historical name via [`Node::active_sockets`].
+    pub fn active_clusters(&self) -> usize {
+        (0..self.n_clusters()).filter(|k| self.cluster_active(*k)).count()
+    }
+
+    /// Sockets with at least one online core — alias of
+    /// [`Node::active_clusters`] for the homogeneous-SMP vocabulary.
     pub fn active_sockets(&self) -> usize {
-        let per = self.spec.cores_per_socket;
-        (0..self.spec.sockets)
-            .filter(|s| self.online[s * per..(s + 1) * per].iter().any(|b| *b))
-            .count()
+        self.active_clusters()
     }
 
     /// Set a core's utilization (workload simulator hook). Values are
@@ -194,6 +275,7 @@ impl Node {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::arch::{manycore, mobile_biglittle};
 
     fn node() -> Node {
         Node::new(NodeSpec::default()).unwrap()
@@ -272,5 +354,46 @@ mod tests {
         assert_eq!(n.util(0), 1.0);
         n.set_util(0, -3.0);
         assert_eq!(n.util(0), 0.0);
+    }
+
+    #[test]
+    fn homogeneous_node_has_unit_perf_and_share() {
+        let n = node();
+        for c in 0..n.total_cores() {
+            assert_eq!(n.core_perf(c), 1.0);
+            assert_eq!(n.core_dyn_share(c), 1.0);
+        }
+        assert_eq!(n.sensor().period_s, 1.0);
+    }
+
+    #[test]
+    fn biglittle_cluster_topology() {
+        let mut n = Node::from_profile(mobile_biglittle()).unwrap();
+        assert_eq!(n.total_cores(), 8);
+        assert_eq!(n.n_clusters(), 2);
+        assert_eq!(n.cluster_of(0), 0);
+        assert_eq!(n.cluster_of(7), 1);
+        assert!((n.core_perf(0) - 1.0).abs() < 1e-12);
+        assert!((n.core_perf(7) - 0.45).abs() < 1e-12);
+        // Contiguous activation fills the big cluster first.
+        n.set_online_cores(4).unwrap();
+        assert_eq!(n.active_clusters(), 1);
+        n.set_online_cores(5).unwrap();
+        assert_eq!(n.active_clusters(), 2);
+        // Ladder comes from the profile.
+        assert!(n.set_freq_all(600).is_ok());
+        assert!(n.set_freq_all(1250).is_err());
+        assert_eq!(n.snap_to_ladder(9000), 2400);
+    }
+
+    #[test]
+    fn smt_siblings_derated() {
+        let n = Node::from_profile(manycore()).unwrap();
+        assert_eq!(n.total_cores(), 64);
+        // Primary thread of core 0 vs its SMT sibling (slot 32).
+        assert!((n.core_perf(0) - 0.55).abs() < 1e-12);
+        assert!((n.core_perf(32) - 0.55 * 0.30).abs() < 1e-12);
+        assert_eq!(n.core_dyn_share(0), 1.0);
+        assert!((n.core_dyn_share(32) - 0.35).abs() < 1e-12);
     }
 }

@@ -1,54 +1,171 @@
 //! Ground-truth power process of the simulated node (substrate S2).
 //!
 //! This plays the role of the *physical machine's* electrical behaviour:
-//! a CMOS-shaped per-core dynamic term, a leakage term linear in f, a big
-//! static floor (the paper's testbed idles near 200 W), a per-socket
-//! overhead, utilization-dependent clock gating, slow thermal drift, and
-//! Gaussian sensor-channel noise. The methodology must *recover* Eq. 7's
-//! coefficients from 1 Hz samples of this process — it is never told them.
+//! a CMOS-shaped per-core dynamic term, a leakage term linear in f, a
+//! static floor, a per-cluster (socket / big / LITTLE) uncore overhead,
+//! utilization-dependent clock gating, slow thermal drift, and Gaussian
+//! sensor-channel noise. The methodology must *recover* Eq. 7's
+//! coefficients from sampled observations of this process — it is never
+//! told them.
+//!
+//! Since the architecture registry, the process is **per-cluster**: each
+//! cluster carries its own dynamic coefficients, uncore overhead and idle
+//! gating, and SMT sibling threads draw a configured fraction of a
+//! primary thread's dynamic power. The homogeneous
+//! [`PowerProcess::new`] constructor (one coefficient set for every
+//! cluster) reproduces the pre-registry behaviour exactly.
 
+use crate::arch::ArchProfile;
 use crate::config::{mhz_to_ghz, PowerProcessSpec};
 use crate::node::Node;
 use crate::util::rng::Rng;
 
+/// Per-cluster ground-truth power coefficients.
+#[derive(Debug, Clone)]
+struct ClusterPower {
+    dyn_c1: f64,
+    dyn_c2: f64,
+    uncore_w: f64,
+    idle_frac: f64,
+}
+
 /// Stateless evaluator for the ground-truth power draw.
 #[derive(Debug, Clone)]
 pub struct PowerProcess {
-    spec: PowerProcessSpec,
+    /// Coefficients per cluster; a single entry serves every cluster of a
+    /// homogeneous node (indexing clamps to the last entry).
+    clusters: Vec<ClusterPower>,
+    static_w: f64,
+    noise_w: f64,
+    drift_w: f64,
+    drift_period_s: f64,
+}
+
+/// Per-cluster decomposition of the deterministic node power: summing
+/// `static_w` and every `clusters` entry **in order** reproduces
+/// [`PowerProcess::base_watts`] bit for bit (the big.LITTLE accounting
+/// invariant the property suite locks down).
+#[derive(Debug, Clone)]
+pub struct PowerBreakdown {
+    /// Node-level static floor, watts.
+    pub static_w: f64,
+    /// Per-cluster uncore + dynamic watts (0.0 for fully-offline clusters).
+    pub clusters: Vec<f64>,
 }
 
 impl PowerProcess {
+    /// Homogeneous process from a legacy [`PowerProcessSpec`] — every
+    /// cluster of the node shares one coefficient set (the pre-registry
+    /// dual-Xeon behaviour).
     pub fn new(spec: PowerProcessSpec) -> Self {
-        PowerProcess { spec }
+        PowerProcess {
+            clusters: vec![ClusterPower {
+                dyn_c1: spec.gt_c1,
+                dyn_c2: spec.gt_c2,
+                uncore_w: spec.gt_socket,
+                idle_frac: spec.idle_frac,
+            }],
+            static_w: spec.gt_static,
+            noise_w: spec.noise_w,
+            drift_w: spec.drift_w,
+            drift_period_s: spec.drift_period_s,
+        }
     }
 
-    pub fn spec(&self) -> &PowerProcessSpec {
-        &self.spec
+    /// Per-cluster process from an architecture profile.
+    pub fn from_profile(arch: &ArchProfile) -> Self {
+        PowerProcess {
+            clusters: arch
+                .clusters
+                .iter()
+                .map(|c| ClusterPower {
+                    dyn_c1: c.dyn_c1,
+                    dyn_c2: c.dyn_c2,
+                    uncore_w: c.uncore_w,
+                    idle_frac: c.idle_frac,
+                })
+                .collect(),
+            static_w: arch.static_w,
+            noise_w: arch.noise_w,
+            drift_w: arch.drift_w,
+            drift_period_s: arch.drift_period_s,
+        }
+    }
+
+    fn cluster(&self, k: usize) -> &ClusterPower {
+        &self.clusters[k.min(self.clusters.len() - 1)]
+    }
+
+    /// Watts drawn by cluster `k`, whose logical CPUs occupy the
+    /// contiguous `span` of the cluster-major layout: uncore + per-core
+    /// dynamic, or 0.0 when the cluster is fully offline. Both
+    /// [`PowerProcess::breakdown`] and [`PowerProcess::base_watts`] fold
+    /// over this single definition, so their agreement is structural.
+    fn cluster_watts(&self, node: &Node, k: usize, span: std::ops::Range<usize>) -> f64 {
+        if !span.clone().any(|c| node.is_online(c)) {
+            return 0.0;
+        }
+        let cp = self.cluster(k);
+        let mut total = cp.uncore_w;
+        for c in span {
+            if !node.is_online(c) {
+                continue;
+            }
+            let f = mhz_to_ghz(node.freq(c));
+            let gate = cp.idle_frac + (1.0 - cp.idle_frac) * node.util(c);
+            total += (cp.dyn_c1 * f * f * f + cp.dyn_c2 * f) * gate * node.core_dyn_share(c);
+        }
+        total
+    }
+
+    /// Visit each cluster's contiguous span of logical CPUs in order.
+    fn for_each_cluster_span(node: &Node, mut visit: impl FnMut(usize, std::ops::Range<usize>)) {
+        let total = node.total_cores();
+        let mut core = 0;
+        for k in 0..node.n_clusters() {
+            let start = core;
+            while core < total && node.cluster_of(core) == k {
+                core += 1;
+            }
+            visit(k, start..core);
+        }
+    }
+
+    /// Per-cluster decomposition of the deterministic power at the node's
+    /// current DVFS/hotplug/utilization state.
+    pub fn breakdown(&self, node: &Node) -> PowerBreakdown {
+        let mut clusters = Vec::with_capacity(node.n_clusters());
+        Self::for_each_cluster_span(node, |k, span| {
+            clusters.push(self.cluster_watts(node, k, span));
+        });
+        PowerBreakdown {
+            static_w: self.static_w,
+            clusters,
+        }
     }
 
     /// Deterministic (noise-free, drift-free) component of the node power
     /// in watts at the node's current DVFS/hotplug/utilization state.
+    ///
+    /// Allocation-free — the per-tick hot path. Folds the same
+    /// [`PowerProcess::cluster_watts`] terms as the breakdown (static
+    /// floor first, then cluster subtotals in order), so
+    /// `breakdown().static_w + Σ breakdown().clusters == base_watts`
+    /// bit for bit (locked by the property suite).
     pub fn base_watts(&self, node: &Node) -> f64 {
-        let s = &self.spec;
-        let mut dynamic = 0.0;
-        for core in 0..node.total_cores() {
-            if !node.is_online(core) {
-                continue;
-            }
-            let f = mhz_to_ghz(node.freq(core));
-            let gate = s.idle_frac + (1.0 - s.idle_frac) * node.util(core);
-            dynamic += (s.gt_c1 * f * f * f + s.gt_c2 * f) * gate;
-        }
-        s.gt_static + s.gt_socket * node.active_sockets() as f64 + dynamic
+        let mut w = self.static_w;
+        Self::for_each_cluster_span(node, |k, span| {
+            w += self.cluster_watts(node, k, span);
+        });
+        w
     }
 
     /// Observable instantaneous power at simulated time `t` (seconds):
-    /// base + thermal drift + Gaussian noise. This is what the IPMI
+    /// base + thermal drift + Gaussian noise. This is what the sensor
     /// channel samples.
     pub fn instantaneous_watts(&self, node: &Node, t: f64, rng: &mut Rng) -> f64 {
-        let s = &self.spec;
-        let drift = s.drift_w * (2.0 * std::f64::consts::PI * t / s.drift_period_s).sin();
-        let noise = rng.gaussian() * s.noise_w;
+        let drift = self.drift_w * (2.0 * std::f64::consts::PI * t / self.drift_period_s).sin();
+        let noise = rng.gaussian() * self.noise_w;
         (self.base_watts(node) + drift + noise).max(0.0)
     }
 }
@@ -56,6 +173,7 @@ impl PowerProcess {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::arch::{manycore, mobile_biglittle};
     use crate::config::NodeSpec;
 
     fn setup() -> (Node, PowerProcess) {
@@ -153,5 +271,92 @@ mod tests {
         for i in 0..2000 {
             assert!(pp.instantaneous_watts(&node, i as f64, &mut rng) >= 0.0);
         }
+    }
+
+    #[test]
+    fn breakdown_sums_to_base_exactly() {
+        for profile in crate::arch::registry() {
+            let mut node = Node::from_profile(profile.clone()).unwrap();
+            let pp = PowerProcess::from_profile(&profile);
+            node.set_online_cores(node.total_cores() / 2 + 1).unwrap();
+            for c in 0..node.total_cores() / 2 + 1 {
+                node.set_util(c, 0.7);
+            }
+            let b = pp.breakdown(&node);
+            let mut sum = b.static_w;
+            for c in &b.clusters {
+                sum += c;
+            }
+            assert_eq!(sum, pp.base_watts(&node), "{}", profile.name);
+            assert_eq!(b.clusters.len(), node.n_clusters());
+        }
+    }
+
+    #[test]
+    fn offline_cluster_draws_no_uncore() {
+        let profile = mobile_biglittle();
+        let mut node = Node::from_profile(profile.clone()).unwrap();
+        let pp = PowerProcess::from_profile(&profile);
+        node.set_online_cores(4).unwrap(); // big cluster only
+        let b = pp.breakdown(&node);
+        assert!(b.clusters[0] > 0.0);
+        assert_eq!(b.clusters[1], 0.0, "LITTLE cluster must be gated");
+        node.set_online_cores(5).unwrap();
+        let b = pp.breakdown(&node);
+        assert!(b.clusters[1] > 0.0);
+    }
+
+    #[test]
+    fn little_cores_cheaper_than_big() {
+        let profile = mobile_biglittle();
+        let mut node = Node::from_profile(profile.clone()).unwrap();
+        let pp = PowerProcess::from_profile(&profile);
+        node.set_freq_all(1800).unwrap();
+        // 4 big online at full load:
+        node.set_online_cores(4).unwrap();
+        for c in 0..4 {
+            node.set_util(c, 1.0);
+        }
+        let big4 = pp.breakdown(&node).clusters[0];
+        // all 8 online, only the little ones loaded:
+        node.set_online_cores(8).unwrap();
+        for c in 0..4 {
+            node.set_util(c, 0.0);
+        }
+        for c in 4..8 {
+            node.set_util(c, 1.0);
+        }
+        let little4 = pp.breakdown(&node).clusters[1];
+        assert!(
+            little4 < big4,
+            "LITTLE cluster {little4} W should undercut big {big4} W"
+        );
+    }
+
+    #[test]
+    fn smt_sibling_power_is_fractional() {
+        let profile = manycore();
+        let mut node = Node::from_profile(profile.clone()).unwrap();
+        let pp = PowerProcess::from_profile(&profile);
+        node.set_freq_all(1600).unwrap();
+        // 32 primaries at full load:
+        node.set_online_cores(32).unwrap();
+        for c in 0..32 {
+            node.set_util(c, 1.0);
+        }
+        let primaries = pp.base_watts(&node);
+        // add the 32 sibling threads at full load:
+        node.set_online_cores(64).unwrap();
+        for c in 0..64 {
+            node.set_util(c, 1.0);
+        }
+        let with_siblings = pp.base_watts(&node);
+        let added = with_siblings - primaries;
+        let primary_dynamic = primaries - 118.0 - 18.0; // static + uncore
+        assert!(added > 0.0);
+        assert!(
+            added < 0.5 * primary_dynamic,
+            "siblings added {added} W vs primary dynamic {primary_dynamic} W"
+        );
     }
 }

@@ -7,7 +7,7 @@
 
 use crate::characterize::{CharSample, Characterization};
 use crate::compare::{ComparisonRow, GovernorRun, SavingsSummary};
-use crate::coordinator::{AppResults, ExperimentResults};
+use crate::coordinator::{AppResults, ExperimentResults, FleetMember, FleetResults};
 use crate::powermodel::{FitReport, PowerModel, PowerObs};
 use crate::svr::{CvReport, Standardizer, SvrModel};
 use crate::util::json::{FromJson, Json, ToJson};
@@ -339,6 +339,7 @@ impl FromJson for AppResults {
 impl ToJson for ExperimentResults {
     fn to_json(&self) -> Json {
         Json::obj(vec![
+            ("arch", Json::Str(self.arch.clone())),
             ("power_obs", Json::arr(&self.power_obs)),
             ("power_model", self.power_model.to_json()),
             ("power_fit", self.power_fit.to_json()),
@@ -351,11 +352,48 @@ impl ToJson for ExperimentResults {
 impl FromJson for ExperimentResults {
     fn from_json(j: &Json) -> Result<Self> {
         Ok(ExperimentResults {
+            // Pre-registry result bundles carry no arch tag.
+            arch: match j.opt("arch") {
+                Some(a) => a.as_str()?.to_string(),
+                None => "custom-node".to_string(),
+            },
             power_obs: Vec::<PowerObs>::from_json(j.get("power_obs")?)?,
             power_model: PowerModel::from_json(j.get("power_model")?)?,
             power_fit: FitReport::from_json(j.get("power_fit")?)?,
             apps: Vec::<AppResults>::from_json(j.get("apps")?)?,
             summary: SavingsSummary::from_json(j.get("summary")?)?,
+        })
+    }
+}
+
+impl ToJson for FleetMember {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("arch", Json::Str(self.arch.clone())),
+            ("results", self.results.to_json()),
+        ])
+    }
+}
+
+impl FromJson for FleetMember {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(FleetMember {
+            arch: j.get("arch")?.as_str()?.to_string(),
+            results: ExperimentResults::from_json(j.get("results")?)?,
+        })
+    }
+}
+
+impl ToJson for FleetResults {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![("members", Json::arr(&self.members))])
+    }
+}
+
+impl FromJson for FleetResults {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(FleetResults {
+            members: Vec::<FleetMember>::from_json(j.get("members")?)?,
         })
     }
 }

@@ -8,6 +8,7 @@
 //! each test becomes one observation (§3.3). Validation reports the
 //! paper's metrics: absolute percentage error (Eq. 10) and RMSE.
 
+use crate::arch::ArchProfile;
 use crate::config::{mhz_to_ghz, Mhz, NodeSpec};
 use crate::node::power::PowerProcess;
 use crate::node::Node;
@@ -136,17 +137,26 @@ impl Default for StressConfig {
     }
 }
 
-/// Run the §3.3 stress campaign on a simulated node: pin every (f, p)
-/// combination at full utilization, record the mean IPMI power.
+/// Run the §3.3 stress campaign on a legacy homogeneous [`NodeSpec`]
+/// (adapter over [`stress_campaign_arch`]).
+pub fn stress_campaign(spec: &NodeSpec, cfg: &StressConfig) -> Result<Vec<PowerObs>> {
+    stress_campaign_arch(&ArchProfile::from_node_spec(spec), cfg)
+}
+
+/// Run the §3.3 stress campaign on a simulated node built from an
+/// architecture profile: pin every (f, p) combination at full
+/// utilization, record the mean sensor-channel power.
 ///
 /// Tests fan out over the worker pool; every test owns a fresh node and a
 /// meter seeded from its global (f-major) test index, so the observation
-/// list is bit-identical for any thread count.
-pub fn stress_campaign(spec: &NodeSpec, cfg: &StressConfig) -> Result<Vec<PowerObs>> {
+/// list is bit-identical for any thread count. The `sockets` column
+/// records active *clusters* (Eq. 7's `s` generalization).
+pub fn stress_campaign_arch(arch: &ArchProfile, cfg: &StressConfig) -> Result<Vec<PowerObs>> {
+    let total = arch.total_cores();
     let mut tests = Vec::new();
     let mut f = cfg.freq_min_mhz;
     while f <= cfg.freq_max_mhz {
-        for p in 1..=spec.total_cores() {
+        for p in 1..=total {
             tests.push((f, p));
         }
         f += cfg.freq_step_mhz;
@@ -157,19 +167,19 @@ pub fn stress_campaign(spec: &NodeSpec, cfg: &StressConfig) -> Result<Vec<PowerO
         let (f, p) = tests[i];
         // Each test runs on an independent node — the paper's cool-down
         // between tests (no cross-test thermal state).
-        let mut node = Node::new(spec.clone())?;
-        let power = PowerProcess::new(spec.power.clone());
+        let mut node = Node::from_profile(arch.clone())?;
+        let power = PowerProcess::from_profile(arch);
         node.set_online_cores(p)?;
         node.set_freq_all(f)?;
         for c in 0..p {
             node.set_util(c, 1.0);
         }
-        let mut meter = IpmiMeter::new(cfg.seed.wrapping_add(i as u64));
+        let mut meter = IpmiMeter::from_spec(&arch.sensor, cfg.seed.wrapping_add(i as u64));
         meter.advance(&node, &power, 0.0, cfg.dwell_s);
         Ok(PowerObs {
             f_mhz: f,
             cores: p,
-            sockets: node.active_sockets(),
+            sockets: node.active_clusters(),
             watts: meter.mean_watts(),
         })
     })
@@ -225,6 +235,50 @@ mod tests {
         // Paper's inequality: even at max config, dynamic+socket < static.
         let dynamic = 32.0 * (m.c1 * 2.2f64.powi(3) + m.c2 * 2.2) + m.c4 * 2.0;
         assert!(dynamic < m.c3);
+    }
+
+    #[test]
+    fn fit_transfers_to_registry_profiles() {
+        // The methodology claim the registry exists to demonstrate: Eq. 7
+        // refits on foreign architectures, including the asymmetric
+        // big.LITTLE part where a single (c1, c2) pair can only
+        // approximate the two clusters' mixed dynamics.
+        for profile in [crate::arch::desktop_turbo(), crate::arch::mobile_biglittle()] {
+            let cfg = StressConfig {
+                freq_min_mhz: profile.freq_min_mhz,
+                freq_max_mhz: profile.freq_max_mhz - profile.freq_step_mhz,
+                freq_step_mhz: profile.freq_step_mhz,
+                ..Default::default()
+            };
+            let obs = stress_campaign_arch(&profile, &cfg).unwrap();
+            assert_eq!(
+                obs.len(),
+                ((cfg.freq_max_mhz - cfg.freq_min_mhz) / cfg.freq_step_mhz + 1) as usize
+                    * profile.total_cores()
+            );
+            let (m, rep) = PowerModel::fit(&obs).unwrap();
+            assert!(
+                m.c1.is_finite() && m.c2.is_finite() && m.c3.is_finite() && m.c4.is_finite(),
+                "{}: non-finite fit",
+                profile.name
+            );
+            assert!(
+                rep.ape_pct < 20.0,
+                "{}: APE {} too poor to be usable",
+                profile.name,
+                rep.ape_pct
+            );
+            // Monotone in cores over the profile's own range.
+            let mid_mhz = cfg.freq_min_mhz + (cfg.freq_max_mhz - cfg.freq_min_mhz) / 2;
+            let f_mid = mhz_to_ghz(mid_mhz);
+            let total = profile.total_cores();
+            assert!(
+                m.predict(f_mid, total, profile.clusters.len())
+                    > m.predict(f_mid, 1, 1),
+                "{}: fitted model lost core monotonicity",
+                profile.name
+            );
+        }
     }
 
     #[test]

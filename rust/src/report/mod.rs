@@ -13,11 +13,26 @@
 
 use std::fmt::Write as _;
 
+use crate::arch::ArchProfile;
 use crate::config::{mhz_to_ghz, CampaignSpec};
-use crate::coordinator::{AppResults, ExperimentResults};
+use crate::coordinator::{AppResults, ExperimentResults, FleetResults};
 use crate::compare::pow2_core_counts;
 use crate::energy::EnergyModel;
 use crate::{Error, Result};
+
+/// Resolve the architecture a result bundle ran on: registry lookup by
+/// name, defaulting to the paper's node for custom/legacy bundles.
+///
+/// Known limitation: results produced via `Coordinator::for_arch` with a
+/// NON-registry profile fall back to the paper topology here, so the
+/// modeled-power columns of Figs. 6–9 and Fig. 10's core-count axis use
+/// the wrong cluster layout for such bundles (the pre-registry code had
+/// the same behaviour — it always assumed the default node). Registry
+/// profiles and legacy NodeSpec-default runs resolve correctly.
+fn arch_for_results(res: &ExperimentResults) -> ArchProfile {
+    crate::arch::profile_by_name(&res.arch)
+        .unwrap_or_else(|_| ArchProfile::from_node_spec(&crate::config::NodeSpec::default()))
+}
 
 /// Paper table order: Table 2..5 = these apps in this order.
 pub const TABLE_APPS: [&str; 4] = ["fluidanimate", "raytrace", "swaptions", "blackscholes"];
@@ -131,8 +146,7 @@ pub fn fig_energy_model(
     input: u32,
 ) -> String {
     let freqs = campaign.frequencies();
-    let node = crate::config::NodeSpec::default();
-    let em = EnergyModel::new(res.power_model, app.svr.clone(), node);
+    let em = EnergyModel::for_arch(res.power_model, app.svr.clone(), arch_for_results(res));
     let mut out = format!(
         "# Fig: {} energy measured vs modeled, input {} (joules)\ncores",
         app.app, input
@@ -193,17 +207,18 @@ pub fn table_comparison(app: &AppResults) -> String {
 /// Fig. 10 — TSV: per (app, input), ondemand energy at power-of-2 core
 /// counts normalized to the proposed approach's energy (=1.0).
 pub fn fig10_normalized(res: &ExperimentResults) -> String {
+    let total = arch_for_results(res).total_cores();
     let mut out = String::from(
         "# Fig 10: ondemand energy relative to proposed (proposed = 1.0)\napp\tinput",
     );
-    for p in pow2_core_counts(32) {
+    for p in pow2_core_counts(total) {
         let _ = write!(out, "\tondemand@{p}c");
     }
     out.push_str("\tproposed\n");
     for app in &res.apps {
         for row in &app.comparisons {
             let _ = write!(out, "{}\t{}", app.app, row.input);
-            for p in pow2_core_counts(32) {
+            for p in pow2_core_counts(total) {
                 let e = row
                     .ondemand_all
                     .iter()
@@ -264,6 +279,95 @@ pub fn full_report(res: &ExperimentResults, campaign: &CampaignSpec) -> String {
     out.push_str(&fig10_normalized(res));
     out.push('\n');
     out.push_str(&headline(res));
+    out
+}
+
+/// Cross-architecture savings table (ISSUE 2): one row per
+/// (architecture, application, input) with the proposed optimum and the
+/// ondemand best/worst energies — Tables 2–5 mirrored per fleet member.
+pub fn fleet_table(fleet: &FleetResults) -> String {
+    let mut out = String::from(
+        "# Cross-architecture minimal energy (per profile, vs ondemand)\n\
+         | Arch | App | Input | Proposed GHz (cores) | E (kJ) | Ondemand-Min E (kJ) | Ondemand-Max E (kJ) | Min Save (%) | Max Save (%) |\n\
+         |---|---|---|---|---|---|---|---|---|\n",
+    );
+    for m in &fleet.members {
+        for app in &m.results.apps {
+            for row in &app.comparisons {
+                let _ = writeln!(
+                    out,
+                    "| {} | {} | {} | {:.1} ({}) | {:.3} | {:.3} | {:.3} | {:.2} | {:.2} |",
+                    m.arch,
+                    app.app,
+                    row.input,
+                    mhz_to_ghz(row.proposed_f_mhz),
+                    row.proposed_cores,
+                    row.proposed.energy_j / 1000.0,
+                    row.ondemand_min.energy_j / 1000.0,
+                    row.ondemand_max.energy_j / 1000.0,
+                    row.save_min_pct(),
+                    row.save_max_pct(),
+                );
+            }
+        }
+    }
+    out
+}
+
+/// Per-architecture optimum summary: the distinct energy-optimal
+/// (frequency, cores) answers each profile produced — the one-glance
+/// evidence that optima shift across architectures.
+pub fn fleet_optima(fleet: &FleetResults) -> String {
+    let mut out = String::from(
+        "# Energy-optimal configurations per architecture\n\
+         | Arch | Distinct optima (GHz @ cores) | Avg save vs od-best (%) | Avg save vs od-worst (%) |\n\
+         |---|---|---|---|\n",
+    );
+    for m in &fleet.members {
+        let mut optima: Vec<(u32, usize)> = Vec::new();
+        for app in &m.results.apps {
+            for row in &app.comparisons {
+                let key = (row.proposed_f_mhz, row.proposed_cores);
+                if !optima.contains(&key) {
+                    optima.push(key);
+                }
+            }
+        }
+        let rendered: Vec<String> = optima
+            .iter()
+            .map(|(f, p)| format!("{:.1}@{p}", mhz_to_ghz(*f)))
+            .collect();
+        let _ = writeln!(
+            out,
+            "| {} | {} | {:.1} | {:.1} |",
+            m.arch,
+            rendered.join(", "),
+            m.results.summary.avg_save_min_pct,
+            m.results.summary.avg_save_max_pct,
+        );
+    }
+    out
+}
+
+/// Full fleet report: optimum summary, the cross-architecture savings
+/// table, and each member's headline (the `ecopt fleet` output, uploaded
+/// as a CI artifact).
+pub fn fleet_report(fleet: &FleetResults) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "# Fleet sweep over {} architecture profile(s)\n",
+        fleet.members.len()
+    );
+    out.push_str(&fleet_optima(fleet));
+    out.push('\n');
+    out.push_str(&fleet_table(fleet));
+    out.push('\n');
+    for m in &fleet.members {
+        let _ = writeln!(out, "## {}", m.arch);
+        out.push_str(&headline(&m.results));
+        out.push('\n');
+    }
     out
 }
 
@@ -368,5 +472,45 @@ mod tests {
         assert!(r.contains("Fig 1"));
         assert!(r.contains("Table 1"));
         assert!(r.contains("Headline"));
+    }
+
+    #[test]
+    fn fleet_report_lists_every_member_and_row() {
+        let cfg = ExperimentConfig {
+            campaign: CampaignSpec {
+                freq_points: 3,
+                core_max: 8,
+                inputs: vec![1],
+                ..Default::default()
+            },
+            svr: SvrSpec {
+                folds: 2,
+                c: 500.0,
+                max_iter: 50_000,
+                ..Default::default()
+            },
+            workloads: vec!["blackscholes".into()],
+            ..Default::default()
+        };
+        let rc = RunConfig {
+            dt: 0.25,
+            work_noise: 0.0,
+            seed: 13,
+            max_sim_s: 1e6,
+            ..Default::default()
+        };
+        let profiles = vec![crate::arch::xeon_dual(), crate::arch::mobile_biglittle()];
+        let fleet = crate::coordinator::run_fleet(&cfg, &rc, &profiles).unwrap();
+        let report = fleet_report(&fleet);
+        assert!(report.contains("xeon-dual-e5-2698v3"));
+        assert!(report.contains("mobile-biglittle"));
+        assert!(report.contains("Cross-architecture minimal energy"));
+        assert!(report.contains("Energy-optimal configurations per architecture"));
+        // One table row per (arch, app, input): 2 members x 1 app x 1 input.
+        let rows = fleet_table(&fleet)
+            .lines()
+            .filter(|l| l.starts_with("| xeon") || l.starts_with("| mobile"))
+            .count();
+        assert_eq!(rows, 2);
     }
 }

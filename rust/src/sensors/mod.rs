@@ -1,12 +1,23 @@
-//! IPMI sensor simulator (substrate S3).
+//! Power-sensor simulator (substrate S3).
 //!
 //! The paper measures power through IPMI at ~1 sample/second and computes
 //! energy by integrating those samples over the run (§3.3, §4.1). This
 //! module reproduces that measurement channel: a sampler that reads the
 //! node's ground-truth power process on a fixed cadence (with optional
 //! sample dropouts — real BMCs miss beats), quantizes like a BMC ADC, and
-//! an energy meter that trapezoid-integrates the sample stream.
+//! an energy meter that trapezoid-integrates the sample stream. The
+//! cadence/quantization/dropout triple comes from the architecture
+//! profile's [`SensorSpec`] (IPMI on the Xeon, RAPL-ish on the desktop
+//! part, a lossy PMIC on the big.LITTLE part).
+//!
+//! Beat timestamps are computed as `beat_index * period` from an integer
+//! beat counter, **not** by accumulating `t += period`: accumulating a
+//! non-representable period (0.1 s, 0.2 s, ...) drifts by an ulp per
+//! beat, which after thousands of beats shifts samples off their true
+//! grid and skews the trapezoid weights (the rounding bug the ISSUE 2
+//! sensor edge-case tests pinned down).
 
+use crate::arch::SensorSpec;
 use crate::node::power::PowerProcess;
 use crate::node::Node;
 use crate::util::rng::Rng;
@@ -21,24 +32,30 @@ pub struct PowerSample {
     pub watts: f64,
 }
 
-/// IPMI-style sampler + energy integrator over simulated time.
+/// Sensor-channel sampler + energy integrator over simulated time.
 #[derive(Debug)]
 pub struct IpmiMeter {
     /// Sampling period in seconds (paper: ~1.0).
     period_s: f64,
-    /// BMC ADC quantization step in watts (0 disables).
+    /// ADC quantization step in watts (0 disables).
     quantum_w: f64,
     /// Probability of missing a sample beat (failure injection).
     dropout: f64,
     rng: Rng,
     samples: Vec<PowerSample>,
-    next_sample_t: f64,
+    /// Next beat index; the beat's timestamp is `beat * period_s`.
+    beat: u64,
 }
 
 impl IpmiMeter {
     /// Standard 1 Hz meter with 0.1 W quantization and no dropouts.
     pub fn new(seed: u64) -> Self {
         Self::with_params(1.0, 0.1, 0.0, seed)
+    }
+
+    /// Meter with an architecture profile's sensor characteristics.
+    pub fn from_spec(spec: &SensorSpec, seed: u64) -> Self {
+        Self::with_params(spec.period_s, spec.quantum_w, spec.dropout, seed)
     }
 
     pub fn with_params(period_s: f64, quantum_w: f64, dropout: f64, seed: u64) -> Self {
@@ -50,17 +67,20 @@ impl IpmiMeter {
             dropout,
             rng: Rng::seed_from_u64(seed),
             samples: Vec::new(),
-            next_sample_t: 0.0,
+            beat: 0,
         }
     }
 
     /// Advance simulated time from `t` by `dt`, sampling the power process
-    /// at every 1 Hz beat that falls inside `(t, t+dt]`.
+    /// at every beat that falls inside `(t, t+dt]`.
     pub fn advance(&mut self, node: &Node, power: &PowerProcess, t: f64, dt: f64) {
         let end = t + dt;
-        while self.next_sample_t <= end {
-            let ts = self.next_sample_t;
-            self.next_sample_t += self.period_s;
+        loop {
+            let ts = self.beat as f64 * self.period_s;
+            if ts > end {
+                break;
+            }
+            self.beat += 1;
             if self.dropout > 0.0 && self.rng.f64() < self.dropout {
                 continue; // missed beat
             }
@@ -99,7 +119,7 @@ impl IpmiMeter {
     /// Drop collected samples and restart the beat clock at `t = 0`.
     pub fn reset(&mut self) {
         self.samples.clear();
-        self.next_sample_t = 0.0;
+        self.beat = 0;
     }
 }
 
@@ -210,5 +230,123 @@ mod tests {
         m.advance(&node, &pp, 0.0, 0.5); // single beat at t=0
         assert_eq!(m.samples().len(), 1);
         assert_eq!(m.energy_joules(), 0.0);
+    }
+
+    // --- ISSUE 2 sensor edge cases -------------------------------------
+
+    #[test]
+    fn subsecond_beats_stay_on_the_exact_grid() {
+        // Regression for the beat-accumulation rounding bug: advancing a
+        // 0.1 s meter through 10 000 drifting 0.1 s ticks must still put
+        // every sample at exactly `i * 0.1` (the bitwise product, not an
+        // accumulated sum) and never skip or duplicate a beat.
+        let (node, pp) = quiet_setup();
+        let mut m = IpmiMeter::with_params(0.1, 0.0, 0.0, 7);
+        let mut t = 0.0f64;
+        for _ in 0..10_000 {
+            m.advance(&node, &pp, t, 0.1);
+            t += 0.1; // accumulates ulp drift, like the runner's clock
+        }
+        let samples = m.samples();
+        assert!(
+            (samples.len() as i64 - 10_001).abs() <= 1,
+            "beat count {} drifted",
+            samples.len()
+        );
+        for (i, s) in samples.iter().enumerate() {
+            assert_eq!(
+                s.t_s,
+                i as f64 * 0.1,
+                "beat {i} off the exact grid: {}",
+                s.t_s
+            );
+        }
+    }
+
+    #[test]
+    fn from_spec_matches_with_params() {
+        let (node, pp) = quiet_setup();
+        let spec = crate::arch::SensorSpec {
+            period_s: 0.5,
+            quantum_w: 0.25,
+            dropout: 0.0,
+        };
+        let mut a = IpmiMeter::from_spec(&spec, 9);
+        let mut b = IpmiMeter::with_params(0.5, 0.25, 0.0, 9);
+        a.advance(&node, &pp, 0.0, 20.0);
+        b.advance(&node, &pp, 0.0, 20.0);
+        assert_eq!(a.samples(), b.samples());
+        assert_eq!(a.samples().len(), 41);
+    }
+
+    #[test]
+    fn dropout_run_at_one_hz_keeps_grid_timestamps() {
+        // Dropped beats must not shift the surviving samples: every
+        // timestamp stays an integer second, and the dropout RNG stream
+        // stays aligned with the measurement stream (deterministic count).
+        let (node, pp) = quiet_setup();
+        let mut m = IpmiMeter::with_params(1.0, 0.1, 0.25, 11);
+        m.advance(&node, &pp, 0.0, 2000.0);
+        let n = m.samples().len();
+        assert!(n > 1300 && n < 1700, "dropout survivor count {n}");
+        for s in m.samples() {
+            assert_eq!(s.t_s, s.t_s.round(), "off-grid surviving beat {}", s.t_s);
+        }
+        // Deterministic per seed.
+        let mut m2 = IpmiMeter::with_params(1.0, 0.1, 0.25, 11);
+        m2.advance(&node, &pp, 0.0, 2000.0);
+        assert_eq!(m.samples(), m2.samples());
+    }
+
+    #[test]
+    fn quantization_rounds_to_nearest_not_down() {
+        // A process whose base power sits just above a half-quantum must
+        // round UP to the next quantum step.
+        let spec = PowerProcessSpec {
+            gt_c1: 0.0,
+            gt_c2: 0.0,
+            gt_static: 100.26,
+            gt_socket: 0.0,
+            idle_frac: 0.0,
+            noise_w: 0.0,
+            drift_w: 0.0,
+            ..Default::default()
+        };
+        let node = Node::new(NodeSpec::default()).unwrap();
+        let pp = PowerProcess::new(spec);
+        let mut m = IpmiMeter::with_params(1.0, 0.5, 0.0, 13);
+        m.advance(&node, &pp, 0.0, 3.0);
+        for s in m.samples() {
+            assert!(
+                (s.watts - 100.5).abs() < 1e-9,
+                "100.26 W should quantize to 100.5, got {}",
+                s.watts
+            );
+        }
+    }
+
+    #[test]
+    fn trapezoid_energy_on_known_synthetic_trace() {
+        // Drift-only process: P(t) = base + A sin(2 pi t / T). Sampled at
+        // 1 Hz over an integer number of periods, the sine's trapezoid
+        // contribution cancels exactly, leaving base * duration.
+        let mut spec = NodeSpec::default();
+        spec.power = PowerProcessSpec {
+            noise_w: 0.0,
+            drift_w: 5.0,
+            drift_period_s: 20.0,
+            ..spec.power
+        };
+        let pp = PowerProcess::new(spec.power.clone());
+        let node = Node::new(spec).unwrap();
+        let base = pp.base_watts(&node);
+        let mut m = IpmiMeter::with_params(1.0, 0.0, 0.0, 17);
+        m.advance(&node, &pp, 0.0, 200.0); // 10 full drift periods
+        let e = m.energy_joules();
+        assert!(
+            (e - base * 200.0).abs() < 1e-6,
+            "sinusoid should cancel: {e} vs {}",
+            base * 200.0
+        );
     }
 }

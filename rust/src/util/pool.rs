@@ -278,4 +278,31 @@ mod tests {
             i
         });
     }
+
+    #[test]
+    #[should_panic(expected = "fallible job 6 panicked")]
+    fn try_run_worker_panics_propagate() {
+        // A panic inside a *fallible* job must surface as a panic (test
+        // assertions inside pooled jobs behave like sequential code), not
+        // be swallowed into the Result channel.
+        let pool = WorkerPool::new(4);
+        let _ = pool.try_run(16, |i| {
+            if i == 6 {
+                panic!("fallible job 6 panicked");
+            }
+            Ok(i)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "oversubscribed panic")]
+    fn panics_propagate_with_more_workers_than_jobs() {
+        let pool = WorkerPool::new(16);
+        pool.run(3, |i| {
+            if i == 2 {
+                panic!("oversubscribed panic");
+            }
+            i
+        });
+    }
 }

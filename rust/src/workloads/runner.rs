@@ -106,8 +106,9 @@ pub fn run(
     }
 
     // Decorrelate the meter RNG stream from the work-noise stream while
-    // staying deterministic per seed.
-    let mut meter = IpmiMeter::new(cfg.seed ^ 0x9E37_79B9_7F4A_7C15);
+    // staying deterministic per seed. The channel's cadence/quantization/
+    // dropout come from the node's architecture profile.
+    let mut meter = IpmiMeter::from_spec(node.sensor(), cfg.seed ^ 0x9E37_79B9_7F4A_7C15);
     let mut t = 0.0f64;
     let mut freq_time_integral = 0.0f64;
     let mut gov_window = f64::INFINITY; // force a sample on the first tick
@@ -239,14 +240,17 @@ fn apply_phase_utils(node: &mut Node, app: &AppProfile, kind: PhaseKind, p: usiz
 }
 
 /// Work consumption rate for the current phase.
-/// Serial/Parallel: core-seconds (at f_ref) per second; Barrier: 1 (wall).
+/// Serial/Parallel: core-seconds (at f_ref on the reference core) per
+/// second; Barrier: 1 (wall). Heterogeneous parts contribute per-core
+/// throughput scales (big vs LITTLE clusters, derated SMT siblings) —
+/// on homogeneous nodes every scale is exactly 1.0.
 fn phase_rate(node: &Node, app: &AppProfile, kind: PhaseKind, p: usize) -> f64 {
     match kind {
-        PhaseKind::Serial => app.speed_ratio(node.freq(0)),
+        PhaseKind::Serial => app.speed_ratio(node.freq(0)) * node.core_perf(0),
         PhaseKind::Parallel => {
             let mut sum = 0.0;
             for c in 0..p {
-                sum += app.speed_ratio(node.freq(c));
+                sum += app.speed_ratio(node.freq(c)) * node.core_perf(c);
             }
             sum / (1.0 + app.sync_rel * (p as f64 - 1.0))
         }
@@ -381,6 +385,65 @@ mod tests {
         cfg.seed = 11;
         let b = run(&mut node, &mut gov, &pp, &app, 1, 8, &cfg).unwrap().wall_time_s;
         assert!((a - b).abs() > 1e-6, "different seeds must differ: {a} vs {b}");
+    }
+
+    #[test]
+    fn little_cores_help_but_less_than_big_ones() {
+        // On the big.LITTLE profile, a scalable app keeps speeding up as
+        // LITTLE cores come online, but each LITTLE core contributes less
+        // than a big one did.
+        let profile = crate::arch::mobile_biglittle();
+        let app = app_by_name("swaptions").unwrap();
+        let cfg = noiseless_cfg();
+        let mut t = Vec::new();
+        for p in [2usize, 4, 6, 8] {
+            let mut node = Node::from_profile(profile.clone()).unwrap();
+            let pp = PowerProcess::from_profile(&profile);
+            let mut gov = Userspace::new(2200);
+            t.push(run(&mut node, &mut gov, &pp, &app, 1, p, &cfg).unwrap().wall_time_s);
+        }
+        assert!(t[1] < t[0] && t[2] < t[1] && t[3] < t[2], "times {t:?}");
+        let big_gain = t[0] / t[1]; // 2 -> 4 big cores
+        let little_gain = t[1] / t[3]; // +4 LITTLE cores
+        assert!(
+            little_gain < big_gain,
+            "LITTLE cores gained {little_gain:.3}x vs big {big_gain:.3}x"
+        );
+    }
+
+    #[test]
+    fn smt_siblings_add_modest_throughput() {
+        // A zero-overhead embarrassingly-parallel probe isolates the SMT
+        // accounting: 32 siblings at smt_perf 0.30 must speed the run up
+        // by exactly the perf-sum ratio (17.6 + 5.28) / 17.6 = 1.3.
+        let probe = AppProfile {
+            name: "smt-probe".into(),
+            w_base: 100.0,
+            input_scale: 1.5,
+            serial_frac: 0.0,
+            sync_rel: 0.0,
+            sync_abs_s: 0.0,
+            mem_frac: 0.0,
+            stall_frac: 0.0,
+            barrier_util: 0.1,
+            frames: 10,
+            artifact: "smt-probe".into(),
+        };
+        let profile = crate::arch::manycore();
+        let cfg = noiseless_cfg();
+        let run_p = |p: usize| {
+            let mut node = Node::from_profile(profile.clone()).unwrap();
+            let pp = PowerProcess::from_profile(&profile);
+            let mut gov = Userspace::new(1600);
+            run(&mut node, &mut gov, &pp, &probe, 1, p, &cfg).unwrap().wall_time_s
+        };
+        let t32 = run_p(32); // all physical cores
+        let t64 = run_p(64); // + SMT siblings
+        let speedup = t32 / t64;
+        assert!(
+            (speedup - 1.3).abs() < 0.05,
+            "SMT speedup should be ~1.3x, got {speedup:.3}x"
+        );
     }
 
     #[test]

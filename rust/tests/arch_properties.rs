@@ -1,0 +1,201 @@
+//! Property tests for the architecture registry (ISSUE 2): every built-in
+//! profile's ground-truth power process must be physically sane, cluster
+//! accounting must be exact, and the energy optimizer must stay feasible
+//! on every profile's configuration grid.
+
+use ecopt::arch::{mobile_biglittle, registry, ArchProfile};
+use ecopt::config::{CampaignSpec, SvrSpec};
+use ecopt::energy::{config_grid_arch, Constraints, EnergyModel};
+use ecopt::node::{power::PowerProcess, Node};
+use ecopt::powermodel::PowerModel;
+use ecopt::svr::{SvrModel, TrainSample};
+use ecopt::util::prop::property;
+
+/// A node with `p` cores online at ladder frequency index `fi`, all
+/// online cores fully loaded.
+fn loaded_node(arch: &ArchProfile, fi: usize, p: usize) -> Node {
+    let mut node = Node::from_profile(arch.clone()).unwrap();
+    let ladder = arch.ladder();
+    node.set_online_cores(p).unwrap();
+    node.set_freq_all(ladder[fi]).unwrap();
+    for c in 0..p {
+        node.set_util(c, 1.0);
+    }
+    node
+}
+
+#[test]
+fn prop_profile_power_monotone_in_frequency() {
+    for arch in registry() {
+        let pp = PowerProcess::from_profile(&arch);
+        let ladder = arch.ladder();
+        property(&format!("{}: power monotone in f", arch.name), 40, |rng| {
+            let p = 1 + rng.below(arch.total_cores());
+            let i = rng.below(ladder.len() - 1);
+            let j = i + 1 + rng.below(ladder.len() - 1 - i);
+            let lo = pp.base_watts(&loaded_node(&arch, i, p));
+            let hi = pp.base_watts(&loaded_node(&arch, j, p));
+            assert!(
+                hi > lo,
+                "{}: P({} MHz, {p}) = {hi} <= P({} MHz, {p}) = {lo}",
+                arch.name,
+                ladder[j],
+                ladder[i]
+            );
+        });
+    }
+}
+
+#[test]
+fn prop_profile_power_monotone_in_active_cores() {
+    for arch in registry() {
+        let pp = PowerProcess::from_profile(&arch);
+        let ladder = arch.ladder();
+        property(&format!("{}: power monotone in p", arch.name), 40, |rng| {
+            let fi = rng.below(ladder.len());
+            let p = 1 + rng.below(arch.total_cores() - 1);
+            let fewer = pp.base_watts(&loaded_node(&arch, fi, p));
+            let more = pp.base_watts(&loaded_node(&arch, fi, p + 1));
+            assert!(
+                more > fewer,
+                "{}: P(p={}) = {more} <= P(p={p}) = {fewer}",
+                arch.name,
+                p + 1
+            );
+        });
+    }
+}
+
+#[test]
+fn prop_cluster_accounting_sums_to_node_power() {
+    // big.LITTLE (and every other profile): the per-cluster breakdown plus
+    // the static floor must reproduce base_watts EXACTLY (same fold
+    // order), offline clusters must report 0, and online clusters must
+    // draw at least their uncore overhead.
+    for arch in registry() {
+        let pp = PowerProcess::from_profile(&arch);
+        let ladder = arch.ladder();
+        property(&format!("{}: cluster accounting", arch.name), 60, |rng| {
+            let fi = rng.below(ladder.len());
+            let p = 1 + rng.below(arch.total_cores());
+            let mut node = loaded_node(&arch, fi, p);
+            // Randomize utilization so gating enters the accounting too.
+            for c in 0..p {
+                node.set_util(c, rng.f64());
+            }
+            let b = pp.breakdown(&node);
+            let mut sum = b.static_w;
+            for w in &b.clusters {
+                sum += w;
+            }
+            assert_eq!(sum, pp.base_watts(&node), "{}", arch.name);
+            for (k, w) in b.clusters.iter().enumerate() {
+                if node.cluster_active(k) {
+                    assert!(
+                        *w >= arch.clusters[k].uncore_w,
+                        "{} cluster {k}: {w} below its uncore floor",
+                        arch.name
+                    );
+                } else {
+                    assert_eq!(*w, 0.0, "{} offline cluster {k} drew power", arch.name);
+                }
+            }
+        });
+    }
+}
+
+#[test]
+fn biglittle_low_frequency_little_sweep_undercuts_big_sweep() {
+    // Architecture-shift sanity: on the asymmetric part, running the
+    // LITTLE cluster (cores 5..8 online implies both clusters, so compare
+    // cluster shares directly) is strictly cheaper than the big cluster
+    // at every shared frequency and equal load.
+    let arch = mobile_biglittle();
+    let pp = PowerProcess::from_profile(&arch);
+    for fi in 0..arch.ladder().len() {
+        let mut node = loaded_node(&arch, fi, 8);
+        for c in 0..8 {
+            node.set_util(c, 1.0);
+        }
+        let b = pp.breakdown(&node);
+        assert!(
+            b.clusters[1] < b.clusters[0],
+            "f index {fi}: LITTLE {} W !< big {} W",
+            b.clusters[1],
+            b.clusters[0]
+        );
+    }
+}
+
+/// Train a small synthetic scalable-app SVR on a profile's grid.
+fn profile_svr(arch: &ArchProfile) -> (SvrModel, Vec<(u32, usize)>) {
+    let campaign = CampaignSpec {
+        freq_points: 3,
+        inputs: vec![1, 2],
+        ..Default::default()
+    }
+    .adapted_to(arch);
+    let freqs = campaign.frequencies();
+    let f_top = *freqs.last().unwrap() as f64;
+    let mut samples = Vec::new();
+    for &f in &freqs {
+        for p in 1..=arch.total_cores() {
+            for n in 1..=2u32 {
+                let t = 120.0 * n as f64 * (0.06 + 0.94 / p as f64) * f_top / f as f64;
+                samples.push(TrainSample {
+                    f_mhz: f,
+                    cores: p,
+                    input: n,
+                    time_s: t,
+                });
+            }
+        }
+    }
+    let svr = SvrModel::train(
+        &samples,
+        &SvrSpec {
+            c: 2000.0,
+            epsilon: 0.5,
+            max_iter: 200_000,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    (svr, config_grid_arch(&campaign, arch))
+}
+
+#[test]
+fn prop_energy_surface_feasible_under_core_constraint() {
+    // On every profile: whatever core-count cap we impose, the optimizer
+    // returns a grid point inside the cap and the profile's CPU count —
+    // and it is the cheapest feasible point of the surface.
+    for arch in registry() {
+        let (svr, grid) = profile_svr(&arch);
+        let em = EnergyModel::for_arch(PowerModel::paper_eq9(), svr, arch.clone());
+        let total = arch.total_cores();
+        property(&format!("{}: core-capped optimize", arch.name), 15, |rng| {
+            let cap = 1 + rng.below(total);
+            let cons = Constraints {
+                max_cores: Some(cap),
+                ..Default::default()
+            };
+            let input = 1 + rng.below(2) as u32;
+            let opt = em.optimize(&grid, input, &cons).unwrap();
+            assert!(opt.cores <= cap, "{}: {} > cap {cap}", arch.name, opt.cores);
+            assert!(opt.cores >= 1 && opt.cores <= total);
+            assert!(
+                grid.iter().any(|(f, p)| *f == opt.f_mhz && *p == opt.cores),
+                "{}: optimum off the grid",
+                arch.name
+            );
+            // Brute-force check over the feasible surface.
+            let best = em
+                .surface(&grid, input)
+                .iter()
+                .filter(|pt| pt.cores <= cap)
+                .map(|pt| pt.energy_j)
+                .fold(f64::INFINITY, f64::min);
+            assert_eq!(opt.pred_energy_j, best, "{}", arch.name);
+        });
+    }
+}

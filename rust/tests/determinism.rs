@@ -8,7 +8,7 @@
 //! and scheduling can never leak into the numbers.
 
 use ecopt::config::{CampaignSpec, ExperimentConfig, SvrSpec};
-use ecopt::coordinator::Coordinator;
+use ecopt::coordinator::{run_fleet, Coordinator};
 use ecopt::util::json::ToJson;
 use ecopt::workloads::runner::RunConfig;
 
@@ -64,4 +64,59 @@ fn oversubscribed_threads_byte_identical_to_sequential() {
         seq, par,
         "16-thread pipeline diverged from the sequential run"
     );
+}
+
+/// Serialized fleet sweep over the full 4-profile registry at a given
+/// thread count (noise ON — the per-member seed domains must line up, not
+/// be absent). Nested fan-out: the outer pool runs profiles, each member
+/// pipeline fans its own stages out on inner pools with the same width.
+fn fleet_json(threads: usize) -> String {
+    let cfg = ExperimentConfig {
+        campaign: CampaignSpec {
+            freq_points: 3, // 3 ladder points on EVERY profile's ladder
+            core_max: 6,
+            inputs: vec![1],
+            ..Default::default()
+        },
+        svr: SvrSpec {
+            folds: 3,
+            c: 1000.0,
+            epsilon: 0.5,
+            max_iter: 100_000,
+            ..Default::default()
+        },
+        workloads: vec!["swaptions".into()],
+        ..Default::default()
+    };
+    let rc = RunConfig {
+        dt: 0.25,
+        work_noise: 0.01,
+        seed: 2026_0728,
+        max_sim_s: 1e6,
+        threads,
+    };
+    run_fleet(&cfg, &rc, &ecopt::arch::registry())
+        .unwrap()
+        .to_json()
+        .dump()
+}
+
+#[test]
+fn fleet_byte_identical_across_thread_counts() {
+    // ISSUE 2 acceptance: run_fleet over the >=4-profile registry must be
+    // byte-identical for 1, 4, and 16 threads.
+    let seq = fleet_json(1);
+    let par4 = fleet_json(4);
+    assert_eq!(seq, par4, "4-thread fleet diverged from sequential");
+    let par16 = fleet_json(16);
+    assert_eq!(seq, par16, "16-thread fleet diverged from sequential");
+    // Sanity: all four registry profiles are present, in order.
+    for name in [
+        "xeon-dual-e5-2698v3",
+        "manycore-knl64",
+        "desktop-turbo-i9",
+        "mobile-biglittle",
+    ] {
+        assert!(seq.contains(name), "fleet output missing {name}");
+    }
 }

@@ -1,0 +1,169 @@
+//! Governor step-logic unit tests against small fixed traces (ISSUE 2).
+//!
+//! Each trace feeds a hand-computed utilization sequence to one core and
+//! pins the exact frequency the governor must choose at every step —
+//! locking the classic-kernel `ondemand` up/down thresholds, the
+//! `conservative` one-rung stepping, and `userspace` pinning.
+//!
+//! Ladder: 1200..=2300 MHz in 100 MHz steps (the paper's Xeon).
+//! Ondemand defaults: up_threshold 95 %, down_differential 10 % →
+//! step-down target `f_cur * load / 85`, snapped to the ladder, never
+//! above `f_cur`. Conservative defaults: up 80 %, down 20 %, one rung.
+
+use ecopt::config::NodeSpec;
+use ecopt::governors::{
+    Conservative, ConservativeTunables, Governor, Ondemand, OndemandTunables, Userspace,
+};
+use ecopt::node::Node;
+
+fn node() -> Node {
+    Node::new(NodeSpec::default()).unwrap()
+}
+
+/// Drive `gov` through a (util, expected MHz) trace on core 0.
+fn check_trace(gov: &mut dyn Governor, node: &mut Node, trace: &[(f64, u32)]) {
+    for (step, (util, want)) in trace.iter().enumerate() {
+        node.set_util(0, *util);
+        gov.sample(node).unwrap();
+        assert_eq!(
+            node.freq(0),
+            *want,
+            "step {step}: util {util} expected {want} MHz, got {} MHz",
+            node.freq(0)
+        );
+    }
+}
+
+#[test]
+fn ondemand_fixed_trace() {
+    let mut n = node(); // boots at 2300
+    let mut g = Ondemand::new(n.ladder());
+    // Hand-computed against the classic algorithm:
+    //  - load > 95  -> race to 2300;
+    //  - else target = f_cur * load / 85, rounded, snapped to the nearest
+    //    ladder rung, clamped to [1200, f_cur] (never creeps up).
+    let trace = [
+        (1.00, 2300), // saturated: stay at max
+        (0.50, 1400), // 2300*50/85 = 1352.9 -> nearest rung 1400
+        (0.50, 1200), // 1400*50/85 = 823.5 -> clamps to ladder floor
+        (0.96, 2300), // load 96 > 95: race straight to max
+        (0.90, 2300), // target 2435 above max -> hold at 2300
+        (0.70, 1900), // 2300*70/85 = 1894.1 -> nearest rung 1900
+        (0.00, 1200), // idle: straight to the floor
+    ];
+    check_trace(&mut g, &mut n, &trace);
+}
+
+#[test]
+fn ondemand_boundary_load_does_not_race() {
+    // Load exactly equal to up_threshold must NOT trigger the race-to-max
+    // branch (the kernel tests load > up_threshold strictly). Use a
+    // float-exact threshold (75.0, with util 0.75 = 3/4 exactly
+    // representable) so the boundary comparison is not at the mercy of
+    // decimal rounding.
+    let mut n = node();
+    n.set_freq_all(1200).unwrap();
+    let tun = OndemandTunables {
+        up_threshold: 75.0,
+        down_differential: 10.0,
+        sampling_period_s: 0.1,
+    };
+    let mut g = Ondemand::with_tunables(n.ladder(), tun);
+    n.set_util(0, 0.75);
+    g.sample(&mut n).unwrap();
+    // target = 1200*75/65 = 1384.6 -> rung 1400, clamped to f_cur 1200.
+    assert_eq!(n.freq(0), 1200);
+    n.set_util(0, 0.76);
+    g.sample(&mut n).unwrap();
+    assert_eq!(n.freq(0), 2300, "just above threshold must race");
+}
+
+#[test]
+fn ondemand_step_down_is_proportional_not_one_rung() {
+    // From the top, a 40 % load drops several rungs in ONE sample — the
+    // classic proportional step-down, unlike conservative.
+    let mut n = node();
+    let mut g = Ondemand::new(n.ladder());
+    n.set_util(0, 0.40);
+    g.sample(&mut n).unwrap();
+    // 2300*40/85 = 1082.4 -> below the floor -> 1200 directly.
+    assert_eq!(n.freq(0), 1200);
+}
+
+#[test]
+fn conservative_fixed_trace() {
+    let mut n = node();
+    n.set_freq_all(1800).unwrap();
+    // Float-exact thresholds (75/25 with util 0.75 and 0.25 exactly
+    // representable) so the boundary steps below pin strict inequality.
+    let tun = ConservativeTunables {
+        up_threshold: 75.0,
+        down_threshold: 25.0,
+        sampling_period_s: 0.1,
+    };
+    let mut g = Conservative::with_tunables(n.ladder(), tun);
+    let trace = [
+        (0.85, 1900), // above up threshold: one rung up
+        (0.85, 2000), // gradual: exactly one rung per sample
+        (0.50, 2000), // deadband: hold
+        (0.75, 2000), // boundary: load == up threshold holds
+        (0.25, 2000), // boundary: load == down threshold holds
+        (0.24, 1900), // below down threshold: one rung down
+        (0.00, 1800), // keeps stepping down one rung at a time
+        (1.00, 1900), // recovery is also one rung
+    ];
+    check_trace(&mut g, &mut n, &trace);
+}
+
+#[test]
+fn conservative_saturates_one_rung_from_the_ends() {
+    let mut n = node();
+    n.set_freq_all(2300).unwrap();
+    let mut g = Conservative::new(n.ladder());
+    n.set_util(0, 1.0);
+    g.sample(&mut n).unwrap();
+    assert_eq!(n.freq(0), 2300, "already at the top rung");
+    n.set_freq_all(1200).unwrap();
+    n.set_util(0, 0.0);
+    g.sample(&mut n).unwrap();
+    assert_eq!(n.freq(0), 1200, "already at the bottom rung");
+}
+
+#[test]
+fn userspace_pins_through_arbitrary_load_trace() {
+    let mut n = node();
+    let mut g = Userspace::new(1700);
+    // Whatever the load does, userspace holds the pinned frequency on
+    // every core.
+    for util in [0.0, 1.0, 0.5, 0.96, 0.01, 0.8] {
+        for c in 0..n.total_cores() {
+            n.set_util(c, util);
+        }
+        g.sample(&mut n).unwrap();
+        assert!(n.freqs().iter().all(|f| *f == 1700), "util {util}");
+    }
+    // Re-pinning moves every core; off-ladder pins surface as errors.
+    g.set_speed(2300);
+    g.sample(&mut n).unwrap();
+    assert!(n.freqs().iter().all(|f| *f == 2300));
+    g.set_speed(1234);
+    assert!(g.sample(&mut n).is_err());
+    assert!(
+        n.freqs().iter().all(|f| *f == 2300),
+        "failed pin must not move frequencies"
+    );
+}
+
+#[test]
+fn ondemand_ignores_offline_cores_in_trace() {
+    let mut n = node();
+    n.set_freq_all(1800).unwrap();
+    n.set_online_cores(2).unwrap();
+    let mut g = Ondemand::new(n.ladder());
+    n.set_util(0, 1.0);
+    n.set_util(1, 0.0);
+    g.sample(&mut n).unwrap();
+    assert_eq!(n.freq(0), 2300, "loaded online core races");
+    assert_eq!(n.freq(1), 1200, "idle online core sinks");
+    assert_eq!(n.freq(31), 1800, "offline core policy frozen");
+}
