@@ -624,7 +624,7 @@ mod tests {
     #[test]
     fn json_roundtrip() {
         for p in registry() {
-            let back = ArchProfile::from_json(&Json::parse(&p.to_json().dump()).unwrap()).unwrap();
+            let back = ArchProfile::from_json(&Json::parse(&p.to_json().dump().unwrap()).unwrap()).unwrap();
             assert_eq!(back.name, p.name);
             assert_eq!(back.total_cores(), p.total_cores());
             assert_eq!(back.clusters.len(), p.clusters.len());

@@ -79,7 +79,7 @@ impl Characterization {
 
     /// Persist to JSON.
     pub fn save(&self, path: &std::path::Path) -> Result<()> {
-        std::fs::write(path, self.to_json().dump())?;
+        std::fs::write(path, self.to_json().dump()?)?;
         Ok(())
     }
 

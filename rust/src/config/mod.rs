@@ -478,7 +478,7 @@ impl ExperimentConfig {
     }
 
     /// Serialize (for `ecopt config --dump`).
-    pub fn dump(&self) -> String {
+    pub fn dump(&self) -> Result<String> {
         self.to_json().dump()
     }
 }
@@ -601,7 +601,7 @@ mod tests {
     #[test]
     fn json_roundtrip() {
         let cfg = ExperimentConfig::default();
-        let s = cfg.dump();
+        let s = cfg.dump().unwrap();
         let back = ExperimentConfig::from_json_str(&s).unwrap();
         assert_eq!(back.node.total_cores(), 32);
         assert_eq!(back.campaign.inputs, vec![1, 2, 3, 4, 5]);

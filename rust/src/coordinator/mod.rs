@@ -35,7 +35,14 @@
 //! fleet output is byte-identical for any thread count too.
 //!
 //! All stages are cacheable to JSON so examples and benches can re-use
-//! expensive phases.
+//! expensive phases. Trained model bundles additionally persist through
+//! `persist::ModelCache` (see [`Coordinator::with_model_cache`]): a
+//! warm-cache rerun of the same configuration trains zero models and is
+//! byte-identical to the cold run. The [`replay`] submodule runs the
+//! phase-shifting governor comparison (`ecopt replay`) on top of the
+//! same machinery.
+
+pub mod replay;
 
 use std::path::Path;
 
@@ -44,6 +51,7 @@ use crate::characterize::{characterize_arch, Characterization};
 use crate::compare::{compare_one_arch, summarize, ComparisonRow, SavingsSummary};
 use crate::config::{CampaignSpec, ExperimentConfig};
 use crate::energy::{config_grid_arch, EnergyModel};
+use crate::persist::{model_input_tag, CacheStats, CachedModel, ModelCache, ModelKey};
 use crate::powermodel::{stress_campaign_arch, FitReport, PowerModel, PowerObs, StressConfig};
 use crate::runtime::PjrtRuntime;
 use crate::svr::{cross_validate, train_test_split, CvReport, SvrModel};
@@ -89,7 +97,7 @@ pub struct ExperimentResults {
 
 impl ExperimentResults {
     pub fn save(&self, path: &Path) -> Result<()> {
-        std::fs::write(path, self.to_json().dump())?;
+        std::fs::write(path, self.to_json().dump()?)?;
         Ok(())
     }
 
@@ -120,7 +128,7 @@ pub struct FleetResults {
 
 impl FleetResults {
     pub fn save(&self, path: &Path) -> Result<()> {
-        std::fs::write(path, self.to_json().dump())?;
+        std::fs::write(path, self.to_json().dump()?)?;
         Ok(())
     }
 
@@ -145,6 +153,10 @@ pub struct Coordinator {
     runtime: Option<PjrtRuntime>,
     /// Explicit profile override (fleet members); beats `cfg.arch`.
     arch_override: Option<ArchProfile>,
+    /// Optional persistent model cache: hits skip SVR training + CV.
+    model_cache: Option<ModelCache>,
+    /// Training-vs-cache accounting of the last `run_all`.
+    pub cache_stats: CacheStats,
 }
 
 impl Coordinator {
@@ -158,6 +170,8 @@ impl Coordinator {
             run_cfg,
             runtime: None,
             arch_override: None,
+            model_cache: None,
+            cache_stats: CacheStats::default(),
         }
     }
 
@@ -179,6 +193,34 @@ impl Coordinator {
     pub fn with_run_config(mut self, rc: RunConfig) -> Self {
         self.run_cfg = rc;
         self
+    }
+
+    /// Attach a persistent model cache: stage-3 training (SVR + CV +
+    /// held-out metrics) is skipped for every app whose bundle is
+    /// already cached under this configuration's key.
+    pub fn with_model_cache(mut self, cache: ModelCache) -> Self {
+        self.model_cache = Some(cache);
+        self
+    }
+
+    /// The cache input-tag of this pipeline: campaign inputs plus a
+    /// digest of every other model determinant (adapted campaign, SVR
+    /// spec, simulator seed/resolution), through the shared
+    /// [`model_input_tag`] scheme — see `DESIGN.md` §8.
+    fn cache_input_tag(&self) -> Result<String> {
+        let campaign = self.effective_campaign()?;
+        let inputs: Vec<String> = campaign.inputs.iter().map(|i| i.to_string()).collect();
+        Ok(model_input_tag(
+            &inputs.join("-"),
+            &[
+                &campaign.to_json().dump()?,
+                &self.cfg.svr.to_json().dump()?,
+                &format!(
+                    "dt{}/noise{}/seed{}",
+                    self.run_cfg.dt, self.run_cfg.work_noise, self.run_cfg.seed
+                ),
+            ],
+        ))
     }
 
     /// Resolve the architecture this pipeline simulates: the explicit
@@ -324,14 +366,45 @@ impl Coordinator {
 
         // Stage 3: split + SVR training + cross-validation, one pooled job
         // per app (SMO itself is single-threaded and deterministic).
+        // With a model cache attached, fully-populated entries (bundle +
+        // CV + held-out metrics) skip the job entirely — a warm-cache
+        // rerun of the same configuration trains zero models.
         struct Modeled {
             svr: SvrModel,
             cv: CvReport,
             test_mae: f64,
             test_pae: f64,
         }
+        let cache_keys: Vec<Option<ModelKey>> = if self.model_cache.is_some() {
+            let tag = self.cache_input_tag()?;
+            apps.iter()
+                .map(|a| Some(ModelKey::new(&a.name, &tag, &arch.name)))
+                .collect()
+        } else {
+            vec![None; apps.len()]
+        };
+        let cached: Vec<Option<CachedModel>> = cache_keys
+            .iter()
+            .map(|key| match (&self.model_cache, key) {
+                (Some(cache), Some(k)) => cache.get(k),
+                _ => Ok(None),
+            })
+            .collect::<Result<_>>()?;
         let svr_spec = &self.cfg.svr;
+        let cached_ref = &cached;
         let modeled: Vec<Modeled> = pool.try_run(apps.len(), |i| {
+            if let Some(hit) = &cached_ref[i] {
+                // Entries written by the replay harness carry no CV
+                // metrics; only complete pipeline entries count as hits.
+                if let (Some(cv), Some(m), Some(p)) = (&hit.cv, hit.test_mae, hit.test_pae_pct) {
+                    return Ok(Modeled {
+                        svr: hit.svr.clone(),
+                        cv: cv.clone(),
+                        test_mae: m,
+                        test_pae: p,
+                    });
+                }
+            }
             let samples = chars[i].train_samples();
             let (train, test) = train_test_split(&samples, svr_spec);
             let svr = SvrModel::train(&train, svr_spec)?;
@@ -346,6 +419,35 @@ impl Coordinator {
                 test_pae: pae(&truth, &pred),
             })
         })?;
+
+        // Persist fresh bundles and settle the accounting.
+        self.cache_stats = CacheStats::default();
+        if let Some(cache) = &self.model_cache {
+            for (i, m) in modeled.iter().enumerate() {
+                let complete_hit = cached[i].as_ref().is_some_and(|h| {
+                    h.cv.is_some() && h.test_mae.is_some() && h.test_pae_pct.is_some()
+                });
+                if complete_hit {
+                    self.cache_stats.cache_hits += 1;
+                    continue;
+                }
+                self.cache_stats.trained += 1;
+                if let Some(key) = &cache_keys[i] {
+                    cache.put(
+                        key,
+                        &CachedModel {
+                            power: power_model,
+                            svr: m.svr.clone(),
+                            cv: Some(m.cv.clone()),
+                            test_mae: Some(m.test_mae),
+                            test_pae_pct: Some(m.test_pae),
+                        },
+                    )?;
+                }
+            }
+        } else {
+            self.cache_stats.trained = modeled.len();
+        }
 
         // Stages 4+5: optimize + governor comparison per (app, input) —
         // `compare_app` does the PJRT cross-check and each row's ondemand
@@ -405,6 +507,21 @@ pub fn run_fleet(
     run_cfg: &RunConfig,
     profiles: &[ArchProfile],
 ) -> Result<FleetResults> {
+    run_fleet_cached(cfg, run_cfg, profiles, None)
+}
+
+/// [`run_fleet`] with an optional persistent model cache: each member
+/// pipeline skips SVR training for bundles already cached under its own
+/// `(app, input-tag, arch)` key (members write disjoint keys, and cache
+/// writes are atomic, so the concurrent fan-out is safe). The cache can
+/// only change *when* training happens, never the numbers — output stays
+/// byte-identical for any thread count and any cache state.
+pub fn run_fleet_cached(
+    cfg: &ExperimentConfig,
+    run_cfg: &RunConfig,
+    profiles: &[ArchProfile],
+    cache: Option<&ModelCache>,
+) -> Result<FleetResults> {
     if profiles.is_empty() {
         return Err(Error::Config("run_fleet needs at least one profile".into()));
     }
@@ -421,6 +538,9 @@ pub fn run_fleet(
             ..run_cfg.clone()
         };
         let mut coord = Coordinator::for_arch(member_cfg, arch.clone()).with_run_config(member_rc);
+        if let Some(c) = cache {
+            coord = coord.with_model_cache(c.clone());
+        }
         let results = coord.run_all()?;
         Ok(FleetMember {
             arch: arch.name,

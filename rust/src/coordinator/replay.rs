@@ -1,0 +1,546 @@
+//! Phase-replay harness: every governor + the model-in-the-loop
+//! [`EcoptGovernor`] over the same phase-shifting traces, against the
+//! static oracle.
+//!
+//! For each workload of [`phase_suite`] the harness
+//!
+//! 1. **trains or loads** the workload's `(PowerModel, SvrModel)` bundle
+//!    through the persistent [`ModelCache`] — a warm-cache replay trains
+//!    **zero** models and is byte-identical to the cold run (trained
+//!    bundles are re-read from the cache immediately after `put`, so
+//!    both paths decide from the very same deserialized bits);
+//! 2. replays the trace under the **baseline governors** (`ondemand`,
+//!    `conservative`, `performance`, `powersave`) at the full core
+//!    complement — Linux governors do not choose core counts;
+//! 3. replays it under [`EcoptGovernor`] (model consults + hysteresis +
+//!    hotplug);
+//! 4. sweeps the **static oracle**: every grid configuration pinned for
+//!    the whole trace, argmin by measured energy (deterministic
+//!    `(energy, f, cores)` order) — the best any *static* choice, i.e.
+//!    the paper's approach, could have done on this trace.
+//!
+//! # Determinism
+//!
+//! Every pooled run seeds its RNG as
+//! `split_seed(seed ^ REPLAY_SEED_DOMAIN, stream)` where the stream id
+//! encodes `(purpose, workload, slot)`; results merge in job-index
+//! order. Serialized [`ReplayResults`] are **byte-identical for any
+//! thread count** (locked by `tests/replay.rs`) and across warm/cold
+//! cache states. [`ReplayStats`] (trainings vs cache hits) is returned
+//! separately and deliberately kept OUT of the results so cache state
+//! cannot leak into the report bytes.
+
+use std::path::Path;
+
+use crate::arch::ArchProfile;
+use crate::config::{CampaignSpec, ExperimentConfig, Mhz, SvrSpec};
+use crate::energy::{config_grid_arch, EnergyModel};
+use crate::governors::{by_name, EcoptGovernor, Pinned};
+use crate::node::power::PowerProcess;
+use crate::node::Node;
+use crate::persist::{model_input_tag, CacheStats, CachedModel, ModelCache, ModelKey};
+use crate::powermodel::{stress_campaign_arch, PowerModel, StressConfig};
+use crate::svr::{SvrModel, TrainSample};
+use crate::util::json::{FromJson, ToJson};
+use crate::util::pool::WorkerPool;
+use crate::util::rng::Rng;
+use crate::workloads::phases::{
+    phase_suite, replay_run, PhaseClass, PhasedWorkload, ReplayRunConfig, ReplayRunResult,
+};
+use crate::workloads::runner::RunConfig;
+use crate::{Error, Result};
+
+/// Seed-domain separator for replay streams — disjoint from the
+/// characterization (…0001), comparison (…0002) and fleet (…0003)
+/// domains.
+pub const REPLAY_SEED_DOMAIN: u64 = 0xC4A2_AC7E_0000_0004;
+
+/// The Linux governors replayed as baselines, in report order.
+pub const BASELINE_GOVERNORS: [&str; 4] =
+    ["ondemand", "conservative", "performance", "powersave"];
+
+/// Stream purposes within the replay seed domain.
+const STREAM_CHARACTERIZE: u64 = 0;
+const STREAM_BASELINE: u64 = 1;
+const STREAM_ECOPT: u64 = 2;
+const STREAM_ORACLE: u64 = 3;
+
+fn replay_stream(purpose: u64, workload: usize, slot: u64) -> u64 {
+    (purpose << 48) | ((workload as u64) << 32) | slot
+}
+
+/// Options of one replay invocation.
+#[derive(Debug, Clone, Default)]
+pub struct ReplayOptions {
+    /// Phase-trace input size (work scale), 1-based; 0 = default (2).
+    pub input: u32,
+    /// Persistent model cache; `None` trains in-memory every run.
+    pub cache: Option<ModelCache>,
+    /// Shrink every workload to this many schedule cycles (quick/CI
+    /// mode); `None` keeps the suite's own cycle counts.
+    pub cycles_override: Option<u32>,
+}
+
+impl ReplayOptions {
+    fn input(&self) -> u32 {
+        if self.input == 0 {
+            2
+        } else {
+            self.input
+        }
+    }
+}
+
+/// Training-vs-cache accounting of one replay invocation (the shared
+/// [`CacheStats`]). Returned NEXT TO the results, never serialized into
+/// them.
+pub type ReplayStats = CacheStats;
+
+/// One governor's replay of one workload, summarized.
+#[derive(Debug, Clone)]
+pub struct GovernorReplay {
+    pub governor: String,
+    pub energy_j: f64,
+    pub time_s: f64,
+    pub mean_freq_ghz: f64,
+    pub mean_power_w: f64,
+    /// Wall seconds per phase class (compute, memory, idle).
+    pub time_by_class: [f64; 3],
+    /// Noise-free energy per phase class, joules.
+    pub energy_by_class: [f64; 3],
+}
+
+impl From<&ReplayRunResult> for GovernorReplay {
+    fn from(r: &ReplayRunResult) -> Self {
+        GovernorReplay {
+            governor: r.governor.clone(),
+            energy_j: r.energy_j,
+            time_s: r.wall_time_s,
+            mean_freq_ghz: r.mean_freq_ghz,
+            mean_power_w: r.mean_power_w,
+            time_by_class: r.time_by_class,
+            energy_by_class: r.energy_by_class,
+        }
+    }
+}
+
+/// The best static configuration over the whole trace (swept, measured).
+#[derive(Debug, Clone, Copy)]
+pub struct OracleConfig {
+    pub f_mhz: Mhz,
+    pub cores: usize,
+    pub energy_j: f64,
+    pub time_s: f64,
+}
+
+/// All governors' replays of one workload.
+#[derive(Debug, Clone)]
+pub struct WorkloadReplay {
+    pub workload: String,
+    pub input: u32,
+    /// Baseline governors in [`BASELINE_GOVERNORS`] order.
+    pub baselines: Vec<GovernorReplay>,
+    pub ecopt: GovernorReplay,
+    /// EcoptGovernor diagnostics (model consults, config switches,
+    /// ondemand-fallback samples — nonzero fallback means a stale model).
+    pub ecopt_decisions: u64,
+    pub ecopt_switches: u64,
+    pub ecopt_fallback_samples: u64,
+    pub oracle: OracleConfig,
+}
+
+impl WorkloadReplay {
+    pub fn baseline(&self, name: &str) -> Result<&GovernorReplay> {
+        self.baselines
+            .iter()
+            .find(|b| b.governor == name)
+            .ok_or_else(|| Error::UnknownGovernor(name.to_string()))
+    }
+
+    /// The paper's comparison baseline.
+    pub fn ondemand(&self) -> Result<&GovernorReplay> {
+        self.baseline("ondemand")
+    }
+
+    /// EcoptGovernor savings vs a baseline's energy, percent.
+    pub fn ecopt_save_vs(&self, baseline_energy_j: f64) -> f64 {
+        (baseline_energy_j / self.ecopt.energy_j - 1.0) * 100.0
+    }
+}
+
+/// Results of one [`run_replay`] invocation, in suite order.
+#[derive(Debug, Clone)]
+pub struct ReplayResults {
+    pub arch: String,
+    pub members: Vec<WorkloadReplay>,
+}
+
+impl ReplayResults {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().dump()?)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_json(&crate::util::json::Json::parse(&std::fs::read_to_string(path)?)?)
+    }
+
+    pub fn member(&self, workload: &str) -> Result<&WorkloadReplay> {
+        self.members
+            .iter()
+            .find(|m| m.workload == workload)
+            .ok_or_else(|| Error::UnknownWorkload(workload.to_string()))
+    }
+}
+
+/// The cache input-tag for a replay model: the input size plus a digest
+/// of every other determinant of the trained bundle (the ADAPTED
+/// campaign — i.e. the decision grid actually used, SVR spec, seeds,
+/// the workload's FULL definition, simulator resolution) — built
+/// through the shared [`model_input_tag`] scheme.
+fn replay_input_tag(
+    campaign: &CampaignSpec,
+    svr: &SvrSpec,
+    rc: &RunConfig,
+    w: &PhasedWorkload,
+    input: u32,
+) -> Result<String> {
+    Ok(model_input_tag(
+        &input.to_string(),
+        &[
+            &campaign.to_json().dump()?,
+            &svr.to_json().dump()?,
+            &w.digest_string(),
+            &format!("dt{}/noise{}/seed{}", rc.dt, rc.work_noise, rc.seed),
+        ],
+    ))
+}
+
+/// Train (or load) the `(PowerModel, SvrModel)` bundle for one phased
+/// workload: stress-fit the power model, characterize the trace over the
+/// campaign grid with [`Pinned`] runs on the pool, train the SVR.
+///
+/// The SVR is trained on the **compute-phase** wall time (the per-class
+/// accounting of [`replay_run`]), not the whole-trace time: the governor
+/// only consults predicted time for its Busy regime, and a blended-trace
+/// model would let the frequency-INSENSITIVE memory/idle components drag
+/// the busy argmin toward low frequencies that lose energy on every
+/// compute phase (time stops improving with `f` in the blend long before
+/// it does in the kernel itself). Stalled/Idle decisions don't use
+/// predicted time — they pin the grid floor / hotplug down structurally.
+fn model_for_workload(
+    arch: &ArchProfile,
+    cfg: &ExperimentConfig,
+    rc: &RunConfig,
+    pool: &WorkerPool,
+    w: &PhasedWorkload,
+    wi: usize,
+    input: u32,
+    power_memo: &mut Option<PowerModel>,
+) -> Result<(PowerModel, SvrModel)> {
+    let campaign = cfg.campaign.adapted_to(arch);
+    let power = if let Some(p) = *power_memo {
+        p
+    } else {
+        let stress = StressConfig {
+            freq_min_mhz: campaign.freq_min_mhz,
+            freq_max_mhz: campaign.freq_max_mhz,
+            freq_step_mhz: campaign.freq_step_mhz,
+            seed: campaign.seed ^ 0xF00D,
+            threads: rc.threads,
+            ..Default::default()
+        };
+        let obs = stress_campaign_arch(arch, &stress)?;
+        let (model, _) = PowerModel::fit(&obs)?;
+        *power_memo = Some(model);
+        model
+    };
+
+    let grid = config_grid_arch(&campaign, arch);
+    let samples: Vec<TrainSample> = pool.try_run(grid.len(), |i| {
+        let (f, p) = grid[i];
+        let mut node = Node::from_profile(arch.clone())?;
+        let power_proc = PowerProcess::from_profile(arch);
+        let mut gov = Pinned::new(f, p);
+        let run_cfg = ReplayRunConfig {
+            dt: rc.dt,
+            work_noise: rc.work_noise,
+            seed: Rng::split_seed(
+                rc.seed ^ REPLAY_SEED_DOMAIN,
+                replay_stream(STREAM_CHARACTERIZE, wi, i as u64),
+            ),
+            max_sim_s: rc.max_sim_s,
+        };
+        let r = replay_run(&mut node, &mut gov, &power_proc, w, input, &run_cfg)?;
+        Ok(TrainSample {
+            f_mhz: f,
+            cores: p,
+            input,
+            time_s: r.time_by_class[PhaseClass::Compute.index()],
+        })
+    })?;
+    let svr = SvrModel::train(&samples, &cfg.svr)?;
+    Ok((power, svr))
+}
+
+/// Run the full phase-replay harness.
+///
+/// Returns the (cache-state-independent) results and the trained/hit
+/// accounting of this invocation.
+pub fn run_replay(
+    cfg: &ExperimentConfig,
+    rc: &RunConfig,
+    opts: &ReplayOptions,
+) -> Result<(ReplayResults, ReplayStats)> {
+    let arch = cfg.resolved_arch()?;
+    let campaign = cfg.campaign.adapted_to(&arch);
+    let grid = config_grid_arch(&campaign, &arch);
+    let input = opts.input();
+    let mut workloads = phase_suite();
+    if let Some(cycles) = opts.cycles_override {
+        for w in &mut workloads {
+            w.cycles = cycles.max(1);
+        }
+    }
+    let pool = WorkerPool::new(rc.threads);
+    let mut stats = ReplayStats::default();
+
+    // ---- stage 1: model bundles (cache-first) ---------------------------
+    let mut models: Vec<EnergyModel> = Vec::with_capacity(workloads.len());
+    let mut power_memo: Option<PowerModel> = None;
+    for (wi, w) in workloads.iter().enumerate() {
+        let key = ModelKey::new(
+            &w.name,
+            &replay_input_tag(&campaign, &cfg.svr, rc, w, input)?,
+            &arch.name,
+        );
+        let cached = match &opts.cache {
+            Some(cache) => cache.get(&key)?,
+            None => None,
+        };
+        let bundle = match cached {
+            Some(hit) => {
+                stats.cache_hits += 1;
+                crate::debug_log!("replay: cache hit for {}", key.label());
+                hit
+            }
+            None => {
+                crate::info!(
+                    "replay: training model for {} ({} grid points, {} workers)",
+                    w.name,
+                    grid.len(),
+                    pool.threads()
+                );
+                let (power, svr) =
+                    model_for_workload(&arch, cfg, rc, &pool, w, wi, input, &mut power_memo)?;
+                stats.trained += 1;
+                let fresh = CachedModel {
+                    power,
+                    svr,
+                    cv: None,
+                    test_mae: None,
+                    test_pae_pct: None,
+                };
+                match &opts.cache {
+                    Some(cache) => {
+                        // Store, then decide from the RE-READ bits: cold
+                        // and warm replays consult the very same
+                        // deserialized model, making warm runs
+                        // byte-identical by construction.
+                        cache.put(&key, &fresh)?;
+                        cache.get(&key)?.ok_or_else(|| {
+                            Error::Data(format!("cache entry vanished: {}", key.label()))
+                        })?
+                    }
+                    None => fresh,
+                }
+            }
+        };
+        models.push(EnergyModel::for_arch(bundle.power, bundle.svr, arch.clone()));
+    }
+
+    // ---- stages 2-4: the replay matrix ----------------------------------
+    let mut members = Vec::with_capacity(workloads.len());
+    for (wi, w) in workloads.iter().enumerate() {
+        let mk_cfg = |purpose: u64, slot: u64| ReplayRunConfig {
+            dt: rc.dt,
+            work_noise: rc.work_noise,
+            seed: Rng::split_seed(
+                rc.seed ^ REPLAY_SEED_DOMAIN,
+                replay_stream(purpose, wi, slot),
+            ),
+            max_sim_s: rc.max_sim_s,
+        };
+
+        // Baselines: one pooled run per Linux governor.
+        let baselines: Vec<GovernorReplay> = pool.try_run(BASELINE_GOVERNORS.len(), |g| {
+            let mut node = Node::from_profile(arch.clone())?;
+            let power_proc = PowerProcess::from_profile(&arch);
+            let mut gov = by_name(BASELINE_GOVERNORS[g], &node)?;
+            let r = replay_run(
+                &mut node,
+                &mut gov,
+                &power_proc,
+                w,
+                input,
+                &mk_cfg(STREAM_BASELINE, g as u64),
+            )?;
+            Ok(GovernorReplay::from(&r))
+        })?;
+
+        // The model-in-the-loop governor (inline: its counters are read
+        // back after the run).
+        let mut node = Node::from_profile(arch.clone())?;
+        let power_proc = PowerProcess::from_profile(&arch);
+        let mut ecopt = EcoptGovernor::new(models[wi].clone(), grid.clone(), input);
+        let r = replay_run(
+            &mut node,
+            &mut ecopt,
+            &power_proc,
+            w,
+            input,
+            &mk_cfg(STREAM_ECOPT, 0),
+        )?;
+        let ecopt_replay = GovernorReplay::from(&r);
+        let (decisions, switches, fallback) = ecopt.counters();
+        if fallback > 0 {
+            crate::warn_log!(
+                "replay: ecopt governor fell back to ondemand for {fallback} samples on {} ({})",
+                w.name,
+                ecopt.stale_reason().unwrap_or("unknown")
+            );
+        }
+
+        // Static oracle: pin every grid configuration for the whole
+        // trace, keep the measured-energy argmin.
+        let sweep: Vec<(Mhz, usize, f64, f64)> = pool.try_run(grid.len(), |j| {
+            let (f, p) = grid[j];
+            let mut node = Node::from_profile(arch.clone())?;
+            let power_proc = PowerProcess::from_profile(&arch);
+            let mut gov = Pinned::new(f, p);
+            let r = replay_run(
+                &mut node,
+                &mut gov,
+                &power_proc,
+                w,
+                input,
+                &mk_cfg(STREAM_ORACLE, j as u64),
+            )?;
+            Ok((f, p, r.energy_j, r.wall_time_s))
+        })?;
+        let best = sweep
+            .iter()
+            .filter(|(_, _, e, _)| e.is_finite())
+            .min_by(|a, b| {
+                a.2.total_cmp(&b.2)
+                    .then_with(|| a.0.cmp(&b.0))
+                    .then_with(|| a.1.cmp(&b.1))
+            })
+            .ok_or_else(|| Error::Data("empty oracle sweep".into()))?;
+
+        members.push(WorkloadReplay {
+            workload: w.name.clone(),
+            input,
+            baselines,
+            ecopt: ecopt_replay,
+            ecopt_decisions: decisions,
+            ecopt_switches: switches,
+            ecopt_fallback_samples: fallback,
+            oracle: OracleConfig {
+                f_mhz: best.0,
+                cores: best.1,
+                energy_j: best.2,
+                time_s: best.3,
+            },
+        });
+    }
+
+    Ok((
+        ReplayResults {
+            arch: arch.name.clone(),
+            members,
+        },
+        stats,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CampaignSpec, SvrSpec};
+
+    fn quick_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            campaign: CampaignSpec {
+                freq_points: 3,
+                inputs: vec![1],
+                ..Default::default()
+            },
+            svr: SvrSpec {
+                c: 1000.0,
+                epsilon: 0.5,
+                max_iter: 100_000,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    fn quick_rc(seed: u64) -> RunConfig {
+        RunConfig {
+            dt: 0.1,
+            work_noise: 0.005,
+            seed,
+            max_sim_s: 1e6,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn replay_produces_all_members_and_governors() {
+        let opts = ReplayOptions {
+            input: 1,
+            cache: None,
+            cycles_override: Some(2),
+        };
+        let (res, stats) = run_replay(&quick_cfg(), &quick_rc(7), &opts).unwrap();
+        assert_eq!(res.members.len(), phase_suite().len());
+        assert_eq!(stats.trained, res.members.len());
+        assert_eq!(stats.cache_hits, 0);
+        for m in &res.members {
+            assert_eq!(m.baselines.len(), BASELINE_GOVERNORS.len());
+            assert!(m.ondemand().is_ok());
+            assert!(m.ecopt.energy_j > 0.0);
+            assert!(m.oracle.energy_j > 0.0);
+            assert_eq!(
+                m.ecopt_fallback_samples, 0,
+                "{}: live model must not fall back",
+                m.workload
+            );
+            assert!(m.ecopt_decisions > 0);
+        }
+        assert!(res.member("burst-sweep").is_ok());
+        assert!(res.member("nope").is_err());
+    }
+
+    #[test]
+    fn replay_roundtrips_through_json() {
+        let opts = ReplayOptions {
+            input: 1,
+            cache: None,
+            cycles_override: Some(1),
+        };
+        let (res, _) = run_replay(&quick_cfg(), &quick_rc(9), &opts).unwrap();
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        let p = dir.path().join("replay.json");
+        res.save(&p).unwrap();
+        let back = ReplayResults::load(&p).unwrap();
+        assert_eq!(back.arch, res.arch);
+        assert_eq!(back.members.len(), res.members.len());
+        assert_eq!(
+            back.to_json().dump().unwrap(),
+            res.to_json().dump().unwrap(),
+            "save/load must be lossless"
+        );
+    }
+}

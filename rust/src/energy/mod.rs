@@ -78,6 +78,16 @@ pub struct EnergyModel {
     pub arch: ArchProfile,
 }
 
+/// Total order for the energy argmin: energy first (`total_cmp`, so the
+/// comparison itself is a total order), then frequency, then cores — a
+/// deterministic tie-break shared by both decision paths.
+fn argmin_order(a: &EnergyPoint, b: &EnergyPoint) -> std::cmp::Ordering {
+    a.energy_j
+        .total_cmp(&b.energy_j)
+        .then_with(|| a.f_mhz.cmp(&b.f_mhz))
+        .then_with(|| a.cores.cmp(&b.cores))
+}
+
 /// The deterministic configuration grid (frequency-major, matching the
 /// AOT artifact's `GRID_POINTS` layout) for a legacy homogeneous node.
 pub fn config_grid(campaign: &CampaignSpec, node: &NodeSpec) -> Vec<(Mhz, usize)> {
@@ -151,6 +161,11 @@ impl EnergyModel {
     }
 
     /// Grid-argmin of the energy surface subject to constraints.
+    ///
+    /// Non-finite predictions are excluded before the argmin (a NaN can
+    /// never win the grid), and exact energy ties break deterministically
+    /// toward the lowest `(freq, cores)` pair, so the answer is a pure
+    /// function of the surface regardless of grid perturbations.
     pub fn optimize(
         &self,
         grid: &[(Mhz, usize)],
@@ -160,8 +175,8 @@ impl EnergyModel {
         let surf = self.surface(grid, n);
         let best = surf
             .iter()
-            .filter(|p| constraints.allows(p))
-            .min_by(|a, b| a.energy_j.total_cmp(&b.energy_j))
+            .filter(|p| p.energy_j.is_finite() && constraints.allows(p))
+            .min_by(|a, b| argmin_order(a, b))
             .ok_or_else(|| Error::Data("no grid point satisfies the constraints".into()))?;
         Ok(OptimalConfig {
             f_mhz: best.f_mhz,
@@ -242,10 +257,10 @@ impl EnergyModel {
                 power_w: w,
                 energy_j: w * t,
             };
-            if !constraints.allows(&pt) {
+            if !pt.energy_j.is_finite() || !constraints.allows(&pt) {
                 continue;
             }
-            if best.map_or(true, |b| pt.energy_j < b.energy_j) {
+            if best.map_or(true, |b| argmin_order(&pt, &b).is_lt()) {
                 best = Some(pt);
             }
         }
@@ -373,6 +388,56 @@ mod tests {
                 assert_eq!(a.energy_j, b.energy_j);
             }
         }
+    }
+
+    /// A degenerate model whose SVR predicts a constant (empty support
+    /// set: prediction == bias) — every grid point has identical energy
+    /// when the power model is flat too.
+    fn flat_model(power: PowerModel) -> EnergyModel {
+        let svr = SvrModel {
+            train_x: vec![],
+            beta: vec![],
+            b: 5.0,
+            gamma: 0.5,
+            scaler: crate::svr::Standardizer::identity(crate::svr::DIMS),
+            iterations: 0,
+            n_support: 0,
+        };
+        EnergyModel::new(power, svr, NodeSpec::default())
+    }
+
+    #[test]
+    fn nan_prediction_never_wins_the_grid() {
+        // A power model with a NaN coefficient poisons every prediction:
+        // the argmin must refuse rather than return a NaN "optimum".
+        let m = flat_model(PowerModel {
+            c1: 0.0,
+            c2: 0.0,
+            c3: f64::NAN,
+            c4: 0.0,
+        });
+        let grid = config_grid(&CampaignSpec::default(), &NodeSpec::default());
+        assert!(m.optimize(&grid, 1, &Constraints::default()).is_err());
+    }
+
+    #[test]
+    fn exact_ties_break_to_lowest_freq_then_cores() {
+        // Flat power + constant predicted time: all 352 energies are
+        // bit-equal, so the tie-break must pick the lowest (f, p) pair —
+        // and keep picking it when the grid is reordered.
+        let m = flat_model(PowerModel {
+            c1: 0.0,
+            c2: 0.0,
+            c3: 100.0,
+            c4: 0.0,
+        });
+        let grid = config_grid(&CampaignSpec::default(), &NodeSpec::default());
+        let opt = m.optimize(&grid, 1, &Constraints::default()).unwrap();
+        assert_eq!((opt.f_mhz, opt.cores), (1200, 1));
+        let mut reversed = grid.clone();
+        reversed.reverse();
+        let opt2 = m.optimize(&reversed, 1, &Constraints::default()).unwrap();
+        assert_eq!((opt2.f_mhz, opt2.cores), (1200, 1));
     }
 
     #[test]

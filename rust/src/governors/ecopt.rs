@@ -1,0 +1,491 @@
+//! `ecopt` — the model-in-the-loop governor (the closed-loop deployment
+//! of the paper's methodology).
+//!
+//! Where the paper's proposed approach picks ONE static `(freq, cores)`
+//! configuration per (application, input) before launch, this governor
+//! keeps the trained [`EnergyModel`] in the loop at run time: every
+//! sampling period it classifies the current execution regime from the
+//! observed per-core load and consults the model for the energy-optimal
+//! configuration of that regime —
+//!
+//! * **Busy** (compute-bound): the unconstrained grid argmin, i.e. the
+//!   paper's static optimum;
+//! * **Stalled** (memory-/sync-bound, frequency-insensitive): the argmin
+//!   pinned to the grid's lowest frequency and capped at the busy core
+//!   count (DVFS down costs no time when the phase does not scale with
+//!   `f` — the Calore et al. observation);
+//! * **Idle**: lowest frequency, one core (hotplug the rest off — idle
+//!   cores still leak `idle_frac` of their dynamic power).
+//!
+//! Model consults are memoized per regime, so the per-decision cost after
+//! the first consult of each regime is O(cores) — cheap enough for a
+//! 100 ms cadence. A **hysteresis** counter requires the same regime to
+//! be observed on consecutive samples before the configuration switches,
+//! so phase-boundary blends cannot make the governor flap.
+//!
+//! **Stale-model fallback:** if the model does not match the node it is
+//! asked to govern (different DVFS ladder, empty support set, off-ladder
+//! grid) — or a consult fails — the governor degrades to a faithful
+//! embedded [`Ondemand`] instead of actuating garbage. The replay
+//! harness (`coordinator::replay`) surfaces the fallback counter.
+
+use crate::config::Mhz;
+use crate::energy::{Constraints, EnergyModel};
+use crate::governors::{Governor, Ondemand};
+use crate::node::Node;
+use crate::Result;
+
+/// Tunables of the model-in-the-loop governor.
+#[derive(Debug, Clone)]
+pub struct EcoptTunables {
+    /// Sampling period in seconds (same cadence class as ondemand).
+    pub sampling_period_s: f64,
+    /// Consecutive samples a NEW regime must persist before the
+    /// configuration switches (1 = switch immediately).
+    pub hysteresis: u32,
+    /// Mean-load fraction at or above which the regime is Busy.
+    pub busy_threshold: f64,
+    /// Mean-load fraction at or below which the regime is Idle.
+    pub idle_threshold: f64,
+}
+
+impl Default for EcoptTunables {
+    fn default() -> Self {
+        EcoptTunables {
+            sampling_period_s: 0.1,
+            hysteresis: 2,
+            busy_threshold: 0.90,
+            idle_threshold: 0.15,
+        }
+    }
+}
+
+/// Execution regime classified from the observed load.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Regime {
+    /// Compute-bound: cores saturated, frequency buys time.
+    Busy,
+    /// Memory-/sync-bound: cores busy-ish but frequency-insensitive.
+    Stalled,
+    /// Between kernels / waiting on I/O.
+    Idle,
+}
+
+/// The model-in-the-loop governor.
+#[derive(Debug)]
+pub struct EcoptGovernor {
+    model: EnergyModel,
+    grid: Vec<(Mhz, usize)>,
+    input: u32,
+    tun: EcoptTunables,
+    /// Lowest frequency on the decision grid (the Stalled/Idle pin).
+    grid_fmin: Mhz,
+    /// Built on first contact with the node (needs its ladder).
+    fallback: Option<Ondemand>,
+    /// Why the model was declared stale (None = model is live).
+    stale: Option<String>,
+    /// Node compatibility has been checked.
+    checked: bool,
+    regime: Option<Regime>,
+    /// Candidate regime awaiting hysteresis confirmation + its streak.
+    pending: Option<(Regime, u32)>,
+    /// The configuration currently actuated.
+    current: Option<(Mhz, usize)>,
+    /// Memoized model consults per regime.
+    busy_cfg: Option<(Mhz, usize)>,
+    stalled_cfg: Option<(Mhz, usize)>,
+    /// Diagnostics the replay harness reports.
+    decisions: u64,
+    switches: u64,
+    fallback_samples: u64,
+}
+
+impl EcoptGovernor {
+    /// Governor over a trained model and its decision grid, for the
+    /// phase trace's input size.
+    pub fn new(model: EnergyModel, grid: Vec<(Mhz, usize)>, input: u32) -> Self {
+        Self::with_tunables(model, grid, input, EcoptTunables::default())
+    }
+
+    pub fn with_tunables(
+        model: EnergyModel,
+        grid: Vec<(Mhz, usize)>,
+        input: u32,
+        tun: EcoptTunables,
+    ) -> Self {
+        assert!(tun.hysteresis >= 1, "hysteresis must be >= 1");
+        assert!(tun.idle_threshold < tun.busy_threshold);
+        let grid_fmin = grid.iter().map(|(f, _)| *f).min().unwrap_or(0);
+        EcoptGovernor {
+            model,
+            grid,
+            input,
+            tun,
+            grid_fmin,
+            fallback: None,
+            stale: None,
+            checked: false,
+            regime: None,
+            pending: None,
+            current: None,
+            busy_cfg: None,
+            stalled_cfg: None,
+            decisions: 0,
+            switches: 0,
+            fallback_samples: 0,
+        }
+    }
+
+    /// Whether the governor has degraded to its ondemand fallback.
+    pub fn is_stale(&self) -> bool {
+        self.stale.is_some()
+    }
+
+    /// Why the model was declared stale, if it was.
+    pub fn stale_reason(&self) -> Option<&str> {
+        self.stale.as_deref()
+    }
+
+    /// The configuration currently actuated (None before the first
+    /// decision or in fallback).
+    pub fn current_config(&self) -> Option<(Mhz, usize)> {
+        self.current
+    }
+
+    /// (model consults+decisions, config switches, fallback samples).
+    pub fn counters(&self) -> (u64, u64, u64) {
+        (self.decisions, self.switches, self.fallback_samples)
+    }
+
+    /// One-time node-compatibility check; failures mark the model stale.
+    fn check_node(&mut self, node: &Node) {
+        self.checked = true;
+        if self.model.svr.n_support == 0 {
+            self.stale = Some("model has an empty support set".into());
+            return;
+        }
+        if self.grid.is_empty() {
+            self.stale = Some("empty decision grid".into());
+            return;
+        }
+        if self.model.arch.ladder() != node.ladder() {
+            self.stale = Some(format!(
+                "model trained for '{}' whose ladder differs from the node's",
+                self.model.arch.name
+            ));
+            return;
+        }
+        let ladder = node.ladder();
+        for (f, p) in &self.grid {
+            if !ladder.contains(f) || *p == 0 || *p > node.total_cores() {
+                self.stale = Some(format!("grid point ({f} MHz, {p}) is off this node"));
+                return;
+            }
+        }
+    }
+
+    fn classify(&self, load: f64) -> Regime {
+        if load >= self.tun.busy_threshold {
+            Regime::Busy
+        } else if load <= self.tun.idle_threshold {
+            Regime::Idle
+        } else {
+            Regime::Stalled
+        }
+    }
+
+    /// Consult the model (memoized) for the regime's configuration.
+    fn config_for(&mut self, regime: Regime) -> Result<(Mhz, usize)> {
+        match regime {
+            Regime::Busy => {
+                if let Some(c) = self.busy_cfg {
+                    return Ok(c);
+                }
+                let opt = self
+                    .model
+                    .optimize(&self.grid, self.input, &Constraints::default())?;
+                let c = (opt.f_mhz, opt.cores);
+                self.busy_cfg = Some(c);
+                Ok(c)
+            }
+            Regime::Stalled => {
+                if let Some(c) = self.stalled_cfg {
+                    return Ok(c);
+                }
+                // Frequency buys nothing in a stalled phase: pin the
+                // grid's lowest frequency and let the model pick how many
+                // cores still pay for themselves (capped at the busy
+                // count — a stalled phase never needs more).
+                let (_, busy_p) = self.config_for(Regime::Busy)?;
+                let opt = self.model.optimize(
+                    &self.grid,
+                    self.input,
+                    &Constraints {
+                        max_f_mhz: Some(self.grid_fmin),
+                        max_cores: Some(busy_p),
+                        ..Default::default()
+                    },
+                )?;
+                let c = (opt.f_mhz, opt.cores);
+                self.stalled_cfg = Some(c);
+                Ok(c)
+            }
+            Regime::Idle => Ok((self.grid_fmin, 1)),
+        }
+    }
+
+    fn apply(&mut self, cfg: (Mhz, usize), node: &mut Node) -> Result<()> {
+        node.set_freq_all(cfg.0)?;
+        node.set_online_cores(cfg.1)?;
+        if self.current.is_some() {
+            self.switches += 1;
+        }
+        self.current = Some(cfg);
+        Ok(())
+    }
+}
+
+impl Governor for EcoptGovernor {
+    fn name(&self) -> &'static str {
+        "ecopt"
+    }
+
+    fn sampling_period_s(&self) -> f64 {
+        self.tun.sampling_period_s
+    }
+
+    fn sample(&mut self, node: &mut Node) -> Result<()> {
+        if !self.checked {
+            self.check_node(node);
+            if let Some(reason) = &self.stale {
+                crate::warn_log!(
+                    "ecopt governor: stale model ({reason}), falling back to ondemand"
+                );
+            }
+        }
+        if self.stale.is_some() {
+            self.fallback_samples += 1;
+            if self.fallback.is_none() {
+                self.fallback = Some(Ondemand::new(node.ladder()));
+            }
+            return self.fallback.as_mut().expect("fallback built").sample(node);
+        }
+
+        let mut load = 0.0;
+        let mut online = 0usize;
+        for c in 0..node.total_cores() {
+            if node.is_online(c) {
+                load += node.util(c);
+                online += 1;
+            }
+        }
+        let load = if online > 0 { load / online as f64 } else { 0.0 };
+        self.decisions += 1;
+
+        let target = self.classify(load);
+        let confirmed = match self.regime {
+            // First decision actuates immediately.
+            None => true,
+            Some(r) if r == target => {
+                self.pending = None;
+                false
+            }
+            Some(_) => {
+                let streak = match self.pending {
+                    Some((p, n)) if p == target => n + 1,
+                    _ => 1,
+                };
+                if streak >= self.tun.hysteresis {
+                    self.pending = None;
+                    true
+                } else {
+                    self.pending = Some((target, streak));
+                    false
+                }
+            }
+        };
+        if !confirmed {
+            return Ok(());
+        }
+        let cfg = match self.config_for(target) {
+            Ok(c) => c,
+            Err(e) => {
+                // A consult failure (NaN surface, infeasible constraints)
+                // makes the model unusable: degrade, don't crash the run.
+                self.stale = Some(format!("model consult failed: {e}"));
+                self.fallback_samples += 1;
+                if self.fallback.is_none() {
+                    self.fallback = Some(Ondemand::new(node.ladder()));
+                }
+                return self.fallback.as_mut().expect("fallback built").sample(node);
+            }
+        };
+        self.regime = Some(target);
+        if self.current != Some(cfg) {
+            self.apply(cfg, node)?;
+        }
+        Ok(())
+    }
+
+    fn reset(&mut self) {
+        self.regime = None;
+        self.pending = None;
+        self.current = None;
+        self.decisions = 0;
+        self.switches = 0;
+        self.fallback_samples = 0;
+        // A reset starts a NEW run, possibly on a different node:
+        // re-validate compatibility (and rebuild the fallback against
+        // that node's ladder) on the next sample instead of trusting a
+        // verdict reached against the previous one.
+        self.checked = false;
+        self.stale = None;
+        self.fallback = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CampaignSpec, NodeSpec};
+    use crate::energy::config_grid;
+    use crate::powermodel::PowerModel;
+    use crate::svr::{Standardizer, SvrModel, DIMS};
+
+    /// Handcrafted two-SV model: predictions vary smoothly with (f, p),
+    /// decreasing toward high frequency and core counts.
+    fn toy_model() -> EnergyModel {
+        let svr = SvrModel {
+            train_x: vec![2.2, 32.0, 1.0, 1.2, 1.0, 1.0],
+            beta: vec![-40.0, 40.0],
+            b: 60.0,
+            gamma: 0.05,
+            scaler: Standardizer::identity(DIMS),
+            iterations: 10,
+            n_support: 2,
+        };
+        EnergyModel::new(PowerModel::paper_eq9(), svr, NodeSpec::default())
+    }
+
+    fn grid() -> Vec<(Mhz, usize)> {
+        config_grid(&CampaignSpec::default(), &NodeSpec::default())
+    }
+
+    fn node() -> Node {
+        Node::new(NodeSpec::default()).unwrap()
+    }
+
+    fn set_all_utils(n: &mut Node, u: f64) {
+        for c in 0..n.total_cores() {
+            n.set_util(c, u);
+        }
+    }
+
+    #[test]
+    fn first_sample_actuates_the_model_optimum() {
+        let mut g = EcoptGovernor::new(toy_model(), grid(), 1);
+        let mut n = node();
+        set_all_utils(&mut n, 1.0);
+        g.sample(&mut n).unwrap();
+        assert!(!g.is_stale());
+        let (f, p) = g.current_config().expect("config applied");
+        assert_eq!(n.freq(0), f);
+        assert_eq!(n.online_cores(), p);
+        let opt = toy_model()
+            .optimize(&grid(), 1, &Constraints::default())
+            .unwrap();
+        assert_eq!((f, p), (opt.f_mhz, opt.cores));
+    }
+
+    #[test]
+    fn idle_regime_drops_to_one_core_min_freq() {
+        let mut g = EcoptGovernor::new(toy_model(), grid(), 1);
+        let mut n = node();
+        set_all_utils(&mut n, 1.0);
+        g.sample(&mut n).unwrap();
+        // Utils on ONLINE cores go idle; hysteresis = 2 samples.
+        set_all_utils(&mut n, 0.02);
+        g.sample(&mut n).unwrap();
+        set_all_utils(&mut n, 0.02);
+        g.sample(&mut n).unwrap();
+        assert_eq!(n.online_cores(), 1);
+        assert_eq!(n.freq(0), 1200);
+        assert_eq!(g.current_config(), Some((1200, 1)));
+    }
+
+    #[test]
+    fn hysteresis_ignores_single_sample_blips() {
+        let mut g = EcoptGovernor::new(toy_model(), grid(), 1);
+        let mut n = node();
+        set_all_utils(&mut n, 1.0);
+        g.sample(&mut n).unwrap();
+        let busy = g.current_config().unwrap();
+        // One idle sample: no switch yet.
+        set_all_utils(&mut n, 0.02);
+        g.sample(&mut n).unwrap();
+        assert_eq!(g.current_config(), Some(busy));
+        // Load returns: the pending candidate is discarded.
+        set_all_utils(&mut n, 1.0);
+        g.sample(&mut n).unwrap();
+        set_all_utils(&mut n, 0.02);
+        g.sample(&mut n).unwrap();
+        assert_eq!(g.current_config(), Some(busy), "one blip must not switch");
+    }
+
+    #[test]
+    fn stalled_regime_pins_min_freq_capped_cores() {
+        let mut g = EcoptGovernor::new(toy_model(), grid(), 1);
+        let mut n = node();
+        set_all_utils(&mut n, 1.0);
+        g.sample(&mut n).unwrap();
+        let (_, busy_p) = g.current_config().unwrap();
+        set_all_utils(&mut n, 0.55);
+        g.sample(&mut n).unwrap();
+        set_all_utils(&mut n, 0.55);
+        g.sample(&mut n).unwrap();
+        let (f, p) = g.current_config().unwrap();
+        assert_eq!(f, 1200, "stalled phases run at the grid minimum");
+        assert!(p >= 1 && p <= busy_p, "stalled cores {p} vs busy {busy_p}");
+    }
+
+    #[test]
+    fn stale_arch_falls_back_to_ondemand() {
+        // Model trained on the Xeon ladder, node is the big.LITTLE part.
+        let profile = crate::arch::mobile_biglittle();
+        let mut n = Node::from_profile(profile).unwrap();
+        let mut g = EcoptGovernor::new(toy_model(), grid(), 1);
+        n.set_freq_all(1000).unwrap();
+        set_all_utils(&mut n, 1.0);
+        g.sample(&mut n).unwrap();
+        assert!(g.is_stale());
+        // Ondemand semantics: saturated load races to the node's fmax...
+        assert_eq!(n.freq(0), *n.ladder().last().unwrap());
+        // ...and a governor never hotplugs cores.
+        assert_eq!(n.online_cores(), n.total_cores());
+        let (_, _, fb) = g.counters();
+        assert!(fb > 0);
+    }
+
+    #[test]
+    fn empty_support_set_is_stale() {
+        let mut m = toy_model();
+        m.svr.n_support = 0;
+        let mut g = EcoptGovernor::new(m, grid(), 1);
+        let mut n = node();
+        g.sample(&mut n).unwrap();
+        assert!(g.is_stale());
+        assert!(g.stale_reason().unwrap().contains("support"));
+    }
+
+    #[test]
+    fn reset_clears_decision_state() {
+        let mut g = EcoptGovernor::new(toy_model(), grid(), 1);
+        let mut n = node();
+        set_all_utils(&mut n, 1.0);
+        g.sample(&mut n).unwrap();
+        assert!(g.current_config().is_some());
+        g.reset();
+        assert!(g.current_config().is_none());
+        assert_eq!(g.counters(), (0, 0, 0));
+    }
+}

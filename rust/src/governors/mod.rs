@@ -7,14 +7,22 @@
 //! *Conservative*. Each governor runs one policy per core, exactly like
 //! the paper's kernel-2.6.32 setup, and is ticked on its own sampling
 //! cadence by the workload simulator.
+//!
+//! Beyond the Linux set: [`Pinned`] actuates a full `(freq, cores)`
+//! configuration (userspace + hotplug — what oracle sweeps use), and
+//! [`EcoptGovernor`] is the **model-in-the-loop** governor that consults
+//! a trained `EnergyModel` every sampling period (ISSUE 3; not
+//! constructible through [`by_name`] since it needs a trained model).
 
 mod conservative;
+mod ecopt;
 mod ondemand;
 mod statics;
 
 pub use conservative::{Conservative, ConservativeTunables};
+pub use ecopt::{EcoptGovernor, EcoptTunables, Regime};
 pub use ondemand::{Ondemand, OndemandTunables};
-pub use statics::{Performance, Powersave, Userspace};
+pub use statics::{Performance, Pinned, Powersave, Userspace};
 
 use crate::config::Mhz;
 use crate::node::Node;

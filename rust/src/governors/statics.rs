@@ -89,6 +89,36 @@ impl Governor for Userspace {
     }
 }
 
+/// Pins a full `(frequency, core-count)` configuration — userspace plus
+/// contiguous hotplug in one governor. The replay harness's oracle
+/// sweeps and the phase characterization campaigns actuate grid points
+/// through this (the paper's §3.2 actuation, packaged for simulators
+/// that leave hotplug to the governor).
+#[derive(Debug)]
+pub struct Pinned {
+    f: Mhz,
+    cores: usize,
+}
+
+impl Pinned {
+    pub fn new(f: Mhz, cores: usize) -> Self {
+        Pinned { f, cores }
+    }
+}
+
+impl Governor for Pinned {
+    fn name(&self) -> &'static str {
+        "pinned"
+    }
+    fn sampling_period_s(&self) -> f64 {
+        f64::INFINITY
+    }
+    fn sample(&mut self, node: &mut Node) -> Result<()> {
+        node.set_freq_all(self.f)?;
+        node.set_online_cores(self.cores)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -113,6 +143,17 @@ mod tests {
         let mut g = Powersave::new(n.ladder());
         g.sample(&mut n).unwrap();
         assert!(n.freqs().iter().all(|f| *f == 1200));
+    }
+
+    #[test]
+    fn pinned_sets_frequency_and_hotplug() {
+        let mut n = node();
+        let mut g = Pinned::new(1500, 6);
+        g.sample(&mut n).unwrap();
+        assert!(n.freqs().iter().all(|f| *f == 1500));
+        assert_eq!(n.online_cores(), 6);
+        let mut bad = Pinned::new(1500, 99);
+        assert!(bad.sample(&mut n).is_err());
     }
 
     #[test]

@@ -18,8 +18,10 @@ use std::path::PathBuf;
 
 use ecopt::arch::{profile_by_name, registry};
 use ecopt::config::ExperimentConfig;
-use ecopt::coordinator::{run_fleet, Coordinator, ExperimentResults};
+use ecopt::coordinator::replay::{run_replay, ReplayOptions};
+use ecopt::coordinator::{run_fleet_cached, Coordinator, ExperimentResults};
 use ecopt::energy::{config_grid_arch, EnergyModel};
+use ecopt::persist::ModelCache;
 use ecopt::report;
 use ecopt::runtime::PjrtRuntime;
 use ecopt::workloads::app_by_name;
@@ -40,9 +42,19 @@ COMMANDS:
   compare [--app NAME]          full pipeline + ondemand comparison (Tables 2-5)
   report [--all] [--only WHAT] [--cache FILE]
                                 render paper artifacts; WHAT = 1-5, f1-f10, headline
-  fleet [--profiles A,B] [--quick] [--out FILE] [--save FILE]
+  fleet [--profiles A,B] [--quick] [--out FILE] [--save FILE] [--cache-dir DIR]
                                 full pipeline across the architecture registry,
                                 cross-architecture savings report
+  replay [--quick] [-n N] [--out FILE] [--save FILE] [--stats FILE]
+         [--cache-dir DIR] [--no-cache] [--threads N]
+                                phase-shifting traces under every governor +
+                                the model-in-the-loop ecopt governor, vs the
+                                static oracle; trained models are served from
+                                the persistent cache (a warm rerun trains
+                                zero models and reproduces the report byte
+                                for byte)
+  cache ls|clear [--cache-dir DIR]
+                                inspect / empty the persistent model cache
   arch [--list]                 list the built-in architecture profiles
   config --dump                 print the effective configuration
   help                          this text
@@ -258,7 +270,11 @@ fn main() -> anyhow::Result<()> {
                 profiles.len(),
                 profiles.iter().map(|p| p.name.as_str()).collect::<Vec<_>>().join(", ")
             );
-            let fleet = run_fleet(&cfg, &rc, &profiles)?;
+            let cache = match args.get("cache-dir") {
+                Some(dir) if !dir.is_empty() => Some(ModelCache::open(std::path::Path::new(dir))?),
+                _ => None,
+            };
+            let fleet = run_fleet_cached(&cfg, &rc, &profiles, cache.as_ref())?;
             if let Some(path) = args.get("save") {
                 fleet.save(std::path::Path::new(path))?;
                 eprintln!("fleet results cached to {path}");
@@ -270,6 +286,98 @@ fn main() -> anyhow::Result<()> {
                     eprintln!("fleet report written to {path}");
                 }
                 _ => println!("{rendered}"),
+            }
+        }
+        "replay" => {
+            let mut cfg = load_config(&args)?;
+            let mut rc = RunConfig {
+                seed: cfg.campaign.seed,
+                dt: 0.1, // dynamic governors need their 100 ms cadence
+                ..Default::default()
+            };
+            if let Some(t) = args.get("threads") {
+                rc.threads = t.parse()?;
+            }
+            let mut opts = ReplayOptions {
+                input: args.get("input").unwrap_or("0").parse()?,
+                ..Default::default()
+            };
+            if args.has("quick") {
+                // CI mode: 3 ladder points, short traces. The core sweep
+                // stays FULL: baselines govern the whole complement, so a
+                // capped decision grid would handicap the model governor.
+                cfg.campaign.freq_points = 3;
+                opts.cycles_override = Some(2);
+                if opts.input == 0 {
+                    opts.input = 1;
+                }
+            }
+            if !args.has("no-cache") {
+                let dir = match args.get("cache-dir") {
+                    Some(d) if !d.is_empty() => PathBuf::from(d),
+                    _ => ModelCache::default_dir(),
+                };
+                opts.cache = Some(ModelCache::open(&dir)?);
+                eprintln!("replay: model cache at {}", dir.display());
+            }
+            let (res, stats) = run_replay(&cfg, &rc, &opts)?;
+            // Cache accounting goes to stderr / --stats, NEVER into the
+            // report: a warm rerun must reproduce it byte for byte.
+            eprintln!(
+                "replay: trained {} model(s), {} cache hit(s) ({:.0}% hit rate)",
+                stats.trained,
+                stats.cache_hits,
+                stats.hit_rate_pct()
+            );
+            if let Some(path) = args.get("stats") {
+                let stats_json = format!(
+                    "{{\"trained\":{},\"cache_hits\":{},\"hit_rate_pct\":{:.1}}}",
+                    stats.trained,
+                    stats.cache_hits,
+                    stats.hit_rate_pct()
+                );
+                std::fs::write(path, stats_json)?;
+                eprintln!("replay: stats written to {path}");
+            }
+            if let Some(path) = args.get("save") {
+                res.save(std::path::Path::new(path))?;
+                eprintln!("replay: results cached to {path}");
+            }
+            let rendered = report::replay_report(&res);
+            match args.get("out") {
+                Some(path) if !path.is_empty() => {
+                    std::fs::write(path, &rendered)?;
+                    eprintln!("replay report written to {path}");
+                }
+                _ => println!("{rendered}"),
+            }
+        }
+        "cache" => {
+            let dir = match args.get("cache-dir") {
+                Some(d) if !d.is_empty() => PathBuf::from(d),
+                _ => ModelCache::default_dir(),
+            };
+            let cache = ModelCache::open(&dir)?;
+            match args.positional.get(1).map(|s| s.as_str()) {
+                Some("ls") | None => {
+                    let entries = cache.entries()?;
+                    if entries.is_empty() {
+                        println!("model cache at {} is empty", dir.display());
+                    } else {
+                        println!("model cache at {} ({} entries):", dir.display(), entries.len());
+                        for e in entries {
+                            println!("  {:<60} {:>8} B", e.key.label(), e.bytes);
+                        }
+                    }
+                }
+                Some("clear") => {
+                    let removed = cache.clear()?;
+                    println!("removed {removed} cached model(s) from {}", dir.display());
+                }
+                Some(other) => {
+                    eprintln!("unknown cache action '{other}' (use ls or clear)\n\n{USAGE}");
+                    std::process::exit(2);
+                }
             }
         }
         "arch" => {
@@ -297,7 +405,7 @@ fn main() -> anyhow::Result<()> {
         }
         "config" => {
             let cfg = load_config(&args)?;
-            println!("{}", cfg.dump());
+            println!("{}", cfg.dump()?);
         }
         "help" | "--help" | "-h" => println!("{USAGE}"),
         other => {

@@ -1,17 +1,31 @@
-//! Hand-written JSON (de)serialization for every persisted type.
+//! Hand-written JSON (de)serialization for every persisted type, plus
+//! the **persistent model cache**.
 //!
 //! The offline image has no serde/serde_json; `util::json` provides the
 //! value type and parser, and this module implements [`ToJson`] /
 //! [`FromJson`] for the result bundles that examples, benches and the CLI
 //! cache to disk (`ExperimentResults` and everything it contains).
+//!
+//! [`ModelCache`] stores trained `(PowerModel, SvrModel)` bundles keyed
+//! by `(app, input-tag, arch-profile)` so repeat pipelines, fleet sweeps
+//! and `ecopt replay` skip retraining entirely: a warm-cache run trains
+//! **zero** models and — because the JSON number writer is exact
+//! (shortest round-trip floats, error on non-finite) — reproduces the
+//! cold run's predictions **bit for bit**. The input-tag carries a
+//! digest of everything else the model depends on (campaign grid, SVR
+//! hyper-parameters, seeds), so a config change can never alias a stale
+//! entry; see `DESIGN.md` §8 for the key scheme.
+
+use std::path::{Path, PathBuf};
 
 use crate::characterize::{CharSample, Characterization};
 use crate::compare::{ComparisonRow, GovernorRun, SavingsSummary};
+use crate::coordinator::replay::{GovernorReplay, OracleConfig, ReplayResults, WorkloadReplay};
 use crate::coordinator::{AppResults, ExperimentResults, FleetMember, FleetResults};
 use crate::powermodel::{FitReport, PowerModel, PowerObs};
 use crate::svr::{CvReport, Standardizer, SvrModel};
 use crate::util::json::{FromJson, Json, ToJson};
-use crate::Result;
+use crate::{Error, Result};
 
 // ---------------------------------------------------------------------------
 // powermodel
@@ -398,6 +412,416 @@ impl FromJson for FleetResults {
     }
 }
 
+// ---------------------------------------------------------------------------
+// coordinator::replay
+// ---------------------------------------------------------------------------
+
+impl ToJson for GovernorReplay {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("governor", Json::Str(self.governor.clone())),
+            ("energy_j", Json::Num(self.energy_j)),
+            ("time_s", Json::Num(self.time_s)),
+            ("mean_freq_ghz", Json::Num(self.mean_freq_ghz)),
+            ("mean_power_w", Json::Num(self.mean_power_w)),
+            ("time_by_class", Json::f64s(&self.time_by_class)),
+            ("energy_by_class", Json::f64s(&self.energy_by_class)),
+        ])
+    }
+}
+
+fn f64x3(j: &Json) -> Result<[f64; 3]> {
+    let v = j.to_f64_vec()?;
+    if v.len() != 3 {
+        return Err(Error::Json(format!("expected 3 class entries, got {}", v.len())));
+    }
+    Ok([v[0], v[1], v[2]])
+}
+
+impl FromJson for GovernorReplay {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(GovernorReplay {
+            governor: j.get("governor")?.as_str()?.to_string(),
+            energy_j: j.get("energy_j")?.as_f64()?,
+            time_s: j.get("time_s")?.as_f64()?,
+            mean_freq_ghz: j.get("mean_freq_ghz")?.as_f64()?,
+            mean_power_w: j.get("mean_power_w")?.as_f64()?,
+            time_by_class: f64x3(j.get("time_by_class")?)?,
+            energy_by_class: f64x3(j.get("energy_by_class")?)?,
+        })
+    }
+}
+
+impl ToJson for OracleConfig {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("f_mhz", Json::Num(self.f_mhz as f64)),
+            ("cores", Json::Num(self.cores as f64)),
+            ("energy_j", Json::Num(self.energy_j)),
+            ("time_s", Json::Num(self.time_s)),
+        ])
+    }
+}
+
+impl FromJson for OracleConfig {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(OracleConfig {
+            f_mhz: j.get("f_mhz")?.as_u32()?,
+            cores: j.get("cores")?.as_usize()?,
+            energy_j: j.get("energy_j")?.as_f64()?,
+            time_s: j.get("time_s")?.as_f64()?,
+        })
+    }
+}
+
+impl ToJson for WorkloadReplay {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workload", Json::Str(self.workload.clone())),
+            ("input", Json::Num(self.input as f64)),
+            ("baselines", Json::arr(&self.baselines)),
+            ("ecopt", self.ecopt.to_json()),
+            ("ecopt_decisions", Json::Num(self.ecopt_decisions as f64)),
+            ("ecopt_switches", Json::Num(self.ecopt_switches as f64)),
+            ("ecopt_fallback_samples", Json::Num(self.ecopt_fallback_samples as f64)),
+            ("oracle", self.oracle.to_json()),
+        ])
+    }
+}
+
+impl FromJson for WorkloadReplay {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(WorkloadReplay {
+            workload: j.get("workload")?.as_str()?.to_string(),
+            input: j.get("input")?.as_u32()?,
+            baselines: Vec::<GovernorReplay>::from_json(j.get("baselines")?)?,
+            ecopt: GovernorReplay::from_json(j.get("ecopt")?)?,
+            ecopt_decisions: j.get("ecopt_decisions")?.as_u64()?,
+            ecopt_switches: j.get("ecopt_switches")?.as_u64()?,
+            ecopt_fallback_samples: j.get("ecopt_fallback_samples")?.as_u64()?,
+            oracle: OracleConfig::from_json(j.get("oracle")?)?,
+        })
+    }
+}
+
+impl ToJson for ReplayResults {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("arch", Json::Str(self.arch.clone())),
+            ("members", Json::arr(&self.members)),
+        ])
+    }
+}
+
+impl FromJson for ReplayResults {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(ReplayResults {
+            arch: j.get("arch")?.as_str()?.to_string(),
+            members: Vec::<WorkloadReplay>::from_json(j.get("members")?)?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// persistent model cache
+// ---------------------------------------------------------------------------
+
+/// Cache-file schema version; bump on incompatible layout changes (a
+/// mismatching file reads as an error, never as a silent miss).
+const CACHE_SCHEMA: f64 = 1.0;
+
+/// Cache key: `(app, input-tag, arch-profile)`.
+///
+/// `input` is a free-form tag, not just the input size: callers fold a
+/// [`config_digest`] of every other model determinant (campaign grid,
+/// SVR hyper-parameters, seeds) into it so two configurations can never
+/// alias the same entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelKey {
+    pub app: String,
+    pub input: String,
+    pub arch: String,
+}
+
+impl ModelKey {
+    pub fn new(app: &str, input: &str, arch: &str) -> ModelKey {
+        ModelKey {
+            app: app.to_string(),
+            input: input.to_string(),
+            arch: arch.to_string(),
+        }
+    }
+
+    /// Human-readable form for `ecopt cache ls`.
+    pub fn label(&self) -> String {
+        format!("{} [{}] @ {}", self.app, self.input, self.arch)
+    }
+
+    /// Deterministic file name: sanitized fields joined by `__`, plus a
+    /// digest of the RAW fields — two distinct keys whose sanitized
+    /// forms collide (`a/b` vs `a:b`) still land in different files, so
+    /// a `put` can never clobber another key's entry.
+    fn file_name(&self) -> String {
+        fn clean(s: &str) -> String {
+            s.chars()
+                .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '.' { c } else { '_' })
+                .collect()
+        }
+        format!(
+            "{}__{}__{}-{}.model.json",
+            clean(&self.app),
+            clean(&self.input),
+            clean(&self.arch),
+            config_digest(&[&self.app, &self.input, &self.arch]),
+        )
+    }
+}
+
+/// Training-vs-cache accounting of one cache-aware run — shared by
+/// `Coordinator::run_all` and `coordinator::replay::run_replay`, and
+/// deliberately kept OUT of any serialized result (cache state must not
+/// leak into report bytes).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    /// SVR models trained this run.
+    pub trained: usize,
+    /// Model bundles served from the persistent cache.
+    pub cache_hits: usize,
+}
+
+impl CacheStats {
+    pub fn hit_rate_pct(&self) -> f64 {
+        let total = self.trained + self.cache_hits;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64 * 100.0
+        }
+    }
+}
+
+/// The one input-tag scheme every cache user follows:
+/// `n<label>#<digest>` where `label` names the input size(s) and the
+/// digest covers every other determinant of the trained bundle. Both
+/// `Coordinator::run_all` and `coordinator::replay` build their keys
+/// through this helper so the scheme cannot silently diverge.
+pub fn model_input_tag(label: &str, parts: &[&str]) -> String {
+    format!("n{label}#{}", config_digest(parts))
+}
+
+/// FNV-1a digest of configuration strings, rendered as 16 hex chars —
+/// the collision guard folded into [`ModelKey::input`].
+pub fn config_digest(parts: &[&str]) -> String {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for part in parts {
+        for b in part.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        // Field separator so ("ab","c") != ("a","bc").
+        h ^= 0x1F;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    format!("{h:016x}")
+}
+
+/// One cached trained-model bundle.
+#[derive(Debug, Clone)]
+pub struct CachedModel {
+    pub power: PowerModel,
+    pub svr: SvrModel,
+    /// Cross-validation + held-out metrics (pipeline entries carry them;
+    /// replay entries don't need them).
+    pub cv: Option<CvReport>,
+    pub test_mae: Option<f64>,
+    pub test_pae_pct: Option<f64>,
+}
+
+impl CachedModel {
+    fn to_json_with_key(&self, key: &ModelKey) -> Json {
+        Json::obj(vec![
+            ("schema", Json::Num(CACHE_SCHEMA)),
+            ("app", Json::Str(key.app.clone())),
+            ("input", Json::Str(key.input.clone())),
+            ("arch", Json::Str(key.arch.clone())),
+            ("power", self.power.to_json()),
+            ("svr", self.svr.to_json()),
+            (
+                "cv",
+                match &self.cv {
+                    Some(cv) => cv.to_json(),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "test_mae",
+                match self.test_mae {
+                    Some(v) => Json::Num(v),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "test_pae_pct",
+                match self.test_pae_pct {
+                    Some(v) => Json::Num(v),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    fn from_json_checked(j: &Json) -> Result<(ModelKey, CachedModel)> {
+        let schema = j.get("schema")?.as_f64()?;
+        if schema != CACHE_SCHEMA {
+            return Err(Error::Json(format!(
+                "model cache schema {schema} unsupported (expected {CACHE_SCHEMA}); run `ecopt cache clear`"
+            )));
+        }
+        let key = ModelKey::new(
+            j.get("app")?.as_str()?,
+            j.get("input")?.as_str()?,
+            j.get("arch")?.as_str()?,
+        );
+        let opt_num = |field: &str| -> Result<Option<f64>> {
+            match j.opt(field) {
+                None | Some(Json::Null) => Ok(None),
+                Some(v) => Ok(Some(v.as_f64()?)),
+            }
+        };
+        let model = CachedModel {
+            power: PowerModel::from_json(j.get("power")?)?,
+            svr: SvrModel::from_json(j.get("svr")?)?,
+            cv: match j.opt("cv") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(CvReport::from_json(v)?),
+            },
+            test_mae: opt_num("test_mae")?,
+            test_pae_pct: opt_num("test_pae_pct")?,
+        };
+        Ok((key, model))
+    }
+}
+
+/// A directory entry of [`ModelCache::entries`].
+#[derive(Debug, Clone)]
+pub struct CacheEntry {
+    pub key: ModelKey,
+    pub file: PathBuf,
+    pub bytes: u64,
+}
+
+/// The persistent trained-model store (one JSON file per key).
+///
+/// Writes go through a temp file + rename so concurrent readers (fleet
+/// members on the worker pool) never observe a torn entry.
+#[derive(Debug, Clone)]
+pub struct ModelCache {
+    dir: PathBuf,
+}
+
+impl ModelCache {
+    /// Open (creating if needed) a cache rooted at `dir`.
+    pub fn open(dir: &Path) -> Result<ModelCache> {
+        std::fs::create_dir_all(dir)?;
+        Ok(ModelCache {
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// The default cache location: `$ECOPT_CACHE_DIR` or `.ecopt-cache`.
+    pub fn default_dir() -> PathBuf {
+        match std::env::var("ECOPT_CACHE_DIR") {
+            Ok(d) if !d.is_empty() => PathBuf::from(d),
+            _ => PathBuf::from(".ecopt-cache"),
+        }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn path_for(&self, key: &ModelKey) -> PathBuf {
+        self.dir.join(key.file_name())
+    }
+
+    /// Look a key up. `Ok(None)` = miss; a present-but-corrupt entry is
+    /// an error (silent retraining would mask cache corruption), as is a
+    /// file whose embedded key disagrees with the requested one
+    /// (sanitization collision).
+    pub fn get(&self, key: &ModelKey) -> Result<Option<CachedModel>> {
+        let path = self.path_for(key);
+        if !path.exists() {
+            return Ok(None);
+        }
+        let (stored_key, model) = CachedModel::from_json_checked(&Json::parse(
+            &std::fs::read_to_string(&path)?,
+        )?)?;
+        if stored_key != *key {
+            return Err(Error::Json(format!(
+                "model cache collision: {} holds '{}', wanted '{}'",
+                path.display(),
+                stored_key.label(),
+                key.label()
+            )));
+        }
+        Ok(Some(model))
+    }
+
+    /// Store a bundle under `key` (atomic: temp file + rename).
+    pub fn put(&self, key: &ModelKey, model: &CachedModel) -> Result<()> {
+        let path = self.path_for(key);
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, model.to_json_with_key(key).dump()?)?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(())
+    }
+
+    /// All entries, sorted by file name (deterministic `ls` order).
+    pub fn entries(&self) -> Result<Vec<CacheEntry>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let entry = entry?;
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("json")
+                || !path
+                    .file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.ends_with(".model.json"))
+            {
+                continue;
+            }
+            let (key, _) = CachedModel::from_json_checked(&Json::parse(
+                &std::fs::read_to_string(&path)?,
+            )?)?;
+            out.push(CacheEntry {
+                key,
+                bytes: entry.metadata()?.len(),
+                file: path,
+            });
+        }
+        out.sort_by(|a, b| a.file.cmp(&b.file));
+        Ok(out)
+    }
+
+    /// Delete every entry (including temp files orphaned by an
+    /// interrupted `put`); returns how many files were removed.
+    pub fn clear(&self) -> Result<usize> {
+        let mut removed = 0;
+        for entry in std::fs::read_dir(&self.dir)? {
+            let path = entry?.path();
+            if path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.ends_with(".model.json") || n.ends_with(".model.json.tmp"))
+            {
+                std::fs::remove_file(&path)?;
+                removed += 1;
+            }
+        }
+        Ok(removed)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -410,7 +834,8 @@ mod tests {
             sockets: 1,
             watts: 260.5,
         };
-        let back = PowerObs::from_json(&Json::parse(&o.to_json().dump()).unwrap()).unwrap();
+        let back =
+            PowerObs::from_json(&Json::parse(&o.to_json().dump().unwrap()).unwrap()).unwrap();
         assert_eq!(back.f_mhz, 1800);
         assert_eq!(back.watts, 260.5);
     }
@@ -425,7 +850,8 @@ mod tests {
             energy_j: 16980.0,
             mean_power_w: 351.9,
         };
-        let back = CharSample::from_json(&Json::parse(&s.to_json().dump()).unwrap()).unwrap();
+        let back =
+            CharSample::from_json(&Json::parse(&s.to_json().dump().unwrap()).unwrap()).unwrap();
         assert_eq!(back.cores, 32);
         assert_eq!(back.time_s, 48.25);
         assert_eq!(back.energy_j, 16980.0);
@@ -445,7 +871,8 @@ mod tests {
             iterations: 128,
             n_support: 2,
         };
-        let back = SvrModel::from_json(&Json::parse(&m.to_json().dump()).unwrap()).unwrap();
+        let back =
+            SvrModel::from_json(&Json::parse(&m.to_json().dump().unwrap()).unwrap()).unwrap();
         assert_eq!(back.beta, m.beta);
         assert_eq!(back.scaler.means, m.scaler.means);
         assert_eq!(back.iterations, 128);
@@ -469,7 +896,8 @@ mod tests {
             proposed: run.clone(),
             ondemand_all: vec![run],
         };
-        let back = ComparisonRow::from_json(&Json::parse(&row.to_json().dump()).unwrap()).unwrap();
+        let parsed = Json::parse(&row.to_json().dump().unwrap()).unwrap();
+        let back = ComparisonRow::from_json(&parsed).unwrap();
         assert_eq!(back.app, "swaptions");
         assert_eq!(back.ondemand_all.len(), 1);
         assert_eq!(back.proposed_cores, 32);

@@ -15,9 +15,11 @@ use std::fmt::Write as _;
 
 use crate::arch::ArchProfile;
 use crate::config::{mhz_to_ghz, CampaignSpec};
+use crate::coordinator::replay::{ReplayResults, WorkloadReplay};
 use crate::coordinator::{AppResults, ExperimentResults, FleetResults};
 use crate::compare::pow2_core_counts;
 use crate::energy::EnergyModel;
+use crate::workloads::phases::PhaseClass;
 use crate::{Error, Result};
 
 /// Resolve the architecture a result bundle ran on: registry lookup by
@@ -368,6 +370,132 @@ pub fn fleet_report(fleet: &FleetResults) -> String {
         out.push_str(&headline(&m.results));
         out.push('\n');
     }
+    out
+}
+
+/// One workload's replay table: every governor, the model-in-the-loop
+/// `ecopt` governor, and the static oracle, with ecopt's savings against
+/// each row (the paper's savings columns, generalized to phase traces).
+pub fn replay_table(m: &WorkloadReplay) -> String {
+    let mut out = format!(
+        "# Replay: {} (input {})\n\
+         | Governor | E (kJ) | Time (s) | Mean f (GHz) | ecopt save (%) |\n\
+         |---|---|---|---|---|\n",
+        m.workload, m.input
+    );
+    for b in &m.baselines {
+        let _ = writeln!(
+            out,
+            "| {} | {:.3} | {:.1} | {:.2} | {:.2} |",
+            b.governor,
+            b.energy_j / 1000.0,
+            b.time_s,
+            b.mean_freq_ghz,
+            m.ecopt_save_vs(b.energy_j),
+        );
+    }
+    let _ = writeln!(
+        out,
+        "| **ecopt** | {:.3} | {:.1} | {:.2} | — |",
+        m.ecopt.energy_j / 1000.0,
+        m.ecopt.time_s,
+        m.ecopt.mean_freq_ghz,
+    );
+    // Ecopt's save vs the oracle is negative when the oracle was better.
+    let _ = writeln!(
+        out,
+        "| static oracle {:.1} GHz @ {}c | {:.3} | {:.1} | {:.2} | {:.2} |",
+        mhz_to_ghz(m.oracle.f_mhz),
+        m.oracle.cores,
+        m.oracle.energy_j / 1000.0,
+        m.oracle.time_s,
+        mhz_to_ghz(m.oracle.f_mhz),
+        m.ecopt_save_vs(m.oracle.energy_j),
+    );
+    out
+}
+
+/// Per-phase savings table: where the online governor's energy goes
+/// versus ondemand, one row per (workload, phase class).
+pub fn replay_phase_table(res: &ReplayResults) -> String {
+    let mut out = String::from(
+        "# Per-phase energy: ecopt vs ondemand (noise-free integrals)\n\
+         | Workload | Phase | ondemand E (kJ) | ecopt E (kJ) | save (%) | ondemand t (s) | ecopt t (s) |\n\
+         |---|---|---|---|---|---|---|\n",
+    );
+    for m in &res.members {
+        let od = match m.ondemand() {
+            Ok(o) => o,
+            Err(_) => continue,
+        };
+        for (k, name) in PhaseClass::NAMES.iter().enumerate() {
+            let e_od = od.energy_by_class[k];
+            let e_ec = m.ecopt.energy_by_class[k];
+            if e_od == 0.0 && e_ec == 0.0 {
+                continue;
+            }
+            let save = if e_ec > 0.0 { (e_od / e_ec - 1.0) * 100.0 } else { 0.0 };
+            let _ = writeln!(
+                out,
+                "| {} | {} | {:.3} | {:.3} | {:.2} | {:.1} | {:.1} |",
+                m.workload,
+                name,
+                e_od / 1000.0,
+                e_ec / 1000.0,
+                save,
+                od.time_by_class[k],
+                m.ecopt.time_by_class[k],
+            );
+        }
+    }
+    out
+}
+
+/// Headline of a replay: ecopt vs ondemand and vs the static oracle.
+pub fn replay_headline(res: &ReplayResults) -> String {
+    let n = res.members.len().max(1) as f64;
+    let avg_vs_ondemand: f64 = res
+        .members
+        .iter()
+        .filter_map(|m| m.ondemand().ok().map(|o| m.ecopt_save_vs(o.energy_j)))
+        .sum::<f64>()
+        / n;
+    let avg_vs_oracle: f64 = res
+        .members
+        .iter()
+        .map(|m| m.ecopt_save_vs(m.oracle.energy_j))
+        .sum::<f64>()
+        / n;
+    let switches: u64 = res.members.iter().map(|m| m.ecopt_switches).sum();
+    let fallbacks: u64 = res.members.iter().map(|m| m.ecopt_fallback_samples).sum();
+    format!(
+        "# Replay headline ({}, {} workloads)\n\
+         avg ecopt save vs ondemand:      {avg_vs_ondemand:.2}%\n\
+         avg ecopt save vs static oracle: {avg_vs_oracle:.2}%  (negative = oracle was better)\n\
+         total config switches:           {switches}\n\
+         stale-model fallback samples:    {fallbacks}\n",
+        res.arch,
+        res.members.len(),
+    )
+}
+
+/// Full phase-replay report (the `ecopt replay` output, uploaded as a CI
+/// artifact). Contains only cache-state-independent numbers — a
+/// warm-cache rerun must reproduce it byte for byte.
+pub fn replay_report(res: &ReplayResults) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "# Phase replay on {} — governors vs the model-in-the-loop ecopt governor\n",
+        res.arch
+    );
+    out.push_str(&replay_headline(res));
+    out.push('\n');
+    for m in &res.members {
+        out.push_str(&replay_table(m));
+        out.push('\n');
+    }
+    out.push_str(&replay_phase_table(res));
     out
 }
 

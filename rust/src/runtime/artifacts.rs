@@ -233,7 +233,7 @@ mod tests {
         let m = sample_manifest(dir.path());
         let spec = m.get("foo").unwrap();
         let back =
-            ArtifactSpec::from_json(&Json::parse(&spec.to_json().dump()).unwrap()).unwrap();
+            ArtifactSpec::from_json(&Json::parse(&spec.to_json().dump().unwrap()).unwrap()).unwrap();
         assert_eq!(back.inputs, spec.inputs);
         assert_eq!(back.file, spec.file);
     }

@@ -54,7 +54,8 @@ impl Json {
     }
 
     pub fn as_u32(&self) -> Result<u32> {
-        Ok(self.as_usize()? as u32)
+        let v = self.as_u64()?;
+        u32::try_from(v).map_err(|_| Error::Json(format!("u32 out of range: {v}")))
     }
 
     pub fn as_u64(&self) -> Result<u64> {
@@ -112,26 +113,35 @@ impl Json {
     // ----- writer --------------------------------------------------------
 
     /// Compact serialization.
-    pub fn dump(&self) -> String {
+    ///
+    /// JSON has no NaN/Inf literal; a non-finite number anywhere in the
+    /// document is an **error** (serializing it as `null` would silently
+    /// corrupt golden and cached model files — the reader later fails on
+    /// a missing number, or worse, treats the field as absent).
+    pub fn dump(&self) -> Result<String> {
         let mut s = String::new();
-        self.write(&mut s);
-        s
+        self.write(&mut s)?;
+        Ok(s)
     }
 
-    fn write(&self, out: &mut String) {
+    fn write(&self, out: &mut String) -> Result<()> {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.is_finite() {
-                    if n.fract() == 0.0 && n.abs() < 9e15 {
-                        let _ = write!(out, "{}", *n as i64);
-                    } else {
-                        // Round-trippable float formatting.
-                        let _ = write!(out, "{n:?}");
-                    }
+                if !n.is_finite() {
+                    return Err(Error::Json(format!(
+                        "cannot serialize non-finite number {n}"
+                    )));
+                }
+                // -0.0 must take the float path: the i64 cast would emit
+                // "0" and lose the sign bit, breaking bit-exact
+                // round-trips (the model cache's correctness contract).
+                if n.fract() == 0.0 && n.abs() < 9e15 && !(*n == 0.0 && n.is_sign_negative()) {
+                    let _ = write!(out, "{}", *n as i64);
                 } else {
-                    out.push_str("null"); // JSON has no NaN/Inf
+                    // Round-trippable float formatting.
+                    let _ = write!(out, "{n:?}");
                 }
             }
             Json::Str(s) => write_escaped(s, out),
@@ -141,7 +151,7 @@ impl Json {
                     if i > 0 {
                         out.push(',');
                     }
-                    v.write(out);
+                    v.write(out)?;
                 }
                 out.push(']');
             }
@@ -153,11 +163,12 @@ impl Json {
                     }
                     write_escaped(k, out);
                     out.push(':');
-                    v.write(out);
+                    v.write(out)?;
                 }
                 out.push('}');
             }
         }
+        Ok(())
     }
 
     // ----- parser ---------------------------------------------------------
@@ -297,12 +308,39 @@ fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
                     Some(b'b') => out.push('\u{8}'),
                     Some(b'f') => out.push('\u{c}'),
                     Some(b'u') => {
-                        let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])
-                            .map_err(|_| Error::Json("bad \\u escape".into()))?;
-                        let cp = u32::from_str_radix(hex, 16)
-                            .map_err(|_| Error::Json("bad \\u escape".into()))?;
-                        out.push(char::from_u32(cp).unwrap_or('\u{FFFD}'));
+                        // *pos is at the 'u'; four hex digits follow. Lone
+                        // BMP code units decode directly; UTF-16 surrogate
+                        // halves must arrive as a high+low pair (this is
+                        // how JSON encodes astral chars like emoji) and
+                        // are combined; an unpaired half is an error, not
+                        // U+FFFD — silently replacing it corrupts strings.
+                        let cp = parse_hex4(b, *pos + 1)?;
                         *pos += 4;
+                        let scalar = if (0xD800..=0xDBFF).contains(&cp) {
+                            if b.get(*pos + 1) != Some(&b'\\') || b.get(*pos + 2) != Some(&b'u') {
+                                return Err(Error::Json(
+                                    "unpaired high surrogate in \\u escape".into(),
+                                ));
+                            }
+                            let lo = parse_hex4(b, *pos + 3)?;
+                            if !(0xDC00..=0xDFFF).contains(&lo) {
+                                return Err(Error::Json(
+                                    "unpaired high surrogate in \\u escape".into(),
+                                ));
+                            }
+                            *pos += 6;
+                            0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00)
+                        } else if (0xDC00..=0xDFFF).contains(&cp) {
+                            return Err(Error::Json(
+                                "lone low surrogate in \\u escape".into(),
+                            ));
+                        } else {
+                            cp
+                        };
+                        out.push(
+                            char::from_u32(scalar)
+                                .ok_or_else(|| Error::Json("bad \\u escape".into()))?,
+                        );
                     }
                     _ => return Err(Error::Json("bad escape".into())),
                 }
@@ -320,6 +358,18 @@ fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
             }
         }
     }
+}
+
+/// Four hex digits at `b[start..start + 4]` as a code unit. Strictly
+/// hex digits only (`from_str_radix` alone would also accept a leading
+/// `+`, silently mis-consuming invalid escapes like `\u+abc`).
+fn parse_hex4(b: &[u8], start: usize) -> Result<u32> {
+    let end = start + 4;
+    if end > b.len() || !b[start..end].iter().all(|c| c.is_ascii_hexdigit()) {
+        return Err(Error::Json("bad \\u escape".into()));
+    }
+    let hex = std::str::from_utf8(&b[start..end]).expect("hex digits are ascii");
+    u32::from_str_radix(hex, 16).map_err(|_| Error::Json("bad \\u escape".into()))
 }
 
 fn utf8_len(first: u8) -> usize {
@@ -392,7 +442,7 @@ mod tests {
     fn roundtrip_scalars() {
         for text in ["null", "true", "false", "0", "-1.5", "1e3", "\"hi\""] {
             let v = Json::parse(text).unwrap();
-            let again = Json::parse(&v.dump()).unwrap();
+            let again = Json::parse(&v.dump().unwrap()).unwrap();
             assert_eq!(v, again, "{text}");
         }
     }
@@ -401,7 +451,7 @@ mod tests {
     fn roundtrip_nested() {
         let text = r#"{"a": [1, 2, {"b": "x\ny", "c": null}], "d": -3.25}"#;
         let v = Json::parse(text).unwrap();
-        let again = Json::parse(&v.dump()).unwrap();
+        let again = Json::parse(&v.dump().unwrap()).unwrap();
         assert_eq!(v, again);
         assert_eq!(v.get("d").unwrap().as_f64().unwrap(), -3.25);
         assert_eq!(
@@ -417,7 +467,7 @@ mod tests {
     #[test]
     fn float_roundtrip_precision() {
         let v = Json::Num(0.1 + 0.2);
-        let back = Json::parse(&v.dump()).unwrap();
+        let back = Json::parse(&v.dump().unwrap()).unwrap();
         assert_eq!(back.as_f64().unwrap(), 0.1 + 0.2);
     }
 
@@ -448,7 +498,66 @@ mod tests {
     }
 
     #[test]
-    fn nan_serializes_as_null() {
-        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+    fn non_finite_numbers_are_rejected() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert!(Json::Num(bad).dump().is_err(), "{bad} must not serialize");
+            // ...anywhere in a document, not just at the top level.
+            let nested = Json::obj(vec![("x", Json::Arr(vec![Json::Num(1.0), Json::Num(bad)]))]);
+            assert!(nested.dump().is_err(), "nested {bad} must not serialize");
+        }
+    }
+
+    #[test]
+    fn negative_zero_roundtrips_bit_exactly() {
+        let v = Json::Num(-0.0);
+        let text = v.dump().unwrap();
+        assert_eq!(text, "-0.0");
+        let back = Json::parse(&text).unwrap().as_f64().unwrap();
+        assert_eq!(back.to_bits(), (-0.0f64).to_bits(), "sign bit lost");
+        // Positive zero keeps the compact integer form.
+        assert_eq!(Json::Num(0.0).dump().unwrap(), "0");
+    }
+
+    #[test]
+    fn u32_range_checked() {
+        let max = Json::Num(u32::MAX as f64);
+        assert_eq!(max.as_u32().unwrap(), u32::MAX);
+        let over = Json::Num(u32::MAX as f64 + 1.0);
+        assert!(over.as_u32().is_err(), "u32::MAX + 1 must not truncate");
+        assert_eq!(over.as_u64().unwrap(), u32::MAX as u64 + 1);
+        assert!(Json::Num(-1.0).as_u32().is_err());
+        assert!(Json::Num(1.5).as_u32().is_err());
+    }
+
+    #[test]
+    fn surrogate_pairs_combine() {
+        // U+1F600 GRINNING FACE as a JSON surrogate pair.
+        let v = Json::parse("\"\\ud83d\\ude00\"").unwrap();
+        assert_eq!(v.as_str().unwrap(), "\u{1F600}");
+        // The writer emits it as raw UTF-8, which round-trips unchanged.
+        let back = Json::parse(&v.dump().unwrap()).unwrap();
+        assert_eq!(back, v);
+        // Uppercase hex digits are fine too.
+        let v2 = Json::parse("\"\\uD83D\\uDE00!\"").unwrap();
+        assert_eq!(v2.as_str().unwrap(), "\u{1F600}!");
+    }
+
+    #[test]
+    fn unpaired_surrogates_are_rejected() {
+        for bad in [
+            r#""\ud83d""#,        // lone high at end
+            r#""\ud83d x""#,      // high followed by plain text
+            r#""\ud83d\n""#,      // high followed by a non-\u escape
+            r#""\ude00""#,        // lone low
+            r#""\ud83d\ud83d""#,  // high followed by another high
+        ] {
+            assert!(Json::parse(bad).is_err(), "{bad} must be rejected");
+        }
+        // Truncated escapes error instead of panicking.
+        assert!(Json::parse(r#""\u12"#).is_err());
+        assert!(Json::parse(r#""\ud83d\u12"#).is_err());
+        // Strict hex: a sign is not a hex digit.
+        assert!(Json::parse(r#""\u+abc""#).is_err());
+        assert!(Json::parse(r#""\u00-1""#).is_err());
     }
 }

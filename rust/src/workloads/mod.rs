@@ -21,6 +21,7 @@
 //! holds (who wins, optimal p per app/input, ondemand best/worst spread);
 //! see DESIGN.md §2 for the substitution rationale.
 
+pub mod phases;
 pub mod runner;
 
 use crate::config::{mhz_to_ghz, Mhz};

@@ -1,0 +1,684 @@
+//! Phase-shifting synthetic workloads + the phase-trace simulator.
+//!
+//! The paper's comparison (and PR 1/2's pipelines) run *steady* PARSEC
+//! analogues: one scalability profile for the whole run. Realistic HPC
+//! jobs alternate regimes — dense compute kernels, memory-bound sweeps,
+//! idle waits on I/O or neighbors — and that is exactly where an online
+//! governor earns (or loses) its keep. This module models such jobs as a
+//! cyclic schedule of three phase classes:
+//!
+//! * [`PhaseClass::Compute`]: frequency-sensitive, scales with cores
+//!   (Amdahl-style `sync_rel` overhead), presents near-saturated load;
+//! * [`PhaseClass::Memory`]: frequency-**insensitive** (the §1
+//!   observation), bandwidth-saturated beyond `mem_bw_cores` cores,
+//!   presents a constant mid-range load (stalls count as busy in Linux
+//!   load accounting, but the blend sits well below saturation);
+//! * [`PhaseClass::Idle`]: pure wall-clock wait, near-zero load.
+//!
+//! [`replay_run`] executes one workload under any [`Governor`] with the
+//! same tick/feedback/IPMI machinery as `workloads::runner`, but honours
+//! **dynamic hotplug**: a governor that takes cores offline mid-run (the
+//! `EcoptGovernor`) changes both the progress rate and the power draw
+//! from the next slice on. Per-class wall-time and (noise-free)
+//! energy breakdowns are recorded so reports can attribute savings to
+//! phases.
+
+use crate::config::{mhz_to_ghz, Mhz};
+use crate::governors::Governor;
+use crate::node::power::PowerProcess;
+use crate::node::Node;
+use crate::sensors::IpmiMeter;
+use crate::util::rng::Rng;
+use crate::workloads::F_REF_GHZ;
+use crate::{Error, Result};
+
+/// The three execution regimes a phase-shifting job cycles through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PhaseClass {
+    Compute,
+    Memory,
+    Idle,
+}
+
+impl PhaseClass {
+    /// Stable index for per-class accounting arrays.
+    pub fn index(self) -> usize {
+        match self {
+            PhaseClass::Compute => 0,
+            PhaseClass::Memory => 1,
+            PhaseClass::Idle => 2,
+        }
+    }
+
+    pub const NAMES: [&'static str; 3] = ["compute", "memory", "idle"];
+}
+
+/// One segment of the phase schedule. `work` is core-seconds at
+/// [`F_REF_GHZ`] for Compute/Memory and wall-clock seconds for Idle.
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseSegment {
+    pub class: PhaseClass,
+    pub work: f64,
+}
+
+/// A phase-shifting synthetic workload: `cycles` repetitions of
+/// `pattern`, with Compute/Memory work scaled geometrically by the input
+/// size (`input_scale^(n-1)`, matching the PARSEC analogues' convention).
+#[derive(Debug, Clone)]
+pub struct PhasedWorkload {
+    pub name: String,
+    pub pattern: Vec<PhaseSegment>,
+    pub cycles: u32,
+    pub input_scale: f64,
+    /// Memory-bound fraction of *compute* phases (small: they respond
+    /// to DVFS almost fully).
+    pub compute_mem_frac: f64,
+    /// Relative per-core parallelization overhead of compute phases.
+    pub sync_rel: f64,
+    /// Cores beyond this count add no memory-phase throughput (the
+    /// bandwidth wall) — they only add power.
+    pub mem_bw_cores: usize,
+    /// Governor-visible utilization during memory phases (constant in f:
+    /// the stall time is frequency-invariant).
+    pub mem_util: f64,
+    /// Governor-visible utilization during idle phases.
+    pub idle_util: f64,
+}
+
+impl PhasedWorkload {
+    /// Work multiplier for input size `n` (1-based).
+    pub fn input_factor(&self, input: u32) -> f64 {
+        assert!(input >= 1, "input sizes are 1-based");
+        self.input_scale.powi(input as i32 - 1)
+    }
+
+    /// Compute-phase speed ratio at `f` relative to [`F_REF_GHZ`].
+    pub fn compute_speed_ratio(&self, f: Mhz) -> f64 {
+        let fg = mhz_to_ghz(f);
+        1.0 / ((1.0 - self.compute_mem_frac) * (F_REF_GHZ / fg) + self.compute_mem_frac)
+    }
+
+    /// The full flattened phase trace for one run at input `n`.
+    pub fn trace(&self, input: u32) -> Vec<PhaseSegment> {
+        let k = self.input_factor(input);
+        let mut out = Vec::with_capacity(self.pattern.len() * self.cycles as usize);
+        for _ in 0..self.cycles {
+            for seg in &self.pattern {
+                let work = match seg.class {
+                    // Idle waits don't grow with the problem size.
+                    PhaseClass::Idle => seg.work,
+                    _ => seg.work * k,
+                };
+                if work > 0.0 {
+                    out.push(PhaseSegment {
+                        class: seg.class,
+                        work,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    /// Closed-form execution time at a *fixed* configuration — the value
+    /// the tick simulator converges to as dt → 0 (tests + the fast
+    /// characterization path use this as a cross-check).
+    pub fn exec_time(&self, f: Mhz, p: usize, input: u32) -> f64 {
+        assert!(p >= 1);
+        let k = self.input_factor(input);
+        let compute_rate =
+            self.compute_speed_ratio(f) * p as f64 / (1.0 + self.sync_rel * (p as f64 - 1.0));
+        let mem_rate = p.min(self.mem_bw_cores) as f64;
+        let mut t = 0.0;
+        for seg in &self.pattern {
+            t += match seg.class {
+                PhaseClass::Compute => seg.work * k / compute_rate,
+                PhaseClass::Memory => seg.work * k / mem_rate,
+                PhaseClass::Idle => seg.work,
+            };
+        }
+        t * self.cycles as f64
+    }
+
+    /// Canonical definition string for cache digests: EVERY field that
+    /// shapes the trace or the model trained on it. Editing any workload
+    /// parameter must change this string, or a persistent model cache
+    /// would keep serving the model of the old definition.
+    pub fn digest_string(&self) -> String {
+        let segs: Vec<String> = self
+            .pattern
+            .iter()
+            .map(|s| format!("{:?}:{}", s.class, s.work))
+            .collect();
+        format!(
+            "{}|{}|cycles{}|scale{}|mf{}|sync{}|bw{}|mu{}|iu{}",
+            self.name,
+            segs.join(","),
+            self.cycles,
+            self.input_scale,
+            self.compute_mem_frac,
+            self.sync_rel,
+            self.mem_bw_cores,
+            self.mem_util,
+            self.idle_util,
+        )
+    }
+
+    /// Validate invariants; returns self for chaining.
+    pub fn validate(self) -> Result<Self> {
+        if self.pattern.is_empty() || self.cycles == 0 {
+            return Err(Error::Config(format!(
+                "phased workload '{}' has an empty schedule",
+                self.name
+            )));
+        }
+        if self.mem_bw_cores == 0 || self.input_scale < 1.0 {
+            return Err(Error::Config(format!(
+                "phased workload '{}' has bad parameters",
+                self.name
+            )));
+        }
+        Ok(self)
+    }
+}
+
+/// The built-in phase-shifting suite. Work sizes are calibrated so a
+/// cycle lasts tens of seconds at mid-grid configurations — long against
+/// the 100 ms governor cadence, short enough for quick CI replays.
+pub fn phase_suite() -> Vec<PhasedWorkload> {
+    vec![
+        // Classic kernel/sweep alternation: big compute bursts separated
+        // by bandwidth-bound stencil sweeps and a short result flush.
+        PhasedWorkload {
+            name: "burst-sweep".into(),
+            pattern: vec![
+                PhaseSegment {
+                    class: PhaseClass::Compute,
+                    work: 320.0,
+                },
+                PhaseSegment {
+                    class: PhaseClass::Memory,
+                    work: 90.0,
+                },
+                PhaseSegment {
+                    class: PhaseClass::Idle,
+                    work: 12.0,
+                },
+            ],
+            cycles: 4,
+            input_scale: 1.6,
+            compute_mem_frac: 0.05,
+            sync_rel: 0.015,
+            mem_bw_cores: 6,
+            mem_util: 0.55,
+            idle_util: 0.03,
+        },
+        // Memory-dominated analytics loop with a small compute epilogue
+        // and an I/O flush between waves: most of the trace is
+        // frequency-insensitive.
+        PhasedWorkload {
+            name: "mem-wave".into(),
+            pattern: vec![
+                PhaseSegment {
+                    class: PhaseClass::Memory,
+                    work: 200.0,
+                },
+                PhaseSegment {
+                    class: PhaseClass::Compute,
+                    work: 80.0,
+                },
+                PhaseSegment {
+                    class: PhaseClass::Idle,
+                    work: 10.0,
+                },
+            ],
+            cycles: 5,
+            input_scale: 1.5,
+            compute_mem_frac: 0.10,
+            sync_rel: 0.020,
+            mem_bw_cores: 4,
+            mem_util: 0.60,
+            idle_util: 0.03,
+        },
+        // Bursty duty-cycled service: compute bursts with long idle gaps
+        // (the regime where reactive governors waste the most energy
+        // keeping the whole node lit).
+        PhasedWorkload {
+            name: "duty-cycle".into(),
+            pattern: vec![
+                PhaseSegment {
+                    class: PhaseClass::Compute,
+                    work: 240.0,
+                },
+                PhaseSegment {
+                    class: PhaseClass::Idle,
+                    work: 25.0,
+                },
+                PhaseSegment {
+                    class: PhaseClass::Memory,
+                    work: 40.0,
+                },
+                PhaseSegment {
+                    class: PhaseClass::Idle,
+                    work: 15.0,
+                },
+            ],
+            cycles: 4,
+            input_scale: 1.4,
+            compute_mem_frac: 0.08,
+            sync_rel: 0.010,
+            mem_bw_cores: 8,
+            mem_util: 0.50,
+            idle_util: 0.02,
+        },
+    ]
+}
+
+/// Look up a phase-shifting workload by name.
+pub fn phased_by_name(name: &str) -> Result<PhasedWorkload> {
+    phase_suite()
+        .into_iter()
+        .find(|w| w.name == name)
+        .ok_or_else(|| Error::UnknownWorkload(name.to_string()))
+}
+
+/// Simulator knobs for one replay run (a trimmed [`super::runner::RunConfig`]:
+/// phased runs have no `threads` fan-out of their own).
+#[derive(Debug, Clone)]
+pub struct ReplayRunConfig {
+    pub dt: f64,
+    pub work_noise: f64,
+    pub seed: u64,
+    pub max_sim_s: f64,
+}
+
+impl Default for ReplayRunConfig {
+    fn default() -> Self {
+        ReplayRunConfig {
+            dt: 0.1,
+            work_noise: 0.01,
+            seed: 1,
+            max_sim_s: 1_000_000.0,
+        }
+    }
+}
+
+/// Observables of one phase-trace run.
+#[derive(Debug, Clone)]
+pub struct ReplayRunResult {
+    pub workload: String,
+    pub input: u32,
+    pub governor: String,
+    pub wall_time_s: f64,
+    /// IPMI trapezoid-integrated energy, joules.
+    pub energy_j: f64,
+    pub mean_power_w: f64,
+    /// Time-weighted mean frequency over online cores, GHz.
+    pub mean_freq_ghz: f64,
+    /// Wall-clock seconds spent per phase class (compute, memory, idle).
+    pub time_by_class: [f64; 3],
+    /// Noise-free energy integral per phase class, joules. Sums to the
+    /// deterministic part of `energy_j` (the meter adds noise/drift and
+    /// quantization on top).
+    pub energy_by_class: [f64; 3],
+}
+
+/// Per-class observed utilization, with the same frequency feedback as
+/// the steady runner: compute demand rescales with `f_max / f`, memory
+/// stall time is frequency-invariant, idle is idle.
+fn apply_class_utils(node: &mut Node, w: &PhasedWorkload, class: PhaseClass) {
+    let f_max = *node.ladder().last().expect("non-empty ladder") as f64;
+    let total = node.total_cores();
+    for c in 0..total {
+        if !node.is_online(c) {
+            continue;
+        }
+        let u = match class {
+            PhaseClass::Compute => (0.97 * f_max / node.freq(c) as f64).min(1.0),
+            PhaseClass::Memory => w.mem_util,
+            PhaseClass::Idle => w.idle_util,
+        };
+        node.set_util(c, u);
+    }
+}
+
+/// Work consumption rate of the current phase at the node's *current*
+/// DVFS/hotplug state. Compute/Memory: core-seconds (at f_ref on the
+/// reference core) per second; Idle: 1 (wall-clock).
+fn class_rate(node: &Node, w: &PhasedWorkload, class: PhaseClass) -> f64 {
+    match class {
+        PhaseClass::Compute => {
+            let mut sum = 0.0;
+            let mut p = 0usize;
+            for c in 0..node.total_cores() {
+                if node.is_online(c) {
+                    sum += w.compute_speed_ratio(node.freq(c)) * node.core_perf(c);
+                    p += 1;
+                }
+            }
+            sum / (1.0 + w.sync_rel * (p.max(1) as f64 - 1.0))
+        }
+        PhaseClass::Memory => {
+            // Bandwidth wall: only the first `mem_bw_cores` online cores
+            // contribute throughput (weighted by their perf scale);
+            // frequency contributes nothing.
+            let mut eff = 0.0;
+            let mut counted = 0usize;
+            for c in 0..node.total_cores() {
+                if node.is_online(c) && counted < w.mem_bw_cores {
+                    eff += node.core_perf(c);
+                    counted += 1;
+                }
+            }
+            eff.max(f64::MIN_POSITIVE)
+        }
+        PhaseClass::Idle => 1.0,
+    }
+}
+
+/// Run one phase-shifting workload under a governor, honouring dynamic
+/// DVFS **and hotplug** decisions each sampling period.
+///
+/// The node starts with all cores online at maximum frequency (Linux
+/// boot state); governors that cannot hotplug simply govern the full
+/// complement, exactly like the kernel.
+pub fn replay_run(
+    node: &mut Node,
+    governor: &mut dyn Governor,
+    power: &PowerProcess,
+    workload: &PhasedWorkload,
+    input: u32,
+    cfg: &ReplayRunConfig,
+) -> Result<ReplayRunResult> {
+    node.set_online_cores(node.total_cores())?;
+    node.set_freq_all(*node.ladder().last().expect("non-empty ladder"))?;
+    governor.reset();
+
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let jitter = 1.0 + (rng.f64() * 2.0 - 1.0) * 3.0f64.sqrt() * cfg.work_noise;
+    let mut phases = workload.trace(input);
+    for ph in &mut phases {
+        ph.work *= jitter;
+    }
+
+    let mut meter = IpmiMeter::from_spec(node.sensor(), cfg.seed ^ 0x9E37_79B9_7F4A_7C15);
+    let mut t = 0.0f64;
+    let mut freq_time_integral = 0.0f64;
+    let mut gov_window = f64::INFINITY; // force a sample on the first tick
+    let mut util_accum = vec![0.0f64; node.total_cores()];
+    let mut phase_idx = 0usize;
+    let mut remaining = phases.first().map(|p| p.work).unwrap_or(0.0);
+    let mut time_by_class = [0.0f64; 3];
+    let mut energy_by_class = [0.0f64; 3];
+
+    let is_static = governor.sampling_period_s().is_infinite();
+    let dt = if is_static { cfg.dt.max(1.0) } else { cfg.dt };
+
+    // Per-slice caches, invalidated on phase change or governor action
+    // (which may move frequencies AND the online set).
+    let mut cached_class: Option<PhaseClass> = None;
+    let mut cached_rate = 0.0f64;
+    let mut cached_watts = power.base_watts(node);
+    let mut cached_freq_ghz = node.mean_online_freq_ghz();
+
+    while phase_idx < phases.len() {
+        if t > cfg.max_sim_s {
+            return Err(Error::Data(format!(
+                "replay exceeded {} simulated seconds ({} n={} under {})",
+                cfg.max_sim_s,
+                workload.name,
+                input,
+                governor.name()
+            )));
+        }
+
+        // (1) Governor cadence: observes window-averaged load over the
+        // cores that are CURRENTLY online, then may retune f and p.
+        gov_window += dt;
+        if gov_window >= governor.sampling_period_s() {
+            for c in 0..node.total_cores() {
+                if node.is_online(c) {
+                    node.set_util(c, (util_accum[c] / gov_window).min(1.0));
+                }
+            }
+            governor.sample(node)?;
+            util_accum.iter_mut().for_each(|u| *u = 0.0);
+            gov_window = 0.0;
+            cached_class = None; // frequencies/online set may have moved
+            cached_freq_ghz = node.mean_online_freq_ghz();
+        }
+
+        // (2) Progress work within this tick, possibly crossing phases.
+        let mut budget = dt;
+        while budget > 0.0 && phase_idx < phases.len() {
+            let class = phases[phase_idx].class;
+            if cached_class != Some(class) {
+                apply_class_utils(node, workload, class);
+                cached_rate = class_rate(node, workload, class);
+                cached_watts = power.base_watts(node);
+                cached_class = Some(class);
+            }
+            let rate = cached_rate;
+            let t_finish = if rate > 0.0 { remaining / rate } else { f64::INFINITY };
+            let slice = t_finish.min(budget);
+            if !is_static {
+                for c in 0..node.total_cores() {
+                    if node.is_online(c) {
+                        util_accum[c] += node.util(c) * slice;
+                    }
+                }
+            }
+            meter.advance(node, power, t + (dt - budget), slice);
+            freq_time_integral += cached_freq_ghz * slice;
+            let k = class.index();
+            time_by_class[k] += slice;
+            energy_by_class[k] += cached_watts * slice;
+            if t_finish <= budget {
+                budget -= t_finish;
+                phase_idx += 1;
+                remaining = phases.get(phase_idx).map(|p| p.work).unwrap_or(0.0);
+            } else {
+                remaining -= rate * budget;
+                budget = 0.0;
+            }
+        }
+
+        t += dt - budget.max(0.0);
+        if budget > 0.0 {
+            break;
+        }
+    }
+
+    let energy = meter.energy_joules();
+    Ok(ReplayRunResult {
+        workload: workload.name.clone(),
+        input,
+        governor: governor.name().to_string(),
+        wall_time_s: t,
+        energy_j: energy,
+        mean_power_w: if t > 0.0 { energy / t } else { 0.0 },
+        mean_freq_ghz: if t > 0.0 { freq_time_integral / t } else { 0.0 },
+        time_by_class,
+        energy_by_class,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{NodeSpec, PowerProcessSpec};
+    use crate::governors::{by_name, Userspace};
+
+    fn quiet_node() -> (Node, PowerProcess) {
+        let mut spec = NodeSpec::default();
+        spec.power = PowerProcessSpec {
+            noise_w: 0.0,
+            drift_w: 0.0,
+            ..spec.power
+        };
+        let pp = PowerProcess::new(spec.power.clone());
+        (Node::new(spec).unwrap(), pp)
+    }
+
+    fn noiseless_cfg() -> ReplayRunConfig {
+        ReplayRunConfig {
+            dt: 0.05,
+            work_noise: 0.0,
+            seed: 3,
+            max_sim_s: 1e6,
+        }
+    }
+
+    #[test]
+    fn suite_is_valid_and_covers_all_classes() {
+        let suite = phase_suite();
+        assert!(suite.len() >= 3);
+        for w in suite {
+            let w = w.validate().unwrap();
+            let classes: Vec<PhaseClass> = w.trace(1).iter().map(|s| s.class).collect();
+            assert!(classes.contains(&PhaseClass::Compute), "{}", w.name);
+            assert!(
+                classes.contains(&PhaseClass::Memory) || classes.contains(&PhaseClass::Idle),
+                "{}",
+                w.name
+            );
+        }
+        assert!(phased_by_name("burst-sweep").is_ok());
+        assert!(phased_by_name("nope").is_err());
+    }
+
+    #[test]
+    fn digest_string_tracks_every_parameter() {
+        // Any edit to a workload definition must change its digest, or a
+        // persistent model cache would serve the old definition's model.
+        let base = phased_by_name("burst-sweep").unwrap();
+        let d0 = base.digest_string();
+        let mut w = base.clone();
+        w.pattern[0].work += 1.0;
+        assert_ne!(w.digest_string(), d0, "segment work not digested");
+        let mut w = base.clone();
+        w.mem_bw_cores += 1;
+        assert_ne!(w.digest_string(), d0, "bandwidth cap not digested");
+        let mut w = base.clone();
+        w.sync_rel += 0.001;
+        assert_ne!(w.digest_string(), d0, "sync overhead not digested");
+        let mut w = base.clone();
+        w.input_scale += 0.01;
+        assert_ne!(w.digest_string(), d0, "input scale not digested");
+        let mut w = base.clone();
+        w.cycles += 1;
+        assert_ne!(w.digest_string(), d0, "cycle count not digested");
+    }
+
+    #[test]
+    fn input_scales_compute_but_not_idle() {
+        let w = phased_by_name("burst-sweep").unwrap();
+        let t1 = w.trace(1);
+        let t3 = w.trace(3);
+        assert_eq!(t1.len(), t3.len());
+        for (a, b) in t1.iter().zip(&t3) {
+            match a.class {
+                PhaseClass::Idle => assert_eq!(a.work, b.work),
+                _ => assert!(b.work > a.work * 2.0, "{:?}", a.class),
+            }
+        }
+    }
+
+    #[test]
+    fn pinned_config_run_matches_closed_form() {
+        let (mut node, pp) = quiet_node();
+        let w = phased_by_name("burst-sweep").unwrap();
+        let cfg = noiseless_cfg();
+        for (f, p) in [(2200u32, 8usize), (1200, 4), (1800, 16)] {
+            let mut gov = crate::governors::Pinned::new(f, p);
+            let r = replay_run(&mut node, &mut gov, &pp, &w, 2, &cfg).unwrap();
+            let want = w.exec_time(f, p, 2);
+            let err = (r.wall_time_s - want).abs() / want;
+            assert!(
+                err < 0.02,
+                "f={f} p={p}: simulated {} vs analytic {want}",
+                r.wall_time_s
+            );
+        }
+    }
+
+    #[test]
+    fn memory_phase_is_frequency_insensitive() {
+        let w = phased_by_name("mem-wave").unwrap();
+        // Pure memory share of exec time: compare total times at two
+        // frequencies — only the compute epilogue should shrink.
+        let t_low = w.exec_time(1200, 8, 1);
+        let t_high = w.exec_time(2200, 8, 1);
+        let compute_low = 80.0 * 5.0
+            / (w.compute_speed_ratio(1200) * 8.0 / (1.0 + w.sync_rel * 7.0));
+        let compute_high = 80.0 * 5.0
+            / (w.compute_speed_ratio(2200) * 8.0 / (1.0 + w.sync_rel * 7.0));
+        let mem_low = t_low - compute_low;
+        let mem_high = t_high - compute_high;
+        assert!(
+            (mem_low - mem_high).abs() < 1e-9,
+            "memory time moved with f: {mem_low} vs {mem_high}"
+        );
+    }
+
+    #[test]
+    fn bandwidth_wall_caps_memory_speedup() {
+        let w = phased_by_name("mem-wave").unwrap(); // bw wall at 4 cores
+        let t4 = w.exec_time(2200, 4, 1);
+        let t32 = w.exec_time(2200, 32, 1);
+        // 32 cores only accelerate the compute epilogue.
+        let mem_time = 200.0 * 5.0 / 4.0;
+        assert!(t4 > mem_time && t32 > mem_time);
+        assert!(t4 - t32 < 0.3 * t4, "speedup should be capped: {t4} vs {t32}");
+    }
+
+    #[test]
+    fn per_class_accounting_sums_to_totals() {
+        let (mut node, pp) = quiet_node();
+        let w = phased_by_name("duty-cycle").unwrap();
+        let mut gov = by_name("ondemand", &node).unwrap();
+        let r = replay_run(&mut node, &mut gov, &pp, &w, 1, &noiseless_cfg()).unwrap();
+        let t_sum: f64 = r.time_by_class.iter().sum();
+        assert!((t_sum - r.wall_time_s).abs() < 1e-6, "{t_sum} vs {}", r.wall_time_s);
+        let e_sum: f64 = r.energy_by_class.iter().sum();
+        // Noise-free process, 1 Hz quantized meter: the trapezoid across
+        // phase-boundary power steps costs a few percent at most.
+        assert!(
+            (e_sum - r.energy_j).abs() / r.energy_j < 0.05,
+            "class energy {e_sum} vs metered {}",
+            r.energy_j
+        );
+        assert!(r.time_by_class[PhaseClass::Idle.index()] > 0.0);
+    }
+
+    #[test]
+    fn ondemand_sinks_during_idle_phases() {
+        let (mut node, pp) = quiet_node();
+        let w = phased_by_name("duty-cycle").unwrap();
+        let mut gov = by_name("ondemand", &node).unwrap();
+        let r = replay_run(&mut node, &mut gov, &pp, &w, 1, &noiseless_cfg()).unwrap();
+        // Mean frequency must sit strictly inside the ladder: racing in
+        // compute bursts, sinking in idle gaps.
+        assert!(
+            r.mean_freq_ghz > 1.2 && r.mean_freq_ghz < 2.3,
+            "mean f {}",
+            r.mean_freq_ghz
+        );
+    }
+
+    #[test]
+    fn noise_seeds_perturb_wall_time() {
+        let (mut node, pp) = quiet_node();
+        let w = phased_by_name("burst-sweep").unwrap();
+        let mut cfg = ReplayRunConfig {
+            work_noise: 0.05,
+            ..noiseless_cfg()
+        };
+        let mut gov = Userspace::new(2200);
+        cfg.seed = 10;
+        let a = replay_run(&mut node, &mut gov, &pp, &w, 1, &cfg).unwrap().wall_time_s;
+        cfg.seed = 11;
+        let b = replay_run(&mut node, &mut gov, &pp, &w, 1, &cfg).unwrap().wall_time_s;
+        assert!((a - b).abs() > 1e-9, "seeds must differ: {a} vs {b}");
+    }
+}

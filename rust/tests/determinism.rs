@@ -40,7 +40,7 @@ fn pipeline_json(apps: &[&str], threads: usize) -> String {
         max_sim_s: 1e6,
         threads,
     });
-    coord.run_all().unwrap().to_json().dump()
+    coord.run_all().unwrap().to_json().dump().unwrap()
 }
 
 #[test]
@@ -99,6 +99,7 @@ fn fleet_json(threads: usize) -> String {
         .unwrap()
         .to_json()
         .dump()
+        .unwrap()
 }
 
 #[test]

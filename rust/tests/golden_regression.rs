@@ -42,7 +42,7 @@ fn golden_required() -> bool {
 /// failing (one CI run must generate every golden, not one per rerun);
 /// returns `None` when the file existed and matched.
 fn check_golden(path: &std::path::Path, rows: &[(String, u32, u32, usize)]) -> Option<String> {
-    let observed = rows_to_json(rows).dump();
+    let observed = rows_to_json(rows).dump().unwrap();
     if !path.exists() {
         std::fs::create_dir_all(path.parent().unwrap()).unwrap();
         std::fs::write(path, &observed).unwrap();

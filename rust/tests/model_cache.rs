@@ -1,0 +1,237 @@
+//! Persistent model cache: bitwise round-trip guarantees, key hygiene,
+//! and warm-cache pipeline behaviour (ISSUE 3 satellites).
+
+use ecopt::config::{CampaignSpec, ExperimentConfig, SvrSpec};
+use ecopt::coordinator::Coordinator;
+use ecopt::persist::{config_digest, CachedModel, ModelCache, ModelKey};
+use ecopt::powermodel::PowerModel;
+use ecopt::svr::{SvrModel, TrainSample};
+use ecopt::util::json::ToJson;
+use ecopt::util::tempdir::TempDir;
+use ecopt::workloads::runner::RunConfig;
+
+/// A genuinely-trained small SVR (not handcrafted): the round-trip must
+/// survive real solver output, irrational coefficients and all.
+fn trained_model() -> SvrModel {
+    let mut samples = Vec::new();
+    for fi in 0..4u32 {
+        let f = 1200 + fi * 300;
+        for p in [1usize, 4, 16, 32] {
+            for n in 1..=2u32 {
+                let t = 150.0 * n as f64 * (0.07 + 0.93 / p as f64) * 2200.0 / f as f64;
+                samples.push(TrainSample {
+                    f_mhz: f,
+                    cores: p,
+                    input: n,
+                    time_s: t,
+                });
+            }
+        }
+    }
+    SvrModel::train(
+        &samples,
+        &SvrSpec {
+            c: 2000.0,
+            epsilon: 0.4,
+            max_iter: 200_000,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+#[test]
+fn cache_roundtrip_is_bitwise_exact() {
+    let dir = TempDir::new().unwrap();
+    let cache = ModelCache::open(dir.path()).unwrap();
+    let svr = trained_model();
+    let power = PowerModel::paper_eq9();
+    let key = ModelKey::new("probe", "n1-2#deadbeef", "custom-node");
+    cache
+        .put(
+            &key,
+            &CachedModel {
+                power,
+                svr: svr.clone(),
+                cv: None,
+                test_mae: None,
+                test_pae_pct: None,
+            },
+        )
+        .unwrap();
+    let back = cache.get(&key).unwrap().expect("entry present");
+
+    // Every model field and every prediction must round-trip bit for bit
+    // — this is what makes warm-cache replays byte-identical.
+    assert_eq!(back.svr.train_x, svr.train_x);
+    assert_eq!(back.svr.beta, svr.beta);
+    assert_eq!(back.svr.b.to_bits(), svr.b.to_bits());
+    assert_eq!(back.svr.gamma.to_bits(), svr.gamma.to_bits());
+    assert_eq!(back.svr.n_support, svr.n_support);
+    assert_eq!(back.power.coeffs(), power.coeffs());
+    let queries: Vec<(u32, usize, u32)> = (0..50u32)
+        .map(|i| (1200 + (i % 11) * 100, 1 + (i % 32) as usize, 1 + i % 3))
+        .collect();
+    let a = svr.predict(&queries);
+    let b = back.svr.predict(&queries);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.to_bits(), y.to_bits(), "prediction drifted through the cache");
+    }
+}
+
+#[test]
+fn missing_entry_is_a_miss_not_an_error() {
+    let dir = TempDir::new().unwrap();
+    let cache = ModelCache::open(dir.path()).unwrap();
+    let key = ModelKey::new("nope", "n1#0", "custom-node");
+    assert!(cache.get(&key).unwrap().is_none());
+}
+
+#[test]
+fn corrupt_entry_is_an_error_not_a_silent_miss() {
+    let dir = TempDir::new().unwrap();
+    let cache = ModelCache::open(dir.path()).unwrap();
+    let key = ModelKey::new("bad", "n1#0", "custom-node");
+    // A torn/garbage file under the key's name must surface, not retrain.
+    let digest = config_digest(&["bad", "n1#0", "custom-node"]);
+    let path = dir
+        .path()
+        .join(format!("bad__n1_0__custom-node-{digest}.model.json"));
+    std::fs::write(&path, "{\"schema\": 1, \"app\": tr").unwrap();
+    assert!(cache.get(&key).is_err());
+}
+
+#[test]
+fn entries_and_clear() {
+    let dir = TempDir::new().unwrap();
+    let cache = ModelCache::open(dir.path()).unwrap();
+    assert!(cache.entries().unwrap().is_empty());
+    let bundle = CachedModel {
+        power: PowerModel::paper_eq9(),
+        svr: trained_model(),
+        cv: None,
+        test_mae: None,
+        test_pae_pct: None,
+    };
+    let k1 = ModelKey::new("a", "n1#1", "custom-node");
+    let k2 = ModelKey::new("b", "n1#1", "custom-node");
+    cache.put(&k1, &bundle).unwrap();
+    cache.put(&k2, &bundle).unwrap();
+    let entries = cache.entries().unwrap();
+    assert_eq!(entries.len(), 2);
+    assert!(entries.iter().any(|e| e.key == k1));
+    assert!(entries.iter().all(|e| e.bytes > 0));
+    assert_eq!(cache.clear().unwrap(), 2);
+    assert!(cache.entries().unwrap().is_empty());
+}
+
+#[test]
+fn sanitization_collisions_get_distinct_files() {
+    let dir = TempDir::new().unwrap();
+    let cache = ModelCache::open(dir.path()).unwrap();
+    let bundle = CachedModel {
+        power: PowerModel::paper_eq9(),
+        svr: trained_model(),
+        cv: None,
+        test_mae: None,
+        test_pae_pct: None,
+    };
+    // "a/b" and "a:b" sanitize identically, but the raw-key digest in
+    // the file name keeps them apart: putting one must not clobber (or
+    // brick) the other, and both stay independently retrievable.
+    let k1 = ModelKey::new("a/b", "n1#1", "custom-node");
+    let k2 = ModelKey::new("a:b", "n1#1", "custom-node");
+    cache.put(&k1, &bundle).unwrap();
+    assert!(cache.get(&k2).unwrap().is_none(), "k2 must be a clean miss");
+    cache.put(&k2, &bundle).unwrap();
+    assert!(cache.get(&k1).unwrap().is_some(), "k1 survived k2's put");
+    assert!(cache.get(&k2).unwrap().is_some());
+    assert_eq!(cache.entries().unwrap().len(), 2);
+}
+
+#[test]
+fn config_digest_separates_fields_and_configs() {
+    assert_eq!(config_digest(&["x", "y"]), config_digest(&["x", "y"]));
+    assert_ne!(config_digest(&["x", "y"]), config_digest(&["xy"]));
+    assert_ne!(config_digest(&["ab", "c"]), config_digest(&["a", "bc"]));
+    assert_ne!(config_digest(&["x"]), config_digest(&["y"]));
+}
+
+fn small_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        campaign: CampaignSpec {
+            freq_step_mhz: 500, // 1200, 1700, 2200
+            core_max: 6,
+            inputs: vec![1],
+            ..Default::default()
+        },
+        svr: SvrSpec {
+            folds: 2,
+            c: 500.0,
+            epsilon: 0.5,
+            max_iter: 50_000,
+            ..Default::default()
+        },
+        workloads: vec!["swaptions".into()],
+        ..Default::default()
+    }
+}
+
+fn small_rc(seed: u64) -> RunConfig {
+    RunConfig {
+        dt: 0.25,
+        work_noise: 0.005,
+        seed,
+        max_sim_s: 1e6,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn warm_pipeline_trains_zero_models_and_matches_cold_bytes() {
+    let dir = TempDir::new().unwrap();
+    let cache = ModelCache::open(dir.path()).unwrap();
+
+    let mut cold = Coordinator::new(small_cfg())
+        .with_run_config(small_rc(31))
+        .with_model_cache(cache.clone());
+    let cold_res = cold.run_all().unwrap();
+    assert_eq!(cold.cache_stats.trained, 1);
+    assert_eq!(cold.cache_stats.cache_hits, 0);
+
+    let mut warm = Coordinator::new(small_cfg())
+        .with_run_config(small_rc(31))
+        .with_model_cache(cache);
+    let warm_res = warm.run_all().unwrap();
+    assert_eq!(warm.cache_stats.trained, 0, "warm run must train nothing");
+    assert_eq!(warm.cache_stats.cache_hits, 1);
+    assert_eq!(
+        cold_res.to_json().dump().unwrap(),
+        warm_res.to_json().dump().unwrap(),
+        "warm-cache pipeline diverged from the cold run"
+    );
+}
+
+#[test]
+fn config_change_invalidates_the_cache_key() {
+    let dir = TempDir::new().unwrap();
+    let cache = ModelCache::open(dir.path()).unwrap();
+    let mut first = Coordinator::new(small_cfg())
+        .with_run_config(small_rc(31))
+        .with_model_cache(cache.clone());
+    first.run_all().unwrap();
+    assert_eq!(first.cache_stats.trained, 1);
+
+    // Different SVR hyper-parameters => different digest => retrain.
+    let mut cfg = small_cfg();
+    cfg.svr.c = 750.0;
+    let mut second = Coordinator::new(cfg)
+        .with_run_config(small_rc(31))
+        .with_model_cache(cache);
+    second.run_all().unwrap();
+    assert_eq!(
+        second.cache_stats.trained, 1,
+        "changed config must not hit the old entry"
+    );
+    assert_eq!(second.cache_stats.cache_hits, 0);
+}

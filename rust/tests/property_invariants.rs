@@ -212,8 +212,26 @@ fn prop_json_roundtrip_arbitrary_values() {
             }
         }
         let v = gen(rng, 3);
-        let back = Json::parse(&v.dump()).unwrap();
+        let back = Json::parse(&v.dump().unwrap()).unwrap();
         assert_eq!(v, back);
+    });
+}
+
+#[test]
+fn prop_surrogate_pair_escapes_parse_to_their_scalar() {
+    property("JSON surrogate-pair escapes decode", 200, |rng| {
+        // Any astral-plane scalar, encoded the only way JSON can: as a
+        // UTF-16 high+low surrogate escape pair.
+        let cp = 0x10000 + rng.below(0x110000 - 0x10000) as u32;
+        let c = char::from_u32(cp).expect("astral range is all valid scalars");
+        let v = cp - 0x10000;
+        let hi = 0xD800 + (v >> 10);
+        let lo = 0xDC00 + (v & 0x3FF);
+        let text = format!("\"\\u{hi:04x}\\u{lo:04x}\"");
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.as_str().unwrap(), c.to_string());
+        // And the writer round-trips it (as raw UTF-8).
+        assert_eq!(Json::parse(&parsed.dump().unwrap()).unwrap(), parsed);
     });
 }
 
@@ -457,7 +475,8 @@ fn prop_persisted_models_predict_identically() {
         }
         let m = SvrModel::train(&samples, &SvrSpec { max_iter: 20_000, ..Default::default() })
             .unwrap();
-        let back = SvrModel::from_json(&Json::parse(&m.to_json().dump()).unwrap()).unwrap();
+        let back =
+            SvrModel::from_json(&Json::parse(&m.to_json().dump().unwrap()).unwrap()).unwrap();
         for _ in 0..5 {
             let q = (
                 1200 + (rng.below(11) as u32) * 100,

@@ -1,0 +1,154 @@
+//! Phase-replay harness: determinism across thread counts, the ISSUE 3
+//! acceptance criteria (ecopt ≤ ondemand on every phase-shifting
+//! workload, within 5% of the static oracle), and warm-cache
+//! byte-identical reruns that train zero models.
+
+use ecopt::config::{CampaignSpec, ExperimentConfig, SvrSpec};
+use ecopt::coordinator::replay::{run_replay, ReplayOptions, ReplayResults};
+use ecopt::persist::ModelCache;
+use ecopt::report::replay_report;
+use ecopt::util::json::ToJson;
+use ecopt::util::tempdir::TempDir;
+use ecopt::workloads::runner::RunConfig;
+
+fn quick_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        // Full 32-core sweep (baselines govern the whole complement; a
+        // capped grid would handicap the model governor), 3 ladder points.
+        campaign: CampaignSpec {
+            freq_points: 3, // 1200, 1700, 2200
+            inputs: vec![1],
+            ..Default::default()
+        },
+        svr: SvrSpec {
+            c: 1000.0,
+            epsilon: 0.5,
+            max_iter: 100_000,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn quick_rc(threads: usize) -> RunConfig {
+    RunConfig {
+        dt: 0.1,
+        work_noise: 0.005, // noise ON: seed streams must line up
+        seed: 2026_0728,
+        max_sim_s: 1e6,
+        threads,
+    }
+}
+
+fn replay_json(threads: usize) -> String {
+    let opts = ReplayOptions {
+        input: 1,
+        cache: None,
+        cycles_override: Some(2),
+    };
+    let (res, _) = run_replay(&quick_cfg(), &quick_rc(threads), &opts).unwrap();
+    res.to_json().dump().unwrap()
+}
+
+#[test]
+fn replay_byte_identical_across_thread_counts() {
+    // ISSUE 3: byte-identical across 1/4/16 threads under the replay
+    // seed domain.
+    let seq = replay_json(1);
+    let par4 = replay_json(4);
+    assert_eq!(seq, par4, "4-thread replay diverged from sequential");
+    let par16 = replay_json(16);
+    assert_eq!(seq, par16, "16-thread replay diverged from sequential");
+    for w in ["burst-sweep", "mem-wave", "duty-cycle"] {
+        assert!(seq.contains(w), "replay output missing {w}");
+    }
+}
+
+fn acceptance_results() -> ReplayResults {
+    let opts = ReplayOptions {
+        input: 1,
+        cache: None,
+        cycles_override: Some(2),
+    };
+    let (res, _) = run_replay(&quick_cfg(), &quick_rc(0), &opts).unwrap();
+    res
+}
+
+#[test]
+fn ecopt_beats_ondemand_on_every_phase_workload() {
+    let res = acceptance_results();
+    assert!(!res.members.is_empty());
+    for m in &res.members {
+        let od = m.ondemand().unwrap();
+        assert!(
+            m.ecopt.energy_j <= od.energy_j,
+            "{}: ecopt {} J > ondemand {} J",
+            m.workload,
+            m.ecopt.energy_j,
+            od.energy_j
+        );
+        assert_eq!(m.ecopt_fallback_samples, 0, "{}: stale fallback", m.workload);
+    }
+}
+
+#[test]
+fn ecopt_within_five_percent_of_static_oracle() {
+    let res = acceptance_results();
+    for m in &res.members {
+        assert!(
+            m.ecopt.energy_j <= m.oracle.energy_j * 1.05,
+            "{}: ecopt {} J vs oracle {} J ({:.1} GHz @ {}c)",
+            m.workload,
+            m.ecopt.energy_j,
+            m.oracle.energy_j,
+            m.oracle.f_mhz as f64 / 1000.0,
+            m.oracle.cores
+        );
+    }
+}
+
+#[test]
+fn warm_cache_replay_trains_zero_models_and_is_byte_identical() {
+    let dir = TempDir::new().unwrap();
+    let mk_opts = || ReplayOptions {
+        input: 1,
+        cache: Some(ModelCache::open(dir.path()).unwrap()),
+        cycles_override: Some(2),
+    };
+
+    let (cold_res, cold_stats) = run_replay(&quick_cfg(), &quick_rc(4), &mk_opts()).unwrap();
+    assert!(cold_stats.trained > 0);
+    assert_eq!(cold_stats.cache_hits, 0);
+
+    let (warm_res, warm_stats) = run_replay(&quick_cfg(), &quick_rc(4), &mk_opts()).unwrap();
+    assert_eq!(warm_stats.trained, 0, "warm replay must train zero models");
+    assert_eq!(warm_stats.cache_hits, cold_stats.trained);
+    assert!((warm_stats.hit_rate_pct() - 100.0).abs() < 1e-9);
+
+    // Both the serialized results and the rendered report are identical.
+    assert_eq!(
+        cold_res.to_json().dump().unwrap(),
+        warm_res.to_json().dump().unwrap(),
+        "warm-cache replay results diverged"
+    );
+    assert_eq!(
+        replay_report(&cold_res),
+        replay_report(&warm_res),
+        "warm-cache replay report diverged"
+    );
+}
+
+#[test]
+fn replay_report_renders_all_sections() {
+    let res = acceptance_results();
+    let report = replay_report(&res);
+    assert!(report.contains("Replay headline"));
+    assert!(report.contains("Per-phase energy"));
+    assert!(report.contains("static oracle"));
+    for w in ["burst-sweep", "mem-wave", "duty-cycle"] {
+        assert!(report.contains(w), "report missing {w}");
+    }
+    for g in ["ondemand", "conservative", "performance", "powersave", "ecopt"] {
+        assert!(report.contains(g), "report missing governor {g}");
+    }
+}
