@@ -1,0 +1,131 @@
+//! `ecoptd` service throughput + tail latency baseline (ISSUE 4
+//! acceptance): an in-process daemon is bound on an ephemeral port,
+//! warm-loaded with one trained model, and measured two ways —
+//!
+//! 1. single-request round-trip latency over one persistent connection
+//!    (the `Bench` harness's mean/p50/p95);
+//! 2. a full deterministic loadgen run, reporting requests/sec and
+//!    p50/p95/p99 so future PRs can optimize the hot path against a
+//!    pinned baseline.
+//!
+//! `ECOPT_BENCH_QUICK=1` (CI smoke) shrinks both.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use ecopt::config::{ExperimentConfig, SvrSpec};
+use ecopt::persist::{CachedModel, ModelCache, ModelKey};
+use ecopt::powermodel::PowerModel;
+use ecopt::service::protocol::Request;
+use ecopt::service::{run_loadgen, EcoptServer, LoadgenOptions, ServiceConfig};
+use ecopt::svr::{SvrModel, TrainSample};
+use ecopt::util::bench::Bench;
+use ecopt::util::tempdir::TempDir;
+
+/// A quickly-but-genuinely-trained SVR over a synthetic scalable app.
+fn trained_bundle() -> CachedModel {
+    let mut samples = Vec::new();
+    for fi in 0..4u32 {
+        let f = 1200 + fi * 300;
+        for p in [1usize, 4, 16, 32] {
+            for n in 1..=2u32 {
+                let t = 150.0 * n as f64 * (0.07 + 0.93 / p as f64) * 2200.0 / f as f64;
+                samples.push(TrainSample {
+                    f_mhz: f,
+                    cores: p,
+                    input: n,
+                    time_s: t,
+                });
+            }
+        }
+    }
+    let svr = SvrModel::train(
+        &samples,
+        &SvrSpec {
+            c: 2000.0,
+            epsilon: 0.4,
+            max_iter: 200_000,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    CachedModel {
+        power: PowerModel::paper_eq9(),
+        svr,
+        cv: None,
+        test_mae: None,
+        test_pae_pct: None,
+    }
+}
+
+fn main() {
+    let quick =
+        std::env::args().any(|a| a == "--quick") || std::env::var("ECOPT_BENCH_QUICK").is_ok();
+    let mut b = Bench::new("service_throughput");
+
+    // Stage a one-model cache and serve it.
+    let dir = TempDir::new().unwrap();
+    let cache = ModelCache::open(dir.path()).unwrap();
+    let key = ModelKey::new("synthapp", "n1-2#bench", "custom-node");
+    cache.put(&key, &trained_bundle()).unwrap();
+    let server = EcoptServer::bind(
+        ExperimentConfig::default(),
+        ServiceConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 4,
+            cache_dir: Some(dir.path().to_path_buf()),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(server.warm_loaded(), 1);
+    let addr = server.local_addr();
+    let handle = server.handle();
+    let daemon = std::thread::spawn(move || server.run().unwrap());
+
+    // 1. Round-trip latency, one persistent connection.
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let predict = Request::Predict {
+        app: "synthapp".into(),
+        arch: None,
+        tag: None,
+        f_mhz: 1800,
+        cores: 16,
+        input: 2,
+    }
+    .to_line()
+    .unwrap();
+    b.bench("predict_roundtrip_1conn", || {
+        stream.write_all(predict.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        assert!(resp.contains("\"ok\":true"), "{resp}");
+    });
+    drop(reader);
+    drop(stream);
+
+    // 2. Loadgen throughput (requests/sec + tail latency baseline).
+    let opts = LoadgenOptions {
+        addr: addr.to_string(),
+        requests: if quick { 120 } else { 1000 },
+        connections: 4,
+        seed: 0xBE7C,
+    };
+    let outcome = run_loadgen(&opts).unwrap();
+    assert_eq!(outcome.shed, 0, "bench load must not shed");
+    assert_eq!(outcome.errors, 0, "bench load must not error");
+    println!(
+        "service_throughput/loadgen_{}req_4conn         {:.1} req/s  p50 {} us  p95 {} us  p99 {} us  max {} us",
+        outcome.requests,
+        outcome.rps,
+        outcome.p50_us,
+        outcome.p95_us,
+        outcome.p99_us,
+        outcome.max_us
+    );
+
+    handle.stop();
+    daemon.join().unwrap();
+}

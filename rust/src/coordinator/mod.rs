@@ -206,8 +206,10 @@ impl Coordinator {
     /// The cache input-tag of this pipeline: campaign inputs plus a
     /// digest of every other model determinant (adapted campaign, SVR
     /// spec, simulator seed/resolution), through the shared
-    /// [`model_input_tag`] scheme — see `DESIGN.md` §8.
-    fn cache_input_tag(&self) -> Result<String> {
+    /// [`model_input_tag`] scheme — see `DESIGN.md` §8. Public because
+    /// the service daemon (`service::server`) must build the very same
+    /// keys the batch pipeline persists under — one persistence story.
+    pub fn cache_input_tag(&self) -> Result<String> {
         let campaign = self.effective_campaign()?;
         let inputs: Vec<String> = campaign.inputs.iter().map(|i| i.to_string()).collect();
         Ok(model_input_tag(
@@ -278,6 +280,24 @@ impl Coordinator {
         let pred = svr.predict(&queries);
         let truth: Vec<f64> = test.iter().map(|s| s.time_s).collect();
         Ok((ch, svr, cv, mae(&truth, &pred), pae(&truth, &pred)))
+    }
+
+    /// Stages 1–3 for one app, packaged as the cacheable bundle the
+    /// persistent store (and the `ecoptd` service registry) holds: power
+    /// fit + SVR + CV + held-out metrics. Bit-identical to what
+    /// [`Coordinator::run_all`] persists for the same configuration, so
+    /// a service-trained model and a pipeline-trained model are the same
+    /// bytes under the same [`ModelKey`].
+    pub fn train_bundle(&self, app: &AppProfile) -> Result<CachedModel> {
+        let (_, power, _) = self.fit_power()?;
+        let (_, svr, cv, test_mae, test_pae) = self.model_app(app)?;
+        Ok(CachedModel {
+            power,
+            svr,
+            cv: Some(cv),
+            test_mae: Some(test_mae),
+            test_pae_pct: Some(test_pae),
+        })
     }
 
     /// Stages 4+5 for one app: optimize each input and compare vs ondemand.

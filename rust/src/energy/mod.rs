@@ -47,7 +47,7 @@ pub struct OptimalConfig {
 
 /// Optional constraints (paper §2.3 mentions time/frequency/core bounds
 /// as possible but unused extensions — supported here).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Constraints {
     /// Maximum acceptable predicted execution time, seconds.
     pub max_time_s: Option<f64>,
@@ -60,6 +60,28 @@ pub struct Constraints {
 }
 
 impl Constraints {
+    /// Canonical text form — a stable identity for a constraint set, used
+    /// by the service registry to memoize `optimize` consults per
+    /// `(model key, input, constraint-set)`. Field order is fixed and
+    /// floats print in shortest-round-trip form, so two equal constraint
+    /// sets always canonicalize to the same string.
+    pub fn canonical(&self) -> String {
+        fn opt_u<T: std::fmt::Display>(v: &Option<T>) -> String {
+            match v {
+                Some(x) => x.to_string(),
+                None => "-".to_string(),
+            }
+        }
+        format!(
+            "t:{}|fmin:{}|fmax:{}|cmin:{}|cmax:{}",
+            opt_u(&self.max_time_s),
+            opt_u(&self.min_f_mhz),
+            opt_u(&self.max_f_mhz),
+            opt_u(&self.min_cores),
+            opt_u(&self.max_cores),
+        )
+    }
+
     fn allows(&self, p: &EnergyPoint) -> bool {
         self.max_time_s.map_or(true, |t| p.pred_time_s <= t)
             && self.min_f_mhz.map_or(true, |f| p.f_mhz >= f)
@@ -92,6 +114,40 @@ fn argmin_order(a: &EnergyPoint, b: &EnergyPoint) -> std::cmp::Ordering {
 /// AOT artifact's `GRID_POINTS` layout) for a legacy homogeneous node.
 pub fn config_grid(campaign: &CampaignSpec, node: &NodeSpec) -> Vec<(Mhz, usize)> {
     config_grid_arch(campaign, &ArchProfile::from_node_spec(node))
+}
+
+/// Assemble one energy point from an already-predicted execution time
+/// (Eq. 7 power × time): the shared kernel of every evaluation path.
+pub fn assemble_point(
+    power: &PowerModel,
+    arch: &ArchProfile,
+    f: Mhz,
+    p: usize,
+    t: f64,
+) -> EnergyPoint {
+    let t = t.max(1e-3); // same clamp as the L2 model
+    let w = power.predict(mhz_to_ghz(f), p, arch.active_clusters_for(p));
+    EnergyPoint {
+        f_mhz: f,
+        cores: p,
+        pred_time_s: t,
+        power_w: w,
+        energy_j: w * t,
+    }
+}
+
+/// Score a single `(f, p, N)` query against a trained bundle without
+/// building an [`EnergyModel`] (no SVR clone) — the service daemon's
+/// `predict` hot path.
+pub fn predict_point(
+    power: &PowerModel,
+    svr: &SvrModel,
+    arch: &ArchProfile,
+    f: Mhz,
+    p: usize,
+    n: u32,
+) -> EnergyPoint {
+    assemble_point(power, arch, f, p, svr.predict_one(f, p, n))
 }
 
 /// The deterministic configuration grid for an architecture profile.
@@ -149,15 +205,7 @@ impl EnergyModel {
 
     /// Assemble one energy point from a predicted time.
     fn point(&self, f: Mhz, p: usize, t: f64) -> EnergyPoint {
-        let t = t.max(1e-3); // same clamp as the L2 model
-        let w = self.power.predict(mhz_to_ghz(f), p, self.sockets_for(p));
-        EnergyPoint {
-            f_mhz: f,
-            cores: p,
-            pred_time_s: t,
-            power_w: w,
-            energy_j: w * t,
-        }
+        assemble_point(&self.power, &self.arch, f, p, t)
     }
 
     /// Grid-argmin of the energy surface subject to constraints.

@@ -30,6 +30,13 @@
 //! the energy-grid evaluator scores all grid points against all support
 //! vectors in one cache-blocked pass (`energy`).
 //!
+//! Since ISSUE 4 the trained models are also **served**: `ecoptd`
+//! (`service`) is a std-only TCP daemon speaking a versioned
+//! line-delimited JSON protocol, backed by a sharded LRU model registry
+//! that warm-loads from (and writes through) the persistent model cache,
+//! with a deterministic load generator (`ecopt loadgen`) pinning its
+//! throughput and tail latency.
+//!
 //! See `DESIGN.md` for the system inventory, the determinism contract,
 //! and the kernel-cache design.
 
@@ -54,6 +61,7 @@ pub mod powermodel;
 pub mod report;
 pub mod runtime;
 pub mod sensors;
+pub mod service;
 pub mod svr;
 pub mod util;
 pub mod workloads;

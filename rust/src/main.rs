@@ -1,6 +1,7 @@
 //! `ecopt` — CLI for the energy-optimal-configuration pipeline.
 //!
-//! Subcommands map to the pipeline stages (see `coordinator`):
+//! Subcommands map to the pipeline stages (see `coordinator`) plus the
+//! `ecoptd` service layer (see `service`):
 //!
 //! ```text
 //! ecopt fit-power                  # stress campaign + Eq. 7 fit
@@ -8,11 +9,20 @@
 //! ecopt optimize --app NAME -n 3   # energy-optimal (f, p) via PJRT
 //! ecopt compare [--app NAME]       # ondemand vs proposed (Tables 2-5)
 //! ecopt report [--all|--only X]    # tables + figures [--cache FILE]
+//! ecopt serve                      # ecoptd energy-advisor daemon
+//! ecopt query <kind> [...]         # one request to a running daemon
+//! ecopt loadgen [--quick]          # deterministic load generator
 //! ecopt config --dump              # print the effective JSON config
 //! ```
 //!
 //! Global flags: `--config FILE` (JSON), `--artifacts DIR`.
 //! (The CLI parser is hand-rolled; the offline image has no clap.)
+//!
+//! The parser is **strict**: every command declares its flags, and an
+//! unknown subcommand, unknown flag, missing flag value, or stray
+//! positional prints the relevant usage to **stderr** and exits **2**
+//! (runtime failures exit 1). `ecopt help <subcommand>` prints the
+//! per-command text; so does `ecopt <subcommand> --help`.
 
 use std::path::PathBuf;
 
@@ -20,10 +30,13 @@ use ecopt::arch::{profile_by_name, registry};
 use ecopt::config::ExperimentConfig;
 use ecopt::coordinator::replay::{run_replay, ReplayOptions};
 use ecopt::coordinator::{run_fleet_cached, Coordinator, ExperimentResults};
-use ecopt::energy::{config_grid_arch, EnergyModel};
+use ecopt::energy::{config_grid_arch, Constraints, EnergyModel};
 use ecopt::persist::ModelCache;
 use ecopt::report;
 use ecopt::runtime::PjrtRuntime;
+use ecopt::service::loadgen::request_once;
+use ecopt::service::protocol::{line_is_ok, Request};
+use ecopt::service::{run_loadgen, EcoptServer, LoadgenOptions, ServiceConfig};
 use ecopt::workloads::app_by_name;
 use ecopt::workloads::runner::RunConfig;
 
@@ -49,54 +62,307 @@ COMMANDS:
          [--cache-dir DIR] [--no-cache] [--threads N]
                                 phase-shifting traces under every governor +
                                 the model-in-the-loop ecopt governor, vs the
-                                static oracle; trained models are served from
-                                the persistent cache (a warm rerun trains
-                                zero models and reproduces the report byte
-                                for byte)
+                                static oracle (warm model cache trains zero)
+  serve [--addr HOST:PORT] [--workers N] [--queue N] [--shards N]
+        [--budget-mb MB] [--cache-dir DIR] [--no-cache]
+                                run ecoptd, the energy-advisor daemon: a TCP
+                                service answering predict/optimize/train over
+                                a line-delimited JSON protocol, warm-loading
+                                the persistent model cache into a sharded
+                                LRU registry
+  query <KIND> [--addr HOST:PORT] [ARGS]
+                                one request to a running ecoptd; KIND =
+                                predict | optimize | train | status |
+                                registry | stats | shutdown
+  loadgen [--addr HOST:PORT] [--requests N] [--connections N] [--seed S]
+          [--quick] [--out FILE] [--report FILE] [--stats FILE]
+                                deterministic seeded request mix against a
+                                running ecoptd; same seed + same registry
+                                state => byte-identical transcript
   cache ls|clear [--cache-dir DIR]
                                 inspect / empty the persistent model cache
   arch [--list]                 list the built-in architecture profiles
   config --dump                 print the effective configuration
-  help                          this text
+  help [COMMAND]                this text, or one command's details
 ";
 
-/// Minimal flag parser: collects `--key value`, `--flag`, and positionals.
+/// Per-command grammar + help text. The parser rejects anything a
+/// command does not declare.
+struct CmdSpec {
+    name: &'static str,
+    usage: &'static str,
+    value_flags: &'static [&'static str],
+    bool_flags: &'static [&'static str],
+    /// Extra positionals allowed after the command word.
+    max_positionals: usize,
+    /// Whether `-n N` is accepted as an alias for `--input N`.
+    input_alias: bool,
+}
+
+/// Flags valid for every command (parsed even before the command word).
+const GLOBAL_VALUE_FLAGS: [&str; 2] = ["config", "artifacts"];
+
+const COMMANDS: &[CmdSpec] = &[
+    CmdSpec {
+        name: "help",
+        usage: "USAGE: ecopt help [COMMAND]\n\nPrint the global usage, or one command's details.",
+        value_flags: &[],
+        bool_flags: &[],
+        max_positionals: 1,
+        input_alias: false,
+    },
+    CmdSpec {
+        name: "fit-power",
+        usage: "USAGE: ecopt fit-power\n\nRun the stress campaign and fit the Eq. 7 power model (Fig. 1).",
+        value_flags: &[],
+        bool_flags: &[],
+        max_positionals: 0,
+        input_alias: false,
+    },
+    CmdSpec {
+        name: "characterize",
+        usage: "USAGE: ecopt characterize --app NAME [--out FILE]\n\n\
+                Run the §3.4 characterization campaign for one application and\n\
+                train + cross-validate its SVR model. --out saves the campaign\n\
+                samples as JSON.",
+        value_flags: &["app", "out"],
+        bool_flags: &[],
+        max_positionals: 0,
+        input_alias: false,
+    },
+    CmdSpec {
+        name: "optimize",
+        usage: "USAGE: ecopt optimize --app NAME [-n N] [--no-pjrt]\n\n\
+                Energy-optimal (frequency, cores) for one application and input\n\
+                size (default 3). --no-pjrt forces the pure-Rust argmin even\n\
+                when the AOT artifact is available.",
+        value_flags: &["app", "input"],
+        bool_flags: &["no-pjrt"],
+        max_positionals: 0,
+        input_alias: true,
+    },
+    CmdSpec {
+        name: "compare",
+        usage: "USAGE: ecopt compare [--app NAME]\n\n\
+                Full pipeline + ondemand comparison (Tables 2-5); --app limits\n\
+                the run to one application.",
+        value_flags: &["app"],
+        bool_flags: &[],
+        max_positionals: 0,
+        input_alias: false,
+    },
+    CmdSpec {
+        name: "report",
+        usage: "USAGE: ecopt report [--all] [--only WHAT] [--cache FILE]\n\n\
+                Render the paper artifacts. WHAT = 1-5 (tables), f1-f10\n\
+                (figures), or headline. --cache loads/saves the pipeline\n\
+                results bundle so repeated reports skip the pipeline.",
+        value_flags: &["only", "cache"],
+        bool_flags: &["all"],
+        max_positionals: 0,
+        input_alias: false,
+    },
+    CmdSpec {
+        name: "fleet",
+        usage: "USAGE: ecopt fleet [--profiles A,B] [--quick] [--out FILE]\n\
+                       [--save FILE] [--cache-dir DIR]\n\n\
+                Run the full pipeline across architecture profiles (default:\n\
+                the whole registry) and render the cross-architecture savings\n\
+                report. --cache-dir serves trained models from the persistent\n\
+                cache.",
+        value_flags: &["profiles", "out", "save", "cache-dir"],
+        bool_flags: &["quick"],
+        max_positionals: 0,
+        input_alias: false,
+    },
+    CmdSpec {
+        name: "replay",
+        usage: "USAGE: ecopt replay [--quick] [-n N] [--out FILE] [--save FILE]\n\
+                       [--stats FILE] [--cache-dir DIR] [--no-cache] [--threads N]\n\n\
+                Replay phase-shifting traces under every Linux governor + the\n\
+                model-in-the-loop ecopt governor and sweep the static oracle.\n\
+                Trained models persist in the model cache: a warm rerun trains\n\
+                zero models and reproduces the report byte for byte.",
+        value_flags: &["input", "out", "save", "stats", "cache-dir", "threads"],
+        bool_flags: &["quick", "no-cache"],
+        max_positionals: 0,
+        input_alias: true,
+    },
+    CmdSpec {
+        name: "serve",
+        usage: "USAGE: ecopt serve [--addr HOST:PORT] [--workers N] [--queue N]\n\
+                       [--shards N] [--budget-mb MB] [--cache-dir DIR] [--no-cache]\n\n\
+                Run ecoptd, the energy-advisor daemon (default 127.0.0.1:4017).\n\
+                Models are warm-loaded from the persistent cache (--cache-dir,\n\
+                default $ECOPT_CACHE_DIR or .ecopt-cache; --no-cache serves from\n\
+                memory only) into an N-shard LRU registry bounded by --budget-mb.\n\
+                Connections beyond --queue get an immediate 503-style response.\n\
+                Protocol: one JSON request per line, one response line each —\n\
+                see `ecopt help query` for the request kinds.",
+        value_flags: &["addr", "workers", "queue", "shards", "budget-mb", "cache-dir"],
+        bool_flags: &["no-cache"],
+        max_positionals: 0,
+        input_alias: false,
+    },
+    CmdSpec {
+        name: "query",
+        usage: "USAGE: ecopt query <KIND> [--addr HOST:PORT] [ARGS]\n\n\
+                One request to a running ecoptd; prints the raw response line.\n\
+                KINDS:\n\
+                  predict  --app NAME --freq MHZ --cores P [-n N] [--arch A] [--tag T]\n\
+                  optimize --app NAME [-n N] [--arch A] [--tag T]\n\
+                           [--max-f MHZ] [--min-f MHZ] [--max-cores P]\n\
+                           [--min-cores P] [--max-time S]\n\
+                  train    --app NAME [--arch A]      (async; returns a job id)\n\
+                  status   --job ID\n\
+                  registry | stats | shutdown\n\
+                Exits 0 on an ok response, 1 otherwise.",
+        value_flags: &[
+            "addr", "app", "arch", "tag", "freq", "cores", "input", "job", "max-f", "min-f",
+            "max-cores", "min-cores", "max-time",
+        ],
+        bool_flags: &[],
+        max_positionals: 1,
+        input_alias: true,
+    },
+    CmdSpec {
+        name: "loadgen",
+        usage: "USAGE: ecopt loadgen [--addr HOST:PORT] [--requests N]\n\
+                       [--connections N] [--seed S] [--quick]\n\
+                       [--out FILE] [--report FILE] [--stats FILE]\n\n\
+                Deterministic load generator: a seeded predict/optimize/registry\n\
+                mix over the daemon's loaded models. Two runs with the same seed\n\
+                against the same registry state produce BYTE-IDENTICAL\n\
+                transcripts (--out). --report writes the throughput/latency\n\
+                report (markdown), --stats a JSON summary; --quick is the CI\n\
+                smoke sizing.",
+        value_flags: &["addr", "requests", "connections", "seed", "out", "report", "stats"],
+        bool_flags: &["quick"],
+        max_positionals: 0,
+        input_alias: false,
+    },
+    CmdSpec {
+        name: "cache",
+        usage: "USAGE: ecopt cache ls|clear [--cache-dir DIR]\n\n\
+                Inspect or empty the persistent trained-model cache\n\
+                (default $ECOPT_CACHE_DIR or .ecopt-cache).",
+        value_flags: &["cache-dir"],
+        bool_flags: &[],
+        max_positionals: 1,
+        input_alias: false,
+    },
+    CmdSpec {
+        name: "arch",
+        usage: "USAGE: ecopt arch [--list]\n\nList the built-in architecture profiles.",
+        value_flags: &[],
+        bool_flags: &["list"],
+        max_positionals: 0,
+        input_alias: false,
+    },
+    CmdSpec {
+        name: "config",
+        usage: "USAGE: ecopt config --dump\n\nPrint the effective configuration as JSON.",
+        value_flags: &[],
+        bool_flags: &["dump"],
+        max_positionals: 0,
+        input_alias: false,
+    },
+];
+
+fn spec_by_name(name: &str) -> Option<&'static CmdSpec> {
+    COMMANDS.iter().find(|c| c.name == name)
+}
+
+/// Print a usage error for `usage` to stderr and exit 2.
+fn usage_exit(usage: &str, msg: &str) -> ! {
+    eprintln!("error: {msg}\n\n{usage}");
+    std::process::exit(2);
+}
+
+/// Parsed command line: the command's spec, extra positionals, flags.
 struct Args {
+    spec: &'static CmdSpec,
     positional: Vec<String>,
     flags: std::collections::HashMap<String, String>,
 }
 
 impl Args {
+    /// Strict parse against the command specs; errors print usage and
+    /// exit 2.
     fn parse(argv: &[String]) -> Args {
+        let mut spec: Option<&'static CmdSpec> = None;
         let mut positional = Vec::new();
         let mut flags = std::collections::HashMap::new();
         let mut i = 0;
+        let current_usage = |spec: Option<&CmdSpec>| spec.map(|s| s.usage).unwrap_or(USAGE);
         while i < argv.len() {
             let a = &argv[i];
-            if let Some(name) = a.strip_prefix("--") {
-                // `--key value` unless the next token is another flag/end.
-                let next_is_value = argv
-                    .get(i + 1)
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false);
-                if next_is_value {
-                    flags.insert(name.to_string(), argv[i + 1].clone());
-                    i += 2;
-                } else {
+            if a == "--help" || a == "-h" {
+                flags.insert("help".to_string(), String::new());
+                i += 1;
+            } else if let Some(name) = a.strip_prefix("--") {
+                let is_value = GLOBAL_VALUE_FLAGS.contains(&name)
+                    || spec.is_some_and(|s| s.value_flags.contains(&name));
+                let is_bool = spec.is_some_and(|s| s.bool_flags.contains(&name));
+                if is_value {
+                    match argv.get(i + 1) {
+                        Some(v) if !v.starts_with("--") => {
+                            flags.insert(name.to_string(), v.clone());
+                            i += 2;
+                        }
+                        _ => usage_exit(
+                            current_usage(spec),
+                            &format!("flag --{name} needs a value"),
+                        ),
+                    }
+                } else if is_bool {
                     flags.insert(name.to_string(), String::new());
                     i += 1;
+                } else {
+                    match spec {
+                        Some(s) => usage_exit(
+                            s.usage,
+                            &format!("unknown flag --{name} for '{}'", s.name),
+                        ),
+                        None => usage_exit(
+                            USAGE,
+                            &format!("unknown flag --{name} (or it belongs after a command)"),
+                        ),
+                    }
                 }
             } else if a == "-n" {
-                if let Some(v) = argv.get(i + 1) {
-                    flags.insert("input".into(), v.clone());
+                match spec {
+                    Some(s) if s.input_alias => match argv.get(i + 1) {
+                        Some(v) if !v.starts_with('-') => {
+                            flags.insert("input".to_string(), v.clone());
+                            i += 2;
+                        }
+                        _ => usage_exit(s.usage, "-n needs a value"),
+                    },
+                    _ => usage_exit(current_usage(spec), "-n is not valid here"),
                 }
-                i += 2;
+            } else if a.starts_with('-') && a.len() > 1 {
+                usage_exit(current_usage(spec), &format!("unknown flag {a}"));
+            } else if spec.is_none() {
+                match spec_by_name(a) {
+                    Some(s) => spec = Some(s),
+                    None => usage_exit(USAGE, &format!("unknown command '{a}'")),
+                }
+                i += 1;
             } else {
+                let s = spec.expect("command set");
+                if positional.len() >= s.max_positionals {
+                    usage_exit(s.usage, &format!("unexpected argument '{a}'"));
+                }
                 positional.push(a.clone());
                 i += 1;
             }
         }
-        Args { positional, flags }
+        Args {
+            spec: spec.unwrap_or_else(|| spec_by_name("help").expect("help spec")),
+            positional,
+            flags,
+        }
     }
 
     fn get(&self, name: &str) -> Option<&str> {
@@ -107,10 +373,36 @@ impl Args {
         self.flags.contains_key(name)
     }
 
-    fn require(&self, name: &str) -> anyhow::Result<&str> {
-        self.get(name)
-            .filter(|s| !s.is_empty())
-            .ok_or_else(|| anyhow::anyhow!("missing required flag --{name}\n\n{USAGE}"))
+    fn require(&self, name: &str) -> &str {
+        match self.get(name) {
+            Some(s) if !s.is_empty() => s,
+            _ => usage_exit(self.spec.usage, &format!("missing required flag --{name}")),
+        }
+    }
+
+    /// Parse a numeric flag, defaulting when absent; bad values exit 2.
+    fn num<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                usage_exit(self.spec.usage, &format!("flag --{name}: invalid value '{v}'"))
+            }),
+        }
+    }
+
+    fn require_num<T: std::str::FromStr>(&self, name: &str) -> T {
+        let v = self.require(name);
+        v.parse().unwrap_or_else(|_| {
+            usage_exit(self.spec.usage, &format!("flag --{name}: invalid value '{v}'"))
+        })
+    }
+
+    fn opt_num<T: std::str::FromStr>(&self, name: &str) -> Option<T> {
+        self.get(name).map(|v| {
+            v.parse().unwrap_or_else(|_| {
+                usage_exit(self.spec.usage, &format!("flag --{name}: invalid value '{v}'"))
+            })
+        })
     }
 }
 
@@ -153,9 +445,12 @@ fn results(args: &Args) -> anyhow::Result<(ExperimentResults, ExperimentConfig)>
 fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv);
-    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    if args.has("help") && args.spec.name != "help" {
+        println!("{}", args.spec.usage);
+        return Ok(());
+    }
 
-    match cmd {
+    match args.spec.name {
         "fit-power" => {
             let cfg = load_config(&args)?;
             let coord = Coordinator::new(cfg);
@@ -171,7 +466,7 @@ fn main() -> anyhow::Result<()> {
         }
         "characterize" => {
             let cfg = load_config(&args)?;
-            let app = args.require("app")?.to_string();
+            let app = args.require("app").to_string();
             let coord = Coordinator::new(cfg);
             let profile = app_by_name(&app)?;
             let (ch, _, cv, test_mae, test_pae) = coord.model_app(&profile)?;
@@ -190,8 +485,8 @@ fn main() -> anyhow::Result<()> {
         }
         "optimize" => {
             let cfg = load_config(&args)?;
-            let app = args.require("app")?.to_string();
-            let input: u32 = args.get("input").unwrap_or("3").parse()?;
+            let app = args.require("app").to_string();
+            let input: u32 = args.num("input", 3);
             let coord = Coordinator::new(cfg.clone());
             let profile = app_by_name(&app)?;
             let (_, model, _) = coord.fit_power()?;
@@ -295,11 +590,9 @@ fn main() -> anyhow::Result<()> {
                 dt: 0.1, // dynamic governors need their 100 ms cadence
                 ..Default::default()
             };
-            if let Some(t) = args.get("threads") {
-                rc.threads = t.parse()?;
-            }
+            rc.threads = args.num("threads", rc.threads);
             let mut opts = ReplayOptions {
-                input: args.get("input").unwrap_or("0").parse()?,
+                input: args.num("input", 0),
                 ..Default::default()
             };
             if args.has("quick") {
@@ -352,13 +645,140 @@ fn main() -> anyhow::Result<()> {
                 _ => println!("{rendered}"),
             }
         }
+        "serve" => {
+            let cfg = load_config(&args)?;
+            let mut svc = ServiceConfig::default();
+            if let Some(a) = args.get("addr") {
+                svc.addr = a.to_string();
+            }
+            svc.workers = args.num("workers", svc.workers);
+            svc.queue_cap = args.num("queue", svc.queue_cap);
+            svc.shards = args.num("shards", svc.shards);
+            if let Some(mb) = args.opt_num::<usize>("budget-mb") {
+                svc.byte_budget = mb.saturating_mul(1024 * 1024).max(1);
+            }
+            svc.cache_dir = if args.has("no-cache") {
+                None
+            } else {
+                Some(
+                    args.get("cache-dir")
+                        .filter(|d| !d.is_empty())
+                        .map(PathBuf::from)
+                        .unwrap_or_else(ModelCache::default_dir),
+                )
+            };
+            let cache_desc = match &svc.cache_dir {
+                Some(d) => d.display().to_string(),
+                None => "disabled".to_string(),
+            };
+            let server = EcoptServer::bind(cfg, svc.clone())?;
+            eprintln!(
+                "ecoptd listening on {} ({} models warm-loaded, cache {}, queue {}, {} shards, {} MiB budget)",
+                server.local_addr(),
+                server.warm_loaded(),
+                cache_desc,
+                svc.queue_cap,
+                svc.shards,
+                svc.byte_budget / (1024 * 1024),
+            );
+            let rep = server.run()?;
+            eprintln!(
+                "ecoptd stopped: served {} request(s), {} shed, {} errors",
+                rep.served, rep.shed, rep.errors
+            );
+        }
+        "query" => {
+            let addr = args.get("addr").unwrap_or("127.0.0.1:4017").to_string();
+            let kind = match args.positional.first() {
+                Some(k) => k.as_str(),
+                None => usage_exit(args.spec.usage, "query needs a request KIND"),
+            };
+            let arch = args.get("arch").map(str::to_string);
+            let tag = args.get("tag").map(str::to_string);
+            let req = match kind {
+                "predict" => Request::Predict {
+                    app: args.require("app").to_string(),
+                    arch,
+                    tag,
+                    f_mhz: args.require_num("freq"),
+                    cores: args.require_num("cores"),
+                    input: args.num("input", 1),
+                },
+                "optimize" => Request::Optimize {
+                    app: args.require("app").to_string(),
+                    arch,
+                    tag,
+                    input: args.num("input", 1),
+                    constraints: Constraints {
+                        max_time_s: args.opt_num("max-time"),
+                        min_f_mhz: args.opt_num("min-f"),
+                        max_f_mhz: args.opt_num("max-f"),
+                        min_cores: args.opt_num("min-cores"),
+                        max_cores: args.opt_num("max-cores"),
+                    },
+                },
+                "train" => Request::Train {
+                    app: args.require("app").to_string(),
+                    arch,
+                },
+                "status" => Request::Status {
+                    job: args.require_num("job"),
+                },
+                "registry" => Request::Registry,
+                "stats" => Request::Stats,
+                "shutdown" => Request::Shutdown,
+                other => usage_exit(args.spec.usage, &format!("unknown query kind '{other}'")),
+            };
+            let resp = request_once(&addr, &req.to_line()?)?;
+            println!("{resp}");
+            if !line_is_ok(&resp) {
+                std::process::exit(1);
+            }
+        }
+        "loadgen" => {
+            let mut opts = LoadgenOptions::default();
+            if args.has("quick") {
+                opts = opts.quick();
+            }
+            if let Some(a) = args.get("addr") {
+                opts.addr = a.to_string();
+            }
+            opts.requests = args.num("requests", opts.requests);
+            opts.connections = args.num("connections", opts.connections);
+            opts.seed = args.num("seed", opts.seed);
+            let outcome = run_loadgen(&opts)?;
+            if let Some(path) = args.get("out") {
+                std::fs::write(path, &outcome.transcript)?;
+                eprintln!("loadgen: transcript written to {path}");
+            }
+            if let Some(path) = args.get("report") {
+                std::fs::write(path, report::loadgen_report(&outcome))?;
+                eprintln!("loadgen: throughput report written to {path}");
+            }
+            if let Some(path) = args.get("stats") {
+                std::fs::write(path, outcome.stats_json())?;
+                eprintln!("loadgen: stats written to {path}");
+            }
+            println!(
+                "loadgen: {} request(s) in {:.3} s -> {:.1} req/s | p50 {} us  p95 {} us  p99 {} us | ok {}  errors {}  shed {}",
+                outcome.requests,
+                outcome.elapsed_s,
+                outcome.rps,
+                outcome.p50_us,
+                outcome.p95_us,
+                outcome.p99_us,
+                outcome.ok,
+                outcome.errors,
+                outcome.shed,
+            );
+        }
         "cache" => {
             let dir = match args.get("cache-dir") {
                 Some(d) if !d.is_empty() => PathBuf::from(d),
                 _ => ModelCache::default_dir(),
             };
             let cache = ModelCache::open(&dir)?;
-            match args.positional.get(1).map(|s| s.as_str()) {
+            match args.positional.first().map(|s| s.as_str()) {
                 Some("ls") | None => {
                     let entries = cache.entries()?;
                     if entries.is_empty() {
@@ -375,8 +795,10 @@ fn main() -> anyhow::Result<()> {
                     println!("removed {removed} cached model(s) from {}", dir.display());
                 }
                 Some(other) => {
-                    eprintln!("unknown cache action '{other}' (use ls or clear)\n\n{USAGE}");
-                    std::process::exit(2);
+                    usage_exit(
+                        args.spec.usage,
+                        &format!("unknown cache action '{other}' (use ls or clear)"),
+                    );
                 }
             }
         }
@@ -407,11 +829,14 @@ fn main() -> anyhow::Result<()> {
             let cfg = load_config(&args)?;
             println!("{}", cfg.dump()?);
         }
-        "help" | "--help" | "-h" => println!("{USAGE}"),
-        other => {
-            eprintln!("unknown command '{other}'\n\n{USAGE}");
-            std::process::exit(2);
-        }
+        "help" => match args.positional.first() {
+            Some(topic) => match spec_by_name(topic) {
+                Some(s) => println!("{}", s.usage),
+                None => usage_exit(USAGE, &format!("unknown command '{topic}'")),
+            },
+            None => println!("{USAGE}"),
+        },
+        other => unreachable!("unhandled command '{other}' in dispatch"),
     }
     Ok(())
 }

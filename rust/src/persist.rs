@@ -638,7 +638,14 @@ pub struct CachedModel {
 }
 
 impl CachedModel {
-    fn to_json_with_key(&self, key: &ModelKey) -> Json {
+    /// Serialized byte length of this bundle under `key` — what the
+    /// service registry charges against its LRU byte budget when the
+    /// entry was not read back from a file of known size.
+    pub fn serialized_len(&self, key: &ModelKey) -> Result<usize> {
+        Ok(self.to_json_with_key(key).dump()?.len())
+    }
+
+    pub(crate) fn to_json_with_key(&self, key: &ModelKey) -> Json {
         Json::obj(vec![
             ("schema", Json::Num(CACHE_SCHEMA)),
             ("app", Json::Str(key.app.clone())),
@@ -767,17 +774,44 @@ impl ModelCache {
         Ok(Some(model))
     }
 
-    /// Store a bundle under `key` (atomic: temp file + rename).
-    pub fn put(&self, key: &ModelKey, model: &CachedModel) -> Result<()> {
+    /// Store a bundle under `key`; returns the serialized byte length.
+    ///
+    /// Atomic AND race-free: the document is staged in a temp file whose
+    /// name is unique per (process, put-call) — a `.tmp` name derived
+    /// from the target alone would let two concurrent writers of the
+    /// same key interleave writes into one staging file and rename a
+    /// torn document into place. With unique staging files the rename is
+    /// last-writer-wins and a concurrent reader always sees a complete
+    /// generation (locked by `tests/model_cache.rs`).
+    pub fn put(&self, key: &ModelKey, model: &CachedModel) -> Result<u64> {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static PUT_SEQ: AtomicU64 = AtomicU64::new(0);
         let path = self.path_for(key);
-        let tmp = path.with_extension("json.tmp");
-        std::fs::write(&tmp, model.to_json_with_key(key).dump()?)?;
+        let doc = model.to_json_with_key(key).dump()?;
+        let tmp = self.dir.join(format!(
+            ".{}.{}-{}.tmp",
+            key.file_name(),
+            std::process::id(),
+            PUT_SEQ.fetch_add(1, Ordering::Relaxed),
+        ));
+        std::fs::write(&tmp, &doc)?;
         std::fs::rename(&tmp, &path)?;
-        Ok(())
+        Ok(doc.len() as u64)
     }
 
     /// All entries, sorted by file name (deterministic `ls` order).
     pub fn entries(&self) -> Result<Vec<CacheEntry>> {
+        Ok(self
+            .load_all()?
+            .into_iter()
+            .map(|(key, _, file, bytes)| CacheEntry { key, file, bytes })
+            .collect())
+    }
+
+    /// Every entry fully deserialized, sorted by file name — the service
+    /// registry's warm-load path. A corrupt entry is an error, never a
+    /// silent skip.
+    pub fn load_all(&self) -> Result<Vec<(ModelKey, CachedModel, PathBuf, u64)>> {
         let mut out = Vec::new();
         for entry in std::fs::read_dir(&self.dir)? {
             let entry = entry?;
@@ -790,16 +824,13 @@ impl ModelCache {
             {
                 continue;
             }
-            let (key, _) = CachedModel::from_json_checked(&Json::parse(
+            let (key, model) = CachedModel::from_json_checked(&Json::parse(
                 &std::fs::read_to_string(&path)?,
             )?)?;
-            out.push(CacheEntry {
-                key,
-                bytes: entry.metadata()?.len(),
-                file: path,
-            });
+            let bytes = entry.metadata()?.len();
+            out.push((key, model, path, bytes));
         }
-        out.sort_by(|a, b| a.file.cmp(&b.file));
+        out.sort_by(|a, b| a.2.cmp(&b.2));
         Ok(out)
     }
 
@@ -812,7 +843,7 @@ impl ModelCache {
             if path
                 .file_name()
                 .and_then(|n| n.to_str())
-                .is_some_and(|n| n.ends_with(".model.json") || n.ends_with(".model.json.tmp"))
+                .is_some_and(|n| n.ends_with(".model.json") || n.ends_with(".tmp"))
             {
                 std::fs::remove_file(&path)?;
                 removed += 1;

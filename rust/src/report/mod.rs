@@ -499,6 +499,30 @@ pub fn replay_report(res: &ReplayResults) -> String {
     out
 }
 
+/// Service throughput report (the `ecopt loadgen --report` output and
+/// the `service-smoke` CI artifact): request counts, shed/error
+/// accounting, requests/sec and tail latency of one loadgen run. The
+/// DETERMINISTIC transcript lives in `--out`; this report carries the
+/// timing numbers deliberately kept out of it.
+pub fn loadgen_report(o: &crate::service::LoadgenOutcome) -> String {
+    let mut out = String::from("# ecoptd loadgen throughput\n\n");
+    let _ = writeln!(out, "| metric | value |\n|---|---|");
+    let _ = writeln!(out, "| requests | {} |", o.requests);
+    for (kind, n) in &o.by_kind {
+        let _ = writeln!(out, "| · {kind} | {n} |");
+    }
+    let _ = writeln!(out, "| ok | {} |", o.ok);
+    let _ = writeln!(out, "| errors | {} |", o.errors);
+    let _ = writeln!(out, "| shed (503) | {} |", o.shed);
+    let _ = writeln!(out, "| elapsed | {:.3} s |", o.elapsed_s);
+    let _ = writeln!(out, "| throughput | {:.1} req/s |", o.rps);
+    let _ = writeln!(out, "| p50 latency | {} µs |", o.p50_us);
+    let _ = writeln!(out, "| p95 latency | {} µs |", o.p95_us);
+    let _ = writeln!(out, "| p99 latency | {} µs |", o.p99_us);
+    let _ = writeln!(out, "| max latency | {} µs |", o.max_us);
+    out
+}
+
 /// Render one numbered artifact ("1".."5" tables, "f1".."f10" figures).
 pub fn render(res: &ExperimentResults, campaign: &CampaignSpec, what: &str) -> Result<String> {
     match what {

@@ -1,0 +1,363 @@
+//! Deterministic load generator + one-shot client for `ecoptd`.
+//!
+//! `ecopt loadgen` measures a live daemon: it fetches the registry
+//! listing once, derives a **seeded request mix** over the listed models
+//! (predict / optimize / registry), fans the requests out over a fixed
+//! number of persistent connections on the [`WorkerPool`], and records
+//! per-request latency.
+//!
+//! # Determinism contract
+//!
+//! Request `i` is generated from `Rng::for_stream(seed ^
+//! SERVICE_SEED_DOMAIN, i)` and the **transcript** pairs every request
+//! line with its response line in request-index order — never arrival
+//! order, never with timestamps. Against a daemon in the same registry
+//! state, two same-seed runs therefore produce **byte-identical**
+//! transcripts (predict/optimize are pure model math, the registry
+//! listing carries no counters, and the mix never mutates server state)
+//! — the property the `service-smoke` CI job locks by running the
+//! generator twice and `cmp`-ing the transcripts. Latency and
+//! requests/sec live only in the throughput report, outside the
+//! transcript.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::config::Mhz;
+use crate::energy::Constraints;
+use crate::service::protocol::{line_code, line_is_ok, Request, CODE_OVERLOADED};
+use crate::service::SERVICE_SEED_DOMAIN;
+use crate::util::json::Json;
+use crate::util::pool::WorkerPool;
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+
+/// One `ecopt loadgen` invocation.
+#[derive(Debug, Clone)]
+pub struct LoadgenOptions {
+    /// Daemon address, `host:port`.
+    pub addr: String,
+    /// Total requests to issue.
+    pub requests: usize,
+    /// Persistent connections to spread them over.
+    pub connections: usize,
+    /// Mix seed (domain-separated under [`SERVICE_SEED_DOMAIN`]).
+    pub seed: u64,
+}
+
+impl Default for LoadgenOptions {
+    fn default() -> Self {
+        LoadgenOptions {
+            addr: "127.0.0.1:4017".to_string(),
+            requests: 400,
+            connections: 4,
+            seed: 0xEC0_97,
+        }
+    }
+}
+
+impl LoadgenOptions {
+    /// CI smoke sizing: small but still multi-connection.
+    pub fn quick(mut self) -> Self {
+        self.requests = 60;
+        self.connections = 2;
+        self
+    }
+}
+
+/// What one loadgen run produced.
+#[derive(Debug, Clone)]
+pub struct LoadgenOutcome {
+    /// Deterministic request/response transcript (see module docs).
+    pub transcript: String,
+    pub requests: usize,
+    pub ok: usize,
+    pub errors: usize,
+    /// 503-style responses (load shedding observed).
+    pub shed: usize,
+    /// Requests per kind, in mix order: predict, optimize, registry.
+    pub by_kind: Vec<(String, usize)>,
+    pub elapsed_s: f64,
+    pub rps: f64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+impl LoadgenOutcome {
+    /// Machine-readable summary (CI asserts on `shed`/`errors`).
+    pub fn stats_json(&self) -> String {
+        format!(
+            "{{\"requests\":{},\"ok\":{},\"errors\":{},\"shed\":{},\"rps\":{:.1},\"p50_us\":{},\"p95_us\":{},\"p99_us\":{}}}",
+            self.requests, self.ok, self.errors, self.shed, self.rps, self.p50_us, self.p95_us,
+            self.p99_us
+        )
+    }
+}
+
+/// A model a request can target, learned from the daemon's registry
+/// listing (only entries that published query hints are usable).
+#[derive(Debug, Clone)]
+struct Target {
+    app: String,
+    arch: String,
+    freqs: Vec<Mhz>,
+    max_cores: usize,
+}
+
+/// Send one request line and read the single response line (30 s guard
+/// so a dead daemon fails instead of hanging CI).
+pub fn request_once(addr: &str, line: &str) -> Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    stream.write_all(line.as_bytes())?;
+    stream.write_all(b"\n")?;
+    read_response_line(&mut BufReader::new(stream))
+}
+
+fn read_response_line<R: Read>(reader: &mut BufReader<R>) -> Result<String> {
+    let mut resp = String::new();
+    let n = reader.read_line(&mut resp)?;
+    if n == 0 {
+        return Err(Error::Data("connection closed before a response arrived".into()));
+    }
+    Ok(resp.trim_end().to_string())
+}
+
+/// Fetch and parse the daemon's registry listing.
+fn fetch_targets(addr: &str) -> Result<Vec<Target>> {
+    let line = request_once(addr, &Request::Registry.to_line()?)?;
+    if !line_is_ok(&line) {
+        return Err(Error::Data(format!("registry request failed: {line}")));
+    }
+    let j = Json::parse(&line)?;
+    let mut out = Vec::new();
+    for e in j.get("entries")?.as_arr()? {
+        let freqs: Vec<Mhz> = e
+            .get("freqs")?
+            .as_arr()?
+            .iter()
+            .map(|f| f.as_u32())
+            .collect::<Result<_>>()?;
+        let max_cores = e.get("max_cores")?.as_usize()?;
+        if freqs.is_empty() || max_cores == 0 {
+            continue;
+        }
+        out.push(Target {
+            app: e.get("app")?.as_str()?.to_string(),
+            arch: e.get("arch")?.as_str()?.to_string(),
+            freqs,
+            max_cores,
+        });
+    }
+    Ok(out)
+}
+
+/// Generate request `i` of the seeded mix (pure function of seed, index,
+/// and target list).
+fn gen_request(seed: u64, i: usize, targets: &[Target]) -> Request {
+    let mut rng = Rng::for_stream(seed ^ SERVICE_SEED_DOMAIN, i as u64);
+    let roll = rng.below(10);
+    let t = &targets[rng.below(targets.len())];
+    if roll < 5 {
+        Request::Predict {
+            app: t.app.clone(),
+            arch: Some(t.arch.clone()),
+            tag: None,
+            f_mhz: t.freqs[rng.below(t.freqs.len())],
+            cores: 1 + rng.below(t.max_cores),
+            input: 1 + rng.below(3) as u32,
+        }
+    } else if roll < 8 {
+        let input = 1 + rng.below(3) as u32;
+        let constraints = match rng.below(4) {
+            0 => Constraints::default(),
+            1 => Constraints {
+                max_cores: Some(1 + rng.below(t.max_cores)),
+                ..Default::default()
+            },
+            2 => Constraints {
+                max_f_mhz: Some(t.freqs[rng.below(t.freqs.len())]),
+                ..Default::default()
+            },
+            _ => Constraints {
+                min_cores: Some(1 + rng.below(t.max_cores)),
+                ..Default::default()
+            },
+        };
+        Request::Optimize {
+            app: t.app.clone(),
+            arch: Some(t.arch.clone()),
+            tag: None,
+            input,
+            constraints,
+        }
+    } else {
+        Request::Registry
+    }
+}
+
+/// Run the generator against a live daemon.
+pub fn run_loadgen(opts: &LoadgenOptions) -> Result<LoadgenOutcome> {
+    let targets = fetch_targets(&opts.addr)?;
+    if targets.is_empty() {
+        return Err(Error::Data(
+            "daemon registry lists no usable models — populate the model cache first \
+             (e.g. `ecopt replay --quick --cache-dir DIR`, then `ecopt serve --cache-dir DIR`)"
+                .into(),
+        ));
+    }
+    let n = opts.requests.max(1);
+    let conns = opts.connections.clamp(1, n);
+    let requests: Vec<Request> = (0..n).map(|i| gen_request(opts.seed, i, &targets)).collect();
+    let lines: Vec<String> = requests
+        .iter()
+        .map(|r| r.to_line())
+        .collect::<Result<_>>()?;
+
+    // Connection c owns request indices i ≡ c (mod conns); responses are
+    // keyed by index so the merged transcript is scheduling-independent.
+    let lines_ref = &lines;
+    let addr = opts.addr.as_str();
+    let started = Instant::now();
+    let per_conn: Vec<Vec<(usize, String, u64)>> =
+        WorkerPool::new(conns).try_run(conns, |c| {
+            let mut stream = TcpStream::connect(addr)?;
+            stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+            let mut reader = BufReader::new(stream.try_clone()?);
+            let mut out = Vec::new();
+            let mut i = c;
+            while i < n {
+                let t0 = Instant::now();
+                stream.write_all(lines_ref[i].as_bytes())?;
+                stream.write_all(b"\n")?;
+                let resp = read_response_line(&mut reader)?;
+                out.push((i, resp, t0.elapsed().as_micros() as u64));
+                i += conns;
+            }
+            Ok(out)
+        })?;
+    let elapsed_s = started.elapsed().as_secs_f64();
+
+    let mut responses: Vec<Option<(String, u64)>> = vec![None; n];
+    for bucket in per_conn {
+        for (i, resp, us) in bucket {
+            responses[i] = Some((resp, us));
+        }
+    }
+
+    let mut transcript = String::with_capacity(n * 160);
+    transcript.push_str(&format!(
+        "# ecopt loadgen transcript v1 | seed {} | requests {} | connections {}\n",
+        opts.seed, n, conns
+    ));
+    let mut ok = 0;
+    let mut errors = 0;
+    let mut shed = 0;
+    let mut latencies: Vec<u64> = Vec::with_capacity(n);
+    let mut kind_counts = [0usize; 3];
+    for (i, slot) in responses.iter().enumerate() {
+        let (resp, us) = slot.as_ref().expect("every request got a response");
+        transcript.push_str(&format!("{i:06} > {}\n{i:06} < {resp}\n", lines[i]));
+        if line_is_ok(resp) {
+            ok += 1;
+        } else {
+            errors += 1;
+            if line_code(resp) == Some(CODE_OVERLOADED) {
+                shed += 1;
+            }
+        }
+        latencies.push(*us);
+        match &requests[i] {
+            Request::Predict { .. } => kind_counts[0] += 1,
+            Request::Optimize { .. } => kind_counts[1] += 1,
+            _ => kind_counts[2] += 1,
+        }
+    }
+    latencies.sort_unstable();
+    let pct = |p: usize| latencies[(latencies.len() * p / 100).min(latencies.len() - 1)];
+    Ok(LoadgenOutcome {
+        transcript,
+        requests: n,
+        ok,
+        errors,
+        shed,
+        by_kind: vec![
+            ("predict".to_string(), kind_counts[0]),
+            ("optimize".to_string(), kind_counts[1]),
+            ("registry".to_string(), kind_counts[2]),
+        ],
+        elapsed_s,
+        rps: n as f64 / elapsed_s.max(1e-9),
+        p50_us: pct(50),
+        p95_us: pct(95),
+        p99_us: pct(99),
+        max_us: *latencies.last().expect("n >= 1"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn targets() -> Vec<Target> {
+        vec![
+            Target {
+                app: "a".into(),
+                arch: "custom-node".into(),
+                freqs: vec![1200, 1700, 2200],
+                max_cores: 8,
+            },
+            Target {
+                app: "b".into(),
+                arch: "custom-node".into(),
+                freqs: vec![1200, 2200],
+                max_cores: 4,
+            },
+        ]
+    }
+
+    #[test]
+    fn request_mix_is_a_pure_function_of_seed_and_index() {
+        let ts = targets();
+        for i in 0..200 {
+            let a = gen_request(42, i, &ts);
+            let b = gen_request(42, i, &ts);
+            assert_eq!(a, b, "request {i} must be deterministic");
+            assert_eq!(a.to_line().unwrap(), b.to_line().unwrap());
+        }
+        // Different seeds produce a different mix somewhere.
+        let differs = (0..200).any(|i| gen_request(1, i, &ts) != gen_request(2, i, &ts));
+        assert!(differs);
+    }
+
+    #[test]
+    fn generated_requests_stay_in_bounds() {
+        let ts = targets();
+        let mut kinds = [0usize; 3];
+        for i in 0..500 {
+            match gen_request(7, i, &ts) {
+                Request::Predict {
+                    f_mhz, cores, input, ..
+                } => {
+                    kinds[0] += 1;
+                    assert!([1200u32, 1700, 2200].contains(&f_mhz));
+                    assert!((1..=8).contains(&cores));
+                    assert!((1..=3).contains(&input));
+                }
+                Request::Optimize { constraints, .. } => {
+                    kinds[1] += 1;
+                    if let Some(c) = constraints.max_cores {
+                        assert!((1..=8).contains(&c));
+                    }
+                }
+                Request::Registry => kinds[2] += 1,
+                other => panic!("unexpected kind in mix: {other:?}"),
+            }
+        }
+        // All three kinds appear in a 500-request mix.
+        assert!(kinds.iter().all(|&k| k > 0), "mix {kinds:?}");
+    }
+}

@@ -1,0 +1,79 @@
+//! `ecoptd` — the energy-advisor service (ISSUE 4 tentpole).
+//!
+//! Everything before this module answers the paper's question — "what
+//! (frequency, cores) configuration minimizes energy for this app on
+//! this node?" — by running the whole offline pipeline per invocation.
+//! `ecoptd` turns the trained models into a long-running, queryable
+//! subsystem: a std-only TCP daemon speaking a versioned line-delimited
+//! JSON protocol ([`protocol`]), backed by a sharded in-memory
+//! [`registry::ModelRegistry`] that warm-loads from (and writes through
+//! to) the on-disk [`crate::persist::ModelCache`], so the daemon and the
+//! batch pipeline share one persistence story.
+//!
+//! * [`protocol`] — request/response schema, versioning, error codes;
+//! * [`registry`] — N-shard RwLock registry keyed by the `ModelCache`
+//!   key digest, LRU eviction under a byte budget, memoized `optimize`
+//!   consults per `(key, input, constraint-set)` (the same memoization
+//!   discipline `EcoptGovernor` applies per regime);
+//! * [`server`] — accept loop + worker fan-out on the existing
+//!   [`crate::util::pool::WorkerPool`], bounded connection queue with
+//!   503-style load shedding so the daemon degrades instead of stalling;
+//! * [`loadgen`] — the deterministic load generator (`ecopt loadgen`):
+//!   a seeded request mix over the registry's models under
+//!   [`SERVICE_SEED_DOMAIN`], producing a byte-reproducible transcript
+//!   plus a requests/sec + tail-latency report
+//!   (`benches/service_throughput.rs` pins the baseline).
+//!
+//! See `DESIGN.md` §9 for the full architecture.
+
+pub mod loadgen;
+pub mod protocol;
+pub mod registry;
+pub mod server;
+
+pub use loadgen::{run_loadgen, LoadgenOptions, LoadgenOutcome};
+pub use protocol::{Request, PROTOCOL_VERSION};
+pub use registry::{ModelRegistry, RegistryStats};
+pub use server::{EcoptServer, ServerHandle, ServiceReport};
+
+use std::path::PathBuf;
+
+/// Seed-domain separator for service load generation: request `i` of an
+/// `ecopt loadgen` run draws from `Rng::for_stream(seed ^ DOMAIN, i)` —
+/// disjoint from the characterization (…0001), comparison (…0002),
+/// fleet (…0003) and replay (…0004) domains.
+pub const SERVICE_SEED_DOMAIN: u64 = 0xC4A2_AC7E_0000_0005;
+
+/// Daemon configuration (`ecopt serve` flags).
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Bind address; port 0 asks the OS for an ephemeral port (tests and
+    /// benches read it back via [`EcoptServer::local_addr`]).
+    pub addr: String,
+    /// Request workers; 0 = one per available hardware thread.
+    pub workers: usize,
+    /// Bounded accept-queue depth: connections arriving while the queue
+    /// is full get an immediate 503-style response instead of stalling
+    /// the daemon.
+    pub queue_cap: usize,
+    /// Registry shard count (clamped to >= 1).
+    pub shards: usize,
+    /// Registry LRU byte budget across all shards.
+    pub byte_budget: usize,
+    /// On-disk model cache to warm-load from and write trained models
+    /// back through; `None` serves from memory only.
+    pub cache_dir: Option<PathBuf>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            addr: "127.0.0.1:4017".to_string(),
+            workers: 0,
+            queue_cap: 64,
+            shards: 8,
+            byte_budget: 64 * 1024 * 1024,
+            cache_dir: None,
+        }
+    }
+}

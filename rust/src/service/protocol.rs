@@ -1,0 +1,440 @@
+//! `ecoptd` wire protocol: versioned line-delimited JSON.
+//!
+//! One request per line, one response line per request, over a plain TCP
+//! stream (connections are kept alive until the client closes). Both
+//! sides serialize through `util::json`, whose object keys are sorted
+//! (BTreeMap) and whose float writer is shortest-round-trip — so a given
+//! request or response has exactly ONE byte representation, the property
+//! the deterministic loadgen transcript relies on.
+//!
+//! Every message carries `"v": 1` ([`PROTOCOL_VERSION`]). A request with
+//! a missing or different version is rejected with a 400-style response
+//! that names the supported version — clients never silently talk past
+//! an incompatible daemon. Responses carry `"ok": true|false`; failures
+//! add `"code"` (HTTP-flavored: 400 bad request, 404 no such model, 409
+//! infeasible constraints, 500 internal, 503 overloaded) and `"error"`.
+//!
+//! Request kinds:
+//!
+//! | kind       | payload                                               |
+//! |------------|-------------------------------------------------------|
+//! | `predict`  | app, [arch], [tag], f_mhz, cores, input               |
+//! | `optimize` | app, [arch], [tag], input, [constraints]              |
+//! | `train`    | app, [arch] — async; responds with a job id           |
+//! | `status`   | job                                                   |
+//! | `registry` | — (list loaded models)                                |
+//! | `stats`    | — (served/shed/error counters, registry accounting)   |
+//! | `shutdown` | — (graceful stop; the response is sent first)         |
+
+use crate::config::Mhz;
+use crate::energy::Constraints;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Wire protocol version; bump on incompatible schema changes.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Response / error codes (HTTP-flavored).
+pub const CODE_BAD_REQUEST: u64 = 400;
+pub const CODE_NOT_FOUND: u64 = 404;
+pub const CODE_INFEASIBLE: u64 = 409;
+pub const CODE_INTERNAL: u64 = 500;
+pub const CODE_OVERLOADED: u64 = 503;
+
+/// A parsed client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// SVR runtime (+ Eq. 7 power, Eq. 8 energy) at one configuration.
+    Predict {
+        app: String,
+        /// Architecture the model was trained for; None = the daemon's
+        /// configured default architecture.
+        arch: Option<String>,
+        /// Exact input-tag; None = deterministic pick (lowest tag).
+        tag: Option<String>,
+        f_mhz: Mhz,
+        cores: usize,
+        input: u32,
+    },
+    /// Energy-optimal configuration for an app/input/arch.
+    Optimize {
+        app: String,
+        arch: Option<String>,
+        tag: Option<String>,
+        input: u32,
+        constraints: Constraints,
+    },
+    /// Run characterization + SVR fit for an app (async; job id).
+    Train { app: String, arch: Option<String> },
+    /// Poll an async training job.
+    Status { job: u64 },
+    /// List loaded models.
+    Registry,
+    /// Service counters.
+    Stats,
+    /// Graceful stop.
+    Shutdown,
+}
+
+impl Request {
+    /// The wire kind tag.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Request::Predict { .. } => "predict",
+            Request::Optimize { .. } => "optimize",
+            Request::Train { .. } => "train",
+            Request::Status { .. } => "status",
+            Request::Registry => "registry",
+            Request::Stats => "stats",
+            Request::Shutdown => "shutdown",
+        }
+    }
+
+    /// Serialize to the (unique) wire form.
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("v", Json::Num(PROTOCOL_VERSION as f64)),
+            ("kind", Json::Str(self.kind().to_string())),
+        ];
+        match self {
+            Request::Predict {
+                app,
+                arch,
+                tag,
+                f_mhz,
+                cores,
+                input,
+            } => {
+                fields.push(("app", Json::Str(app.clone())));
+                if let Some(a) = arch {
+                    fields.push(("arch", Json::Str(a.clone())));
+                }
+                if let Some(t) = tag {
+                    fields.push(("tag", Json::Str(t.clone())));
+                }
+                fields.push(("f_mhz", Json::Num(*f_mhz as f64)));
+                fields.push(("cores", Json::Num(*cores as f64)));
+                fields.push(("input", Json::Num(*input as f64)));
+            }
+            Request::Optimize {
+                app,
+                arch,
+                tag,
+                input,
+                constraints,
+            } => {
+                fields.push(("app", Json::Str(app.clone())));
+                if let Some(a) = arch {
+                    fields.push(("arch", Json::Str(a.clone())));
+                }
+                if let Some(t) = tag {
+                    fields.push(("tag", Json::Str(t.clone())));
+                }
+                fields.push(("input", Json::Num(*input as f64)));
+                let c = constraints_to_json(constraints);
+                if c != Json::Obj(Default::default()) {
+                    fields.push(("constraints", c));
+                }
+            }
+            Request::Train { app, arch } => {
+                fields.push(("app", Json::Str(app.clone())));
+                if let Some(a) = arch {
+                    fields.push(("arch", Json::Str(a.clone())));
+                }
+            }
+            Request::Status { job } => fields.push(("job", Json::Num(*job as f64))),
+            Request::Registry | Request::Stats | Request::Shutdown => {}
+        }
+        Json::obj(fields)
+    }
+
+    /// One request line, newline excluded.
+    pub fn to_line(&self) -> Result<String> {
+        self.to_json().dump()
+    }
+
+    /// Parse a request line. Version and kind are checked here; field
+    /// errors surface as `Error::Json` for the server to wrap in a
+    /// 400-style response.
+    pub fn parse(line: &str) -> Result<Request> {
+        let j = Json::parse(line)?;
+        let v = match j.opt("v") {
+            Some(v) => v.as_u64()?,
+            None => {
+                return Err(Error::Json(format!(
+                    "missing protocol version (this daemon speaks v{PROTOCOL_VERSION})"
+                )))
+            }
+        };
+        if v != PROTOCOL_VERSION {
+            return Err(Error::Json(format!(
+                "unsupported protocol version {v} (this daemon speaks v{PROTOCOL_VERSION})"
+            )));
+        }
+        let kind = j.get("kind")?.as_str()?;
+        let opt_str = |field: &str| -> Result<Option<String>> {
+            match j.opt(field) {
+                None | Some(Json::Null) => Ok(None),
+                Some(s) => Ok(Some(s.as_str()?.to_string())),
+            }
+        };
+        match kind {
+            "predict" => Ok(Request::Predict {
+                app: j.get("app")?.as_str()?.to_string(),
+                arch: opt_str("arch")?,
+                tag: opt_str("tag")?,
+                f_mhz: j.get("f_mhz")?.as_u32()?,
+                cores: j.get("cores")?.as_usize()?,
+                input: j.get("input")?.as_u32()?,
+            }),
+            "optimize" => Ok(Request::Optimize {
+                app: j.get("app")?.as_str()?.to_string(),
+                arch: opt_str("arch")?,
+                tag: opt_str("tag")?,
+                input: j.get("input")?.as_u32()?,
+                constraints: match j.opt("constraints") {
+                    None | Some(Json::Null) => Constraints::default(),
+                    Some(c) => constraints_from_json(c)?,
+                },
+            }),
+            "train" => Ok(Request::Train {
+                app: j.get("app")?.as_str()?.to_string(),
+                arch: opt_str("arch")?,
+            }),
+            "status" => Ok(Request::Status {
+                job: j.get("job")?.as_u64()?,
+            }),
+            "registry" => Ok(Request::Registry),
+            "stats" => Ok(Request::Stats),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(Error::Json(format!("unknown request kind '{other}'"))),
+        }
+    }
+}
+
+/// Constraints → wire form (absent fields mean unconstrained).
+pub fn constraints_to_json(c: &Constraints) -> Json {
+    let mut fields: Vec<(&str, Json)> = Vec::new();
+    if let Some(t) = c.max_time_s {
+        fields.push(("max_time_s", Json::Num(t)));
+    }
+    if let Some(f) = c.min_f_mhz {
+        fields.push(("min_f_mhz", Json::Num(f as f64)));
+    }
+    if let Some(f) = c.max_f_mhz {
+        fields.push(("max_f_mhz", Json::Num(f as f64)));
+    }
+    if let Some(p) = c.min_cores {
+        fields.push(("min_cores", Json::Num(p as f64)));
+    }
+    if let Some(p) = c.max_cores {
+        fields.push(("max_cores", Json::Num(p as f64)));
+    }
+    Json::obj(fields)
+}
+
+/// Wire form → constraints.
+pub fn constraints_from_json(j: &Json) -> Result<Constraints> {
+    let opt_f64 = |field: &str| -> Result<Option<f64>> {
+        match j.opt(field) {
+            None | Some(Json::Null) => Ok(None),
+            Some(v) => Ok(Some(v.as_f64()?)),
+        }
+    };
+    let opt_u32 = |field: &str| -> Result<Option<u32>> {
+        match j.opt(field) {
+            None | Some(Json::Null) => Ok(None),
+            Some(v) => Ok(Some(v.as_u32()?)),
+        }
+    };
+    let opt_usize = |field: &str| -> Result<Option<usize>> {
+        match j.opt(field) {
+            None | Some(Json::Null) => Ok(None),
+            Some(v) => Ok(Some(v.as_usize()?)),
+        }
+    };
+    Ok(Constraints {
+        max_time_s: opt_f64("max_time_s")?,
+        min_f_mhz: opt_u32("min_f_mhz")?,
+        max_f_mhz: opt_u32("max_f_mhz")?,
+        min_cores: opt_usize("min_cores")?,
+        max_cores: opt_usize("max_cores")?,
+    })
+}
+
+/// A success response line: `{"ok":true,"v":1,...body}`.
+///
+/// Bodies must not carry a top-level `"code"` field — that key is
+/// reserved for [`err_line`], and [`is_err_line`] relies on it (see
+/// there).
+pub fn ok_line(body: Vec<(&str, Json)>) -> String {
+    debug_assert!(
+        body.iter().all(|(k, _)| *k != "code"),
+        "\"code\" is reserved for err_line"
+    );
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("v", Json::Num(PROTOCOL_VERSION as f64)),
+        ("ok", Json::Bool(true)),
+    ];
+    fields.extend(body);
+    // A response must never contain non-finite numbers (`dump` errors on
+    // them); callers pre-check, so a failure here is a daemon bug — fall
+    // back to an internal-error line rather than crashing the worker.
+    Json::obj(fields)
+        .dump()
+        .unwrap_or_else(|_| err_line(CODE_INTERNAL, "non-finite number in response"))
+}
+
+/// An error response line: `{"ok":false,"v":1,"code":…,"error":…}`.
+pub fn err_line(code: u64, msg: &str) -> String {
+    Json::obj(vec![
+        ("v", Json::Num(PROTOCOL_VERSION as f64)),
+        ("ok", Json::Bool(false)),
+        ("code", Json::Num(code as f64)),
+        ("error", Json::Str(msg.to_string())),
+    ])
+    .dump()
+    .expect("error responses contain no floats")
+}
+
+/// Server-side fast path: whether a response line the daemon ITSELF
+/// just built reports an error — without re-parsing the JSON it just
+/// serialized. Sound because [`err_line`] is the only producer of
+/// failure lines, object keys serialize sorted so `"code"` comes first
+/// there, and [`ok_line`] never emits a top-level `"code"` field
+/// (enforced by its debug assertion). Locked by a unit test below; for
+/// lines from a FOREIGN source use [`line_is_ok`] instead.
+pub fn is_err_line(line: &str) -> bool {
+    line.starts_with("{\"code\":")
+}
+
+/// Whether a response line reports success.
+pub fn line_is_ok(line: &str) -> bool {
+    Json::parse(line)
+        .ok()
+        .and_then(|j| j.get("ok").ok().and_then(|v| v.as_bool().ok()))
+        .unwrap_or(false)
+}
+
+/// The error code of a response line (None for success / unparseable).
+pub fn line_code(line: &str) -> Option<u64> {
+    let j = Json::parse(line).ok()?;
+    j.opt("code")?.as_u64().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip_all_kinds() {
+        let reqs = vec![
+            Request::Predict {
+                app: "swaptions".into(),
+                arch: Some("custom-node".into()),
+                tag: None,
+                f_mhz: 1800,
+                cores: 8,
+                input: 2,
+            },
+            Request::Optimize {
+                app: "raytrace".into(),
+                arch: None,
+                tag: Some("n1#abc".into()),
+                input: 3,
+                constraints: Constraints {
+                    max_cores: Some(8),
+                    max_f_mhz: Some(1800),
+                    ..Default::default()
+                },
+            },
+            Request::Train {
+                app: "blackscholes".into(),
+                arch: None,
+            },
+            Request::Status { job: 7 },
+            Request::Registry,
+            Request::Stats,
+            Request::Shutdown,
+        ];
+        for r in reqs {
+            let line = r.to_line().unwrap();
+            assert!(!line.contains('\n'), "wire form must be one line");
+            let back = Request::parse(&line).unwrap();
+            assert_eq!(back, r, "roundtrip of {line}");
+            // Unique byte representation: re-serialization is identical.
+            assert_eq!(back.to_line().unwrap(), line);
+        }
+    }
+
+    #[test]
+    fn version_is_enforced() {
+        assert!(Request::parse(r#"{"kind":"stats"}"#).is_err(), "missing v");
+        assert!(
+            Request::parse(r#"{"v":2,"kind":"stats"}"#).is_err(),
+            "future version"
+        );
+        assert!(Request::parse(r#"{"v":1,"kind":"stats"}"#).is_ok());
+    }
+
+    #[test]
+    fn unknown_kind_and_garbage_are_errors() {
+        assert!(Request::parse(r#"{"v":1,"kind":"frobnicate"}"#).is_err());
+        assert!(Request::parse("not json at all").is_err());
+        assert!(Request::parse(r#"{"v":1,"kind":"predict"}"#).is_err(), "missing fields");
+    }
+
+    #[test]
+    fn response_lines_parse() {
+        let ok = ok_line(vec![("x", Json::Num(1.0))]);
+        assert!(line_is_ok(&ok));
+        assert_eq!(line_code(&ok), None);
+        let err = err_line(CODE_OVERLOADED, "server overloaded");
+        assert!(!line_is_ok(&err));
+        assert_eq!(line_code(&err), Some(CODE_OVERLOADED));
+        assert!(!err.contains('\n'));
+    }
+
+    #[test]
+    fn is_err_line_agrees_with_full_parse() {
+        // The fast path must agree with the parsing path on every line
+        // either constructor can produce — including bodies whose first
+        // sorted key precedes "ok" (e.g. "by_kind") and empty bodies.
+        let oks = [
+            ok_line(vec![]),
+            ok_line(vec![("by_kind", Json::obj(vec![]))]),
+            ok_line(vec![("a", Json::Num(0.0)), ("zz", Json::Str("s".into()))]),
+        ];
+        for line in &oks {
+            assert!(!is_err_line(line), "{line}");
+            assert!(line_is_ok(line), "{line}");
+        }
+        let codes = [
+            CODE_BAD_REQUEST,
+            CODE_NOT_FOUND,
+            CODE_INFEASIBLE,
+            CODE_INTERNAL,
+            CODE_OVERLOADED,
+        ];
+        for code in codes {
+            let line = err_line(code, "boom");
+            assert!(is_err_line(&line), "{line}");
+            assert!(!line_is_ok(&line), "{line}");
+        }
+    }
+
+    #[test]
+    fn constraints_roundtrip() {
+        let c = Constraints {
+            max_time_s: Some(12.5),
+            min_f_mhz: Some(1200),
+            max_f_mhz: Some(2200),
+            min_cores: Some(2),
+            max_cores: Some(16),
+        };
+        let back = constraints_from_json(&constraints_to_json(&c)).unwrap();
+        assert_eq!(back.canonical(), c.canonical());
+        let none = constraints_from_json(&Json::obj(vec![])).unwrap();
+        assert_eq!(none.canonical(), Constraints::default().canonical());
+    }
+}

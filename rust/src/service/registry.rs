@@ -1,0 +1,504 @@
+//! Sharded in-memory model registry behind `ecoptd`.
+//!
+//! N shards, each a `RwLock<HashMap>` keyed by the **same FNV-1a digest**
+//! `persist::config_digest` derives from `(app, input-tag, arch)` for the
+//! on-disk `ModelCache` file names — one key scheme end to end. Reads
+//! (the predict/optimize hot path) take a shard read lock and bump an
+//! atomic LRU tick; only inserts/evictions take a write lock, so lookups
+//! from all workers proceed concurrently.
+//!
+//! **LRU byte budget.** The registry holds at most `byte_budget` bytes of
+//! serialized model (per-shard budget = total / shards). An insert that
+//! would overflow its shard evicts least-recently-used entries first
+//! (tie-break: digest order, deterministic) — never the entry being
+//! inserted, so one oversized model still serves. Eviction only touches
+//! memory; the on-disk cache keeps the entry, and a later request for it
+//! misses in memory, not on disk (the server re-trains only on a true
+//! disk miss).
+//!
+//! **Write-through.** `insert` persists through the on-disk `ModelCache`
+//! *before* publishing in memory: a model the daemon has served can
+//! always be warm-loaded by the next daemon (or hit by the batch
+//! pipeline — they share the key scheme).
+//!
+//! **Memoized consults.** `optimize` answers are memoized per
+//! `(entry, input, constraint-set)` under [`crate::energy::Constraints::canonical`]
+//! — the same discipline `EcoptGovernor` applies per regime: the grid
+//! argmin runs once, every later consult is a map hit.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::arch::ArchProfile;
+use crate::config::Mhz;
+use crate::energy::{Constraints, EnergyModel, OptimalConfig};
+use crate::persist::{config_digest, CachedModel, ModelCache, ModelKey};
+use crate::Result;
+
+/// One resident model.
+pub struct ModelEntry {
+    pub key: ModelKey,
+    pub model: CachedModel,
+    /// Serialized size charged against the byte budget.
+    pub bytes: u64,
+    /// LRU tick of the last lookup.
+    last_used: AtomicU64,
+    /// Memoized `optimize` consults: canonical `(input, constraints)` →
+    /// grid argmin.
+    optima: Mutex<HashMap<String, OptimalConfig>>,
+}
+
+#[derive(Default)]
+struct Shard {
+    entries: HashMap<String, Arc<ModelEntry>>,
+    bytes: u64,
+}
+
+/// Registry counters (monotonic; `stats` surfaces them).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RegistryStats {
+    pub entries: usize,
+    pub bytes: u64,
+    pub shards: usize,
+    pub byte_budget: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+    pub consults: u64,
+    pub consult_memo_hits: u64,
+}
+
+/// The sharded store.
+pub struct ModelRegistry {
+    shards: Vec<RwLock<Shard>>,
+    /// Wire-lookup index: `app\x1farch` → (input-tag → digest), sorted
+    /// by tag so an unqualified [`ModelRegistry::resolve`] picks the
+    /// lowest tag deterministically. Clients address models by
+    /// `(app, arch)` (they don't know the tag digest); without this
+    /// index every request would scan all shards. Maintained on
+    /// insert/evict; lookups release it before touching a shard, so
+    /// the two lock levels never nest in reverse.
+    by_app: RwLock<HashMap<String, BTreeMap<String, String>>>,
+    budget_per_shard: u64,
+    byte_budget: u64,
+    clock: AtomicU64,
+    disk: Option<ModelCache>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    inserts: AtomicU64,
+    evictions: AtomicU64,
+    consults: AtomicU64,
+    consult_memo_hits: AtomicU64,
+}
+
+fn digest_of(key: &ModelKey) -> String {
+    config_digest(&[&key.app, &key.input, &key.arch])
+}
+
+/// Index key for the `(app, arch)` wire lookup (U+001F cannot appear in
+/// either field without being part of the name itself).
+fn app_arch_key(app: &str, arch: &str) -> String {
+    format!("{app}\u{1f}{arch}")
+}
+
+impl ModelRegistry {
+    /// Build an empty registry; `disk` is the write-through store.
+    pub fn new(shards: usize, byte_budget: usize, disk: Option<ModelCache>) -> ModelRegistry {
+        let shards = shards.max(1);
+        ModelRegistry {
+            shards: (0..shards).map(|_| RwLock::new(Shard::default())).collect(),
+            by_app: RwLock::new(HashMap::new()),
+            budget_per_shard: (byte_budget as u64 / shards as u64).max(1),
+            byte_budget: byte_budget as u64,
+            clock: AtomicU64::new(0),
+            disk,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            inserts: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            consults: AtomicU64::new(0),
+            consult_memo_hits: AtomicU64::new(0),
+        }
+    }
+
+    fn shard_index(&self, digest: &str) -> usize {
+        // The digest IS a u64 rendered as 16 hex chars; fall back to 0
+        // only if that invariant ever breaks.
+        (u64::from_str_radix(digest, 16).unwrap_or(0) % self.shards.len() as u64) as usize
+    }
+
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Load every complete entry of the on-disk cache into memory (in
+    /// deterministic file order, so LRU state after a warm start is
+    /// reproducible). Returns how many models are RESIDENT afterwards —
+    /// with a cache dir larger than the byte budget, eviction during
+    /// the load makes that fewer than the files read.
+    pub fn warm_load(&self) -> Result<usize> {
+        let Some(disk) = &self.disk else { return Ok(0) };
+        for (key, model, _, bytes) in disk.load_all()? {
+            self.insert_local(key, model, bytes);
+        }
+        Ok(self.stats().entries)
+    }
+
+    /// Insert without touching the disk (warm load / tests).
+    fn insert_local(&self, key: ModelKey, model: CachedModel, bytes: u64) -> Arc<ModelEntry> {
+        let digest = digest_of(&key);
+        let entry = Arc::new(ModelEntry {
+            key,
+            model,
+            bytes,
+            last_used: AtomicU64::new(self.tick()),
+            optima: Mutex::new(HashMap::new()),
+        });
+        let mut evicted: Vec<ModelKey> = Vec::new();
+        {
+            let shard = &self.shards[self.shard_index(&digest)];
+            let mut s = shard.write().expect("registry shard poisoned");
+            if let Some(old) = s.entries.insert(digest.clone(), Arc::clone(&entry)) {
+                s.bytes -= old.bytes;
+            }
+            s.bytes += entry.bytes;
+            self.inserts.fetch_add(1, Ordering::Relaxed);
+            // Evict LRU (never the entry just inserted) until under budget.
+            while s.bytes > self.budget_per_shard && s.entries.len() > 1 {
+                let victim = s
+                    .entries
+                    .iter()
+                    .filter(|(d, _)| **d != digest)
+                    .min_by_key(|(d, e)| (e.last_used.load(Ordering::Relaxed), (*d).clone()))
+                    .map(|(d, _)| d.clone());
+                match victim {
+                    Some(d) => {
+                        if let Some(e) = s.entries.remove(&d) {
+                            s.bytes -= e.bytes;
+                            evicted.push(e.key.clone());
+                            self.evictions.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    None => break,
+                }
+            }
+        }
+        // Index maintenance AFTER the shard lock is released (the two
+        // lock levels never nest; a resolve racing this window at worst
+        // reports a transient miss for a just-evicted entry).
+        let mut idx = self.by_app.write().expect("registry index poisoned");
+        idx.entry(app_arch_key(&entry.key.app, &entry.key.arch))
+            .or_default()
+            .insert(entry.key.input.clone(), digest);
+        for k in evicted {
+            let slot = app_arch_key(&k.app, &k.arch);
+            if let Some(tags) = idx.get_mut(&slot) {
+                tags.remove(&k.input);
+                if tags.is_empty() {
+                    idx.remove(&slot);
+                }
+            }
+        }
+        drop(idx);
+        entry
+    }
+
+    /// Insert a freshly-trained bundle: write-through to the on-disk
+    /// cache first (when configured), then publish in memory.
+    pub fn insert(&self, key: ModelKey, model: CachedModel) -> Result<Arc<ModelEntry>> {
+        let bytes = match &self.disk {
+            Some(disk) => disk.put(&key, &model)?,
+            None => model.serialized_len(&key)? as u64,
+        };
+        Ok(self.insert_local(key, model, bytes))
+    }
+
+    /// Re-admit an entry that is on disk but not resident (evicted, or
+    /// written by the batch pipeline after the daemon started): publish
+    /// it in memory without rewriting the file. `Ok(None)` = true disk
+    /// miss — the caller has to train.
+    pub fn admit_from_disk(&self, key: &ModelKey) -> Result<Option<Arc<ModelEntry>>> {
+        let Some(disk) = &self.disk else { return Ok(None) };
+        match disk.get(key)? {
+            Some(model) => {
+                let bytes = model.serialized_len(key)? as u64;
+                Ok(Some(self.insert_local(key.clone(), model, bytes)))
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// Exact-key lookup (read lock + LRU bump).
+    pub fn get(&self, key: &ModelKey) -> Option<Arc<ModelEntry>> {
+        let digest = digest_of(key);
+        let shard = &self.shards[self.shard_index(&digest)];
+        let s = shard.read().expect("registry shard poisoned");
+        match s.entries.get(&digest) {
+            Some(e) if e.key == *key => {
+                e.last_used.store(self.tick(), Ordering::Relaxed);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(Arc::clone(e))
+            }
+            _ => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Resolve a model by `(app, arch)` without knowing the input-tag
+    /// digest (what wire clients hold). `tag` narrows to an exact
+    /// input-tag; otherwise ties resolve deterministically to the lowest
+    /// tag string, so every same-state daemon picks the same model.
+    ///
+    /// Two short lock holds (index read, then one shard read) — the
+    /// request hot path never scans shards.
+    pub fn resolve(&self, app: &str, arch: &str, tag: Option<&str>) -> Option<Arc<ModelEntry>> {
+        let digest = {
+            let idx = self.by_app.read().expect("registry index poisoned");
+            idx.get(&app_arch_key(app, arch)).and_then(|tags| match tag {
+                Some(t) => tags.get(t).cloned(),
+                // BTreeMap: first value = lowest tag, deterministic.
+                None => tags.values().next().cloned(),
+            })
+        };
+        let found = digest.and_then(|d| {
+            let shard = &self.shards[self.shard_index(&d)];
+            let s = shard.read().expect("registry shard poisoned");
+            s.entries.get(&d).cloned()
+        });
+        match found {
+            Some(e) => {
+                e.last_used.store(self.tick(), Ordering::Relaxed);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(e)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// All resident entries, sorted by `(app, input-tag, arch)` — the
+    /// deterministic `registry` listing (no counters, no LRU state, so
+    /// the wire form is identical across same-content daemons).
+    pub fn list(&self) -> Vec<Arc<ModelEntry>> {
+        let mut out: Vec<Arc<ModelEntry>> = Vec::new();
+        for shard in &self.shards {
+            let s = shard.read().expect("registry shard poisoned");
+            out.extend(s.entries.values().cloned());
+        }
+        out.sort_by(|a, b| {
+            (&a.key.app, &a.key.input, &a.key.arch).cmp(&(&b.key.app, &b.key.input, &b.key.arch))
+        });
+        out
+    }
+
+    /// Memoized grid argmin for one entry: the first consult for a given
+    /// `(input, constraint-set)` runs [`EnergyModel::optimize`]; every
+    /// later one is a map hit. Infeasible constraint sets are NOT
+    /// memoized (they stay errors and stay cheap to re-report).
+    pub fn consult(
+        &self,
+        entry: &ModelEntry,
+        arch: &ArchProfile,
+        grid: &[(Mhz, usize)],
+        input: u32,
+        constraints: &Constraints,
+    ) -> Result<OptimalConfig> {
+        self.consults.fetch_add(1, Ordering::Relaxed);
+        let memo_key = format!("n{input}|{}", constraints.canonical());
+        if let Some(hit) = entry
+            .optima
+            .lock()
+            .expect("optima memo poisoned")
+            .get(&memo_key)
+        {
+            self.consult_memo_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(*hit);
+        }
+        // Compute outside the memo lock (argmin over the whole grid);
+        // concurrent first consults compute the same pure function.
+        let em = EnergyModel::for_arch(entry.model.power, entry.model.svr.clone(), arch.clone());
+        let opt = em.optimize(grid, input, constraints)?;
+        entry
+            .optima
+            .lock()
+            .expect("optima memo poisoned")
+            .insert(memo_key, opt);
+        Ok(opt)
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> RegistryStats {
+        let mut entries = 0;
+        let mut bytes = 0;
+        for shard in &self.shards {
+            let s = shard.read().expect("registry shard poisoned");
+            entries += s.entries.len();
+            bytes += s.bytes;
+        }
+        RegistryStats {
+            entries,
+            bytes,
+            shards: self.shards.len(),
+            byte_budget: self.byte_budget,
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            consults: self.consults.load(Ordering::Relaxed),
+            consult_memo_hits: self.consult_memo_hits.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::powermodel::PowerModel;
+    use crate::svr::{Standardizer, SvrModel, DIMS};
+
+    fn toy_bundle(b: f64) -> CachedModel {
+        CachedModel {
+            power: PowerModel::paper_eq9(),
+            svr: SvrModel {
+                train_x: vec![2.2, 32.0, 1.0, 1.2, 1.0, 1.0],
+                beta: vec![-40.0, 40.0],
+                b,
+                gamma: 0.05,
+                scaler: Standardizer::identity(DIMS),
+                iterations: 10,
+                n_support: 2,
+            },
+            cv: None,
+            test_mae: None,
+            test_pae_pct: None,
+        }
+    }
+
+    fn key(app: &str) -> ModelKey {
+        ModelKey::new(app, "n1#0123456789abcdef", "custom-node")
+    }
+
+    #[test]
+    fn insert_get_resolve() {
+        let reg = ModelRegistry::new(4, 1 << 20, None);
+        reg.insert(key("alpha"), toy_bundle(60.0)).unwrap();
+        reg.insert(key("beta"), toy_bundle(50.0)).unwrap();
+        assert!(reg.get(&key("alpha")).is_some());
+        assert!(reg.get(&key("gamma")).is_none());
+        let r = reg.resolve("beta", "custom-node", None).unwrap();
+        assert_eq!(r.key.app, "beta");
+        assert!(reg.resolve("beta", "other-arch", None).is_none());
+        assert!(reg
+            .resolve("beta", "custom-node", Some("n1#0123456789abcdef"))
+            .is_some());
+        assert!(reg.resolve("beta", "custom-node", Some("nope")).is_none());
+        let st = reg.stats();
+        assert_eq!(st.entries, 2);
+        assert!(st.bytes > 0);
+    }
+
+    #[test]
+    fn resolve_prefers_lowest_tag_deterministically() {
+        let reg = ModelRegistry::new(2, 1 << 20, None);
+        let k1 = ModelKey::new("app", "n1#aaa", "custom-node");
+        let k2 = ModelKey::new("app", "n2#bbb", "custom-node");
+        reg.insert(k2.clone(), toy_bundle(1.0)).unwrap();
+        reg.insert(k1.clone(), toy_bundle(2.0)).unwrap();
+        let r = reg.resolve("app", "custom-node", None).unwrap();
+        assert_eq!(r.key, k1, "lowest input-tag wins");
+    }
+
+    #[test]
+    fn lru_eviction_respects_byte_budget_and_recency() {
+        // One shard so the budget math is exact; entries are ~equal size.
+        let probe = toy_bundle(0.0);
+        let unit = probe.serialized_len(&key("probe")).unwrap();
+        let reg = ModelRegistry::new(1, unit * 2 + unit / 2, None);
+        reg.insert(key("a"), toy_bundle(1.0)).unwrap();
+        reg.insert(key("b"), toy_bundle(2.0)).unwrap();
+        // Touch "a" so "b" is the LRU victim when "c" arrives.
+        assert!(reg.get(&key("a")).is_some());
+        reg.insert(key("c"), toy_bundle(3.0)).unwrap();
+        assert!(reg.get(&key("a")).is_some(), "recently used survives");
+        assert!(reg.get(&key("b")).is_none(), "LRU entry evicted");
+        assert!(reg.get(&key("c")).is_some(), "new entry never evicted");
+        let st = reg.stats();
+        assert_eq!(st.entries, 2);
+        assert_eq!(st.evictions, 1);
+    }
+
+    #[test]
+    fn oversized_single_entry_still_serves() {
+        let reg = ModelRegistry::new(1, 8, None); // absurdly small budget
+        reg.insert(key("big"), toy_bundle(1.0)).unwrap();
+        assert!(reg.get(&key("big")).is_some());
+    }
+
+    #[test]
+    fn consult_is_memoized() {
+        let reg = ModelRegistry::new(2, 1 << 20, None);
+        let entry = reg.insert(key("app"), toy_bundle(60.0)).unwrap();
+        let arch = crate::arch::ArchProfile::from_node_spec(&crate::config::NodeSpec::default());
+        let grid =
+            crate::energy::config_grid_arch(&crate::config::CampaignSpec::default(), &arch);
+        let c = Constraints::default();
+        let a = reg.consult(&entry, &arch, &grid, 1, &c).unwrap();
+        let b = reg.consult(&entry, &arch, &grid, 1, &c).unwrap();
+        assert_eq!((a.f_mhz, a.cores), (b.f_mhz, b.cores));
+        assert_eq!(a.pred_energy_j, b.pred_energy_j);
+        let st = reg.stats();
+        assert_eq!(st.consults, 2);
+        assert_eq!(st.consult_memo_hits, 1);
+        // A different constraint set is its own memo slot.
+        let c2 = Constraints {
+            max_cores: Some(4),
+            ..Default::default()
+        };
+        let d = reg.consult(&entry, &arch, &grid, 1, &c2).unwrap();
+        assert!(d.cores <= 4);
+        assert_eq!(reg.stats().consult_memo_hits, 1);
+    }
+
+    #[test]
+    fn admit_from_disk_restores_evicted_entries() {
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        let cache = ModelCache::open(dir.path()).unwrap();
+        let unit = toy_bundle(0.0).serialized_len(&key("probe")).unwrap();
+        // Budget fits ONE entry: inserting "b" evicts "a" from memory,
+        // but both live on disk via write-through.
+        let reg = ModelRegistry::new(1, unit + unit / 2, Some(cache));
+        reg.insert(key("a"), toy_bundle(1.0)).unwrap();
+        reg.insert(key("b"), toy_bundle(2.0)).unwrap();
+        assert!(reg.get(&key("a")).is_none(), "a was evicted from memory");
+        assert!(reg.resolve("a", "custom-node", None).is_none(), "index dropped a");
+        let back = reg
+            .admit_from_disk(&key("a"))
+            .unwrap()
+            .expect("a still on disk");
+        assert_eq!(back.key, key("a"));
+        assert!(reg.get(&key("a")).is_some());
+        assert!(reg.resolve("a", "custom-node", None).is_some(), "index restored");
+        // A key that never existed is a true miss.
+        assert!(reg.admit_from_disk(&key("never")).unwrap().is_none());
+    }
+
+    #[test]
+    fn same_digest_scheme_as_disk_cache() {
+        // The shard key is the on-disk file-name digest: an entry put in
+        // a ModelCache and warm-loaded lands under the same digest that
+        // a direct get computes.
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        let cache = ModelCache::open(dir.path()).unwrap();
+        let k = key("shared");
+        cache.put(&k, &toy_bundle(9.0)).unwrap();
+        let reg = ModelRegistry::new(3, 1 << 20, Some(cache));
+        assert_eq!(reg.warm_load().unwrap(), 1);
+        assert!(reg.get(&k).is_some());
+    }
+}

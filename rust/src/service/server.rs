@@ -1,0 +1,714 @@
+//! The `ecoptd` daemon: accept loop + worker fan-out on the existing
+//! [`WorkerPool`], a bounded connection queue with 503-style load
+//! shedding, and async training jobs.
+//!
+//! # Threading model
+//!
+//! `run` drives one [`WorkerPool`] of `workers + 1` scoped jobs: job 0 is
+//! the accept loop, jobs 1..=workers are request workers. Accepted
+//! connections go through a bounded queue (`Mutex<VecDeque>` + condvar);
+//! when the queue is full the acceptor writes one 503-style response and
+//! closes — the daemon degrades by refusing work it cannot queue instead
+//! of stalling every client behind an unbounded backlog. Workers own a
+//! connection for its whole lifetime (line-delimited requests pipeline
+//! over it), so per-request cost is one registry read-lock plus the model
+//! math; `train` is the exception and runs on its own detached-until-join
+//! thread with a job id the client polls via `status`.
+//!
+//! # Shutdown
+//!
+//! A `shutdown` request answers first, then sets the stop flag, wakes
+//! every queue waiter, and self-connects once to unblock `accept`. The
+//! acceptor drains, workers finish queued connections, and `run` joins
+//! outstanding training jobs before returning its [`ServiceReport`].
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::arch::{profile_by_name, ArchProfile};
+use crate::config::ExperimentConfig;
+use crate::coordinator::Coordinator;
+use crate::energy::{config_grid_arch, predict_point};
+use crate::persist::{ModelCache, ModelKey};
+use crate::service::protocol::{
+    self, err_line, ok_line, Request, CODE_BAD_REQUEST, CODE_INFEASIBLE, CODE_INTERNAL,
+    CODE_NOT_FOUND, CODE_OVERLOADED,
+};
+use crate::service::registry::ModelRegistry;
+use crate::service::ServiceConfig;
+use crate::util::json::Json;
+use crate::util::pool::WorkerPool;
+use crate::workloads::app_by_name;
+use crate::Result;
+
+/// Request kinds, in counter order.
+const KIND_NAMES: [&str; 7] = [
+    "predict", "optimize", "train", "status", "registry", "stats", "shutdown",
+];
+
+fn kind_index(kind: &str) -> usize {
+    KIND_NAMES.iter().position(|k| *k == kind).unwrap_or(0)
+}
+
+/// One async training job's lifecycle.
+#[derive(Debug, Clone)]
+enum JobState {
+    Queued,
+    Running,
+    Done { model: String },
+    Failed { error: String },
+}
+
+impl JobState {
+    fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done { .. } => "done",
+            JobState::Failed { .. } => "failed",
+        }
+    }
+}
+
+struct ServerState {
+    shutdown: AtomicBool,
+    queue: Mutex<VecDeque<TcpStream>>,
+    queue_cv: Condvar,
+    served: AtomicU64,
+    shed: AtomicU64,
+    errors: AtomicU64,
+    by_kind: [AtomicU64; KIND_NAMES.len()],
+    jobs: Mutex<BTreeMap<u64, JobState>>,
+    next_job: AtomicU64,
+    /// key label → job id, so a duplicate `train` joins the in-flight
+    /// job instead of spawning a second identical pipeline.
+    active_trainings: Mutex<HashMap<String, u64>>,
+    job_handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+struct ServiceCtx {
+    cfg: ExperimentConfig,
+    svc: ServiceConfig,
+    default_arch: ArchProfile,
+    addr: SocketAddr,
+    registry: ModelRegistry,
+    state: ServerState,
+}
+
+/// End-of-run accounting (`run`'s return value).
+#[derive(Debug, Clone)]
+pub struct ServiceReport {
+    pub served: u64,
+    pub shed: u64,
+    pub errors: u64,
+    /// (kind, requests) in [`KIND_NAMES`] order.
+    pub by_kind: Vec<(String, u64)>,
+}
+
+/// A cheap clonable remote control for a running server (tests, benches,
+/// and the in-process shutdown path).
+#[derive(Clone)]
+pub struct ServerHandle {
+    ctx: Arc<ServiceCtx>,
+}
+
+impl ServerHandle {
+    /// The daemon's bound address.
+    pub fn addr(&self) -> SocketAddr {
+        self.ctx.addr
+    }
+
+    /// Ask the daemon to stop (idempotent).
+    pub fn stop(&self) {
+        initiate_shutdown(&self.ctx);
+    }
+}
+
+/// The bound-but-not-yet-running daemon.
+pub struct EcoptServer {
+    listener: TcpListener,
+    warm_loaded: usize,
+    ctx: Arc<ServiceCtx>,
+}
+
+impl EcoptServer {
+    /// Bind the listen socket, open/warm-load the registry from the
+    /// on-disk model cache, and prepare the daemon. Serving starts when
+    /// [`EcoptServer::run`] is called.
+    pub fn bind(cfg: ExperimentConfig, svc: ServiceConfig) -> Result<EcoptServer> {
+        let default_arch = cfg.resolved_arch()?;
+        let disk = match &svc.cache_dir {
+            Some(dir) => Some(ModelCache::open(dir)?),
+            None => None,
+        };
+        let registry = ModelRegistry::new(svc.shards, svc.byte_budget, disk);
+        let warm_loaded = registry.warm_load()?;
+        let listener = TcpListener::bind(svc.addr.as_str())?;
+        let addr = listener.local_addr()?;
+        let ctx = Arc::new(ServiceCtx {
+            cfg,
+            svc,
+            default_arch,
+            addr,
+            registry,
+            state: ServerState {
+                shutdown: AtomicBool::new(false),
+                queue: Mutex::new(VecDeque::new()),
+                queue_cv: Condvar::new(),
+                served: AtomicU64::new(0),
+                shed: AtomicU64::new(0),
+                errors: AtomicU64::new(0),
+                by_kind: std::array::from_fn(|_| AtomicU64::new(0)),
+                jobs: Mutex::new(BTreeMap::new()),
+                next_job: AtomicU64::new(0),
+                active_trainings: Mutex::new(HashMap::new()),
+                job_handles: Mutex::new(Vec::new()),
+            },
+        });
+        Ok(EcoptServer {
+            listener,
+            warm_loaded,
+            ctx,
+        })
+    }
+
+    /// The address actually bound (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.ctx.addr
+    }
+
+    /// Models resident after the warm load.
+    pub fn warm_loaded(&self) -> usize {
+        self.warm_loaded
+    }
+
+    /// Remote control for another thread.
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle {
+            ctx: Arc::clone(&self.ctx),
+        }
+    }
+
+    /// Serve until a `shutdown` request (or [`ServerHandle::stop`]);
+    /// joins outstanding training jobs before returning.
+    pub fn run(self) -> Result<ServiceReport> {
+        let workers = if self.ctx.svc.workers == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        } else {
+            self.ctx.svc.workers
+        };
+        let ctx = &self.ctx;
+        let listener = &self.listener;
+        WorkerPool::new(workers + 1).run(workers + 1, |i| {
+            if i == 0 {
+                accept_loop(listener, ctx);
+            } else {
+                worker_loop(ctx);
+            }
+        });
+        let handles: Vec<_> = {
+            let mut h = self.ctx.state.job_handles.lock().expect("job handles poisoned");
+            h.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+        let s = &self.ctx.state;
+        Ok(ServiceReport {
+            served: s.served.load(Ordering::Relaxed),
+            shed: s.shed.load(Ordering::Relaxed),
+            errors: s.errors.load(Ordering::Relaxed),
+            by_kind: KIND_NAMES
+                .iter()
+                .enumerate()
+                .map(|(i, k)| (k.to_string(), s.by_kind[i].load(Ordering::Relaxed)))
+                .collect(),
+        })
+    }
+}
+
+/// Set the stop flag, wake queue waiters, and unblock `accept` with one
+/// self-connection (idempotent).
+fn initiate_shutdown(ctx: &ServiceCtx) {
+    if ctx.state.shutdown.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    ctx.state.queue_cv.notify_all();
+    let _ = TcpStream::connect_timeout(&ctx.addr, Duration::from_secs(1));
+}
+
+fn accept_loop(listener: &TcpListener, ctx: &Arc<ServiceCtx>) {
+    loop {
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                if ctx.state.shutdown.load(Ordering::SeqCst) {
+                    break; // wake-up connection (or a straggler) — drop it
+                }
+                let mut q = ctx.state.queue.lock().expect("accept queue poisoned");
+                if q.len() >= ctx.svc.queue_cap {
+                    drop(q);
+                    ctx.state.shed.fetch_add(1, Ordering::Relaxed);
+                    let line = err_line(CODE_OVERLOADED, "server overloaded: accept queue full");
+                    let _ = stream.write_all(line.as_bytes());
+                    let _ = stream.write_all(b"\n");
+                    // Dropping the stream closes the shed connection.
+                } else {
+                    q.push_back(stream);
+                    drop(q);
+                    ctx.state.queue_cv.notify_one();
+                }
+            }
+            Err(_) => {
+                if ctx.state.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+        }
+    }
+    // Acceptor is gone: make sure no worker keeps waiting on the queue.
+    ctx.state.queue_cv.notify_all();
+}
+
+fn worker_loop(ctx: &Arc<ServiceCtx>) {
+    loop {
+        let next = {
+            let mut q = ctx.state.queue.lock().expect("accept queue poisoned");
+            loop {
+                if let Some(s) = q.pop_front() {
+                    break Some(s);
+                }
+                if ctx.state.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                q = ctx
+                    .state
+                    .queue_cv
+                    .wait(q)
+                    .expect("accept queue poisoned");
+            }
+        };
+        match next {
+            Some(stream) => handle_conn(ctx, stream),
+            None => break,
+        }
+    }
+}
+
+/// Serve one connection until EOF (line-delimited requests pipeline over
+/// it). Reads are chunked with a short timeout so a worker parked on an
+/// idle connection still notices shutdown.
+fn handle_conn(ctx: &Arc<ServiceCtx>, mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+    let mut acc: Vec<u8> = Vec::new();
+    let mut buf = [0u8; 4096];
+    loop {
+        while let Some(pos) = acc.iter().position(|&b| b == b'\n') {
+            let raw: Vec<u8> = acc.drain(..=pos).collect();
+            let line_owned = String::from_utf8_lossy(&raw[..raw.len() - 1]).into_owned();
+            let line = line_owned.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (resp, stop) = dispatch(ctx, line);
+            if stream.write_all(resp.as_bytes()).is_err() || stream.write_all(b"\n").is_err() {
+                return;
+            }
+            let _ = stream.flush();
+            if stop {
+                initiate_shutdown(ctx);
+                return;
+            }
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => return, // EOF
+            Ok(n) => acc.extend_from_slice(&buf[..n]),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if ctx.state.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return,
+        }
+    }
+}
+
+/// Resolve an architecture name against the daemon's default profile and
+/// the registry of built-in profiles.
+fn resolve_arch(ctx: &ServiceCtx, name: Option<&str>) -> Result<ArchProfile> {
+    match name {
+        None => Ok(ctx.default_arch.clone()),
+        Some(n) if n == ctx.default_arch.name => Ok(ctx.default_arch.clone()),
+        Some(n) => profile_by_name(n),
+    }
+}
+
+/// Handle one request line; returns the response line (no newline) and
+/// whether the connection/daemon should stop after sending it.
+fn dispatch(ctx: &Arc<ServiceCtx>, line: &str) -> (String, bool) {
+    ctx.state.served.fetch_add(1, Ordering::Relaxed);
+    let req = match Request::parse(line) {
+        Ok(r) => r,
+        Err(e) => {
+            ctx.state.errors.fetch_add(1, Ordering::Relaxed);
+            return (err_line(CODE_BAD_REQUEST, &e.to_string()), false);
+        }
+    };
+    ctx.state.by_kind[kind_index(req.kind())].fetch_add(1, Ordering::Relaxed);
+    let (resp, stop) = match &req {
+        Request::Predict {
+            app,
+            arch,
+            tag,
+            f_mhz,
+            cores,
+            input,
+        } => (
+            handle_predict(ctx, app, arch.as_deref(), tag.as_deref(), *f_mhz, *cores, *input),
+            false,
+        ),
+        Request::Optimize {
+            app,
+            arch,
+            tag,
+            input,
+            constraints,
+        } => (
+            handle_optimize(ctx, app, arch.as_deref(), tag.as_deref(), *input, constraints),
+            false,
+        ),
+        Request::Train { app, arch } => (handle_train(ctx, app, arch.as_deref()), false),
+        Request::Status { job } => (handle_status(ctx, *job), false),
+        Request::Registry => (handle_registry(ctx), false),
+        Request::Stats => (handle_stats(ctx), false),
+        Request::Shutdown => (ok_line(vec![("stopping", Json::Bool(true))]), true),
+    };
+    if protocol::is_err_line(&resp) {
+        ctx.state.errors.fetch_add(1, Ordering::Relaxed);
+    }
+    (resp, stop)
+}
+
+fn handle_predict(
+    ctx: &ServiceCtx,
+    app: &str,
+    arch: Option<&str>,
+    tag: Option<&str>,
+    f_mhz: u32,
+    cores: usize,
+    input: u32,
+) -> String {
+    let profile = match resolve_arch(ctx, arch) {
+        Ok(p) => p,
+        Err(e) => return err_line(CODE_NOT_FOUND, &e.to_string()),
+    };
+    let Some(entry) = ctx.registry.resolve(app, &profile.name, tag) else {
+        return err_line(
+            CODE_NOT_FOUND,
+            &format!(
+                "no model for app '{app}' on arch '{}' — send a train request first",
+                profile.name
+            ),
+        );
+    };
+    if cores == 0 || cores > profile.total_cores() {
+        return err_line(
+            CODE_BAD_REQUEST,
+            &format!("cores {cores} outside this arch's 1..={}", profile.total_cores()),
+        );
+    }
+    let pt = predict_point(&entry.model.power, &entry.model.svr, &profile, f_mhz, cores, input);
+    if !pt.pred_time_s.is_finite() || !pt.power_w.is_finite() || !pt.energy_j.is_finite() {
+        return err_line(CODE_INTERNAL, "model produced a non-finite prediction");
+    }
+    ok_line(vec![
+        ("kind", Json::Str("predict".into())),
+        ("model", Json::Str(entry.key.label())),
+        ("f_mhz", Json::Num(pt.f_mhz as f64)),
+        ("cores", Json::Num(pt.cores as f64)),
+        ("input", Json::Num(input as f64)),
+        ("pred_time_s", Json::Num(pt.pred_time_s)),
+        ("power_w", Json::Num(pt.power_w)),
+        ("energy_j", Json::Num(pt.energy_j)),
+    ])
+}
+
+fn handle_optimize(
+    ctx: &ServiceCtx,
+    app: &str,
+    arch: Option<&str>,
+    tag: Option<&str>,
+    input: u32,
+    constraints: &crate::energy::Constraints,
+) -> String {
+    let profile = match resolve_arch(ctx, arch) {
+        Ok(p) => p,
+        Err(e) => return err_line(CODE_NOT_FOUND, &e.to_string()),
+    };
+    let Some(entry) = ctx.registry.resolve(app, &profile.name, tag) else {
+        return err_line(
+            CODE_NOT_FOUND,
+            &format!(
+                "no model for app '{app}' on arch '{}' — send a train request first",
+                profile.name
+            ),
+        );
+    };
+    let grid = config_grid_arch(&ctx.cfg.campaign.adapted_to(&profile), &profile);
+    match ctx.registry.consult(&entry, &profile, &grid, input, constraints) {
+        Ok(opt) => ok_line(vec![
+            ("kind", Json::Str("optimize".into())),
+            ("model", Json::Str(entry.key.label())),
+            ("input", Json::Num(input as f64)),
+            ("f_mhz", Json::Num(opt.f_mhz as f64)),
+            ("cores", Json::Num(opt.cores as f64)),
+            ("pred_time_s", Json::Num(opt.pred_time_s)),
+            ("pred_energy_j", Json::Num(opt.pred_energy_j)),
+        ]),
+        Err(e) => err_line(CODE_INFEASIBLE, &e.to_string()),
+    }
+}
+
+fn handle_train(ctx: &Arc<ServiceCtx>, app: &str, arch: Option<&str>) -> String {
+    let app_profile = match app_by_name(app) {
+        Ok(p) => p,
+        Err(e) => return err_line(CODE_NOT_FOUND, &e.to_string()),
+    };
+    let profile = match resolve_arch(ctx, arch) {
+        Ok(p) => p,
+        Err(e) => return err_line(CODE_NOT_FOUND, &e.to_string()),
+    };
+    // The key the batch pipeline would persist under — one scheme.
+    let coord = Coordinator::for_arch(ctx.cfg.clone(), profile.clone());
+    let tag = match coord.cache_input_tag() {
+        Ok(t) => t,
+        Err(e) => return err_line(CODE_INTERNAL, &e.to_string()),
+    };
+    let key = ModelKey::new(&app_profile.name, &tag, &profile.name);
+    // Resident hit, or on-disk bundle not currently resident (evicted /
+    // batch-trained after startup) — either way no pipeline run needed.
+    let already = ctx.registry.get(&key).is_some()
+        || match ctx.registry.admit_from_disk(&key) {
+            Ok(hit) => hit.is_some(),
+            Err(e) => return err_line(CODE_INTERNAL, &e.to_string()),
+        };
+    if already {
+        return ok_line(vec![
+            ("kind", Json::Str("train".into())),
+            ("status", Json::Str("ready".into())),
+            ("cached", Json::Bool(true)),
+            ("model", Json::Str(key.label())),
+        ]);
+    }
+    let label = key.label();
+    // Coalesce duplicates atomically: the in-flight check and the
+    // reservation happen under ONE active_trainings acquisition, so two
+    // concurrent identical trains can never both spawn pipelines. The
+    // job record is created inside the same critical section (lock
+    // order: active_trainings → jobs, nowhere reversed) so a duplicate
+    // that receives this id can immediately poll `status` for it.
+    let job = {
+        let mut active = ctx
+            .state
+            .active_trainings
+            .lock()
+            .expect("active trainings poisoned");
+        if let Some(job) = active.get(&label) {
+            return ok_line(vec![
+                ("kind", Json::Str("train".into())),
+                ("status", Json::Str("training".into())),
+                ("job", Json::Num(*job as f64)),
+            ]);
+        }
+        let job = ctx.state.next_job.fetch_add(1, Ordering::SeqCst) + 1;
+        ctx.state
+            .jobs
+            .lock()
+            .expect("jobs poisoned")
+            .insert(job, JobState::Queued);
+        active.insert(label.clone(), job);
+        job
+    };
+    let ctx_job = Arc::clone(ctx);
+    let cfg = ctx.cfg.clone();
+    let label_job = label.clone();
+    let handle = std::thread::Builder::new()
+        .name(format!("ecoptd-train-{job}"))
+        .spawn(move || {
+            let set = |state: JobState| {
+                ctx_job
+                    .state
+                    .jobs
+                    .lock()
+                    .expect("jobs poisoned")
+                    .insert(job, state);
+            };
+            set(JobState::Running);
+            // The coordinator is rebuilt in-thread: cfg + profile are the
+            // whole training input, and the bundle matches what the batch
+            // pipeline would cache under this key bit for bit.
+            let coord = Coordinator::for_arch(cfg, profile);
+            match coord.train_bundle(&app_profile) {
+                Ok(bundle) => match ctx_job.registry.insert(key.clone(), bundle) {
+                    Ok(_) => set(JobState::Done { model: key.label() }),
+                    Err(e) => set(JobState::Failed {
+                        error: e.to_string(),
+                    }),
+                },
+                Err(e) => set(JobState::Failed {
+                    error: e.to_string(),
+                }),
+            }
+            ctx_job
+                .state
+                .active_trainings
+                .lock()
+                .expect("active trainings poisoned")
+                .remove(&label_job);
+        });
+    match handle {
+        Ok(h) => {
+            ctx.state
+                .job_handles
+                .lock()
+                .expect("job handles poisoned")
+                .push(h);
+            ok_line(vec![
+                ("kind", Json::Str("train".into())),
+                ("status", Json::Str("training".into())),
+                ("job", Json::Num(job as f64)),
+            ])
+        }
+        Err(e) => {
+            // Release the reservation so a retry can spawn a fresh job.
+            ctx.state
+                .active_trainings
+                .lock()
+                .expect("active trainings poisoned")
+                .remove(&label);
+            ctx.state.jobs.lock().expect("jobs poisoned").insert(
+                job,
+                JobState::Failed {
+                    error: format!("could not spawn training thread: {e}"),
+                },
+            );
+            err_line(CODE_INTERNAL, &format!("could not spawn training job: {e}"))
+        }
+    }
+}
+
+fn handle_status(ctx: &ServiceCtx, job: u64) -> String {
+    let jobs = ctx.state.jobs.lock().expect("jobs poisoned");
+    match jobs.get(&job) {
+        None => err_line(CODE_NOT_FOUND, &format!("no such job {job}")),
+        Some(state) => {
+            let mut fields = vec![
+                ("kind", Json::Str("status".into())),
+                ("job", Json::Num(job as f64)),
+                ("status", Json::Str(state.name().into())),
+            ];
+            match state {
+                JobState::Done { model } => fields.push(("model", Json::Str(model.clone()))),
+                JobState::Failed { error } => fields.push(("error", Json::Str(error.clone()))),
+                _ => {}
+            }
+            ok_line(fields)
+        }
+    }
+}
+
+fn handle_registry(ctx: &ServiceCtx) -> String {
+    let entries = ctx.registry.list();
+    let mut arr = Vec::with_capacity(entries.len());
+    for e in &entries {
+        // Per-entry query hints: the frequencies and core range a client
+        // may ask this model about — what the deterministic loadgen
+        // samples from. Unresolvable architectures list no hints.
+        let (freqs, max_cores) = match resolve_arch(ctx, Some(&e.key.arch)) {
+            Ok(p) => {
+                let campaign = ctx.cfg.campaign.adapted_to(&p);
+                (
+                    campaign.frequencies().iter().map(|f| Json::Num(*f as f64)).collect(),
+                    p.total_cores(),
+                )
+            }
+            Err(_) => (Vec::new(), 0),
+        };
+        arr.push(Json::obj(vec![
+            ("app", Json::Str(e.key.app.clone())),
+            ("tag", Json::Str(e.key.input.clone())),
+            ("arch", Json::Str(e.key.arch.clone())),
+            ("bytes", Json::Num(e.bytes as f64)),
+            ("freqs", Json::Arr(freqs)),
+            ("max_cores", Json::Num(max_cores as f64)),
+        ]));
+    }
+    ok_line(vec![
+        ("kind", Json::Str("registry".into())),
+        ("count", Json::Num(arr.len() as f64)),
+        ("entries", Json::Arr(arr)),
+    ])
+}
+
+fn handle_stats(ctx: &ServiceCtx) -> String {
+    let r = ctx.registry.stats();
+    let jobs = ctx.state.jobs.lock().expect("jobs poisoned");
+    let count = |pred: fn(&JobState) -> bool| jobs.values().filter(|&s| pred(s)).count() as f64;
+    let by_kind = Json::Obj(
+        KIND_NAMES
+            .iter()
+            .enumerate()
+            .map(|(i, k)| {
+                (
+                    k.to_string(),
+                    Json::Num(ctx.state.by_kind[i].load(Ordering::Relaxed) as f64),
+                )
+            })
+            .collect(),
+    );
+    ok_line(vec![
+        ("kind", Json::Str("stats".into())),
+        ("served", Json::Num(ctx.state.served.load(Ordering::Relaxed) as f64)),
+        ("shed", Json::Num(ctx.state.shed.load(Ordering::Relaxed) as f64)),
+        ("errors", Json::Num(ctx.state.errors.load(Ordering::Relaxed) as f64)),
+        ("by_kind", by_kind),
+        (
+            "registry",
+            Json::obj(vec![
+                ("entries", Json::Num(r.entries as f64)),
+                ("bytes", Json::Num(r.bytes as f64)),
+                ("shards", Json::Num(r.shards as f64)),
+                ("byte_budget", Json::Num(r.byte_budget as f64)),
+                ("hits", Json::Num(r.hits as f64)),
+                ("misses", Json::Num(r.misses as f64)),
+                ("inserts", Json::Num(r.inserts as f64)),
+                ("evictions", Json::Num(r.evictions as f64)),
+                ("consults", Json::Num(r.consults as f64)),
+                ("consult_memo_hits", Json::Num(r.consult_memo_hits as f64)),
+            ]),
+        ),
+        (
+            "jobs",
+            Json::obj(vec![
+                ("total", Json::Num(jobs.len() as f64)),
+                ("queued", Json::Num(count(|s| matches!(s, JobState::Queued)))),
+                ("running", Json::Num(count(|s| matches!(s, JobState::Running)))),
+                ("done", Json::Num(count(|s| matches!(s, JobState::Done { .. })))),
+                ("failed", Json::Num(count(|s| matches!(s, JobState::Failed { .. })))),
+            ]),
+        ),
+        ("queue_cap", Json::Num(ctx.svc.queue_cap as f64)),
+        ("warm_arch", Json::Str(ctx.default_arch.name.clone())),
+    ])
+}

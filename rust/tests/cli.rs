@@ -1,0 +1,140 @@
+//! CLI hardening tests (ISSUE 4 satellite): shell the real `ecopt`
+//! binary and pin its usage-error contract — unknown subcommands and
+//! flags print usage to STDERR and exit 2, `help <subcommand>` works,
+//! and runtime errors stay exit 1.
+
+use std::process::{Command, Output};
+
+fn ecopt(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_ecopt"))
+        .args(args)
+        .output()
+        .expect("spawn ecopt binary")
+}
+
+fn stderr(o: &Output) -> String {
+    String::from_utf8_lossy(&o.stderr).into_owned()
+}
+
+fn stdout(o: &Output) -> String {
+    String::from_utf8_lossy(&o.stdout).into_owned()
+}
+
+#[test]
+fn unknown_subcommand_exits_2_with_usage_on_stderr() {
+    let o = ecopt(&["frobnicate"]);
+    assert_eq!(o.status.code(), Some(2));
+    let err = stderr(&o);
+    assert!(err.contains("unknown command 'frobnicate'"), "{err}");
+    assert!(err.contains("USAGE:"), "usage must go to stderr: {err}");
+    assert!(stdout(&o).is_empty(), "errors do not pollute stdout");
+}
+
+#[test]
+fn unknown_flag_exits_2_and_names_the_flag() {
+    let o = ecopt(&["arch", "--bogus"]);
+    assert_eq!(o.status.code(), Some(2));
+    let err = stderr(&o);
+    assert!(err.contains("--bogus"), "{err}");
+    assert!(err.contains("ecopt arch"), "command usage shown: {err}");
+
+    // A flag that exists on one command is still unknown on another.
+    let o = ecopt(&["fit-power", "--app", "swaptions"]);
+    assert_eq!(o.status.code(), Some(2));
+    assert!(stderr(&o).contains("--app"), "{}", stderr(&o));
+}
+
+#[test]
+fn value_flag_without_value_exits_2() {
+    let o = ecopt(&["characterize", "--app"]);
+    assert_eq!(o.status.code(), Some(2));
+    assert!(stderr(&o).contains("needs a value"), "{}", stderr(&o));
+
+    // A following `--flag` is not a value either.
+    let o = ecopt(&["fleet", "--out", "--quick"]);
+    assert_eq!(o.status.code(), Some(2));
+    assert!(stderr(&o).contains("--out"), "{}", stderr(&o));
+}
+
+#[test]
+fn missing_required_flag_exits_2() {
+    let o = ecopt(&["characterize"]);
+    assert_eq!(o.status.code(), Some(2));
+    assert!(stderr(&o).contains("--app"), "{}", stderr(&o));
+}
+
+#[test]
+fn dangling_n_alias_exits_2() {
+    let o = ecopt(&["optimize", "--app", "swaptions", "-n"]);
+    assert_eq!(o.status.code(), Some(2));
+    assert!(stderr(&o).contains("-n"), "{}", stderr(&o));
+    // -n where the command does not take an input size.
+    let o = ecopt(&["arch", "-n", "3"]);
+    assert_eq!(o.status.code(), Some(2));
+}
+
+#[test]
+fn stray_positional_exits_2() {
+    let o = ecopt(&["arch", "sparc"]);
+    assert_eq!(o.status.code(), Some(2));
+    assert!(stderr(&o).contains("unexpected argument"), "{}", stderr(&o));
+}
+
+#[test]
+fn bad_numeric_flag_value_exits_2() {
+    let o = ecopt(&["replay", "--threads", "many"]);
+    assert_eq!(o.status.code(), Some(2));
+    assert!(stderr(&o).contains("invalid value"), "{}", stderr(&o));
+}
+
+#[test]
+fn help_variants_exit_0_on_stdout() {
+    for args in [&["help"][..], &["--help"][..], &["-h"][..], &[][..]] {
+        let o = ecopt(args);
+        assert_eq!(o.status.code(), Some(0), "{args:?}");
+        assert!(stdout(&o).contains("USAGE: ecopt"), "{args:?}");
+    }
+}
+
+#[test]
+fn help_subcommand_prints_command_details() {
+    let o = ecopt(&["help", "optimize"]);
+    assert_eq!(o.status.code(), Some(0));
+    let out = stdout(&o);
+    assert!(out.contains("ecopt optimize"), "{out}");
+    assert!(out.contains("--app"), "{out}");
+
+    // `ecopt <cmd> --help` prints the same text.
+    let o2 = ecopt(&["optimize", "--help"]);
+    assert_eq!(o2.status.code(), Some(0));
+    assert_eq!(stdout(&o2), out);
+
+    // Unknown help topic is a usage error.
+    let o = ecopt(&["help", "frobnicate"]);
+    assert_eq!(o.status.code(), Some(2));
+}
+
+#[test]
+fn unknown_cache_action_exits_2() {
+    let o = ecopt(&["cache", "nuke"]);
+    assert_eq!(o.status.code(), Some(2));
+    assert!(stderr(&o).contains("unknown cache action"), "{}", stderr(&o));
+}
+
+#[test]
+fn unknown_query_kind_exits_2_and_runtime_errors_exit_1() {
+    let o = ecopt(&["query", "frobnicate"]);
+    assert_eq!(o.status.code(), Some(2));
+    // A well-formed query against a daemon that is not there is a
+    // RUNTIME failure: exit 1, not a usage error.
+    let o = ecopt(&["query", "stats", "--addr", "127.0.0.1:1"]);
+    assert_eq!(o.status.code(), Some(1), "{}", stderr(&o));
+}
+
+#[test]
+fn unknown_arch_is_a_runtime_error_not_usage() {
+    // The flag grammar is fine; the value fails at runtime -> exit 1.
+    let o = ecopt(&["fleet", "--profiles", "vax-11", "--quick"]);
+    assert_eq!(o.status.code(), Some(1));
+    assert!(stderr(&o).contains("vax-11"), "{}", stderr(&o));
+}

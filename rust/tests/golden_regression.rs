@@ -36,6 +36,16 @@ fn golden_required() -> bool {
     std::env::var("ECOPT_REQUIRE_GOLDEN").is_ok_and(|v| !v.is_empty() && v != "0")
 }
 
+/// `ECOPT_BLESS=1` turns every golden check into a (re)write: the file
+/// is regenerated from this run's observed rows and the test passes.
+/// This is how the FIRST toolchain run materializes the goldens (CI runs
+/// a bless step when the files are missing from the checkout, then the
+/// strict `ECOPT_REQUIRE_GOLDEN=1` pass sees them on disk) and how an
+/// intentional behavior change re-blesses without hand-deleting files.
+fn bless_mode() -> bool {
+    std::env::var("ECOPT_BLESS").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
 /// Compare `rows` against the golden file at `path`, bootstrapping it on
 /// first toolchain contact. Returns the bootstrap notice when the file
 /// was just written so callers can aggregate ALL missing files before
@@ -43,6 +53,15 @@ fn golden_required() -> bool {
 /// returns `None` when the file existed and matched.
 fn check_golden(path: &std::path::Path, rows: &[(String, u32, u32, usize)]) -> Option<String> {
     let observed = rows_to_json(rows).dump().unwrap();
+    if bless_mode() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(path, &observed).unwrap();
+        eprintln!(
+            "golden_regression: BLESSED {} (ECOPT_BLESS=1) — commit it to pin the optima",
+            path.display()
+        );
+        return None;
+    }
     if !path.exists() {
         std::fs::create_dir_all(path.parent().unwrap()).unwrap();
         std::fs::write(path, &observed).unwrap();

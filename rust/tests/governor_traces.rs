@@ -10,11 +10,15 @@
 //! step-down target `f_cur * load / 85`, snapped to the ladder, never
 //! above `f_cur`. Conservative defaults: up 80 %, down 20 %, one rung.
 
-use ecopt::config::NodeSpec;
+use ecopt::config::{CampaignSpec, NodeSpec};
+use ecopt::energy::{config_grid, EnergyModel};
 use ecopt::governors::{
-    Conservative, ConservativeTunables, Governor, Ondemand, OndemandTunables, Userspace,
+    Conservative, ConservativeTunables, EcoptGovernor, Governor, Ondemand, OndemandTunables,
+    Userspace,
 };
 use ecopt::node::Node;
+use ecopt::powermodel::PowerModel;
+use ecopt::svr::{Standardizer, SvrModel, DIMS};
 
 fn node() -> Node {
     Node::new(NodeSpec::default()).unwrap()
@@ -166,4 +170,136 @@ fn ondemand_ignores_offline_cores_in_trace() {
     assert_eq!(n.freq(0), 2300, "loaded online core races");
     assert_eq!(n.freq(1), 1200, "idle online core sinks");
     assert_eq!(n.freq(31), 1800, "offline core policy frozen");
+}
+
+// ---------------------------------------------------------------------------
+// EcoptGovernor fallback paths (ISSUE 4 satellite): a stale model must
+// provably degrade to the EMBEDDED ondemand — the actuation trace has to
+// match a faithful Ondemand step for step, on every core, for the whole
+// run. Three triggers are pinned: ladder mismatch, empty support set,
+// and a failed model consult.
+// ---------------------------------------------------------------------------
+
+/// Handcrafted two-SV model over the default Xeon node (same shape the
+/// governor's own unit tests use).
+fn toy_energy_model(power: PowerModel) -> EnergyModel {
+    let svr = SvrModel {
+        train_x: vec![2.2, 32.0, 1.0, 1.2, 1.0, 1.0],
+        beta: vec![-40.0, 40.0],
+        b: 60.0,
+        gamma: 0.05,
+        scaler: Standardizer::identity(DIMS),
+        iterations: 10,
+        n_support: 2,
+    };
+    EnergyModel::new(power, svr, NodeSpec::default())
+}
+
+fn xeon_grid() -> Vec<(u32, usize)> {
+    config_grid(&CampaignSpec::default(), &NodeSpec::default())
+}
+
+/// A load trace that moves ondemand around: saturation races, partial
+/// loads step down, idle sinks to the floor.
+const FALLBACK_TRACE: [f64; 10] = [1.0, 0.5, 0.3, 0.96, 0.7, 0.0, 0.9, 0.2, 0.55, 1.0];
+
+/// Drive `ecopt_gov` on `node_a` and a faithful Ondemand on the
+/// identically-constructed `node_b` through the same all-core load trace
+/// and require identical actuation at every step.
+fn assert_degrades_to_ondemand(mut ecopt_gov: EcoptGovernor, mut node_a: Node, mut node_b: Node) {
+    let mut faithful = Ondemand::new(node_b.ladder());
+    for (step, util) in FALLBACK_TRACE.iter().enumerate() {
+        for c in 0..node_a.total_cores() {
+            node_a.set_util(c, *util);
+        }
+        for c in 0..node_b.total_cores() {
+            node_b.set_util(c, *util);
+        }
+        ecopt_gov.sample(&mut node_a).unwrap();
+        faithful.sample(&mut node_b).unwrap();
+        assert_eq!(
+            node_a.freqs(),
+            node_b.freqs(),
+            "step {step} (util {util}): fallback diverged from faithful ondemand"
+        );
+        assert_eq!(
+            node_a.online_cores(),
+            node_b.online_cores(),
+            "step {step}: a governor fallback must never hotplug"
+        );
+    }
+    assert!(ecopt_gov.is_stale(), "fallback implies a stale verdict");
+    let (_, _, fallback_samples) = ecopt_gov.counters();
+    assert_eq!(
+        fallback_samples,
+        FALLBACK_TRACE.len() as u64,
+        "every sample of the trace must have been served by the fallback"
+    );
+}
+
+#[test]
+fn stale_ladder_mismatch_tracks_ondemand_step_for_step() {
+    // Model + grid built for the Xeon ladder; the governed node is the
+    // big.LITTLE part, whose ladder differs.
+    let profile = ecopt::arch::mobile_biglittle();
+    let node_a = Node::from_profile(profile.clone()).unwrap();
+    let node_b = Node::from_profile(profile).unwrap();
+    let gov = EcoptGovernor::new(toy_energy_model(PowerModel::paper_eq9()), xeon_grid(), 1);
+    assert_degrades_to_ondemand(gov, node_a, node_b);
+}
+
+#[test]
+fn stale_empty_support_set_tracks_ondemand_step_for_step() {
+    let mut model = toy_energy_model(PowerModel::paper_eq9());
+    model.svr.n_support = 0;
+    model.svr.beta.clear();
+    model.svr.train_x.clear();
+    let gov = EcoptGovernor::new(model, xeon_grid(), 1);
+    let mut g2 = EcoptGovernor::new(
+        {
+            let mut m = toy_energy_model(PowerModel::paper_eq9());
+            m.svr.n_support = 0;
+            m
+        },
+        xeon_grid(),
+        1,
+    );
+    // Reason surfaces before the trace comparison.
+    let mut probe = node();
+    g2.sample(&mut probe).unwrap();
+    assert!(g2.stale_reason().unwrap().contains("support"), "{:?}", g2.stale_reason());
+    assert_degrades_to_ondemand(gov, node(), node());
+}
+
+#[test]
+fn failed_consult_tracks_ondemand_step_for_step() {
+    // Node-compatibility checks PASS (valid support set, matching
+    // ladder, on-node grid), but every energy is NaN: the very first
+    // consult fails and the governor must degrade from step 0 on.
+    let poisoned = PowerModel {
+        c1: 0.0,
+        c2: 0.0,
+        c3: f64::NAN,
+        c4: 0.0,
+    };
+    let gov = EcoptGovernor::new(toy_energy_model(poisoned), xeon_grid(), 1);
+    let mut probe_gov = EcoptGovernor::new(
+        toy_energy_model(PowerModel {
+            c1: 0.0,
+            c2: 0.0,
+            c3: f64::NAN,
+            c4: 0.0,
+        }),
+        xeon_grid(),
+        1,
+    );
+    let mut probe = node();
+    probe.set_util(0, 1.0);
+    probe_gov.sample(&mut probe).unwrap();
+    assert!(
+        probe_gov.stale_reason().unwrap().contains("consult failed"),
+        "{:?}",
+        probe_gov.stale_reason()
+    );
+    assert_degrades_to_ondemand(gov, node(), node());
 }

@@ -5,7 +5,7 @@ use ecopt::config::{CampaignSpec, ExperimentConfig, SvrSpec};
 use ecopt::coordinator::Coordinator;
 use ecopt::persist::{config_digest, CachedModel, ModelCache, ModelKey};
 use ecopt::powermodel::PowerModel;
-use ecopt::svr::{SvrModel, TrainSample};
+use ecopt::svr::{Standardizer, SvrModel, TrainSample, DIMS};
 use ecopt::util::json::ToJson;
 use ecopt::util::tempdir::TempDir;
 use ecopt::workloads::runner::RunConfig;
@@ -147,6 +147,105 @@ fn sanitization_collisions_get_distinct_files() {
     assert!(cache.get(&k1).unwrap().is_some(), "k1 survived k2's put");
     assert!(cache.get(&k2).unwrap().is_some());
     assert_eq!(cache.entries().unwrap().len(), 2);
+}
+
+#[test]
+fn concurrent_writers_same_key_never_produce_a_torn_file() {
+    // ISSUE 4 satellite: two threads hammering `put` on the SAME key
+    // must never let a reader observe a torn/unparseable file — every
+    // `get` sees one complete generation (atomic unique-temp + rename is
+    // last-writer-wins). The pre-fix implementation staged every writer
+    // in ONE shared `.json.tmp` path, so concurrent writers interleaved
+    // bytes in the staging file and could rename a torn document into
+    // place; unique per-put staging names close that window.
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    // Generation g is self-consistent: power.c1 == svr.b == g. A blend
+    // of two generations fails the consistency check even if it parses.
+    fn generation(g: f64) -> CachedModel {
+        CachedModel {
+            power: PowerModel {
+                c1: g,
+                c2: 0.25,
+                c3: 200.0,
+                c4: 25.0,
+            },
+            svr: SvrModel {
+                train_x: vec![2.2, 32.0, 1.0, 1.2, 1.0, 1.0],
+                beta: vec![-40.0, 40.0],
+                b: g,
+                gamma: 0.05,
+                scaler: Standardizer::identity(DIMS),
+                iterations: 10,
+                n_support: 2,
+            },
+            cv: None,
+            test_mae: None,
+            test_pae_pct: None,
+        }
+    }
+
+    let dir = TempDir::new().unwrap();
+    let cache = ModelCache::open(dir.path()).unwrap();
+    let key = ModelKey::new("hammer", "n1#race", "custom-node");
+    cache.put(&key, &generation(0.0)).unwrap();
+
+    const GENERATIONS: &[f64] = &[1.0, 2.0];
+    const ITERS: usize = 200;
+    let done = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        for (w, g) in GENERATIONS.iter().enumerate() {
+            let cache = &cache;
+            let key = &key;
+            scope.spawn(move || {
+                for i in 0..ITERS {
+                    cache
+                        .put(key, &generation(*g))
+                        .unwrap_or_else(|e| panic!("writer {w} iter {i}: {e}"));
+                }
+            });
+        }
+        // Reader races the writers for the whole run.
+        let reader = scope.spawn(|| {
+            let mut reads = 0usize;
+            while !done.load(Ordering::Relaxed) {
+                let m = cache
+                    .get(&key)
+                    .expect("reader mid-race must never see a torn file")
+                    .expect("entry exists for the whole race");
+                assert_eq!(
+                    m.power.c1, m.svr.b,
+                    "read blended two generations (c1 {} vs b {})",
+                    m.power.c1, m.svr.b
+                );
+                assert!(
+                    [0.0, 1.0, 2.0].contains(&m.svr.b),
+                    "unknown generation {}",
+                    m.svr.b
+                );
+                reads += 1;
+            }
+            reads
+        });
+        // Bound the reader's lifetime by time: 300 ms of racing is
+        // plenty to hit the torn-write window of the old implementation.
+        std::thread::sleep(std::time::Duration::from_millis(300));
+        done.store(true, Ordering::Relaxed);
+        let reads = reader.join().unwrap();
+        assert!(reads > 0, "reader must actually race the writers");
+    });
+
+    // Post-race: the file is one complete generation, and no staging
+    // temp files leaked.
+    let final_m = cache.get(&key).unwrap().expect("entry survives the race");
+    assert_eq!(final_m.power.c1, final_m.svr.b);
+    assert!(GENERATIONS.contains(&final_m.svr.b));
+    let leftovers: Vec<_> = std::fs::read_dir(dir.path())
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+        .collect();
+    assert!(leftovers.is_empty(), "staging files leaked: {leftovers:?}");
 }
 
 #[test]

@@ -1,0 +1,404 @@
+//! `ecoptd` integration tests (ISSUE 4): daemon round-trips, registry
+//! warm-load, deterministic loadgen transcripts, load shedding, and the
+//! async train/status path — all against an in-process server on an
+//! ephemeral port.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use ecopt::config::{CampaignSpec, ExperimentConfig, SvrSpec};
+use ecopt::energy::predict_point;
+use ecopt::persist::{CachedModel, ModelCache, ModelKey};
+use ecopt::powermodel::PowerModel;
+use ecopt::service::loadgen::request_once;
+use ecopt::service::protocol::{line_code, line_is_ok, Request, CODE_OVERLOADED};
+use ecopt::service::{run_loadgen, EcoptServer, LoadgenOptions, ServerHandle, ServiceConfig};
+use ecopt::svr::{SvrModel, TrainSample};
+use ecopt::util::json::Json;
+use ecopt::util::tempdir::TempDir;
+
+/// A quickly-but-genuinely-trained SVR over a synthetic scalable app.
+fn trained_bundle() -> CachedModel {
+    let mut samples = Vec::new();
+    for fi in 0..4u32 {
+        let f = 1200 + fi * 300;
+        for p in [1usize, 4, 16, 32] {
+            for n in 1..=2u32 {
+                let t = 150.0 * n as f64 * (0.07 + 0.93 / p as f64) * 2200.0 / f as f64;
+                samples.push(TrainSample {
+                    f_mhz: f,
+                    cores: p,
+                    input: n,
+                    time_s: t,
+                });
+            }
+        }
+    }
+    let svr = SvrModel::train(
+        &samples,
+        &SvrSpec {
+            c: 2000.0,
+            epsilon: 0.4,
+            max_iter: 200_000,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    CachedModel {
+        power: PowerModel::paper_eq9(),
+        svr,
+        cv: None,
+        test_mae: None,
+        test_pae_pct: None,
+    }
+}
+
+/// Bind + run a daemon on an ephemeral port; returns (handle, daemon
+/// thread, addr string). Any cache dir passed in `svc` must outlive the
+/// server (the caller keeps the TempDir).
+fn spawn_server(
+    cfg: ExperimentConfig,
+    svc: ServiceConfig,
+) -> (
+    ServerHandle,
+    std::thread::JoinHandle<ecopt::service::ServiceReport>,
+    String,
+) {
+    let server = EcoptServer::bind(cfg, svc).unwrap();
+    let addr = server.local_addr().to_string();
+    let handle = server.handle();
+    let daemon = std::thread::spawn(move || server.run().unwrap());
+    (handle, daemon, addr)
+}
+
+#[test]
+fn daemon_roundtrips_predict_optimize_registry_stats() {
+    let dir = TempDir::new().unwrap();
+    let cache = ModelCache::open(dir.path()).unwrap();
+    let key = ModelKey::new("synthapp", "n1-2#itest", "custom-node");
+    cache.put(&key, &trained_bundle()).unwrap();
+
+    let cfg = ExperimentConfig::default();
+    let (handle, daemon, addr) = spawn_server(
+        cfg.clone(),
+        ServiceConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 2,
+            cache_dir: Some(dir.path().to_path_buf()),
+            ..Default::default()
+        },
+    );
+
+    // registry: the warm-loaded model is listed with query hints.
+    let resp = request_once(&addr, &Request::Registry.to_line().unwrap()).unwrap();
+    assert!(line_is_ok(&resp), "{resp}");
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(j.get("count").unwrap().as_usize().unwrap(), 1);
+    let entry = &j.get("entries").unwrap().as_arr().unwrap()[0];
+    assert_eq!(entry.get("app").unwrap().as_str().unwrap(), "synthapp");
+    assert_eq!(entry.get("arch").unwrap().as_str().unwrap(), "custom-node");
+    assert!(!entry.get("freqs").unwrap().as_arr().unwrap().is_empty());
+    assert_eq!(entry.get("max_cores").unwrap().as_usize().unwrap(), 32);
+
+    // predict: matches the local evaluation of the very same bundle, bit
+    // for bit (the JSON float writer is exact round-trip).
+    let predict = Request::Predict {
+        app: "synthapp".into(),
+        arch: None,
+        tag: None,
+        f_mhz: 1800,
+        cores: 16,
+        input: 2,
+    };
+    let resp = request_once(&addr, &predict.to_line().unwrap()).unwrap();
+    assert!(line_is_ok(&resp), "{resp}");
+    let j = Json::parse(&resp).unwrap();
+    let bundle = trained_bundle();
+    let arch = cfg.resolved_arch().unwrap();
+    let expect = predict_point(&bundle.power, &bundle.svr, &arch, 1800, 16, 2);
+    assert_eq!(j.get("pred_time_s").unwrap().as_f64().unwrap(), expect.pred_time_s);
+    assert_eq!(j.get("power_w").unwrap().as_f64().unwrap(), expect.power_w);
+    assert_eq!(j.get("energy_j").unwrap().as_f64().unwrap(), expect.energy_j);
+    // Same request twice -> byte-identical response.
+    let again = request_once(&addr, &predict.to_line().unwrap()).unwrap();
+    assert_eq!(again, resp);
+
+    // optimize: on-grid answer, constraints respected, memo stable.
+    let optimize = Request::Optimize {
+        app: "synthapp".into(),
+        arch: None,
+        tag: None,
+        input: 2,
+        constraints: ecopt::energy::Constraints {
+            max_cores: Some(8),
+            ..Default::default()
+        },
+    };
+    let resp = request_once(&addr, &optimize.to_line().unwrap()).unwrap();
+    assert!(line_is_ok(&resp), "{resp}");
+    let j = Json::parse(&resp).unwrap();
+    let f = j.get("f_mhz").unwrap().as_u32().unwrap();
+    let p = j.get("cores").unwrap().as_usize().unwrap();
+    assert!(cfg.effective_campaign().unwrap().frequencies().contains(&f));
+    assert!((1..=8).contains(&p), "constraint violated: {p} cores");
+    let again = request_once(&addr, &optimize.to_line().unwrap()).unwrap();
+    assert_eq!(again, resp, "memoized consult must answer identically");
+
+    // Unknown app -> 404-style; bad requests -> 400-style; the
+    // connection survives garbage (one response line per line sent).
+    let resp = request_once(
+        &addr,
+        &Request::Predict {
+            app: "nope".into(),
+            arch: None,
+            tag: None,
+            f_mhz: 1800,
+            cores: 4,
+            input: 1,
+        }
+        .to_line()
+        .unwrap(),
+    )
+    .unwrap();
+    assert!(!line_is_ok(&resp));
+    assert_eq!(line_code(&resp), Some(404));
+    let resp = request_once(&addr, "this is not json").unwrap();
+    assert_eq!(line_code(&resp), Some(400));
+    let resp = request_once(&addr, r#"{"v":99,"kind":"stats"}"#).unwrap();
+    assert_eq!(line_code(&resp), Some(400), "future version refused: {resp}");
+    let resp = request_once(
+        &addr,
+        &Request::Predict {
+            app: "synthapp".into(),
+            arch: None,
+            tag: None,
+            f_mhz: 1800,
+            cores: 999,
+            input: 1,
+        }
+        .to_line()
+        .unwrap(),
+    )
+    .unwrap();
+    assert_eq!(line_code(&resp), Some(400), "cores out of range: {resp}");
+
+    // stats: counters add up and the registry section is present.
+    let resp = request_once(&addr, &Request::Stats.to_line().unwrap()).unwrap();
+    assert!(line_is_ok(&resp), "{resp}");
+    let j = Json::parse(&resp).unwrap();
+    assert!(j.get("served").unwrap().as_u64().unwrap() >= 8);
+    assert_eq!(
+        j.get("registry").unwrap().get("entries").unwrap().as_usize().unwrap(),
+        1
+    );
+    assert!(
+        j.get("registry").unwrap().get("consult_memo_hits").unwrap().as_u64().unwrap() >= 1,
+        "second optimize must be a memo hit"
+    );
+
+    // Pipelined requests on ONE connection: three lines in, three
+    // responses out, in order.
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let line = Request::Stats.to_line().unwrap();
+    stream
+        .write_all(format!("{line}\n{line}\n{line}\n").as_bytes())
+        .unwrap();
+    for _ in 0..3 {
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        assert!(line_is_ok(resp.trim_end()), "{resp}");
+    }
+    drop(reader);
+    drop(stream);
+
+    // shutdown: responds ok first, then the daemon stops and reports.
+    let resp = request_once(&addr, &Request::Shutdown.to_line().unwrap()).unwrap();
+    assert!(line_is_ok(&resp), "{resp}");
+    let report = daemon.join().unwrap();
+    assert!(report.served >= 12);
+    assert_eq!(report.shed, 0);
+    drop(handle);
+}
+
+#[test]
+fn same_seed_loadgen_transcripts_are_byte_identical() {
+    let dir = TempDir::new().unwrap();
+    let cache = ModelCache::open(dir.path()).unwrap();
+    cache
+        .put(
+            &ModelKey::new("synthapp", "n1-2#det", "custom-node"),
+            &trained_bundle(),
+        )
+        .unwrap();
+    let (handle, daemon, addr) = spawn_server(
+        ExperimentConfig::default(),
+        ServiceConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 3,
+            cache_dir: Some(dir.path().to_path_buf()),
+            ..Default::default()
+        },
+    );
+
+    let opts = LoadgenOptions {
+        addr: addr.clone(),
+        requests: 80,
+        connections: 3,
+        seed: 11,
+    };
+    let a = run_loadgen(&opts).unwrap();
+    let b = run_loadgen(&opts).unwrap();
+    assert_eq!(a.shed, 0);
+    assert_eq!(a.errors, 0, "mix over a live registry must not error");
+    assert_eq!(
+        a.transcript, b.transcript,
+        "same seed + same registry state must replay byte-identically"
+    );
+    // A different seed produces a different transcript.
+    let c = run_loadgen(&LoadgenOptions { seed: 12, ..opts }).unwrap();
+    assert_ne!(a.transcript, c.transcript);
+    assert!(a.rps > 0.0 && a.p99_us >= a.p50_us);
+
+    handle.stop();
+    daemon.join().unwrap();
+}
+
+#[test]
+fn full_accept_queue_sheds_with_503() {
+    let dir = TempDir::new().unwrap();
+    let cache = ModelCache::open(dir.path()).unwrap();
+    cache
+        .put(
+            &ModelKey::new("synthapp", "n1-2#shed", "custom-node"),
+            &trained_bundle(),
+        )
+        .unwrap();
+    // queue_cap 0: every connection is shed immediately — the daemon
+    // degrades instead of stalling.
+    let (handle, daemon, addr) = spawn_server(
+        ExperimentConfig::default(),
+        ServiceConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 1,
+            queue_cap: 0,
+            cache_dir: Some(dir.path().to_path_buf()),
+            ..Default::default()
+        },
+    );
+    let stream = TcpStream::connect(&addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line_code(line.trim_end()), Some(CODE_OVERLOADED), "{line}");
+    // EOF after the shed line: the server closed the connection.
+    let mut rest = String::new();
+    assert_eq!(reader.read_line(&mut rest).unwrap(), 0);
+
+    handle.stop();
+    let report = daemon.join().unwrap();
+    assert!(report.shed >= 1);
+}
+
+#[test]
+fn train_job_end_to_end_writes_through_and_serves() {
+    // Tiny pipeline so the async train finishes in test time.
+    let cfg = ExperimentConfig {
+        campaign: CampaignSpec {
+            freq_step_mhz: 500, // 1200, 1700, 2200
+            core_max: 4,
+            inputs: vec![1],
+            ..Default::default()
+        },
+        svr: SvrSpec {
+            folds: 2,
+            c: 500.0,
+            max_iter: 50_000,
+            ..Default::default()
+        },
+        workloads: vec!["swaptions".into()],
+        ..Default::default()
+    };
+    let dir = TempDir::new().unwrap();
+    let (handle, daemon, addr) = spawn_server(
+        cfg,
+        ServiceConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 2,
+            cache_dir: Some(dir.path().to_path_buf()),
+            ..Default::default()
+        },
+    );
+
+    // Nothing loaded yet: predict is a 404 until we train.
+    let predict = Request::Predict {
+        app: "swaptions".into(),
+        arch: None,
+        tag: None,
+        f_mhz: 1700,
+        cores: 2,
+        input: 1,
+    };
+    let resp = request_once(&addr, &predict.to_line().unwrap()).unwrap();
+    assert_eq!(line_code(&resp), Some(404));
+
+    let train = Request::Train {
+        app: "swaptions".into(),
+        arch: None,
+    };
+    let resp = request_once(&addr, &train.to_line().unwrap()).unwrap();
+    assert!(line_is_ok(&resp), "{resp}");
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(j.get("status").unwrap().as_str().unwrap(), "training");
+    let job = j.get("job").unwrap().as_u64().unwrap();
+
+    // A duplicate train request joins the SAME in-flight job (or is
+    // already served from the registry if the job just finished).
+    let resp = request_once(&addr, &train.to_line().unwrap()).unwrap();
+    let j = Json::parse(&resp).unwrap();
+    match j.get("status").unwrap().as_str().unwrap() {
+        "training" => assert_eq!(j.get("job").unwrap().as_u64().unwrap(), job),
+        "ready" => {}
+        other => panic!("unexpected duplicate-train status '{other}'"),
+    }
+
+    // Poll until done (the tiny pipeline takes seconds, not minutes).
+    let deadline = Instant::now() + Duration::from_secs(300);
+    loop {
+        let resp = request_once(&addr, &Request::Status { job }.to_line().unwrap()).unwrap();
+        assert!(line_is_ok(&resp), "{resp}");
+        let j = Json::parse(&resp).unwrap();
+        match j.get("status").unwrap().as_str().unwrap() {
+            "done" => break,
+            "failed" => panic!("training failed: {resp}"),
+            _ => {
+                assert!(Instant::now() < deadline, "training did not finish in time");
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+
+    // The trained model serves...
+    let resp = request_once(&addr, &predict.to_line().unwrap()).unwrap();
+    assert!(line_is_ok(&resp), "{resp}");
+    // ...a re-train is answered from the registry...
+    let resp = request_once(&addr, &train.to_line().unwrap()).unwrap();
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(j.get("status").unwrap().as_str().unwrap(), "ready");
+    assert!(j.get("cached").unwrap().as_bool().unwrap());
+    // ...and the bundle was written through to the on-disk cache with
+    // full pipeline metadata (CV + held-out metrics).
+    let entries = ModelCache::open(dir.path()).unwrap().load_all().unwrap();
+    assert_eq!(entries.len(), 1);
+    assert_eq!(entries[0].0.app, "swaptions");
+    assert!(entries[0].1.cv.is_some(), "service writes complete bundles");
+
+    let resp = request_once(&addr, &Request::Shutdown.to_line().unwrap()).unwrap();
+    assert!(line_is_ok(&resp));
+    daemon.join().unwrap();
+    drop(handle);
+}
