@@ -182,9 +182,11 @@ pub struct ArchProfile {
     pub name: String,
     /// Clusters in activation order (cluster 0's cores come online first).
     pub clusters: Vec<ClusterSpec>,
-    /// DVFS ladder, shared by all clusters.
+    /// DVFS ladder minimum, MHz (shared by all clusters).
     pub freq_min_mhz: Mhz,
+    /// DVFS ladder maximum, MHz.
     pub freq_max_mhz: Mhz,
+    /// DVFS ladder step, MHz.
     pub freq_step_mhz: Mhz,
     /// Node-level static power floor, watts (PSU, DRAM, board).
     pub static_w: f64,
@@ -521,6 +523,20 @@ pub fn registry() -> Vec<ArchProfile> {
 }
 
 /// Look up a built-in profile by name.
+///
+/// ```
+/// use ecopt::arch::profile_by_name;
+///
+/// let little = profile_by_name("mobile-biglittle").unwrap();
+/// assert_eq!(little.total_cores(), 8);
+/// assert_eq!(little.clusters.len(), 2, "big + LITTLE");
+///
+/// let xeon = profile_by_name("xeon-dual-e5-2698v3").unwrap();
+/// assert_eq!(xeon.ladder().first().copied(), Some(1200));
+///
+/// // Unknown names are an error, not a silent default.
+/// assert!(profile_by_name("vax-11").is_err());
+/// ```
 pub fn profile_by_name(name: &str) -> Result<ArchProfile> {
     registry()
         .into_iter()

@@ -28,15 +28,22 @@ const CHAR_SEED_DOMAIN: u64 = 0xC4A2_AC7E_0000_0001;
 /// truth the SVR never sees but Figs. 6–9 compare against).
 #[derive(Debug, Clone, Copy)]
 pub struct CharSample {
+    /// Swept frequency, MHz.
     pub f_mhz: Mhz,
+    /// Swept core count.
     pub cores: usize,
+    /// Swept input size.
     pub input: u32,
+    /// Measured execution time, seconds.
     pub time_s: f64,
+    /// Measured (IPMI-integrated) energy, joules.
     pub energy_j: f64,
+    /// Mean measured power over the run, watts.
     pub mean_power_w: f64,
 }
 
 impl CharSample {
+    /// The SVR's view of this sample (drops the energy ground truth).
     pub fn to_train(&self) -> TrainSample {
         TrainSample {
             f_mhz: self.f_mhz,
@@ -50,7 +57,9 @@ impl CharSample {
 /// Full characterization of one application.
 #[derive(Debug, Clone)]
 pub struct Characterization {
+    /// Application (workload) name.
     pub app: String,
+    /// All campaign samples, in grid order.
     pub samples: Vec<CharSample>,
 }
 

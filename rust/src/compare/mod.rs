@@ -50,9 +50,13 @@ pub fn pow2_core_counts(total: usize) -> Vec<usize> {
 /// One measured governor run, summarized.
 #[derive(Debug, Clone)]
 pub struct GovernorRun {
+    /// Active core count of the run.
     pub cores: usize,
+    /// Time-weighted mean frequency over the run, GHz.
     pub mean_freq_ghz: f64,
+    /// Measured energy, joules.
     pub energy_j: f64,
+    /// Measured wall time, seconds.
     pub time_s: f64,
 }
 
@@ -70,14 +74,17 @@ impl From<&RunResult> for GovernorRun {
 /// One row of Tables 2–5.
 #[derive(Debug, Clone)]
 pub struct ComparisonRow {
+    /// Application name.
     pub app: String,
+    /// Input size of this row.
     pub input: u32,
     /// Best (minimum-energy) ondemand run over the core-count sweep.
     pub ondemand_min: GovernorRun,
     /// Worst (maximum-energy) ondemand run.
     pub ondemand_max: GovernorRun,
-    /// The proposed configuration (predicted by the energy model).
+    /// The proposed frequency (predicted by the energy model), MHz.
     pub proposed_f_mhz: Mhz,
+    /// The proposed core count.
     pub proposed_cores: usize,
     /// Measured energy of the proposed configuration.
     pub proposed: GovernorRun,
@@ -184,14 +191,21 @@ pub fn compare_one_arch(
 /// avg 6 % vs best case, ~790 % vs worst case, max 1298 %, min 59 %).
 #[derive(Debug, Clone)]
 pub struct SavingsSummary {
+    /// Mean savings vs the ondemand best case, %.
     pub avg_save_min_pct: f64,
+    /// Mean savings vs the ondemand worst case, %.
     pub avg_save_max_pct: f64,
+    /// Largest savings vs the ondemand worst case, %.
     pub best_save_max_pct: f64,
+    /// Smallest savings vs the ondemand worst case, %.
     pub worst_save_max_pct: f64,
+    /// Largest savings vs the ondemand best case, %.
     pub best_save_min_pct: f64,
+    /// Comparison rows aggregated.
     pub rows: usize,
 }
 
+/// Aggregate a set of comparison rows into the headline summary.
 pub fn summarize(rows: &[ComparisonRow]) -> SavingsSummary {
     let n = rows.len().max(1) as f64;
     SavingsSummary {

@@ -128,9 +128,13 @@ impl FromJson for NodeSpec {
 /// `powermodel` does real work.
 #[derive(Debug, Clone)]
 pub struct PowerProcessSpec {
+    /// Ground-truth per-core cubic dynamic-power coefficient, W / GHz³.
     pub gt_c1: f64,
+    /// Ground-truth per-core linear (leakage) coefficient, W / GHz.
     pub gt_c2: f64,
+    /// Ground-truth node-level static floor, watts.
     pub gt_static: f64,
+    /// Ground-truth per-powered-socket overhead, watts.
     pub gt_socket: f64,
     /// Fraction of a core's dynamic power still drawn when idle (clock
     /// ungated but stalled) — makes utilization matter.
@@ -199,8 +203,9 @@ pub struct CampaignSpec {
     pub freq_max_mhz: Mhz,
     /// Step in MHz (paper: 100).
     pub freq_step_mhz: Mhz,
-    /// Core counts to sweep (paper: every 1..=32).
+    /// Lowest core count to sweep (paper: 1).
     pub core_min: usize,
+    /// Highest core count to sweep (paper: 32).
     pub core_max: usize,
     /// Input sizes to sweep (paper: 1..=5).
     pub inputs: Vec<u32>,
@@ -361,8 +366,11 @@ impl FromJson for CampaignSpec {
 /// tuned by grid search; 90/10 split; 10-fold CV).
 #[derive(Debug, Clone)]
 pub struct SvrSpec {
+    /// Regularization constant C (paper: 10e3).
     pub c: f64,
+    /// RBF kernel width γ (paper: 0.5).
     pub gamma: f64,
+    /// ε-insensitive tube half-width, seconds.
     pub epsilon: f64,
     /// Fraction of the characterization set used for training.
     pub train_fraction: f64,
@@ -438,8 +446,11 @@ impl FromJson for SvrSpec {
 /// Top-level experiment configuration (what the CLI loads from JSON).
 #[derive(Debug, Clone, Default)]
 pub struct ExperimentConfig {
+    /// Simulated node hardware (legacy homogeneous path).
     pub node: NodeSpec,
+    /// Characterization campaign parameters.
     pub campaign: CampaignSpec,
+    /// SVR hyper-parameters.
     pub svr: SvrSpec,
     /// Registry architecture profile to simulate (see `arch::registry`).
     /// `None` falls back to `node` interpreted as a homogeneous profile.

@@ -50,7 +50,7 @@ use crate::arch::ArchProfile;
 use crate::characterize::{characterize_arch, Characterization};
 use crate::compare::{compare_one_arch, summarize, ComparisonRow, SavingsSummary};
 use crate::config::{CampaignSpec, ExperimentConfig};
-use crate::energy::{config_grid_arch, EnergyModel};
+use crate::energy::{config_grid_arch, Constraints, EnergyModel, Objective, OptimalConfig};
 use crate::persist::{model_input_tag, CacheStats, CachedModel, ModelCache, ModelKey};
 use crate::powermodel::{stress_campaign_arch, FitReport, PowerModel, PowerObs, StressConfig};
 use crate::runtime::PjrtRuntime;
@@ -72,13 +72,20 @@ pub const FLEET_SEED_DOMAIN: u64 = 0xC4A2_AC7E_0000_0003;
 /// Per-application results bundle.
 #[derive(Debug, Clone)]
 pub struct AppResults {
+    /// Application (workload) name.
     pub app: String,
+    /// The §3.4 characterization campaign's samples.
     pub characterization: Characterization,
+    /// Trained ε-SVR performance model.
     pub svr: SvrModel,
+    /// 10-fold cross-validation report (Table 1).
     pub cv: CvReport,
-    /// Held-out test-set errors (the 90/10 split's 10 %).
+    /// Held-out test-set mean absolute error (the 90/10 split's 10 %),
+    /// seconds.
     pub test_mae: f64,
+    /// Held-out test-set percentage absolute error.
     pub test_pae_pct: f64,
+    /// Per-input ondemand-vs-proposed comparisons (Tables 2–5 rows).
     pub comparisons: Vec<ComparisonRow>,
 }
 
@@ -88,65 +95,171 @@ pub struct ExperimentResults {
     /// Architecture profile the pipeline ran on (registry name, or
     /// "custom-node" for legacy NodeSpec runs).
     pub arch: String,
+    /// Stress-campaign power observations (Fig. 1's measured series).
     pub power_obs: Vec<PowerObs>,
+    /// Fitted Eq. 7 power model.
     pub power_model: PowerModel,
+    /// Power-model fit quality (APE/RMSE).
     pub power_fit: FitReport,
+    /// Per-application bundles, in workload order.
     pub apps: Vec<AppResults>,
+    /// Savings aggregated across every comparison row (the headline).
     pub summary: SavingsSummary,
 }
 
 impl ExperimentResults {
+    /// Serialize to a JSON file (exact-float writer: `load` round-trips
+    /// bit for bit).
     pub fn save(&self, path: &Path) -> Result<()> {
         std::fs::write(path, self.to_json().dump()?)?;
         Ok(())
     }
 
+    /// Load a bundle previously written by [`ExperimentResults::save`].
     pub fn load(path: &Path) -> Result<Self> {
         Self::from_json(&crate::util::json::Json::parse(&std::fs::read_to_string(path)?)?)
     }
 
+    /// Look one application's results up by name.
     pub fn app(&self, name: &str) -> Result<&AppResults> {
         self.apps
             .iter()
             .find(|a| a.app == name)
             .ok_or_else(|| Error::UnknownWorkload(name.to_string()))
     }
+
+    /// The architecture profile this bundle ran on: registry lookup by
+    /// the recorded name, defaulting to the paper's node for
+    /// custom/legacy bundles (results produced via a NON-registry
+    /// profile fall back to the default topology — the pre-registry
+    /// behaviour).
+    pub fn resolved_arch(&self) -> ArchProfile {
+        crate::arch::profile_by_name(&self.arch)
+            .unwrap_or_else(|_| ArchProfile::from_node_spec(&crate::config::NodeSpec::default()))
+    }
+
+    /// Per-objective grid optima recomputed from the stored models
+    /// (ISSUE 5): one row per `(app, input, objective)` over the
+    /// campaign's grid. `config` is `None` when the objective's cut
+    /// admits no grid point (e.g. an unsatisfiable power cap) — the
+    /// row stays so reports can render the infeasibility.
+    ///
+    /// Pure function of the result bundle: nothing here is serialized,
+    /// so existing result/golden byte formats are untouched.
+    pub fn objective_optima(
+        &self,
+        campaign: &CampaignSpec,
+        objectives: &[Objective],
+    ) -> Vec<ObjectiveOptimum> {
+        let arch = self.resolved_arch();
+        let campaign = campaign.adapted_to(&arch);
+        let grid = config_grid_arch(&campaign, &arch);
+        let mut out = Vec::new();
+        for app in &self.apps {
+            let em = EnergyModel::for_arch(self.power_model, app.svr.clone(), arch.clone());
+            for &input in &campaign.inputs {
+                // One batched surface pass answers every objective.
+                let surf = em.surface(&grid, input);
+                for obj in objectives {
+                    let cons = Constraints {
+                        objective: *obj,
+                        ..Default::default()
+                    };
+                    out.push(ObjectiveOptimum {
+                        arch: arch.name.clone(),
+                        app: app.app.clone(),
+                        input,
+                        objective: *obj,
+                        config: EnergyModel::optimize_surface(&surf, &cons).ok(),
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One `(arch, app, input, objective)` grid optimum — the row type of
+/// [`ExperimentResults::objective_optima`] /
+/// [`FleetResults::objective_optima`].
+#[derive(Debug, Clone)]
+pub struct ObjectiveOptimum {
+    /// Architecture profile name the model was trained on.
+    pub arch: String,
+    /// Application name.
+    pub app: String,
+    /// Input size.
+    pub input: u32,
+    /// The objective this row's argmin minimizes.
+    pub objective: Objective,
+    /// The argmin, or `None` when the objective's cut admits no grid
+    /// point (infeasible budget/cap/deadline).
+    pub config: Option<OptimalConfig>,
 }
 
 /// One architecture's results within a fleet sweep.
 #[derive(Debug, Clone)]
 pub struct FleetMember {
+    /// The member's architecture-profile name.
     pub arch: String,
+    /// The full pipeline results on that architecture.
     pub results: ExperimentResults,
 }
 
 /// Results of a [`run_fleet`] sweep, in profile order.
 #[derive(Debug, Clone)]
 pub struct FleetResults {
+    /// One member per swept profile, in input order.
     pub members: Vec<FleetMember>,
 }
 
 impl FleetResults {
+    /// Serialize to a JSON file (exact-float writer: `load` round-trips
+    /// bit for bit).
     pub fn save(&self, path: &Path) -> Result<()> {
         std::fs::write(path, self.to_json().dump()?)?;
         Ok(())
     }
 
+    /// Load results previously written by [`FleetResults::save`].
     pub fn load(path: &Path) -> Result<Self> {
         Self::from_json(&crate::util::json::Json::parse(&std::fs::read_to_string(path)?)?)
     }
 
+    /// Look one member up by architecture name.
     pub fn member(&self, arch: &str) -> Result<&FleetMember> {
         self.members
             .iter()
             .find(|m| m.arch == arch)
             .ok_or_else(|| Error::UnknownArch(arch.to_string()))
     }
+
+    /// Per-objective grid optima for every fleet member (ISSUE 5): each
+    /// member's rows are computed over ITS campaign — the base campaign
+    /// widened to the member's full ladder via [`fleet_member_campaign`],
+    /// exactly the grid the member pipeline decided on. Rows come back
+    /// in `(member, app, input, objective)` order, a pure function of
+    /// the fleet results.
+    pub fn objective_optima(
+        &self,
+        base_campaign: &CampaignSpec,
+        objectives: &[Objective],
+    ) -> Vec<ObjectiveOptimum> {
+        let mut out = Vec::new();
+        for m in &self.members {
+            let arch = m.results.resolved_arch();
+            let campaign = fleet_member_campaign(base_campaign, &arch);
+            out.extend(m.results.objective_optima(&campaign, objectives));
+        }
+        out
+    }
 }
 
 /// Pipeline driver.
 pub struct Coordinator {
+    /// The experiment configuration this pipeline runs.
     pub cfg: ExperimentConfig,
+    /// Simulator resolution/seed/thread settings.
     pub run_cfg: RunConfig,
     /// Optional PJRT runtime: when present, the optimize stage goes
     /// through the AOT `svr_energy` artifact (the deployed path).
@@ -160,6 +273,8 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
+    /// Build a coordinator for a configuration (architecture resolved
+    /// from the config; simulator seeded from the campaign seed).
     pub fn new(cfg: ExperimentConfig) -> Self {
         let run_cfg = RunConfig {
             seed: cfg.campaign.seed,

@@ -13,7 +13,9 @@
 //!    `conservative`, `performance`, `powersave`) at the full core
 //!    complement — Linux governors do not choose core counts;
 //! 3. replays it under [`EcoptGovernor`] (model consults + hysteresis +
-//!    hotplug);
+//!    hotplug) — once with the energy objective and once with the EDP
+//!    objective (ISSUE 5), so the frontier engine's predicted
+//!    energy/runtime trade-off is pitted against measured traces;
 //! 4. sweeps the **static oracle**: every grid configuration pinned for
 //!    the whole trace, argmin by measured energy (deterministic
 //!    `(energy, f, cores)` order) — the best any *static* choice, i.e.
@@ -34,7 +36,7 @@ use std::path::Path;
 
 use crate::arch::ArchProfile;
 use crate::config::{CampaignSpec, ExperimentConfig, Mhz, SvrSpec};
-use crate::energy::{config_grid_arch, EnergyModel};
+use crate::energy::{config_grid_arch, EnergyModel, Objective};
 use crate::governors::{by_name, EcoptGovernor, Pinned};
 use crate::node::power::PowerProcess;
 use crate::node::Node;
@@ -64,6 +66,9 @@ const STREAM_CHARACTERIZE: u64 = 0;
 const STREAM_BASELINE: u64 = 1;
 const STREAM_ECOPT: u64 = 2;
 const STREAM_ORACLE: u64 = 3;
+/// The EDP-objective governor's replay stream (ISSUE 5) — its own
+/// purpose so adding it shifted no pre-existing stream.
+const STREAM_ECOPT_EDP: u64 = 4;
 
 fn replay_stream(purpose: u64, workload: usize, slot: u64) -> u64 {
     (purpose << 48) | ((workload as u64) << 32) | slot
@@ -99,10 +104,15 @@ pub type ReplayStats = CacheStats;
 /// One governor's replay of one workload, summarized.
 #[derive(Debug, Clone)]
 pub struct GovernorReplay {
+    /// Governor name (`ondemand`, `ecopt`, `ecopt-edp`, ...).
     pub governor: String,
+    /// Measured trace energy, joules.
     pub energy_j: f64,
+    /// Measured wall time, seconds.
     pub time_s: f64,
+    /// Time-weighted mean frequency over the trace, GHz.
     pub mean_freq_ghz: f64,
+    /// Mean power draw over the trace, watts.
     pub mean_power_w: f64,
     /// Wall seconds per phase class (compute, memory, idle).
     pub time_by_class: [f64; 3],
@@ -127,29 +137,44 @@ impl From<&ReplayRunResult> for GovernorReplay {
 /// The best static configuration over the whole trace (swept, measured).
 #[derive(Debug, Clone, Copy)]
 pub struct OracleConfig {
+    /// The winning pinned frequency, MHz.
     pub f_mhz: Mhz,
+    /// The winning pinned core count.
     pub cores: usize,
+    /// Its measured trace energy, joules.
     pub energy_j: f64,
+    /// Its measured wall time, seconds.
     pub time_s: f64,
 }
 
 /// All governors' replays of one workload.
 #[derive(Debug, Clone)]
 pub struct WorkloadReplay {
+    /// Phased-workload name.
     pub workload: String,
+    /// Input size the trace ran at.
     pub input: u32,
     /// Baseline governors in [`BASELINE_GOVERNORS`] order.
     pub baselines: Vec<GovernorReplay>,
+    /// The energy-objective model-in-the-loop governor's replay.
     pub ecopt: GovernorReplay,
-    /// EcoptGovernor diagnostics (model consults, config switches,
-    /// ondemand-fallback samples — nonzero fallback means a stale model).
+    /// The same governor driven by the EDP objective (ISSUE 5): every
+    /// Busy consult minimizes `E·T` instead of `E` — the measured
+    /// energy/runtime trade-off between the two is the per-objective
+    /// evidence the frontier engine predicts.
+    pub ecopt_edp: GovernorReplay,
+    /// EcoptGovernor model consults + decisions this replay.
     pub ecopt_decisions: u64,
+    /// EcoptGovernor configuration switches this replay.
     pub ecopt_switches: u64,
+    /// EcoptGovernor ondemand-fallback samples (nonzero = stale model).
     pub ecopt_fallback_samples: u64,
+    /// Best static `(freq, cores)` pin over the whole trace (measured).
     pub oracle: OracleConfig,
 }
 
 impl WorkloadReplay {
+    /// Look one baseline governor's replay up by name.
     pub fn baseline(&self, name: &str) -> Result<&GovernorReplay> {
         self.baselines
             .iter()
@@ -171,20 +196,26 @@ impl WorkloadReplay {
 /// Results of one [`run_replay`] invocation, in suite order.
 #[derive(Debug, Clone)]
 pub struct ReplayResults {
+    /// Architecture-profile name the replay ran on.
     pub arch: String,
+    /// One entry per phased workload, in suite order.
     pub members: Vec<WorkloadReplay>,
 }
 
 impl ReplayResults {
+    /// Serialize to a JSON file (exact-float writer: `load` round-trips
+    /// bit for bit).
     pub fn save(&self, path: &Path) -> Result<()> {
         std::fs::write(path, self.to_json().dump()?)?;
         Ok(())
     }
 
+    /// Load results previously written by [`ReplayResults::save`].
     pub fn load(path: &Path) -> Result<Self> {
         Self::from_json(&crate::util::json::Json::parse(&std::fs::read_to_string(path)?)?)
     }
 
+    /// Look one workload's replay up by name.
     pub fn member(&self, workload: &str) -> Result<&WorkloadReplay> {
         self.members
             .iter()
@@ -411,6 +442,23 @@ pub fn run_replay(
             );
         }
 
+        // The EDP-objective governor over the very same trained model:
+        // the measured counterpart of the frontier engine's prediction
+        // that EDP trades energy for runtime.
+        let mut node = Node::from_profile(arch.clone())?;
+        let power_proc = PowerProcess::from_profile(&arch);
+        let mut ecopt_edp =
+            EcoptGovernor::with_objective(models[wi].clone(), grid.clone(), input, Objective::Edp);
+        let r_edp = replay_run(
+            &mut node,
+            &mut ecopt_edp,
+            &power_proc,
+            w,
+            input,
+            &mk_cfg(STREAM_ECOPT_EDP, 0),
+        )?;
+        let ecopt_edp_replay = GovernorReplay::from(&r_edp);
+
         // Static oracle: pin every grid configuration for the whole
         // trace, keep the measured-energy argmin.
         let sweep: Vec<(Mhz, usize, f64, f64)> = pool.try_run(grid.len(), |j| {
@@ -443,6 +491,7 @@ pub fn run_replay(
             input,
             baselines,
             ecopt: ecopt_replay,
+            ecopt_edp: ecopt_edp_replay,
             ecopt_decisions: decisions,
             ecopt_switches: switches,
             ecopt_fallback_samples: fallback,
@@ -511,6 +560,8 @@ mod tests {
             assert_eq!(m.baselines.len(), BASELINE_GOVERNORS.len());
             assert!(m.ondemand().is_ok());
             assert!(m.ecopt.energy_j > 0.0);
+            assert!(m.ecopt_edp.energy_j > 0.0);
+            assert_eq!(m.ecopt_edp.governor, "ecopt-edp");
             assert!(m.oracle.energy_j > 0.0);
             assert_eq!(
                 m.ecopt_fallback_samples, 0,

@@ -1,0 +1,410 @@
+//! Multi-objective energy-frontier engine (ISSUE 5 tentpole).
+//!
+//! The paper minimizes pure energy, but real deployments trade energy
+//! against runtime and power caps: Coutinho et al. optimize EDP/ED²P
+//! across heterogeneous configurations, and Calore et al. show the
+//! energy-vs-time frontier shifts with the metric chosen. This module
+//! generalizes the grid argmin into a multi-objective optimizer:
+//!
+//! * [`Objective`] — the pluggable scalarization: plain energy, the
+//!   energy-delay products EDP (`E·T`) and ED²P (`E·T²`), and the three
+//!   constrained forms (minimize time under an energy budget, minimize
+//!   energy under a power cap, minimize energy under a deadline);
+//! * [`pareto_frontier`] — the **exact** Pareto frontier of
+//!   `(energy, exec-time, peak-power)` over a set of evaluated grid
+//!   points: every point no other point dominates;
+//! * [`Frontier`] — the extracted frontier plus per-objective argmins.
+//!
+//! The frontier is computed from ONE pass of the batched
+//! [`EnergyModel::surface`](crate::energy::EnergyModel::surface)
+//! evaluator (see [`EnergyModel::frontier`](crate::energy::EnergyModel::frontier)),
+//! with the same non-finite filtering and deterministic
+//! `(metric, freq, cores)` tie-breaking as
+//! [`EnergyModel::optimize`](crate::energy::EnergyModel::optimize).
+//!
+//! # Why every monotone objective's argmin lies on the frontier
+//!
+//! Each [`Objective::metric`] is non-decreasing in energy and time and
+//! independent of (or non-decreasing in) power, and each
+//! [`Objective::admits`] cut is an upper bound on one of the three
+//! coordinates. A point dominated by another therefore never scores
+//! strictly better than its dominator under any objective, so the
+//! frontier always contains a global argmin — the property the test
+//! suite (`tests/frontier.rs`) locks.
+
+use std::cmp::Ordering;
+
+use crate::config::Mhz;
+use crate::energy::EnergyPoint;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// A scalarization of the `(energy, exec-time, peak-power)` trade-off:
+/// what the grid optimizer minimizes and which points it may consider.
+///
+/// The default is [`Objective::Energy`] — the paper's original metric —
+/// so every pre-frontier call site keeps its exact behaviour.
+///
+/// Objectives have a one-string [`canonical`](Objective::canonical) form
+/// (`energy`, `edp`, `ed2p`, `budget:J`, `cap:W`, `deadline:S`) that is
+/// also the wire form of the `ecoptd` protocol and the grammar of the
+/// CLI's `--objective` flag; [`Objective::parse`] is its inverse.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum Objective {
+    /// Minimize predicted energy `E` (Eq. 8 — the paper's objective).
+    #[default]
+    Energy,
+    /// Minimize the energy-delay product `E·T` (Coutinho et al.).
+    Edp,
+    /// Minimize the energy-delay-squared product `E·T²` — weights
+    /// runtime harder, for throughput-critical deployments.
+    Ed2p,
+    /// Minimize predicted execution time among configurations whose
+    /// predicted energy stays at or under this budget, in joules.
+    TimeUnderEnergyBudget(f64),
+    /// Minimize predicted energy among configurations whose predicted
+    /// power draw stays at or under this cap, in watts.
+    EnergyUnderPowerCap(f64),
+    /// Minimize predicted energy among configurations whose predicted
+    /// execution time stays at or under this deadline, in seconds.
+    EnergyUnderDeadline(f64),
+}
+
+impl Objective {
+    /// The scalar this objective minimizes at one grid point.
+    ///
+    /// Non-finite metrics are filtered before the argmin (exactly like
+    /// the energy path: a NaN can never win the grid).
+    pub fn metric(&self, p: &EnergyPoint) -> f64 {
+        match self {
+            Objective::Energy => p.energy_j,
+            Objective::Edp => p.energy_j * p.pred_time_s,
+            Objective::Ed2p => p.energy_j * p.pred_time_s * p.pred_time_s,
+            Objective::TimeUnderEnergyBudget(_) => p.pred_time_s,
+            Objective::EnergyUnderPowerCap(_) | Objective::EnergyUnderDeadline(_) => p.energy_j,
+        }
+    }
+
+    /// Whether a grid point is feasible under this objective's cut
+    /// (always true for the unconstrained objectives). A NaN coordinate
+    /// never passes a cut.
+    pub fn admits(&self, p: &EnergyPoint) -> bool {
+        match self {
+            Objective::Energy | Objective::Edp | Objective::Ed2p => true,
+            Objective::TimeUnderEnergyBudget(j) => p.energy_j <= *j,
+            Objective::EnergyUnderPowerCap(w) => p.power_w <= *w,
+            Objective::EnergyUnderDeadline(s) => p.pred_time_s <= *s,
+        }
+    }
+
+    /// Canonical one-string form: `energy`, `edp`, `ed2p`, `budget:J`,
+    /// `cap:W`, `deadline:S` (parameters in shortest-round-trip float
+    /// form). This is the memo-key component, the wire form, and the
+    /// CLI grammar; [`Objective::parse`] inverts it exactly.
+    pub fn canonical(&self) -> String {
+        match self {
+            Objective::Energy => "energy".to_string(),
+            Objective::Edp => "edp".to_string(),
+            Objective::Ed2p => "ed2p".to_string(),
+            Objective::TimeUnderEnergyBudget(j) => format!("budget:{j}"),
+            Objective::EnergyUnderPowerCap(w) => format!("cap:{w}"),
+            Objective::EnergyUnderDeadline(s) => format!("deadline:{s}"),
+        }
+    }
+
+    /// Short human-readable name for reports and governor labels.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Energy => "energy",
+            Objective::Edp => "edp",
+            Objective::Ed2p => "ed2p",
+            Objective::TimeUnderEnergyBudget(_) => "time-under-energy-budget",
+            Objective::EnergyUnderPowerCap(_) => "energy-under-power-cap",
+            Objective::EnergyUnderDeadline(_) => "energy-under-deadline",
+        }
+    }
+
+    /// Parse the [`canonical`](Objective::canonical) grammar. Parameters
+    /// must be finite and positive; anything else is a config error that
+    /// names the accepted forms.
+    pub fn parse(s: &str) -> Result<Objective> {
+        fn param(s: &str, raw: &str) -> Result<f64> {
+            let v: f64 = raw.parse().map_err(|_| {
+                Error::Config(format!("objective '{s}': bad parameter '{raw}'"))
+            })?;
+            if !v.is_finite() || v <= 0.0 {
+                return Err(Error::Config(format!(
+                    "objective '{s}': parameter must be finite and positive"
+                )));
+            }
+            Ok(v)
+        }
+        match s {
+            "energy" => Ok(Objective::Energy),
+            "edp" => Ok(Objective::Edp),
+            "ed2p" => Ok(Objective::Ed2p),
+            _ => {
+                if let Some(raw) = s.strip_prefix("budget:") {
+                    Ok(Objective::TimeUnderEnergyBudget(param(s, raw)?))
+                } else if let Some(raw) = s.strip_prefix("cap:") {
+                    Ok(Objective::EnergyUnderPowerCap(param(s, raw)?))
+                } else if let Some(raw) = s.strip_prefix("deadline:") {
+                    Ok(Objective::EnergyUnderDeadline(param(s, raw)?))
+                } else {
+                    Err(Error::Config(format!(
+                        "unknown objective '{s}' (use energy | edp | ed2p | budget:J | cap:W | deadline:S)"
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Wire form: the canonical string as a JSON string value — one byte
+    /// representation per objective, like every other protocol field.
+    pub fn to_json(&self) -> Json {
+        Json::Str(self.canonical())
+    }
+
+    /// Parse the wire form produced by [`Objective::to_json`].
+    pub fn from_json(j: &Json) -> Result<Objective> {
+        Objective::parse(j.as_str()?)
+    }
+}
+
+/// Total order for an objective's argmin: metric first (`total_cmp`, a
+/// total order), then frequency, then cores — the same deterministic
+/// tie-break the energy path has always used (for [`Objective::Energy`]
+/// this IS the original order, bit for bit).
+pub fn objective_order(obj: Objective, a: &EnergyPoint, b: &EnergyPoint) -> Ordering {
+    obj.metric(a)
+        .total_cmp(&obj.metric(b))
+        .then_with(|| a.f_mhz.cmp(&b.f_mhz))
+        .then_with(|| a.cores.cmp(&b.cores))
+}
+
+/// Whether `a` Pareto-dominates `b` on `(energy, exec-time, peak-power)`:
+/// no worse on every coordinate and strictly better on at least one.
+/// Points with bit-identical coordinate tuples do not dominate each
+/// other (so exact ties all survive onto the frontier).
+pub fn dominates(a: &EnergyPoint, b: &EnergyPoint) -> bool {
+    a.energy_j <= b.energy_j
+        && a.pred_time_s <= b.pred_time_s
+        && a.power_w <= b.power_w
+        && (a.energy_j < b.energy_j || a.pred_time_s < b.pred_time_s || a.power_w < b.power_w)
+}
+
+/// Ordering of frontier points in the extracted output: lexicographic on
+/// `(energy, time, power)` via `total_cmp`, then `(freq, cores)` — a pure
+/// function of the point set, independent of input order.
+fn frontier_order(a: &EnergyPoint, b: &EnergyPoint) -> Ordering {
+    a.energy_j
+        .total_cmp(&b.energy_j)
+        .then_with(|| a.pred_time_s.total_cmp(&b.pred_time_s))
+        .then_with(|| a.power_w.total_cmp(&b.power_w))
+        .then_with(|| a.f_mhz.cmp(&b.f_mhz))
+        .then_with(|| a.cores.cmp(&b.cores))
+}
+
+/// Extract the **exact** Pareto frontier (all non-dominated points) of a
+/// set of evaluated grid points on `(energy, exec-time, peak-power)`.
+///
+/// Points with any non-finite coordinate are filtered first (the same
+/// discipline as the argmin). The output is sorted by
+/// `(energy, time, power, freq, cores)` — deterministic regardless of
+/// input order.
+///
+/// # Algorithm
+///
+/// Candidates are scanned in that sorted order, keeping each one no
+/// already-kept point dominates. This is sufficient because a dominator
+/// always sorts before what it dominates (it is ≤ on every coordinate
+/// and < on at least one, hence lexicographically smaller) and
+/// domination is transitive: if *anything* dominates a candidate, some
+/// kept point does. `O(n·k)` for `k` frontier points — trivial for the
+/// paper's 352-point grid.
+pub fn pareto_frontier(points: &[EnergyPoint]) -> Vec<EnergyPoint> {
+    let mut sorted: Vec<&EnergyPoint> = points
+        .iter()
+        .filter(|p| p.energy_j.is_finite() && p.pred_time_s.is_finite() && p.power_w.is_finite())
+        .collect();
+    sorted.sort_by(|a, b| frontier_order(a, b));
+    let mut kept: Vec<EnergyPoint> = Vec::new();
+    'candidates: for c in sorted {
+        for k in &kept {
+            if dominates(k, c) {
+                continue 'candidates;
+            }
+        }
+        kept.push(*c);
+    }
+    kept
+}
+
+/// The Pareto frontier of one `(model, input, constraint-set)` — the
+/// output of [`EnergyModel::frontier`](crate::energy::EnergyModel::frontier).
+#[derive(Debug, Clone)]
+pub struct Frontier {
+    /// Non-dominated points, sorted by `(energy, time, power, freq,
+    /// cores)` (ascending energy ⇒ descending time along the frontier).
+    pub points: Vec<EnergyPoint>,
+}
+
+impl Frontier {
+    /// Number of frontier points.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// Whether the frontier is empty (no feasible finite point).
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// The objective's argmin **restricted to the frontier**: minimum
+    /// metric over admitted frontier points under the deterministic
+    /// `(metric, freq, cores)` order. `None` when no frontier point
+    /// passes the objective's cut.
+    ///
+    /// For every [`Objective`] this equals the global grid argmin's
+    /// metric (see the module docs) — the invariant
+    /// `tests/frontier.rs` pins.
+    pub fn argmin(&self, objective: Objective) -> Option<EnergyPoint> {
+        self.points
+            .iter()
+            .filter(|p| objective.admits(p) && objective.metric(p).is_finite())
+            .min_by(|a, b| objective_order(objective, a, b))
+            .copied()
+    }
+
+    /// Whether a `(frequency, cores)` configuration appears on the
+    /// frontier.
+    pub fn contains(&self, f_mhz: Mhz, cores: usize) -> bool {
+        self.points
+            .iter()
+            .any(|p| p.f_mhz == f_mhz && p.cores == cores)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(f: Mhz, p: usize, t: f64, w: f64) -> EnergyPoint {
+        EnergyPoint {
+            f_mhz: f,
+            cores: p,
+            pred_time_s: t,
+            power_w: w,
+            energy_j: w * t,
+        }
+    }
+
+    #[test]
+    fn objective_canonical_roundtrips() {
+        let objs = [
+            Objective::Energy,
+            Objective::Edp,
+            Objective::Ed2p,
+            Objective::TimeUnderEnergyBudget(1500.0),
+            Objective::EnergyUnderPowerCap(250.5),
+            Objective::EnergyUnderDeadline(0.125),
+        ];
+        for o in objs {
+            let s = o.canonical();
+            assert_eq!(Objective::parse(&s).unwrap(), o, "roundtrip of '{s}'");
+            assert_eq!(Objective::from_json(&o.to_json()).unwrap(), o);
+        }
+        assert!(Objective::parse("frobnicate").is_err());
+        assert!(Objective::parse("cap:").is_err());
+        assert!(Objective::parse("cap:-3").is_err());
+        assert!(Objective::parse("budget:NaN").is_err());
+        assert_eq!(Objective::default(), Objective::Energy);
+    }
+
+    #[test]
+    fn metrics_and_cuts() {
+        let p = pt(1800, 8, 10.0, 200.0); // E = 2000 J
+        assert_eq!(Objective::Energy.metric(&p), 2000.0);
+        assert_eq!(Objective::Edp.metric(&p), 20_000.0);
+        assert_eq!(Objective::Ed2p.metric(&p), 200_000.0);
+        assert_eq!(Objective::TimeUnderEnergyBudget(2500.0).metric(&p), 10.0);
+        assert!(Objective::TimeUnderEnergyBudget(2500.0).admits(&p));
+        assert!(!Objective::TimeUnderEnergyBudget(1999.0).admits(&p));
+        assert!(Objective::EnergyUnderPowerCap(200.0).admits(&p));
+        assert!(!Objective::EnergyUnderPowerCap(199.0).admits(&p));
+        assert!(Objective::EnergyUnderDeadline(10.0).admits(&p));
+        assert!(!Objective::EnergyUnderDeadline(9.0).admits(&p));
+        // NaN coordinates never pass a cut.
+        let nan = pt(1800, 8, f64::NAN, 200.0);
+        assert!(!Objective::EnergyUnderDeadline(10.0).admits(&nan));
+    }
+
+    #[test]
+    fn frontier_drops_dominated_and_keeps_ties() {
+        let a = pt(1200, 1, 10.0, 100.0); // E=1000
+        let b = pt(1400, 1, 8.0, 100.0); // E=800, dominates a
+        let c = pt(2200, 4, 2.0, 500.0); // E=1000, fast+hot: non-dominated
+        let tie = pt(1600, 2, 8.0, 100.0); // identical coords to b: survives
+        let front = pareto_frontier(&[a, b, c, tie]);
+        assert_eq!(front.len(), 3);
+        assert!(!front.iter().any(|p| (p.f_mhz, p.cores) == (1200, 1)));
+        for (f, p) in [(1400, 1), (1600, 2), (2200, 4)] {
+            assert!(front.iter().any(|q| (q.f_mhz, q.cores) == (f, p)), "({f},{p})");
+        }
+    }
+
+    #[test]
+    fn frontier_is_input_order_independent() {
+        let pts = [
+            pt(1200, 1, 10.0, 100.0),
+            pt(1400, 2, 8.0, 120.0),
+            pt(1600, 4, 5.0, 180.0),
+            pt(1800, 8, 4.0, 260.0),
+            pt(2200, 16, 3.0, 400.0),
+        ];
+        let a = pareto_frontier(&pts);
+        let mut rev = pts;
+        rev.reverse();
+        let b = pareto_frontier(&rev);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.f_mhz, x.cores), (y.f_mhz, y.cores));
+            assert_eq!(x.energy_j, y.energy_j);
+        }
+    }
+
+    #[test]
+    fn non_finite_points_never_reach_the_frontier() {
+        let good = pt(1200, 1, 10.0, 100.0);
+        let nan = pt(1400, 2, f64::NAN, 50.0);
+        let inf = pt(1600, 4, 1.0, f64::INFINITY);
+        let front = pareto_frontier(&[good, nan, inf]);
+        assert_eq!(front.len(), 1);
+        assert_eq!((front[0].f_mhz, front[0].cores), (1200, 1));
+    }
+
+    #[test]
+    fn frontier_argmin_matches_global_argmin_metric() {
+        let pts = [
+            pt(1200, 1, 10.0, 100.0), // E=1000, EDP=10000
+            pt(1700, 4, 4.0, 220.0),  // E=880,  EDP=3520
+            pt(2200, 16, 2.0, 520.0), // E=1040, EDP=2080
+        ];
+        let front = Frontier {
+            points: pareto_frontier(&pts),
+        };
+        for obj in [Objective::Energy, Objective::Edp, Objective::Ed2p] {
+            let on_frontier = front.argmin(obj).unwrap();
+            let global = pts
+                .iter()
+                .min_by(|a, b| objective_order(obj, a, b))
+                .unwrap();
+            assert_eq!(obj.metric(&on_frontier), obj.metric(global), "{obj:?}");
+        }
+        // The power cap excludes the hot fast point.
+        let capped = front.argmin(Objective::EnergyUnderPowerCap(300.0)).unwrap();
+        assert_eq!((capped.f_mhz, capped.cores), (1700, 4));
+        // An unsatisfiable cut yields no argmin.
+        assert!(front.argmin(Objective::EnergyUnderPowerCap(1.0)).is_none());
+    }
+}

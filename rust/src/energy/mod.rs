@@ -9,6 +9,17 @@
 //!   execution of the AOT `svr_energy` artifact (Pallas RBF kernel + Eq. 7
 //!   + Eq. 8 fused in one HLO module), then an argmin over the returned
 //!   energy surface.
+//!
+//! Since ISSUE 5 the argmin is **multi-objective**: [`Constraints`]
+//! carries an [`Objective`] (default [`Objective::Energy`], the paper's
+//! metric — bit-identical to the pre-frontier behaviour), and
+//! [`EnergyModel::frontier`] extracts the exact Pareto frontier of
+//! `(energy, exec-time, peak-power)` from one batched surface pass — see
+//! the [`frontier`] module.
+
+pub mod frontier;
+
+pub use frontier::{pareto_frontier, Frontier, Objective};
 
 use crate::arch::ArchProfile;
 use crate::config::{mhz_to_ghz, CampaignSpec, Mhz, NodeSpec};
@@ -17,8 +28,11 @@ use crate::runtime::{PjrtRuntime, TensorF32};
 use crate::svr::SvrModel;
 use crate::{Error, Result};
 
-/// Artifact-side constants — must match `python/compile/model.py`.
+/// Maximum support vectors the AOT artifact accepts (padded) — must
+/// match `python/compile/model.py`.
 pub const MAX_SV: usize = 2048;
+/// Grid size the AOT artifact was compiled for (the paper's 11 × 32
+/// grid) — must match `python/compile/model.py`.
 pub const GRID_POINTS: usize = 352;
 
 /// Query-block width of the batched energy-grid evaluator: a block of
@@ -29,42 +43,61 @@ pub const ENERGY_QUERY_BLOCK: usize = 64;
 /// One point of the energy surface.
 #[derive(Debug, Clone, Copy)]
 pub struct EnergyPoint {
+    /// Grid frequency, MHz.
     pub f_mhz: Mhz,
+    /// Active core count.
     pub cores: usize,
+    /// SVR-predicted execution time, seconds.
     pub pred_time_s: f64,
+    /// Eq. 7 predicted power draw, watts.
     pub power_w: f64,
+    /// Eq. 8 predicted energy `P × T`, joules.
     pub energy_j: f64,
 }
 
 /// The optimizer's answer for one (application, input) pair.
 #[derive(Debug, Clone, Copy)]
 pub struct OptimalConfig {
+    /// Chosen frequency, MHz.
     pub f_mhz: Mhz,
+    /// Chosen active core count.
     pub cores: usize,
+    /// Predicted execution time at the chosen configuration, seconds.
     pub pred_time_s: f64,
+    /// Predicted energy at the chosen configuration, joules.
     pub pred_energy_j: f64,
 }
 
 /// Optional constraints (paper §2.3 mentions time/frequency/core bounds
-/// as possible but unused extensions — supported here).
+/// as possible but unused extensions — supported here) plus the
+/// optimization [`Objective`] (default: plain energy, the paper's
+/// metric).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Constraints {
     /// Maximum acceptable predicted execution time, seconds.
     pub max_time_s: Option<f64>,
-    /// Inclusive frequency bounds, MHz.
+    /// Inclusive lower frequency bound, MHz.
     pub min_f_mhz: Option<Mhz>,
+    /// Inclusive upper frequency bound, MHz.
     pub max_f_mhz: Option<Mhz>,
-    /// Inclusive core-count bounds.
+    /// Inclusive lower core-count bound.
     pub min_cores: Option<usize>,
+    /// Inclusive upper core-count bound.
     pub max_cores: Option<usize>,
+    /// What the argmin minimizes (and which points it may consider) —
+    /// [`Objective::Energy`] reproduces the pre-frontier behaviour bit
+    /// for bit.
+    pub objective: Objective,
 }
 
 impl Constraints {
     /// Canonical text form — a stable identity for a constraint set, used
     /// by the service registry to memoize `optimize` consults per
-    /// `(model key, input, constraint-set)`. Field order is fixed and
-    /// floats print in shortest-round-trip form, so two equal constraint
-    /// sets always canonicalize to the same string.
+    /// `(model key, input, constraint-set)`. Field order is fixed (the
+    /// objective is appended after the original five bounds, preserving
+    /// the pre-frontier prefix) and floats print in
+    /// shortest-round-trip form, so two equal constraint sets always
+    /// canonicalize to the same string.
     pub fn canonical(&self) -> String {
         fn opt_u<T: std::fmt::Display>(v: &Option<T>) -> String {
             match v {
@@ -73,12 +106,13 @@ impl Constraints {
             }
         }
         format!(
-            "t:{}|fmin:{}|fmax:{}|cmin:{}|cmax:{}",
+            "t:{}|fmin:{}|fmax:{}|cmin:{}|cmax:{}|obj:{}",
             opt_u(&self.max_time_s),
             opt_u(&self.min_f_mhz),
             opt_u(&self.max_f_mhz),
             opt_u(&self.min_cores),
             opt_u(&self.max_cores),
+            self.objective.canonical(),
         )
     }
 
@@ -88,6 +122,7 @@ impl Constraints {
             && self.max_f_mhz.map_or(true, |f| p.f_mhz <= f)
             && self.min_cores.map_or(true, |c| p.cores >= c)
             && self.max_cores.map_or(true, |c| p.cores <= c)
+            && self.objective.admits(p)
     }
 }
 
@@ -95,19 +130,12 @@ impl Constraints {
 /// the architecture profile whose grid it scores.
 #[derive(Debug, Clone)]
 pub struct EnergyModel {
+    /// Fitted Eq. 7 power model.
     pub power: PowerModel,
+    /// Trained ε-SVR performance model.
     pub svr: SvrModel,
+    /// Architecture whose grid this model scores.
     pub arch: ArchProfile,
-}
-
-/// Total order for the energy argmin: energy first (`total_cmp`, so the
-/// comparison itself is a total order), then frequency, then cores — a
-/// deterministic tie-break shared by both decision paths.
-fn argmin_order(a: &EnergyPoint, b: &EnergyPoint) -> std::cmp::Ordering {
-    a.energy_j
-        .total_cmp(&b.energy_j)
-        .then_with(|| a.f_mhz.cmp(&b.f_mhz))
-        .then_with(|| a.cores.cmp(&b.cores))
 }
 
 /// The deterministic configuration grid (frequency-major, matching the
@@ -208,29 +236,134 @@ impl EnergyModel {
         assemble_point(&self.power, &self.arch, f, p, t)
     }
 
-    /// Grid-argmin of the energy surface subject to constraints.
+    /// Grid-argmin of the surface subject to constraints, minimizing the
+    /// constraint set's [`Objective`] (default: energy — the paper's
+    /// argmin, bit for bit).
     ///
-    /// Non-finite predictions are excluded before the argmin (a NaN can
-    /// never win the grid), and exact energy ties break deterministically
+    /// Non-finite metrics are excluded before the argmin (a NaN can
+    /// never win the grid), and exact metric ties break deterministically
     /// toward the lowest `(freq, cores)` pair, so the answer is a pure
     /// function of the surface regardless of grid perturbations.
+    ///
+    /// ```
+    /// # fn main() -> ecopt::Result<()> {
+    /// use ecopt::config::CampaignSpec;
+    /// use ecopt::energy::{config_grid_arch, Constraints, EnergyModel, Objective};
+    /// use ecopt::powermodel::PowerModel;
+    /// use ecopt::svr::{Standardizer, SvrModel, DIMS};
+    ///
+    /// // A hand-built two-support-vector model (training-free example).
+    /// let svr = SvrModel {
+    ///     train_x: vec![2.2, 32.0, 1.0, 1.2, 1.0, 1.0],
+    ///     beta: vec![-40.0, 40.0],
+    ///     b: 60.0,
+    ///     gamma: 0.05,
+    ///     scaler: Standardizer::identity(DIMS),
+    ///     iterations: 10,
+    ///     n_support: 2,
+    /// };
+    /// let arch = ecopt::arch::profile_by_name("xeon-dual-e5-2698v3")?;
+    /// let model = EnergyModel::for_arch(PowerModel::paper_eq9(), svr, arch.clone());
+    /// let campaign = CampaignSpec::default().adapted_to(&arch);
+    /// let grid = config_grid_arch(&campaign, &arch);
+    ///
+    /// // The paper's argmin: minimize energy over the whole grid.
+    /// let best = model.optimize(&grid, 3, &Constraints::default())?;
+    /// assert!(best.pred_energy_j > 0.0 && grid.contains(&(best.f_mhz, best.cores)));
+    ///
+    /// // The EDP argmin never runs slower than the energy argmin.
+    /// let edp = model.optimize(
+    ///     &grid,
+    ///     3,
+    ///     &Constraints { objective: Objective::Edp, ..Default::default() },
+    /// )?;
+    /// assert!(edp.pred_time_s <= best.pred_time_s);
+    /// # Ok(()) }
+    /// ```
     pub fn optimize(
         &self,
         grid: &[(Mhz, usize)],
         n: u32,
         constraints: &Constraints,
     ) -> Result<OptimalConfig> {
-        let surf = self.surface(grid, n);
+        Self::optimize_surface(&self.surface(grid, n), constraints)
+    }
+
+    /// [`EnergyModel::optimize`] over an already-evaluated surface: the
+    /// argmin itself, identical filtering and tie-break, no model
+    /// needed. Callers answering several objective questions about one
+    /// `(model, input)` pair evaluate the surface once and argmin it
+    /// per constraint set — the report layer's per-objective tables do.
+    pub fn optimize_surface(
+        surf: &[EnergyPoint],
+        constraints: &Constraints,
+    ) -> Result<OptimalConfig> {
+        let obj = constraints.objective;
         let best = surf
             .iter()
-            .filter(|p| p.energy_j.is_finite() && constraints.allows(p))
-            .min_by(|a, b| argmin_order(a, b))
+            .filter(|p| obj.metric(p).is_finite() && constraints.allows(p))
+            .min_by(|a, b| frontier::objective_order(obj, a, b))
             .ok_or_else(|| Error::Data("no grid point satisfies the constraints".into()))?;
         Ok(OptimalConfig {
             f_mhz: best.f_mhz,
             cores: best.cores,
             pred_time_s: best.pred_time_s,
             pred_energy_j: best.energy_j,
+        })
+    }
+
+    /// The exact Pareto frontier of `(energy, exec-time, peak-power)`
+    /// over the constrained grid for input size `n` — extracted from ONE
+    /// cache-blocked [`EnergyModel::surface`] pass, with the same
+    /// non-finite filtering as [`EnergyModel::optimize`].
+    ///
+    /// Every objective's grid argmin lies on this frontier (see the
+    /// [`frontier`] module docs), so one frontier answers every
+    /// objective question about the `(model, input, constraints)`
+    /// triple.
+    ///
+    /// ```
+    /// # fn main() -> ecopt::Result<()> {
+    /// use ecopt::config::CampaignSpec;
+    /// use ecopt::energy::{config_grid_arch, Constraints, EnergyModel, Objective};
+    /// use ecopt::powermodel::PowerModel;
+    /// use ecopt::svr::{Standardizer, SvrModel, DIMS};
+    ///
+    /// let svr = SvrModel {
+    ///     train_x: vec![2.2, 32.0, 1.0, 1.2, 1.0, 1.0],
+    ///     beta: vec![-40.0, 40.0],
+    ///     b: 60.0,
+    ///     gamma: 0.05,
+    ///     scaler: Standardizer::identity(DIMS),
+    ///     iterations: 10,
+    ///     n_support: 2,
+    /// };
+    /// let arch = ecopt::arch::profile_by_name("xeon-dual-e5-2698v3")?;
+    /// let model = EnergyModel::for_arch(PowerModel::paper_eq9(), svr, arch.clone());
+    /// let campaign = CampaignSpec::default().adapted_to(&arch);
+    /// let grid = config_grid_arch(&campaign, &arch);
+    ///
+    /// let front = model.frontier(&grid, 3, &Constraints::default())?;
+    /// assert!(!front.is_empty() && front.len() <= grid.len());
+    /// // The frontier's energy argmin achieves the global energy minimum.
+    /// let best = model.optimize(&grid, 3, &Constraints::default())?;
+    /// let on_frontier = front.argmin(Objective::Energy).unwrap();
+    /// assert_eq!(on_frontier.energy_j, best.pred_energy_j);
+    /// # Ok(()) }
+    /// ```
+    pub fn frontier(
+        &self,
+        grid: &[(Mhz, usize)],
+        n: u32,
+        constraints: &Constraints,
+    ) -> Result<Frontier> {
+        let feasible: Vec<EnergyPoint> = self
+            .surface(grid, n)
+            .into_iter()
+            .filter(|p| constraints.allows(p))
+            .collect();
+        Ok(Frontier {
+            points: pareto_frontier(&feasible),
         })
     }
 
@@ -278,7 +411,9 @@ impl EnergyModel {
     }
 
     /// The deployed decision path: execute the AOT `svr_energy` artifact
-    /// via PJRT and argmin the (socket-corrected) energy surface.
+    /// via PJRT and argmin the (socket-corrected) energy surface under
+    /// the constraint set's [`Objective`] — the same metric, filtering
+    /// and tie-break as [`EnergyModel::optimize`].
     pub fn optimize_via_runtime(
         &self,
         rt: &mut PjrtRuntime,
@@ -286,6 +421,7 @@ impl EnergyModel {
         n: u32,
         constraints: &Constraints,
     ) -> Result<OptimalConfig> {
+        let obj = constraints.objective;
         let inputs = self.artifact_inputs(grid, n)?;
         let outs = rt.execute("svr_energy", &inputs)?;
         let times = &outs[0].data;
@@ -305,10 +441,10 @@ impl EnergyModel {
                 power_w: w,
                 energy_j: w * t,
             };
-            if !pt.energy_j.is_finite() || !constraints.allows(&pt) {
+            if !obj.metric(&pt).is_finite() || !constraints.allows(&pt) {
                 continue;
             }
-            if best.map_or(true, |b| argmin_order(&pt, &b).is_lt()) {
+            if best.map_or(true, |b| frontier::objective_order(obj, &pt, &b).is_lt()) {
                 best = Some(pt);
             }
         }

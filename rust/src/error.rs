@@ -13,7 +13,12 @@ pub enum Error {
     BadFrequency(u32),
 
     /// A requested core count exceeds the node's capacity or is zero.
-    BadCoreCount { requested: usize, available: usize },
+    BadCoreCount {
+        /// The core count that was asked for.
+        requested: usize,
+        /// The node's total schedulable CPUs.
+        available: usize,
+    },
 
     /// An unknown workload name was requested.
     UnknownWorkload(String),

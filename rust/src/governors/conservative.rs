@@ -7,6 +7,7 @@ use crate::governors::Governor;
 use crate::node::Node;
 use crate::Result;
 
+/// Conservative-governor tunables (kernel-default values).
 #[derive(Debug, Clone)]
 pub struct ConservativeTunables {
     /// Step up when load exceeds this percentage (kernel default: 80).
@@ -27,6 +28,7 @@ impl Default for ConservativeTunables {
     }
 }
 
+/// The one-ladder-step-at-a-time governor.
 #[derive(Debug)]
 pub struct Conservative {
     tun: ConservativeTunables,
@@ -34,10 +36,12 @@ pub struct Conservative {
 }
 
 impl Conservative {
+    /// Governor over a node's DVFS ladder with default tunables.
     pub fn new(ladder: &[Mhz]) -> Self {
         Self::with_tunables(ladder, ConservativeTunables::default())
     }
 
+    /// Governor with explicit tunables.
     pub fn with_tunables(ladder: &[Mhz], tun: ConservativeTunables) -> Self {
         assert!(tun.up_threshold > tun.down_threshold);
         Conservative {

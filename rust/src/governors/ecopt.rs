@@ -30,7 +30,7 @@
 //! harness (`coordinator::replay`) surfaces the fallback counter.
 
 use crate::config::Mhz;
-use crate::energy::{Constraints, EnergyModel};
+use crate::energy::{Constraints, EnergyModel, Objective};
 use crate::governors::{Governor, Ondemand};
 use crate::node::Node;
 use crate::Result;
@@ -78,6 +78,10 @@ pub struct EcoptGovernor {
     grid: Vec<(Mhz, usize)>,
     input: u32,
     tun: EcoptTunables,
+    /// What every model consult minimizes (ISSUE 5): `Energy` is the
+    /// paper-faithful governor, `Edp`/`Ed2p` trade energy for runtime —
+    /// the replay harness pits them against each other.
+    objective: Objective,
     /// Lowest frequency on the decision grid (the Stalled/Idle pin).
     grid_fmin: Mhz,
     /// Built on first contact with the node (needs its ladder).
@@ -102,11 +106,27 @@ pub struct EcoptGovernor {
 
 impl EcoptGovernor {
     /// Governor over a trained model and its decision grid, for the
-    /// phase trace's input size.
+    /// phase trace's input size, minimizing energy (the paper's metric).
     pub fn new(model: EnergyModel, grid: Vec<(Mhz, usize)>, input: u32) -> Self {
         Self::with_tunables(model, grid, input, EcoptTunables::default())
     }
 
+    /// [`EcoptGovernor::new`] with a non-default consult [`Objective`]:
+    /// an EDP-driven governor trades energy for runtime at every Busy
+    /// consult while keeping the same regime machinery (classification,
+    /// hysteresis, hotplug, stale-model fallback).
+    pub fn with_objective(
+        model: EnergyModel,
+        grid: Vec<(Mhz, usize)>,
+        input: u32,
+        objective: Objective,
+    ) -> Self {
+        let mut g = Self::new(model, grid, input);
+        g.objective = objective;
+        g
+    }
+
+    /// [`EcoptGovernor::new`] with explicit tunables.
     pub fn with_tunables(
         model: EnergyModel,
         grid: Vec<(Mhz, usize)>,
@@ -121,6 +141,7 @@ impl EcoptGovernor {
             grid,
             input,
             tun,
+            objective: Objective::default(),
             grid_fmin,
             fallback: None,
             stale: None,
@@ -201,9 +222,14 @@ impl EcoptGovernor {
                 if let Some(c) = self.busy_cfg {
                     return Ok(c);
                 }
-                let opt = self
-                    .model
-                    .optimize(&self.grid, self.input, &Constraints::default())?;
+                let opt = self.model.optimize(
+                    &self.grid,
+                    self.input,
+                    &Constraints {
+                        objective: self.objective,
+                        ..Default::default()
+                    },
+                )?;
                 let c = (opt.f_mhz, opt.cores);
                 self.busy_cfg = Some(c);
                 Ok(c)
@@ -223,6 +249,7 @@ impl EcoptGovernor {
                     &Constraints {
                         max_f_mhz: Some(self.grid_fmin),
                         max_cores: Some(busy_p),
+                        objective: self.objective,
                         ..Default::default()
                     },
                 )?;
@@ -247,7 +274,12 @@ impl EcoptGovernor {
 
 impl Governor for EcoptGovernor {
     fn name(&self) -> &'static str {
-        "ecopt"
+        match self.objective {
+            Objective::Energy => "ecopt",
+            Objective::Edp => "ecopt-edp",
+            Objective::Ed2p => "ecopt-ed2p",
+            _ => "ecopt-constrained",
+        }
     }
 
     fn sampling_period_s(&self) -> f64 {
@@ -475,6 +507,33 @@ mod tests {
         g.sample(&mut n).unwrap();
         assert!(g.is_stale());
         assert!(g.stale_reason().unwrap().contains("support"));
+    }
+
+    #[test]
+    fn edp_objective_actuates_the_edp_argmin() {
+        let m = toy_model();
+        let g_grid = grid();
+        let energy_opt = m.optimize(&g_grid, 1, &Constraints::default()).unwrap();
+        let edp_opt = m
+            .optimize(
+                &g_grid,
+                1,
+                &Constraints {
+                    objective: Objective::Edp,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        let mut g = EcoptGovernor::with_objective(toy_model(), grid(), 1, Objective::Edp);
+        assert_eq!(g.name(), "ecopt-edp");
+        let mut n = node();
+        set_all_utils(&mut n, 1.0);
+        g.sample(&mut n).unwrap();
+        assert!(!g.is_stale());
+        assert_eq!(g.current_config(), Some((edp_opt.f_mhz, edp_opt.cores)));
+        // The EDP scalarization can only move toward faster configs.
+        assert!(edp_opt.pred_time_s <= energy_opt.pred_time_s);
+        assert!(edp_opt.pred_energy_j >= energy_opt.pred_energy_j);
     }
 
     #[test]

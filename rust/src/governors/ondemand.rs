@@ -50,10 +50,12 @@ pub struct Ondemand {
 }
 
 impl Ondemand {
+    /// Governor over a node's DVFS ladder with kernel-default tunables.
     pub fn new(ladder: &[Mhz]) -> Self {
         Self::with_tunables(ladder, OndemandTunables::default())
     }
 
+    /// Governor with explicit tunables.
     pub fn with_tunables(ladder: &[Mhz], tun: OndemandTunables) -> Self {
         assert!(tun.up_threshold > tun.down_differential);
         Ondemand {

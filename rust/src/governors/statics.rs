@@ -14,6 +14,7 @@ pub struct Performance {
 }
 
 impl Performance {
+    /// Governor pinning a node's ladder maximum.
     pub fn new(ladder: &[Mhz]) -> Self {
         Performance {
             fmax: *ladder.last().expect("non-empty ladder"),
@@ -40,6 +41,7 @@ pub struct Powersave {
 }
 
 impl Powersave {
+    /// Governor pinning a node's ladder minimum.
     pub fn new(ladder: &[Mhz]) -> Self {
         Powersave {
             fmin: *ladder.first().expect("non-empty ladder"),
@@ -68,10 +70,12 @@ pub struct Userspace {
 }
 
 impl Userspace {
+    /// Governor pinning the given frequency.
     pub fn new(f: Mhz) -> Self {
         Userspace { f }
     }
 
+    /// Change the pinned frequency (sysfs `scaling_setspeed` analogue).
     pub fn set_speed(&mut self, f: Mhz) {
         self.f = f;
     }
@@ -101,6 +105,7 @@ pub struct Pinned {
 }
 
 impl Pinned {
+    /// Governor pinning the given `(frequency, core-count)` pair.
     pub fn new(f: Mhz, cores: usize) -> Self {
         Pinned { f, cores }
     }

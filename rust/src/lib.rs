@@ -37,6 +37,14 @@
 //! with a deterministic load generator (`ecopt loadgen`) pinning its
 //! throughput and tail latency.
 //!
+//! Since ISSUE 5 the optimizer is **multi-objective**: `energy::frontier`
+//! computes the exact Pareto frontier of `(energy, exec-time,
+//! peak-power)` from one batched surface pass, and every decision path —
+//! grid argmin, governor consults, `ecoptd` `optimize` requests — takes a
+//! pluggable [`energy::Objective`] (energy, EDP, ED²P, or a
+//! budget/cap/deadline-constrained form), defaulting to the paper's plain
+//! energy metric bit for bit.
+//!
 //! See `DESIGN.md` for the system inventory, the determinism contract,
 //! and the kernel-cache design.
 
@@ -46,6 +54,9 @@
 #![allow(clippy::needless_range_loop)]
 #![allow(clippy::type_complexity)]
 #![allow(clippy::too_many_arguments)]
+// Docs are part of the public contract: every public item is documented,
+// and CI fails the `docs` job (rustdoc -D warnings) on regressions.
+#![warn(missing_docs)]
 
 pub mod arch;
 pub mod characterize;

@@ -9,6 +9,7 @@
 //! ecopt optimize --app NAME -n 3   # energy-optimal (f, p) via PJRT
 //! ecopt compare [--app NAME]       # ondemand vs proposed (Tables 2-5)
 //! ecopt report [--all|--only X]    # tables + figures [--cache FILE]
+//! ecopt frontier [--quick]         # Pareto frontier + per-objective optima
 //! ecopt serve                      # ecoptd energy-advisor daemon
 //! ecopt query <kind> [...]         # one request to a running daemon
 //! ecopt loadgen [--quick]          # deterministic load generator
@@ -26,11 +27,11 @@
 
 use std::path::PathBuf;
 
-use ecopt::arch::{profile_by_name, registry};
+use ecopt::arch::{profile_by_name, registry, ArchProfile};
 use ecopt::config::ExperimentConfig;
 use ecopt::coordinator::replay::{run_replay, ReplayOptions};
 use ecopt::coordinator::{run_fleet_cached, Coordinator, ExperimentResults};
-use ecopt::energy::{config_grid_arch, Constraints, EnergyModel};
+use ecopt::energy::{config_grid_arch, Constraints, EnergyModel, Objective};
 use ecopt::persist::ModelCache;
 use ecopt::report;
 use ecopt::runtime::PjrtRuntime;
@@ -58,6 +59,12 @@ COMMANDS:
   fleet [--profiles A,B] [--quick] [--out FILE] [--save FILE] [--cache-dir DIR]
                                 full pipeline across the architecture registry,
                                 cross-architecture savings report
+  frontier [--profiles A,B] [--objective OBJ] [--quick] [--out FILE]
+           [--save FILE] [--cache-dir DIR]
+                                Pareto frontier of (energy, time, peak power)
+                                per registry profile + per-objective optima;
+                                OBJ = energy | edp | ed2p | budget:J | cap:W
+                                | deadline:S (default: energy, edp, ed2p)
   replay [--quick] [-n N] [--out FILE] [--save FILE] [--stats FILE]
          [--cache-dir DIR] [--no-cache] [--threads N]
                                 phase-shifting traces under every governor +
@@ -176,6 +183,24 @@ const COMMANDS: &[CmdSpec] = &[
         input_alias: false,
     },
     CmdSpec {
+        name: "frontier",
+        usage: "USAGE: ecopt frontier [--profiles A,B] [--objective OBJ] [--quick]\n\
+                       [--out FILE] [--save FILE] [--cache-dir DIR]\n\n\
+                Run the pipeline across architecture profiles (default: the\n\
+                whole registry) and render the exact Pareto frontier of\n\
+                (energy, exec-time, peak-power) per (profile, application),\n\
+                plus each objective's argmin and its energy-premium /\n\
+                runtime-saving trade against the plain energy optimum.\n\
+                OBJ grammar: energy | edp | ed2p | budget:J | cap:W |\n\
+                deadline:S (default set: energy, edp, ed2p). --quick is the\n\
+                CI sizing; --cache-dir serves trained models from the\n\
+                persistent cache; --save stores the fleet results JSON.",
+        value_flags: &["profiles", "objective", "out", "save", "cache-dir"],
+        bool_flags: &["quick"],
+        max_positionals: 0,
+        input_alias: false,
+    },
+    CmdSpec {
         name: "replay",
         usage: "USAGE: ecopt replay [--quick] [-n N] [--out FILE] [--save FILE]\n\
                        [--stats FILE] [--cache-dir DIR] [--no-cache] [--threads N]\n\n\
@@ -212,14 +237,16 @@ const COMMANDS: &[CmdSpec] = &[
                   predict  --app NAME --freq MHZ --cores P [-n N] [--arch A] [--tag T]\n\
                   optimize --app NAME [-n N] [--arch A] [--tag T]\n\
                            [--max-f MHZ] [--min-f MHZ] [--max-cores P]\n\
-                           [--min-cores P] [--max-time S]\n\
+                           [--min-cores P] [--max-time S] [--objective OBJ]\n\
+                           (OBJ = energy | edp | ed2p | budget:J | cap:W\n\
+                            | deadline:S)\n\
                   train    --app NAME [--arch A]      (async; returns a job id)\n\
                   status   --job ID\n\
                   registry | stats | shutdown\n\
                 Exits 0 on an ok response, 1 otherwise.",
         value_flags: &[
             "addr", "app", "arch", "tag", "freq", "cores", "input", "job", "max-f", "min-f",
-            "max-cores", "min-cores", "max-time",
+            "max-cores", "min-cores", "max-time", "objective",
         ],
         bool_flags: &[],
         max_positionals: 1,
@@ -406,6 +433,30 @@ impl Args {
     }
 }
 
+/// The profiles named by `--profiles` (CSV), or the whole registry.
+fn profiles_from(args: &Args) -> ecopt::Result<Vec<ArchProfile>> {
+    match args.get("profiles") {
+        Some(csv) if !csv.is_empty() => csv
+            .split(',')
+            .map(|n| profile_by_name(n.trim()))
+            .collect::<ecopt::Result<Vec<_>>>(),
+        _ => Ok(registry()),
+    }
+}
+
+/// The shared `--quick` sizing of fleet-shaped sweeps (`fleet`,
+/// `frontier` — the CI artifact mode): 3 frequencies per ladder,
+/// <= 8 cores, 2 inputs, <= 3 CV folds, coarse simulator ticks —
+/// minutes, not hours. One definition so the two commands can never
+/// drift apart.
+fn apply_quick_sizing(cfg: &mut ExperimentConfig, rc: &mut RunConfig) {
+    cfg.campaign.freq_points = 3;
+    cfg.campaign.core_max = cfg.campaign.core_max.min(8);
+    cfg.campaign.inputs = vec![1, 2];
+    cfg.svr.folds = cfg.svr.folds.min(3);
+    rc.dt = 0.25;
+}
+
 fn load_config(args: &Args) -> anyhow::Result<ExperimentConfig> {
     let mut cfg = match args.get("config") {
         Some(p) => ExperimentConfig::load(std::path::Path::new(p))?,
@@ -540,25 +591,13 @@ fn main() -> anyhow::Result<()> {
         }
         "fleet" => {
             let mut cfg = load_config(&args)?;
-            let profiles = match args.get("profiles") {
-                Some(csv) if !csv.is_empty() => csv
-                    .split(',')
-                    .map(|n| profile_by_name(n.trim()))
-                    .collect::<ecopt::Result<Vec<_>>>()?,
-                _ => registry(),
-            };
+            let profiles = profiles_from(&args)?;
             let mut rc = RunConfig {
                 seed: cfg.campaign.seed,
                 ..Default::default()
             };
             if args.has("quick") {
-                // CI-artifact mode: 3 frequencies per ladder, <= 8 cores,
-                // 2 inputs, coarse ticks — minutes, not hours.
-                cfg.campaign.freq_points = 3;
-                cfg.campaign.core_max = cfg.campaign.core_max.min(8);
-                cfg.campaign.inputs = vec![1, 2];
-                cfg.svr.folds = cfg.svr.folds.min(3);
-                rc.dt = 0.25;
+                apply_quick_sizing(&mut cfg, &mut rc);
             }
             eprintln!(
                 "fleet: {} profile(s): {}",
@@ -579,6 +618,48 @@ fn main() -> anyhow::Result<()> {
                 Some(path) if !path.is_empty() => {
                     std::fs::write(path, &rendered)?;
                     eprintln!("fleet report written to {path}");
+                }
+                _ => println!("{rendered}"),
+            }
+        }
+        "frontier" => {
+            let mut cfg = load_config(&args)?;
+            let profiles = profiles_from(&args)?;
+            let objectives = match args.get("objective") {
+                Some(s) if !s.is_empty() => vec![Objective::parse(s)
+                    .unwrap_or_else(|e| usage_exit(args.spec.usage, &e.to_string()))],
+                _ => vec![Objective::Energy, Objective::Edp, Objective::Ed2p],
+            };
+            let mut rc = RunConfig {
+                seed: cfg.campaign.seed,
+                ..Default::default()
+            };
+            if args.has("quick") {
+                apply_quick_sizing(&mut cfg, &mut rc);
+            }
+            eprintln!(
+                "frontier: {} profile(s), objectives: {}",
+                profiles.len(),
+                objectives
+                    .iter()
+                    .map(|o| o.canonical())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            );
+            let cache = match args.get("cache-dir") {
+                Some(dir) if !dir.is_empty() => Some(ModelCache::open(std::path::Path::new(dir))?),
+                _ => None,
+            };
+            let fleet = run_fleet_cached(&cfg, &rc, &profiles, cache.as_ref())?;
+            if let Some(path) = args.get("save") {
+                fleet.save(std::path::Path::new(path))?;
+                eprintln!("fleet results cached to {path}");
+            }
+            let rendered = report::frontier_report(&fleet, &cfg.campaign, &objectives);
+            match args.get("out") {
+                Some(path) if !path.is_empty() => {
+                    std::fs::write(path, &rendered)?;
+                    eprintln!("frontier report written to {path}");
                 }
                 _ => println!("{rendered}"),
             }
@@ -715,6 +796,11 @@ fn main() -> anyhow::Result<()> {
                         max_f_mhz: args.opt_num("max-f"),
                         min_cores: args.opt_num("min-cores"),
                         max_cores: args.opt_num("max-cores"),
+                        objective: match args.get("objective") {
+                            Some(s) => Objective::parse(s)
+                                .unwrap_or_else(|e| usage_exit(args.spec.usage, &e.to_string())),
+                            None => Objective::Energy,
+                        },
                     },
                 },
                 "train" => Request::Train {

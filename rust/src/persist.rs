@@ -481,6 +481,7 @@ impl ToJson for WorkloadReplay {
             ("input", Json::Num(self.input as f64)),
             ("baselines", Json::arr(&self.baselines)),
             ("ecopt", self.ecopt.to_json()),
+            ("ecopt_edp", self.ecopt_edp.to_json()),
             ("ecopt_decisions", Json::Num(self.ecopt_decisions as f64)),
             ("ecopt_switches", Json::Num(self.ecopt_switches as f64)),
             ("ecopt_fallback_samples", Json::Num(self.ecopt_fallback_samples as f64)),
@@ -496,6 +497,7 @@ impl FromJson for WorkloadReplay {
             input: j.get("input")?.as_u32()?,
             baselines: Vec::<GovernorReplay>::from_json(j.get("baselines")?)?,
             ecopt: GovernorReplay::from_json(j.get("ecopt")?)?,
+            ecopt_edp: GovernorReplay::from_json(j.get("ecopt_edp")?)?,
             ecopt_decisions: j.get("ecopt_decisions")?.as_u64()?,
             ecopt_switches: j.get("ecopt_switches")?.as_u64()?,
             ecopt_fallback_samples: j.get("ecopt_fallback_samples")?.as_u64()?,
@@ -538,12 +540,17 @@ const CACHE_SCHEMA: f64 = 1.0;
 /// alias the same entry.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ModelKey {
+    /// Application (workload) name.
     pub app: String,
+    /// Input-tag: input size label plus the config digest (see
+    /// [`model_input_tag`]).
     pub input: String,
+    /// Architecture-profile name the model was trained on.
     pub arch: String,
 }
 
 impl ModelKey {
+    /// Build a key from its three parts.
     pub fn new(app: &str, input: &str, arch: &str) -> ModelKey {
         ModelKey {
             app: app.to_string(),
@@ -590,6 +597,8 @@ pub struct CacheStats {
 }
 
 impl CacheStats {
+    /// Cache hits as a percentage of all bundle requests (0 when no
+    /// bundle was requested at all).
     pub fn hit_rate_pct(&self) -> f64 {
         let total = self.trained + self.cache_hits;
         if total == 0 {
@@ -628,12 +637,16 @@ pub fn config_digest(parts: &[&str]) -> String {
 /// One cached trained-model bundle.
 #[derive(Debug, Clone)]
 pub struct CachedModel {
+    /// Fitted Eq. 7 power model.
     pub power: PowerModel,
+    /// Trained ε-SVR performance model.
     pub svr: SvrModel,
-    /// Cross-validation + held-out metrics (pipeline entries carry them;
-    /// replay entries don't need them).
+    /// Cross-validation report (pipeline entries carry it; replay
+    /// entries don't need it).
     pub cv: Option<CvReport>,
+    /// Held-out test-set mean absolute error, seconds.
     pub test_mae: Option<f64>,
+    /// Held-out test-set percentage absolute error.
     pub test_pae_pct: Option<f64>,
 }
 
@@ -712,8 +725,11 @@ impl CachedModel {
 /// A directory entry of [`ModelCache::entries`].
 #[derive(Debug, Clone)]
 pub struct CacheEntry {
+    /// The entry's model key (embedded in the file, verified on read).
     pub key: ModelKey,
+    /// Path of the entry's JSON file.
     pub file: PathBuf,
+    /// On-disk size in bytes.
     pub bytes: u64,
 }
 
@@ -721,6 +737,44 @@ pub struct CacheEntry {
 ///
 /// Writes go through a temp file + rename so concurrent readers (fleet
 /// members on the worker pool) never observe a torn entry.
+///
+/// ```
+/// # fn main() -> ecopt::Result<()> {
+/// use ecopt::persist::{CachedModel, ModelCache, ModelKey};
+/// use ecopt::powermodel::PowerModel;
+/// use ecopt::svr::{Standardizer, SvrModel, DIMS};
+/// use ecopt::util::tempdir::TempDir;
+///
+/// let dir = TempDir::new()?;
+/// let cache = ModelCache::open(dir.path())?;
+/// let key = ModelKey::new("swaptions", "n1#doc", "custom-node");
+/// assert!(cache.get(&key)?.is_none(), "empty cache misses");
+///
+/// let bundle = CachedModel {
+///     power: PowerModel::paper_eq9(),
+///     svr: SvrModel {
+///         train_x: vec![2.2, 32.0, 1.0, 1.2, 1.0, 1.0],
+///         beta: vec![-40.0, 40.0],
+///         b: 60.0,
+///         gamma: 0.05,
+///         scaler: Standardizer::identity(DIMS),
+///         iterations: 10,
+///         n_support: 2,
+///     },
+///     cv: None,
+///     test_mae: None,
+///     test_pae_pct: None,
+/// };
+/// let bytes = cache.put(&key, &bundle)?;
+/// assert!(bytes > 0);
+///
+/// // Exact-float JSON: the bundle reads back bit for bit.
+/// let back = cache.get(&key)?.expect("hit after put");
+/// assert_eq!(back.svr.b, bundle.svr.b);
+/// assert_eq!(back.svr.train_x, bundle.svr.train_x);
+/// assert_eq!(cache.entries()?.len(), 1);
+/// # Ok(()) }
+/// ```
 #[derive(Debug, Clone)]
 pub struct ModelCache {
     dir: PathBuf,
@@ -743,6 +797,7 @@ impl ModelCache {
         }
     }
 
+    /// The directory this cache stores its entries in.
     pub fn dir(&self) -> &Path {
         &self.dir
     }

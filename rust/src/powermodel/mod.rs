@@ -20,18 +20,26 @@ use crate::{Error, Result};
 /// One stress-test observation.
 #[derive(Debug, Clone, Copy)]
 pub struct PowerObs {
+    /// Stressed frequency, MHz.
     pub f_mhz: Mhz,
+    /// Stressed (fully-loaded) core count.
     pub cores: usize,
+    /// Sockets powered at that core count.
     pub sockets: usize,
+    /// Mean measured power, watts.
     pub watts: f64,
 }
 
 /// Fitted Eq. 7 coefficients.
 #[derive(Debug, Clone, Copy)]
 pub struct PowerModel {
+    /// Per-core cubic dynamic term, W / GHz³.
     pub c1: f64,
+    /// Per-core linear (leakage) term, W / GHz.
     pub c2: f64,
+    /// Node-level static floor, watts.
     pub c3: f64,
+    /// Per-powered-socket overhead, watts.
     pub c4: f64,
 }
 
@@ -42,6 +50,7 @@ pub struct FitReport {
     pub ape_pct: f64,
     /// Root mean squared error, watts.
     pub rmse_w: f64,
+    /// Observations the fit used.
     pub n_samples: usize,
 }
 
@@ -115,10 +124,13 @@ pub struct StressConfig {
     /// Seconds of 1 Hz sampling per (f, p) point (paper stresses each
     /// point long enough for a stable mean).
     pub dwell_s: f64,
-    /// Lowest/highest stressed frequency (paper: 1.2–2.2 GHz).
+    /// Lowest stressed frequency, MHz (paper: 1200).
     pub freq_min_mhz: Mhz,
+    /// Highest stressed frequency, MHz (paper: 2200).
     pub freq_max_mhz: Mhz,
+    /// Frequency sweep step, MHz.
     pub freq_step_mhz: Mhz,
+    /// Measurement-noise RNG seed.
     pub seed: u64,
     /// Worker threads for the campaign fan-out (0 = all hardware threads).
     pub threads: usize,

@@ -16,9 +16,9 @@ use std::fmt::Write as _;
 use crate::arch::ArchProfile;
 use crate::config::{mhz_to_ghz, CampaignSpec};
 use crate::coordinator::replay::{ReplayResults, WorkloadReplay};
-use crate::coordinator::{AppResults, ExperimentResults, FleetResults};
+use crate::coordinator::{fleet_member_campaign, AppResults, ExperimentResults, FleetResults};
 use crate::compare::pow2_core_counts;
-use crate::energy::EnergyModel;
+use crate::energy::{Constraints, EnergyModel, Objective};
 use crate::workloads::phases::PhaseClass;
 use crate::{Error, Result};
 
@@ -32,8 +32,7 @@ use crate::{Error, Result};
 /// the same behaviour — it always assumed the default node). Registry
 /// profiles and legacy NodeSpec-default runs resolve correctly.
 fn arch_for_results(res: &ExperimentResults) -> ArchProfile {
-    crate::arch::profile_by_name(&res.arch)
-        .unwrap_or_else(|_| ArchProfile::from_node_spec(&crate::config::NodeSpec::default()))
+    res.resolved_arch()
 }
 
 /// Paper table order: Table 2..5 = these apps in this order.
@@ -373,9 +372,158 @@ pub fn fleet_report(fleet: &FleetResults) -> String {
     out
 }
 
+/// The Pareto-frontier table of one result bundle at one input size
+/// (ISSUE 5): per application, every non-dominated
+/// `(energy, exec-time, peak-power)` grid point — recomputed from the
+/// STORED models, so no serialized format changes — with a marker
+/// column naming the objectives whose argmin each point is.
+pub fn frontier_table(
+    res: &ExperimentResults,
+    campaign: &CampaignSpec,
+    input: u32,
+    objectives: &[Objective],
+) -> String {
+    let arch = arch_for_results(res);
+    let campaign = campaign.adapted_to(&arch);
+    let grid = crate::energy::config_grid_arch(&campaign, &arch);
+    let mut out = format!(
+        "# Pareto frontier on {} (input {}): energy vs time vs peak power\n\
+         | App | GHz | Cores | T (s) | P (W) | E (kJ) | argmin of |\n\
+         |---|---|---|---|---|---|---|\n",
+        res.arch, input
+    );
+    for app in &res.apps {
+        let em = EnergyModel::for_arch(res.power_model, app.svr.clone(), arch.clone());
+        let front = match em.frontier(&grid, input, &Constraints::default()) {
+            Ok(f) => f,
+            Err(_) => continue,
+        };
+        // One argmin scan per objective, reused across all rows.
+        let argmins: Vec<Option<(crate::config::Mhz, usize)>> = objectives
+            .iter()
+            .map(|o| front.argmin(*o).map(|w| (w.f_mhz, w.cores)))
+            .collect();
+        for p in &front.points {
+            let winners: Vec<&str> = objectives
+                .iter()
+                .zip(&argmins)
+                .filter(|(_, w)| **w == Some((p.f_mhz, p.cores)))
+                .map(|(o, _)| o.name())
+                .collect();
+            let _ = writeln!(
+                out,
+                "| {} | {:.1} | {} | {:.2} | {:.1} | {:.3} | {} |",
+                app.app,
+                mhz_to_ghz(p.f_mhz),
+                p.cores,
+                p.pred_time_s,
+                p.power_w,
+                p.energy_j / 1000.0,
+                if winners.is_empty() { "—".to_string() } else { winners.join(", ") },
+            );
+        }
+    }
+    out
+}
+
+/// Per-objective savings comparison (ISSUE 5): one row per
+/// `(app, input, objective)` with the argmin configuration and its
+/// energy premium / runtime saving relative to the energy-objective
+/// argmin — what choosing EDP (or a cap) over plain energy costs and
+/// buys on this architecture.
+pub fn objective_table(
+    res: &ExperimentResults,
+    campaign: &CampaignSpec,
+    objectives: &[Objective],
+) -> String {
+    let arch = arch_for_results(res);
+    let adapted = campaign.adapted_to(&arch);
+    let grid = crate::energy::config_grid_arch(&adapted, &arch);
+    let mut out = format!(
+        "# Per-objective optima on {} (vs the energy argmin)\n\
+         | App | Input | Objective | GHz (cores) | T (s) | E (kJ) | E premium (%) | T saved (%) |\n\
+         |---|---|---|---|---|---|---|---|\n",
+        res.arch
+    );
+    for app in &res.apps {
+        let em = EnergyModel::for_arch(res.power_model, app.svr.clone(), arch.clone());
+        for &input in &adapted.inputs {
+            // One batched surface pass per (app, input); every argmin —
+            // the energy reference included — is a scan over it.
+            let surf = em.surface(&grid, input);
+            let energy_ref = EnergyModel::optimize_surface(&surf, &Constraints::default()).ok();
+            for obj in objectives {
+                let cons = Constraints {
+                    objective: *obj,
+                    ..Default::default()
+                };
+                match (EnergyModel::optimize_surface(&surf, &cons).ok(), &energy_ref) {
+                    (Some(opt), Some(eref)) => {
+                        let e_premium = (opt.pred_energy_j / eref.pred_energy_j - 1.0) * 100.0;
+                        let t_saved = (1.0 - opt.pred_time_s / eref.pred_time_s) * 100.0;
+                        let _ = writeln!(
+                            out,
+                            "| {} | {} | {} | {:.1} ({}) | {:.2} | {:.3} | {:.2} | {:.2} |",
+                            app.app,
+                            input,
+                            obj.canonical(),
+                            mhz_to_ghz(opt.f_mhz),
+                            opt.cores,
+                            opt.pred_time_s,
+                            opt.pred_energy_j / 1000.0,
+                            e_premium,
+                            t_saved,
+                        );
+                    }
+                    _ => {
+                        let _ = writeln!(
+                            out,
+                            "| {} | {} | {} | infeasible | — | — | — | — |",
+                            app.app,
+                            input,
+                            obj.canonical(),
+                        );
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Full frontier report over a fleet sweep (the `ecopt frontier`
+/// output): per registry profile, the Pareto table at the campaign's
+/// largest input plus the per-objective savings comparison over every
+/// input. A pure function of the fleet results and the base campaign —
+/// byte-identical for any thread count because [`FleetResults`] is.
+pub fn frontier_report(
+    fleet: &FleetResults,
+    base_campaign: &CampaignSpec,
+    objectives: &[Objective],
+) -> String {
+    let names: Vec<String> = objectives.iter().map(|o| o.canonical()).collect();
+    let mut out = format!(
+        "# Energy frontier sweep over {} architecture profile(s) — objectives: {}\n\n",
+        fleet.members.len(),
+        names.join(", "),
+    );
+    for m in &fleet.members {
+        let arch = m.results.resolved_arch();
+        let campaign = fleet_member_campaign(base_campaign, &arch);
+        let _ = writeln!(out, "## {}\n", m.arch);
+        let input = campaign.inputs.last().copied().unwrap_or(1);
+        out.push_str(&frontier_table(&m.results, &campaign, input, objectives));
+        out.push('\n');
+        out.push_str(&objective_table(&m.results, &campaign, objectives));
+        out.push('\n');
+    }
+    out
+}
+
 /// One workload's replay table: every governor, the model-in-the-loop
-/// `ecopt` governor, and the static oracle, with ecopt's savings against
-/// each row (the paper's savings columns, generalized to phase traces).
+/// `ecopt` governor (energy- and EDP-objective), and the static oracle,
+/// with ecopt's savings against each row (the paper's savings columns,
+/// generalized to phase traces).
 pub fn replay_table(m: &WorkloadReplay) -> String {
     let mut out = format!(
         "# Replay: {} (input {})\n\
@@ -400,6 +548,16 @@ pub fn replay_table(m: &WorkloadReplay) -> String {
         m.ecopt.energy_j / 1000.0,
         m.ecopt.time_s,
         m.ecopt.mean_freq_ghz,
+    );
+    // The EDP-objective governor (ISSUE 5): expected to trade a little
+    // energy for runtime, so ecopt's save against it is usually >= 0.
+    let _ = writeln!(
+        out,
+        "| ecopt-edp | {:.3} | {:.1} | {:.2} | {:.2} |",
+        m.ecopt_edp.energy_j / 1000.0,
+        m.ecopt_edp.time_s,
+        m.ecopt_edp.mean_freq_ghz,
+        m.ecopt_save_vs(m.ecopt_edp.energy_j),
     );
     // Ecopt's save vs the oracle is negative when the oracle was better.
     let _ = writeln!(
@@ -468,10 +626,26 @@ pub fn replay_headline(res: &ReplayResults) -> String {
         / n;
     let switches: u64 = res.members.iter().map(|m| m.ecopt_switches).sum();
     let fallbacks: u64 = res.members.iter().map(|m| m.ecopt_fallback_samples).sum();
+    // The measured EDP-vs-energy trade (ISSUE 5): how much extra energy
+    // the EDP governor burned and how much wall time it saved, averaged
+    // over the suite.
+    let edp_e_premium: f64 = res
+        .members
+        .iter()
+        .map(|m| (m.ecopt_edp.energy_j / m.ecopt.energy_j - 1.0) * 100.0)
+        .sum::<f64>()
+        / n;
+    let edp_t_saved: f64 = res
+        .members
+        .iter()
+        .map(|m| (1.0 - m.ecopt_edp.time_s / m.ecopt.time_s) * 100.0)
+        .sum::<f64>()
+        / n;
     format!(
         "# Replay headline ({}, {} workloads)\n\
          avg ecopt save vs ondemand:      {avg_vs_ondemand:.2}%\n\
          avg ecopt save vs static oracle: {avg_vs_oracle:.2}%  (negative = oracle was better)\n\
+         avg ecopt-edp energy premium:    {edp_e_premium:.2}%  (runtime saved: {edp_t_saved:.2}%)\n\
          total config switches:           {switches}\n\
          stale-model fallback samples:    {fallbacks}\n",
         res.arch,

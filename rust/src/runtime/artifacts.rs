@@ -12,7 +12,9 @@ use crate::{Error, Result};
 /// Shape + dtype of one tensor in an artifact's signature.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TensorSpec {
+    /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
+    /// Element type name ("f32").
     pub dtype: String,
 }
 
@@ -57,7 +59,9 @@ pub struct ArtifactSpec {
     pub file: String,
     /// SHA-256 of the HLO text (build provenance).
     pub sha256: String,
+    /// Input tensor signature, in argument order.
     pub inputs: Vec<TensorSpec>,
+    /// Output tensor signature, in result order.
     pub outputs: Vec<TensorSpec>,
 }
 
@@ -86,7 +90,9 @@ impl FromJson for ArtifactSpec {
 /// The parsed manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Manifest format tag (validated on load).
     pub format: String,
+    /// Artifact name → its spec.
     pub artifacts: HashMap<String, ArtifactSpec>,
 }
 

@@ -18,11 +18,14 @@ use crate::{Error, Result};
 /// A host tensor of f32 values with an explicit shape.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorF32 {
+    /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
+    /// Row-major element data (`shape.iter().product()` values).
     pub data: Vec<f32>,
 }
 
 impl TensorF32 {
+    /// Build a tensor, validating that `data` fills `shape` exactly.
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
         let n: usize = shape.iter().product();
         if n != data.len() {

@@ -58,6 +58,7 @@ impl IpmiMeter {
         Self::with_params(spec.period_s, spec.quantum_w, spec.dropout, seed)
     }
 
+    /// Meter with explicit period / quantization / dropout parameters.
     pub fn with_params(period_s: f64, quantum_w: f64, dropout: f64, seed: u64) -> Self {
         assert!(period_s > 0.0, "sampling period must be positive");
         assert!((0.0..1.0).contains(&dropout), "dropout must be in [0,1)");

@@ -25,7 +25,7 @@ use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
 use crate::config::Mhz;
-use crate::energy::Constraints;
+use crate::energy::{Constraints, Objective};
 use crate::service::protocol::{line_code, line_is_ok, Request, CODE_OVERLOADED};
 use crate::service::SERVICE_SEED_DOMAIN;
 use crate::util::json::Json;
@@ -71,18 +71,27 @@ impl LoadgenOptions {
 pub struct LoadgenOutcome {
     /// Deterministic request/response transcript (see module docs).
     pub transcript: String,
+    /// Requests issued.
     pub requests: usize,
+    /// Successful responses.
     pub ok: usize,
+    /// Error responses (including shed).
     pub errors: usize,
     /// 503-style responses (load shedding observed).
     pub shed: usize,
     /// Requests per kind, in mix order: predict, optimize, registry.
     pub by_kind: Vec<(String, usize)>,
+    /// Wall time of the run, seconds.
     pub elapsed_s: f64,
+    /// Requests per second.
     pub rps: f64,
+    /// Median request latency, microseconds.
     pub p50_us: u64,
+    /// 95th-percentile request latency, microseconds.
     pub p95_us: u64,
+    /// 99th-percentile request latency, microseconds.
     pub p99_us: u64,
+    /// Slowest request, microseconds.
     pub max_us: u64,
 }
 
@@ -172,7 +181,7 @@ fn gen_request(seed: u64, i: usize, targets: &[Target]) -> Request {
         }
     } else if roll < 8 {
         let input = 1 + rng.below(3) as u32;
-        let constraints = match rng.below(4) {
+        let mut constraints = match rng.below(4) {
             0 => Constraints::default(),
             1 => Constraints {
                 max_cores: Some(1 + rng.below(t.max_cores)),
@@ -186,6 +195,15 @@ fn gen_request(seed: u64, i: usize, targets: &[Target]) -> Request {
                 min_cores: Some(1 + rng.below(t.max_cores)),
                 ..Default::default()
             },
+        };
+        // A third of the optimize mix exercises the non-energy
+        // objectives (ISSUE 5). Only the always-feasible scalarizations
+        // appear here — a random power cap could 409 and the smoke job
+        // asserts a zero error count.
+        constraints.objective = match rng.below(6) {
+            0 => Objective::Edp,
+            1 => Objective::Ed2p,
+            _ => Objective::Energy,
         };
         Request::Optimize {
             app: t.app.clone(),
@@ -337,6 +355,7 @@ mod tests {
     fn generated_requests_stay_in_bounds() {
         let ts = targets();
         let mut kinds = [0usize; 3];
+        let mut non_energy = 0usize;
         for i in 0..500 {
             match gen_request(7, i, &ts) {
                 Request::Predict {
@@ -352,12 +371,23 @@ mod tests {
                     if let Some(c) = constraints.max_cores {
                         assert!((1..=8).contains(&c));
                     }
+                    // Only the always-feasible objectives may appear in
+                    // the mix (the smoke job asserts zero errors).
+                    match constraints.objective {
+                        Objective::Energy | Objective::Edp | Objective::Ed2p => {}
+                        other => panic!("infeasible-capable objective in mix: {other:?}"),
+                    }
+                    if constraints.objective != Objective::Energy {
+                        non_energy += 1;
+                    }
                 }
                 Request::Registry => kinds[2] += 1,
                 other => panic!("unexpected kind in mix: {other:?}"),
             }
         }
-        // All three kinds appear in a 500-request mix.
+        // All three kinds appear in a 500-request mix, and the
+        // objective-bearing optimize variants are exercised.
         assert!(kinds.iter().all(|&k| k > 0), "mix {kinds:?}");
+        assert!(non_energy > 0, "mix never exercised a non-energy objective");
     }
 }

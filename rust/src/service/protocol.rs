@@ -19,26 +19,38 @@
 //! | kind       | payload                                               |
 //! |------------|-------------------------------------------------------|
 //! | `predict`  | app, [arch], [tag], f_mhz, cores, input               |
-//! | `optimize` | app, [arch], [tag], input, [constraints]              |
+//! | `optimize` | app, [arch], [tag], input, [constraints], [objective] |
 //! | `train`    | app, [arch] — async; responds with a job id           |
 //! | `status`   | job                                                   |
 //! | `registry` | — (list loaded models)                                |
 //! | `stats`    | — (served/shed/error counters, registry accounting)   |
 //! | `shutdown` | — (graceful stop; the response is sent first)         |
+//!
+//! Since ISSUE 5, `optimize` accepts an optional top-level `"objective"`
+//! field holding an [`Objective`] canonical string (`energy`, `edp`,
+//! `ed2p`, `budget:J`, `cap:W`, `deadline:S`). The protocol stays
+//! **v1**: an absent field defaults to `energy` and produces responses
+//! byte-identical to the pre-frontier wire behaviour (pinned by
+//! `tests/service.rs`); a non-energy objective is echoed back in the
+//! response so transcripts stay self-describing.
 
 use crate::config::Mhz;
-use crate::energy::Constraints;
+use crate::energy::{Constraints, Objective};
 use crate::util::json::Json;
 use crate::{Error, Result};
 
 /// Wire protocol version; bump on incompatible schema changes.
 pub const PROTOCOL_VERSION: u64 = 1;
 
-/// Response / error codes (HTTP-flavored).
+/// Malformed request (bad JSON, wrong version, missing fields).
 pub const CODE_BAD_REQUEST: u64 = 400;
+/// No model loaded for the requested (app, arch, tag).
 pub const CODE_NOT_FOUND: u64 = 404;
+/// No grid point satisfies the constraints/objective cut.
 pub const CODE_INFEASIBLE: u64 = 409;
+/// Daemon-side failure (training error, non-finite prediction).
 pub const CODE_INTERNAL: u64 = 500;
+/// Connection shed: the bounded accept queue was full.
 pub const CODE_OVERLOADED: u64 = 503;
 
 /// A parsed client request.
@@ -46,28 +58,47 @@ pub const CODE_OVERLOADED: u64 = 503;
 pub enum Request {
     /// SVR runtime (+ Eq. 7 power, Eq. 8 energy) at one configuration.
     Predict {
+        /// Application the model was trained for.
         app: String,
         /// Architecture the model was trained for; None = the daemon's
         /// configured default architecture.
         arch: Option<String>,
         /// Exact input-tag; None = deterministic pick (lowest tag).
         tag: Option<String>,
+        /// Queried frequency, MHz.
         f_mhz: Mhz,
+        /// Queried core count.
         cores: usize,
+        /// Queried input size.
         input: u32,
     },
-    /// Energy-optimal configuration for an app/input/arch.
+    /// Objective-optimal configuration for an app/input/arch.
     Optimize {
+        /// Application the model was trained for.
         app: String,
+        /// Architecture the model was trained for; None = the daemon's
+        /// configured default architecture.
         arch: Option<String>,
+        /// Exact input-tag; None = deterministic pick (lowest tag).
         tag: Option<String>,
+        /// Input size to optimize for.
         input: u32,
+        /// Bounds + objective of the argmin (the objective travels as a
+        /// top-level `"objective"` wire field — see the module docs).
         constraints: Constraints,
     },
     /// Run characterization + SVR fit for an app (async; job id).
-    Train { app: String, arch: Option<String> },
+    Train {
+        /// Application to train.
+        app: String,
+        /// Architecture to train for; None = the daemon's default.
+        arch: Option<String>,
+    },
     /// Poll an async training job.
-    Status { job: u64 },
+    Status {
+        /// The job id a `train` response returned.
+        job: u64,
+    },
     /// List loaded models.
     Registry,
     /// Service counters.
@@ -135,6 +166,11 @@ impl Request {
                 if c != Json::Obj(Default::default()) {
                     fields.push(("constraints", c));
                 }
+                // The energy objective is the wire default: omitting it
+                // keeps pre-frontier requests byte-identical.
+                if constraints.objective != Objective::Energy {
+                    fields.push(("objective", constraints.objective.to_json()));
+                }
             }
             Request::Train { app, arch } => {
                 fields.push(("app", Json::Str(app.clone())));
@@ -187,16 +223,25 @@ impl Request {
                 cores: j.get("cores")?.as_usize()?,
                 input: j.get("input")?.as_u32()?,
             }),
-            "optimize" => Ok(Request::Optimize {
-                app: j.get("app")?.as_str()?.to_string(),
-                arch: opt_str("arch")?,
-                tag: opt_str("tag")?,
-                input: j.get("input")?.as_u32()?,
-                constraints: match j.opt("constraints") {
+            "optimize" => {
+                let mut constraints = match j.opt("constraints") {
                     None | Some(Json::Null) => Constraints::default(),
                     Some(c) => constraints_from_json(c)?,
-                },
-            }),
+                };
+                // The objective travels as a TOP-LEVEL sibling of the
+                // constraints object; absent = energy (v1 compatible).
+                constraints.objective = match j.opt("objective") {
+                    None | Some(Json::Null) => Objective::Energy,
+                    Some(o) => Objective::from_json(o)?,
+                };
+                Ok(Request::Optimize {
+                    app: j.get("app")?.as_str()?.to_string(),
+                    arch: opt_str("arch")?,
+                    tag: opt_str("tag")?,
+                    input: j.get("input")?.as_u32()?,
+                    constraints,
+                })
+            }
             "train" => Ok(Request::Train {
                 app: j.get("app")?.as_str()?.to_string(),
                 arch: opt_str("arch")?,
@@ -212,7 +257,10 @@ impl Request {
     }
 }
 
-/// Constraints → wire form (absent fields mean unconstrained).
+/// Constraints → wire form (absent fields mean unconstrained). The
+/// [`Objective`] is NOT part of this object — it travels as a top-level
+/// `"objective"` sibling of the `optimize` request's `"constraints"`
+/// field (see the module docs).
 pub fn constraints_to_json(c: &Constraints) -> Json {
     let mut fields: Vec<(&str, Json)> = Vec::new();
     if let Some(t) = c.max_time_s {
@@ -259,6 +307,7 @@ pub fn constraints_from_json(j: &Json) -> Result<Constraints> {
         max_f_mhz: opt_u32("max_f_mhz")?,
         min_cores: opt_usize("min_cores")?,
         max_cores: opt_usize("max_cores")?,
+        objective: Objective::default(),
     })
 }
 
@@ -348,6 +397,27 @@ mod tests {
                     ..Default::default()
                 },
             },
+            Request::Optimize {
+                app: "swaptions".into(),
+                arch: None,
+                tag: None,
+                input: 2,
+                constraints: Constraints {
+                    objective: Objective::Edp,
+                    ..Default::default()
+                },
+            },
+            Request::Optimize {
+                app: "swaptions".into(),
+                arch: None,
+                tag: None,
+                input: 2,
+                constraints: Constraints {
+                    max_cores: Some(4),
+                    objective: Objective::EnergyUnderPowerCap(250.0),
+                    ..Default::default()
+                },
+            },
             Request::Train {
                 app: "blackscholes".into(),
                 arch: None,
@@ -431,10 +501,34 @@ mod tests {
             max_f_mhz: Some(2200),
             min_cores: Some(2),
             max_cores: Some(16),
+            objective: Objective::Energy,
         };
         let back = constraints_from_json(&constraints_to_json(&c)).unwrap();
         assert_eq!(back.canonical(), c.canonical());
         let none = constraints_from_json(&Json::obj(vec![])).unwrap();
         assert_eq!(none.canonical(), Constraints::default().canonical());
+    }
+
+    #[test]
+    fn absent_objective_parses_as_energy_with_prefrontier_bytes() {
+        // v1 compatibility: a pre-frontier optimize line still parses,
+        // defaults to the energy objective, and re-serializes to the
+        // SAME bytes (the energy objective is never written out).
+        let line = r#"{"app":"swaptions","input":2,"kind":"optimize","v":1}"#;
+        let req = Request::parse(line).unwrap();
+        match &req {
+            Request::Optimize { constraints, .. } => {
+                assert_eq!(constraints.objective, Objective::Energy);
+            }
+            other => panic!("parsed wrong kind: {other:?}"),
+        }
+        assert_eq!(req.to_line().unwrap(), line);
+        // An explicit energy objective parses to the same request.
+        let explicit =
+            r#"{"app":"swaptions","input":2,"kind":"optimize","objective":"energy","v":1}"#;
+        assert_eq!(Request::parse(explicit).unwrap(), req);
+        // A malformed objective is a parse error (400 at the daemon).
+        let bad = r#"{"app":"swaptions","input":2,"kind":"optimize","objective":"warp:9","v":1}"#;
+        assert!(Request::parse(bad).is_err());
     }
 }

@@ -38,7 +38,9 @@ use crate::Result;
 
 /// One resident model.
 pub struct ModelEntry {
+    /// The entry's `(app, input-tag, arch)` key.
     pub key: ModelKey,
+    /// The trained bundle itself.
     pub model: CachedModel,
     /// Serialized size charged against the byte budget.
     pub bytes: u64,
@@ -58,15 +60,25 @@ struct Shard {
 /// Registry counters (monotonic; `stats` surfaces them).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct RegistryStats {
+    /// Models currently resident.
     pub entries: usize,
+    /// Serialized bytes currently resident.
     pub bytes: u64,
+    /// Shard count.
     pub shards: usize,
+    /// Total LRU byte budget.
     pub byte_budget: u64,
+    /// Lookups that found a resident entry.
     pub hits: u64,
+    /// Lookups that missed.
     pub misses: u64,
+    /// Entries published (insert or warm-load).
     pub inserts: u64,
+    /// Entries evicted under the byte budget.
     pub evictions: u64,
+    /// `optimize` consults served.
     pub consults: u64,
+    /// Consults answered from the per-entry memo.
     pub consult_memo_hits: u64,
 }
 
@@ -463,6 +475,19 @@ mod tests {
         let d = reg.consult(&entry, &arch, &grid, 1, &c2).unwrap();
         assert!(d.cores <= 4);
         assert_eq!(reg.stats().consult_memo_hits, 1);
+        // A different OBJECTIVE is its own memo slot too (the canonical
+        // form folds the objective into the key — ISSUE 5).
+        let c3 = Constraints {
+            objective: crate::energy::Objective::Edp,
+            ..Default::default()
+        };
+        let e = reg.consult(&entry, &arch, &grid, 1, &c3).unwrap();
+        assert_eq!(reg.stats().consult_memo_hits, 1, "edp consult must not hit the energy memo");
+        // The EDP argmin can only be at least as fast as the energy one.
+        assert!(e.pred_time_s <= a.pred_time_s);
+        let e2 = reg.consult(&entry, &arch, &grid, 1, &c3).unwrap();
+        assert_eq!(e2.pred_energy_j, e.pred_energy_j);
+        assert_eq!(reg.stats().consult_memo_hits, 2);
     }
 
     #[test]

@@ -102,10 +102,13 @@ struct ServiceCtx {
 /// End-of-run accounting (`run`'s return value).
 #[derive(Debug, Clone)]
 pub struct ServiceReport {
+    /// Total requests answered (including error responses).
     pub served: u64,
+    /// Connections refused with a 503-style response (queue full).
     pub shed: u64,
+    /// Error responses sent.
     pub errors: u64,
-    /// (kind, requests) in [`KIND_NAMES`] order.
+    /// (kind, requests) per request kind, in protocol order.
     pub by_kind: Vec<(String, u64)>,
 }
 
@@ -467,15 +470,24 @@ fn handle_optimize(
     };
     let grid = config_grid_arch(&ctx.cfg.campaign.adapted_to(&profile), &profile);
     match ctx.registry.consult(&entry, &profile, &grid, input, constraints) {
-        Ok(opt) => ok_line(vec![
-            ("kind", Json::Str("optimize".into())),
-            ("model", Json::Str(entry.key.label())),
-            ("input", Json::Num(input as f64)),
-            ("f_mhz", Json::Num(opt.f_mhz as f64)),
-            ("cores", Json::Num(opt.cores as f64)),
-            ("pred_time_s", Json::Num(opt.pred_time_s)),
-            ("pred_energy_j", Json::Num(opt.pred_energy_j)),
-        ]),
+        Ok(opt) => {
+            let mut fields = vec![
+                ("kind", Json::Str("optimize".into())),
+                ("model", Json::Str(entry.key.label())),
+                ("input", Json::Num(input as f64)),
+                ("f_mhz", Json::Num(opt.f_mhz as f64)),
+                ("cores", Json::Num(opt.cores as f64)),
+                ("pred_time_s", Json::Num(opt.pred_time_s)),
+                ("pred_energy_j", Json::Num(opt.pred_energy_j)),
+            ];
+            // Echo non-default objectives so transcripts self-describe;
+            // the energy default stays byte-identical to pre-frontier
+            // responses (protocol v1 compatibility, pinned by tests).
+            if constraints.objective != crate::energy::Objective::Energy {
+                fields.push(("objective", constraints.objective.to_json()));
+            }
+            ok_line(fields)
+        }
         Err(e) => err_line(CODE_INFEASIBLE, &e.to_string()),
     }
 }

@@ -17,6 +17,7 @@ use crate::{Error, Result};
 /// Cross-validation summary (averages over folds).
 #[derive(Debug, Clone)]
 pub struct CvReport {
+    /// Number of folds averaged over.
     pub folds: usize,
     /// Mean absolute error in seconds (Table 1 "MAE").
     pub mae: f64,

@@ -11,16 +11,22 @@ use crate::{Error, Result};
 /// One evaluated grid point.
 #[derive(Debug, Clone)]
 pub struct GridPoint {
+    /// Evaluated regularization constant C.
     pub c: f64,
+    /// Evaluated RBF width γ.
     pub gamma: f64,
+    /// k-fold CV mean absolute error at this point, seconds.
     pub mae: f64,
+    /// k-fold CV percentage absolute error at this point.
     pub pae_pct: f64,
 }
 
 /// Grid-search outcome.
 #[derive(Debug, Clone)]
 pub struct GridSearchResult {
+    /// The lowest-MAE grid point.
     pub best: GridPoint,
+    /// Every evaluated point, in grid order.
     pub evaluated: Vec<GridPoint>,
 }
 

@@ -25,8 +25,11 @@ pub const DIMS: usize = 3;
 /// One characterization sample (one row of the §3.4 campaign).
 #[derive(Debug, Clone, Copy)]
 pub struct TrainSample {
+    /// Sampled frequency, MHz.
     pub f_mhz: Mhz,
+    /// Sampled core count.
     pub cores: usize,
+    /// Sampled input size.
     pub input: u32,
     /// Measured execution time, seconds.
     pub time_s: f64,
@@ -46,11 +49,15 @@ pub struct SvrModel {
     pub train_x: Vec<f64>,
     /// Signed dual coefficients (zero for non-SVs).
     pub beta: Vec<f64>,
+    /// Bias term.
     pub b: f64,
+    /// RBF kernel width γ.
     pub gamma: f64,
+    /// Feature scaler baked into the model (identity when scaling off).
     pub scaler: Standardizer,
-    /// Training diagnostics.
+    /// SMO pair updates performed during training (diagnostic).
     pub iterations: usize,
+    /// Number of support vectors (non-zero dual coefficients).
     pub n_support: usize,
 }
 

@@ -9,7 +9,9 @@ use crate::{Error, Result};
 /// Per-dimension z-score standardizer.
 #[derive(Debug, Clone)]
 pub struct Standardizer {
+    /// Per-dimension means subtracted before scaling.
     pub means: Vec<f64>,
+    /// Per-dimension standard deviations divided by after centering.
     pub stds: Vec<f64>,
 }
 
@@ -43,6 +45,7 @@ impl Standardizer {
         Ok(Standardizer { means, stds })
     }
 
+    /// Number of feature dimensions this scaler was fitted for.
     pub fn dims(&self) -> usize {
         self.means.len()
     }

@@ -11,11 +11,17 @@ use std::time::{Duration, Instant};
 /// Statistics of one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchStats {
+    /// Benchmark name.
     pub name: String,
+    /// Timed iterations performed.
     pub iters: usize,
+    /// Mean iteration time.
     pub mean: Duration,
+    /// Median iteration time.
     pub p50: Duration,
+    /// 95th-percentile iteration time.
     pub p95: Duration,
+    /// Fastest iteration.
     pub min: Duration,
 }
 

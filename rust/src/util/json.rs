@@ -13,31 +13,41 @@ use crate::{Error, Result};
 /// A JSON value. Objects use BTreeMap so serialization is deterministic.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (f64 — adequate for this crate's persisted data).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys ⇒ one byte form per document).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
     // ----- constructors -------------------------------------------------
 
+    /// Object from (key, value) pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Array from any [`ToJson`] slice.
     pub fn arr<T: ToJson>(items: &[T]) -> Json {
         Json::Arr(items.iter().map(|i| i.to_json()).collect())
     }
 
+    /// Array of numbers.
     pub fn f64s(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|x| Json::Num(*x)).collect())
     }
 
     // ----- accessors (error on type mismatch) ---------------------------
 
+    /// The number value (error when not a number).
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(n) => Ok(*n),
@@ -45,6 +55,7 @@ impl Json {
         }
     }
 
+    /// The number as a non-negative integer (error on sign/fraction).
     pub fn as_usize(&self) -> Result<usize> {
         let f = self.as_f64()?;
         if f < 0.0 || f.fract() != 0.0 {
@@ -53,11 +64,13 @@ impl Json {
         Ok(f as usize)
     }
 
+    /// The number as a u32 (range-checked through u64).
     pub fn as_u32(&self) -> Result<u32> {
         let v = self.as_u64()?;
         u32::try_from(v).map_err(|_| Error::Json(format!("u32 out of range: {v}")))
     }
 
+    /// The number as a u64 (error on sign/fraction).
     pub fn as_u64(&self) -> Result<u64> {
         let f = self.as_f64()?;
         if f < 0.0 || f.fract() != 0.0 {
@@ -66,6 +79,7 @@ impl Json {
         Ok(f as u64)
     }
 
+    /// The boolean value (error when not a bool).
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -73,6 +87,7 @@ impl Json {
         }
     }
 
+    /// The string value (error when not a string).
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -80,6 +95,7 @@ impl Json {
         }
     }
 
+    /// The array elements (error when not an array).
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(a) => Ok(a),
@@ -87,6 +103,7 @@ impl Json {
         }
     }
 
+    /// The object map (error when not an object).
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Ok(o),
@@ -106,6 +123,7 @@ impl Json {
         self.as_obj().ok().and_then(|o| o.get(key))
     }
 
+    /// The array as a float vector (error on any non-number element).
     pub fn to_f64_vec(&self) -> Result<Vec<f64>> {
         self.as_arr()?.iter().map(|j| j.as_f64()).collect()
     }
@@ -396,11 +414,13 @@ fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json> {
 
 /// Hand-implemented serialization for persisted types.
 pub trait ToJson {
+    /// Build this value's JSON representation.
     fn to_json(&self) -> Json;
 }
 
 /// Hand-implemented deserialization for persisted types.
 pub trait FromJson: Sized {
+    /// Reconstruct a value from its JSON representation.
     fn from_json(j: &Json) -> Result<Self>;
 }
 

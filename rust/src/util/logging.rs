@@ -6,11 +6,16 @@
 
 use std::sync::OnceLock;
 
+/// Log severity, most severe first.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
+    /// Unrecoverable problems.
     Error = 0,
+    /// Degraded-but-continuing conditions.
     Warn = 1,
+    /// Pipeline progress (the default level).
     Info = 2,
+    /// Per-decision detail.
     Debug = 3,
 }
 

@@ -128,7 +128,9 @@ pub enum PhaseKind {
 /// core-seconds at f_ref; for Barrier it is wall-clock seconds.
 #[derive(Debug, Clone, Copy)]
 pub struct Phase {
+    /// Which phase kind this is.
     pub kind: PhaseKind,
+    /// Remaining work (units depend on the kind — see the struct docs).
     pub work: f64,
 }
 

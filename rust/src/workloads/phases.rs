@@ -35,8 +35,11 @@ use crate::{Error, Result};
 /// The three execution regimes a phase-shifting job cycles through.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PhaseClass {
+    /// Compute-bound: time scales with frequency and cores.
     Compute,
+    /// Memory-/bandwidth-bound: time is frequency-insensitive.
     Memory,
+    /// Between kernels: cores idle, only leakage power drawn.
     Idle,
 }
 
@@ -50,6 +53,7 @@ impl PhaseClass {
         }
     }
 
+    /// Class names in [`PhaseClass::index`] order (report rows).
     pub const NAMES: [&'static str; 3] = ["compute", "memory", "idle"];
 }
 
@@ -57,7 +61,9 @@ impl PhaseClass {
 /// [`F_REF_GHZ`] for Compute/Memory and wall-clock seconds for Idle.
 #[derive(Debug, Clone, Copy)]
 pub struct PhaseSegment {
+    /// Which regime this segment runs in.
     pub class: PhaseClass,
+    /// Work amount (units depend on the class — see the struct docs).
     pub work: f64,
 }
 
@@ -66,9 +72,13 @@ pub struct PhaseSegment {
 /// size (`input_scale^(n-1)`, matching the PARSEC analogues' convention).
 #[derive(Debug, Clone)]
 pub struct PhasedWorkload {
+    /// Workload name (suite key).
     pub name: String,
+    /// The repeated phase schedule.
     pub pattern: Vec<PhaseSegment>,
+    /// How many times the pattern repeats.
     pub cycles: u32,
+    /// Geometric work growth per input step.
     pub input_scale: f64,
     /// Memory-bound fraction of *compute* phases (small: they respond
     /// to DVFS almost fully).
@@ -286,9 +296,13 @@ pub fn phased_by_name(name: &str) -> Result<PhasedWorkload> {
 /// phased runs have no `threads` fan-out of their own).
 #[derive(Debug, Clone)]
 pub struct ReplayRunConfig {
+    /// Simulator tick, seconds.
     pub dt: f64,
+    /// Multiplicative work-noise amplitude (0 disables).
     pub work_noise: f64,
+    /// RNG seed of this run's noise streams.
     pub seed: u64,
+    /// Abort guard: maximum simulated seconds.
     pub max_sim_s: f64,
 }
 
@@ -306,12 +320,17 @@ impl Default for ReplayRunConfig {
 /// Observables of one phase-trace run.
 #[derive(Debug, Clone)]
 pub struct ReplayRunResult {
+    /// Workload name.
     pub workload: String,
+    /// Input size the trace ran at.
     pub input: u32,
+    /// Governor that drove the run.
     pub governor: String,
+    /// Measured wall time, seconds.
     pub wall_time_s: f64,
     /// IPMI trapezoid-integrated energy, joules.
     pub energy_j: f64,
+    /// Mean power draw over the run, watts.
     pub mean_power_w: f64,
     /// Time-weighted mean frequency over online cores, GHz.
     pub mean_freq_ghz: f64,

@@ -49,9 +49,13 @@ impl Default for RunConfig {
 /// Observables of one run — the row the characterization campaign records.
 #[derive(Debug, Clone)]
 pub struct RunResult {
+    /// Application name.
     pub app: String,
+    /// Input size the run used.
     pub input: u32,
+    /// Active core count the run was launched with.
     pub cores: usize,
+    /// Governor that drove the run.
     pub governor: String,
     /// Wall-clock execution time, seconds.
     pub wall_time_s: f64,

@@ -138,3 +138,23 @@ fn unknown_arch_is_a_runtime_error_not_usage() {
     assert_eq!(o.status.code(), Some(1));
     assert!(stderr(&o).contains("vax-11"), "{}", stderr(&o));
 }
+
+#[test]
+fn frontier_help_and_bad_objective_grammar() {
+    // ISSUE 5: the frontier command is wired into the strict grammar.
+    let o = ecopt(&["help", "frontier"]);
+    assert_eq!(o.status.code(), Some(0));
+    let out = stdout(&o);
+    assert!(out.contains("ecopt frontier"), "{out}");
+    assert!(out.contains("--objective"), "{out}");
+
+    // A malformed objective is a USAGE error (exit 2), caught before
+    // any pipeline work starts.
+    let o = ecopt(&["frontier", "--objective", "warp:9", "--quick"]);
+    assert_eq!(o.status.code(), Some(2));
+    assert!(stderr(&o).contains("objective"), "{}", stderr(&o));
+
+    // Same grammar on the query side.
+    let o = ecopt(&["query", "optimize", "--app", "x", "--objective", "cap:-5"]);
+    assert_eq!(o.status.code(), Some(2), "{}", stderr(&o));
+}

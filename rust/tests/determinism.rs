@@ -8,7 +8,8 @@
 //! and scheduling can never leak into the numbers.
 
 use ecopt::config::{CampaignSpec, ExperimentConfig, SvrSpec};
-use ecopt::coordinator::{run_fleet, Coordinator};
+use ecopt::coordinator::{run_fleet, Coordinator, FleetResults};
+use ecopt::energy::Objective;
 use ecopt::util::json::ToJson;
 use ecopt::workloads::runner::RunConfig;
 
@@ -66,12 +67,9 @@ fn oversubscribed_threads_byte_identical_to_sequential() {
     );
 }
 
-/// Serialized fleet sweep over the full 4-profile registry at a given
-/// thread count (noise ON — the per-member seed domains must line up, not
-/// be absent). Nested fan-out: the outer pool runs profiles, each member
-/// pipeline fans its own stages out on inner pools with the same width.
-fn fleet_json(threads: usize) -> String {
-    let cfg = ExperimentConfig {
+/// The shared fleet campaign of the determinism suite.
+fn fleet_cfg() -> ExperimentConfig {
+    ExperimentConfig {
         campaign: CampaignSpec {
             freq_points: 3, // 3 ladder points on EVERY profile's ladder
             core_max: 6,
@@ -87,7 +85,14 @@ fn fleet_json(threads: usize) -> String {
         },
         workloads: vec!["swaptions".into()],
         ..Default::default()
-    };
+    }
+}
+
+/// Fleet sweep over the full 4-profile registry at a given thread count
+/// (noise ON — the per-member seed domains must line up, not be
+/// absent). Nested fan-out: the outer pool runs profiles, each member
+/// pipeline fans its own stages out on inner pools with the same width.
+fn fleet(threads: usize) -> FleetResults {
     let rc = RunConfig {
         dt: 0.25,
         work_noise: 0.01,
@@ -95,22 +100,61 @@ fn fleet_json(threads: usize) -> String {
         max_sim_s: 1e6,
         threads,
     };
-    run_fleet(&cfg, &rc, &ecopt::arch::registry())
-        .unwrap()
-        .to_json()
-        .dump()
-        .unwrap()
+    run_fleet(&fleet_cfg(), &rc, &ecopt::arch::registry()).unwrap()
+}
+
+/// Every objective's reported argmin across the whole fleet, rendered to
+/// one comparable string (ISSUE 5 acceptance: the per-objective argmin
+/// must be bitwise-reproducible across 1/4/16 worker threads).
+fn frontier_argmins(fleet: &FleetResults) -> String {
+    let objectives = [
+        Objective::Energy,
+        Objective::Edp,
+        Objective::Ed2p,
+        Objective::TimeUnderEnergyBudget(50_000.0),
+        Objective::EnergyUnderPowerCap(400.0),
+        Objective::EnergyUnderDeadline(500.0),
+    ];
+    let mut out = String::new();
+    for row in fleet.objective_optima(&fleet_cfg().campaign, &objectives) {
+        // Exact-float rendering ({:?} round-trips f64 bits) so a last-ulp
+        // divergence across thread counts cannot hide.
+        match row.config {
+            Some(c) => out.push_str(&format!(
+                "{}|{}|{}|{}|{} {} {:?} {:?}\n",
+                row.arch,
+                row.app,
+                row.input,
+                row.objective.canonical(),
+                c.f_mhz,
+                c.cores,
+                c.pred_time_s,
+                c.pred_energy_j,
+            )),
+            None => out.push_str(&format!(
+                "{}|{}|{}|{}|infeasible\n",
+                row.arch,
+                row.app,
+                row.input,
+                row.objective.canonical(),
+            )),
+        }
+    }
+    out
 }
 
 #[test]
 fn fleet_byte_identical_across_thread_counts() {
     // ISSUE 2 acceptance: run_fleet over the >=4-profile registry must be
-    // byte-identical for 1, 4, and 16 threads.
-    let seq = fleet_json(1);
-    let par4 = fleet_json(4);
-    assert_eq!(seq, par4, "4-thread fleet diverged from sequential");
-    let par16 = fleet_json(16);
-    assert_eq!(seq, par16, "16-thread fleet diverged from sequential");
+    // byte-identical for 1, 4, and 16 threads. ISSUE 5 extends the
+    // contract to the frontier engine: every objective's argmin (and the
+    // rendered frontier report) must be bitwise-reproducible too.
+    let f1 = fleet(1);
+    let f4 = fleet(4);
+    let f16 = fleet(16);
+    let seq = f1.to_json().dump().unwrap();
+    assert_eq!(seq, f4.to_json().dump().unwrap(), "4-thread fleet diverged from sequential");
+    assert_eq!(seq, f16.to_json().dump().unwrap(), "16-thread fleet diverged");
     // Sanity: all four registry profiles are present, in order.
     for name in [
         "xeon-dual-e5-2698v3",
@@ -120,4 +164,26 @@ fn fleet_byte_identical_across_thread_counts() {
     ] {
         assert!(seq.contains(name), "fleet output missing {name}");
     }
+
+    // Per-objective argmins, bit for bit, across thread counts.
+    let a1 = frontier_argmins(&f1);
+    assert!(!a1.is_empty() && a1.contains("edp"), "argmin table rendered");
+    assert_eq!(a1, frontier_argmins(&f4), "4-thread frontier argmins diverged");
+    assert_eq!(a1, frontier_argmins(&f16), "16-thread frontier argmins diverged");
+
+    // And the full rendered frontier report (what `ecopt frontier`
+    // prints) is identical too.
+    let objectives = [Objective::Energy, Objective::Edp, Objective::Ed2p];
+    let r1 = ecopt::report::frontier_report(&f1, &fleet_cfg().campaign, &objectives);
+    assert!(r1.contains("Pareto frontier"), "report rendered");
+    assert_eq!(
+        r1,
+        ecopt::report::frontier_report(&f4, &fleet_cfg().campaign, &objectives),
+        "4-thread frontier report diverged"
+    );
+    assert_eq!(
+        r1,
+        ecopt::report::frontier_report(&f16, &fleet_cfg().campaign, &objectives),
+        "16-thread frontier report diverged"
+    );
 }

@@ -1,0 +1,343 @@
+//! Frontier-engine invariants (ISSUE 5): every Pareto point is
+//! non-dominated, the sweep extraction equals the all-pairs brute
+//! force on the full grid, every objective's argmin lies ON the
+//! frontier, `Constraints::canonical` is pinned (memo-key stability
+//! with the new objective field), and exact ties break
+//! deterministically regardless of grid order.
+
+use ecopt::config::{CampaignSpec, NodeSpec, SvrSpec};
+use ecopt::energy::{
+    config_grid, frontier::dominates, pareto_frontier, Constraints, EnergyModel, EnergyPoint,
+    Objective,
+};
+use ecopt::powermodel::PowerModel;
+use ecopt::svr::{SvrModel, TrainSample};
+
+/// A genuinely-trained smooth model over a synthetic scalable app
+/// (time ~ W/p / f) — same shape as the energy module's unit-test model.
+fn model() -> EnergyModel {
+    let mut samples = Vec::new();
+    for fi in 0..6 {
+        let f = 1200 + fi * 200;
+        for p in [1usize, 2, 4, 8, 16, 32] {
+            for n in 1..=3u32 {
+                let t = 200.0 * n as f64 * (0.05 + 0.95 / p as f64) * 2200.0 / f as f64;
+                samples.push(TrainSample {
+                    f_mhz: f,
+                    cores: p,
+                    input: n,
+                    time_s: t,
+                });
+            }
+        }
+    }
+    let svr = SvrModel::train(
+        &samples,
+        &SvrSpec {
+            c: 5000.0,
+            epsilon: 0.5,
+            max_iter: 300_000,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    EnergyModel::new(PowerModel::paper_eq9(), svr, NodeSpec::default())
+}
+
+fn grid() -> Vec<(u32, usize)> {
+    config_grid(&CampaignSpec::default(), &NodeSpec::default())
+}
+
+/// Median of a (copied) float vector — parameter source for the
+/// budget/cap/deadline objectives so their cuts are feasible but
+/// non-trivial on this surface.
+fn median(mut v: Vec<f64>) -> f64 {
+    v.sort_by(|a, b| a.total_cmp(b));
+    v[v.len() / 2]
+}
+
+/// The six objectives, parameterized from the surface's medians.
+fn objectives(surface: &[EnergyPoint]) -> Vec<Objective> {
+    let e_med = median(surface.iter().map(|p| p.energy_j).collect());
+    let w_med = median(surface.iter().map(|p| p.power_w).collect());
+    let t_med = median(surface.iter().map(|p| p.pred_time_s).collect());
+    vec![
+        Objective::Energy,
+        Objective::Edp,
+        Objective::Ed2p,
+        Objective::TimeUnderEnergyBudget(e_med),
+        Objective::EnergyUnderPowerCap(w_med),
+        Objective::EnergyUnderDeadline(t_med),
+    ]
+}
+
+#[test]
+fn every_pareto_point_is_nondominated() {
+    let m = model();
+    let g = grid();
+    for n in 1..=3u32 {
+        let front = m.frontier(&g, n, &Constraints::default()).unwrap();
+        assert!(!front.is_empty(), "input {n}: empty frontier");
+        assert!(front.len() <= g.len());
+        for (i, a) in front.points.iter().enumerate() {
+            for (j, b) in front.points.iter().enumerate() {
+                if i != j {
+                    assert!(
+                        !dominates(a, b),
+                        "input {n}: frontier point ({}, {}) dominates ({}, {})",
+                        a.f_mhz,
+                        a.cores,
+                        b.f_mhz,
+                        b.cores
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn frontier_equals_allpairs_bruteforce_on_the_full_grid() {
+    let m = model();
+    let g = grid();
+    let surface = m.surface(&g, 2);
+    // Independent oracle: a point survives iff NO other point dominates
+    // it (all-pairs, no sorting, no transitivity shortcut).
+    let mut brute: Vec<EnergyPoint> = surface
+        .iter()
+        .enumerate()
+        .filter(|(i, p)| {
+            p.energy_j.is_finite()
+                && surface
+                    .iter()
+                    .enumerate()
+                    .all(|(j, q)| i == j || !dominates(q, p))
+        })
+        .map(|(_, p)| *p)
+        .collect();
+    brute.sort_by(|a, b| {
+        a.energy_j
+            .total_cmp(&b.energy_j)
+            .then_with(|| a.pred_time_s.total_cmp(&b.pred_time_s))
+            .then_with(|| a.power_w.total_cmp(&b.power_w))
+            .then_with(|| a.f_mhz.cmp(&b.f_mhz))
+            .then_with(|| a.cores.cmp(&b.cores))
+    });
+    let swept = pareto_frontier(&surface);
+    assert_eq!(swept.len(), brute.len(), "frontier size mismatch");
+    for (a, b) in swept.iter().zip(&brute) {
+        assert_eq!((a.f_mhz, a.cores), (b.f_mhz, b.cores));
+        assert_eq!(a.energy_j, b.energy_j);
+        assert_eq!(a.pred_time_s, b.pred_time_s);
+        assert_eq!(a.power_w, b.power_w);
+    }
+}
+
+#[test]
+fn every_objective_argmin_lies_on_the_frontier() {
+    let m = model();
+    let g = grid();
+    for n in 1..=2u32 {
+        let surface = m.surface(&g, n);
+        for obj in objectives(&surface) {
+            let cons = Constraints {
+                objective: obj,
+                ..Default::default()
+            };
+            let opt = m.optimize(&g, n, &cons).unwrap();
+            let front = m.frontier(&g, n, &cons).unwrap();
+            assert!(
+                front.contains(opt.f_mhz, opt.cores),
+                "input {n}, {}: argmin ({} MHz, {}) not on the {}-point frontier",
+                obj.canonical(),
+                opt.f_mhz,
+                opt.cores,
+                front.len()
+            );
+            // And the frontier-restricted argmin achieves the same
+            // metric value as the global grid argmin.
+            let on_front = front.argmin(obj).unwrap();
+            let global_pt = surface
+                .iter()
+                .find(|p| (p.f_mhz, p.cores) == (opt.f_mhz, opt.cores))
+                .unwrap();
+            assert_eq!(
+                obj.metric(&on_front),
+                obj.metric(global_pt),
+                "input {n}, {}: frontier argmin metric diverged",
+                obj.canonical()
+            );
+        }
+    }
+}
+
+#[test]
+fn objective_argmins_order_along_the_tradeoff() {
+    // The scalarization chain: weighting time harder can only move the
+    // optimum toward faster, hungrier configurations.
+    let m = model();
+    let g = grid();
+    let energy = m.optimize(&g, 2, &Constraints::default()).unwrap();
+    let edp = m
+        .optimize(
+            &g,
+            2,
+            &Constraints {
+                objective: Objective::Edp,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let ed2p = m
+        .optimize(
+            &g,
+            2,
+            &Constraints {
+                objective: Objective::Ed2p,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert!(edp.pred_time_s <= energy.pred_time_s);
+    assert!(ed2p.pred_time_s <= edp.pred_time_s);
+    assert!(edp.pred_energy_j >= energy.pred_energy_j);
+    assert!(ed2p.pred_energy_j >= edp.pred_energy_j);
+}
+
+#[test]
+fn constrained_objectives_respect_their_cuts() {
+    let m = model();
+    let g = grid();
+    let surface = m.surface(&g, 1);
+    let e_med = median(surface.iter().map(|p| p.energy_j).collect());
+    let w_med = median(surface.iter().map(|p| p.power_w).collect());
+    let t_med = median(surface.iter().map(|p| p.pred_time_s).collect());
+
+    let budget = m
+        .optimize(
+            &g,
+            1,
+            &Constraints {
+                objective: Objective::TimeUnderEnergyBudget(e_med),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert!(budget.pred_energy_j <= e_med, "energy budget violated");
+
+    let capped = m
+        .optimize(
+            &g,
+            1,
+            &Constraints {
+                objective: Objective::EnergyUnderPowerCap(w_med),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert!(
+        budget.pred_time_s <= t_med * 10.0,
+        "sanity: budget argmin exists"
+    );
+    // The capped argmin's power: recompute from the surface.
+    let capped_pt = surface
+        .iter()
+        .find(|p| (p.f_mhz, p.cores) == (capped.f_mhz, capped.cores))
+        .unwrap();
+    assert!(capped_pt.power_w <= w_med, "power cap violated");
+
+    let deadline = m
+        .optimize(
+            &g,
+            1,
+            &Constraints {
+                objective: Objective::EnergyUnderDeadline(t_med),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert!(deadline.pred_time_s <= t_med, "deadline violated");
+
+    // An unsatisfiable cut is an error, exactly like impossible bounds.
+    assert!(m
+        .optimize(
+            &g,
+            1,
+            &Constraints {
+                objective: Objective::EnergyUnderDeadline(1e-9),
+                ..Default::default()
+            },
+        )
+        .is_err());
+}
+
+#[test]
+fn flat_surface_ties_all_land_on_the_frontier_deterministically() {
+    // A constant-prediction model (empty support set: prediction ==
+    // bias) with flat power: every grid point has the SAME
+    // (energy, time, power) tuple, nothing dominates anything, and the
+    // argmin tie-break must pick the lowest (f, cores) for every
+    // objective — from any grid order.
+    let svr = SvrModel {
+        train_x: vec![],
+        beta: vec![],
+        b: 5.0,
+        gamma: 0.5,
+        scaler: ecopt::svr::Standardizer::identity(ecopt::svr::DIMS),
+        iterations: 0,
+        n_support: 0,
+    };
+    let m = EnergyModel::new(
+        PowerModel {
+            c1: 0.0,
+            c2: 0.0,
+            c3: 100.0,
+            c4: 0.0,
+        },
+        svr,
+        NodeSpec::default(),
+    );
+    let g = grid();
+    let front = m.frontier(&g, 1, &Constraints::default()).unwrap();
+    assert_eq!(front.len(), g.len(), "exact ties must all survive");
+    for obj in [Objective::Energy, Objective::Edp, Objective::Ed2p] {
+        let cons = Constraints {
+            objective: obj,
+            ..Default::default()
+        };
+        let opt = m.optimize(&g, 1, &cons).unwrap();
+        assert_eq!((opt.f_mhz, opt.cores), (1200, 1), "{}", obj.canonical());
+        let mut reversed = g.clone();
+        reversed.reverse();
+        let opt2 = m.optimize(&reversed, 1, &cons).unwrap();
+        assert_eq!((opt2.f_mhz, opt2.cores), (1200, 1), "{}", obj.canonical());
+    }
+}
+
+#[test]
+fn constraints_canonical_is_pinned_with_the_objective_field() {
+    // Memo-key stability: the registry keys consults by this string, so
+    // its exact form is part of the system contract. The original five
+    // fields keep their prefix; the objective is appended.
+    assert_eq!(
+        Constraints::default().canonical(),
+        "t:-|fmin:-|fmax:-|cmin:-|cmax:-|obj:energy"
+    );
+    let full = Constraints {
+        max_time_s: Some(12.5),
+        min_f_mhz: Some(1200),
+        max_f_mhz: Some(2200),
+        min_cores: Some(2),
+        max_cores: Some(16),
+        objective: Objective::EnergyUnderPowerCap(250.0),
+    };
+    assert_eq!(full.canonical(), "t:12.5|fmin:1200|fmax:2200|cmin:2|cmax:16|obj:cap:250");
+    let edp = Constraints {
+        objective: Objective::Edp,
+        ..Default::default()
+    };
+    assert_eq!(edp.canonical(), "t:-|fmin:-|fmax:-|cmin:-|cmax:-|obj:edp");
+    // Equal sets canonicalize identically; different objectives never do.
+    assert_eq!(edp.canonical(), edp.clone().canonical());
+    assert_ne!(edp.canonical(), Constraints::default().canonical());
+}

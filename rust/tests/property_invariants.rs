@@ -422,6 +422,7 @@ fn prop_optimizer_never_violates_constraints() {
             max_f_mhz: max_f,
             min_cores: min_p,
             max_cores: max_p,
+            ..Default::default()
         };
         let input = 1 + rng.below(2) as u32;
         let feasible = |p: &ecopt::energy::EnergyPoint| {

@@ -108,6 +108,34 @@ fn ecopt_within_five_percent_of_static_oracle() {
 }
 
 #[test]
+fn edp_governor_trades_energy_for_runtime() {
+    // ISSUE 5 sanity of the trade-off: the EDP-objective governor may
+    // only move toward faster, hungrier configurations, so on every
+    // workload its measured energy is at least the energy-objective
+    // governor's and its measured runtime is at most the energy
+    // governor's. Small tolerances absorb measurement noise (the two
+    // replays run under different seed streams of the same domain).
+    let res = acceptance_results();
+    for m in &res.members {
+        assert_eq!(m.ecopt_edp.governor, "ecopt-edp", "{}", m.workload);
+        assert!(
+            m.ecopt_edp.energy_j >= m.ecopt.energy_j * 0.98,
+            "{}: edp governor used LESS energy ({} J) than the energy governor ({} J)",
+            m.workload,
+            m.ecopt_edp.energy_j,
+            m.ecopt.energy_j
+        );
+        assert!(
+            m.ecopt_edp.time_s <= m.ecopt.time_s * 1.02,
+            "{}: edp governor ran LONGER ({} s) than the energy governor ({} s)",
+            m.workload,
+            m.ecopt_edp.time_s,
+            m.ecopt.time_s
+        );
+    }
+}
+
+#[test]
 fn warm_cache_replay_trains_zero_models_and_is_byte_identical() {
     let dir = TempDir::new().unwrap();
     let mk_opts = || ReplayOptions {
@@ -151,4 +179,11 @@ fn replay_report_renders_all_sections() {
     for g in ["ondemand", "conservative", "performance", "powersave", "ecopt"] {
         assert!(report.contains(g), "report missing governor {g}");
     }
+    // ISSUE 5: the EDP-objective governor rides along in every table
+    // and the headline reports its measured energy/runtime trade.
+    assert!(report.contains("ecopt-edp"), "report missing the EDP governor");
+    assert!(
+        report.contains("energy premium"),
+        "headline missing the EDP trade line"
+    );
 }

@@ -223,6 +223,82 @@ fn daemon_roundtrips_predict_optimize_registry_stats() {
 }
 
 #[test]
+fn optimize_without_objective_is_byte_identical_to_pre_frontier_wire() {
+    // ISSUE 5 acceptance: protocol v1 backward compatibility. A request
+    // with NO "objective" field must produce a response byte-identical
+    // to the pre-frontier wire behaviour: same sorted-key field set
+    // (kind/model/input/f_mhz/cores/pred_time_s/pred_energy_j + v/ok),
+    // no "objective" echo, values bit-equal to the local energy argmin.
+    let dir = TempDir::new().unwrap();
+    let cache = ModelCache::open(dir.path()).unwrap();
+    let key = ModelKey::new("synthapp", "n1-2#v1compat", "custom-node");
+    cache.put(&key, &trained_bundle()).unwrap();
+    let cfg = ExperimentConfig::default();
+    let (handle, daemon, addr) = spawn_server(
+        cfg.clone(),
+        ServiceConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 2,
+            cache_dir: Some(dir.path().to_path_buf()),
+            ..Default::default()
+        },
+    );
+
+    // The raw pre-frontier line (exactly what an ISSUE-4 client sends).
+    let line = r#"{"app":"synthapp","input":2,"kind":"optimize","v":1}"#;
+    let resp = request_once(&addr, line).unwrap();
+    assert!(line_is_ok(&resp), "{resp}");
+    assert!(
+        !resp.contains("objective"),
+        "v1 response must not grow fields: {resp}"
+    );
+
+    // Reconstruct the expected response byte for byte from the local
+    // bundle: the daemon consults the same grid with default
+    // constraints, and ok_line's sorted-key exact-float writer has one
+    // byte form per message.
+    let bundle = trained_bundle();
+    let arch = cfg.resolved_arch().unwrap();
+    let campaign = cfg.effective_campaign().unwrap();
+    let grid = ecopt::energy::config_grid_arch(&campaign, &arch);
+    let em = ecopt::energy::EnergyModel::for_arch(bundle.power, bundle.svr, arch);
+    let opt = em
+        .optimize(&grid, 2, &ecopt::energy::Constraints::default())
+        .unwrap();
+    let expected = ecopt::service::protocol::ok_line(vec![
+        ("kind", Json::Str("optimize".into())),
+        ("model", Json::Str(key.label())),
+        ("input", Json::Num(2.0)),
+        ("f_mhz", Json::Num(opt.f_mhz as f64)),
+        ("cores", Json::Num(opt.cores as f64)),
+        ("pred_time_s", Json::Num(opt.pred_time_s)),
+        ("pred_energy_j", Json::Num(opt.pred_energy_j)),
+    ]);
+    assert_eq!(resp, expected, "pre-frontier wire behaviour drifted");
+
+    // An explicit energy objective answers with the SAME bytes, and a
+    // non-energy objective changes the consult and echoes itself.
+    let explicit = r#"{"app":"synthapp","input":2,"kind":"optimize","objective":"energy","v":1}"#;
+    assert_eq!(request_once(&addr, explicit).unwrap(), resp);
+    let edp_line = r#"{"app":"synthapp","input":2,"kind":"optimize","objective":"edp","v":1}"#;
+    let edp_resp = request_once(&addr, edp_line).unwrap();
+    assert!(line_is_ok(&edp_resp), "{edp_resp}");
+    assert!(edp_resp.contains(r#""objective":"edp""#), "{edp_resp}");
+    let j = Json::parse(&edp_resp).unwrap();
+    let edp_t = j.get("pred_time_s").unwrap().as_f64().unwrap();
+    assert!(edp_t <= opt.pred_time_s, "EDP argmin must not be slower");
+    // A malformed objective is a 400-style error.
+    let bad = r#"{"app":"synthapp","input":2,"kind":"optimize","objective":"warp:9","v":1}"#;
+    assert_eq!(line_code(&request_once(&addr, bad).unwrap()), Some(400));
+    // An unsatisfiable cap is a 409, like infeasible constraints.
+    let capped = r#"{"app":"synthapp","input":2,"kind":"optimize","objective":"cap:0.001","v":1}"#;
+    assert_eq!(line_code(&request_once(&addr, capped).unwrap()), Some(409));
+
+    handle.stop();
+    daemon.join().unwrap();
+}
+
+#[test]
 fn same_seed_loadgen_transcripts_are_byte_identical() {
     let dir = TempDir::new().unwrap();
     let cache = ModelCache::open(dir.path()).unwrap();
