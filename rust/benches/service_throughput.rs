@@ -4,11 +4,17 @@
 //!
 //! 1. single-request round-trip latency over one persistent connection
 //!    (the `Bench` harness's mean/p50/p95);
-//! 2. a full deterministic loadgen run, reporting requests/sec and
-//!    p50/p95/p99 so future PRs can optimize the hot path against a
-//!    pinned baseline.
+//! 2. full deterministic loadgen runs — closed-loop, pipelined+batched,
+//!    and oversubscribed (4x more connections than workers) — reporting
+//!    requests/sec and p50/p95/p99 so future PRs optimize the hot path
+//!    against a pinned baseline.
 //!
-//! `ECOPT_BENCH_QUICK=1` (CI smoke) shrinks both.
+//! Results are also written to `BENCH_service.json` (override the path
+//! with `ECOPT_BENCH_JSON`) in the stable `ecopt-bench-v1` schema; the
+//! `service-smoke` CI job archives it and warns on req/s regressions
+//! beyond noise (ROADMAP item 5, seeded by ISSUE 6).
+//!
+//! `ECOPT_BENCH_QUICK=1` (CI smoke) shrinks everything.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -106,26 +112,51 @@ fn main() {
     drop(reader);
     drop(stream);
 
-    // 2. Loadgen throughput (requests/sec + tail latency baseline).
-    let opts = LoadgenOptions {
+    // 2. Loadgen throughput in three transports (requests/sec + tail
+    // latency baselines). The same seed drives all three, so the work
+    // is identical — only the transport differs.
+    let base = LoadgenOptions {
         addr: addr.to_string(),
         requests: if quick { 120 } else { 1000 },
         connections: 4,
         seed: 0xBE7C,
+        ..Default::default()
     };
-    let outcome = run_loadgen(&opts).unwrap();
-    assert_eq!(outcome.shed, 0, "bench load must not shed");
-    assert_eq!(outcome.errors, 0, "bench load must not error");
-    println!(
-        "service_throughput/loadgen_{}req_4conn         {:.1} req/s  p50 {} us  p95 {} us  p99 {} us  max {} us",
-        outcome.requests,
-        outcome.rps,
-        outcome.p50_us,
-        outcome.p95_us,
-        outcome.p99_us,
-        outcome.max_us
-    );
+    let cases = [
+        ("closed_loop_4conn", base.clone()),
+        (
+            "pipelined_4conn_p8_b16",
+            LoadgenOptions {
+                pipeline: 8,
+                batch: 16,
+                ..base.clone()
+            },
+        ),
+        (
+            "oversub_16conn_p4",
+            LoadgenOptions {
+                connections: 16, // 4x the daemon's 4 workers
+                pipeline: 4,
+                ..base.clone()
+            },
+        ),
+    ];
+    for (name, opts) in &cases {
+        let outcome = run_loadgen(opts).unwrap();
+        assert_eq!(outcome.shed, 0, "bench load must not shed ({name})");
+        assert_eq!(outcome.errors, 0, "bench load must not error ({name})");
+        println!(
+            "service_throughput/loadgen_{name}    {:.1} req/s  p50 {} us  p95 {} us  p99 {} us  max {} us",
+            outcome.rps, outcome.p50_us, outcome.p95_us, outcome.p99_us, outcome.max_us
+        );
+        b.metric(&format!("loadgen_{name}_rps"), outcome.rps);
+        b.metric(&format!("loadgen_{name}_p99_us"), outcome.p99_us as f64);
+    }
 
     handle.stop();
     daemon.join().unwrap();
+
+    let out = std::env::var("ECOPT_BENCH_JSON").unwrap_or_else(|_| "BENCH_service.json".into());
+    b.write_json(std::path::Path::new(&out)).unwrap();
+    println!("wrote {out}");
 }

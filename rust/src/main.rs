@@ -216,15 +216,21 @@ const COMMANDS: &[CmdSpec] = &[
     CmdSpec {
         name: "serve",
         usage: "USAGE: ecopt serve [--addr HOST:PORT] [--workers N] [--queue N]\n\
-                       [--shards N] [--budget-mb MB] [--cache-dir DIR] [--no-cache]\n\n\
-                Run ecoptd, the energy-advisor daemon (default 127.0.0.1:4017).\n\
-                Models are warm-loaded from the persistent cache (--cache-dir,\n\
-                default $ECOPT_CACHE_DIR or .ecopt-cache; --no-cache serves from\n\
-                memory only) into an N-shard LRU registry bounded by --budget-mb.\n\
-                Connections beyond --queue get an immediate 503-style response.\n\
-                Protocol: one JSON request per line, one response line each —\n\
-                see `ecopt help query` for the request kinds.",
-        value_flags: &["addr", "workers", "queue", "shards", "budget-mb", "cache-dir"],
+                       [--max-line-kb KB] [--shards N] [--budget-mb MB]\n\
+                       [--cache-dir DIR] [--no-cache]\n\n\
+                Run ecoptd, the energy-advisor daemon (default 127.0.0.1:4017):\n\
+                a non-blocking reactor driving --workers dispatch threads, so\n\
+                idle connections cost nothing. Models are warm-loaded from the\n\
+                persistent cache (--cache-dir, default $ECOPT_CACHE_DIR or\n\
+                .ecopt-cache; --no-cache serves from memory only) into an\n\
+                N-shard LRU registry bounded by --budget-mb. Connections beyond\n\
+                --queue concurrent get an immediate 503-style response; request\n\
+                lines over --max-line-kb get a 400 and the connection closes.\n\
+                Protocol: one JSON request per line, one response line each\n\
+                (batching negotiable) — see `ecopt help query` for the kinds.",
+        value_flags: &[
+            "addr", "workers", "queue", "max-line-kb", "shards", "budget-mb", "cache-dir",
+        ],
         bool_flags: &["no-cache"],
         max_positionals: 0,
         input_alias: false,
@@ -255,15 +261,21 @@ const COMMANDS: &[CmdSpec] = &[
     CmdSpec {
         name: "loadgen",
         usage: "USAGE: ecopt loadgen [--addr HOST:PORT] [--requests N]\n\
-                       [--connections N] [--seed S] [--quick]\n\
-                       [--out FILE] [--report FILE] [--stats FILE]\n\n\
+                       [--connections N] [--pipeline W] [--batch K] [--seed S]\n\
+                       [--quick] [--out FILE] [--report FILE] [--stats FILE]\n\n\
                 Deterministic load generator: a seeded predict/optimize/registry\n\
                 mix over the daemon's loaded models. Two runs with the same seed\n\
                 against the same registry state produce BYTE-IDENTICAL\n\
-                transcripts (--out). --report writes the throughput/latency\n\
-                report (markdown), --stats a JSON summary; --quick is the CI\n\
-                smoke sizing.",
-        value_flags: &["addr", "requests", "connections", "seed", "out", "report", "stats"],
+                transcripts (--out) — including across --pipeline depths (W\n\
+                requests in flight per connection, default 1) and --batch sizes\n\
+                (negotiate K-response envelopes, default 0 = off; envelopes are\n\
+                unwrapped before the transcript is built). --report writes the\n\
+                throughput/latency report (markdown), --stats a JSON summary;\n\
+                --quick is the CI smoke sizing.",
+        value_flags: &[
+            "addr", "requests", "connections", "pipeline", "batch", "seed", "out", "report",
+            "stats",
+        ],
         bool_flags: &["quick"],
         max_positionals: 0,
         input_alias: false,
@@ -734,6 +746,9 @@ fn main() -> anyhow::Result<()> {
             }
             svc.workers = args.num("workers", svc.workers);
             svc.queue_cap = args.num("queue", svc.queue_cap);
+            if let Some(kb) = args.opt_num::<usize>("max-line-kb") {
+                svc.max_line_bytes = kb.saturating_mul(1024).max(1);
+            }
             svc.shards = args.num("shards", svc.shards);
             if let Some(mb) = args.opt_num::<usize>("budget-mb") {
                 svc.byte_budget = mb.saturating_mul(1024 * 1024).max(1);
@@ -764,8 +779,8 @@ fn main() -> anyhow::Result<()> {
             );
             let rep = server.run()?;
             eprintln!(
-                "ecoptd stopped: served {} request(s), {} shed, {} errors",
-                rep.served, rep.shed, rep.errors
+                "ecoptd stopped: served {} request(s), {} shed ({} shed-writes failed), {} errors",
+                rep.served, rep.shed, rep.shed_write_failures, rep.errors
             );
         }
         "query" => {
@@ -831,6 +846,8 @@ fn main() -> anyhow::Result<()> {
             }
             opts.requests = args.num("requests", opts.requests);
             opts.connections = args.num("connections", opts.connections);
+            opts.pipeline = args.num("pipeline", opts.pipeline);
+            opts.batch = args.num("batch", opts.batch);
             opts.seed = args.num("seed", opts.seed);
             let outcome = run_loadgen(&opts)?;
             if let Some(path) = args.get("out") {

@@ -19,6 +19,17 @@
 //! generator twice and `cmp`-ing the transcripts. Latency and
 //! requests/sec live only in the throughput report, outside the
 //! transcript.
+//!
+//! # Pipelining and batching (ISSUE 6)
+//!
+//! [`LoadgenOptions::pipeline`] keeps up to W requests in flight per
+//! connection (W = 1 is the classic request/response lockstep);
+//! [`LoadgenOptions::batch`] negotiates response batching with the
+//! daemon and unwraps the returned envelopes back into individual
+//! response lines. Neither knob is recorded in the transcript header
+//! and envelope unwrapping is byte-faithful, so the SAME seed yields
+//! the SAME transcript bytes whatever the pipeline depth or batch size
+//! — which is how the tests pin the reactor's v1 compatibility.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
@@ -26,7 +37,7 @@ use std::time::{Duration, Instant};
 
 use crate::config::Mhz;
 use crate::energy::{Constraints, Objective};
-use crate::service::protocol::{line_code, line_is_ok, Request, CODE_OVERLOADED};
+use crate::service::protocol::{line_code, line_is_ok, unwrap_batch, Request, CODE_OVERLOADED};
 use crate::service::SERVICE_SEED_DOMAIN;
 use crate::util::json::Json;
 use crate::util::pool::WorkerPool;
@@ -44,6 +55,13 @@ pub struct LoadgenOptions {
     pub connections: usize,
     /// Mix seed (domain-separated under [`SERVICE_SEED_DOMAIN`]).
     pub seed: u64,
+    /// Requests kept in flight per connection (clamped to >= 1);
+    /// 1 = lockstep request/response, the pre-reactor behavior.
+    pub pipeline: usize,
+    /// Negotiated response-envelope size; 0 = no batching. Envelopes
+    /// are unwrapped before the transcript is built, so the transcript
+    /// bytes do not depend on this knob.
+    pub batch: usize,
 }
 
 impl Default for LoadgenOptions {
@@ -53,6 +71,8 @@ impl Default for LoadgenOptions {
             requests: 400,
             connections: 4,
             seed: 0xEC0_97,
+            pipeline: 1,
+            batch: 0,
         }
     }
 }
@@ -239,21 +259,56 @@ pub fn run_loadgen(opts: &LoadgenOptions) -> Result<LoadgenOutcome> {
     // keyed by index so the merged transcript is scheduling-independent.
     let lines_ref = &lines;
     let addr = opts.addr.as_str();
+    let window = opts.pipeline.max(1);
+    let batch = opts.batch;
     let started = Instant::now();
     let per_conn: Vec<Vec<(usize, String, u64)>> =
         WorkerPool::new(conns).try_run(conns, |c| {
             let mut stream = TcpStream::connect(addr)?;
             stream.set_read_timeout(Some(Duration::from_secs(30)))?;
             let mut reader = BufReader::new(stream.try_clone()?);
-            let mut out = Vec::new();
-            let mut i = c;
-            while i < n {
-                let t0 = Instant::now();
-                stream.write_all(lines_ref[i].as_bytes())?;
+            if batch > 0 {
+                // Opt in to response batching; the acknowledgement is a
+                // plain line (it answers under the pre-negotiation mode)
+                // and is not part of the transcript.
+                let neg = Request::Negotiate { batch }.to_line()?;
+                stream.write_all(neg.as_bytes())?;
                 stream.write_all(b"\n")?;
-                let resp = read_response_line(&mut reader)?;
-                out.push((i, resp, t0.elapsed().as_micros() as u64));
-                i += conns;
+                let ack = read_response_line(&mut reader)?;
+                if !line_is_ok(&ack) {
+                    return Err(Error::Data(format!("batch negotiation failed: {ack}")));
+                }
+            }
+            // This connection's request indices, in send order. The
+            // daemon answers one connection's requests in order, so
+            // responses re-attach to indices positionally — also when
+            // several come back inside one envelope.
+            let idxs: Vec<usize> = (c..n).step_by(conns).collect();
+            let mut sent_at: Vec<Instant> = Vec::with_capacity(idxs.len());
+            let mut out = Vec::with_capacity(idxs.len());
+            let mut sent = 0usize;
+            while out.len() < idxs.len() {
+                while sent < idxs.len() && sent - out.len() < window {
+                    stream.write_all(lines_ref[idxs[sent]].as_bytes())?;
+                    stream.write_all(b"\n")?;
+                    sent_at.push(Instant::now());
+                    sent += 1;
+                }
+                let line = read_response_line(&mut reader)?;
+                let resps = match unwrap_batch(&line)? {
+                    Some(unwrapped) => unwrapped,
+                    None => vec![line],
+                };
+                for resp in resps {
+                    let k = out.len();
+                    if k >= sent {
+                        return Err(Error::Data(
+                            "daemon sent more responses than requests".into(),
+                        ));
+                    }
+                    let us = sent_at[k].elapsed().as_micros() as u64;
+                    out.push((idxs[k], resp, us));
+                }
             }
             Ok(out)
         })?;

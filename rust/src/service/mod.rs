@@ -15,9 +15,13 @@
 //!   key digest, LRU eviction under a byte budget, memoized `optimize`
 //!   consults per `(key, input, constraint-set)` (the same memoization
 //!   discipline `EcoptGovernor` applies per regime);
-//! * [`server`] — accept loop + worker fan-out on the existing
-//!   [`crate::util::pool::WorkerPool`], bounded connection queue with
-//!   503-style load shedding so the daemon degrades instead of stalling;
+//! * [`server`] — a std-only non-blocking reactor (ISSUE 6): one
+//!   readiness-polling tick thread owns every socket while CPU-bound
+//!   dispatch fans out over the existing
+//!   [`crate::util::pool::WorkerPool`] through a
+//!   [`crate::util::pool::TaskQueue`] pair, with a concurrent-connection
+//!   cap and 503-style load shedding so the daemon degrades instead of
+//!   stalling, and negotiated response batching on top;
 //! * [`loadgen`] — the deterministic load generator (`ecopt loadgen`):
 //!   a seeded request mix over the registry's models under
 //!   [`SERVICE_SEED_DOMAIN`], producing a byte-reproducible transcript
@@ -50,12 +54,20 @@ pub struct ServiceConfig {
     /// Bind address; port 0 asks the OS for an ephemeral port (tests and
     /// benches read it back via [`EcoptServer::local_addr`]).
     pub addr: String,
-    /// Request workers; 0 = one per available hardware thread.
+    /// Dispatch workers; 0 = one per available hardware thread. Since
+    /// the reactor rewrite workers are pure CPU — idle connections cost
+    /// none of them.
     pub workers: usize,
-    /// Bounded accept-queue depth: connections arriving while the queue
-    /// is full get an immediate 503-style response instead of stalling
-    /// the daemon.
+    /// Max concurrent (non-shed) connections: a connection arriving
+    /// while this many are open gets an immediate 503-style response
+    /// and is closed instead of stalling the daemon. (Pre-reactor this
+    /// bounded the accept queue; the reactor has no accept queue, so
+    /// the cap moved to live connections — same shedding contract.)
     pub queue_cap: usize,
+    /// Longest accepted request line in bytes; a longer line (or an
+    /// unterminated stream that outgrows it — slow-loris) gets one
+    /// 400-style response and the connection is closed.
+    pub max_line_bytes: usize,
     /// Registry shard count (clamped to >= 1).
     pub shards: usize,
     /// Registry LRU byte budget across all shards.
@@ -70,7 +82,8 @@ impl Default for ServiceConfig {
         ServiceConfig {
             addr: "127.0.0.1:4017".to_string(),
             workers: 0,
-            queue_cap: 64,
+            queue_cap: 1024,
+            max_line_bytes: 256 * 1024,
             shards: 8,
             byte_budget: 64 * 1024 * 1024,
             cache_dir: None,

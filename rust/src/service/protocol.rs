@@ -33,6 +33,27 @@
 //! byte-identical to the pre-frontier wire behaviour (pinned by
 //! `tests/service.rs`); a non-energy objective is echoed back in the
 //! response so transcripts stay self-describing.
+//!
+//! # Response batching (ISSUE 6, negotiated)
+//!
+//! A client may send `{"v":1,"kind":"negotiate","batch":N}` (N in
+//! `1..=`[`MAX_NEGOTIATED_BATCH`]; `0` turns batching back off). After
+//! the acknowledgement, the daemon may coalesce the responses to a
+//! pipelined burst of requests into **batch envelope** lines
+//!
+//! ```text
+//! {"kind":"batch","n":K,"ok":true,"r":[<resp>,…],"v":1}
+//! ```
+//!
+//! holding `K <= N` ordinary response objects in request order — one
+//! write and one client-side read for K requests. Envelope *grouping*
+//! depends on arrival timing and is deliberately NOT deterministic;
+//! the embedded responses are byte-identical to what the un-batched
+//! protocol would have produced, so unwrapping restores the exact v1
+//! byte stream (the property `ecopt loadgen --batch` relies on).
+//! Absent negotiation nothing changes: one response line per request,
+//! byte-identical to protocol v1 — pinned by the same-seed transcript
+//! tests.
 
 use crate::config::Mhz;
 use crate::energy::{Constraints, Objective};
@@ -41,6 +62,12 @@ use crate::{Error, Result};
 
 /// Wire protocol version; bump on incompatible schema changes.
 pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Largest per-envelope response count a client may negotiate (also the
+/// daemon's internal dispatch-batch ceiling): big enough to amortize
+/// syscalls and JSON framing, small enough to bound per-envelope memory
+/// and head-of-line latency.
+pub const MAX_NEGOTIATED_BATCH: usize = 64;
 
 /// Malformed request (bad JSON, wrong version, missing fields).
 pub const CODE_BAD_REQUEST: u64 = 400;
@@ -103,6 +130,13 @@ pub enum Request {
     Registry,
     /// Service counters.
     Stats,
+    /// Opt in to response batching on this connection (see the module
+    /// docs); `batch: 0` opts back out.
+    Negotiate {
+        /// Requested envelope size, clamped by the daemon to
+        /// [`MAX_NEGOTIATED_BATCH`]; 0 disables batching again.
+        batch: usize,
+    },
     /// Graceful stop.
     Shutdown,
 }
@@ -117,6 +151,7 @@ impl Request {
             Request::Status { .. } => "status",
             Request::Registry => "registry",
             Request::Stats => "stats",
+            Request::Negotiate { .. } => "negotiate",
             Request::Shutdown => "shutdown",
         }
     }
@@ -179,6 +214,7 @@ impl Request {
                 }
             }
             Request::Status { job } => fields.push(("job", Json::Num(*job as f64))),
+            Request::Negotiate { batch } => fields.push(("batch", Json::Num(*batch as f64))),
             Request::Registry | Request::Stats | Request::Shutdown => {}
         }
         Json::obj(fields)
@@ -251,6 +287,9 @@ impl Request {
             }),
             "registry" => Ok(Request::Registry),
             "stats" => Ok(Request::Stats),
+            "negotiate" => Ok(Request::Negotiate {
+                batch: j.get("batch")?.as_usize()?,
+            }),
             "shutdown" => Ok(Request::Shutdown),
             other => Err(Error::Json(format!("unknown request kind '{other}'"))),
         }
@@ -371,6 +410,55 @@ pub fn line_code(line: &str) -> Option<u64> {
     j.opt("code")?.as_u64().ok()
 }
 
+/// Build one batch envelope line around `responses` (each a complete
+/// response object WITHOUT its newline). The envelope is assembled by
+/// string splicing — the embedded responses were produced by the
+/// canonical writer, and the envelope's own keys are emitted in sorted
+/// order (`kind` < `n` < `ok` < `r` < `v`), so the result is exactly
+/// what `Json::parse(..).dump()` would return: one byte representation,
+/// like every other protocol message (locked by a unit test below).
+///
+/// Callers must pass at least one response; an empty envelope is never
+/// put on the wire.
+pub fn batch_envelope(responses: &[String]) -> String {
+    debug_assert!(!responses.is_empty(), "empty batch envelope");
+    let body_len: usize = responses.iter().map(|r| r.len() + 1).sum();
+    let mut out = String::with_capacity(body_len + 48);
+    out.push_str("{\"kind\":\"batch\",\"n\":");
+    out.push_str(&responses.len().to_string());
+    out.push_str(",\"ok\":true,\"r\":[");
+    for (i, r) in responses.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(r);
+    }
+    out.push_str("],\"v\":1}");
+    out
+}
+
+/// If `line` is a batch envelope, re-serialize its `K` embedded
+/// responses back into individual response lines (request order). The
+/// canonical writer guarantees the round-trip is byte-faithful: every
+/// embedded response came out of the same sorted-key/exact-float
+/// writer, so parse-then-dump reproduces it exactly. Returns `None`
+/// for ordinary (non-envelope) lines; `Err` for a malformed envelope.
+pub fn unwrap_batch(line: &str) -> Result<Option<Vec<String>>> {
+    if !line.starts_with("{\"kind\":\"batch\"") {
+        return Ok(None);
+    }
+    let j = Json::parse(line)?;
+    let n = j.get("n")?.as_usize()?;
+    let items = j.get("r")?.as_arr()?;
+    if items.len() != n {
+        return Err(Error::Json(format!(
+            "batch envelope count mismatch: n={n} but {} responses",
+            items.len()
+        )));
+    }
+    items.iter().map(|r| r.dump()).collect::<Result<Vec<_>>>().map(Some)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -425,6 +513,8 @@ mod tests {
             Request::Status { job: 7 },
             Request::Registry,
             Request::Stats,
+            Request::Negotiate { batch: 16 },
+            Request::Negotiate { batch: 0 },
             Request::Shutdown,
         ];
         for r in reqs {
@@ -491,6 +581,40 @@ mod tests {
             assert!(is_err_line(&line), "{line}");
             assert!(!line_is_ok(&line), "{line}");
         }
+    }
+
+    #[test]
+    fn batch_envelope_is_canonical_and_unwraps_byte_faithfully() {
+        let responses = vec![
+            ok_line(vec![("kind", Json::Str("predict".into())), ("x", Json::Num(1.25))]),
+            err_line(CODE_NOT_FOUND, "no model"),
+            ok_line(vec![
+                ("arr", Json::Arr(vec![Json::Num(1.0), Json::Num(-0.5)])),
+                ("kind", Json::Str("registry".into())),
+            ]),
+        ];
+        let env = batch_envelope(&responses);
+        assert!(!env.contains('\n'));
+        // The spliced envelope is EXACTLY the canonical writer's byte
+        // form — proving the manual construction stays in-protocol.
+        assert_eq!(Json::parse(&env).unwrap().dump().unwrap(), env);
+        assert!(line_is_ok(&env), "envelopes are ok-lines");
+        assert!(!is_err_line(&env));
+        // Unwrapping restores every response byte for byte, in order.
+        let back = unwrap_batch(&env).unwrap().expect("is an envelope");
+        assert_eq!(back, responses);
+        // Ordinary lines are not envelopes; a count mismatch is an error.
+        assert_eq!(unwrap_batch(&responses[0]).unwrap(), None);
+        let torn = env.replacen("\"n\":3", "\"n\":2", 1);
+        assert!(unwrap_batch(&torn).is_err());
+    }
+
+    #[test]
+    fn negotiate_parses_and_requires_batch_field() {
+        let req = Request::parse(r#"{"batch":8,"kind":"negotiate","v":1}"#).unwrap();
+        assert_eq!(req, Request::Negotiate { batch: 8 });
+        assert!(Request::parse(r#"{"kind":"negotiate","v":1}"#).is_err());
+        assert!(Request::parse(r#"{"batch":-1,"kind":"negotiate","v":1}"#).is_err());
     }
 
     #[test]

@@ -1,33 +1,71 @@
-//! The `ecoptd` daemon: accept loop + worker fan-out on the existing
-//! [`WorkerPool`], a bounded connection queue with 503-style load
-//! shedding, and async training jobs.
+//! The `ecoptd` daemon: a std-only **non-blocking reactor** (ISSUE 6).
 //!
 //! # Threading model
 //!
-//! `run` drives one [`WorkerPool`] of `workers + 1` scoped jobs: job 0 is
-//! the accept loop, jobs 1..=workers are request workers. Accepted
-//! connections go through a bounded queue (`Mutex<VecDeque>` + condvar);
-//! when the queue is full the acceptor writes one 503-style response and
-//! closes — the daemon degrades by refusing work it cannot queue instead
-//! of stalling every client behind an unbounded backlog. Workers own a
-//! connection for its whole lifetime (line-delimited requests pipeline
-//! over it), so per-request cost is one registry read-lock plus the model
-//! math; `train` is the exception and runs on its own detached-until-join
-//! thread with a job id the client polls via `status`.
+//! `run` drives one [`WorkerPool`] of `workers + 1` scoped jobs: job 0
+//! is the **reactor** — the only thread that touches sockets — and jobs
+//! `1..=workers` are **dispatch workers** that do the CPU-bound model
+//! math. The two sides meet at a pair of [`TaskQueue`]s:
+//!
+//! ```text
+//!             submit: Batch (token, lines, mode)
+//!   reactor ────────────────────────────────────▶ dispatch workers
+//!      ▲                                                 │
+//!      └───────────── done: BatchDone ────────────────────┘
+//!            (token, coalesced bytes, flags)
+//! ```
+//!
+//! The listener and every connection socket run `set_nonblocking(true)`;
+//! the reactor loops a **readiness-polling tick**: accept burst → drain
+//! completions → per-connection read/dispatch/write → lifecycle. Each
+//! connection is a small state machine (reading lines → dispatching →
+//! writing) with explicit partial-read (`acc`) and partial-write
+//! (`out`/`out_pos`) buffers, so thousands of idle connections cost
+//! zero workers and zero parked threads — the reactor skims them once
+//! per tick and moves on. When a tick makes no progress the reactor
+//! yields, then sleeps briefly, so an idle daemon is quiet.
+//!
+//! # Pipelining and batching
+//!
+//! Complete lines drained in one readiness event are dispatched as ONE
+//! batch (at most [`MAX_NEGOTIATED_BATCH`] lines) and their responses
+//! come back as one coalesced write. At most one batch per connection
+//! is in flight, which is what keeps responses in request order without
+//! any sequencing machinery. Without negotiation the coalesced bytes
+//! are exactly the v1 one-line-per-response stream (pinned by the
+//! same-seed transcript tests); after a `negotiate` request the worker
+//! wraps response groups in batch envelopes (see [`protocol`]).
+//!
+//! # Overload and abuse handling
+//!
+//! * more than `queue_cap` concurrent connections → the newcomer gets
+//!   one 503-style line and is closed (`shed` counted; a shed response
+//!   that cannot be written within the drain grace is counted in
+//!   `shed_write_failures` instead of being dropped silently);
+//! * a request line longer than `max_line_bytes` → one 400-style line,
+//!   then close (slow-loris cannot grow `acc` without bound);
+//! * a line that is not valid UTF-8 → 400-style response (never the
+//!   old lossy U+FFFD mangling), connection stays usable;
+//! * a client that stops reading has its dispatch paused once its
+//!   output buffer passes [`MAX_OUT_BUFFER`] — per-connection memory is
+//!   bounded in both directions.
 //!
 //! # Shutdown
 //!
-//! A `shutdown` request answers first, then sets the stop flag, wakes
-//! every queue waiter, and self-connects once to unblock `accept`. The
-//! acceptor drains, workers finish queued connections, and `run` joins
-//! outstanding training jobs before returning its [`ServiceReport`].
+//! A `shutdown` request (or [`ServerHandle::stop`]) sets the stop flag;
+//! the reactor stops accepting, closes idle connections, finishes
+//! writing whatever is still queued (bounded by a drain grace), then
+//! exits and closes the submit queue so the dispatch workers drain and
+//! return. `run` joins outstanding training jobs before returning its
+//! [`ServiceReport`]. No self-connect is needed anymore: the reactor
+//! never blocks in `accept`.
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::arch::{profile_by_name, ArchProfile};
 use crate::config::ExperimentConfig;
@@ -35,20 +73,44 @@ use crate::coordinator::Coordinator;
 use crate::energy::{config_grid_arch, predict_point};
 use crate::persist::{ModelCache, ModelKey};
 use crate::service::protocol::{
-    self, err_line, ok_line, Request, CODE_BAD_REQUEST, CODE_INFEASIBLE, CODE_INTERNAL,
-    CODE_NOT_FOUND, CODE_OVERLOADED,
+    self, batch_envelope, err_line, ok_line, Request, CODE_BAD_REQUEST, CODE_INFEASIBLE,
+    CODE_INTERNAL, CODE_NOT_FOUND, CODE_OVERLOADED, MAX_NEGOTIATED_BATCH,
 };
 use crate::service::registry::ModelRegistry;
 use crate::service::ServiceConfig;
 use crate::util::json::Json;
-use crate::util::pool::WorkerPool;
+use crate::util::pool::{TaskQueue, WorkerPool};
 use crate::workloads::app_by_name;
 use crate::Result;
 
 /// Request kinds, in counter order.
-const KIND_NAMES: [&str; 7] = [
-    "predict", "optimize", "train", "status", "registry", "stats", "shutdown",
+const KIND_NAMES: [&str; 8] = [
+    "predict", "optimize", "train", "status", "registry", "stats", "negotiate", "shutdown",
 ];
+
+/// Per-connection output-buffer bound: once a client lets this many
+/// unread response bytes pile up, dispatching (and reading) for that
+/// connection pauses until it drains — back-pressure instead of
+/// unbounded growth.
+pub const MAX_OUT_BUFFER: usize = 4 * 1024 * 1024;
+
+/// Read-chunk size of the reactor's shared scratch buffer.
+const READ_CHUNK: usize = 16 * 1024;
+
+/// Complete-but-undispatched lines a connection may hold before the
+/// reactor stops reading from it (natural pipelining back-pressure).
+const MAX_PENDING_LINES: usize = MAX_NEGOTIATED_BATCH * 4;
+
+/// How long a closing connection (shed response, oversized-line 400,
+/// post-shutdown flush) may take to drain its last bytes before the
+/// reactor gives up on it.
+const DRAIN_GRACE: Duration = Duration::from_secs(5);
+
+/// Idle ticks spent yielding before the reactor starts sleeping.
+const IDLE_TICKS_BEFORE_SLEEP: u32 = 64;
+
+/// Reactor sleep once a quiet period is established.
+const IDLE_SLEEP: Duration = Duration::from_micros(500);
 
 fn kind_index(kind: &str) -> usize {
     KIND_NAMES.iter().position(|k| *k == kind).unwrap_or(0)
@@ -76,10 +138,9 @@ impl JobState {
 
 struct ServerState {
     shutdown: AtomicBool,
-    queue: Mutex<VecDeque<TcpStream>>,
-    queue_cv: Condvar,
     served: AtomicU64,
     shed: AtomicU64,
+    shed_write_failures: AtomicU64,
     errors: AtomicU64,
     by_kind: [AtomicU64; KIND_NAMES.len()],
     jobs: Mutex<BTreeMap<u64, JobState>>,
@@ -104,8 +165,12 @@ struct ServiceCtx {
 pub struct ServiceReport {
     /// Total requests answered (including error responses).
     pub served: u64,
-    /// Connections refused with a 503-style response (queue full).
+    /// Connections refused with a 503-style response (cap reached).
     pub shed: u64,
+    /// Shed responses that could NOT be delivered (write error, or the
+    /// drain grace expired with bytes still queued) — the old code
+    /// dropped these errors invisibly.
+    pub shed_write_failures: u64,
     /// Error responses sent.
     pub errors: u64,
     /// (kind, requests) per request kind, in protocol order.
@@ -160,10 +225,9 @@ impl EcoptServer {
             registry,
             state: ServerState {
                 shutdown: AtomicBool::new(false),
-                queue: Mutex::new(VecDeque::new()),
-                queue_cv: Condvar::new(),
                 served: AtomicU64::new(0),
                 shed: AtomicU64::new(0),
+                shed_write_failures: AtomicU64::new(0),
                 errors: AtomicU64::new(0),
                 by_kind: std::array::from_fn(|_| AtomicU64::new(0)),
                 jobs: Mutex::new(BTreeMap::new()),
@@ -206,13 +270,20 @@ impl EcoptServer {
         } else {
             self.ctx.svc.workers
         };
+        self.listener.set_nonblocking(true)?;
         let ctx = &self.ctx;
         let listener = &self.listener;
+        let submit: TaskQueue<Batch> = TaskQueue::new();
+        let done: TaskQueue<BatchDone> = TaskQueue::new();
+        let submit_ref = &submit;
+        let done_ref = &done;
         WorkerPool::new(workers + 1).run(workers + 1, |i| {
             if i == 0 {
-                accept_loop(listener, ctx);
+                reactor_loop(listener, ctx, submit_ref, done_ref);
+                // Reactor gone: let the dispatch workers drain and exit.
+                submit_ref.close();
             } else {
-                worker_loop(ctx);
+                dispatch_worker(ctx, submit_ref, done_ref);
             }
         });
         let handles: Vec<_> = {
@@ -226,6 +297,7 @@ impl EcoptServer {
         Ok(ServiceReport {
             served: s.served.load(Ordering::Relaxed),
             shed: s.shed.load(Ordering::Relaxed),
+            shed_write_failures: s.shed_write_failures.load(Ordering::Relaxed),
             errors: s.errors.load(Ordering::Relaxed),
             by_kind: KIND_NAMES
                 .iter()
@@ -236,114 +308,481 @@ impl EcoptServer {
     }
 }
 
-/// Set the stop flag, wake queue waiters, and unblock `accept` with one
-/// self-connection (idempotent).
+/// Set the stop flag (idempotent). The reactor polls it every tick, so
+/// no wake-up connection is needed.
 fn initiate_shutdown(ctx: &ServiceCtx) {
-    if ctx.state.shutdown.swap(true, Ordering::SeqCst) {
+    ctx.state.shutdown.store(true, Ordering::SeqCst);
+}
+
+/// One batch of complete request lines from one connection, handed to a
+/// dispatch worker.
+struct Batch {
+    token: u64,
+    lines: Vec<Vec<u8>>,
+    /// Envelope size negotiated on the connection when this batch was
+    /// cut (None = plain v1 lines).
+    mode: Option<usize>,
+}
+
+/// A dispatch worker's finished batch: coalesced wire bytes plus the
+/// connection-level effects the reactor must apply.
+struct BatchDone {
+    token: u64,
+    bytes: Vec<u8>,
+    /// `Some(new_mode)` when the batch contained a `negotiate` request.
+    set_mode: Option<Option<usize>>,
+    stop_daemon: bool,
+    close_conn: bool,
+}
+
+/// Per-connection state machine: reading lines → dispatching → writing,
+/// with explicit partial-read and partial-write buffers.
+struct Conn {
+    stream: TcpStream,
+    /// Partial-read buffer: the unterminated tail of the byte stream.
+    acc: Vec<u8>,
+    /// Complete lines not yet dispatched.
+    pending: VecDeque<Vec<u8>>,
+    /// Partial-write buffer; `out_pos` is how much of it already went
+    /// out on a short write.
+    out: Vec<u8>,
+    out_pos: usize,
+    /// Whether a dispatch batch is in flight (at most one, which keeps
+    /// responses in request order).
+    in_flight: bool,
+    read_closed: bool,
+    close_after_write: bool,
+    /// This connection only exists to flush a 503 shed response.
+    shed: bool,
+    /// Negotiated envelope size (None = plain v1 lines).
+    mode: Option<usize>,
+    /// Drain deadline for closing connections.
+    expires: Option<Instant>,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            acc: Vec::new(),
+            pending: VecDeque::new(),
+            out: Vec::new(),
+            out_pos: 0,
+            in_flight: false,
+            read_closed: false,
+            close_after_write: false,
+            shed: false,
+            mode: None,
+            expires: None,
+        }
+    }
+
+    fn shed(stream: TcpStream, response: Vec<u8>) -> Conn {
+        Conn {
+            out: response,
+            close_after_write: true,
+            shed: true,
+            expires: Some(Instant::now() + DRAIN_GRACE),
+            ..Conn::new(stream)
+        }
+    }
+
+    /// Nothing queued in either direction and nothing in flight.
+    fn idle(&self) -> bool {
+        self.out.is_empty() && !self.in_flight && self.pending.is_empty()
+    }
+}
+
+/// Split complete lines out of `acc` into `pending` (newline stripped).
+/// Returns `true` when the max-line cap was violated — either by a
+/// complete line longer than `max_line` or by an unterminated tail that
+/// outgrew it (the slow-loris case).
+fn split_lines(acc: &mut Vec<u8>, pending: &mut VecDeque<Vec<u8>>, max_line: usize) -> bool {
+    while let Some(pos) = acc.iter().position(|&b| b == b'\n') {
+        if pos > max_line {
+            return true;
+        }
+        let mut line: Vec<u8> = acc.drain(..=pos).collect();
+        line.pop(); // the newline
+        pending.push_back(line);
+    }
+    acc.len() > max_line
+}
+
+/// What the per-connection tick decided to do with the connection.
+struct ConnAction {
+    remove: bool,
+    shed_failed: bool,
+}
+
+/// The reactor: job 0 of the pool. Owns every socket; never blocks.
+fn reactor_loop(
+    listener: &TcpListener,
+    ctx: &Arc<ServiceCtx>,
+    submit: &TaskQueue<Batch>,
+    done: &TaskQueue<BatchDone>,
+) {
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_token: u64 = 0;
+    let mut active: usize = 0; // non-shed connections
+    let mut buf = vec![0u8; READ_CHUNK];
+    let mut tokens: Vec<u64> = Vec::new();
+    let mut idle_ticks: u32 = 0;
+    let mut draining_since: Option<Instant> = None;
+
+    loop {
+        let mut progress = false;
+        let stopping = ctx.state.shutdown.load(Ordering::SeqCst);
+
+        // --- 1. accept burst -------------------------------------------
+        if !stopping {
+            loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        progress = true;
+                        if stream.set_nonblocking(true).is_err() {
+                            continue; // drop: cannot drive a blocking socket
+                        }
+                        let token = next_token;
+                        next_token += 1;
+                        if active >= ctx.svc.queue_cap {
+                            ctx.state.shed.fetch_add(1, Ordering::Relaxed);
+                            let mut line = err_line(
+                                CODE_OVERLOADED,
+                                "server overloaded: connection cap reached",
+                            )
+                            .into_bytes();
+                            line.push(b'\n');
+                            conns.insert(token, Conn::shed(stream, line));
+                        } else {
+                            active += 1;
+                            conns.insert(token, Conn::new(stream));
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => break, // transient accept failure: retry next tick
+                }
+            }
+        }
+
+        // --- 2. drain completions --------------------------------------
+        for d in done.drain() {
+            progress = true;
+            if d.stop_daemon {
+                initiate_shutdown(ctx);
+            }
+            let Some(conn) = conns.get_mut(&d.token) else {
+                continue; // the connection died while its batch ran
+            };
+            conn.in_flight = false;
+            conn.out.extend_from_slice(&d.bytes);
+            if let Some(mode) = d.set_mode {
+                conn.mode = mode;
+            }
+            if d.close_conn {
+                conn.close_after_write = true;
+                conn.expires.get_or_insert_with(|| Instant::now() + DRAIN_GRACE);
+            }
+        }
+
+        // --- 3. per-connection tick ------------------------------------
+        tokens.clear();
+        tokens.extend(conns.keys().copied());
+        for &tok in &tokens {
+            let action = {
+                let conn = conns.get_mut(&tok).expect("token maps to a live connection");
+                let mut dead = false;
+
+                // 3a. read burst (paused under back-pressure).
+                if !conn.shed
+                    && !conn.close_after_write
+                    && !conn.read_closed
+                    && conn.pending.len() < MAX_PENDING_LINES
+                    && conn.out.len() < MAX_OUT_BUFFER
+                {
+                    loop {
+                        match conn.stream.read(&mut buf) {
+                            Ok(0) => {
+                                conn.read_closed = true;
+                                break;
+                            }
+                            Ok(n) => {
+                                progress = true;
+                                conn.acc.extend_from_slice(&buf[..n]);
+                                let too_long = split_lines(
+                                    &mut conn.acc,
+                                    &mut conn.pending,
+                                    ctx.svc.max_line_bytes,
+                                );
+                                if too_long {
+                                    // Satellite fix: bounded accumulator.
+                                    // One 400, then close — a client with
+                                    // broken framing gets no more service.
+                                    ctx.state.served.fetch_add(1, Ordering::Relaxed);
+                                    ctx.state.errors.fetch_add(1, Ordering::Relaxed);
+                                    let msg = format!(
+                                        "request line exceeds the {}-byte limit",
+                                        ctx.svc.max_line_bytes
+                                    );
+                                    let mut line =
+                                        err_line(CODE_BAD_REQUEST, &msg).into_bytes();
+                                    line.push(b'\n');
+                                    conn.out.extend_from_slice(&line);
+                                    conn.close_after_write = true;
+                                    conn.expires
+                                        .get_or_insert_with(|| Instant::now() + DRAIN_GRACE);
+                                    conn.acc.clear();
+                                    conn.pending.clear();
+                                    break;
+                                }
+                                if conn.pending.len() >= MAX_PENDING_LINES
+                                    || conn.out.len() >= MAX_OUT_BUFFER
+                                {
+                                    break;
+                                }
+                            }
+                            Err(e)
+                                if matches!(
+                                    e.kind(),
+                                    std::io::ErrorKind::WouldBlock
+                                        | std::io::ErrorKind::TimedOut
+                                        | std::io::ErrorKind::Interrupted
+                                ) =>
+                            {
+                                break
+                            }
+                            Err(_) => {
+                                dead = true;
+                                break;
+                            }
+                        }
+                    }
+                }
+
+                // 3b. dispatch: cut one batch when none is in flight.
+                if !dead
+                    && !conn.in_flight
+                    && !conn.close_after_write
+                    && !conn.pending.is_empty()
+                    && conn.out.len() < MAX_OUT_BUFFER
+                {
+                    let take = conn.pending.len().min(MAX_NEGOTIATED_BATCH);
+                    let lines: Vec<Vec<u8>> = conn.pending.drain(..take).collect();
+                    conn.in_flight = true;
+                    progress = true;
+                    submit.push(Batch {
+                        token: tok,
+                        lines,
+                        mode: conn.mode,
+                    });
+                }
+
+                // 3c. write burst (partial writes resume next tick).
+                if !dead && !conn.out.is_empty() {
+                    loop {
+                        match conn.stream.write(&conn.out[conn.out_pos..]) {
+                            Ok(0) => {
+                                dead = true;
+                                break;
+                            }
+                            Ok(n) => {
+                                progress = true;
+                                conn.out_pos += n;
+                                if conn.out_pos == conn.out.len() {
+                                    conn.out.clear();
+                                    conn.out_pos = 0;
+                                    break;
+                                }
+                            }
+                            Err(e)
+                                if matches!(
+                                    e.kind(),
+                                    std::io::ErrorKind::WouldBlock
+                                        | std::io::ErrorKind::TimedOut
+                                        | std::io::ErrorKind::Interrupted
+                                ) =>
+                            {
+                                break
+                            }
+                            Err(_) => {
+                                dead = true;
+                                break;
+                            }
+                        }
+                    }
+                }
+
+                // 3d. lifecycle.
+                let flush_failed = !conn.out.is_empty();
+                let expired = matches!(conn.expires, Some(t) if Instant::now() > t);
+                if dead {
+                    ConnAction {
+                        remove: true,
+                        shed_failed: conn.shed && flush_failed,
+                    }
+                } else if conn.close_after_write && conn.out.is_empty() {
+                    ConnAction {
+                        remove: true,
+                        shed_failed: false,
+                    }
+                } else if conn.read_closed && conn.idle() {
+                    ConnAction {
+                        remove: true,
+                        shed_failed: false,
+                    }
+                } else if expired {
+                    ConnAction {
+                        remove: true,
+                        shed_failed: conn.shed && flush_failed,
+                    }
+                } else {
+                    ConnAction {
+                        remove: false,
+                        shed_failed: false,
+                    }
+                }
+            };
+            if action.remove {
+                if let Some(c) = conns.remove(&tok) {
+                    if !c.shed {
+                        active = active.saturating_sub(1);
+                    }
+                    if action.shed_failed {
+                        ctx.state.shed_write_failures.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+
+        // --- 4. shutdown drain -----------------------------------------
+        if stopping {
+            let deadline =
+                *draining_since.get_or_insert_with(Instant::now) + DRAIN_GRACE;
+            // Idle connections have nothing owed to them; close them now.
+            let before = conns.len();
+            conns.retain(|_, c| !c.idle());
+            if conns.len() != before {
+                progress = true;
+            }
+            if conns.is_empty() || Instant::now() > deadline {
+                break;
+            }
+        }
+
+        // --- 5. idle pacing --------------------------------------------
+        if progress {
+            idle_ticks = 0;
+        } else {
+            idle_ticks = idle_ticks.saturating_add(1);
+            if idle_ticks < IDLE_TICKS_BEFORE_SLEEP {
+                std::thread::yield_now();
+            } else {
+                std::thread::sleep(IDLE_SLEEP);
+            }
+        }
+    }
+}
+
+/// A dispatch worker: park on the submit queue, process batches, push
+/// completions. Exits when the reactor closes the queue.
+fn dispatch_worker(ctx: &Arc<ServiceCtx>, submit: &TaskQueue<Batch>, done: &TaskQueue<BatchDone>) {
+    while let Some(batch) = submit.pop_wait() {
+        let finished = process_batch(ctx, batch);
+        done.push(finished);
+    }
+}
+
+/// Append `group` to the wire bytes under `mode`: plain newline-
+/// terminated lines, or batch envelopes of at most `n` responses.
+fn flush_group(group: &mut Vec<String>, bytes: &mut Vec<u8>, mode: Option<usize>) {
+    if group.is_empty() {
         return;
     }
-    ctx.state.queue_cv.notify_all();
-    let _ = TcpStream::connect_timeout(&ctx.addr, Duration::from_secs(1));
-}
-
-fn accept_loop(listener: &TcpListener, ctx: &Arc<ServiceCtx>) {
-    loop {
-        match listener.accept() {
-            Ok((mut stream, _)) => {
-                if ctx.state.shutdown.load(Ordering::SeqCst) {
-                    break; // wake-up connection (or a straggler) — drop it
-                }
-                let mut q = ctx.state.queue.lock().expect("accept queue poisoned");
-                if q.len() >= ctx.svc.queue_cap {
-                    drop(q);
-                    ctx.state.shed.fetch_add(1, Ordering::Relaxed);
-                    let line = err_line(CODE_OVERLOADED, "server overloaded: accept queue full");
-                    let _ = stream.write_all(line.as_bytes());
-                    let _ = stream.write_all(b"\n");
-                    // Dropping the stream closes the shed connection.
-                } else {
-                    q.push_back(stream);
-                    drop(q);
-                    ctx.state.queue_cv.notify_one();
-                }
+    match mode {
+        None => {
+            for resp in group.iter() {
+                bytes.extend_from_slice(resp.as_bytes());
+                bytes.push(b'\n');
             }
-            Err(_) => {
-                if ctx.state.shutdown.load(Ordering::SeqCst) {
-                    break;
-                }
+        }
+        Some(n) => {
+            for chunk in group.chunks(n.max(1)) {
+                bytes.extend_from_slice(batch_envelope(chunk).as_bytes());
+                bytes.push(b'\n');
             }
         }
     }
-    // Acceptor is gone: make sure no worker keeps waiting on the queue.
-    ctx.state.queue_cv.notify_all();
+    group.clear();
 }
 
-fn worker_loop(ctx: &Arc<ServiceCtx>) {
-    loop {
-        let next = {
-            let mut q = ctx.state.queue.lock().expect("accept queue poisoned");
-            loop {
-                if let Some(s) = q.pop_front() {
-                    break Some(s);
-                }
-                if ctx.state.shutdown.load(Ordering::SeqCst) {
-                    break None;
-                }
-                q = ctx
-                    .state
-                    .queue_cv
-                    .wait(q)
-                    .expect("accept queue poisoned");
-            }
+/// Process one batch of raw request lines into coalesced wire bytes.
+fn process_batch(ctx: &Arc<ServiceCtx>, batch: Batch) -> BatchDone {
+    let mut bytes: Vec<u8> = Vec::new();
+    let mut group: Vec<String> = Vec::new();
+    let mut mode = batch.mode;
+    let mut set_mode = None;
+    let mut stop_daemon = false;
+    let mut close_conn = false;
+    for raw in &batch.lines {
+        // Satellite fix: a non-UTF-8 line is rejected with a 400-style
+        // response — never lossy-decoded into U+FFFD and "parsed".
+        let Ok(text) = std::str::from_utf8(raw) else {
+            ctx.state.served.fetch_add(1, Ordering::Relaxed);
+            ctx.state.errors.fetch_add(1, Ordering::Relaxed);
+            group.push(err_line(CODE_BAD_REQUEST, "request line is not valid UTF-8"));
+            continue;
         };
-        match next {
-            Some(stream) => handle_conn(ctx, stream),
-            None => break,
+        let line = text.trim();
+        if line.is_empty() {
+            continue;
         }
-    }
-}
-
-/// Serve one connection until EOF (line-delimited requests pipeline over
-/// it). Reads are chunked with a short timeout so a worker parked on an
-/// idle connection still notices shutdown.
-fn handle_conn(ctx: &Arc<ServiceCtx>, mut stream: TcpStream) {
-    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
-    let mut acc: Vec<u8> = Vec::new();
-    let mut buf = [0u8; 4096];
-    loop {
-        while let Some(pos) = acc.iter().position(|&b| b == b'\n') {
-            let raw: Vec<u8> = acc.drain(..=pos).collect();
-            let line_owned = String::from_utf8_lossy(&raw[..raw.len() - 1]).into_owned();
-            let line = line_owned.trim();
-            if line.is_empty() {
+        ctx.state.served.fetch_add(1, Ordering::Relaxed);
+        let req = match Request::parse(line) {
+            Ok(r) => r,
+            Err(e) => {
+                ctx.state.errors.fetch_add(1, Ordering::Relaxed);
+                group.push(err_line(CODE_BAD_REQUEST, &e.to_string()));
                 continue;
             }
-            let (resp, stop) = dispatch(ctx, line);
-            if stream.write_all(resp.as_bytes()).is_err() || stream.write_all(b"\n").is_err() {
-                return;
+        };
+        ctx.state.by_kind[kind_index(req.kind())].fetch_add(1, Ordering::Relaxed);
+        match req {
+            Request::Negotiate { batch: n } => {
+                let clamped = n.min(MAX_NEGOTIATED_BATCH);
+                let new_mode = if clamped == 0 { None } else { Some(clamped) };
+                // The acknowledgement answers under the OLD mode; the
+                // new one applies from the next response onward.
+                group.push(ok_line(vec![
+                    ("batch", Json::Num(clamped as f64)),
+                    ("kind", Json::Str("negotiate".into())),
+                ]));
+                flush_group(&mut group, &mut bytes, mode);
+                mode = new_mode;
+                set_mode = Some(new_mode);
             }
-            let _ = stream.flush();
-            if stop {
-                initiate_shutdown(ctx);
-                return;
+            Request::Shutdown => {
+                group.push(ok_line(vec![("stopping", Json::Bool(true))]));
+                stop_daemon = true;
+                close_conn = true;
+                break; // remaining lines in the batch are dropped
             }
-        }
-        match stream.read(&mut buf) {
-            Ok(0) => return, // EOF
-            Ok(n) => acc.extend_from_slice(&buf[..n]),
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-                ) =>
-            {
-                if ctx.state.shutdown.load(Ordering::SeqCst) {
-                    return;
+            other => {
+                let resp = dispatch_parsed(ctx, &other);
+                if protocol::is_err_line(&resp) {
+                    ctx.state.errors.fetch_add(1, Ordering::Relaxed);
                 }
+                group.push(resp);
             }
-            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
-            Err(_) => return,
         }
+    }
+    flush_group(&mut group, &mut bytes, mode);
+    BatchDone {
+        token: batch.token,
+        bytes,
+        set_mode,
+        stop_daemon,
+        close_conn,
     }
 }
 
@@ -357,19 +796,11 @@ fn resolve_arch(ctx: &ServiceCtx, name: Option<&str>) -> Result<ArchProfile> {
     }
 }
 
-/// Handle one request line; returns the response line (no newline) and
-/// whether the connection/daemon should stop after sending it.
-fn dispatch(ctx: &Arc<ServiceCtx>, line: &str) -> (String, bool) {
-    ctx.state.served.fetch_add(1, Ordering::Relaxed);
-    let req = match Request::parse(line) {
-        Ok(r) => r,
-        Err(e) => {
-            ctx.state.errors.fetch_add(1, Ordering::Relaxed);
-            return (err_line(CODE_BAD_REQUEST, &e.to_string()), false);
-        }
-    };
-    ctx.state.by_kind[kind_index(req.kind())].fetch_add(1, Ordering::Relaxed);
-    let (resp, stop) = match &req {
+/// Handle one parsed request; returns the response line (no newline).
+/// `negotiate` and `shutdown` are connection-level and handled by
+/// [`process_batch`] — they never reach this dispatcher.
+fn dispatch_parsed(ctx: &Arc<ServiceCtx>, req: &Request) -> String {
+    match req {
         Request::Predict {
             app,
             arch,
@@ -377,30 +808,22 @@ fn dispatch(ctx: &Arc<ServiceCtx>, line: &str) -> (String, bool) {
             f_mhz,
             cores,
             input,
-        } => (
-            handle_predict(ctx, app, arch.as_deref(), tag.as_deref(), *f_mhz, *cores, *input),
-            false,
-        ),
+        } => handle_predict(ctx, app, arch.as_deref(), tag.as_deref(), *f_mhz, *cores, *input),
         Request::Optimize {
             app,
             arch,
             tag,
             input,
             constraints,
-        } => (
-            handle_optimize(ctx, app, arch.as_deref(), tag.as_deref(), *input, constraints),
-            false,
-        ),
-        Request::Train { app, arch } => (handle_train(ctx, app, arch.as_deref()), false),
-        Request::Status { job } => (handle_status(ctx, *job), false),
-        Request::Registry => (handle_registry(ctx), false),
-        Request::Stats => (handle_stats(ctx), false),
-        Request::Shutdown => (ok_line(vec![("stopping", Json::Bool(true))]), true),
-    };
-    if protocol::is_err_line(&resp) {
-        ctx.state.errors.fetch_add(1, Ordering::Relaxed);
+        } => handle_optimize(ctx, app, arch.as_deref(), tag.as_deref(), *input, constraints),
+        Request::Train { app, arch } => handle_train(ctx, app, arch.as_deref()),
+        Request::Status { job } => handle_status(ctx, *job),
+        Request::Registry => handle_registry(ctx),
+        Request::Stats => handle_stats(ctx),
+        Request::Negotiate { .. } | Request::Shutdown => {
+            err_line(CODE_INTERNAL, "connection-level request reached the dispatcher")
+        }
     }
-    (resp, stop)
 }
 
 fn handle_predict(
@@ -693,6 +1116,10 @@ fn handle_stats(ctx: &ServiceCtx) -> String {
         ("kind", Json::Str("stats".into())),
         ("served", Json::Num(ctx.state.served.load(Ordering::Relaxed) as f64)),
         ("shed", Json::Num(ctx.state.shed.load(Ordering::Relaxed) as f64)),
+        (
+            "shed_write_failures",
+            Json::Num(ctx.state.shed_write_failures.load(Ordering::Relaxed) as f64),
+        ),
         ("errors", Json::Num(ctx.state.errors.load(Ordering::Relaxed) as f64)),
         ("by_kind", by_kind),
         (
@@ -723,4 +1150,55 @@ fn handle_stats(ctx: &ServiceCtx) -> String {
         ("queue_cap", Json::Num(ctx.svc.queue_cap as f64)),
         ("warm_arch", Json::Str(ctx.default_arch.name.clone())),
     ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_lines_extracts_in_order_and_strips_newlines() {
+        let mut acc = b"{\"a\":1}\n{\"b\":2}\npartial".to_vec();
+        let mut pending = VecDeque::new();
+        assert!(!split_lines(&mut acc, &mut pending, 1024));
+        assert_eq!(pending.len(), 2);
+        assert_eq!(pending[0], b"{\"a\":1}");
+        assert_eq!(pending[1], b"{\"b\":2}");
+        assert_eq!(acc, b"partial");
+        // The tail completes later.
+        acc.extend_from_slice(b" done\n");
+        assert!(!split_lines(&mut acc, &mut pending, 1024));
+        assert_eq!(pending[2], b"partial done");
+        assert!(acc.is_empty());
+    }
+
+    #[test]
+    fn split_lines_flags_unterminated_overlong_tail() {
+        // Slow-loris: bytes keep arriving, no newline ever does.
+        let mut acc = vec![b'x'; 100];
+        let mut pending = VecDeque::new();
+        assert!(!split_lines(&mut acc, &mut pending, 100));
+        acc.push(b'y');
+        assert!(split_lines(&mut acc, &mut pending, 100));
+        assert!(pending.is_empty());
+    }
+
+    #[test]
+    fn split_lines_flags_overlong_complete_line() {
+        // A complete line over the cap is refused even if it arrived in
+        // one read (the cap is about bounded lines, not read timing).
+        let mut acc = vec![b'x'; 200];
+        acc.push(b'\n');
+        let mut pending = VecDeque::new();
+        assert!(split_lines(&mut acc, &mut pending, 100));
+        assert!(pending.is_empty());
+    }
+
+    #[test]
+    fn kind_index_covers_all_names() {
+        for (i, k) in KIND_NAMES.iter().enumerate() {
+            assert_eq!(kind_index(k), i);
+        }
+        assert_eq!(kind_index("unknown"), 0);
+    }
 }

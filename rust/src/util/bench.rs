@@ -5,8 +5,25 @@
 //! iteration cap is hit, and prints mean / p50 / p95 / min in
 //! criterion-like one-line format. A `--quick` CLI flag (or
 //! `ECOPT_BENCH_QUICK=1`) shrinks budgets for CI smoke runs.
+//!
+//! # JSON export (ISSUE 6: the bench trajectory)
+//!
+//! [`Bench::write_json`] dumps every timed case plus any extra
+//! [`Bench::metric`] scalars into a flat, stable schema CI can archive
+//! and diff across commits:
+//!
+//! ```json
+//! {"schema":"ecopt-bench-v1","group":"...","quick":false,
+//!  "metrics":{"<case>_mean_us":…,"<case>_p50_us":…,"<case>_p95_us":…,
+//!             "<custom metric>":…}}
+//! ```
+//!
+//! Keys are flat and sorted (the canonical JSON writer), so a compare
+//! step is one `jq` expression per metric — no schema walking.
 
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 /// Statistics of one benchmark.
 #[derive(Debug, Clone)]
@@ -58,10 +75,12 @@ impl std::fmt::Display for BenchStats {
 /// Benchmark runner for one `cargo bench` target.
 pub struct Bench {
     group: String,
+    quick: bool,
     budget: Duration,
     max_iters: usize,
     min_iters: usize,
     results: Vec<BenchStats>,
+    metrics: Vec<(String, f64)>,
 }
 
 impl Bench {
@@ -78,10 +97,12 @@ impl Bench {
         println!("== bench group: {group} (budget {budget:?}/case) ==");
         Bench {
             group: group.to_string(),
+            quick,
             budget,
             max_iters: if quick { 20 } else { 200 },
             min_iters: 3,
             results: Vec::new(),
+            metrics: Vec::new(),
         }
     }
 
@@ -118,6 +139,55 @@ impl Bench {
     pub fn results(&self) -> &[BenchStats] {
         &self.results
     }
+
+    /// Record one extra scalar (e.g. a loadgen's req/s) for the JSON
+    /// export. Non-finite values are refused — the canonical JSON
+    /// writer cannot represent them, and a NaN baseline would poison
+    /// every future comparison.
+    pub fn metric(&mut self, name: &str, value: f64) {
+        if !value.is_finite() {
+            eprintln!("bench metric '{name}' is non-finite — dropped");
+            return;
+        }
+        println!("{:<44} {value:.1}", format!("{}/{name}", self.group));
+        self.metrics.push((name.to_string(), value));
+    }
+
+    /// The stable-schema JSON document (see the module docs): every
+    /// timed case contributes `<case>_mean_us` / `<case>_p50_us` /
+    /// `<case>_p95_us`, plus all [`Bench::metric`] scalars verbatim.
+    pub fn json(&self) -> String {
+        let us = |d: Duration| d.as_nanos() as f64 / 1e3;
+        let mut flat: Vec<(String, f64)> = Vec::new();
+        for s in &self.results {
+            let case = s
+                .name
+                .strip_prefix(&format!("{}/", self.group))
+                .unwrap_or(&s.name);
+            flat.push((format!("{case}_mean_us"), us(s.mean)));
+            flat.push((format!("{case}_p50_us"), us(s.p50)));
+            flat.push((format!("{case}_p95_us"), us(s.p95)));
+        }
+        flat.extend(self.metrics.iter().cloned());
+        let metrics = Json::obj(
+            flat.iter()
+                .map(|(k, v)| (k.as_str(), Json::Num(*v)))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("schema", Json::Str("ecopt-bench-v1".into())),
+            ("group", Json::Str(self.group.clone())),
+            ("quick", Json::Bool(self.quick)),
+            ("metrics", metrics),
+        ])
+        .dump()
+        .expect("bench metrics are finite by construction")
+    }
+
+    /// Write [`Bench::json`] (newline-terminated) to `path`.
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.json() + "\n")
+    }
 }
 
 #[cfg(test)]
@@ -135,6 +205,41 @@ mod tests {
         assert!(s.iters >= 3);
         assert!(s.min <= s.p50 && s.p50 <= s.p95);
         assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn json_export_has_stable_flat_schema() {
+        std::env::set_var("ECOPT_BENCH_QUICK", "1");
+        let mut b = Bench::new("grp");
+        b.bench("case", || {});
+        b.metric("custom_rps", 1234.5);
+        b.metric("poison", f64::NAN); // dropped, not serialized
+        let j = b.json();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_str().unwrap(), "ecopt-bench-v1");
+        assert_eq!(parsed.get("group").unwrap().as_str().unwrap(), "grp");
+        assert!(parsed.get("quick").unwrap().as_bool().unwrap());
+        let m = parsed.get("metrics").unwrap();
+        assert!(m.get("case_mean_us").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(m.get("case_p50_us").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(m.get("case_p95_us").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(m.get("custom_rps").unwrap().as_f64().unwrap(), 1234.5);
+        assert!(m.get("poison").is_err(), "non-finite metric must be dropped");
+        // Canonical writer: one byte representation.
+        assert_eq!(Json::parse(&j).unwrap().dump().unwrap(), j);
+    }
+
+    #[test]
+    fn write_json_round_trips_through_disk() {
+        std::env::set_var("ECOPT_BENCH_QUICK", "1");
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        let mut b = Bench::new("disk");
+        b.metric("rps", 10.0);
+        let path = dir.path().join("BENCH_test.json");
+        b.write_json(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.ends_with('\n'));
+        assert_eq!(body.trim_end(), b.json());
     }
 
     #[test]

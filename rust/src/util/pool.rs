@@ -18,9 +18,111 @@
 //! Worker panics propagate to the caller via `resume_unwind`, so test
 //! assertions inside jobs behave exactly as in sequential code.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
 
 use crate::Result;
+
+/// A closeable MPMC handoff queue (std-only: `Mutex<VecDeque>` +
+/// `Condvar`) — the submission/completion channel between `ecoptd`'s
+/// reactor and its dispatch workers (ISSUE 6).
+///
+/// Two disciplines are supported by the same type:
+///
+/// * **blocking consumer** ([`TaskQueue::pop_wait`]): dispatch workers
+///   park until work arrives or the queue is closed;
+/// * **non-blocking drain** ([`TaskQueue::drain`]): the reactor sweeps
+///   every finished completion in one lock acquisition per tick and
+///   never sleeps on the queue.
+///
+/// Items are FIFO. [`TaskQueue::close`] wakes every parked consumer;
+/// after close, producers are refused (`push` returns `false`) while
+/// consumers still drain whatever was queued before the close.
+#[derive(Debug)]
+pub struct TaskQueue<T> {
+    inner: Mutex<TaskQueueInner<T>>,
+    cv: Condvar,
+}
+
+#[derive(Debug)]
+struct TaskQueueInner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> TaskQueue<T> {
+    /// An open, empty queue.
+    pub fn new() -> TaskQueue<T> {
+        TaskQueue {
+            inner: Mutex::new(TaskQueueInner {
+                items: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue one item and wake one waiter. Returns `false` (dropping
+    /// the item) when the queue has been closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut q = self.inner.lock().expect("task queue poisoned");
+        if q.closed {
+            return false;
+        }
+        q.items.push_back(item);
+        drop(q);
+        self.cv.notify_one();
+        true
+    }
+
+    /// Block until an item is available (`Some`) or the queue is closed
+    /// **and** drained (`None`).
+    pub fn pop_wait(&self) -> Option<T> {
+        let mut q = self.inner.lock().expect("task queue poisoned");
+        loop {
+            if let Some(item) = q.items.pop_front() {
+                return Some(item);
+            }
+            if q.closed {
+                return None;
+            }
+            q = self.cv.wait(q).expect("task queue poisoned");
+        }
+    }
+
+    /// Take everything currently queued without blocking (the reactor's
+    /// once-per-tick completion sweep). Empty vec when nothing is ready.
+    pub fn drain(&self) -> Vec<T> {
+        let mut q = self.inner.lock().expect("task queue poisoned");
+        q.items.drain(..).collect()
+    }
+
+    /// Close the queue: wake every parked consumer and refuse further
+    /// pushes. Already-queued items remain poppable/drainable.
+    pub fn close(&self) {
+        let mut q = self.inner.lock().expect("task queue poisoned");
+        q.closed = true;
+        drop(q);
+        self.cv.notify_all();
+    }
+
+    /// Items currently queued.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("task queue poisoned").items.len()
+    }
+
+    /// Whether nothing is currently queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Default for TaskQueue<T> {
+    fn default() -> Self {
+        TaskQueue::new()
+    }
+}
 
 /// A fixed-width pool of scoped worker threads.
 #[derive(Debug, Clone)]
@@ -304,5 +406,70 @@ mod tests {
             }
             i
         });
+    }
+
+    #[test]
+    fn task_queue_fifo_and_drain() {
+        let q: TaskQueue<usize> = TaskQueue::new();
+        assert!(q.is_empty());
+        for i in 0..5 {
+            assert!(q.push(i));
+        }
+        assert_eq!(q.len(), 5);
+        // pop_wait preserves FIFO order.
+        assert_eq!(q.pop_wait(), Some(0));
+        assert_eq!(q.pop_wait(), Some(1));
+        // drain takes the rest in order, without blocking.
+        assert_eq!(q.drain(), vec![2, 3, 4]);
+        assert!(q.drain().is_empty());
+    }
+
+    #[test]
+    fn task_queue_close_wakes_waiters_and_refuses_pushes() {
+        let q: std::sync::Arc<TaskQueue<usize>> = std::sync::Arc::new(TaskQueue::new());
+        let q2 = std::sync::Arc::clone(&q);
+        let waiter = std::thread::spawn(move || q2.pop_wait());
+        // Give the waiter a moment to park, then close.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert_eq!(waiter.join().unwrap(), None, "close must wake parked consumers");
+        assert!(!q.push(7), "closed queue refuses new items");
+        assert_eq!(q.pop_wait(), None);
+    }
+
+    #[test]
+    fn task_queue_items_survive_close_until_drained() {
+        let q: TaskQueue<&'static str> = TaskQueue::new();
+        assert!(q.push("a"));
+        assert!(q.push("b"));
+        q.close();
+        // Queued-before-close items are still delivered.
+        assert_eq!(q.pop_wait(), Some("a"));
+        assert_eq!(q.drain(), vec!["b"]);
+        assert_eq!(q.pop_wait(), None);
+    }
+
+    #[test]
+    fn task_queue_many_producers_one_consumer() {
+        let q: std::sync::Arc<TaskQueue<usize>> = std::sync::Arc::new(TaskQueue::new());
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = std::sync::Arc::clone(&q);
+                std::thread::spawn(move || {
+                    for i in 0..50 {
+                        assert!(q.push(p * 50 + i));
+                    }
+                })
+            })
+            .collect();
+        for h in producers {
+            h.join().unwrap();
+        }
+        q.close();
+        let mut got = HashSet::new();
+        while let Some(v) = q.pop_wait() {
+            got.insert(v);
+        }
+        assert_eq!(got.len(), 200, "every produced item is delivered exactly once");
     }
 }

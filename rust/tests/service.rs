@@ -1,7 +1,8 @@
-//! `ecoptd` integration tests (ISSUE 4): daemon round-trips, registry
-//! warm-load, deterministic loadgen transcripts, load shedding, and the
-//! async train/status path — all against an in-process server on an
-//! ephemeral port.
+//! `ecoptd` integration tests (ISSUE 4 + 6): daemon round-trips,
+//! registry warm-load, deterministic loadgen transcripts, load shedding,
+//! the async train/status path, and the reactor-specific behaviors —
+//! oversubscription, slow clients, framing abuse, negotiated batching —
+//! all against an in-process server on an ephemeral port.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -12,7 +13,7 @@ use ecopt::energy::predict_point;
 use ecopt::persist::{CachedModel, ModelCache, ModelKey};
 use ecopt::powermodel::PowerModel;
 use ecopt::service::loadgen::request_once;
-use ecopt::service::protocol::{line_code, line_is_ok, Request, CODE_OVERLOADED};
+use ecopt::service::protocol::{line_code, line_is_ok, unwrap_batch, Request, CODE_OVERLOADED};
 use ecopt::service::{run_loadgen, EcoptServer, LoadgenOptions, ServerHandle, ServiceConfig};
 use ecopt::svr::{SvrModel, TrainSample};
 use ecopt::util::json::Json;
@@ -323,6 +324,7 @@ fn same_seed_loadgen_transcripts_are_byte_identical() {
         requests: 80,
         connections: 3,
         seed: 11,
+        ..Default::default()
     };
     let a = run_loadgen(&opts).unwrap();
     let b = run_loadgen(&opts).unwrap();
@@ -378,6 +380,371 @@ fn full_accept_queue_sheds_with_503() {
     handle.stop();
     let report = daemon.join().unwrap();
     assert!(report.shed >= 1);
+    // The shed response above was read by the client, so its delivery
+    // must not be counted as a failed shed-write (ISSUE 6 satellite:
+    // those used to be dropped invisibly; now they are accounted).
+    assert_eq!(report.shed_write_failures, 0);
+}
+
+#[test]
+fn oversubscribed_connections_all_complete_with_bounded_tail() {
+    // ISSUE 6 acceptance: >= 4x the worker count in concurrent
+    // connections, all complete, zero errors, p99 bounded. Under the old
+    // worker-per-connection loop 12 connections on 2 workers would have
+    // parked 10 of them behind busy sockets for the whole run.
+    let dir = TempDir::new().unwrap();
+    let cache = ModelCache::open(dir.path()).unwrap();
+    cache
+        .put(
+            &ModelKey::new("synthapp", "n1-2#oversub", "custom-node"),
+            &trained_bundle(),
+        )
+        .unwrap();
+    let (handle, daemon, addr) = spawn_server(
+        ExperimentConfig::default(),
+        ServiceConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 2,
+            cache_dir: Some(dir.path().to_path_buf()),
+            ..Default::default()
+        },
+    );
+
+    let outcome = run_loadgen(&LoadgenOptions {
+        addr: addr.clone(),
+        requests: 144,
+        connections: 12, // 6x the 2 dispatch workers
+        seed: 31,
+        pipeline: 2,
+        ..Default::default()
+    })
+    .unwrap();
+    assert_eq!(outcome.requests, 144);
+    assert_eq!(outcome.errors, 0, "oversubscription must not error");
+    assert_eq!(outcome.shed, 0, "cap (1024) is far above 12 connections");
+    assert_eq!(outcome.ok, 144, "every request over every connection completes");
+    assert!(
+        outcome.p99_us < 2_000_000,
+        "p99 {}us not bounded under oversubscription",
+        outcome.p99_us
+    );
+
+    handle.stop();
+    let report = daemon.join().unwrap();
+    assert_eq!(report.shed, 0);
+    assert_eq!(report.shed_write_failures, 0);
+}
+
+#[test]
+fn dribbling_writer_cannot_starve_other_connections() {
+    // A client that trickles one byte at a time never completes a line,
+    // so it must never occupy the single dispatch worker — requests on
+    // other connections keep being answered promptly throughout.
+    let dir = TempDir::new().unwrap();
+    let cache = ModelCache::open(dir.path()).unwrap();
+    cache
+        .put(
+            &ModelKey::new("synthapp", "n1-2#dribble", "custom-node"),
+            &trained_bundle(),
+        )
+        .unwrap();
+    let (handle, daemon, addr) = spawn_server(
+        ExperimentConfig::default(),
+        ServiceConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 1,
+            cache_dir: Some(dir.path().to_path_buf()),
+            ..Default::default()
+        },
+    );
+
+    let dribble_addr = addr.clone();
+    let dribbler = std::thread::spawn(move || {
+        let mut stream = TcpStream::connect(&dribble_addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .unwrap();
+        let line = Request::Stats.to_line().unwrap();
+        for b in line.as_bytes() {
+            stream.write_all(std::slice::from_ref(b)).unwrap();
+            std::thread::sleep(Duration::from_millis(3));
+        }
+        stream.write_all(b"\n").unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        resp.trim_end().to_string()
+    });
+
+    // While the dribbler trickles (~150ms), ten requests on fresh
+    // connections must each answer quickly on the lone worker.
+    for _ in 0..10 {
+        let t0 = Instant::now();
+        let resp = request_once(&addr, &Request::Stats.to_line().unwrap()).unwrap();
+        assert!(line_is_ok(&resp), "{resp}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "request stalled behind a dribbling writer"
+        );
+    }
+
+    // The dribbler's request, once finally complete, still gets served.
+    let dribbled = dribbler.join().unwrap();
+    assert!(line_is_ok(&dribbled), "{dribbled}");
+
+    handle.stop();
+    daemon.join().unwrap();
+}
+
+#[test]
+fn non_utf8_line_gets_400_and_connection_survives() {
+    // ISSUE 6 satellite: the old loop lossy-decoded invalid UTF-8 into
+    // U+FFFD and handed it to the parser; the reactor rejects the line
+    // with a 400-style response and keeps the connection usable.
+    let dir = TempDir::new().unwrap();
+    let cache = ModelCache::open(dir.path()).unwrap();
+    cache
+        .put(
+            &ModelKey::new("synthapp", "n1-2#utf8", "custom-node"),
+            &trained_bundle(),
+        )
+        .unwrap();
+    let (handle, daemon, addr) = spawn_server(
+        ExperimentConfig::default(),
+        ServiceConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 1,
+            cache_dir: Some(dir.path().to_path_buf()),
+            ..Default::default()
+        },
+    );
+
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    stream.write_all(b"\xff\xfe{\"v\":1}\n").unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    assert_eq!(line_code(resp.trim_end()), Some(400), "{resp}");
+    assert!(resp.contains("UTF-8"), "{resp}");
+    // The same connection still serves valid requests afterwards.
+    let line = Request::Stats.to_line().unwrap();
+    stream.write_all(format!("{line}\n").as_bytes()).unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    assert!(line_is_ok(resp.trim_end()), "{resp}");
+
+    drop(reader);
+    drop(stream);
+    handle.stop();
+    daemon.join().unwrap();
+}
+
+#[test]
+fn overlong_line_gets_400_and_connection_closes() {
+    // ISSUE 6 satellite: the per-connection accumulator is bounded. A
+    // stream that outgrows max_line_bytes without a newline (slow-loris)
+    // gets one 400-style response and the connection is closed.
+    let dir = TempDir::new().unwrap();
+    let cache = ModelCache::open(dir.path()).unwrap();
+    cache
+        .put(
+            &ModelKey::new("synthapp", "n1-2#cap", "custom-node"),
+            &trained_bundle(),
+        )
+        .unwrap();
+    let (handle, daemon, addr) = spawn_server(
+        ExperimentConfig::default(),
+        ServiceConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 1,
+            max_line_bytes: 1024,
+            cache_dir: Some(dir.path().to_path_buf()),
+            ..Default::default()
+        },
+    );
+
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    // 1500 newline-free bytes in ONE write: over the 1024 cap, small
+    // enough that the server's first read consumes them all (so the 400
+    // drains over a clean close, not an RST).
+    stream.write_all(&[b'x'; 1500]).unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    assert_eq!(line_code(resp.trim_end()), Some(400), "{resp}");
+    assert!(resp.contains("limit"), "{resp}");
+    // EOF: the server closed the abusive connection.
+    let mut rest = String::new();
+    assert_eq!(reader.read_line(&mut rest).unwrap(), 0);
+
+    handle.stop();
+    daemon.join().unwrap();
+}
+
+#[test]
+fn negotiated_batching_unwraps_to_the_exact_v1_bytes() {
+    // Envelope grouping is timing-dependent, but the responses INSIDE
+    // the envelopes must be byte-identical to what the un-batched
+    // protocol produces for the same requests (the v1 compatibility
+    // contract of ISSUE 6).
+    let dir = TempDir::new().unwrap();
+    let cache = ModelCache::open(dir.path()).unwrap();
+    cache
+        .put(
+            &ModelKey::new("synthapp", "n1-2#batch", "custom-node"),
+            &trained_bundle(),
+        )
+        .unwrap();
+    let (handle, daemon, addr) = spawn_server(
+        ExperimentConfig::default(),
+        ServiceConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 2,
+            cache_dir: Some(dir.path().to_path_buf()),
+            ..Default::default()
+        },
+    );
+
+    // Pure (counter-free) requests so the reference responses fetched
+    // over plain connections are bit-equal to the batched ones.
+    let reqs: Vec<Request> = (1..=5)
+        .map(|p| Request::Predict {
+            app: "synthapp".into(),
+            arch: None,
+            tag: None,
+            f_mhz: 1800,
+            cores: p,
+            input: 1,
+        })
+        .collect();
+    let expected: Vec<String> = reqs
+        .iter()
+        .map(|r| request_once(&addr, &r.to_line().unwrap()).unwrap())
+        .collect();
+
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    // Negotiate: the acknowledgement answers under the OLD (plain) mode.
+    let neg = Request::Negotiate { batch: 4 }.to_line().unwrap();
+    stream.write_all(format!("{neg}\n").as_bytes()).unwrap();
+    let mut ack = String::new();
+    reader.read_line(&mut ack).unwrap();
+    let ack = ack.trim_end();
+    assert!(line_is_ok(ack), "{ack}");
+    assert!(unwrap_batch(ack).unwrap().is_none(), "ack is a plain line: {ack}");
+
+    // Burst all five requests in one write; collect responses from
+    // however many envelopes the daemon cut them into.
+    let blob: String = reqs
+        .iter()
+        .map(|r| r.to_line().unwrap() + "\n")
+        .collect();
+    stream.write_all(blob.as_bytes()).unwrap();
+    let mut got: Vec<String> = Vec::new();
+    let mut saw_envelope = false;
+    while got.len() < reqs.len() {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        match unwrap_batch(line.trim_end()).unwrap() {
+            Some(unwrapped) => {
+                saw_envelope = true;
+                assert!(unwrapped.len() <= 4, "envelope over the negotiated size");
+                got.extend(unwrapped);
+            }
+            None => got.push(line.trim_end().to_string()),
+        }
+    }
+    assert!(saw_envelope, "negotiated batching never produced an envelope");
+    assert_eq!(got, expected, "batched responses drifted from the v1 bytes");
+
+    // batch 0 opts back out; the ack still arrives under the old mode
+    // (wrapped), then responses are plain lines again.
+    let off = Request::Negotiate { batch: 0 }.to_line().unwrap();
+    stream.write_all(format!("{off}\n").as_bytes()).unwrap();
+    let mut ack = String::new();
+    reader.read_line(&mut ack).unwrap();
+    let unwrapped = unwrap_batch(ack.trim_end()).unwrap().expect("ack under old mode");
+    assert_eq!(unwrapped.len(), 1);
+    assert!(line_is_ok(&unwrapped[0]), "{}", unwrapped[0]);
+    stream
+        .write_all(format!("{}\n", reqs[0].to_line().unwrap()).as_bytes())
+        .unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    assert!(unwrap_batch(resp.trim_end()).unwrap().is_none(), "{resp}");
+    assert_eq!(resp.trim_end(), expected[0]);
+
+    drop(reader);
+    drop(stream);
+    handle.stop();
+    daemon.join().unwrap();
+}
+
+#[test]
+fn loadgen_transcript_is_identical_across_pipeline_and_batch_modes() {
+    // The transcript is keyed by request index and envelope unwrapping
+    // is byte-faithful, so the SAME seed must produce the SAME bytes in
+    // lockstep, pipelined, and batched modes — this is how the reactor's
+    // v1 wire compatibility stays pinned while the transport changes.
+    let dir = TempDir::new().unwrap();
+    let cache = ModelCache::open(dir.path()).unwrap();
+    cache
+        .put(
+            &ModelKey::new("synthapp", "n1-2#modes", "custom-node"),
+            &trained_bundle(),
+        )
+        .unwrap();
+    let (handle, daemon, addr) = spawn_server(
+        ExperimentConfig::default(),
+        ServiceConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 3,
+            cache_dir: Some(dir.path().to_path_buf()),
+            ..Default::default()
+        },
+    );
+
+    let base = LoadgenOptions {
+        addr: addr.clone(),
+        requests: 60,
+        connections: 3,
+        seed: 21,
+        ..Default::default()
+    };
+    let plain = run_loadgen(&base).unwrap();
+    assert_eq!(plain.errors, 0);
+    let piped = run_loadgen(&LoadgenOptions {
+        pipeline: 4,
+        ..base.clone()
+    })
+    .unwrap();
+    let batched = run_loadgen(&LoadgenOptions {
+        pipeline: 4,
+        batch: 8,
+        ..base.clone()
+    })
+    .unwrap();
+    assert_eq!(batched.errors, 0);
+    assert_eq!(
+        plain.transcript, piped.transcript,
+        "pipelining changed the transcript bytes"
+    );
+    assert_eq!(
+        plain.transcript, batched.transcript,
+        "batch envelopes leaked into the transcript bytes"
+    );
+
+    handle.stop();
+    daemon.join().unwrap();
 }
 
 #[test]
