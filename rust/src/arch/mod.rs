@@ -296,7 +296,7 @@ impl ArchProfile {
                 self.name, self.freq_min_mhz, self.freq_max_mhz, self.freq_step_mhz
             )));
         }
-        if self.sensor.period_s <= 0.0 || !(0.0..1.0).contains(&self.sensor.dropout) {
+        if self.sensor.period_s <= 0.0 || !(0.0..=1.0).contains(&self.sensor.dropout) {
             return Err(Error::Config(format!(
                 "profile '{}': bad sensor spec",
                 self.name

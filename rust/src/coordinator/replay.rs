@@ -247,9 +247,17 @@ fn replay_input_tag(
     ))
 }
 
-/// Train (or load) the `(PowerModel, SvrModel)` bundle for one phased
-/// workload: stress-fit the power model, characterize the trace over the
-/// campaign grid with [`Pinned`] runs on the pool, train the SVR.
+/// Train the `(PowerModel, SvrModel)` bundle for one phased workload:
+/// stress-fit the power model, characterize the trace over the campaign
+/// grid with [`Pinned`] runs on the pool, train the SVR.
+///
+/// Public since ISSUE 7: the fleet simulator (`sim`) trains its
+/// `ecopt`-governed node groups through the very same path the replay
+/// harness uses, so a simulated fleet decides from models produced by
+/// the production training pipeline. `wi` is the workload's index in
+/// [`phase_suite`] order (it selects the characterization seed stream),
+/// and `power_memo` memoizes the per-architecture power fit across
+/// workloads.
 ///
 /// The SVR is trained on the **compute-phase** wall time (the per-class
 /// accounting of [`replay_run`]), not the whole-trace time: the governor
@@ -259,7 +267,7 @@ fn replay_input_tag(
 /// compute phase (time stops improving with `f` in the blend long before
 /// it does in the kernel itself). Stalled/Idle decisions don't use
 /// predicted time — they pin the grid floor / hotplug down structurally.
-fn model_for_workload(
+pub fn train_phase_model(
     arch: &ArchProfile,
     cfg: &ExperimentConfig,
     rc: &RunConfig,
@@ -363,7 +371,7 @@ pub fn run_replay(
                     pool.threads()
                 );
                 let (power, svr) =
-                    model_for_workload(&arch, cfg, rc, &pool, w, wi, input, &mut power_memo)?;
+                    train_phase_model(&arch, cfg, rc, &pool, w, wi, input, &mut power_memo)?;
                 stats.trained += 1;
                 let fresh = CachedModel {
                     power,

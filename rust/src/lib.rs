@@ -45,6 +45,15 @@
 //! budget/cap/deadline-constrained form), defaulting to the paper's plain
 //! energy metric bit for bit.
 //!
+//! Since ISSUE 7 the governors are also tested **at fleet scale**: the
+//! tick-accurate discrete-event simulator (`sim`) runs thousands of
+//! heterogeneous nodes — every `arch` profile under its own governor and
+//! looping phase trace — on a virtual clock with fault injection (sensor
+//! dropout/blackout, meter drift, stuck frequency actuators, node
+//! crash/rejoin churn), checking named safety and liveness properties
+//! (global power cap, post-fault reconvergence) from TOML scenario files
+//! (`ecopt sim`), byte-identical at any thread count.
+//!
 //! See `DESIGN.md` for the system inventory, the determinism contract,
 //! and the kernel-cache design.
 
@@ -73,6 +82,7 @@ pub mod report;
 pub mod runtime;
 pub mod sensors;
 pub mod service;
+pub mod sim;
 pub mod svr;
 pub mod util;
 pub mod workloads;

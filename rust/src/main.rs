@@ -38,6 +38,7 @@ use ecopt::runtime::PjrtRuntime;
 use ecopt::service::loadgen::request_once;
 use ecopt::service::protocol::{line_is_ok, Request};
 use ecopt::service::{run_loadgen, EcoptServer, LoadgenOptions, ServiceConfig};
+use ecopt::sim::{run_scenario, Scenario, SimOptions};
 use ecopt::workloads::app_by_name;
 use ecopt::workloads::runner::RunConfig;
 
@@ -70,6 +71,13 @@ COMMANDS:
                                 phase-shifting traces under every governor +
                                 the model-in-the-loop ecopt governor, vs the
                                 static oracle (warm model cache trains zero)
+  sim <SCENARIO.toml> [--quick] [--out FILE] [--threads N]
+                                tick-accurate fleet simulation with fault
+                                injection: thousands of heterogeneous nodes
+                                under their governors while sensors black out,
+                                meters drift, actuators stick and nodes churn;
+                                checks the scenario's safety/liveness
+                                properties (exit 1 if any fails)
   serve [--addr HOST:PORT] [--workers N] [--queue N] [--shards N]
         [--budget-mb MB] [--cache-dir DIR] [--no-cache]
                                 run ecoptd, the energy-advisor daemon: a TCP
@@ -212,6 +220,25 @@ const COMMANDS: &[CmdSpec] = &[
         bool_flags: &["quick", "no-cache"],
         max_positionals: 0,
         input_alias: true,
+    },
+    CmdSpec {
+        name: "sim",
+        usage: "USAGE: ecopt sim <SCENARIO.toml> [--quick] [--out FILE] [--threads N]\n\n\
+                Run a tick-accurate fleet simulation with fault injection. The\n\
+                scenario file declares the fleet (arch-registry profiles x\n\
+                counts, each group under its own governor and phased\n\
+                workload), a phase timeline, a fault schedule (sensor\n\
+                dropout/blackout, meter drift, stuck frequency actuators,\n\
+                crash/rejoin churn) and named safety/liveness properties\n\
+                (global power cap, post-fault reconvergence). Virtual clock\n\
+                only — no wall-clock sleeps; the report is byte-identical\n\
+                for any --threads value. --quick caps the timeline at the\n\
+                scenario's quick_duration_s (never the node count). Exits 0\n\
+                when every property holds, 1 otherwise.",
+        value_flags: &["out", "threads"],
+        bool_flags: &["quick"],
+        max_positionals: 1,
+        input_alias: false,
     },
     CmdSpec {
         name: "serve",
@@ -736,6 +763,39 @@ fn main() -> anyhow::Result<()> {
                     eprintln!("replay report written to {path}");
                 }
                 _ => println!("{rendered}"),
+            }
+        }
+        "sim" => {
+            let path = match args.positional.first() {
+                Some(p) => p.clone(),
+                None => usage_exit(args.spec.usage, "a scenario file is required"),
+            };
+            let scenario = Scenario::load(std::path::Path::new(&path))?;
+            let opts = SimOptions {
+                threads: args.num("threads", 0),
+                quick: args.has("quick"),
+            };
+            eprintln!(
+                "sim: scenario '{}' — {} nodes, {:.0} s simulated{}",
+                scenario.name,
+                scenario.total_nodes(),
+                scenario.effective_duration_s(opts.quick),
+                if opts.quick { " (quick)" } else { "" }
+            );
+            let sim_res = run_scenario(&scenario, &opts)?;
+            let rendered = report::sim_report(&sim_res);
+            match args.get("out") {
+                Some(out) if !out.is_empty() => {
+                    std::fs::write(out, &rendered)?;
+                    eprintln!("sim report written to {out}");
+                }
+                _ => println!("{rendered}"),
+            }
+            for p in sim_res.properties.iter().filter(|p| !p.pass) {
+                eprintln!("sim: property '{}' FAILED: {}", p.name, p.details);
+            }
+            if !sim_res.all_pass() {
+                std::process::exit(1);
             }
         }
         "serve" => {

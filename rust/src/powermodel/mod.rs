@@ -186,7 +186,7 @@ pub fn stress_campaign_arch(arch: &ArchProfile, cfg: &StressConfig) -> Result<Ve
         for c in 0..p {
             node.set_util(c, 1.0);
         }
-        let mut meter = IpmiMeter::from_spec(&arch.sensor, cfg.seed.wrapping_add(i as u64));
+        let mut meter = IpmiMeter::from_spec(&arch.sensor, cfg.seed.wrapping_add(i as u64))?;
         meter.advance(&node, &power, 0.0, cfg.dwell_s);
         Ok(PowerObs {
             f_mhz: f,

@@ -697,6 +697,90 @@ pub fn loadgen_report(o: &crate::service::LoadgenOutcome) -> String {
     out
 }
 
+/// Full fleet-simulation report (the `ecopt sim` output and the
+/// `sim-smoke` CI artifact). Contains ONLY virtual-clock quantities —
+/// no wall time, no thread count — so one scenario renders byte-identical
+/// output at any `--threads` value (locked by `tests/determinism.rs` and
+/// the `sim-smoke` job's `cmp`).
+pub fn sim_report(r: &crate::sim::SimReport) -> String {
+    use crate::util::stats::percentile;
+    let mut out = String::new();
+    let _ = writeln!(out, "# Fleet simulation: {}\n", r.scenario);
+    if !r.description.is_empty() {
+        let _ = writeln!(out, "{}\n", r.description);
+    }
+    let _ = writeln!(out, "| metric | value |\n|---|---|");
+    let _ = writeln!(out, "| simulated duration | {:.2} s |", r.duration_s);
+    let _ = writeln!(out, "| quick mode | {} |", r.quick);
+    let _ = writeln!(out, "| nodes | {} |", r.total_nodes);
+    let _ = writeln!(out, "| alive at end | {} |", r.final_alive);
+    let _ = writeln!(out, "| fault actions applied | {} |", r.fault_actions);
+    let _ = writeln!(out, "| peak fleet power | {:.1} W |", r.peak_power_w);
+    let _ = writeln!(out, "| fleet energy | {:.3} MJ |", r.total_energy_j / 1e6);
+    let _ = writeln!(out, "| cap-check samples | {} |", r.cap_trace.len());
+
+    let _ = writeln!(
+        out,
+        "\n## Groups\n\n\
+         | Profile | Workload | Governor | Nodes | Alive | Crashes | Traces | Decisions | E/node p50 (kJ) | E/node p95 (kJ) | Metered E (kJ) |\n\
+         |---|---|---|---|---|---|---|---|---|---|---|"
+    );
+    for g in &r.groups {
+        let mut sorted = g.energy_per_node_j.clone();
+        sorted.sort_by(f64::total_cmp);
+        // Groups always hold at least one node (scenario validation), so
+        // the percentile of the sorted sample cannot fail.
+        let p50 = percentile(&sorted, 50.0).expect("non-empty group");
+        let p95 = percentile(&sorted, 95.0).expect("non-empty group");
+        let _ = writeln!(
+            out,
+            "| {} | {} | {} | {} | {} | {} | {} | {} | {:.3} | {:.3} | {:.3} |",
+            g.profile,
+            g.workload,
+            g.governor,
+            g.count,
+            g.alive,
+            g.crashes,
+            g.traces_done,
+            g.gov_decisions,
+            p50 / 1000.0,
+            p95 / 1000.0,
+            g.energy_meter_j / 1000.0,
+        );
+    }
+
+    let _ = writeln!(
+        out,
+        "\n## Fleet power trace (ground truth)\n\nt_s\twatts\talive"
+    );
+    for s in &r.cap_trace {
+        let _ = writeln!(out, "{:.3}\t{:.3}\t{}", s.t_s, s.watts, s.alive);
+    }
+
+    let _ = writeln!(
+        out,
+        "\n## Properties\n\n| Property | Kind | Verdict | Evidence |\n|---|---|---|---|"
+    );
+    for p in &r.properties {
+        let _ = writeln!(
+            out,
+            "| {} | {} | {} | {} |",
+            p.name,
+            p.kind,
+            if p.pass { "PASS" } else { "FAIL" },
+            p.details
+        );
+    }
+    let _ = writeln!(
+        out,
+        "\n**{}** — {}/{} properties held.",
+        if r.all_pass() { "PASS" } else { "FAIL" },
+        r.properties.iter().filter(|p| p.pass).count(),
+        r.properties.len()
+    );
+    out
+}
+
 /// Render one numbered artifact ("1".."5" tables, "f1".."f10" figures).
 pub fn render(res: &ExperimentResults, campaign: &CampaignSpec, what: &str) -> Result<String> {
     match what {

@@ -22,6 +22,7 @@ use crate::node::power::PowerProcess;
 use crate::node::Node;
 use crate::util::rng::Rng;
 use crate::util::stats::trapezoid;
+use crate::{Error, Result};
 
 /// One timestamped power reading.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -39,8 +40,12 @@ pub struct IpmiMeter {
     period_s: f64,
     /// ADC quantization step in watts (0 disables).
     quantum_w: f64,
-    /// Probability of missing a sample beat (failure injection).
+    /// Probability of missing a sample beat (failure injection);
+    /// 1.0 = total blackout (the meter stops reporting entirely).
     dropout: f64,
+    /// Additive calibration-drift bias in watts, applied BEFORE ADC
+    /// quantization (fault injection: a miscalibrated BMC).
+    bias_w: f64,
     rng: Rng,
     samples: Vec<PowerSample>,
     /// Next beat index; the beat's timestamp is `beat * period_s`.
@@ -50,25 +55,72 @@ pub struct IpmiMeter {
 impl IpmiMeter {
     /// Standard 1 Hz meter with 0.1 W quantization and no dropouts.
     pub fn new(seed: u64) -> Self {
-        Self::with_params(1.0, 0.1, 0.0, seed)
+        Self::with_params(1.0, 0.1, 0.0, seed).expect("default meter parameters are valid")
     }
 
     /// Meter with an architecture profile's sensor characteristics.
-    pub fn from_spec(spec: &SensorSpec, seed: u64) -> Self {
+    pub fn from_spec(spec: &SensorSpec, seed: u64) -> Result<Self> {
         Self::with_params(spec.period_s, spec.quantum_w, spec.dropout, seed)
     }
 
     /// Meter with explicit period / quantization / dropout parameters.
-    pub fn with_params(period_s: f64, quantum_w: f64, dropout: f64, seed: u64) -> Self {
-        assert!(period_s > 0.0, "sampling period must be positive");
-        assert!((0.0..1.0).contains(&dropout), "dropout must be in [0,1)");
-        IpmiMeter {
+    ///
+    /// `dropout` covers the CLOSED interval `[0, 1]` — 1.0 is a total
+    /// sensor blackout, a state the simulator's fault injector must be
+    /// able to express. Out-of-range parameters (e.g. from a scenario
+    /// file) are an [`Error::Config`], not a panic.
+    pub fn with_params(period_s: f64, quantum_w: f64, dropout: f64, seed: u64) -> Result<Self> {
+        if !(period_s > 0.0) {
+            return Err(Error::Config(format!(
+                "sensor sampling period must be positive, got {period_s}"
+            )));
+        }
+        if !(0.0..=1.0).contains(&dropout) {
+            return Err(Error::Config(format!(
+                "sensor dropout must be in [0, 1], got {dropout}"
+            )));
+        }
+        Ok(IpmiMeter {
             period_s,
             quantum_w,
             dropout,
+            bias_w: 0.0,
             rng: Rng::seed_from_u64(seed),
             samples: Vec::new(),
             beat: 0,
+        })
+    }
+
+    /// Change the dropout probability mid-run (fault injection:
+    /// degradation and blackout). Rejects values outside `[0, 1]`.
+    pub fn set_dropout(&mut self, dropout: f64) -> Result<()> {
+        if !(0.0..=1.0).contains(&dropout) {
+            return Err(Error::Config(format!(
+                "sensor dropout must be in [0, 1], got {dropout}"
+            )));
+        }
+        self.dropout = dropout;
+        Ok(())
+    }
+
+    /// Current dropout probability.
+    pub fn dropout(&self) -> f64 {
+        self.dropout
+    }
+
+    /// Set the additive calibration-drift bias (watts), applied before
+    /// quantization (fault injection: meter drift).
+    pub fn set_bias_w(&mut self, bias_w: f64) {
+        self.bias_w = bias_w;
+    }
+
+    /// Advance the beat clock past `t` WITHOUT sampling (fault
+    /// injection: a crashed node's BMC reports nothing while it is down,
+    /// and the missed beats must not be retro-delivered with post-rejoin
+    /// power once the node comes back).
+    pub fn fast_forward(&mut self, t: f64) {
+        while (self.beat as f64) * self.period_s <= t {
+            self.beat += 1;
         }
     }
 
@@ -85,7 +137,7 @@ impl IpmiMeter {
             if self.dropout > 0.0 && self.rng.f64() < self.dropout {
                 continue; // missed beat
             }
-            let mut w = power.instantaneous_watts(node, ts, &mut self.rng);
+            let mut w = power.instantaneous_watts(node, ts, &mut self.rng) + self.bias_w;
             if self.quantum_w > 0.0 {
                 w = (w / self.quantum_w).round() * self.quantum_w;
             }
@@ -173,7 +225,7 @@ mod tests {
             node.set_util(c, 1.0);
         }
         let w = pp.base_watts(&node);
-        let mut m = IpmiMeter::with_params(1.0, 0.0, 0.0, 2);
+        let mut m = IpmiMeter::with_params(1.0, 0.0, 0.0, 2).unwrap();
         m.advance(&node, &pp, 0.0, 100.0);
         let e = m.energy_joules();
         assert!(
@@ -186,7 +238,7 @@ mod tests {
     #[test]
     fn quantization_applied() {
         let (node, pp) = quiet_setup();
-        let mut m = IpmiMeter::with_params(1.0, 0.5, 0.0, 3);
+        let mut m = IpmiMeter::with_params(1.0, 0.5, 0.0, 3).unwrap();
         m.advance(&node, &pp, 0.0, 5.0);
         for s in m.samples() {
             let q = s.watts / 0.5;
@@ -202,7 +254,7 @@ mod tests {
             node.set_util(c, 1.0);
         }
         let w = pp.base_watts(&node);
-        let mut m = IpmiMeter::with_params(1.0, 0.0, 0.3, 4);
+        let mut m = IpmiMeter::with_params(1.0, 0.0, 0.3, 4).unwrap();
         m.advance(&node, &pp, 0.0, 500.0);
         let n = m.samples().len();
         assert!(n > 250 && n < 450, "dropout count {n}");
@@ -242,7 +294,7 @@ mod tests {
         // every sample at exactly `i * 0.1` (the bitwise product, not an
         // accumulated sum) and never skip or duplicate a beat.
         let (node, pp) = quiet_setup();
-        let mut m = IpmiMeter::with_params(0.1, 0.0, 0.0, 7);
+        let mut m = IpmiMeter::with_params(0.1, 0.0, 0.0, 7).unwrap();
         let mut t = 0.0f64;
         for _ in 0..10_000 {
             m.advance(&node, &pp, t, 0.1);
@@ -272,8 +324,8 @@ mod tests {
             quantum_w: 0.25,
             dropout: 0.0,
         };
-        let mut a = IpmiMeter::from_spec(&spec, 9);
-        let mut b = IpmiMeter::with_params(0.5, 0.25, 0.0, 9);
+        let mut a = IpmiMeter::from_spec(&spec, 9).unwrap();
+        let mut b = IpmiMeter::with_params(0.5, 0.25, 0.0, 9).unwrap();
         a.advance(&node, &pp, 0.0, 20.0);
         b.advance(&node, &pp, 0.0, 20.0);
         assert_eq!(a.samples(), b.samples());
@@ -286,7 +338,7 @@ mod tests {
         // timestamp stays an integer second, and the dropout RNG stream
         // stays aligned with the measurement stream (deterministic count).
         let (node, pp) = quiet_setup();
-        let mut m = IpmiMeter::with_params(1.0, 0.1, 0.25, 11);
+        let mut m = IpmiMeter::with_params(1.0, 0.1, 0.25, 11).unwrap();
         m.advance(&node, &pp, 0.0, 2000.0);
         let n = m.samples().len();
         assert!(n > 1300 && n < 1700, "dropout survivor count {n}");
@@ -294,7 +346,7 @@ mod tests {
             assert_eq!(s.t_s, s.t_s.round(), "off-grid surviving beat {}", s.t_s);
         }
         // Deterministic per seed.
-        let mut m2 = IpmiMeter::with_params(1.0, 0.1, 0.25, 11);
+        let mut m2 = IpmiMeter::with_params(1.0, 0.1, 0.25, 11).unwrap();
         m2.advance(&node, &pp, 0.0, 2000.0);
         assert_eq!(m.samples(), m2.samples());
     }
@@ -315,7 +367,7 @@ mod tests {
         };
         let node = Node::new(NodeSpec::default()).unwrap();
         let pp = PowerProcess::new(spec);
-        let mut m = IpmiMeter::with_params(1.0, 0.5, 0.0, 13);
+        let mut m = IpmiMeter::with_params(1.0, 0.5, 0.0, 13).unwrap();
         m.advance(&node, &pp, 0.0, 3.0);
         for s in m.samples() {
             assert!(
@@ -323,6 +375,58 @@ mod tests {
                 "100.26 W should quantize to 100.5, got {}",
                 s.watts
             );
+        }
+    }
+
+    #[test]
+    fn blackout_dropout_one_yields_no_samples() {
+        // ISSUE 7: dropout = 1.0 is a legal state (total sensor
+        // blackout) — the fault injector expresses a dead BMC with it.
+        let (node, pp) = quiet_setup();
+        let mut m = IpmiMeter::with_params(1.0, 0.1, 1.0, 21).unwrap();
+        m.advance(&node, &pp, 0.0, 200.0);
+        assert!(m.samples().is_empty(), "blackout meter must stay silent");
+        assert_eq!(m.energy_joules(), 0.0);
+    }
+
+    #[test]
+    fn out_of_range_parameters_are_errors_not_panics() {
+        assert!(IpmiMeter::with_params(1.0, 0.1, -0.1, 1).is_err());
+        assert!(IpmiMeter::with_params(1.0, 0.1, 1.1, 1).is_err());
+        assert!(IpmiMeter::with_params(0.0, 0.1, 0.0, 1).is_err());
+        assert!(IpmiMeter::with_params(1.0, 0.1, f64::NAN, 1).is_err());
+        let mut m = IpmiMeter::new(1);
+        assert!(m.set_dropout(1.5).is_err());
+        assert!(m.set_dropout(1.0).is_ok());
+        assert_eq!(m.dropout(), 1.0);
+    }
+
+    #[test]
+    fn fast_forward_skips_beats_without_sampling() {
+        // A node that is down from t=3 to t=7 must not deliver the beats
+        // it missed: after fast-forwarding past t=7, the next sample is
+        // the first beat strictly after the outage.
+        let (node, pp) = quiet_setup();
+        let mut m = IpmiMeter::new(31);
+        m.advance(&node, &pp, 0.0, 3.0); // beats 0..=3
+        let before = m.samples().len();
+        assert_eq!(before, 4);
+        m.fast_forward(7.0);
+        m.advance(&node, &pp, 7.0, 3.0); // beats 8, 9, 10
+        let after: Vec<f64> = m.samples()[before..].iter().map(|s| s.t_s).collect();
+        assert_eq!(after, vec![8.0, 9.0, 10.0]);
+    }
+
+    #[test]
+    fn drift_bias_shifts_samples_by_the_bias() {
+        let (node, pp) = quiet_setup();
+        let mut a = IpmiMeter::with_params(1.0, 0.0, 0.0, 23).unwrap();
+        let mut b = IpmiMeter::with_params(1.0, 0.0, 0.0, 23).unwrap();
+        b.set_bias_w(7.25);
+        a.advance(&node, &pp, 0.0, 10.0);
+        b.advance(&node, &pp, 0.0, 10.0);
+        for (sa, sb) in a.samples().iter().zip(b.samples()) {
+            assert!((sb.watts - sa.watts - 7.25).abs() < 1e-12);
         }
     }
 
@@ -341,7 +445,7 @@ mod tests {
         let pp = PowerProcess::new(spec.power.clone());
         let node = Node::new(spec).unwrap();
         let base = pp.base_watts(&node);
-        let mut m = IpmiMeter::with_params(1.0, 0.0, 0.0, 17);
+        let mut m = IpmiMeter::with_params(1.0, 0.0, 0.0, 17).unwrap();
         m.advance(&node, &pp, 0.0, 200.0); // 10 full drift periods
         let e = m.energy_joules();
         assert!(

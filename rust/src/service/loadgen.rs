@@ -350,7 +350,10 @@ pub fn run_loadgen(opts: &LoadgenOptions) -> Result<LoadgenOutcome> {
         }
     }
     latencies.sort_unstable();
-    let pct = |p: usize| latencies[(latencies.len() * p / 100).min(latencies.len() - 1)];
+    // Shared nearest-rank estimator (`util::stats::percentile`): the old
+    // `len * p / 100` indexing was off by one (p50 of two samples
+    // returned the max) and `--requests 0` panicked instead of erroring.
+    let pct = |p: f64| crate::util::stats::percentile(&latencies, p);
     Ok(LoadgenOutcome {
         transcript,
         requests: n,
@@ -364,10 +367,10 @@ pub fn run_loadgen(opts: &LoadgenOptions) -> Result<LoadgenOutcome> {
         ],
         elapsed_s,
         rps: n as f64 / elapsed_s.max(1e-9),
-        p50_us: pct(50),
-        p95_us: pct(95),
-        p99_us: pct(99),
-        max_us: *latencies.last().expect("n >= 1"),
+        p50_us: pct(50.0)?,
+        p95_us: pct(95.0)?,
+        p99_us: pct(99.0)?,
+        max_us: pct(100.0)?,
     })
 }
 

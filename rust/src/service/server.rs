@@ -65,7 +65,7 @@ use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::arch::{profile_by_name, ArchProfile};
 use crate::config::ExperimentConfig;
@@ -78,6 +78,7 @@ use crate::service::protocol::{
 };
 use crate::service::registry::ModelRegistry;
 use crate::service::ServiceConfig;
+use crate::util::clock::{Clock, SystemClock};
 use crate::util::json::Json;
 use crate::util::pool::{TaskQueue, WorkerPool};
 use crate::workloads::app_by_name;
@@ -105,6 +106,9 @@ const MAX_PENDING_LINES: usize = MAX_NEGOTIATED_BATCH * 4;
 /// post-shutdown flush) may take to drain its last bytes before the
 /// reactor gives up on it.
 const DRAIN_GRACE: Duration = Duration::from_secs(5);
+
+/// [`DRAIN_GRACE`] in the reactor's native unit (clock nanoseconds).
+const DRAIN_GRACE_NS: u64 = DRAIN_GRACE.as_nanos() as u64;
 
 /// Idle ticks spent yielding before the reactor starts sleeping.
 const IDLE_TICKS_BEFORE_SLEEP: u32 = 64;
@@ -201,6 +205,11 @@ pub struct EcoptServer {
     listener: TcpListener,
     warm_loaded: usize,
     ctx: Arc<ServiceCtx>,
+    /// Time source of the reactor's per-tick timestamp (ISSUE 7
+    /// satellite): the system wall clock in production, a
+    /// [`crate::util::clock::VirtualClock`] when the tick loop is driven
+    /// by simulated time.
+    clock: Arc<dyn Clock>,
 }
 
 impl EcoptServer {
@@ -240,7 +249,14 @@ impl EcoptServer {
             listener,
             warm_loaded,
             ctx,
+            clock: Arc::new(SystemClock::new()),
         })
+    }
+
+    /// Replace the reactor's time source (tests / simulator harnesses).
+    pub fn with_clock(mut self, clock: Arc<dyn Clock>) -> Self {
+        self.clock = clock;
+        self
     }
 
     /// The address actually bound (resolves port 0).
@@ -277,9 +293,10 @@ impl EcoptServer {
         let done: TaskQueue<BatchDone> = TaskQueue::new();
         let submit_ref = &submit;
         let done_ref = &done;
+        let clock = &*self.clock;
         WorkerPool::new(workers + 1).run(workers + 1, |i| {
             if i == 0 {
-                reactor_loop(listener, ctx, submit_ref, done_ref);
+                reactor_loop(listener, ctx, submit_ref, done_ref, clock);
                 // Reactor gone: let the dispatch workers drain and exit.
                 submit_ref.close();
             } else {
@@ -356,8 +373,9 @@ struct Conn {
     shed: bool,
     /// Negotiated envelope size (None = plain v1 lines).
     mode: Option<usize>,
-    /// Drain deadline for closing connections.
-    expires: Option<Instant>,
+    /// Drain deadline for closing connections, in clock nanoseconds
+    /// (compared against the ONE timestamp the reactor takes per tick).
+    expires: Option<u64>,
 }
 
 impl Conn {
@@ -377,12 +395,12 @@ impl Conn {
         }
     }
 
-    fn shed(stream: TcpStream, response: Vec<u8>) -> Conn {
+    fn shed(stream: TcpStream, response: Vec<u8>, now_ns: u64) -> Conn {
         Conn {
             out: response,
             close_after_write: true,
             shed: true,
-            expires: Some(Instant::now() + DRAIN_GRACE),
+            expires: Some(now_ns + DRAIN_GRACE_NS),
             ..Conn::new(stream)
         }
     }
@@ -416,11 +434,17 @@ struct ConnAction {
 }
 
 /// The reactor: job 0 of the pool. Owns every socket; never blocks.
+///
+/// Time is read ONCE per tick from `clock` (the bugfix: the old loop
+/// called `Instant::now()` per connection when checking `expires` and
+/// drain deadlines) — which is also what makes the loop drivable by the
+/// simulator's virtual clock.
 fn reactor_loop(
     listener: &TcpListener,
     ctx: &Arc<ServiceCtx>,
     submit: &TaskQueue<Batch>,
     done: &TaskQueue<BatchDone>,
+    clock: &dyn Clock,
 ) {
     let mut conns: HashMap<u64, Conn> = HashMap::new();
     let mut next_token: u64 = 0;
@@ -428,9 +452,12 @@ fn reactor_loop(
     let mut buf = vec![0u8; READ_CHUNK];
     let mut tokens: Vec<u64> = Vec::new();
     let mut idle_ticks: u32 = 0;
-    let mut draining_since: Option<Instant> = None;
+    let mut draining_deadline_ns: Option<u64> = None;
 
     loop {
+        // The tick's single timestamp: every deadline below compares
+        // against this one reading.
+        let now_ns = clock.now_ns();
         let mut progress = false;
         let stopping = ctx.state.shutdown.load(Ordering::SeqCst);
 
@@ -453,7 +480,7 @@ fn reactor_loop(
                             )
                             .into_bytes();
                             line.push(b'\n');
-                            conns.insert(token, Conn::shed(stream, line));
+                            conns.insert(token, Conn::shed(stream, line, now_ns));
                         } else {
                             active += 1;
                             conns.insert(token, Conn::new(stream));
@@ -482,7 +509,7 @@ fn reactor_loop(
             }
             if d.close_conn {
                 conn.close_after_write = true;
-                conn.expires.get_or_insert_with(|| Instant::now() + DRAIN_GRACE);
+                conn.expires.get_or_insert(now_ns + DRAIN_GRACE_NS);
             }
         }
 
@@ -530,8 +557,7 @@ fn reactor_loop(
                                     line.push(b'\n');
                                     conn.out.extend_from_slice(&line);
                                     conn.close_after_write = true;
-                                    conn.expires
-                                        .get_or_insert_with(|| Instant::now() + DRAIN_GRACE);
+                                    conn.expires.get_or_insert(now_ns + DRAIN_GRACE_NS);
                                     conn.acc.clear();
                                     conn.pending.clear();
                                     break;
@@ -615,7 +641,7 @@ fn reactor_loop(
 
                 // 3d. lifecycle.
                 let flush_failed = !conn.out.is_empty();
-                let expired = matches!(conn.expires, Some(t) if Instant::now() > t);
+                let expired = matches!(conn.expires, Some(t) if now_ns > t);
                 if dead {
                     ConnAction {
                         remove: true,
@@ -657,15 +683,14 @@ fn reactor_loop(
 
         // --- 4. shutdown drain -----------------------------------------
         if stopping {
-            let deadline =
-                *draining_since.get_or_insert_with(Instant::now) + DRAIN_GRACE;
+            let deadline = *draining_deadline_ns.get_or_insert(now_ns + DRAIN_GRACE_NS);
             // Idle connections have nothing owed to them; close them now.
             let before = conns.len();
             conns.retain(|_, c| !c.idle());
             if conns.len() != before {
                 progress = true;
             }
-            if conns.is_empty() || Instant::now() > deadline {
+            if conns.is_empty() || now_ns > deadline {
                 break;
             }
         }

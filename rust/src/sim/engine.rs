@@ -1,0 +1,839 @@
+//! The fleet engine: thousands of per-node governor simulations driven
+//! by one tick-accurate event loop.
+//!
+//! # Execution model
+//!
+//! Time is a virtual `u64` tick counter ([`super::TICKS_PER_S`] ticks
+//! per simulated second) — there are **no wall-clock sleeps anywhere**;
+//! a 75-second scenario runs as fast as the CPUs can integrate it. The
+//! run compiles every scheduled occurrence (fault actions, cap checks,
+//! the end marker) into an [`super::event::EventQueue`] up front, then
+//! repeats one rhythm until the end tick:
+//!
+//! 1. **Advance**: every node integrates forward to the batch tick *in
+//!    parallel* (`util::pool`, one mutex-held [`NodeSim`] per job, job
+//!    order = node order). Nodes never interact while advancing, so the
+//!    fan-out is embarrassingly parallel and the result is bit-identical
+//!    for any thread count.
+//! 2. **Apply**: the batch's events fire *sequentially* in push order
+//!    (which is scenario order — see `sim::faults`).
+//! 3. **Observe**: cap-check events record the ground-truth fleet power
+//!    (summed straight from the power process over alive nodes — the
+//!    faultable meters are never consulted for safety).
+//!
+//! Per-node dynamics are the [`replay_run`] mechanics, re-expressed as a
+//! resumable state machine ([`NodeSim::advance_to`]): same governor
+//! cadence, same class-rate work integration, same IPMI beat-clock
+//! metering, with the workload trace looping for the life of the run.
+//!
+//! [`replay_run`]: crate::workloads::phases::replay_run
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::arch::{profile_by_name, ArchProfile};
+use crate::config::{CampaignSpec, ExperimentConfig, Mhz, SvrSpec};
+use crate::coordinator::replay::train_phase_model;
+use crate::energy::{config_grid_arch, EnergyModel, Objective};
+use crate::governors::{by_name, EcoptGovernor, Governor, Pinned};
+use crate::node::{Node, PowerProcess};
+use crate::powermodel::PowerModel;
+use crate::sensors::IpmiMeter;
+use crate::util::pool::WorkerPool;
+use crate::util::rng::Rng;
+use crate::workloads::phases::{
+    apply_class_utils, class_rate, phase_suite, phased_by_name, PhaseClass, PhaseSegment,
+    PhasedWorkload,
+};
+use crate::workloads::runner::RunConfig;
+use crate::{Error, Result};
+
+use super::event::EventQueue;
+use super::faults::{self, FaultAction};
+use super::properties::{self, CapSample, NodeConvergence, PropertyResult};
+use super::scenario::Scenario;
+use super::{secs_to_ticks, ticks_to_secs, SIM_SEED_DOMAIN};
+
+/// Multiplicative work-noise amplitude of simulated nodes (matches the
+/// replay harness default, so fleet traces are as noisy as single-node
+/// ones).
+const WORK_NOISE: f64 = 0.01;
+
+/// Engine knobs that are NOT part of the scenario (and deliberately not
+/// part of the report, which must be byte-identical across them).
+#[derive(Debug, Clone, Default)]
+pub struct SimOptions {
+    /// Worker threads (0 = one per hardware thread).
+    pub threads: usize,
+    /// Cap the timeline at the scenario's `quick_duration_s`.
+    pub quick: bool,
+}
+
+/// Aggregates for one `[[fleet]]` group.
+#[derive(Debug, Clone)]
+pub struct GroupSummary {
+    /// Architecture profile name.
+    pub profile: String,
+    /// Workload name.
+    pub workload: String,
+    /// Governor spec string, as written in the scenario.
+    pub governor: String,
+    /// Node count.
+    pub count: usize,
+    /// Nodes alive at run end.
+    pub alive: usize,
+    /// Crash events absorbed by the group.
+    pub crashes: u64,
+    /// Completed workload traces, summed over the group.
+    pub traces_done: u64,
+    /// Governor decisions taken, summed over the group.
+    pub gov_decisions: u64,
+    /// Ground-truth energy per node, joules, in node order (the report
+    /// layer percentiles these).
+    pub energy_per_node_j: Vec<f64>,
+    /// Meter-measured energy summed over the group, joules — diverges
+    /// from ground truth under drift/dropout faults, which is the point.
+    pub energy_meter_j: f64,
+}
+
+/// Everything one simulation run produced.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Scenario name.
+    pub scenario: String,
+    /// Scenario description.
+    pub description: String,
+    /// Effective simulated duration, seconds.
+    pub duration_s: f64,
+    /// Whether quick mode capped the timeline.
+    pub quick: bool,
+    /// Total nodes simulated.
+    pub total_nodes: usize,
+    /// Nodes alive at run end.
+    pub final_alive: usize,
+    /// Fault actions applied.
+    pub fault_actions: usize,
+    /// Ground-truth fleet energy, joules.
+    pub total_energy_j: f64,
+    /// Peak ground-truth fleet power over the cap trace, watts.
+    pub peak_power_w: f64,
+    /// Per-group aggregates, in scenario group order.
+    pub groups: Vec<GroupSummary>,
+    /// Ground-truth fleet power samples at the cap-check cadence.
+    pub cap_trace: Vec<CapSample>,
+    /// Property verdicts, in scenario order.
+    pub properties: Vec<PropertyResult>,
+}
+
+impl SimReport {
+    /// Whether every scenario property held.
+    pub fn all_pass(&self) -> bool {
+        self.properties.iter().all(|p| p.pass)
+    }
+}
+
+/// What the event loop delivers at a tick. Faults are compiled (and
+/// therefore pushed) before cap checks, so at a shared tick the fleet
+/// mutates first and the cap check observes the post-fault state.
+enum SimEvent {
+    Fault(FaultAction),
+    CapCheck,
+    End,
+}
+
+// ---------------------------------------------------------------------------
+// Per-node state machine
+// ---------------------------------------------------------------------------
+
+/// One simulated node: hardware, governor, looping workload, meter, and
+/// fault state, resumable to any future virtual time.
+struct NodeSim {
+    group: usize,
+    node: Node,
+    power: PowerProcess,
+    governor: Box<dyn Governor>,
+    workload: PhasedWorkload,
+    meter: IpmiMeter,
+    default_dropout: f64,
+    /// Node-local virtual time, seconds.
+    t: f64,
+    dt: f64,
+    is_static: bool,
+    gov_window: f64,
+    util_accum: Vec<f64>,
+    phases: Vec<PhaseSegment>,
+    phase_idx: usize,
+    remaining: f64,
+    traces_done: u64,
+    cached_class: Option<PhaseClass>,
+    cached_rate: f64,
+    cached_watts: f64,
+    // Fault state.
+    alive: bool,
+    stuck: bool,
+    crashes: u64,
+    disrupted: bool,
+    disrupt_clear_t: Option<f64>,
+    reconverge_delay_s: Option<f64>,
+    // Accounting.
+    gov_decisions: u64,
+    energy_true_j: f64,
+}
+
+impl NodeSim {
+    fn new(
+        group: usize,
+        arch: &ArchProfile,
+        governor: Box<dyn Governor>,
+        workload: PhasedWorkload,
+        input: u32,
+        seed: u64,
+        dt: f64,
+    ) -> Result<NodeSim> {
+        let mut node = Node::from_profile(arch.clone())?;
+        let power = PowerProcess::from_profile(arch);
+        let mut rng = Rng::seed_from_u64(seed);
+        let jitter = 1.0 + (rng.f64() * 2.0 - 1.0) * 3.0f64.sqrt() * WORK_NOISE;
+        let mut phases = workload.trace(input);
+        for ph in &mut phases {
+            ph.work *= jitter;
+        }
+        if phases.iter().map(|p| p.work).sum::<f64>() <= 0.0 {
+            return Err(Error::Data(format!(
+                "workload {} input {input} has no work to loop",
+                workload.name
+            )));
+        }
+        let meter = IpmiMeter::from_spec(node.sensor(), seed ^ 0x9E37_79B9_7F4A_7C15)?;
+        let default_dropout = node.sensor().dropout;
+        boot(&mut node)?;
+        let is_static = governor.sampling_period_s().is_infinite();
+        let eff_dt = if is_static { dt.max(1.0) } else { dt };
+        let total = node.total_cores();
+        let cached_watts = power.base_watts(&node);
+        let remaining = phases[0].work;
+        Ok(NodeSim {
+            group,
+            node,
+            power,
+            governor,
+            workload,
+            meter,
+            default_dropout,
+            t: 0.0,
+            dt: eff_dt,
+            is_static,
+            gov_window: f64::INFINITY, // force a sample on the first tick
+            util_accum: vec![0.0; total],
+            phases,
+            phase_idx: 0,
+            remaining,
+            traces_done: 0,
+            cached_class: None,
+            cached_rate: 0.0,
+            cached_watts,
+            alive: true,
+            stuck: false,
+            crashes: 0,
+            disrupted: false,
+            disrupt_clear_t: None,
+            reconverge_delay_s: None,
+            gov_decisions: 0,
+            energy_true_j: 0.0,
+        })
+    }
+
+    /// Integrate the node forward to `t_target` — the [`replay_run`]
+    /// tick body, resumable, with the trace looping.
+    ///
+    /// [`replay_run`]: crate::workloads::phases::replay_run
+    fn advance_to(&mut self, t_target: f64) -> Result<()> {
+        if !self.alive {
+            // Down: no progress, no power, and the BMC's beat clock
+            // skips ahead so missed beats are never retro-delivered.
+            if t_target > self.t {
+                self.t = t_target;
+                self.meter.fast_forward(self.t);
+            }
+            return Ok(());
+        }
+        while self.t + 1e-9 < t_target {
+            let step = self.dt.min(t_target - self.t);
+
+            // (1) Governor cadence over window-averaged load. A stuck
+            // actuator suppresses decisions entirely; the window keeps
+            // accumulating so nothing is lost when it unsticks.
+            self.gov_window += step;
+            if !self.stuck && self.gov_window >= self.governor.sampling_period_s() {
+                for c in 0..self.node.total_cores() {
+                    if self.node.is_online(c) {
+                        self.node
+                            .set_util(c, (self.util_accum[c] / self.gov_window).min(1.0));
+                    }
+                }
+                self.governor.sample(&mut self.node)?;
+                self.gov_decisions += 1;
+                if let (Some(tc), None) = (self.disrupt_clear_t, self.reconverge_delay_s) {
+                    self.reconverge_delay_s = Some((self.t - tc).max(0.0));
+                }
+                self.util_accum.iter_mut().for_each(|u| *u = 0.0);
+                self.gov_window = 0.0;
+                self.cached_class = None; // frequencies/online set may have moved
+            }
+
+            // (2) Work integration, possibly crossing (and wrapping)
+            // phases within the tick.
+            let mut budget = step;
+            while budget > 0.0 {
+                let class = self.phases[self.phase_idx].class;
+                if self.cached_class != Some(class) {
+                    apply_class_utils(&mut self.node, &self.workload, class);
+                    self.cached_rate = class_rate(&self.node, &self.workload, class);
+                    self.cached_watts = self.power.base_watts(&self.node);
+                    self.cached_class = Some(class);
+                }
+                let rate = self.cached_rate;
+                let t_finish = if rate > 0.0 {
+                    self.remaining / rate
+                } else {
+                    f64::INFINITY
+                };
+                let slice = t_finish.min(budget);
+                if !self.is_static {
+                    for c in 0..self.node.total_cores() {
+                        if self.node.is_online(c) {
+                            self.util_accum[c] += self.node.util(c) * slice;
+                        }
+                    }
+                }
+                self.meter
+                    .advance(&self.node, &self.power, self.t + (step - budget), slice);
+                self.energy_true_j += self.cached_watts * slice;
+                if t_finish <= budget {
+                    budget -= t_finish;
+                    self.phase_idx += 1;
+                    if self.phase_idx == self.phases.len() {
+                        self.phase_idx = 0;
+                        self.traces_done += 1;
+                    }
+                    self.remaining = self.phases[self.phase_idx].work;
+                } else {
+                    self.remaining -= rate * budget;
+                    budget = 0.0;
+                }
+            }
+            self.t += step;
+        }
+        Ok(())
+    }
+
+    /// Ground-truth instantaneous draw (0 W while down).
+    fn true_watts(&self) -> f64 {
+        if self.alive {
+            self.power.base_watts(&self.node)
+        } else {
+            0.0
+        }
+    }
+
+    fn apply(&mut self, action: &FaultAction, t_now: f64) -> Result<()> {
+        match *action {
+            FaultAction::DropoutStart { rate, .. } => self.meter.set_dropout(rate)?,
+            FaultAction::DropoutEnd { .. } => self.meter.set_dropout(self.default_dropout)?,
+            FaultAction::DriftStart { drift_w, .. } => self.meter.set_bias_w(drift_w),
+            FaultAction::DriftEnd { .. } => self.meter.set_bias_w(0.0),
+            FaultAction::StuckStart { .. } => self.stuck = true,
+            FaultAction::StuckEnd { .. } => {
+                if self.stuck {
+                    self.stuck = false;
+                    self.arm_reconvergence(t_now);
+                }
+            }
+            FaultAction::Crash { .. } => {
+                if self.alive {
+                    self.alive = false;
+                    self.stuck = false;
+                    self.crashes += 1;
+                    self.disrupted = true;
+                    self.disrupt_clear_t = None;
+                    self.reconverge_delay_s = None;
+                }
+            }
+            FaultAction::Rejoin { .. } => {
+                if !self.alive {
+                    self.alive = true;
+                    boot(&mut self.node)?;
+                    self.governor.reset();
+                    self.gov_window = f64::INFINITY;
+                    self.util_accum.iter_mut().for_each(|u| *u = 0.0);
+                    self.cached_class = None;
+                    self.arm_reconvergence(t_now);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// A disruptive fault just cleared: the reconvergence clock starts
+    /// now and stops at the next governor decision.
+    fn arm_reconvergence(&mut self, t_now: f64) {
+        self.disrupted = true;
+        self.disrupt_clear_t = Some(t_now);
+        self.reconverge_delay_s = None;
+    }
+
+    fn convergence(&self, node_id: usize) -> NodeConvergence {
+        NodeConvergence {
+            node: node_id,
+            alive: self.alive,
+            disrupted: self.disrupted,
+            delay_s: self.reconverge_delay_s,
+        }
+    }
+}
+
+/// Linux boot state: every core online at the ladder maximum.
+fn boot(node: &mut Node) -> Result<()> {
+    node.set_online_cores(node.total_cores())?;
+    node.set_freq_all(*node.ladder().last().expect("non-empty ladder"))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Governor construction (incl. ecopt model training)
+// ---------------------------------------------------------------------------
+
+/// Trained artifacts for one `(profile, workload, input)` key, shared by
+/// every ecopt-governed node in matching groups.
+struct TrainedBundle {
+    model: EnergyModel,
+    grid: Vec<(Mhz, usize)>,
+}
+
+/// Quick-sized training config: 3 frequency points and one input keep
+/// model training a small fraction of a fleet run while still exercising
+/// the full production pipeline (stress fit → characterization → SVR).
+fn training_config(profile: &str) -> ExperimentConfig {
+    ExperimentConfig {
+        arch: Some(profile.to_string()),
+        campaign: CampaignSpec {
+            freq_points: 3,
+            inputs: vec![1],
+            ..Default::default()
+        },
+        svr: SvrSpec {
+            c: 1_000.0,
+            epsilon: 0.5,
+            max_iter: 100_000,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// Train one `(PowerModel, SvrModel)` bundle per distinct
+/// `(profile, workload, input)` needed by an `ecopt`/`ecopt-edp` group —
+/// through [`train_phase_model`], the exact pipeline the replay harness
+/// uses in production.
+fn train_bundles(
+    scenario: &Scenario,
+    pool: &WorkerPool,
+) -> Result<HashMap<(String, String, u32), TrainedBundle>> {
+    let suite = phase_suite();
+    let mut bundles: HashMap<(String, String, u32), TrainedBundle> = HashMap::new();
+    let mut power_memos: HashMap<String, Option<PowerModel>> = HashMap::new();
+    for g in &scenario.fleet {
+        if !g.governor.starts_with("ecopt") {
+            continue;
+        }
+        let input = g.input.unwrap_or(scenario.input);
+        let key = (g.profile.clone(), g.workload.clone(), input);
+        if bundles.contains_key(&key) {
+            continue;
+        }
+        let arch = profile_by_name(&g.profile)?;
+        let w = phased_by_name(&g.workload)?;
+        let wi = suite.iter().position(|s| s.name == w.name).unwrap_or(0);
+        let cfg = training_config(&g.profile);
+        let rc = RunConfig {
+            dt: 0.1,
+            work_noise: 0.005,
+            seed: scenario.seed,
+            max_sim_s: 1e6,
+            threads: pool.threads(),
+        };
+        let memo = power_memos.entry(g.profile.clone()).or_insert(None);
+        let (power, svr) = train_phase_model(&arch, &cfg, &rc, pool, &w, wi, input, memo)?;
+        let campaign = cfg.campaign.adapted_to(&arch);
+        let grid = config_grid_arch(&campaign, &arch);
+        bundles.insert(
+            key,
+            TrainedBundle {
+                model: EnergyModel::for_arch(power, svr, arch),
+                grid,
+            },
+        );
+    }
+    Ok(bundles)
+}
+
+/// Build one group's governor for one node. `pinned:FxP` and the ecopt
+/// family are sim-level specs; everything else defers to
+/// [`by_name`](crate::governors::by_name).
+fn build_governor(
+    spec: &str,
+    node: &Node,
+    bundle: Option<&TrainedBundle>,
+    input: u32,
+) -> Result<Box<dyn Governor>> {
+    match spec {
+        "ecopt" | "ecopt-edp" => {
+            let b = bundle.ok_or_else(|| {
+                Error::Config(format!("no trained model bundle for governor `{spec}`"))
+            })?;
+            let objective = if spec == "ecopt-edp" {
+                Objective::Edp
+            } else {
+                Objective::Energy
+            };
+            Ok(Box::new(EcoptGovernor::with_objective(
+                b.model.clone(),
+                b.grid.clone(),
+                input,
+                objective,
+            )))
+        }
+        _ => {
+            if let Some(rest) = spec.strip_prefix("pinned:") {
+                let parsed = rest.split_once('x').and_then(|(f, p)| {
+                    Some((f.trim().parse::<Mhz>().ok()?, p.trim().parse::<usize>().ok()?))
+                });
+                let Some((f, p)) = parsed else {
+                    return Err(Error::UnknownGovernor(format!(
+                        "{spec} (expected pinned:<mhz>x<cores>)"
+                    )));
+                };
+                Ok(Box::new(Pinned::new(f, p)))
+            } else {
+                by_name(spec, node)
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The run
+// ---------------------------------------------------------------------------
+
+/// Run a scenario to completion and evaluate its properties.
+///
+/// Deterministic: for a fixed scenario, the report is bit-identical for
+/// any `threads` value (per-node RNG streams are split from the scenario
+/// seed under [`SIM_SEED_DOMAIN`]; nothing reads wall-clock or thread
+/// identity).
+pub fn run_scenario(scenario: &Scenario, opts: &SimOptions) -> Result<SimReport> {
+    scenario.validate()?;
+    let duration_s = scenario.effective_duration_s(opts.quick);
+    let end_tick = secs_to_ticks(duration_s);
+    let pool = WorkerPool::new(opts.threads);
+
+    // Model training for ecopt groups (pool-parallel, deterministic).
+    let bundles = train_bundles(scenario, &pool)?;
+
+    // Node construction, group by group in scenario order.
+    struct NodePlan {
+        group: usize,
+        arch: ArchProfile,
+        workload: PhasedWorkload,
+        governor_spec: String,
+        input: u32,
+    }
+    let mut plans: Vec<NodePlan> = Vec::with_capacity(scenario.total_nodes());
+    for (gi, g) in scenario.fleet.iter().enumerate() {
+        let arch = profile_by_name(&g.profile)?;
+        let workload = phased_by_name(&g.workload)?;
+        let input = g.input.unwrap_or(scenario.input);
+        for _ in 0..g.count {
+            plans.push(NodePlan {
+                group: gi,
+                arch: arch.clone(),
+                workload: workload.clone(),
+                governor_spec: g.governor.clone(),
+                input,
+            });
+        }
+    }
+    let sims: Vec<NodeSim> = pool.try_run(plans.len(), |i| {
+        let p = &plans[i];
+        let g = &scenario.fleet[p.group];
+        let key = (g.profile.clone(), g.workload.clone(), p.input);
+        let seed = Rng::split_seed(scenario.seed ^ SIM_SEED_DOMAIN, i as u64);
+        let node = Node::from_profile(p.arch.clone())?;
+        let governor = build_governor(&p.governor_spec, &node, bundles.get(&key), p.input)?;
+        NodeSim::new(
+            p.group,
+            &p.arch,
+            governor,
+            p.workload.clone(),
+            p.input,
+            seed,
+            scenario.dt_s,
+        )
+    })?;
+    let sims: Vec<Mutex<NodeSim>> = sims.into_iter().map(Mutex::new).collect();
+
+    // Compile the schedule: faults first (so same-tick cap checks see
+    // the post-fault fleet), then the cap-check cadence, then the end.
+    let mut events: EventQueue<SimEvent> = EventQueue::new();
+    for (tick, action) in faults::compile(scenario)? {
+        events.push(tick, SimEvent::Fault(action));
+    }
+    let mut k = 0u64;
+    loop {
+        let tick = secs_to_ticks(k as f64 * scenario.cap_check_period_s);
+        if tick >= end_tick {
+            break;
+        }
+        events.push(tick, SimEvent::CapCheck);
+        k += 1;
+    }
+    events.push(end_tick, SimEvent::CapCheck);
+    events.push(end_tick, SimEvent::End);
+
+    // The loop: advance (parallel) → apply (sequential) → observe.
+    let mut cap_trace: Vec<CapSample> = Vec::new();
+    let mut fault_actions = 0usize;
+    while let Some((tick, batch)) = events.pop_batch() {
+        if tick > end_tick {
+            break;
+        }
+        let t = ticks_to_secs(tick);
+        pool.try_run(sims.len(), |i| {
+            let mut s = sims[i].lock().map_err(|_| poisoned())?;
+            s.advance_to(t)?;
+            Ok(())
+        })?;
+        for ev in batch {
+            match ev {
+                SimEvent::Fault(action) => {
+                    let mut s = sims[action.node()].lock().map_err(|_| poisoned())?;
+                    s.apply(&action, t)?;
+                    fault_actions += 1;
+                }
+                SimEvent::CapCheck => {
+                    let mut watts = 0.0;
+                    let mut alive = 0usize;
+                    for cell in &sims {
+                        let s = cell.lock().map_err(|_| poisoned())?;
+                        watts += s.true_watts();
+                        alive += s.alive as usize;
+                    }
+                    cap_trace.push(CapSample { t_s: t, watts, alive });
+                }
+                SimEvent::End => {}
+            }
+        }
+    }
+
+    // Harvest.
+    let mut groups: Vec<GroupSummary> = scenario
+        .fleet
+        .iter()
+        .map(|g| GroupSummary {
+            profile: g.profile.clone(),
+            workload: g.workload.clone(),
+            governor: g.governor.clone(),
+            count: g.count,
+            alive: 0,
+            crashes: 0,
+            traces_done: 0,
+            gov_decisions: 0,
+            energy_per_node_j: Vec::with_capacity(g.count),
+            energy_meter_j: 0.0,
+        })
+        .collect();
+    let mut convergence: Vec<NodeConvergence> = Vec::with_capacity(sims.len());
+    let mut total_energy_j = 0.0;
+    let mut final_alive = 0usize;
+    for (i, cell) in sims.iter().enumerate() {
+        let s = cell.lock().map_err(|_| poisoned())?;
+        let g = &mut groups[s.group];
+        g.alive += s.alive as usize;
+        g.crashes += s.crashes;
+        g.traces_done += s.traces_done;
+        g.gov_decisions += s.gov_decisions;
+        g.energy_per_node_j.push(s.energy_true_j);
+        g.energy_meter_j += s.meter.energy_joules();
+        total_energy_j += s.energy_true_j;
+        final_alive += s.alive as usize;
+        convergence.push(s.convergence(i));
+    }
+    let peak_power_w = cap_trace.iter().map(|s| s.watts).fold(0.0f64, f64::max);
+    let properties = properties::check(&scenario.properties, &cap_trace, &convergence);
+
+    Ok(SimReport {
+        scenario: scenario.name.clone(),
+        description: scenario.description.clone(),
+        duration_s,
+        quick: opts.quick,
+        total_nodes: sims.len(),
+        final_alive,
+        fault_actions,
+        total_energy_j,
+        peak_power_w,
+        groups,
+        cap_trace,
+        properties,
+    })
+}
+
+fn poisoned() -> Error {
+    Error::Data("a node mutex was poisoned by a panicking worker".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scenario::{
+        FaultKind, FaultSpec, FleetGroup, PhaseSpec, PropertyKind, PropertySpec,
+    };
+    use super::*;
+
+    fn small_scenario() -> Scenario {
+        Scenario {
+            name: "engine-unit".into(),
+            description: String::new(),
+            seed: 11,
+            duration_s: 10.0,
+            quick_duration_s: None,
+            cap_check_period_s: 0.5,
+            dt_s: 0.1,
+            input: 1,
+            fleet: vec![FleetGroup {
+                profile: "mobile-biglittle".into(),
+                count: 6,
+                workload: "duty-cycle".into(),
+                governor: "ondemand".into(),
+                input: None,
+            }],
+            phases: vec![PhaseSpec {
+                name: "steady".into(),
+                start_s: 0.0,
+            }],
+            faults: vec![
+                FaultSpec {
+                    phase: "steady".into(),
+                    kind: FaultKind::Crash {
+                        rejoin_s: Some(2.0),
+                    },
+                    nodes: (0, 2),
+                    at_s: 3.0,
+                },
+                FaultSpec {
+                    phase: "steady".into(),
+                    kind: FaultKind::Crash { rejoin_s: None },
+                    nodes: (2, 3),
+                    at_s: 3.0,
+                },
+                FaultSpec {
+                    phase: "steady".into(),
+                    kind: FaultKind::SensorBlackout { duration_s: 2.0 },
+                    nodes: (4, 6),
+                    at_s: 1.0,
+                },
+            ],
+            properties: vec![
+                PropertySpec {
+                    name: "cap".into(),
+                    kind: PropertyKind::PowerCap { cap_w: 100.0 },
+                },
+                PropertySpec {
+                    name: "live".into(),
+                    kind: PropertyKind::Reconverge { within_s: 1.0 },
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn churn_run_is_deterministic_across_thread_counts() {
+        let s = small_scenario();
+        let r1 = run_scenario(&s, &SimOptions { threads: 1, quick: false }).unwrap();
+        let r4 = run_scenario(&s, &SimOptions { threads: 4, quick: false }).unwrap();
+        assert_eq!(r1.total_energy_j.to_bits(), r4.total_energy_j.to_bits());
+        assert_eq!(r1.cap_trace, r4.cap_trace);
+        assert_eq!(r1.properties, r4.properties);
+    }
+
+    #[test]
+    fn crash_drops_power_and_rejoin_restores_it() {
+        let s = small_scenario();
+        let r = run_scenario(&s, &SimOptions { threads: 1, quick: false }).unwrap();
+        // One node never rejoins.
+        assert_eq!(r.final_alive, 5);
+        assert_eq!(r.groups[0].crashes, 3);
+        // During the outage (t in (3, 5)) fleet power must dip below the
+        // pre-fault level; after every rejoin it must recover.
+        let at = |t: f64| {
+            r.cap_trace
+                .iter()
+                .find(|c| (c.t_s - t).abs() < 1e-9)
+                .expect("cap sample")
+        };
+        assert_eq!(at(3.0).alive, 3); // faults apply before the same-tick check
+        assert!(at(3.5).watts < at(2.5).watts);
+        assert_eq!(at(6.0).alive, 5);
+        // The two rejoiners reconverged (ondemand samples well inside 1 s).
+        let live = &r.properties[1];
+        assert!(live.pass, "{}", live.details);
+        assert!(live.details.contains("2 disrupted survivors"), "{}", live.details);
+    }
+
+    #[test]
+    fn meter_drift_skews_measured_but_not_true_energy() {
+        let mut s = small_scenario();
+        s.faults = vec![FaultSpec {
+            phase: "steady".into(),
+            kind: FaultKind::MeterDrift {
+                drift_w: 50.0,
+                duration_s: 5.0,
+            },
+            nodes: (0, 6),
+            at_s: 0.0,
+        }];
+        s.properties.truncate(1);
+        let drifted = run_scenario(&s, &SimOptions { threads: 2, quick: false }).unwrap();
+        s.faults.clear();
+        let clean = run_scenario(&s, &SimOptions { threads: 2, quick: false }).unwrap();
+        // Ground truth is identical; the measured channel is inflated.
+        assert_eq!(
+            drifted.total_energy_j.to_bits(),
+            clean.total_energy_j.to_bits()
+        );
+        assert!(drifted.groups[0].energy_meter_j > clean.groups[0].energy_meter_j + 100.0);
+    }
+
+    #[test]
+    fn stuck_freq_arms_reconvergence() {
+        let mut s = small_scenario();
+        s.faults = vec![FaultSpec {
+            phase: "steady".into(),
+            kind: FaultKind::StuckFreq { duration_s: 2.0 },
+            nodes: (0, 3),
+            at_s: 2.0,
+        }];
+        let r = run_scenario(&s, &SimOptions { threads: 1, quick: false }).unwrap();
+        let live = &r.properties[1];
+        assert!(live.pass, "{}", live.details);
+        assert!(live.details.contains("3 disrupted survivors"), "{}", live.details);
+    }
+
+    #[test]
+    fn quick_mode_caps_the_timeline_only() {
+        let mut s = small_scenario();
+        s.quick_duration_s = Some(4.0);
+        let r = run_scenario(&s, &SimOptions { threads: 1, quick: true }).unwrap();
+        assert_eq!(r.duration_s, 4.0);
+        assert_eq!(r.total_nodes, 6);
+        assert!((r.cap_trace.last().unwrap().t_s - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,140 @@
+//! Deterministic tick-ordered event queue (the simulator's spine).
+//!
+//! A binary min-heap keyed on `(tick, seq)` where `seq` is the push
+//! order: two events scheduled for the same tick pop in the order they
+//! were scheduled, which the engine makes deterministic by compiling the
+//! whole schedule in scenario order before the run starts. Payloads
+//! never participate in the ordering, so they need no `Ord`.
+//!
+//! [`EventQueue::pop_batch`] drains **every** event of the earliest
+//! pending tick at once — the engine advances the fleet to that tick
+//! exactly once, then applies the whole batch, so simultaneous events
+//! cannot observe half-advanced state.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+struct Event<T> {
+    tick: u64,
+    seq: u64,
+    payload: T,
+}
+
+impl<T> PartialEq for Event<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.tick == other.tick && self.seq == other.seq
+    }
+}
+impl<T> Eq for Event<T> {}
+
+impl<T> PartialOrd for Event<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Event<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want the EARLIEST
+        // (tick, seq) on top.
+        other
+            .tick
+            .cmp(&self.tick)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Priority queue of `(tick, payload)` events with deterministic
+/// same-tick ordering (push order).
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Event<T>>,
+    next_seq: u64,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    /// An empty queue.
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            next_seq: 0,
+        }
+    }
+
+    /// Schedule `payload` at `tick`.
+    pub fn push(&mut self, tick: u64, payload: T) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Event {
+            tick,
+            seq,
+            payload,
+        });
+    }
+
+    /// Pending event count.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Whether the queue is drained.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// The earliest pending tick, if any.
+    pub fn peek_tick(&self) -> Option<u64> {
+        self.heap.peek().map(|e| e.tick)
+    }
+
+    /// Remove and return ALL events of the earliest pending tick, in
+    /// push order. `None` when the queue is empty.
+    pub fn pop_batch(&mut self) -> Option<(u64, Vec<T>)> {
+        let first = self.heap.pop()?;
+        let tick = first.tick;
+        let mut batch = vec![first.payload];
+        while self.heap.peek().is_some_and(|e| e.tick == tick) {
+            batch.push(self.heap.pop().expect("peeked").payload);
+        }
+        Some((tick, batch))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_tick_order_with_push_order_ties() {
+        let mut q = EventQueue::new();
+        q.push(30, "c");
+        q.push(10, "a1");
+        q.push(20, "b");
+        q.push(10, "a2");
+        q.push(10, "a3");
+        assert_eq!(q.len(), 5);
+        assert_eq!(q.peek_tick(), Some(10));
+        assert_eq!(q.pop_batch(), Some((10, vec!["a1", "a2", "a3"])));
+        assert_eq!(q.pop_batch(), Some((20, vec!["b"])));
+        assert_eq!(q.pop_batch(), Some((30, vec!["c"])));
+        assert_eq!(q.pop_batch(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn interleaved_pushes_keep_determinism() {
+        let mut q = EventQueue::new();
+        q.push(5, 1);
+        assert_eq!(q.pop_batch(), Some((5, vec![1])));
+        q.push(7, 2);
+        q.push(7, 3);
+        q.push(6, 4);
+        assert_eq!(q.pop_batch(), Some((6, vec![4])));
+        assert_eq!(q.pop_batch(), Some((7, vec![2, 3])));
+    }
+}

@@ -1,0 +1,227 @@
+//! Fault-schedule compilation: scenario-level [`FaultSpec`]s become a
+//! flat, deterministic list of per-node actions with absolute ticks.
+//!
+//! Compilation happens **once, before the run**, in scenario order
+//! (spec order, then ascending node index, start before end), so the
+//! event queue's same-tick tie-break — push order — is a pure function
+//! of the scenario file. Nothing about thread count or wall-clock can
+//! reorder fault delivery.
+
+use crate::Result;
+
+use super::scenario::{FaultKind, Scenario};
+use super::secs_to_ticks;
+
+/// One concrete action against one node at one tick.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultAction {
+    /// Raise the node's sensor dropout to `rate`.
+    DropoutStart {
+        /// Target node (global index).
+        node: usize,
+        /// Dropout probability while active.
+        rate: f64,
+    },
+    /// Restore the node's profile-default sensor dropout.
+    DropoutEnd {
+        /// Target node (global index).
+        node: usize,
+    },
+    /// Add `drift_w` of calibration bias to the node's meter.
+    DriftStart {
+        /// Target node (global index).
+        node: usize,
+        /// Additive bias, watts.
+        drift_w: f64,
+    },
+    /// Remove the meter calibration bias.
+    DriftEnd {
+        /// Target node (global index).
+        node: usize,
+    },
+    /// Freeze the node's frequency actuator (governor decisions are
+    /// computed but not applied).
+    StuckStart {
+        /// Target node (global index).
+        node: usize,
+    },
+    /// Unfreeze the actuator; arms the reconvergence clock.
+    StuckEnd {
+        /// Target node (global index).
+        node: usize,
+    },
+    /// Kill the node: 0 W, no progress, silent sensor.
+    Crash {
+        /// Target node (global index).
+        node: usize,
+    },
+    /// Bring a crashed node back in boot state; arms the
+    /// reconvergence clock.
+    Rejoin {
+        /// Target node (global index).
+        node: usize,
+    },
+}
+
+impl FaultAction {
+    /// The node the action targets.
+    pub fn node(&self) -> usize {
+        match *self {
+            FaultAction::DropoutStart { node, .. }
+            | FaultAction::DropoutEnd { node }
+            | FaultAction::DriftStart { node, .. }
+            | FaultAction::DriftEnd { node }
+            | FaultAction::StuckStart { node }
+            | FaultAction::StuckEnd { node }
+            | FaultAction::Crash { node }
+            | FaultAction::Rejoin { node } => node,
+        }
+    }
+}
+
+/// Compile the scenario's fault schedule into `(tick, action)` pairs in
+/// deterministic push order. End actions falling past the run end are
+/// still emitted — the engine simply stops before reaching them.
+pub fn compile(scenario: &Scenario) -> Result<Vec<(u64, FaultAction)>> {
+    let mut out = Vec::new();
+    for spec in &scenario.faults {
+        let t0 = scenario.phase_start(&spec.phase)? + spec.at_s;
+        let start = secs_to_ticks(t0);
+        for node in spec.nodes.0..spec.nodes.1 {
+            match spec.kind {
+                FaultKind::SensorDropout { rate, duration_s } => {
+                    out.push((start, FaultAction::DropoutStart { node, rate }));
+                    out.push((secs_to_ticks(t0 + duration_s), FaultAction::DropoutEnd { node }));
+                }
+                FaultKind::SensorBlackout { duration_s } => {
+                    out.push((start, FaultAction::DropoutStart { node, rate: 1.0 }));
+                    out.push((secs_to_ticks(t0 + duration_s), FaultAction::DropoutEnd { node }));
+                }
+                FaultKind::MeterDrift { drift_w, duration_s } => {
+                    out.push((start, FaultAction::DriftStart { node, drift_w }));
+                    out.push((secs_to_ticks(t0 + duration_s), FaultAction::DriftEnd { node }));
+                }
+                FaultKind::StuckFreq { duration_s } => {
+                    out.push((start, FaultAction::StuckStart { node }));
+                    out.push((secs_to_ticks(t0 + duration_s), FaultAction::StuckEnd { node }));
+                }
+                FaultKind::Crash { rejoin_s } => {
+                    out.push((start, FaultAction::Crash { node }));
+                    if let Some(r) = rejoin_s {
+                        out.push((secs_to_ticks(t0 + r), FaultAction::Rejoin { node }));
+                    }
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scenario::{FaultSpec, PropertyKind, PropertySpec};
+    use super::*;
+
+    fn base() -> Scenario {
+        Scenario {
+            name: "f".into(),
+            description: String::new(),
+            seed: 1,
+            duration_s: 20.0,
+            quick_duration_s: None,
+            cap_check_period_s: 1.0,
+            dt_s: 0.1,
+            input: 1,
+            fleet: vec![super::super::scenario::FleetGroup {
+                profile: "mobile-biglittle".into(),
+                count: 8,
+                workload: "duty-cycle".into(),
+                governor: "ondemand".into(),
+                input: None,
+            }],
+            phases: vec![
+                super::super::scenario::PhaseSpec {
+                    name: "steady".into(),
+                    start_s: 0.0,
+                },
+                super::super::scenario::PhaseSpec {
+                    name: "late".into(),
+                    start_s: 10.0,
+                },
+            ],
+            faults: Vec::new(),
+            properties: vec![PropertySpec {
+                name: "p".into(),
+                kind: PropertyKind::PowerCap { cap_w: 1.0 },
+            }],
+        }
+    }
+
+    #[test]
+    fn crash_with_rejoin_emits_both_anchored_to_the_phase() {
+        let mut s = base();
+        s.faults.push(FaultSpec {
+            phase: "late".into(),
+            kind: FaultKind::Crash {
+                rejoin_s: Some(2.5),
+            },
+            nodes: (3, 5),
+            at_s: 0.5,
+        });
+        let actions = compile(&s).unwrap();
+        assert_eq!(
+            actions,
+            vec![
+                (secs_to_ticks(10.5), FaultAction::Crash { node: 3 }),
+                (secs_to_ticks(13.0), FaultAction::Rejoin { node: 3 }),
+                (secs_to_ticks(10.5), FaultAction::Crash { node: 4 }),
+                (secs_to_ticks(13.0), FaultAction::Rejoin { node: 4 }),
+            ]
+        );
+    }
+
+    #[test]
+    fn blackout_is_dropout_one() {
+        let mut s = base();
+        s.faults.push(FaultSpec {
+            phase: "steady".into(),
+            kind: FaultKind::SensorBlackout { duration_s: 4.0 },
+            nodes: (0, 1),
+            at_s: 1.0,
+        });
+        let actions = compile(&s).unwrap();
+        assert_eq!(
+            actions,
+            vec![
+                (
+                    secs_to_ticks(1.0),
+                    FaultAction::DropoutStart { node: 0, rate: 1.0 }
+                ),
+                (secs_to_ticks(5.0), FaultAction::DropoutEnd { node: 0 }),
+            ]
+        );
+    }
+
+    #[test]
+    fn schedule_order_is_spec_then_node() {
+        let mut s = base();
+        s.faults.push(FaultSpec {
+            phase: "steady".into(),
+            kind: FaultKind::StuckFreq { duration_s: 1.0 },
+            nodes: (6, 8),
+            at_s: 2.0,
+        });
+        s.faults.push(FaultSpec {
+            phase: "steady".into(),
+            kind: FaultKind::MeterDrift {
+                drift_w: 5.0,
+                duration_s: 1.0,
+            },
+            nodes: (0, 1),
+            at_s: 2.0,
+        });
+        let nodes: Vec<usize> = compile(&s).unwrap().iter().map(|a| a.1.node()).collect();
+        // Spec order first (stuck on 6,7), then the drift spec (node 0).
+        assert_eq!(nodes, vec![6, 6, 7, 7, 0, 0]);
+    }
+}

@@ -1,0 +1,234 @@
+//! End-of-run property checking: named safety and liveness claims a
+//! scenario makes about the whole fleet, evaluated over traces the
+//! engine records while it runs.
+//!
+//! * **Safety** ([`PropertyKind::PowerCap`]): the ground-truth fleet
+//!   power draw — summed from the power process, NOT from the faultable
+//!   meters — never exceeds the cap at any cap-check sample. Sensor
+//!   faults therefore cannot mask a real violation.
+//! * **Liveness** ([`PropertyKind::Reconverge`]): every node that
+//!   survived a disruptive fault (stuck actuator cleared, crash
+//!   rejoined) records a fresh governor decision within the allowed
+//!   window of the disruption clearing.
+
+use super::scenario::{PropertyKind, PropertySpec};
+
+/// One ground-truth fleet power sample, taken at the cap-check cadence.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CapSample {
+    /// Simulated time of the sample, seconds.
+    pub t_s: f64,
+    /// Ground-truth fleet power, watts (alive nodes only).
+    pub watts: f64,
+    /// Alive node count at the sample.
+    pub alive: usize,
+}
+
+/// Per-node convergence bookkeeping the engine hands to the checker.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeConvergence {
+    /// Global node index.
+    pub node: usize,
+    /// Whether the node is alive at run end.
+    pub alive: bool,
+    /// Whether a disruptive fault cleared on this node during the run.
+    pub disrupted: bool,
+    /// Seconds from the last disruption clearing to the next governor
+    /// decision; `None` if no decision landed before the run ended.
+    pub delay_s: Option<f64>,
+}
+
+/// Verdict for one named property.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PropertyResult {
+    /// Property name from the scenario.
+    pub name: String,
+    /// Property kind string (`power_cap`, `reconverge`).
+    pub kind: String,
+    /// Whether the property held.
+    pub pass: bool,
+    /// Human-readable evidence (peak power, worst delay, ...).
+    pub details: String,
+}
+
+/// Evaluate every scenario property against the recorded traces.
+pub fn check(
+    properties: &[PropertySpec],
+    cap_trace: &[CapSample],
+    convergence: &[NodeConvergence],
+) -> Vec<PropertyResult> {
+    properties
+        .iter()
+        .map(|p| match p.kind {
+            PropertyKind::PowerCap { cap_w } => check_power_cap(p, cap_w, cap_trace),
+            PropertyKind::Reconverge { within_s } => check_reconverge(p, within_s, convergence),
+        })
+        .collect()
+}
+
+fn check_power_cap(p: &PropertySpec, cap_w: f64, trace: &[CapSample]) -> PropertyResult {
+    let peak = trace.iter().copied().max_by(|a, b| a.watts.total_cmp(&b.watts));
+    let (pass, details) = match peak {
+        Some(s) => (
+            s.watts <= cap_w,
+            format!(
+                "peak {:.1} W at t={:.2} s ({} nodes alive) vs cap {:.1} W over {} samples",
+                s.watts,
+                s.t_s,
+                s.alive,
+                cap_w,
+                trace.len()
+            ),
+        ),
+        // An empty trace proves nothing; fail loudly rather than
+        // vacuously pass a safety property.
+        None => (false, "no cap-check samples were recorded".to_string()),
+    };
+    PropertyResult {
+        name: p.name.clone(),
+        kind: p.kind.name().to_string(),
+        pass,
+        details,
+    }
+}
+
+fn check_reconverge(
+    p: &PropertySpec,
+    within_s: f64,
+    convergence: &[NodeConvergence],
+) -> PropertyResult {
+    // Only survivors owe us reconvergence; a permanently-lost node is
+    // the cap property's problem, not a liveness failure.
+    let survivors: Vec<&NodeConvergence> = convergence
+        .iter()
+        .filter(|c| c.disrupted && c.alive)
+        .collect();
+    let mut late = 0usize;
+    let mut never = 0usize;
+    let mut worst: Option<f64> = None;
+    for c in &survivors {
+        match c.delay_s {
+            Some(d) => {
+                if d > within_s {
+                    late += 1;
+                }
+                worst = Some(worst.map_or(d, |w: f64| w.max(d)));
+            }
+            None => never += 1,
+        }
+    }
+    let pass = late == 0 && never == 0;
+    let details = if survivors.is_empty() {
+        "no surviving node was disrupted".to_string()
+    } else {
+        format!(
+            "{} disrupted survivors, worst delay {} vs allowed {:.2} s ({} late, {} never reconverged)",
+            survivors.len(),
+            worst.map_or_else(|| "n/a".to_string(), |w| format!("{w:.3} s")),
+            within_s,
+            late,
+            never
+        )
+    };
+    PropertyResult {
+        name: p.name.clone(),
+        kind: p.kind.name().to_string(),
+        pass,
+        details,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn props() -> Vec<PropertySpec> {
+        vec![
+            PropertySpec {
+                name: "cap".into(),
+                kind: PropertyKind::PowerCap { cap_w: 100.0 },
+            },
+            PropertySpec {
+                name: "live".into(),
+                kind: PropertyKind::Reconverge { within_s: 2.0 },
+            },
+        ]
+    }
+
+    fn sample(t_s: f64, watts: f64) -> CapSample {
+        CapSample {
+            t_s,
+            watts,
+            alive: 3,
+        }
+    }
+
+    #[test]
+    fn power_cap_passes_under_and_fails_over() {
+        let ok = check(&props(), &[sample(0.0, 40.0), sample(1.0, 99.9)], &[]);
+        assert!(ok[0].pass, "{}", ok[0].details);
+        let bad = check(&props(), &[sample(0.0, 40.0), sample(1.0, 100.1)], &[]);
+        assert!(!bad[0].pass);
+        assert!(bad[0].details.contains("100.1"), "{}", bad[0].details);
+        assert!(bad[0].details.contains("t=1.00"), "{}", bad[0].details);
+    }
+
+    #[test]
+    fn empty_cap_trace_fails_loudly() {
+        let r = check(&props(), &[], &[]);
+        assert!(!r[0].pass);
+    }
+
+    #[test]
+    fn reconverge_judges_only_disrupted_survivors() {
+        let conv = [
+            // Clean node: ignored.
+            NodeConvergence {
+                node: 0,
+                alive: true,
+                disrupted: false,
+                delay_s: None,
+            },
+            // Disrupted, reconverged fast: ok.
+            NodeConvergence {
+                node: 1,
+                alive: true,
+                disrupted: true,
+                delay_s: Some(0.4),
+            },
+            // Permanently crashed: exempt.
+            NodeConvergence {
+                node: 2,
+                alive: false,
+                disrupted: true,
+                delay_s: None,
+            },
+        ];
+        let r = check(&props(), &[sample(0.0, 1.0)], &conv);
+        assert!(r[1].pass, "{}", r[1].details);
+        assert!(r[1].details.contains("1 disrupted survivors"));
+    }
+
+    #[test]
+    fn reconverge_fails_on_late_or_never() {
+        let late = [NodeConvergence {
+            node: 0,
+            alive: true,
+            disrupted: true,
+            delay_s: Some(2.5),
+        }];
+        let r = check(&props(), &[sample(0.0, 1.0)], &late);
+        assert!(!r[1].pass);
+        assert!(r[1].details.contains("1 late"), "{}", r[1].details);
+
+        let never = [NodeConvergence {
+            node: 0,
+            alive: true,
+            disrupted: true,
+            delay_s: None,
+        }];
+        let r = check(&props(), &[sample(0.0, 1.0)], &never);
+        assert!(!r[1].pass);
+        assert!(r[1].details.contains("1 never"), "{}", r[1].details);
+    }
+}

@@ -1,0 +1,833 @@
+//! Scenario files: the human-readable description of one fleet
+//! simulation — fleet composition, workload phases, fault schedule, and
+//! the safety/liveness properties to check at the end.
+//!
+//! Scenarios are TOML (the [`super::toml`] subset). [`Scenario::parse`]
+//! rejects unknown keys, unknown tables, and malformed sections with
+//! errors that carry the **line number** of the offending construct, and
+//! [`Scenario::to_toml`] writes a canonical form that parses back to an
+//! equal [`Scenario`] (locked by `tests/sim_scenarios.rs`).
+//!
+//! Times are plain seconds here; the engine converts to integer ticks.
+//! Node indices are **global**: fleet groups lay their nodes out
+//! contiguously in declaration order, so `nodes = "0..60"` in a fault
+//! targets the first sixty nodes of the first group(s).
+
+use crate::arch::profile_by_name;
+use crate::workloads::phases::phased_by_name;
+use crate::{Error, Result};
+
+use super::toml::{self, Entry, Table, Value};
+
+/// One homogeneous group of simulated nodes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetGroup {
+    /// Architecture-registry profile name.
+    pub profile: String,
+    /// Number of nodes in the group.
+    pub count: usize,
+    /// Phased-workload name (see `workloads::phases::phase_suite`).
+    pub workload: String,
+    /// Governor spec: a Linux governor name (`ondemand`, ...),
+    /// `userspace:F`, `pinned:FxP`, `ecopt`, or `ecopt-edp`.
+    pub governor: String,
+    /// Input size override for this group (defaults to the scenario's).
+    pub input: Option<u32>,
+}
+
+/// A named point on the scenario timeline; faults anchor to phases.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseSpec {
+    /// Phase name (unique).
+    pub name: String,
+    /// Absolute phase start, seconds (first phase starts at 0).
+    pub start_s: f64,
+}
+
+/// What a fault does to its target nodes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultKind {
+    /// Raise the sensor dropout probability to `rate` for `duration_s`.
+    SensorDropout {
+        /// Dropout probability while the fault is active, in [0, 1].
+        rate: f64,
+        /// Fault duration, seconds.
+        duration_s: f64,
+    },
+    /// Total sensor blackout (dropout 1.0) for `duration_s`.
+    SensorBlackout {
+        /// Fault duration, seconds.
+        duration_s: f64,
+    },
+    /// Additive meter calibration drift of `drift_w` watts.
+    MeterDrift {
+        /// Bias added to every sample while active, watts.
+        drift_w: f64,
+        /// Fault duration, seconds.
+        duration_s: f64,
+    },
+    /// Stuck frequency actuator: governor decisions stop being applied.
+    StuckFreq {
+        /// Fault duration, seconds.
+        duration_s: f64,
+    },
+    /// Node crash: 0 W, no progress, silent sensor. Rejoins in boot
+    /// state after `rejoin_s` (never, if `None`).
+    Crash {
+        /// Seconds until the node rejoins (`None` = permanent loss).
+        rejoin_s: Option<f64>,
+    },
+}
+
+impl FaultKind {
+    /// The scenario-file kind string.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::SensorDropout { .. } => "sensor_dropout",
+            FaultKind::SensorBlackout { .. } => "sensor_blackout",
+            FaultKind::MeterDrift { .. } => "meter_drift",
+            FaultKind::StuckFreq { .. } => "stuck_freq",
+            FaultKind::Crash { .. } => "crash",
+        }
+    }
+
+    /// Whether the fault perturbs actuation/liveness (and therefore
+    /// arms the reconvergence property when it clears). Sensor faults
+    /// only degrade measurements — governors never see them.
+    pub fn is_disruptive(&self) -> bool {
+        matches!(self, FaultKind::StuckFreq { .. } | FaultKind::Crash { .. })
+    }
+}
+
+/// One scheduled fault over a contiguous global node range.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// Phase the fault anchors to.
+    pub phase: String,
+    /// What happens.
+    pub kind: FaultKind,
+    /// Half-open global node index range `[start, end)`.
+    pub nodes: (usize, usize),
+    /// Offset from the phase start, seconds.
+    pub at_s: f64,
+}
+
+/// A named end-of-run property.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PropertyKind {
+    /// Safety: ground-truth fleet power never exceeds `cap_w` at any
+    /// cap-check tick.
+    PowerCap {
+        /// Global power cap, watts.
+        cap_w: f64,
+    },
+    /// Liveness: every surviving node whose last disruptive fault
+    /// cleared records a fresh governor decision within `within_s`.
+    Reconverge {
+        /// Allowed reconvergence delay, seconds.
+        within_s: f64,
+    },
+}
+
+impl PropertyKind {
+    /// The scenario-file kind string.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PropertyKind::PowerCap { .. } => "power_cap",
+            PropertyKind::Reconverge { .. } => "reconverge",
+        }
+    }
+}
+
+/// One property to check when the run ends.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PropertySpec {
+    /// Property name (unique; shown in the report).
+    pub name: String,
+    /// What to check.
+    pub kind: PropertyKind,
+}
+
+/// A complete scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    /// Scenario name.
+    pub name: String,
+    /// Free-form description.
+    pub description: String,
+    /// Base RNG seed (per-node streams split from it).
+    pub seed: u64,
+    /// Simulated duration, seconds.
+    pub duration_s: f64,
+    /// `--quick` duration cap, seconds (`None` = no quick mode cap).
+    /// Quick mode NEVER shrinks the fleet — only the timeline.
+    pub quick_duration_s: Option<f64>,
+    /// Cadence of the global power-cap checks, seconds.
+    pub cap_check_period_s: f64,
+    /// Simulator tick, seconds.
+    pub dt_s: f64,
+    /// Default workload input size (1-based).
+    pub input: u32,
+    /// Node groups, laid out contiguously in this order.
+    pub fleet: Vec<FleetGroup>,
+    /// Timeline phases, strictly increasing, first at 0 s.
+    pub phases: Vec<PhaseSpec>,
+    /// Fault schedule.
+    pub faults: Vec<FaultSpec>,
+    /// End-of-run properties.
+    pub properties: Vec<PropertySpec>,
+}
+
+// ---------------------------------------------------------------------------
+// Typed table access with unknown-key rejection
+// ---------------------------------------------------------------------------
+
+/// Tracks which keys of a table were consumed; `finish` rejects the
+/// rest with their line numbers.
+struct Keys<'a> {
+    table: &'a Table,
+    ctx: &'a str,
+    used: Vec<&'a str>,
+}
+
+impl<'a> Keys<'a> {
+    fn new(table: &'a Table, ctx: &'a str) -> Self {
+        Keys {
+            table,
+            ctx,
+            used: Vec::new(),
+        }
+    }
+
+    fn entry(&mut self, key: &'a str) -> Option<&'a Entry> {
+        self.used.push(key);
+        self.table.get(key)
+    }
+
+    fn require(&mut self, key: &'a str) -> Result<&'a Entry> {
+        let (line, ctx) = (self.table.line, self.ctx);
+        self.entry(key).ok_or_else(|| {
+            Error::Config(format!(
+                "line {line}: [{ctx}] is missing required key `{key}`"
+            ))
+        })
+    }
+
+    fn str(&mut self, key: &'a str) -> Result<String> {
+        let e = self.require(key)?;
+        match &e.value {
+            Value::Str(s) => Ok(s.clone()),
+            other => Err(type_err(e, key, "string", other)),
+        }
+    }
+
+    fn f64(&mut self, key: &'a str) -> Result<f64> {
+        let e = self.require(key)?;
+        as_f64(e, key)
+    }
+
+    fn opt_f64(&mut self, key: &'a str) -> Result<Option<f64>> {
+        match self.entry(key) {
+            Some(e) => Ok(Some(as_f64(e, key)?)),
+            None => Ok(None),
+        }
+    }
+
+    fn u64(&mut self, key: &'a str) -> Result<u64> {
+        let e = self.require(key)?;
+        as_u64(e, key)
+    }
+
+    fn usize_of(&mut self, key: &'a str) -> Result<usize> {
+        Ok(self.u64(key)? as usize)
+    }
+
+    fn opt_u32(&mut self, key: &'a str) -> Result<Option<u32>> {
+        match self.entry(key) {
+            Some(e) => {
+                let v = as_u64(e, key)?;
+                u32::try_from(v)
+                    .map(Some)
+                    .map_err(|_| type_err(e, key, "u32 integer", &e.value))
+            }
+            None => Ok(None),
+        }
+    }
+
+    fn finish(self) -> Result<()> {
+        for e in &self.table.entries {
+            if !self.used.contains(&e.key.as_str()) {
+                return Err(Error::Config(format!(
+                    "line {}: unknown key `{}` in [{}]",
+                    e.line, e.key, self.ctx
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn type_err(e: &Entry, key: &str, want: &str, got: &Value) -> Error {
+    Error::Config(format!(
+        "line {}: key `{key}` must be a {want}, got {}",
+        e.line,
+        got.type_name()
+    ))
+}
+
+fn as_f64(e: &Entry, key: &str) -> Result<f64> {
+    match &e.value {
+        Value::Float(f) => Ok(*f),
+        Value::Int(i) => Ok(*i as f64),
+        other => Err(type_err(e, key, "number", other)),
+    }
+}
+
+fn as_u64(e: &Entry, key: &str) -> Result<u64> {
+    match &e.value {
+        Value::Int(i) if *i >= 0 => Ok(*i as u64),
+        other => Err(type_err(e, key, "non-negative integer", other)),
+    }
+}
+
+fn parse_node_range(s: &str, line: usize) -> Result<(usize, usize)> {
+    let parsed = s.split_once("..").and_then(|(a, b)| {
+        Some((a.trim().parse::<usize>().ok()?, b.trim().parse::<usize>().ok()?))
+    });
+    match parsed {
+        Some((a, b)) if b > a => Ok((a, b)),
+        _ => Err(Error::Config(format!(
+            "line {line}: `nodes` must be a non-empty half-open range like \"0..60\", got \"{s}\""
+        ))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parse
+// ---------------------------------------------------------------------------
+
+const KNOWN_TABLES: [&str; 5] = ["scenario", "fleet", "phases", "faults", "properties"];
+
+impl Scenario {
+    /// Parse a scenario document. Structural problems (unknown keys or
+    /// tables, wrong types, malformed phases) are positioned
+    /// [`Error::Config`]s; the result is then semantically
+    /// [`Scenario::validate`]d.
+    pub fn parse(text: &str) -> Result<Scenario> {
+        let doc = toml::parse(text)?;
+        if let Some(e) = doc.root.entries.first() {
+            return Err(Error::Config(format!(
+                "line {}: key `{}` appears outside any table",
+                e.line, e.key
+            )));
+        }
+        for t in &doc.tables {
+            if !KNOWN_TABLES.contains(&t.name.as_str()) {
+                return Err(Error::Config(format!(
+                    "line {}: unknown table [{}]",
+                    t.line, t.name
+                )));
+            }
+            let want_array = t.name != "scenario";
+            if t.array != want_array {
+                let (has, want) = if want_array {
+                    ("[table]", "[[array-of-tables]]")
+                } else {
+                    ("[[array-of-tables]]", "[table]")
+                };
+                return Err(Error::Config(format!(
+                    "line {}: [{}] must be a {want}, not a {has}",
+                    t.line, t.name
+                )));
+            }
+        }
+
+        let st = doc.single("scenario")?;
+        let mut k = Keys::new(st, "scenario");
+        let scenario = Scenario {
+            name: k.str("name")?,
+            description: match k.entry("description") {
+                Some(e) => match &e.value {
+                    Value::Str(s) => s.clone(),
+                    other => return Err(type_err(e, "description", "string", other)),
+                },
+                None => String::new(),
+            },
+            seed: k.u64("seed")?,
+            duration_s: k.f64("duration_s")?,
+            quick_duration_s: k.opt_f64("quick_duration_s")?,
+            cap_check_period_s: k.opt_f64("cap_check_period_s")?.unwrap_or(1.0),
+            dt_s: k.opt_f64("dt_s")?.unwrap_or(0.1),
+            input: k.opt_u32("input")?.unwrap_or(1),
+            fleet: Self::parse_fleet(&doc)?,
+            phases: Self::parse_phases(&doc)?,
+            faults: Self::parse_faults(&doc)?,
+            properties: Self::parse_properties(&doc)?,
+        };
+        k.finish()?;
+        scenario.validate()?;
+        Ok(scenario)
+    }
+
+    fn parse_fleet(doc: &toml::Doc) -> Result<Vec<FleetGroup>> {
+        doc.array_of("fleet")
+            .into_iter()
+            .map(|t| {
+                let mut k = Keys::new(t, "fleet");
+                let g = FleetGroup {
+                    profile: k.str("profile")?,
+                    count: k.usize_of("count")?,
+                    workload: k.str("workload")?,
+                    governor: k.str("governor")?,
+                    input: k.opt_u32("input")?,
+                };
+                k.finish()?;
+                Ok(g)
+            })
+            .collect()
+    }
+
+    fn parse_phases(doc: &toml::Doc) -> Result<Vec<PhaseSpec>> {
+        let mut out: Vec<PhaseSpec> = Vec::new();
+        for t in doc.array_of("phases") {
+            let mut k = Keys::new(t, "phases");
+            let p = PhaseSpec {
+                name: k.str("name")?,
+                start_s: k.f64("start_s")?,
+            };
+            k.finish()?;
+            // Positioned ordering checks (validate() re-checks without
+            // positions for programmatically-built scenarios).
+            if out.is_empty() && p.start_s != 0.0 {
+                return Err(Error::Config(format!(
+                    "line {}: the first phase must start at 0 s, `{}` starts at {}",
+                    t.line, p.name, p.start_s
+                )));
+            }
+            if let Some(prev) = out.last() {
+                if p.start_s <= prev.start_s {
+                    return Err(Error::Config(format!(
+                        "line {}: phase `{}` starts at {} s, not after `{}` ({} s) — \
+                         phases must be strictly increasing",
+                        t.line, p.name, p.start_s, prev.name, prev.start_s
+                    )));
+                }
+            }
+            if out.iter().any(|q| q.name == p.name) {
+                return Err(Error::Config(format!(
+                    "line {}: duplicate phase name `{}`",
+                    t.line, p.name
+                )));
+            }
+            out.push(p);
+        }
+        Ok(out)
+    }
+
+    fn parse_faults(doc: &toml::Doc) -> Result<Vec<FaultSpec>> {
+        doc.array_of("faults")
+            .into_iter()
+            .map(|t| {
+                let mut k = Keys::new(t, "faults");
+                let phase = k.str("phase")?;
+                let kind_name = k.str("kind")?;
+                let nodes_entry = k.require("nodes")?;
+                let nodes = match &nodes_entry.value {
+                    Value::Str(s) => parse_node_range(s, nodes_entry.line)?,
+                    other => return Err(type_err(nodes_entry, "nodes", "range string", other)),
+                };
+                let at_s = k.opt_f64("at_s")?.unwrap_or(0.0);
+                let kind = match kind_name.as_str() {
+                    "sensor_dropout" => FaultKind::SensorDropout {
+                        rate: k.f64("rate")?,
+                        duration_s: k.f64("duration_s")?,
+                    },
+                    "sensor_blackout" => FaultKind::SensorBlackout {
+                        duration_s: k.f64("duration_s")?,
+                    },
+                    "meter_drift" => FaultKind::MeterDrift {
+                        drift_w: k.f64("drift_w")?,
+                        duration_s: k.f64("duration_s")?,
+                    },
+                    "stuck_freq" => FaultKind::StuckFreq {
+                        duration_s: k.f64("duration_s")?,
+                    },
+                    "crash" => FaultKind::Crash {
+                        rejoin_s: k.opt_f64("rejoin_s")?,
+                    },
+                    other => {
+                        return Err(Error::Config(format!(
+                            "line {}: unknown fault kind `{other}` (expected sensor_dropout, \
+                             sensor_blackout, meter_drift, stuck_freq, or crash)",
+                            t.line
+                        )))
+                    }
+                };
+                k.finish()?;
+                Ok(FaultSpec {
+                    phase,
+                    kind,
+                    nodes,
+                    at_s,
+                })
+            })
+            .collect()
+    }
+
+    fn parse_properties(doc: &toml::Doc) -> Result<Vec<PropertySpec>> {
+        doc.array_of("properties")
+            .into_iter()
+            .map(|t| {
+                let mut k = Keys::new(t, "properties");
+                let name = k.str("name")?;
+                let kind_name = k.str("kind")?;
+                let kind = match kind_name.as_str() {
+                    "power_cap" => PropertyKind::PowerCap {
+                        cap_w: k.f64("cap_w")?,
+                    },
+                    "reconverge" => PropertyKind::Reconverge {
+                        within_s: k.f64("within_s")?,
+                    },
+                    other => {
+                        return Err(Error::Config(format!(
+                            "line {}: unknown property kind `{other}` \
+                             (expected power_cap or reconverge)",
+                            t.line
+                        )))
+                    }
+                };
+                k.finish()?;
+                Ok(PropertySpec { name, kind })
+            })
+            .collect()
+    }
+
+    /// Load and parse a scenario file; errors are prefixed with the path.
+    pub fn load(path: &std::path::Path) -> Result<Scenario> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text).map_err(|e| match e {
+            Error::Config(msg) => Error::Config(format!("{}: {msg}", path.display())),
+            other => other,
+        })
+    }
+
+    // -----------------------------------------------------------------------
+    // Semantics
+    // -----------------------------------------------------------------------
+
+    /// Total node count across the fleet.
+    pub fn total_nodes(&self) -> usize {
+        self.fleet.iter().map(|g| g.count).sum()
+    }
+
+    /// Absolute start time of a named phase.
+    pub fn phase_start(&self, name: &str) -> Result<f64> {
+        self.phases
+            .iter()
+            .find(|p| p.name == name)
+            .map(|p| p.start_s)
+            .ok_or_else(|| Error::Config(format!("fault references unknown phase `{name}`")))
+    }
+
+    /// The effective duration of a run: the scenario duration, capped by
+    /// `quick_duration_s` when quick mode is on.
+    pub fn effective_duration_s(&self, quick: bool) -> f64 {
+        match (quick, self.quick_duration_s) {
+            (true, Some(q)) => self.duration_s.min(q),
+            _ => self.duration_s,
+        }
+    }
+
+    /// Semantic validation (names resolvable, ranges in bounds, times
+    /// sane). [`Scenario::parse`] calls this; programmatically-built
+    /// scenarios should too.
+    pub fn validate(&self) -> Result<()> {
+        let fail = |msg: String| Err(Error::Config(format!("scenario `{}`: {msg}", self.name)));
+        if self.name.is_empty() {
+            return Err(Error::Config("scenario name must not be empty".into()));
+        }
+        if !(self.duration_s > 0.0 && self.duration_s.is_finite()) {
+            return fail(format!("duration_s must be positive, got {}", self.duration_s));
+        }
+        if !(self.dt_s > 0.0 && self.dt_s <= self.duration_s) {
+            return fail(format!("dt_s must be in (0, duration], got {}", self.dt_s));
+        }
+        if !(self.cap_check_period_s > 0.0 && self.cap_check_period_s.is_finite()) {
+            return fail(format!(
+                "cap_check_period_s must be positive, got {}",
+                self.cap_check_period_s
+            ));
+        }
+        if let Some(q) = self.quick_duration_s {
+            if !(q > 0.0 && q.is_finite()) {
+                return fail(format!("quick_duration_s must be positive, got {q}"));
+            }
+        }
+        if self.input < 1 {
+            return fail("input sizes are 1-based".into());
+        }
+        if self.fleet.is_empty() {
+            return fail("at least one [[fleet]] group is required".into());
+        }
+        for g in &self.fleet {
+            if g.count == 0 {
+                return fail(format!("fleet group `{}` has count 0", g.profile));
+            }
+            profile_by_name(&g.profile)?;
+            phased_by_name(&g.workload)?;
+            if g.input.is_some_and(|i| i < 1) {
+                return fail(format!("fleet group `{}`: input sizes are 1-based", g.profile));
+            }
+        }
+        if self.phases.is_empty() {
+            return fail("at least one [[phases]] entry is required".into());
+        }
+        if self.phases[0].start_s != 0.0 {
+            return fail("the first phase must start at 0 s".into());
+        }
+        for w in self.phases.windows(2) {
+            if w[1].start_s <= w[0].start_s {
+                return fail(format!(
+                    "phase `{}` does not start after `{}`",
+                    w[1].name, w[0].name
+                ));
+            }
+        }
+        let total = self.total_nodes();
+        for f in &self.faults {
+            self.phase_start(&f.phase)?;
+            if f.nodes.1 > total {
+                return fail(format!(
+                    "fault `{}` targets nodes {}..{} but the fleet has {total}",
+                    f.kind.name(),
+                    f.nodes.0,
+                    f.nodes.1
+                ));
+            }
+            if !(f.at_s >= 0.0 && f.at_s.is_finite()) {
+                return fail(format!("fault `{}` has negative at_s", f.kind.name()));
+            }
+            match &f.kind {
+                FaultKind::SensorDropout { rate, duration_s } => {
+                    if !(0.0..=1.0).contains(rate) {
+                        return fail(format!("sensor_dropout rate {rate} outside [0, 1]"));
+                    }
+                    if !(*duration_s > 0.0 && duration_s.is_finite()) {
+                        return fail("sensor_dropout duration_s must be positive".into());
+                    }
+                }
+                FaultKind::SensorBlackout { duration_s }
+                | FaultKind::MeterDrift { duration_s, .. }
+                | FaultKind::StuckFreq { duration_s } => {
+                    if !(*duration_s > 0.0 && duration_s.is_finite()) {
+                        return fail(format!("{} duration_s must be positive", f.kind.name()));
+                    }
+                }
+                FaultKind::Crash { rejoin_s } => {
+                    if rejoin_s.is_some_and(|r| !(r > 0.0 && r.is_finite())) {
+                        return fail("crash rejoin_s must be positive".into());
+                    }
+                }
+            }
+        }
+        let mut prop_names: Vec<&str> = Vec::new();
+        for p in &self.properties {
+            if prop_names.contains(&p.name.as_str()) {
+                return fail(format!("duplicate property name `{}`", p.name));
+            }
+            prop_names.push(&p.name);
+            match p.kind {
+                PropertyKind::PowerCap { cap_w } => {
+                    if !(cap_w > 0.0 && cap_w.is_finite()) {
+                        return fail(format!("property `{}`: cap_w must be positive", p.name));
+                    }
+                }
+                PropertyKind::Reconverge { within_s } => {
+                    if !(within_s > 0.0 && within_s.is_finite()) {
+                        return fail(format!("property `{}`: within_s must be positive", p.name));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // -----------------------------------------------------------------------
+    // Canonical serialization
+    // -----------------------------------------------------------------------
+
+    /// Write the canonical TOML form. `Scenario::parse(s.to_toml())`
+    /// yields an equal scenario (the round-trip lock).
+    pub fn to_toml(&self) -> String {
+        use std::fmt::Write as _;
+        fn esc(s: &str) -> String {
+            s.replace('\\', "\\\\")
+                .replace('"', "\\\"")
+                .replace('\n', "\\n")
+                .replace('\t', "\\t")
+        }
+        fn num(x: f64) -> String {
+            // `{:?}` prints the shortest round-trip form ("45.0", "0.35").
+            format!("{x:?}")
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "# {} — fleet-simulation scenario", self.name);
+        let _ = writeln!(out, "[scenario]");
+        let _ = writeln!(out, "name = \"{}\"", esc(&self.name));
+        let _ = writeln!(out, "description = \"{}\"", esc(&self.description));
+        let _ = writeln!(out, "seed = {}", self.seed);
+        let _ = writeln!(out, "duration_s = {}", num(self.duration_s));
+        if let Some(q) = self.quick_duration_s {
+            let _ = writeln!(out, "quick_duration_s = {}", num(q));
+        }
+        let _ = writeln!(out, "cap_check_period_s = {}", num(self.cap_check_period_s));
+        let _ = writeln!(out, "dt_s = {}", num(self.dt_s));
+        let _ = writeln!(out, "input = {}", self.input);
+        for g in &self.fleet {
+            let _ = writeln!(out, "\n[[fleet]]");
+            let _ = writeln!(out, "profile = \"{}\"", esc(&g.profile));
+            let _ = writeln!(out, "count = {}", g.count);
+            let _ = writeln!(out, "workload = \"{}\"", esc(&g.workload));
+            let _ = writeln!(out, "governor = \"{}\"", esc(&g.governor));
+            if let Some(i) = g.input {
+                let _ = writeln!(out, "input = {i}");
+            }
+        }
+        for p in &self.phases {
+            let _ = writeln!(out, "\n[[phases]]");
+            let _ = writeln!(out, "name = \"{}\"", esc(&p.name));
+            let _ = writeln!(out, "start_s = {}", num(p.start_s));
+        }
+        for f in &self.faults {
+            let _ = writeln!(out, "\n[[faults]]");
+            let _ = writeln!(out, "phase = \"{}\"", esc(&f.phase));
+            let _ = writeln!(out, "kind = \"{}\"", f.kind.name());
+            let _ = writeln!(out, "nodes = \"{}..{}\"", f.nodes.0, f.nodes.1);
+            let _ = writeln!(out, "at_s = {}", num(f.at_s));
+            match &f.kind {
+                FaultKind::SensorDropout { rate, duration_s } => {
+                    let _ = writeln!(out, "rate = {}", num(*rate));
+                    let _ = writeln!(out, "duration_s = {}", num(*duration_s));
+                }
+                FaultKind::SensorBlackout { duration_s }
+                | FaultKind::StuckFreq { duration_s } => {
+                    let _ = writeln!(out, "duration_s = {}", num(*duration_s));
+                }
+                FaultKind::MeterDrift { drift_w, duration_s } => {
+                    let _ = writeln!(out, "drift_w = {}", num(*drift_w));
+                    let _ = writeln!(out, "duration_s = {}", num(*duration_s));
+                }
+                FaultKind::Crash { rejoin_s } => {
+                    if let Some(r) = rejoin_s {
+                        let _ = writeln!(out, "rejoin_s = {}", num(*r));
+                    }
+                }
+            }
+        }
+        for p in &self.properties {
+            let _ = writeln!(out, "\n[[properties]]");
+            let _ = writeln!(out, "name = \"{}\"", esc(&p.name));
+            let _ = writeln!(out, "kind = \"{}\"", p.kind.name());
+            match p.kind {
+                PropertyKind::PowerCap { cap_w } => {
+                    let _ = writeln!(out, "cap_w = {}", num(cap_w));
+                }
+                PropertyKind::Reconverge { within_s } => {
+                    let _ = writeln!(out, "within_s = {}", num(within_s));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn tiny_scenario() -> Scenario {
+        Scenario {
+            name: "tiny".into(),
+            description: "unit-test fleet".into(),
+            seed: 7,
+            duration_s: 12.0,
+            quick_duration_s: Some(8.0),
+            cap_check_period_s: 1.0,
+            dt_s: 0.1,
+            input: 1,
+            fleet: vec![FleetGroup {
+                profile: "mobile-biglittle".into(),
+                count: 4,
+                workload: "duty-cycle".into(),
+                governor: "ondemand".into(),
+                input: None,
+            }],
+            phases: vec![
+                PhaseSpec {
+                    name: "steady".into(),
+                    start_s: 0.0,
+                },
+                PhaseSpec {
+                    name: "churn".into(),
+                    start_s: 4.0,
+                },
+            ],
+            faults: vec![FaultSpec {
+                phase: "churn".into(),
+                kind: FaultKind::Crash {
+                    rejoin_s: Some(3.0),
+                },
+                nodes: (0, 2),
+                at_s: 0.5,
+            }],
+            properties: vec![PropertySpec {
+                name: "cap".into(),
+                kind: PropertyKind::PowerCap { cap_w: 500.0 },
+            }],
+        }
+    }
+
+    #[test]
+    fn roundtrip_through_toml() {
+        let s = tiny_scenario();
+        let text = s.to_toml();
+        let back = Scenario::parse(&text).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn validate_rejects_bad_semantics() {
+        let mut s = tiny_scenario();
+        s.fleet[0].profile = "vax-11".into();
+        assert!(s.validate().is_err());
+
+        let mut s = tiny_scenario();
+        s.faults[0].nodes = (0, 99);
+        assert!(s.validate().unwrap_err().to_string().contains("fleet has 4"));
+
+        let mut s = tiny_scenario();
+        s.phases[1].start_s = 0.0;
+        assert!(s.validate().is_err());
+
+        let mut s = tiny_scenario();
+        s.faults[0].phase = "nope".into();
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn effective_duration_honours_quick() {
+        let s = tiny_scenario();
+        assert_eq!(s.effective_duration_s(false), 12.0);
+        assert_eq!(s.effective_duration_s(true), 8.0);
+        let mut s2 = s;
+        s2.quick_duration_s = None;
+        assert_eq!(s2.effective_duration_s(true), 12.0);
+    }
+
+    #[test]
+    fn unknown_key_is_positioned() {
+        let text = "[scenario]\nname = \"x\"\nseed = 1\nduration_s = 5.0\nbogus = 3\n";
+        let e = Scenario::parse(text).unwrap_err().to_string();
+        assert!(e.contains("line 5") && e.contains("bogus"), "{e}");
+    }
+}

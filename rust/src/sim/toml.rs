@@ -1,0 +1,340 @@
+//! Minimal TOML-subset reader for scenario files (std-only, in-tree —
+//! the image builds offline, so no `toml` crate).
+//!
+//! Supported grammar, which is all the scenario schema needs:
+//!
+//! * `# comments` (also trailing, outside strings) and blank lines;
+//! * `[table]` headers and `[[array-of-tables]]` headers;
+//! * `key = value` pairs where a value is a basic `"string"` (with
+//!   `\"`, `\\`, `\n`, `\t` escapes), an integer, a float, or a bool.
+//!
+//! Every table header and every key carries its **1-based line number**,
+//! so `sim::scenario` validation can point at the offending line of the
+//! file instead of a bare "bad scenario". Anything outside the subset
+//! (inline tables, arrays, dates, dotted keys) is a positioned
+//! [`Error::Config`], not a silent skip.
+
+use crate::{Error, Result};
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Basic string.
+    Str(String),
+    /// Integer (TOML integers are i64).
+    Int(i64),
+    /// Float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+}
+
+impl Value {
+    /// Human-readable type name for error messages.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Str(_) => "string",
+            Value::Int(_) => "integer",
+            Value::Float(_) => "float",
+            Value::Bool(_) => "boolean",
+        }
+    }
+}
+
+/// One `key = value` pair with its source line.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    /// The key, as written.
+    pub key: String,
+    /// The parsed value.
+    pub value: Value,
+    /// 1-based line number of the pair.
+    pub line: usize,
+}
+
+/// One `[table]` or `[[array-of-tables]]` element.
+#[derive(Debug, Clone)]
+pub struct Table {
+    /// Header name (empty for the implicit root table).
+    pub name: String,
+    /// 1-based line number of the header (0 for the root).
+    pub line: usize,
+    /// Whether this element came from a `[[...]]` header.
+    pub array: bool,
+    /// The table's pairs, in file order.
+    pub entries: Vec<Entry>,
+}
+
+impl Table {
+    fn new(name: &str, line: usize, array: bool) -> Self {
+        Table {
+            name: name.to_string(),
+            line,
+            array,
+            entries: Vec::new(),
+        }
+    }
+
+    /// Look a key up.
+    pub fn get(&self, key: &str) -> Option<&Entry> {
+        self.entries.iter().find(|e| e.key == key)
+    }
+}
+
+/// A parsed document: the implicit root table plus every header table in
+/// file order (array elements appear once per `[[...]]` occurrence).
+#[derive(Debug, Clone)]
+pub struct Doc {
+    /// Keys that appeared before any header.
+    pub root: Table,
+    /// Header tables in file order.
+    pub tables: Vec<Table>,
+}
+
+impl Doc {
+    /// All elements of the `[[name]]` array, in file order.
+    pub fn array_of(&self, name: &str) -> Vec<&Table> {
+        self.tables
+            .iter()
+            .filter(|t| t.array && t.name == name)
+            .collect()
+    }
+
+    /// The single `[name]` table, if present exactly once.
+    pub fn single(&self, name: &str) -> Result<&Table> {
+        let hits: Vec<&Table> = self
+            .tables
+            .iter()
+            .filter(|t| !t.array && t.name == name)
+            .collect();
+        match hits.len() {
+            1 => Ok(hits[0]),
+            0 => Err(Error::Config(format!("missing required [{name}] table"))),
+            _ => Err(Error::Config(format!(
+                "line {}: duplicate [{name}] table",
+                hits[1].line
+            ))),
+        }
+    }
+}
+
+fn err(line: usize, msg: impl std::fmt::Display) -> Error {
+    Error::Config(format!("line {line}: {msg}"))
+}
+
+/// Cut a trailing comment, honouring `#` inside quoted strings.
+fn strip_comment(raw: &str) -> &str {
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in raw.char_indices() {
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+        } else if c == '"' {
+            in_str = true;
+        } else if c == '#' {
+            return &raw[..i];
+        }
+    }
+    raw
+}
+
+fn is_bare_key(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+}
+
+fn parse_string(src: &str, line: usize) -> Result<Value> {
+    let mut out = String::new();
+    let mut chars = src.char_indices().skip(1); // opening quote
+    while let Some((i, c)) = chars.next() {
+        match c {
+            '"' => {
+                let rest = src[i + 1..].trim();
+                if !rest.is_empty() {
+                    return Err(err(line, format!("trailing characters after string: `{rest}`")));
+                }
+                return Ok(Value::Str(out));
+            }
+            '\\' => match chars.next() {
+                Some((_, 'n')) => out.push('\n'),
+                Some((_, 't')) => out.push('\t'),
+                Some((_, '"')) => out.push('"'),
+                Some((_, '\\')) => out.push('\\'),
+                Some((_, other)) => {
+                    return Err(err(line, format!("unsupported escape `\\{other}`")))
+                }
+                None => break,
+            },
+            _ => out.push(c),
+        }
+    }
+    Err(err(line, "unterminated string"))
+}
+
+fn parse_value(src: &str, line: usize) -> Result<Value> {
+    if src.is_empty() {
+        return Err(err(line, "missing value after `=`"));
+    }
+    if src.starts_with('"') {
+        return parse_string(src, line);
+    }
+    match src {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    // Numbers; `_` digit separators are allowed between digits.
+    let cleaned: String = src.chars().filter(|&c| c != '_').collect();
+    if src.starts_with('_') || src.ends_with('_') || src.contains("__") {
+        return Err(err(line, format!("malformed number `{src}`")));
+    }
+    if cleaned.contains('.') || cleaned.contains('e') || cleaned.contains('E') {
+        if let Ok(f) = cleaned.parse::<f64>() {
+            if f.is_finite() {
+                return Ok(Value::Float(f));
+            }
+        }
+    } else if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    Err(err(
+        line,
+        format!("unsupported value `{src}` (expected string, integer, float, or bool)"),
+    ))
+}
+
+/// Parse a document. Errors carry the 1-based line number.
+pub fn parse(text: &str) -> Result<Doc> {
+    let mut doc = Doc {
+        root: Table::new("", 0, false),
+        tables: Vec::new(),
+    };
+    for (i, raw) in text.lines().enumerate() {
+        let lineno = i + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix("[[") {
+            let Some(name) = inner.strip_suffix("]]") else {
+                return Err(err(lineno, "malformed [[array-of-tables]] header"));
+            };
+            let name = name.trim();
+            if !is_bare_key(name) {
+                return Err(err(lineno, format!("bad table name `{name}`")));
+            }
+            doc.tables.push(Table::new(name, lineno, true));
+        } else if let Some(inner) = line.strip_prefix('[') {
+            let Some(name) = inner.strip_suffix(']') else {
+                return Err(err(lineno, "malformed [table] header"));
+            };
+            let name = name.trim();
+            if !is_bare_key(name) {
+                return Err(err(lineno, format!("bad table name `{name}`")));
+            }
+            doc.tables.push(Table::new(name, lineno, false));
+        } else {
+            let Some(eq) = line.find('=') else {
+                return Err(err(lineno, format!("expected `key = value`, got `{line}`")));
+            };
+            let key = line[..eq].trim();
+            if !is_bare_key(key) {
+                return Err(err(lineno, format!("bad key `{key}`")));
+            }
+            let value = parse_value(line[eq + 1..].trim(), lineno)?;
+            let table = doc.tables.last_mut().unwrap_or(&mut doc.root);
+            if table.get(key).is_some() {
+                return Err(err(lineno, format!("duplicate key `{key}`")));
+            }
+            table.entries.push(Entry {
+                key: key.to_string(),
+                value,
+                line: lineno,
+            });
+        }
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_tables_arrays_and_scalars() {
+        let doc = parse(
+            "# header comment\n\
+             [scenario]\n\
+             name = \"demo\"  # trailing\n\
+             seed = 42\n\
+             duration_s = 7.5\n\
+             quick = true\n\
+             \n\
+             [[fleet]]\n\
+             count = 10\n\
+             [[fleet]]\n\
+             count = 2_000\n",
+        )
+        .unwrap();
+        let sc = doc.single("scenario").unwrap();
+        assert_eq!(sc.line, 2);
+        assert_eq!(sc.get("name").unwrap().value, Value::Str("demo".into()));
+        assert_eq!(sc.get("seed").unwrap().value, Value::Int(42));
+        assert_eq!(sc.get("duration_s").unwrap().value, Value::Float(7.5));
+        assert_eq!(sc.get("quick").unwrap().value, Value::Bool(true));
+        let fleet = doc.array_of("fleet");
+        assert_eq!(fleet.len(), 2);
+        assert_eq!(fleet[1].get("count").unwrap().value, Value::Int(2000));
+        assert_eq!(fleet[1].get("count").unwrap().line, 11);
+    }
+
+    #[test]
+    fn string_escapes_and_hash_inside_strings() {
+        let doc = parse("[t]\ns = \"a #1 \\\"q\\\" \\\\ b\"\n").unwrap();
+        let t = doc.single("t").unwrap();
+        assert_eq!(
+            t.get("s").unwrap().value,
+            Value::Str("a #1 \"q\" \\ b".into())
+        );
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        for (text, at) in [
+            ("[t]\nkey value\n", 2),
+            ("[t]\nk = [1, 2]\n", 2),
+            ("[t]\nk = \"open\n", 2),
+            ("x = 1\nx = 2\n", 2),
+            ("[t\nk = 1\n", 1),
+            ("[t]\nk = 1\nk2 =\n", 3),
+        ] {
+            let e = parse(text).unwrap_err();
+            let msg = e.to_string();
+            assert!(
+                msg.contains(&format!("line {at}:")),
+                "`{text}` should fail at line {at}, got: {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn root_keys_land_in_the_root_table() {
+        let doc = parse("stray = 1\n[t]\nk = 2\n").unwrap();
+        assert_eq!(doc.root.entries.len(), 1);
+        assert_eq!(doc.root.get("stray").unwrap().line, 1);
+    }
+
+    #[test]
+    fn missing_and_duplicate_singles() {
+        let doc = parse("[a]\nk = 1\n[a]\nk = 2\n").unwrap();
+        assert!(doc.single("a").unwrap_err().to_string().contains("line 3"));
+        assert!(parse("").unwrap().single("a").is_err());
+    }
+}

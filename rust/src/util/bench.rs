@@ -24,6 +24,7 @@
 use std::time::{Duration, Instant};
 
 use crate::util::json::Json;
+use crate::util::stats::percentile;
 
 /// Statistics of one benchmark.
 #[derive(Debug, Clone)]
@@ -122,12 +123,15 @@ impl Bench {
         samples.sort();
         let iters = samples.len();
         let mean = samples.iter().sum::<Duration>() / iters as u32;
+        // Shared nearest-rank estimator — the `iters * p / 100` indexing
+        // it replaced skewed both tails by one rank.
+        let p = |q: f64| percentile(&samples, q).expect("min_iters >= 3 samples");
         let stats = BenchStats {
             name: format!("{}/{}", self.group, name),
             iters,
             mean,
-            p50: samples[iters / 2],
-            p95: samples[(iters * 95 / 100).min(iters - 1)],
+            p50: p(50.0),
+            p95: p(95.0),
             min: samples[0],
         };
         println!("{stats}");

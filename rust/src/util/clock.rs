@@ -1,0 +1,115 @@
+//! Monotonic clock abstraction (ISSUE 7 satellite).
+//!
+//! The reactor's tick loop used to call `Instant::now()` once per
+//! connection when checking drain deadlines — wasteful (a syscall per
+//! connection per tick) and impossible to drive from simulated time.
+//! This trait narrows the reactor's time dependency to ONE reading per
+//! tick: [`SystemClock`] is the production wall clock, [`VirtualClock`]
+//! is an externally-advanced counter the discrete-event simulator (and
+//! tests) can step without sleeping.
+//!
+//! Readings are nanoseconds since an arbitrary per-clock origin —
+//! monotonic and comparable within one clock, meaningless across clocks.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A monotonic nanosecond counter.
+pub trait Clock: Send + Sync {
+    /// Nanoseconds since this clock's origin (monotonic, non-decreasing).
+    fn now_ns(&self) -> u64;
+}
+
+/// The production clock: wall time elapsed since construction.
+#[derive(Debug)]
+pub struct SystemClock {
+    origin: Instant,
+}
+
+impl SystemClock {
+    /// A clock whose origin is "now".
+    pub fn new() -> Self {
+        SystemClock {
+            origin: Instant::now(),
+        }
+    }
+}
+
+impl Default for SystemClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for SystemClock {
+    fn now_ns(&self) -> u64 {
+        self.origin.elapsed().as_nanos() as u64
+    }
+}
+
+/// A manually-advanced clock: time moves only when [`VirtualClock::advance_ns`]
+/// (or [`VirtualClock::set_ns`]) is called. Clones share the same
+/// underlying counter, so a handle kept by the advancing side drives
+/// every reader.
+#[derive(Debug, Clone, Default)]
+pub struct VirtualClock {
+    ns: Arc<AtomicU64>,
+}
+
+impl VirtualClock {
+    /// A virtual clock starting at 0 ns.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Advance the clock by `ns` nanoseconds.
+    pub fn advance_ns(&self, ns: u64) {
+        self.ns.fetch_add(ns, Ordering::SeqCst);
+    }
+
+    /// Jump the clock to an absolute reading. Monotonicity is the
+    /// caller's contract — the simulator's event loop only moves
+    /// forward.
+    pub fn set_ns(&self, ns: u64) {
+        self.ns.store(ns, Ordering::SeqCst);
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now_ns(&self) -> u64 {
+        self.ns.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn system_clock_is_monotonic() {
+        let c = SystemClock::new();
+        let a = c.now_ns();
+        let b = c.now_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn virtual_clock_moves_only_when_advanced() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now_ns(), 0);
+        c.advance_ns(1_500);
+        assert_eq!(c.now_ns(), 1_500);
+        let shared = c.clone();
+        shared.advance_ns(500);
+        assert_eq!(c.now_ns(), 2_000, "clones share the counter");
+        c.set_ns(10);
+        assert_eq!(shared.now_ns(), 10);
+    }
+
+    #[test]
+    fn trait_object_is_usable() {
+        let c: std::sync::Arc<dyn Clock> = std::sync::Arc::new(VirtualClock::new());
+        assert_eq!(c.now_ns(), 0);
+    }
+}

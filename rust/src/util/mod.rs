@@ -3,7 +3,10 @@
 //!
 //! * [`linalg`] — dense solves for the power-model regression;
 //! * [`metrics`] — MAE / PAE (Eq. 10) / RMSE;
-//! * [`stats`] — means, trapezoid integration, deterministic shuffles;
+//! * [`stats`] — means, trapezoid integration, nearest-rank percentiles,
+//!   deterministic shuffles;
+//! * [`clock`] — monotonic clock trait: system wall clock + the
+//!   simulator-drivable virtual clock;
 //! * [`rng`] — xoshiro256++ deterministic RNG with split-seed streams
 //!   (replaces `rand`);
 //! * [`pool`] — scoped-thread worker pool with a deterministic result
@@ -15,6 +18,7 @@
 //! * [`logging`] — leveled stderr logging (replaces `tracing`).
 
 pub mod bench;
+pub mod clock;
 pub mod json;
 pub mod linalg;
 pub mod logging;

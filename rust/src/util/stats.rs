@@ -1,8 +1,10 @@
 //! Small statistics helpers: mean/std for feature standardization, a
-//! trapezoidal integrator for energy, and a deterministic shuffle for
-//! train/test splits (the characterization pipeline must be reproducible).
+//! trapezoidal integrator for energy, nearest-rank percentiles for
+//! latency/energy tails, and a deterministic shuffle for train/test
+//! splits (the characterization pipeline must be reproducible).
 
 use crate::util::rng::Rng;
+use crate::{Error, Result};
 
 /// Arithmetic mean; 0.0 for empty input.
 pub fn mean(xs: &[f64]) -> f64 {
@@ -37,6 +39,39 @@ pub fn trapezoid(ts: &[f64], ys: &[f64]) -> f64 {
         acc += 0.5 * (ys[i] + ys[i - 1]) * (ts[i] - ts[i - 1]);
     }
     acc
+}
+
+/// Nearest-rank percentile over an ALREADY-SORTED slice.
+///
+/// `p` is in percent over the closed interval `[0, 100]`; the nearest-rank
+/// definition picks element `ceil(p/100 * N)` (1-based), clamped to the
+/// valid range, so `p = 0` is the minimum and `p = 100` the maximum.
+/// Unlike the `len * p / 100` indexing it replaced (which returned the
+/// MAX for the p50 of two samples and panicked on empty input), this is
+/// the textbook estimator: the p50 of `[a, b]` is `a`, and empty input
+/// is an [`Error::Data`], not a panic.
+///
+/// Works for any `Copy + PartialOrd` sample type — `u64` microseconds
+/// (loadgen), `Duration` (bench), `f64` joules (sim reports).
+///
+/// ```
+/// use ecopt::util::stats::percentile;
+///
+/// let xs = [1u64, 2, 3, 4];
+/// assert_eq!(percentile(&xs, 50.0).unwrap(), 2);
+/// assert_eq!(percentile(&xs, 100.0).unwrap(), 4);
+/// assert!(percentile(&[] as &[u64], 50.0).is_err());
+/// ```
+pub fn percentile<T: Copy + PartialOrd>(sorted: &[T], p: f64) -> Result<T> {
+    if sorted.is_empty() {
+        return Err(Error::Data("percentile of an empty sample set".into()));
+    }
+    if !(0.0..=100.0).contains(&p) {
+        return Err(Error::Data(format!("percentile {p} outside [0, 100]")));
+    }
+    let n = sorted.len();
+    let rank = (p / 100.0 * n as f64).ceil() as usize;
+    Ok(sorted[rank.clamp(1, n) - 1])
 }
 
 /// Deterministic index shuffle (seeded), for train/test splits and k-fold
@@ -85,6 +120,48 @@ mod tests {
         let ts = vec![0.0, 0.5, 2.0];
         let ys = vec![10.0, 10.0, 10.0];
         assert!((trapezoid(&ts, &ys) - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [10u64, 20, 30, 40, 50];
+        assert_eq!(percentile(&xs, 0.0).unwrap(), 10);
+        assert_eq!(percentile(&xs, 20.0).unwrap(), 10); // rank ceil(1.0) = 1
+        assert_eq!(percentile(&xs, 50.0).unwrap(), 30);
+        assert_eq!(percentile(&xs, 95.0).unwrap(), 50);
+        assert_eq!(percentile(&xs, 100.0).unwrap(), 50);
+    }
+
+    #[test]
+    fn percentile_two_samples_p50_is_lower() {
+        // The regression this helper exists for: len*50/100 indexed the
+        // SECOND element of a two-sample set.
+        assert_eq!(percentile(&[1u64, 1000], 50.0).unwrap(), 1);
+        assert_eq!(percentile(&[1u64, 1000], 51.0).unwrap(), 1000);
+    }
+
+    #[test]
+    fn percentile_single_sample_any_p() {
+        for p in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[7.5f64], p).unwrap(), 7.5);
+        }
+    }
+
+    #[test]
+    fn percentile_rejects_empty_and_out_of_range() {
+        assert!(percentile(&[] as &[f64], 50.0).is_err());
+        assert!(percentile(&[1.0], -1.0).is_err());
+        assert!(percentile(&[1.0], 100.1).is_err());
+        assert!(percentile(&[1.0], f64::NAN).is_err());
+    }
+
+    #[test]
+    fn percentile_works_on_durations() {
+        use std::time::Duration;
+        let ds: Vec<Duration> = (1..=4).map(Duration::from_millis).collect();
+        assert_eq!(percentile(&ds, 50.0).unwrap(), Duration::from_millis(2));
+        assert_eq!(percentile(&ds, 75.0).unwrap(), Duration::from_millis(3));
+        assert_eq!(percentile(&ds, 76.0).unwrap(), Duration::from_millis(4));
     }
 
     #[test]

@@ -345,7 +345,7 @@ pub struct ReplayRunResult {
 /// Per-class observed utilization, with the same frequency feedback as
 /// the steady runner: compute demand rescales with `f_max / f`, memory
 /// stall time is frequency-invariant, idle is idle.
-fn apply_class_utils(node: &mut Node, w: &PhasedWorkload, class: PhaseClass) {
+pub(crate) fn apply_class_utils(node: &mut Node, w: &PhasedWorkload, class: PhaseClass) {
     let f_max = *node.ladder().last().expect("non-empty ladder") as f64;
     let total = node.total_cores();
     for c in 0..total {
@@ -364,7 +364,7 @@ fn apply_class_utils(node: &mut Node, w: &PhasedWorkload, class: PhaseClass) {
 /// Work consumption rate of the current phase at the node's *current*
 /// DVFS/hotplug state. Compute/Memory: core-seconds (at f_ref on the
 /// reference core) per second; Idle: 1 (wall-clock).
-fn class_rate(node: &Node, w: &PhasedWorkload, class: PhaseClass) -> f64 {
+pub(crate) fn class_rate(node: &Node, w: &PhasedWorkload, class: PhaseClass) -> f64 {
     match class {
         PhaseClass::Compute => {
             let mut sum = 0.0;
@@ -420,7 +420,7 @@ pub fn replay_run(
         ph.work *= jitter;
     }
 
-    let mut meter = IpmiMeter::from_spec(node.sensor(), cfg.seed ^ 0x9E37_79B9_7F4A_7C15);
+    let mut meter = IpmiMeter::from_spec(node.sensor(), cfg.seed ^ 0x9E37_79B9_7F4A_7C15)?;
     let mut t = 0.0f64;
     let mut freq_time_integral = 0.0f64;
     let mut gov_window = f64::INFINITY; // force a sample on the first tick

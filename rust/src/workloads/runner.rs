@@ -112,7 +112,7 @@ pub fn run(
     // Decorrelate the meter RNG stream from the work-noise stream while
     // staying deterministic per seed. The channel's cadence/quantization/
     // dropout come from the node's architecture profile.
-    let mut meter = IpmiMeter::from_spec(node.sensor(), cfg.seed ^ 0x9E37_79B9_7F4A_7C15);
+    let mut meter = IpmiMeter::from_spec(node.sensor(), cfg.seed ^ 0x9E37_79B9_7F4A_7C15)?;
     let mut t = 0.0f64;
     let mut freq_time_integral = 0.0f64;
     let mut gov_window = f64::INFINITY; // force a sample on the first tick

@@ -1,0 +1,345 @@
+//! Scenario-file contract of the fleet simulator (ISSUE 7): TOML
+//! round-tripping, positioned rejection of malformed input, the
+//! committed CI scenario's shape, and end-to-end property verdicts on a
+//! small fleet.
+
+use ecopt::sim::{run_scenario, FaultKind, PropertyKind, Scenario, SimOptions};
+
+/// A scenario exercising every section of the schema and every fault
+/// kind.
+fn full_example() -> Scenario {
+    let text = r#"# round-trip fixture
+[scenario]
+name = "fixture"
+description = "all sections, all fault kinds"
+seed = 99
+duration_s = 30.0
+quick_duration_s = 10.0
+cap_check_period_s = 0.5
+dt_s = 0.1
+input = 2
+
+[[fleet]]
+profile = "xeon-dual-e5-2698v3"
+count = 4
+workload = "burst-sweep"
+governor = "ondemand"
+
+[[fleet]]
+profile = "mobile-biglittle"
+count = 6
+workload = "duty-cycle"
+governor = "powersave"
+input = 1
+
+[[phases]]
+name = "warm"
+start_s = 0.0
+
+[[phases]]
+name = "storm"
+start_s = 10.0
+
+[[faults]]
+phase = "storm"
+kind = "sensor_dropout"
+nodes = "0..2"
+at_s = 0.5
+rate = 0.25
+duration_s = 5.0
+
+[[faults]]
+phase = "storm"
+kind = "sensor_blackout"
+nodes = "2..4"
+at_s = 1.0
+duration_s = 3.0
+
+[[faults]]
+phase = "storm"
+kind = "meter_drift"
+nodes = "4..7"
+at_s = 0.0
+drift_w = -4.5
+duration_s = 6.0
+
+[[faults]]
+phase = "storm"
+kind = "stuck_freq"
+nodes = "7..9"
+at_s = 2.0
+duration_s = 4.0
+
+[[faults]]
+phase = "storm"
+kind = "crash"
+nodes = "9..10"
+at_s = 3.0
+rejoin_s = 5.0
+
+[[properties]]
+name = "cap"
+kind = "power_cap"
+cap_w = 9000.0
+
+[[properties]]
+name = "heal"
+kind = "reconverge"
+within_s = 1.5
+"#;
+    Scenario::parse(text).unwrap()
+}
+
+#[test]
+fn scenario_round_trips_through_canonical_toml() {
+    let s = full_example();
+    let text = s.to_toml();
+    let back = Scenario::parse(&text).unwrap();
+    assert_eq!(back, s, "parse(to_toml(s)) != s");
+    // And the canonical form is a fixed point.
+    assert_eq!(back.to_toml(), text);
+}
+
+#[test]
+fn fixture_parsed_every_section() {
+    let s = full_example();
+    assert_eq!(s.total_nodes(), 10);
+    assert_eq!(s.fleet[1].input, Some(1));
+    assert_eq!(s.phases[1].start_s, 10.0);
+    assert_eq!(s.faults.len(), 5);
+    assert!(matches!(s.faults[2].kind, FaultKind::MeterDrift { drift_w, .. } if drift_w == -4.5));
+    match s.properties[1].kind {
+        PropertyKind::Reconverge { within_s } => assert_eq!(within_s, 1.5),
+        ref other => panic!("expected reconverge, got {other:?}"),
+    }
+}
+
+fn parse_err(text: &str) -> String {
+    Scenario::parse(text).unwrap_err().to_string()
+}
+
+fn assert_positioned(text: &str, want: &str, needle: &str) {
+    let e = parse_err(text);
+    assert!(e.contains(want) && e.contains(needle), "expected `{want}` and `{needle}` in: {e}");
+}
+
+/// Malformed scenarios are rejected with the offending line number.
+#[test]
+fn malformed_scenarios_fail_with_positions() {
+    // Unknown [scenario] key → the key's own line.
+    let unknown_key = r#"[scenario]
+name = "x"
+seed = 1
+duration_s = 5.0
+bogus = 3
+"#;
+    assert_positioned(unknown_key, "line 5", "bogus");
+
+    // Unknown table → the header's line.
+    let unknown_table = r#"[scenario]
+name = "x"
+seed = 1
+duration_s = 5.0
+
+[extras]
+k = 1
+"#;
+    assert_positioned(unknown_table, "line 6", "unknown table");
+
+    // Wrong value type → the key's line.
+    let bad_seed = r#"[scenario]
+name = "x"
+seed = "not-a-number"
+duration_s = 5.0
+"#;
+    assert_positioned(bad_seed, "line 3", "non-negative integer");
+
+    // Out-of-subset scalar → rejected by the TOML reader itself.
+    let bad_scalar = r#"[scenario]
+name = "x"
+seed = 1
+duration_s = [5.0]
+"#;
+    assert_positioned(bad_scalar, "line 4", "unsupported value");
+}
+
+/// Malformed phase and fault sections are rejected with positions too.
+#[test]
+fn malformed_phases_and_faults_fail_with_positions() {
+    // A phase that does not start after its predecessor.
+    let out_of_order = r#"[scenario]
+name = "x"
+seed = 1
+duration_s = 5.0
+
+[[fleet]]
+profile = "mobile-biglittle"
+count = 1
+workload = "duty-cycle"
+governor = "ondemand"
+
+[[phases]]
+name = "a"
+start_s = 0.0
+
+[[phases]]
+name = "b"
+start_s = 0.0
+"#;
+    assert_positioned(out_of_order, "line 16", "strictly increasing");
+
+    // The first phase must sit at t = 0.
+    let late_first = r#"[scenario]
+name = "x"
+seed = 1
+duration_s = 5.0
+
+[[fleet]]
+profile = "mobile-biglittle"
+count = 1
+workload = "duty-cycle"
+governor = "ondemand"
+
+[[phases]]
+name = "late"
+start_s = 1.0
+"#;
+    assert_positioned(late_first, "line 12", "must start at 0");
+
+    // A phase missing its required key → the table header's line.
+    let no_start = r#"[scenario]
+name = "x"
+seed = 1
+duration_s = 5.0
+
+[[fleet]]
+profile = "mobile-biglittle"
+count = 1
+workload = "duty-cycle"
+governor = "ondemand"
+
+[[phases]]
+name = "a"
+"#;
+    assert_positioned(no_start, "line 12", "start_s");
+
+    // An empty fault node range → the `nodes` key's line.
+    let empty_range = r#"[scenario]
+name = "x"
+seed = 1
+duration_s = 5.0
+
+[[fleet]]
+profile = "mobile-biglittle"
+count = 1
+workload = "duty-cycle"
+governor = "ondemand"
+
+[[phases]]
+name = "a"
+start_s = 0.0
+
+[[faults]]
+phase = "a"
+kind = "crash"
+nodes = "5..5"
+"#;
+    assert_positioned(empty_range, "line 19", "half-open range");
+}
+
+/// The committed CI scenario keeps its acceptance-criteria shape: at
+/// least 1000 nodes, a cascading crash schedule with rejoin waves and
+/// permanent losses, all five fault kinds, and both property kinds.
+#[test]
+fn committed_quick_churn_scenario_holds_its_shape() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../scenarios/quick_churn.toml");
+    let s = Scenario::load(std::path::Path::new(path)).unwrap();
+    let n = s.total_nodes();
+    assert!(n >= 1000, "CI scenario shrank below 1000 nodes ({n})");
+    assert!(s.quick_duration_s.is_some(), "CI needs a --quick duration cap");
+    let kinds: Vec<&str> = s.faults.iter().map(|f| f.kind.name()).collect();
+    for kind in ["crash", "sensor_blackout", "sensor_dropout", "meter_drift", "stuck_freq"] {
+        assert!(kinds.contains(&kind), "CI scenario lost its {kind} fault");
+    }
+    let mut rejoining = 0;
+    let mut permanent = 0;
+    for f in &s.faults {
+        match f.kind {
+            FaultKind::Crash { rejoin_s: Some(_) } => rejoining += 1,
+            FaultKind::Crash { rejoin_s: None } => permanent += 1,
+            _ => {}
+        }
+    }
+    assert!(rejoining >= 3, "cascading churn needs several rejoin waves, got {rejoining}");
+    assert!(permanent >= 1, "some capacity should be lost permanently, got {permanent}");
+    let props: Vec<&str> = s.properties.iter().map(|p| p.kind.name()).collect();
+    assert!(props.contains(&"power_cap"), "safety property missing");
+    assert!(props.contains(&"reconverge"), "liveness property missing");
+    // Spot-check the group layout the fault node ranges are written
+    // against, so edits that shift it also have to update this test.
+    assert_eq!(s.fleet.len(), 4, "four heterogeneous groups");
+    assert_eq!(s.fleet[0].count, 352);
+    assert!(s.fleet.iter().any(|g| g.governor == "ecopt"), "a trained-governor group is present");
+}
+
+/// End-to-end verdicts: a generous cap passes, an impossible cap fails
+/// (and flips the run's overall verdict), and the reconvergence property
+/// reports the disrupted survivors.
+#[test]
+fn property_verdicts_end_to_end() {
+    let text = r#"[scenario]
+name = "verdicts"
+seed = 5
+duration_s = 8.0
+cap_check_period_s = 0.5
+dt_s = 0.1
+input = 1
+
+[[fleet]]
+profile = "mobile-biglittle"
+count = 8
+workload = "duty-cycle"
+governor = "ondemand"
+
+[[phases]]
+name = "steady"
+start_s = 0.0
+
+[[faults]]
+phase = "steady"
+kind = "crash"
+nodes = "0..3"
+at_s = 2.0
+rejoin_s = 2.5
+
+[[properties]]
+name = "generous-cap"
+kind = "power_cap"
+cap_w = 1000.0
+
+[[properties]]
+name = "impossible-cap"
+kind = "power_cap"
+cap_w = 0.001
+
+[[properties]]
+name = "heal"
+kind = "reconverge"
+within_s = 2.0
+"#;
+    let s = Scenario::parse(text).unwrap();
+    let r = run_scenario(&s, &SimOptions { threads: 2, quick: false }).unwrap();
+    assert!(!r.all_pass());
+    assert!(r.properties[0].pass, "{}", r.properties[0].details);
+    assert!(!r.properties[1].pass, "{}", r.properties[1].details);
+    let heal = &r.properties[2];
+    assert!(heal.pass, "{}", heal.details);
+    assert!(heal.details.contains("3 disrupted survivors"), "{}", heal.details);
+    assert_eq!(r.final_alive, 8);
+    assert_eq!(r.groups[0].crashes, 3);
+    // The rendered report carries the verdicts and the percentile columns.
+    let rendered = ecopt::report::sim_report(&r);
+    assert!(rendered.contains("| impossible-cap | power_cap | FAIL |"));
+    assert!(rendered.contains("| generous-cap | power_cap | PASS |"));
+    assert!(rendered.contains("E/node p50"));
+}
