@@ -16,13 +16,10 @@ use crate::svr::TrainSample;
 use crate::util::json::{FromJson, Json, ToJson};
 use crate::util::pool::WorkerPool;
 use crate::util::rng::Rng;
+use crate::util::seed_domains::CHAR_SEED_DOMAIN;
 use crate::workloads::runner::{run, RunConfig};
 use crate::workloads::AppProfile;
 use crate::{Error, Result};
-
-/// Seed-domain separator: characterization RNG streams never collide with
-/// the comparison harness streams derived from the same base seed.
-const CHAR_SEED_DOMAIN: u64 = 0xC4A2_AC7E_0000_0001;
 
 /// One measured campaign point (a [`TrainSample`] plus the energy ground
 /// truth the SVR never sees but Figs. 6–9 compare against).

@@ -14,13 +14,10 @@ use crate::node::power::PowerProcess;
 use crate::node::Node;
 use crate::util::pool::WorkerPool;
 use crate::util::rng::Rng;
+use crate::util::seed_domains::CMP_SEED_DOMAIN;
 use crate::workloads::runner::{run, RunConfig, RunResult};
 use crate::workloads::AppProfile;
 use crate::{Error, Result};
-
-/// Seed-domain separator for comparison-harness RNG streams (disjoint
-/// from the characterization campaign's streams).
-const CMP_SEED_DOMAIN: u64 = 0xC4A2_AC7E_0000_0002;
 
 /// Stream id for one governor run: the input size tags the high bits so
 /// every (input, sweep-slot) pair draws decorrelated noise.

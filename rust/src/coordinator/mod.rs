@@ -64,10 +64,9 @@ use crate::workloads::{app_by_name, parsec_apps, AppProfile};
 use crate::{Error, Result};
 
 /// Seed-domain separator for fleet members: member `i`'s campaign seed is
-/// `split_seed(base_seed ^ FLEET_SEED_DOMAIN, i)`, disjoint from the
-/// characterization (…0001) and comparison (…0002) domains any single
-/// pipeline derives below it.
-pub const FLEET_SEED_DOMAIN: u64 = 0xC4A2_AC7E_0000_0003;
+/// `split_seed(base_seed ^ FLEET_SEED_DOMAIN, i)`, disjoint from every
+/// other domain in the `util::seed_domains` registry.
+pub use crate::util::seed_domains::FLEET_SEED_DOMAIN;
 
 /// Per-application results bundle.
 #[derive(Debug, Clone)]

@@ -52,10 +52,9 @@ use crate::workloads::phases::{
 use crate::workloads::runner::RunConfig;
 use crate::{Error, Result};
 
-/// Seed-domain separator for replay streams — disjoint from the
-/// characterization (…0001), comparison (…0002) and fleet (…0003)
-/// domains.
-pub const REPLAY_SEED_DOMAIN: u64 = 0xC4A2_AC7E_0000_0004;
+/// Seed-domain separator for replay streams — disjoint from every other
+/// domain in the `util::seed_domains` registry.
+pub use crate::util::seed_domains::REPLAY_SEED_DOMAIN;
 
 /// The Linux governors replayed as baselines, in report order.
 pub const BASELINE_GOVERNORS: [&str; 4] =

@@ -75,6 +75,7 @@ pub mod coordinator;
 pub mod energy;
 pub mod error;
 pub mod governors;
+pub mod lint;
 pub mod node;
 pub mod persist;
 pub mod powermodel;

@@ -1,0 +1,207 @@
+//! The suppression mechanism: a committed `lint-allow.toml`.
+//!
+//! Suppressions are data, not code annotations — one reviewed file at
+//! the repo root, parsed with the same positioned `sim::toml` reader
+//! scenario files use, so a malformed entry is rejected with its line
+//! number. Every entry **must** carry a reason; a reason that still
+//! starts with `FIXME` (what `--fix-allowlist` writes) is itself a
+//! finding, and an entry that suppressed nothing is reported stale.
+//! The format:
+//!
+//! ```toml
+//! [[allow]]
+//! rule = "panic-path"                      # a rule id from lint::RULES
+//! file = "rust/src/service/server.rs"      # repo-relative path
+//! pattern = "expect(\"jobs poisoned\")"    # substring of the raw line
+//! reason = "poisoned lock means a worker already panicked; crash loudly"
+//! ```
+
+use crate::lint::rules::{is_rule, Finding};
+use crate::sim::toml::{self, Value};
+use crate::{Error, Result};
+
+/// The reason `--fix-allowlist` stamps on generated entries. Rule
+/// `allow-reason` keeps firing until a human replaces it.
+pub const FIXME_REASON: &str = "FIXME: justify this suppression";
+
+/// One parsed `[[allow]]` entry.
+#[derive(Debug, Clone)]
+pub struct AllowEntry {
+    /// Rule id this entry suppresses.
+    pub rule: String,
+    /// Repo-relative file the finding must be in.
+    pub file: String,
+    /// Substring of the raw source line.
+    pub pattern: String,
+    /// Mandatory human justification.
+    pub reason: String,
+    /// 1-based line of the entry's `[[allow]]` header in the allowlist.
+    pub line: usize,
+}
+
+impl AllowEntry {
+    /// Does this entry suppress `f`?
+    pub fn matches(&self, f: &Finding) -> bool {
+        self.rule == f.rule && self.file == f.file && f.source.contains(&self.pattern)
+    }
+}
+
+fn entry_str(t: &toml::Table, key: &str) -> Result<String> {
+    match t.get(key) {
+        Some(e) => match &e.value {
+            Value::Str(s) => Ok(s.clone()),
+            other => Err(Error::Config(format!(
+                "line {}: allow entry `{key}` must be a string, got {}",
+                e.line,
+                other.type_name()
+            ))),
+        },
+        None => Err(Error::Config(format!(
+            "line {}: allow entry is missing required key `{key}`",
+            t.line
+        ))),
+    }
+}
+
+/// Parse an allowlist document. Every violation of the schema is a
+/// positioned [`Error::Config`].
+pub fn parse_allowlist(text: &str) -> Result<Vec<AllowEntry>> {
+    let doc = toml::parse(text)?;
+    if let Some(e) = doc.root.entries.first() {
+        return Err(Error::Config(format!(
+            "line {}: key `{}` outside any [[allow]] entry",
+            e.line, e.key
+        )));
+    }
+    let mut out = Vec::new();
+    for t in &doc.tables {
+        if t.name != "allow" || !t.array {
+            return Err(Error::Config(format!(
+                "line {}: unexpected table `{}` — the allowlist holds only [[allow]] entries",
+                t.line, t.name
+            )));
+        }
+        for e in &t.entries {
+            if !matches!(e.key.as_str(), "rule" | "file" | "pattern" | "reason") {
+                return Err(Error::Config(format!(
+                    "line {}: unknown allow key `{}` (expected rule/file/pattern/reason)",
+                    e.line, e.key
+                )));
+            }
+        }
+        let rule = entry_str(t, "rule")?;
+        if !is_rule(&rule) {
+            let at = t.get("rule").map(|e| e.line).unwrap_or(t.line);
+            return Err(Error::Config(format!(
+                "line {at}: unknown rule id `{rule}`"
+            )));
+        }
+        let pattern = entry_str(t, "pattern")?;
+        if pattern.is_empty() {
+            let at = t.get("pattern").map(|e| e.line).unwrap_or(t.line);
+            return Err(Error::Config(format!(
+                "line {at}: allow pattern must not be empty"
+            )));
+        }
+        let reason = entry_str(t, "reason")?;
+        if reason.trim().is_empty() {
+            let at = t.get("reason").map(|e| e.line).unwrap_or(t.line);
+            return Err(Error::Config(format!(
+                "line {at}: allow reason must not be empty"
+            )));
+        }
+        out.push(AllowEntry {
+            rule,
+            file: entry_str(t, "file")?,
+            pattern,
+            reason,
+            line: t.line,
+        });
+    }
+    Ok(out)
+}
+
+/// Escape a pattern for a TOML basic string (`sim::toml` understands
+/// `\"` and `\\`).
+fn toml_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Render new entries (with [`FIXME_REASON`]) for findings that are not
+/// yet suppressed — the text `--fix-allowlist` appends. Hygiene
+/// findings (`allow-*`) can't be allowlisted away and are skipped.
+/// Returns the TOML text and the number of entries in it.
+pub fn render_fixes(findings: &[Finding]) -> (String, usize) {
+    let mut seen: Vec<(String, String, String)> = Vec::new();
+    let mut out = String::new();
+    for f in findings {
+        if f.rule.starts_with("allow-") {
+            continue;
+        }
+        let pattern = f.source.trim().to_string();
+        let key = (f.rule.to_string(), f.file.clone(), pattern.clone());
+        if seen.contains(&key) {
+            continue;
+        }
+        out.push_str(&format!(
+            "\n[[allow]]\nrule = \"{}\"\nfile = \"{}\"\npattern = \"{}\"\nreason = \"{}\"\n",
+            f.rule,
+            toml_escape(&f.file),
+            toml_escape(&pattern),
+            FIXME_REASON
+        ));
+        seen.push(key);
+    }
+    let n = seen.len();
+    (out, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_full_entry() {
+        let es = parse_allowlist(
+            "# comment\n[[allow]]\nrule = \"wall-clock\"\nfile = \"rust/tests/service.rs\"\n\
+             pattern = \"Instant\"\nreason = \"test deadline\"\n",
+        )
+        .unwrap();
+        assert_eq!(es.len(), 1);
+        assert_eq!(es[0].rule, "wall-clock");
+        assert_eq!(es[0].line, 2);
+    }
+
+    #[test]
+    fn schema_violations_are_positioned() {
+        for (text, needle) in [
+            ("[[allow]]\nrule = \"wall-clock\"\nfile = \"f\"\npattern = \"p\"\n", "line 1: allow entry is missing required key `reason`"),
+            ("[[allow]]\nrule = \"no-such-rule\"\nfile = \"f\"\npattern = \"p\"\nreason = \"r\"\n", "line 2: unknown rule id"),
+            ("[[allow]]\nrule = \"wall-clock\"\nfile = \"f\"\npattern = \"p\"\nreason = \"r\"\nbogus = 1\n", "line 6: unknown allow key"),
+            ("[other]\nk = 1\n", "line 1: unexpected table"),
+            ("stray = 1\n", "line 1: key `stray` outside"),
+            ("[[allow]]\nrule = 7\nfile = \"f\"\npattern = \"p\"\nreason = \"r\"\n", "line 2: allow entry `rule` must be a string"),
+            ("[[allow]]\nrule = \"wall-clock\"\nfile = \"f\"\npattern = \"\"\nreason = \"r\"\n", "line 4: allow pattern must not be empty"),
+        ] {
+            let msg = parse_allowlist(text).unwrap_err().to_string();
+            assert!(msg.contains(needle), "`{text}` should yield `{needle}`, got: {msg}");
+        }
+    }
+
+    #[test]
+    fn render_fixes_dedupes_and_round_trips() {
+        let f = Finding {
+            file: "rust/src/x.rs".into(),
+            line: 3,
+            rule: "wall-clock",
+            message: "m".into(),
+            source: "    let t = now(); // say \"hi\"".into(),
+        };
+        let (text, n) = render_fixes(&[f.clone(), f]);
+        assert_eq!(n, 1, "identical findings collapse to one entry");
+        let es = parse_allowlist(&text).unwrap();
+        assert_eq!(es.len(), 1);
+        assert_eq!(es[0].pattern, "let t = now(); // say \"hi\"");
+        assert_eq!(es[0].reason, FIXME_REASON);
+    }
+}

@@ -1,0 +1,289 @@
+//! `ecopt lint` — the determinism-invariant static analyzer (ISSUE 8).
+//!
+//! The reproduction's headline claim is byte-reproducibility: the same
+//! seed yields the same reports, transcripts, and cached models at any
+//! thread count, on cold or warm caches, across daemon restarts. That
+//! claim rests on a handful of crate-wide contracts — exact-float JSON,
+//! unique seed domains, no wall-clock reads outside `util::clock`,
+//! ordered iteration feeding every serialized byte — which nothing
+//! enforced until this module: PR 3 and PR 7 each spent a bugfix sweep
+//! on violations (`as`-cast truncation, per-connection `Instant::now`
+//! skew) a checker would have caught at diff time.
+//!
+//! The analyzer is std-only and repo-native, in the same spirit as
+//! `sim::toml`: a [`scan`] layer lexes each source file into code vs
+//! string-content views (no rustc dependency), [`rules`] runs ~7
+//! regression-grounded checks over them, and [`allow`] applies the
+//! committed `lint-allow.toml` — suppressions are reviewed data with
+//! mandatory reasons, never inline attributes. Diagnostics are
+//! positioned (`file:line: rule-id: message`) and the CLI exits 2 on
+//! any finding, so CI (`lint-invariants`) gates on a clean tree.
+//!
+//! Entry points: [`run_tree`] (scan `rust/src` + `rust/tests` +
+//! `rust/benches` under a repo root), [`lint_source`] (one in-memory
+//! file — what the fixture tests drive), [`find_root`].
+
+pub mod allow;
+pub mod rules;
+pub mod scan;
+
+pub use allow::{parse_allowlist, AllowEntry, FIXME_REASON};
+pub use rules::{Finding, RULES};
+pub use scan::{scan_file, SourceFile};
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// The directories scanned under the repo root.
+const SCAN_ROOTS: [&str; 3] = ["rust/src", "rust/tests", "rust/benches"];
+
+/// Everything one lint run produced.
+#[derive(Debug, Clone)]
+pub struct LintReport {
+    /// Surviving findings, sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+    /// Number of findings suppressed by allowlist entries.
+    pub suppressed: usize,
+    /// The parsed allowlist (for `--fix-allowlist` and reporting).
+    pub allows: Vec<AllowEntry>,
+}
+
+impl LintReport {
+    /// One `file:line: rule-id: message` line per finding.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!("{}:{}: {}: {}\n", f.file, f.line, f.rule, f.message));
+        }
+        out
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "lint: {} files scanned, {} finding(s), {} suppression(s) used",
+            self.files_scanned,
+            self.findings.len(),
+            self.suppressed
+        )
+    }
+
+    /// Machine-readable report (stable: objects with sorted keys).
+    pub fn to_json(&self) -> Result<String> {
+        let findings = Json::Arr(
+            self.findings
+                .iter()
+                .map(|f| {
+                    Json::obj(vec![
+                        ("file", Json::Str(f.file.clone())),
+                        ("line", Json::Num(f.line as f64)),
+                        ("rule", Json::Str(f.rule.to_string())),
+                        ("message", Json::Str(f.message.clone())),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("schema", Json::Str("ecopt-lint-v1".to_string())),
+            ("files_scanned", Json::Num(self.files_scanned as f64)),
+            ("suppressions_used", Json::Num(self.suppressed as f64)),
+            ("findings", findings),
+        ])
+        .dump()
+    }
+}
+
+/// Lint a single in-memory source file (per-file rules only). This is
+/// the fixture-test entry point; [`run_tree`] adds the cross-file
+/// rules and the allowlist.
+pub fn lint_source(rel_path: &str, text: &str) -> Vec<Finding> {
+    rules::lint_file(&scan::scan_file(rel_path, text))
+}
+
+/// Walk up from `start` to the nearest directory that contains
+/// `rust/src` (the repo root), at most 10 levels.
+pub fn find_root(start: &Path) -> Option<PathBuf> {
+    let mut dir = start.to_path_buf();
+    for _ in 0..10 {
+        if dir.join("rust/src").is_dir() {
+            return Some(dir);
+        }
+        dir = dir.parent()?.to_path_buf();
+    }
+    None
+}
+
+/// Recursively collect `.rs` files under `root/<sub>`, as sorted
+/// repo-relative forward-slash paths — sorted so finding order (and
+/// therefore output bytes) is independent of directory-entry order.
+fn collect_rs_files(root: &Path) -> Result<Vec<String>> {
+    fn walk(dir: &Path, root: &Path, out: &mut Vec<String>) -> std::io::Result<()> {
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                walk(&path, root, out)?;
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                let rel = path
+                    .strip_prefix(root)
+                    .unwrap_or(&path)
+                    .components()
+                    .map(|c| c.as_os_str().to_string_lossy())
+                    .collect::<Vec<_>>()
+                    .join("/");
+                out.push(rel);
+            }
+        }
+        Ok(())
+    }
+    let mut out = Vec::new();
+    for sub in SCAN_ROOTS {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            walk(&dir, root, &mut out)
+                .map_err(|e| Error::Data(format!("scanning {}: {e}", dir.display())))?;
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Run the full analyzer over a repo tree: scan every `.rs` file under
+/// [`SCAN_ROOTS`], apply the per-file and cross-file rules, then the
+/// allowlist at `<root>/lint-allow.toml` (if present), then the
+/// allowlist's own hygiene rules.
+pub fn run_tree(root: &Path) -> Result<LintReport> {
+    let design = std::fs::read_to_string(root.join("DESIGN.md")).unwrap_or_default();
+    let allow_path = root.join("lint-allow.toml");
+    let allows = if allow_path.is_file() {
+        let text = std::fs::read_to_string(&allow_path)
+            .map_err(|e| Error::Data(format!("reading {}: {e}", allow_path.display())))?;
+        parse_allowlist(&text).map_err(|e| match e {
+            Error::Config(msg) => Error::Config(format!("lint-allow.toml: {msg}")),
+            other => other,
+        })?
+    } else {
+        Vec::new()
+    };
+
+    let mut sources = Vec::new();
+    for rel in collect_rs_files(root)? {
+        let text = std::fs::read_to_string(root.join(&rel))
+            .map_err(|e| Error::Data(format!("reading {rel}: {e}")))?;
+        sources.push(scan::scan_file(&rel, &text));
+    }
+
+    let mut findings = Vec::new();
+    for sf in &sources {
+        findings.extend(rules::lint_file(sf));
+    }
+    findings.extend(rules::lint_tree(&sources, &design));
+
+    // Apply the allowlist; count per-entry use so stale entries surface.
+    let mut used = vec![0usize; allows.len()];
+    findings.retain(|f| {
+        for (i, e) in allows.iter().enumerate() {
+            if e.matches(f) {
+                used[i] += 1;
+                return false;
+            }
+        }
+        true
+    });
+    let suppressed: usize = used.iter().sum();
+
+    // Allowlist hygiene: placeholder reasons and dead entries are
+    // findings in their own right (positioned at the entry header).
+    for (i, e) in allows.iter().enumerate() {
+        if e.reason.trim_start().starts_with("FIXME") {
+            findings.push(Finding {
+                file: "lint-allow.toml".to_string(),
+                line: e.line,
+                rule: "allow-reason",
+                message: format!(
+                    "entry for `{}` in {} still carries a FIXME reason — justify or remove it",
+                    e.rule, e.file
+                ),
+                source: String::new(),
+            });
+        }
+        if used[i] == 0 {
+            findings.push(Finding {
+                file: "lint-allow.toml".to_string(),
+                line: e.line,
+                rule: "allow-unused",
+                message: format!(
+                    "entry for `{}` in {} (pattern `{}`) suppressed nothing — prune it",
+                    e.rule, e.file, e.pattern
+                ),
+                source: String::new(),
+            });
+        }
+    }
+
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(LintReport {
+        findings,
+        files_scanned: sources.len(),
+        suppressed,
+        allows,
+    })
+}
+
+/// `--fix-allowlist`: append FIXME-reason entries for every surviving
+/// finding to `<root>/lint-allow.toml`. Returns how many entries were
+/// written. The generated entries suppress the findings on the next
+/// run, but rule `allow-reason` keeps the tree red until each FIXME is
+/// replaced with a real justification — the fix flow is a loop, not an
+/// escape hatch.
+pub fn fix_allowlist(root: &Path, report: &LintReport) -> Result<usize> {
+    let (text, n) = allow::render_fixes(&report.findings);
+    if n == 0 {
+        return Ok(0);
+    }
+    let path = root.join("lint-allow.toml");
+    let mut body = std::fs::read_to_string(&path).unwrap_or_default();
+    body.push_str(&text);
+    std::fs::write(&path, body).map_err(|e| Error::Data(format!("writing {}: {e}", path.display())))?;
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders_positioned_diagnostics() {
+        let report = LintReport {
+            findings: vec![Finding {
+                file: "rust/src/foo.rs".into(),
+                line: 3,
+                rule: "wall-clock",
+                message: "raw wall-clock read".into(),
+                source: "let t = Instant::now();".into(),
+            }],
+            files_scanned: 1,
+            suppressed: 0,
+            allows: Vec::new(),
+        };
+        let text = report.render();
+        assert!(text.starts_with("rust/src/foo.rs:3: wall-clock: "), "{text}");
+        let json = report.to_json().unwrap();
+        assert!(json.contains("\"schema\":\"ecopt-lint-v1\""));
+        assert!(json.contains("\"rule\":\"wall-clock\""));
+    }
+
+    #[test]
+    fn find_root_walks_up() {
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        let root = dir.path().join("repo");
+        std::fs::create_dir_all(root.join("rust/src/util")).unwrap();
+        assert_eq!(find_root(&root.join("rust/src/util")).unwrap(), root);
+        assert_eq!(find_root(&root).unwrap(), root);
+    }
+}

@@ -1,0 +1,533 @@
+//! The determinism-invariant rules (R1–R7).
+//!
+//! Each rule is grounded in a regression this repo actually paid for
+//! (see DESIGN.md §13 for the catalog): seed-domain collisions,
+//! wall-clock reads in deterministic paths, unordered iteration feeding
+//! serialized bytes, lossy float formatting, panics in request/tick
+//! paths, truncating `as` casts in parsers, and untested public
+//! contract constants. Rules match on the [`scan`](super::scan) views,
+//! so tokens inside strings, comments, or doc examples never trip them.
+
+use super::scan::SourceFile;
+
+/// One diagnostic. Rendered as `file:line: rule-id: message` — the same
+/// positioned style `sim::toml` uses for scenario files.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Repo-relative path.
+    pub file: String,
+    /// 1-based line number (0 for file-level findings).
+    pub line: usize,
+    /// Rule id (one of [`RULES`]).
+    pub rule: &'static str,
+    /// Human-readable message.
+    pub message: String,
+    /// The raw source line (allowlist patterns substring-match this).
+    pub source: String,
+}
+
+/// Every rule id with its one-line description (`ecopt lint` has no
+/// `--explain`; this table *is* the explanation, mirrored in DESIGN.md
+/// §13). The two `allow-*` ids are hygiene findings produced by the
+/// allowlist layer itself.
+pub const RULES: [(&str, &str); 9] = [
+    (
+        "seed-domain",
+        "0xC4A2_AC7E_* seed-domain literals live only in util::seed_domains, unique, listed in DESIGN.md",
+    ),
+    (
+        "wall-clock",
+        "no Instant::now/SystemTime::now outside util/clock.rs — time goes through the Clock trait",
+    ),
+    (
+        "unordered-iter",
+        "no HashMap/HashSet in report/, sim/, persist, or the protocol — unordered iteration feeds serialized bytes",
+    ),
+    (
+        "float-fmt",
+        "no debug/precision float formatting in serialized layers — floats route through util::json's exact writer",
+    ),
+    (
+        "panic-path",
+        "no unwrap/expect/panic!/literal indexing in the daemon request path or the simulator tick path",
+    ),
+    (
+        "lossy-cast",
+        "no truncating `as` casts in the protocol or config/json parsing — use try_from with a ranged error",
+    ),
+    (
+        "untested-const",
+        "every pub seed-domain/golden constant is referenced by at least one test under rust/tests",
+    ),
+    (
+        "allow-unused",
+        "lint-allow.toml entry suppressed nothing — stale entries must be pruned",
+    ),
+    (
+        "allow-reason",
+        "lint-allow.toml entry carries a FIXME placeholder reason — justify or remove it",
+    ),
+];
+
+/// Is `id` a known rule id?
+pub fn is_rule(id: &str) -> bool {
+    RULES.iter().any(|(r, _)| *r == id)
+}
+
+// ---------------------------------------------------------------------------
+// Scopes
+// ---------------------------------------------------------------------------
+
+const SEED_HOME: &str = "rust/src/util/seed_domains.rs";
+const CLOCK_HOME: &str = "rust/src/util/clock.rs";
+
+fn scope_unordered(p: &str) -> bool {
+    p.starts_with("rust/src/report")
+        || p.starts_with("rust/src/sim")
+        || p.starts_with("rust/src/persist")
+        || p == "rust/src/service/protocol.rs"
+}
+
+fn scope_float_fmt(p: &str) -> bool {
+    p.starts_with("rust/src/persist") || p == "rust/src/service/protocol.rs"
+}
+
+fn scope_panic(p: &str) -> bool {
+    p == "rust/src/service/server.rs" || p == "rust/src/sim/engine.rs"
+}
+
+fn scope_cast(p: &str) -> bool {
+    p == "rust/src/service/protocol.rs"
+        || p.starts_with("rust/src/config")
+        || p == "rust/src/util/json.rs"
+}
+
+// ---------------------------------------------------------------------------
+// Per-file rules (R1 location, R2–R6)
+// ---------------------------------------------------------------------------
+
+/// Run every per-file rule over one scanned source.
+pub fn lint_file(sf: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let p = sf.rel_path.as_str();
+    for line in &sf.lines {
+        let push = |out: &mut Vec<Finding>, rule: &'static str, message: String| {
+            out.push(Finding {
+                file: sf.rel_path.clone(),
+                line: line.number,
+                rule,
+                message,
+                source: line.raw.clone(),
+            });
+        };
+
+        // R1 (location half): the literal prefix may only appear in the
+        // central registry. Applies to test code too — a literal in a
+        // test is a shadow registry waiting to drift.
+        if p != SEED_HOME && normalize_hex(&line.code).contains("0xc4a2ac7e") {
+            push(
+                &mut out,
+                "seed-domain",
+                "seed-domain literal outside util::seed_domains — declare it in the registry and use the named constant".into(),
+            );
+        }
+
+        // R2: wall-clock reads. Test code included: a determinism test
+        // that reads the wall clock is exactly the PR-7 bug class.
+        if p != CLOCK_HOME
+            && (line.code.contains("Instant::now") || line.code.contains("SystemTime::now"))
+        {
+            push(
+                &mut out,
+                "wall-clock",
+                "raw wall-clock read — go through the util::clock Clock trait".into(),
+            );
+        }
+
+        // R3: unordered containers where iteration order becomes bytes.
+        if scope_unordered(p)
+            && !line.in_test
+            && (line.code.contains("HashMap") || line.code.contains("HashSet"))
+        {
+            push(
+                &mut out,
+                "unordered-iter",
+                "unordered container in a serialized-bytes layer — use BTreeMap/BTreeSet (or sort before iterating)".into(),
+            );
+        }
+
+        // R4: float formatting that bypasses the exact writer.
+        if scope_float_fmt(p) && !line.in_test && has_float_format_spec(&line.strings) {
+            push(
+                &mut out,
+                "float-fmt",
+                "debug/precision format spec in a serialized layer — floats must route through util::json::Json::dump".into(),
+            );
+        }
+
+        // R5: panic vectors in always-up paths.
+        if scope_panic(p) && !line.in_test {
+            for token in [
+                ".unwrap()",
+                ".expect(",
+                "panic!",
+                "unreachable!",
+                "todo!",
+                "unimplemented!",
+            ] {
+                if line.code.contains(token) {
+                    push(
+                        &mut out,
+                        "panic-path",
+                        format!("`{token}` in a request/tick path — return an Error instead of dying"),
+                    );
+                    break;
+                }
+            }
+            if has_literal_index(&line.code) {
+                push(
+                    &mut out,
+                    "panic-path",
+                    "literal slice index in a request/tick path — use .get()/.first() with an error".into(),
+                );
+            }
+        }
+
+        // R6: truncating casts in parse layers.
+        if scope_cast(p) && !line.in_test {
+            if let Some(ty) = truncating_cast(&line.code) {
+                push(
+                    &mut out,
+                    "lossy-cast",
+                    format!("`as {ty}` can truncate silently — use {ty}::try_from with a ranged error"),
+                );
+            }
+        }
+    }
+    out
+}
+
+/// Lowercase and drop `_` so `0xC4A2_AC7E`, `0xc4a2ac7e`, … all match.
+fn normalize_hex(s: &str) -> String {
+    s.chars()
+        .filter(|&c| c != '_')
+        .map(|c| c.to_ascii_lowercase())
+        .collect()
+}
+
+/// Does any `{…}` format placeholder in the string view carry a debug
+/// (`?`), precision (`.`), or exponent (`e`/`E`) spec? Those are the
+/// float-corrupting formatters; a bare `{}` on a float can't be told
+/// apart from a `{}` on a string without types, so R4 deliberately
+/// leaves it to review (documented in DESIGN.md §13).
+fn has_float_format_spec(strings: &str) -> bool {
+    let chars: Vec<char> = strings.chars().collect();
+    let mut i = 0;
+    while i < chars.len() {
+        if chars[i] == '{' {
+            if chars.get(i + 1) == Some(&'{') {
+                i += 2; // escaped literal brace
+                continue;
+            }
+            let mut k = i + 1;
+            let mut arg = String::new();
+            let mut spec = String::new();
+            let mut seen_colon = false;
+            while k < chars.len() && chars[k] != '}' && chars[k] != '{' {
+                if seen_colon {
+                    spec.push(chars[k]);
+                } else if chars[k] == ':' {
+                    seen_colon = true;
+                } else {
+                    arg.push(chars[k]);
+                }
+                k += 1;
+            }
+            // Only a real placeholder counts: the argument part must be
+            // a bare name/index (a JSON literal like `{"rate":0.35}` in
+            // a string is content, not formatting).
+            let arg_ok = arg.chars().all(|c| c.is_alphanumeric() || c == '_');
+            if chars.get(k) == Some(&'}')
+                && seen_colon
+                && arg_ok
+                && (spec.contains('?') || spec.contains('.') || spec == "e" || spec == "E")
+            {
+                return true;
+            }
+            i = k + 1;
+        } else {
+            i += 1;
+        }
+    }
+    false
+}
+
+/// `xs[0]`-style literal indexing (an identifier, `)`, or `]` directly
+/// before `[digits]`). Variable indices (`xs[i]`) are out of lexical
+/// reach and stay a review concern.
+fn has_literal_index(code: &str) -> bool {
+    let chars: Vec<char> = code.chars().collect();
+    for i in 1..chars.len() {
+        if chars[i] == '[' {
+            let prev = chars[i - 1];
+            if prev.is_alphanumeric() || prev == '_' || prev == ')' || prev == ']' {
+                let mut k = i + 1;
+                let mut digits = 0;
+                while k < chars.len() && chars[k].is_ascii_digit() {
+                    digits += 1;
+                    k += 1;
+                }
+                if digits > 0 && chars.get(k) == Some(&']') {
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+/// The first narrowing `as <int>` cast on the line, if any. Widening
+/// casts (`as u64`, `as i64`, `as f64`) are allowed — every flagged
+/// type can drop bits from the i64/f64 values the parse layers handle.
+fn truncating_cast(code: &str) -> Option<&'static str> {
+    const NARROW: [&str; 8] = ["u8", "u16", "u32", "usize", "i8", "i16", "i32", "isize"];
+    for ty in NARROW {
+        let needle = format!("as {ty}");
+        let mut from = 0;
+        while let Some(pos) = code[from..].find(&needle) {
+            let start = from + pos;
+            let end = start + needle.len();
+            let before_ok = start == 0
+                || !code[..start]
+                    .chars()
+                    .next_back()
+                    .is_some_and(|c| c.is_alphanumeric() || c == '_');
+            let after_ok = !code[end..]
+                .chars()
+                .next()
+                .is_some_and(|c| c.is_alphanumeric() || c == '_');
+            if before_ok && after_ok {
+                return Some(ty);
+            }
+            from = end;
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// Tree-level rules (R1 registry half, R7)
+// ---------------------------------------------------------------------------
+
+/// A `pub const *_SEED_DOMAIN`/`*GOLDEN*` declaration found in src.
+#[derive(Debug, Clone)]
+struct ContractConst {
+    file: String,
+    line: usize,
+    source: String,
+    name: String,
+    /// Normalized literal text (seed domains only; empty otherwise).
+    value: String,
+    is_pub: bool,
+    is_seed: bool,
+}
+
+fn contract_consts(sources: &[SourceFile]) -> Vec<ContractConst> {
+    let mut out = Vec::new();
+    for sf in sources {
+        if !sf.rel_path.starts_with("rust/src/") {
+            continue;
+        }
+        for line in &sf.lines {
+            let code = line.code.trim();
+            let (is_pub, rest) = match code.strip_prefix("pub const ") {
+                Some(r) => (true, r),
+                None => match code.strip_prefix("const ") {
+                    Some(r) => (false, r),
+                    None => continue,
+                },
+            };
+            let Some(colon) = rest.find(':') else { continue };
+            let name = rest[..colon].trim().to_string();
+            let is_seed = name.ends_with("_SEED_DOMAIN");
+            let is_golden = name.contains("GOLDEN");
+            if !is_seed && !is_golden {
+                continue;
+            }
+            let value = match (rest.find('='), rest.find(';')) {
+                (Some(eq), Some(semi)) if semi > eq => {
+                    normalize_hex(rest[eq + 1..semi].trim())
+                }
+                _ => String::new(),
+            };
+            out.push(ContractConst {
+                file: sf.rel_path.clone(),
+                line: line.number,
+                source: line.raw.clone(),
+                name,
+                value,
+                is_pub,
+                is_seed,
+            });
+        }
+    }
+    out
+}
+
+/// Run the cross-file rules: seed-domain uniqueness + DESIGN.md listing
+/// (R1), and test references for pub contract constants (R7).
+/// `design` is the text of DESIGN.md; `sources` must span both
+/// `rust/src` and `rust/tests`.
+pub fn lint_tree(sources: &[SourceFile], design: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let consts = contract_consts(sources);
+
+    // R1: pairwise-unique values, every name in DESIGN.md's registry.
+    let seeds: Vec<&ContractConst> = consts.iter().filter(|c| c.is_seed).collect();
+    for (i, c) in seeds.iter().enumerate() {
+        if !c.value.is_empty() {
+            for earlier in &seeds[..i] {
+                if earlier.value == c.value {
+                    out.push(Finding {
+                        file: c.file.clone(),
+                        line: c.line,
+                        rule: "seed-domain",
+                        message: format!(
+                            "`{}` reuses the value of `{}` ({}:{})",
+                            c.name, earlier.name, earlier.file, earlier.line
+                        ),
+                        source: c.source.clone(),
+                    });
+                }
+            }
+        }
+        if !design.contains(&c.name) {
+            out.push(Finding {
+                file: c.file.clone(),
+                line: c.line,
+                rule: "seed-domain",
+                message: format!("`{}` is missing from DESIGN.md's seed-domain registry table", c.name),
+                source: c.source.clone(),
+            });
+        }
+    }
+
+    // R7: every pub contract constant shows up in at least one test.
+    let test_blob: String = sources
+        .iter()
+        .filter(|sf| sf.rel_path.starts_with("rust/tests/"))
+        .flat_map(|sf| sf.lines.iter())
+        .map(|l| l.raw.as_str())
+        .collect::<Vec<_>>()
+        .join("\n");
+    for c in consts.iter().filter(|c| c.is_pub) {
+        if !test_blob.contains(&c.name) {
+            out.push(Finding {
+                file: c.file.clone(),
+                line: c.line,
+                rule: "untested-const",
+                message: format!(
+                    "pub constant `{}` is not referenced by any test under rust/tests",
+                    c.name
+                ),
+                source: c.source.clone(),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::scan::scan_file;
+
+    fn findings(path: &str, text: &str) -> Vec<Finding> {
+        lint_file(&scan_file(path, text))
+    }
+
+    #[test]
+    fn literal_index_detection() {
+        assert!(has_literal_index("let x = buf[0];"));
+        assert!(has_literal_index("f(xs)[17] + 1"));
+        assert!(!has_literal_index("let a = [0usize; 3];"));
+        assert!(!has_literal_index("let y = xs[i];"));
+        assert!(!has_literal_index("#[cfg(feature = \"x\")]"));
+    }
+
+    #[test]
+    fn truncating_cast_detection() {
+        assert_eq!(truncating_cast("let x = v as u32;"), Some("u32"));
+        assert_eq!(truncating_cast("Ok(f as usize)"), Some("usize"));
+        assert_eq!(truncating_cast("let x = v as u64;"), None);
+        assert_eq!(truncating_cast("let x = v as f64;"), None);
+        assert_eq!(truncating_cast("let casual = 3;"), None);
+    }
+
+    #[test]
+    fn float_format_spec_detection() {
+        assert!(has_float_format_spec("power {p:?} watts"));
+        assert!(has_float_format_spec("{:.3}"));
+        assert!(has_float_format_spec("{x:e}"));
+        assert!(!has_float_format_spec("plain {} and {name}"));
+        assert!(!has_float_format_spec("escaped {{literal}}"));
+        assert!(
+            !has_float_format_spec("{\"rate\":0.35}"),
+            "JSON content is not a format spec"
+        );
+    }
+
+    #[test]
+    fn rules_respect_scope_and_test_regions() {
+        // HashMap in a scoped file fires…
+        assert_eq!(
+            findings("rust/src/sim/whatever.rs", "use std::collections::HashMap;\n").len(),
+            1
+        );
+        // …but not outside the scope, and not inside #[cfg(test)].
+        assert!(findings("rust/src/svr/mod.rs", "use std::collections::HashMap;\n").is_empty());
+        assert!(findings(
+            "rust/src/sim/whatever.rs",
+            "#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n}\n"
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn wall_clock_fires_everywhere_but_clock_home() {
+        let f = findings("rust/src/anywhere.rs", "let t = Instant::now();\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "wall-clock");
+        assert_eq!(f[0].line, 1);
+        assert!(findings("rust/src/util/clock.rs", "let t = Instant::now();\n").is_empty());
+        // Inside a string or comment it is content, not a call.
+        assert!(findings("rust/src/x.rs", "let s = \"Instant::now()\"; // Instant::now\n")
+            .is_empty());
+    }
+
+    #[test]
+    fn tree_rules_catch_duplicates_and_unlisted_names() {
+        let src = scan_file(
+            "rust/src/util/seed_domains.rs",
+            "pub const A_SEED_DOMAIN: u64 = 0xC4A2_AC7E_0000_0001;\n\
+             pub const B_SEED_DOMAIN: u64 = 0xC4A2_AC7E_0000_0001;\n",
+        );
+        let tests = scan_file("rust/tests/t.rs", "use A_SEED_DOMAIN; use B_SEED_DOMAIN;\n");
+        let f = lint_tree(&[src, tests], "A_SEED_DOMAIN B_SEED_DOMAIN");
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "seed-domain");
+        assert_eq!(f[0].line, 2);
+        assert!(f[0].message.contains("reuses"));
+    }
+
+    #[test]
+    fn tree_rules_catch_untested_pub_consts() {
+        let src = scan_file(
+            "rust/src/util/seed_domains.rs",
+            "pub const A_SEED_DOMAIN: u64 = 0xC4A2_AC7E_0000_0001;\n",
+        );
+        let f = lint_tree(&[src], "A_SEED_DOMAIN");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "untested-const");
+    }
+}

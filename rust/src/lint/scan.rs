@@ -1,0 +1,304 @@
+//! Lexical source model for the linter: a line-oriented scanner that
+//! separates *code* from *string-literal content* and *comments*, and
+//! marks `#[cfg(test)]` regions — without depending on rustc.
+//!
+//! Each physical line is pre-lexed into two same-shape views:
+//!
+//! * [`Line::code`] — the raw line with comments removed and every
+//!   string/char-literal *content* blanked to spaces. Token rules
+//!   (`Instant::now`, `HashMap`, `.unwrap()`, `as u32`, …) match here,
+//!   so a rule name quoted inside a test fixture string or a doc
+//!   comment never trips the rule.
+//! * [`Line::strings`] — the inverse: only string-literal content
+//!   survives (code and comments blanked). Format-string rules (`{:?}`
+//!   float formatting) match here.
+//!
+//! The lexer tracks multi-line state: nested `/* */` block comments,
+//! plain strings continued across lines, and raw strings
+//! (`r"…"`, `r#"…"#`, `br"…"`). Char literals are distinguished from
+//! lifetimes with a lookahead (`'x'`/`'\n'` vs `'a`). This is a
+//! *lexical* model — it does not parse items — but it is exact for the
+//! token classes the rules need, and it is the same trade the repo
+//! already makes in `sim::toml`: a small, inspectable scanner over an
+//! external toolchain dependency.
+
+/// One physical source line, pre-lexed.
+#[derive(Debug, Clone)]
+pub struct Line {
+    /// 1-based line number.
+    pub number: usize,
+    /// The line exactly as written (allowlist patterns match this).
+    pub raw: String,
+    /// Code view: comments removed, string/char contents blanked.
+    pub code: String,
+    /// String view: only string-literal contents survive.
+    pub strings: String,
+    /// Whether the line sits in a `#[cfg(test)]` region.
+    pub in_test: bool,
+}
+
+/// A scanned source file.
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    /// Path relative to the repo root, with forward slashes
+    /// (e.g. `rust/src/sim/engine.rs`).
+    pub rel_path: String,
+    /// All lines, in order.
+    pub lines: Vec<Line>,
+}
+
+/// Lexer state carried across physical lines.
+#[derive(Debug, Clone, Copy)]
+enum LexState {
+    /// Plain code.
+    Code,
+    /// Inside a block comment, with nesting depth.
+    Block(u32),
+    /// Inside a basic `"…"` (or `b"…"`) string.
+    Str,
+    /// Inside a raw string with this many `#` delimiters.
+    RawStr(u32),
+}
+
+/// Scan one file into the line model.
+pub fn scan_file(rel_path: &str, text: &str) -> SourceFile {
+    let mut state = LexState::Code;
+    let mut lines = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let (code, strings, next) = lex_line(raw, state);
+        state = next;
+        lines.push(Line {
+            number: i + 1,
+            raw: raw.to_string(),
+            code,
+            strings,
+            in_test: false,
+        });
+    }
+    mark_test_regions(&mut lines);
+    SourceFile {
+        rel_path: rel_path.to_string(),
+        lines,
+    }
+}
+
+/// Does a raw-string literal start at `j`? Returns (hash count, chars
+/// consumed by the opener) for `r"`, `r#"`, `br##"` … Raw *identifiers*
+/// (`r#type`) don't match because the hashes must be followed by `"`.
+fn raw_start(chars: &[char], j: usize) -> Option<(u32, usize)> {
+    let mut p = j;
+    if chars.get(p) == Some(&'b') {
+        p += 1;
+    }
+    if chars.get(p) != Some(&'r') {
+        return None;
+    }
+    p += 1;
+    let mut hashes = 0u32;
+    while chars.get(p) == Some(&'#') {
+        hashes += 1;
+        p += 1;
+    }
+    if chars.get(p) == Some(&'"') {
+        Some((hashes, p + 1 - j))
+    } else {
+        None
+    }
+}
+
+/// Does the raw string with `hashes` delimiters close at the quote at
+/// `j` (i.e. the quote is followed by that many `#`)?
+fn raw_ends(chars: &[char], j: usize, hashes: u32) -> bool {
+    (1..=hashes as usize).all(|k| chars.get(j + k) == Some(&'#'))
+}
+
+fn lex_line(raw: &str, mut state: LexState) -> (String, String, LexState) {
+    let chars: Vec<char> = raw.chars().collect();
+    let n = chars.len();
+    let mut code = vec![' '; n];
+    let mut strs = vec![' '; n];
+    let mut j = 0;
+    while j < n {
+        match state {
+            LexState::Block(depth) => {
+                if chars[j] == '/' && chars.get(j + 1) == Some(&'*') {
+                    state = LexState::Block(depth + 1);
+                    j += 2;
+                } else if chars[j] == '*' && chars.get(j + 1) == Some(&'/') {
+                    state = if depth <= 1 {
+                        LexState::Code
+                    } else {
+                        LexState::Block(depth - 1)
+                    };
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            LexState::Str => {
+                if chars[j] == '\\' {
+                    strs[j] = chars[j];
+                    if j + 1 < n {
+                        strs[j + 1] = chars[j + 1];
+                    }
+                    j += 2;
+                } else if chars[j] == '"' {
+                    code[j] = '"';
+                    state = LexState::Code;
+                    j += 1;
+                } else {
+                    strs[j] = chars[j];
+                    j += 1;
+                }
+            }
+            LexState::RawStr(hashes) => {
+                if chars[j] == '"' && raw_ends(&chars, j, hashes) {
+                    code[j] = '"';
+                    j += 1 + hashes as usize;
+                    state = LexState::Code;
+                } else {
+                    strs[j] = chars[j];
+                    j += 1;
+                }
+            }
+            LexState::Code => {
+                let c = chars[j];
+                if c == '/' && chars.get(j + 1) == Some(&'/') {
+                    break; // line comment: rest of the line is gone
+                } else if c == '/' && chars.get(j + 1) == Some(&'*') {
+                    state = LexState::Block(1);
+                    j += 2;
+                } else if c == '"' {
+                    code[j] = '"';
+                    state = LexState::Str;
+                    j += 1;
+                } else if (c == 'r' || c == 'b') && !prev_is_ident(&chars, j) {
+                    if let Some((hashes, skip)) = raw_start(&chars, j) {
+                        state = LexState::RawStr(hashes);
+                        j += skip;
+                    } else if c == 'b' && chars.get(j + 1) == Some(&'"') {
+                        code[j] = 'b';
+                        code[j + 1] = '"';
+                        state = LexState::Str;
+                        j += 2;
+                    } else {
+                        code[j] = c;
+                        j += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal vs lifetime.
+                    if chars.get(j + 1) == Some(&'\\') {
+                        // Escaped char literal: skip to the closing quote.
+                        let mut k = j + 3;
+                        while k < n && chars[k] != '\'' {
+                            k += 1;
+                        }
+                        j = (k + 1).min(n);
+                    } else if chars.get(j + 2) == Some(&'\'') {
+                        j += 3; // 'x'
+                    } else {
+                        code[j] = c; // lifetime tick
+                        j += 1;
+                    }
+                } else {
+                    code[j] = c;
+                    j += 1;
+                }
+            }
+        }
+    }
+    (code.into_iter().collect(), strs.into_iter().collect(), state)
+}
+
+/// Is the char before `j` part of an identifier? Guards the raw-string
+/// opener check so `barrier"x"` cannot read `r"` out of an identifier
+/// tail (identifiers can't directly abut a string literal anyway, but
+/// the lexer shouldn't rely on that).
+fn prev_is_ident(chars: &[char], j: usize) -> bool {
+    j > 0 && (chars[j - 1].is_alphanumeric() || chars[j - 1] == '_')
+}
+
+/// Mark every line inside a `#[cfg(test)]` region: from the attribute
+/// to the close of the brace block it opens (typically `mod tests { … }`).
+fn mark_test_regions(lines: &mut [Line]) {
+    let mut armed = false;
+    let mut in_region = false;
+    let mut depth: i64 = 0;
+    for line in lines.iter_mut() {
+        if !in_region && !armed && line.code.contains("#[cfg(test)]") {
+            armed = true;
+        }
+        if armed || in_region {
+            line.in_test = true;
+            for c in line.code.chars() {
+                if c == '{' {
+                    if armed {
+                        armed = false;
+                        in_region = true;
+                        depth = 0;
+                    }
+                    if in_region {
+                        depth += 1;
+                    }
+                } else if c == '}' && in_region {
+                    depth -= 1;
+                    if depth == 0 {
+                        in_region = false;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_blanked_from_code() {
+        let sf = scan_file(
+            "x.rs",
+            "let a = \"Instant::now()\"; // Instant::now()\nlet b = 1; /* HashMap */ let c = 2;\n",
+        );
+        assert!(!sf.lines[0].code.contains("Instant::now"));
+        assert!(sf.lines[0].strings.contains("Instant::now()"));
+        assert!(!sf.lines[1].code.contains("HashMap"));
+        assert!(sf.lines[1].code.contains("let c = 2;"));
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let sf = scan_file("x.rs", "/* a /* b */\nstill comment */ let x = 1;\n");
+        assert!(!sf.lines[0].code.contains('a'));
+        assert!(!sf.lines[1].code.contains("still"));
+        assert!(sf.lines[1].code.contains("let x = 1;"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let sf = scan_file("x.rs", "fn f<'a>(x: &'a str) { if c == '{' { g('\\n'); } }\n");
+        // The brace inside the char literal must not unbalance the code view.
+        let code = &sf.lines[0].code;
+        let open = code.matches('{').count();
+        let close = code.matches('}').count();
+        assert_eq!(open, close, "char-literal brace leaked into code: {code}");
+        assert!(code.contains("'a"), "lifetimes survive in code");
+    }
+
+    #[test]
+    fn raw_strings_are_string_content() {
+        let sf = scan_file("x.rs", "let s = r#\"panic!(\"x\") \"# ; let t = 1;\n");
+        assert!(!sf.lines[0].code.contains("panic!"));
+        assert!(sf.lines[0].strings.contains("panic!"));
+        assert!(sf.lines[0].code.contains("let t = 1;"));
+    }
+
+    #[test]
+    fn cfg_test_regions_are_marked() {
+        let text = "fn prod() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let sf = scan_file("x.rs", text);
+        let flags: Vec<bool> = sf.lines.iter().map(|l| l.in_test).collect();
+        assert_eq!(flags, vec![false, true, true, true, true, false]);
+    }
+}

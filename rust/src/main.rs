@@ -71,13 +71,17 @@ COMMANDS:
                                 phase-shifting traces under every governor +
                                 the model-in-the-loop ecopt governor, vs the
                                 static oracle (warm model cache trains zero)
-  sim <SCENARIO.toml> [--quick] [--out FILE] [--threads N]
+  sim <SCENARIO.toml> [--quick] [--out FILE] [--threads N] [--fuzz N]
                                 tick-accurate fleet simulation with fault
                                 injection: thousands of heterogeneous nodes
                                 under their governors while sensors black out,
                                 meters drift, actuators stick and nodes churn;
                                 checks the scenario's safety/liveness
-                                properties (exit 1 if any fails)
+                                properties (exit 1 if any fails); --fuzz N
+                                instead mutates the scenario N times and
+                                checks every mutant parses + runs
+                                deterministically or is rejected with a
+                                positioned error
   serve [--addr HOST:PORT] [--workers N] [--queue N] [--shards N]
         [--budget-mb MB] [--cache-dir DIR] [--no-cache]
                                 run ecoptd, the energy-advisor daemon: a TCP
@@ -98,6 +102,12 @@ COMMANDS:
                                 inspect / empty the persistent model cache
   arch [--list]                 list the built-in architecture profiles
   config --dump                 print the effective configuration
+  lint [--root DIR] [--fix-allowlist] [--json]
+                                determinism-invariant static analysis over
+                                rust/src + rust/tests + rust/benches:
+                                seed-domain registry, wall-clock reads,
+                                unordered iteration, float formatting,
+                                panic paths, lossy casts (exit 2 on findings)
   help [COMMAND]                this text, or one command's details
 ";
 
@@ -223,7 +233,8 @@ const COMMANDS: &[CmdSpec] = &[
     },
     CmdSpec {
         name: "sim",
-        usage: "USAGE: ecopt sim <SCENARIO.toml> [--quick] [--out FILE] [--threads N]\n\n\
+        usage: "USAGE: ecopt sim <SCENARIO.toml> [--quick] [--out FILE] [--threads N]\n\
+                       [--fuzz N]\n\n\
                 Run a tick-accurate fleet simulation with fault injection. The\n\
                 scenario file declares the fleet (arch-registry profiles x\n\
                 counts, each group under its own governor and phased\n\
@@ -234,8 +245,14 @@ const COMMANDS: &[CmdSpec] = &[
                 only — no wall-clock sleeps; the report is byte-identical\n\
                 for any --threads value. --quick caps the timeline at the\n\
                 scenario's quick_duration_s (never the node count). Exits 0\n\
-                when every property holds, 1 otherwise.",
-        value_flags: &["out", "threads"],
+                when every property holds, 1 otherwise.\n\n\
+                --fuzz N runs the scenario fuzzer instead: N deterministic\n\
+                mutations of the file (seeded from the scenario's own seed,\n\
+                so the mutant set is reproducible), each of which must\n\
+                either be rejected with a positioned parse/validation error\n\
+                or run byte-identically at 1 vs 4 threads. Any panic,\n\
+                unpositioned error, or thread-count divergence exits 1.",
+        value_flags: &["out", "threads", "fuzz"],
         bool_flags: &["quick"],
         max_positionals: 1,
         input_alias: false,
@@ -330,6 +347,33 @@ const COMMANDS: &[CmdSpec] = &[
         usage: "USAGE: ecopt config --dump\n\nPrint the effective configuration as JSON.",
         value_flags: &[],
         bool_flags: &["dump"],
+        max_positionals: 0,
+        input_alias: false,
+    },
+    CmdSpec {
+        name: "lint",
+        usage: "USAGE: ecopt lint [--root DIR] [--fix-allowlist] [--json]\n\n\
+                Run the determinism-invariant static analyzer over rust/src,\n\
+                rust/tests and rust/benches under the repo root (auto-detected\n\
+                by walking up from the current directory; override with\n\
+                --root). Rules: seed-domain (unique, centrally declared,\n\
+                registered in DESIGN.md), wall-clock (no Instant/SystemTime\n\
+                outside util::clock), unordered-iter (no HashMap/HashSet in\n\
+                serialization-feeding layers), float-fmt (no {:?}/precision\n\
+                float formatting in persist/protocol), panic-path (no\n\
+                unwrap/expect/panic!/literal indexing in the server and the\n\
+                sim engine), lossy-cast (no truncating `as` in protocol and\n\
+                parsing), untested-const (pub seed/golden constants must be\n\
+                referenced by a test). Suppressions live in the committed\n\
+                lint-allow.toml, each with a mandatory reason.\n\n\
+                Diagnostics are positioned `file:line: rule-id: message`.\n\
+                Exits 0 on a clean tree, 2 on any finding. --fix-allowlist\n\
+                appends FIXME-reason allowlist entries for the current\n\
+                findings (the tree stays red until each FIXME is replaced\n\
+                with a real justification). --json prints a machine-readable\n\
+                report instead of diagnostic lines.",
+        value_flags: &["root"],
+        bool_flags: &["fix-allowlist", "json"],
         max_positionals: 0,
         input_alias: false,
     },
@@ -770,6 +814,23 @@ fn main() -> anyhow::Result<()> {
                 Some(p) => p.clone(),
                 None => usage_exit(args.spec.usage, "a scenario file is required"),
             };
+            if let Some(n) = args.opt_num::<usize>("fuzz") {
+                let text = std::fs::read_to_string(std::path::Path::new(&path))?;
+                let outcome = ecopt::sim::fuzz::fuzz_scenario(&text, n)?;
+                let rendered = outcome.render();
+                match args.get("out") {
+                    Some(out) if !out.is_empty() => {
+                        std::fs::write(out, &rendered)?;
+                        eprintln!("fuzz report written to {out}");
+                    }
+                    _ => println!("{rendered}"),
+                }
+                eprintln!("{}", outcome.summary());
+                if !outcome.ok() {
+                    std::process::exit(1);
+                }
+                return Ok(());
+            }
             let scenario = Scenario::load(std::path::Path::new(&path))?;
             let opts = SimOptions {
                 threads: args.num("threads", 0),
@@ -991,6 +1052,45 @@ fn main() -> anyhow::Result<()> {
         "config" => {
             let cfg = load_config(&args)?;
             println!("{}", cfg.dump()?);
+        }
+        "lint" => {
+            let root = match args.get("root") {
+                Some(dir) => std::path::PathBuf::from(dir),
+                None => {
+                    let cwd = std::env::current_dir()?;
+                    match ecopt::lint::find_root(&cwd) {
+                        Some(r) => r,
+                        None => {
+                            return Err(ecopt::Error::Config(
+                                "lint: no rust/src found above the current directory — \
+                                 pass --root DIR"
+                                    .to_string(),
+                            )
+                            .into())
+                        }
+                    }
+                }
+            };
+            let report = ecopt::lint::run_tree(&root)?;
+            if args.has("fix-allowlist") {
+                let n = ecopt::lint::fix_allowlist(&root, &report)?;
+                eprintln!(
+                    "lint: wrote {n} FIXME entr{} to lint-allow.toml — replace each \
+                     FIXME reason with a real justification",
+                    if n == 1 { "y" } else { "ies" }
+                );
+                eprintln!("{}", report.summary());
+                return Ok(());
+            }
+            if args.has("json") {
+                println!("{}", report.to_json()?);
+            } else {
+                print!("{}", report.render());
+            }
+            eprintln!("{}", report.summary());
+            if !report.findings.is_empty() {
+                std::process::exit(2);
+            }
         }
         "help" => match args.positional.first() {
             Some(topic) => match spec_by_name(topic) {

@@ -33,12 +33,13 @@
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::config::Mhz;
 use crate::energy::{Constraints, Objective};
 use crate::service::protocol::{line_code, line_is_ok, unwrap_batch, Request, CODE_OVERLOADED};
 use crate::service::SERVICE_SEED_DOMAIN;
+use crate::util::clock::{Clock, SystemClock};
 use crate::util::json::Json;
 use crate::util::pool::WorkerPool;
 use crate::util::rng::Rng;
@@ -261,7 +262,11 @@ pub fn run_loadgen(opts: &LoadgenOptions) -> Result<LoadgenOutcome> {
     let addr = opts.addr.as_str();
     let window = opts.pipeline.max(1);
     let batch = opts.batch;
-    let started = Instant::now();
+    // One shared monotonic clock (util::clock, rule R2): latencies are
+    // ns-diff readings, shared by every connection worker.
+    let clock = SystemClock::new();
+    let clock = &clock;
+    let started = clock.now_ns();
     let per_conn: Vec<Vec<(usize, String, u64)>> =
         WorkerPool::new(conns).try_run(conns, |c| {
             let mut stream = TcpStream::connect(addr)?;
@@ -284,14 +289,14 @@ pub fn run_loadgen(opts: &LoadgenOptions) -> Result<LoadgenOutcome> {
             // responses re-attach to indices positionally — also when
             // several come back inside one envelope.
             let idxs: Vec<usize> = (c..n).step_by(conns).collect();
-            let mut sent_at: Vec<Instant> = Vec::with_capacity(idxs.len());
+            let mut sent_at: Vec<u64> = Vec::with_capacity(idxs.len());
             let mut out = Vec::with_capacity(idxs.len());
             let mut sent = 0usize;
             while out.len() < idxs.len() {
                 while sent < idxs.len() && sent - out.len() < window {
                     stream.write_all(lines_ref[idxs[sent]].as_bytes())?;
                     stream.write_all(b"\n")?;
-                    sent_at.push(Instant::now());
+                    sent_at.push(clock.now_ns());
                     sent += 1;
                 }
                 let line = read_response_line(&mut reader)?;
@@ -306,13 +311,13 @@ pub fn run_loadgen(opts: &LoadgenOptions) -> Result<LoadgenOutcome> {
                             "daemon sent more responses than requests".into(),
                         ));
                     }
-                    let us = sent_at[k].elapsed().as_micros() as u64;
+                    let us = clock.now_ns().saturating_sub(sent_at[k]) / 1_000;
                     out.push((idxs[k], resp, us));
                 }
             }
             Ok(out)
         })?;
-    let elapsed_s = started.elapsed().as_secs_f64();
+    let elapsed_s = clock.now_ns().saturating_sub(started) as f64 / 1e9;
 
     let mut responses: Vec<Option<(String, u64)>> = vec![None; n];
     for bucket in per_conn {

@@ -44,9 +44,8 @@ use std::path::PathBuf;
 
 /// Seed-domain separator for service load generation: request `i` of an
 /// `ecopt loadgen` run draws from `Rng::for_stream(seed ^ DOMAIN, i)` —
-/// disjoint from the characterization (…0001), comparison (…0002),
-/// fleet (…0003) and replay (…0004) domains.
-pub const SERVICE_SEED_DOMAIN: u64 = 0xC4A2_AC7E_0000_0005;
+/// disjoint from every other domain in the `util::seed_domains` registry.
+pub use crate::util::seed_domains::SERVICE_SEED_DOMAIN;
 
 /// Daemon configuration (`ecopt serve` flags).
 #[derive(Debug, Clone)]

@@ -28,7 +28,7 @@
 //!
 //! [`replay_run`]: crate::workloads::phases::replay_run
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 use crate::arch::{profile_by_name, ArchProfile};
@@ -438,10 +438,10 @@ fn training_config(profile: &str) -> ExperimentConfig {
 fn train_bundles(
     scenario: &Scenario,
     pool: &WorkerPool,
-) -> Result<HashMap<(String, String, u32), TrainedBundle>> {
+) -> Result<BTreeMap<(String, String, u32), TrainedBundle>> {
     let suite = phase_suite();
-    let mut bundles: HashMap<(String, String, u32), TrainedBundle> = HashMap::new();
-    let mut power_memos: HashMap<String, Option<PowerModel>> = HashMap::new();
+    let mut bundles: BTreeMap<(String, String, u32), TrainedBundle> = BTreeMap::new();
+    let mut power_memos: BTreeMap<String, Option<PowerModel>> = BTreeMap::new();
     for g in &scenario.fleet {
         if !g.governor.starts_with("ecopt") {
             continue;

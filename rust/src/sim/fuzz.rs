@@ -1,0 +1,543 @@
+//! Scenario fuzzer (`ecopt sim <file> --fuzz N`) — ISSUE 8 satellite.
+//!
+//! The scenario parser and validator promise two things: malformed or
+//! inconsistent input is **rejected with a positioned, user-actionable
+//! error** (never a panic, never an internal-error leak), and anything
+//! accepted **runs byte-identically at any thread count**. This module
+//! checks both promises mechanically: it derives `N` deterministic
+//! mutants from a committed scenario file (line deletion/duplication/
+//! swap/truncation, digit flips, garbage-line injection, identifier
+//! mangling — the classic parser-hostile moves) and pushes every mutant
+//! through parse → validate → run.
+//!
+//! The mutant stream is seeded from the *scenario's own* `seed` under
+//! [`FUZZ_SEED_DOMAIN`], so `--fuzz 100` on the same file always
+//! exercises the same 100 mutants — a failing mutant index is a
+//! reproducible bug report, not a flake.
+//!
+//! Accepted mutants are run as a **shrunken twin**: same structure, but
+//! the timeline is capped at a few simulated seconds, group counts at a
+//! handful of nodes (fault node ranges clipped to match), and model-
+//! in-the-loop governors swapped for `ondemand` — the determinism
+//! contract is about the engine's scheduling, not about how long it
+//! runs, and this keeps `--fuzz 100` in CI-smoke territory. Each twin
+//! runs at 1 and 4 threads and the rendered reports are compared byte
+//! for byte.
+//!
+//! Contract violations — a panic anywhere, an internal (non-config)
+//! error leaking from the parser, or any 1-vs-4-thread divergence — are
+//! collected in the [`FuzzOutcome`] and fail the CLI with exit 1.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use crate::sim::engine::{run_scenario, SimOptions};
+use crate::sim::scenario::Scenario;
+use crate::util::rng::Rng;
+use crate::util::seed_domains::FUZZ_SEED_DOMAIN;
+use crate::{Error, Result};
+
+/// What happened to one mutant.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MutantStatus {
+    /// Rejected with a positioned/actionable error (the good outcome
+    /// for a broken mutant). Carries the error text.
+    Rejected(String),
+    /// Accepted, and the shrunken twin produced byte-identical reports
+    /// at 1 and 4 threads (the good outcome for a survivable mutant).
+    Ran,
+    /// A contract violation: panic, internal-error leak, or
+    /// thread-count divergence. Carries the description.
+    Violation(String),
+}
+
+/// One mutant's record.
+#[derive(Debug, Clone)]
+pub struct MutantResult {
+    /// 0-based mutant index (stable across runs — the repro handle).
+    pub index: usize,
+    /// Which mutation operator produced it.
+    pub op: &'static str,
+    /// What happened.
+    pub status: MutantStatus,
+}
+
+/// Everything one fuzz run produced.
+#[derive(Debug, Clone)]
+pub struct FuzzOutcome {
+    /// Base scenario name.
+    pub scenario: String,
+    /// Base scenario seed (the mutant stream derives from it).
+    pub seed: u64,
+    /// Per-mutant records, in index order.
+    pub mutants: Vec<MutantResult>,
+}
+
+impl FuzzOutcome {
+    /// Mutants that were accepted and ran deterministically.
+    pub fn accepted(&self) -> usize {
+        self.mutants
+            .iter()
+            .filter(|m| m.status == MutantStatus::Ran)
+            .count()
+    }
+
+    /// Mutants rejected with a proper error.
+    pub fn rejected(&self) -> usize {
+        self.mutants
+            .iter()
+            .filter(|m| matches!(m.status, MutantStatus::Rejected(_)))
+            .count()
+    }
+
+    /// Contract violations (panics, leaks, divergence).
+    pub fn violations(&self) -> Vec<&MutantResult> {
+        self.mutants
+            .iter()
+            .filter(|m| matches!(m.status, MutantStatus::Violation(_)))
+            .collect()
+    }
+
+    /// Did every mutant honor the contract?
+    pub fn ok(&self) -> bool {
+        self.violations().is_empty()
+    }
+
+    /// Deterministic human-readable report (no wall-clock content).
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "# Scenario fuzz: {} (seed {}, {} mutants)\n",
+            self.scenario,
+            self.seed,
+            self.mutants.len()
+        );
+        for m in &self.mutants {
+            let status = match &m.status {
+                MutantStatus::Ran => "ran: byte-identical at 1 vs 4 threads".to_string(),
+                MutantStatus::Rejected(e) => format!("rejected: {}", clip(e)),
+                MutantStatus::Violation(e) => format!("VIOLATION: {}", clip(e)),
+            };
+            let _ = writeln!(out, "mutant {:>3} [{:<13}] {status}", m.index, m.op);
+        }
+        let _ = writeln!(
+            out,
+            "\naccepted {}, rejected {}, violations {}",
+            self.accepted(),
+            self.rejected(),
+            self.violations().len()
+        );
+        out
+    }
+
+    /// One-line summary for stderr.
+    pub fn summary(&self) -> String {
+        format!(
+            "fuzz: {} mutants — {} ran deterministically, {} rejected with positioned errors, {} violation(s)",
+            self.mutants.len(),
+            self.accepted(),
+            self.rejected(),
+            self.violations().len()
+        )
+    }
+}
+
+/// Clip a message to one readable line (char-safe).
+fn clip(s: &str) -> String {
+    let one_line = s.replace('\n', " | ");
+    if one_line.chars().count() <= 160 {
+        one_line
+    } else {
+        let mut t: String = one_line.chars().take(157).collect();
+        t.push_str("...");
+        t
+    }
+}
+
+/// Fuzz a scenario: derive `n` deterministic mutants of `text` and
+/// check each one against the parse/validate/run contract. Errors only
+/// if the *base* text itself does not parse — a broken base is a usage
+/// error, not a finding.
+pub fn fuzz_scenario(text: &str, n: usize) -> Result<FuzzOutcome> {
+    let base = Scenario::parse(text).map_err(|e| match e {
+        Error::Config(msg) => Error::Config(format!("fuzz base scenario: {msg}")),
+        other => other,
+    })?;
+    let lines: Vec<String> = text.lines().map(|l| l.to_string()).collect();
+    let mut mutants = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut rng = Rng::for_stream(base.seed ^ FUZZ_SEED_DOMAIN, i as u64);
+        let (mutant, op) = mutate(&lines, &mut rng);
+        mutants.push(MutantResult {
+            index: i,
+            op,
+            status: check_mutant(&mutant),
+        });
+    }
+    Ok(FuzzOutcome {
+        scenario: base.name,
+        seed: base.seed,
+        mutants,
+    })
+}
+
+/// The fixed garbage lines the `garbage-line` operator injects.
+const GARBAGE: [&str; 6] = [
+    "wibble = [",
+    "= 3",
+    "[[fleet]",
+    "governor = 7",
+    "count = -1",
+    "\"unterminated",
+];
+
+/// Apply one deterministic mutation operator; returns the mutant text
+/// and the operator's name.
+fn mutate(lines: &[String], rng: &mut Rng) -> (String, &'static str) {
+    let mut out: Vec<String> = lines.to_vec();
+    let n = out.len().max(1);
+    let op = match rng.below(7) {
+        0 => {
+            out.remove(rng.below(n).min(out.len().saturating_sub(1)));
+            "delete-line"
+        }
+        1 => {
+            let i = rng.below(n).min(out.len().saturating_sub(1));
+            let dup = out[i].clone();
+            out.insert(i, dup);
+            "dup-line"
+        }
+        2 => {
+            let i = rng.below(n);
+            let j = rng.below(n);
+            out.swap(i.min(out.len() - 1), j.min(out.len() - 1));
+            "swap-lines"
+        }
+        3 => {
+            out.truncate(rng.below(n));
+            "truncate"
+        }
+        4 => {
+            if flip_digit(&mut out, rng) {
+                "digit-flip"
+            } else {
+                insert_garbage(&mut out, rng);
+                "garbage-line"
+            }
+        }
+        5 => {
+            insert_garbage(&mut out, rng);
+            "garbage-line"
+        }
+        _ => {
+            if mangle_ident(&mut out, rng) {
+                "ident-mangle"
+            } else {
+                insert_garbage(&mut out, rng);
+                "garbage-line"
+            }
+        }
+    };
+    let mut text = out.join("\n");
+    text.push('\n');
+    (text, op)
+}
+
+/// Replace one digit somewhere in the file with a different digit.
+/// Returns false if the file has no digits.
+fn flip_digit(out: &mut [String], rng: &mut Rng) -> bool {
+    let spots: Vec<(usize, usize)> = out
+        .iter()
+        .enumerate()
+        .flat_map(|(li, l)| {
+            l.char_indices()
+                .filter(|(_, c)| c.is_ascii_digit())
+                .map(move |(ci, _)| (li, ci))
+        })
+        .collect();
+    if spots.is_empty() {
+        return false;
+    }
+    let (li, ci) = spots[rng.below(spots.len())];
+    let line = &out[li];
+    let old = line[ci..].chars().next().unwrap_or('0');
+    let d = old as u8 - b'0';
+    let new = (d + 1 + rng.below(9) as u8) % 10;
+    let mut s = String::with_capacity(line.len());
+    s.push_str(&line[..ci]);
+    s.push((b'0' + new) as char);
+    s.push_str(&line[ci + 1..]);
+    out[li] = s;
+    true
+}
+
+/// Insert one fixed garbage line at a random position.
+fn insert_garbage(out: &mut Vec<String>, rng: &mut Rng) {
+    let g = GARBAGE[rng.below(GARBAGE.len())];
+    let at = rng.below(out.len() + 1);
+    out.insert(at, g.to_string());
+}
+
+/// Rotate one ASCII letter somewhere in the file (a→b, z→a). Returns
+/// false if the file has no letters.
+fn mangle_ident(out: &mut [String], rng: &mut Rng) -> bool {
+    let spots: Vec<(usize, usize)> = out
+        .iter()
+        .enumerate()
+        .flat_map(|(li, l)| {
+            l.char_indices()
+                .filter(|(_, c)| c.is_ascii_lowercase())
+                .map(move |(ci, _)| (li, ci))
+        })
+        .collect();
+    if spots.is_empty() {
+        return false;
+    }
+    let (li, ci) = spots[rng.below(spots.len())];
+    let line = &out[li];
+    let old = line[ci..].chars().next().unwrap_or('a');
+    let new = if old == 'z' {
+        'a'
+    } else {
+        (old as u8 + 1) as char
+    };
+    let mut s = String::with_capacity(line.len());
+    s.push_str(&line[..ci]);
+    s.push(new);
+    s.push_str(&line[ci + 1..]);
+    out[li] = s;
+    true
+}
+
+/// Is this error an acceptable rejection? Type-level: config errors and
+/// the named unknown-thing errors are user-actionable; everything else
+/// (Io/Data/Json/...) is an internal leak. Config messages must also be
+/// positioned (`line N`) or name the scenario construct at fault.
+fn is_proper_rejection(e: &Error) -> bool {
+    match e {
+        Error::Config(msg) => {
+            msg.contains("line ")
+                || msg.contains("scenario")
+                || msg.contains("unknown")
+                || msg.contains("missing")
+        }
+        Error::UnknownArch(_)
+        | Error::UnknownWorkload(_)
+        | Error::UnknownGovernor(_)
+        | Error::BadFrequency(_)
+        | Error::BadCoreCount { .. } => true,
+        _ => false,
+    }
+}
+
+/// Extract a printable message from a caught panic payload.
+fn panic_msg(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Shrink an accepted mutant into a cheap-to-run twin: cap the
+/// timeline, shrink the fleet (clipping fault node ranges to the new
+/// total), and swap model-in-the-loop governors for `ondemand`. The
+/// determinism claim under test is the engine's scheduling, which none
+/// of these knobs change.
+fn shrink(mut s: Scenario) -> Scenario {
+    s.duration_s = s.duration_s.min(4.0);
+    s.quick_duration_s = None;
+    s.dt_s = s.dt_s.max(0.05).min(s.duration_s);
+    s.cap_check_period_s = s.cap_check_period_s.min(s.duration_s);
+    s.input = s.input.min(3);
+    for g in &mut s.fleet {
+        g.count = g.count.min(4);
+        g.input = g.input.map(|i| i.min(3));
+        if g.governor.starts_with("ecopt") {
+            g.governor = "ondemand".to_string();
+        }
+    }
+    let total: usize = s.fleet.iter().map(|g| g.count).sum();
+    s.faults.retain_mut(|f| {
+        f.nodes.1 = f.nodes.1.min(total);
+        f.nodes.0 < f.nodes.1
+    });
+    s
+}
+
+/// Push one mutant text through the parse → validate → run contract.
+fn check_mutant(text: &str) -> MutantStatus {
+    let parsed = catch_unwind(AssertUnwindSafe(|| Scenario::parse(text)));
+    let scenario = match parsed {
+        Err(p) => {
+            return MutantStatus::Violation(format!("panicked during parse: {}", panic_msg(p)))
+        }
+        Ok(Err(e)) if is_proper_rejection(&e) => return MutantStatus::Rejected(e.to_string()),
+        Ok(Err(e)) => {
+            return MutantStatus::Violation(format!(
+                "rejected without a positioned error: {e}"
+            ))
+        }
+        Ok(Ok(s)) => s,
+    };
+    let twin = shrink(scenario);
+    let run = |threads: usize| -> std::result::Result<Result<String>, String> {
+        catch_unwind(AssertUnwindSafe(|| {
+            let opts = SimOptions {
+                threads,
+                quick: false,
+            };
+            run_scenario(&twin, &opts).map(|r| crate::report::sim_report(&r))
+        }))
+        .map_err(panic_msg)
+    };
+    match (run(1), run(4)) {
+        (Err(p), _) | (_, Err(p)) => {
+            MutantStatus::Violation(format!("panicked during run: {p}"))
+        }
+        (Ok(Ok(a)), Ok(Ok(b))) => {
+            if a == b {
+                MutantStatus::Ran
+            } else {
+                MutantStatus::Violation(
+                    "accepted scenario diverges between 1 and 4 threads".to_string(),
+                )
+            }
+        }
+        (Ok(Err(a)), Ok(Err(b))) => {
+            let (a, b) = (a.to_string(), b.to_string());
+            if a == b {
+                MutantStatus::Rejected(a)
+            } else {
+                MutantStatus::Violation(format!(
+                    "run error differs between 1 and 4 threads: `{a}` vs `{b}`"
+                ))
+            }
+        }
+        (Ok(Ok(_)), Ok(Err(e))) | (Ok(Err(e)), Ok(Ok(_))) => MutantStatus::Violation(format!(
+            "one thread count ran, the other errored: {e}"
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A tiny scenario every test shares: two fleet groups, one fault,
+    /// both property kinds. Small enough that the twin's run is
+    /// milliseconds.
+    fn base_text() -> String {
+        "[scenario]\n\
+         name = \"fuzz-base\"\n\
+         description = \"fuzzer unit fixture\"\n\
+         seed = 2024\n\
+         duration_s = 3.0\n\
+         cap_check_period_s = 0.5\n\
+         dt_s = 0.1\n\
+         input = 1\n\
+         \n\
+         [[fleet]]\n\
+         profile = \"desktop-turbo-i9\"\n\
+         count = 2\n\
+         workload = \"duty-cycle\"\n\
+         governor = \"ondemand\"\n\
+         \n\
+         [[phases]]\n\
+         name = \"start\"\n\
+         start_s = 0.0\n\
+         \n\
+         [[faults]]\n\
+         phase = \"start\"\n\
+         kind = \"sensor_blackout\"\n\
+         nodes = \"0..1\"\n\
+         at_s = 1.0\n\
+         duration_s = 0.5\n\
+         \n\
+         [[properties]]\n\
+         name = \"cap\"\n\
+         kind = \"power_cap\"\n\
+         cap_w = 100000.0\n"
+            .to_string()
+    }
+
+    #[test]
+    fn base_fixture_is_accepted_and_deterministic() {
+        assert_eq!(check_mutant(&base_text()), MutantStatus::Ran);
+    }
+
+    #[test]
+    fn fuzz_is_deterministic_across_calls() {
+        let text = base_text();
+        let a = fuzz_scenario(&text, 6).unwrap();
+        let b = fuzz_scenario(&text, 6).unwrap();
+        assert_eq!(a.render(), b.render(), "same seed, same mutants, same report");
+        assert_eq!(a.mutants.len(), 6);
+        assert_eq!(a.accepted() + a.rejected() + a.violations().len(), 6);
+    }
+
+    #[test]
+    fn committed_scenarios_survive_a_fuzz_round() {
+        // The committed scenario files are the contract surface the CLI
+        // ships; a short round over each must produce zero violations.
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../scenarios");
+        let mut checked = 0;
+        if let Ok(entries) = std::fs::read_dir(&dir) {
+            let mut paths: Vec<_> = entries
+                .filter_map(|e| e.ok().map(|e| e.path()))
+                .filter(|p| p.extension().is_some_and(|x| x == "toml"))
+                .collect();
+            paths.sort();
+            for p in paths {
+                let text = std::fs::read_to_string(&p).unwrap();
+                let out = fuzz_scenario(&text, 8).unwrap();
+                assert!(
+                    out.ok(),
+                    "{} violated the fuzz contract:\n{}",
+                    p.display(),
+                    out.render()
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked > 0, "no committed scenarios found at {}", dir.display());
+    }
+
+    #[test]
+    fn garbage_injection_is_rejected_with_position() {
+        let mut lines: Vec<String> = base_text().lines().map(|l| l.to_string()).collect();
+        lines.insert(1, "= 3".to_string());
+        let text = lines.join("\n");
+        match check_mutant(&text) {
+            MutantStatus::Rejected(msg) => {
+                assert!(msg.contains("line "), "expected a positioned error, got: {msg}")
+            }
+            other => panic!("garbage line should be rejected, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_governor_rejects_consistently() {
+        let text = base_text().replace("ondemand", "ondemandq");
+        match check_mutant(&text) {
+            MutantStatus::Rejected(msg) => {
+                assert!(msg.contains("governor"), "unexpected message: {msg}")
+            }
+            other => panic!("governor mangle should reject, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shrink_clips_fault_ranges_to_the_new_total() {
+        let mut s = Scenario::parse(&base_text()).unwrap();
+        s.fleet[0].count = 500;
+        s.faults[0].nodes = (0, 400);
+        let twin = shrink(s);
+        assert_eq!(twin.fleet[0].count, 4);
+        assert!(twin.faults[0].nodes.1 <= 4);
+        twin.validate().unwrap();
+    }
+}

@@ -33,11 +33,16 @@
 //!
 //! Entry points: [`Scenario::parse`]/[`Scenario::load`] +
 //! [`run_scenario`], surfaced on the CLI as
-//! `ecopt sim <scenario.toml> [--quick] [--out FILE] [--threads N]`.
+//! `ecopt sim <scenario.toml> [--quick] [--out FILE] [--threads N]`;
+//! `--fuzz N` instead drives the scenario fuzzer ([`fuzz`]), which
+//! checks that N deterministic mutations of the file are each either
+//! rejected with a positioned error or run byte-identically across
+//! thread counts.
 
 pub mod engine;
 pub mod event;
 pub mod faults;
+pub mod fuzz;
 pub mod properties;
 pub mod scenario;
 pub mod toml;
@@ -53,7 +58,7 @@ pub use scenario::{
 /// `Rng::split_seed(scenario.seed ^ SIM_SEED_DOMAIN, node_id)`, so a
 /// fleet run can never collide with characterization, fleet-experiment,
 /// replay, or service streams derived from the same user seed.
-pub const SIM_SEED_DOMAIN: u64 = 0xC4A2_AC7E_0000_0006;
+pub use crate::util::seed_domains::SIM_SEED_DOMAIN;
 
 /// Virtual-clock resolution: ticks per simulated second (1 ms ticks).
 pub const TICKS_PER_S: u64 = 1000;
@@ -84,14 +89,10 @@ mod tests {
     #[test]
     fn seed_domain_is_distinct() {
         // Guards against a copy-paste collision with the other domains.
-        for other in [
-            0xC4A2_AC7E_0000_0001u64,
-            0xC4A2_AC7E_0000_0002,
-            0xC4A2_AC7E_0000_0003,
-            0xC4A2_AC7E_0000_0004,
-            0xC4A2_AC7E_0000_0005,
-        ] {
-            assert_ne!(SIM_SEED_DOMAIN, other);
+        for (name, other) in crate::util::seed_domains::ALL_SEED_DOMAINS {
+            if name != "sim" {
+                assert_ne!(SIM_SEED_DOMAIN, other, "collides with `{name}`");
+            }
         }
     }
 }

@@ -21,8 +21,9 @@
 //! Keys are flat and sorted (the canonical JSON writer), so a compare
 //! step is one `jq` expression per metric — no schema walking.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
+use crate::util::clock::{Clock, SystemClock};
 use crate::util::json::Json;
 use crate::util::stats::percentile;
 
@@ -82,12 +83,21 @@ pub struct Bench {
     min_iters: usize,
     results: Vec<BenchStats>,
     metrics: Vec<(String, f64)>,
+    clock: Box<dyn Clock>,
 }
 
 impl Bench {
     /// Create a runner; reads `--quick` / `ECOPT_BENCH_QUICK` to shrink
-    /// the per-benchmark time budget.
+    /// the per-benchmark time budget. Timing reads go through the
+    /// `util::clock` Clock trait ([`SystemClock`] here — rule R2 keeps
+    /// raw `Instant::now` out of this module).
     pub fn new(group: &str) -> Self {
+        Self::with_clock(group, Box::new(SystemClock::new()))
+    }
+
+    /// Like [`Bench::new`] but timing through an injected clock — tests
+    /// drive a `VirtualClock` for deterministic stats.
+    pub fn with_clock(group: &str, clock: Box<dyn Clock>) -> Self {
         let quick = std::env::args().any(|a| a == "--quick")
             || std::env::var("ECOPT_BENCH_QUICK").is_ok();
         let budget = if quick {
@@ -104,6 +114,7 @@ impl Bench {
             min_iters: 3,
             results: Vec::new(),
             metrics: Vec::new(),
+            clock,
         }
     }
 
@@ -111,14 +122,16 @@ impl Bench {
     pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchStats {
         // Warm-up: one untimed call.
         f();
+        let budget_ns = self.budget.as_nanos() as u64;
         let mut samples: Vec<Duration> = Vec::new();
-        let start = Instant::now();
-        while (start.elapsed() < self.budget && samples.len() < self.max_iters)
+        let start = self.clock.now_ns();
+        while (self.clock.now_ns().saturating_sub(start) < budget_ns
+            && samples.len() < self.max_iters)
             || samples.len() < self.min_iters
         {
-            let t0 = Instant::now();
+            let t0 = self.clock.now_ns();
             f();
-            samples.push(t0.elapsed());
+            samples.push(Duration::from_nanos(self.clock.now_ns().saturating_sub(t0)));
         }
         samples.sort();
         let iters = samples.len();
@@ -244,6 +257,20 @@ mod tests {
         let body = std::fs::read_to_string(&path).unwrap();
         assert!(body.ends_with('\n'));
         assert_eq!(body.trim_end(), b.json());
+    }
+
+    #[test]
+    fn virtual_clock_makes_stats_deterministic() {
+        std::env::set_var("ECOPT_BENCH_QUICK", "1");
+        let vc = crate::util::clock::VirtualClock::new();
+        let handle = vc.clone();
+        let mut b = Bench::with_clock("virt", Box::new(vc));
+        // Every "iteration" advances virtual time by exactly 1 ms, so
+        // all percentiles collapse to 1 ms — bit-exact.
+        let s = b.bench("step", || handle.advance_ns(1_000_000));
+        assert_eq!(s.min, Duration::from_millis(1));
+        assert_eq!(s.p50, Duration::from_millis(1));
+        assert_eq!(s.p95, Duration::from_millis(1));
     }
 
     #[test]

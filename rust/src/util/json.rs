@@ -55,13 +55,10 @@ impl Json {
         }
     }
 
-    /// The number as a non-negative integer (error on sign/fraction).
+    /// The number as a non-negative integer (range-checked through u64).
     pub fn as_usize(&self) -> Result<usize> {
-        let f = self.as_f64()?;
-        if f < 0.0 || f.fract() != 0.0 {
-            return Err(Error::Json(format!("expected unsigned integer, got {f}")));
-        }
-        Ok(f as usize)
+        let v = self.as_u64()?;
+        usize::try_from(v).map_err(|_| Error::Json(format!("usize out of range: {v}")))
     }
 
     /// The number as a u32 (range-checked through u64).
@@ -70,10 +67,10 @@ impl Json {
         u32::try_from(v).map_err(|_| Error::Json(format!("u32 out of range: {v}")))
     }
 
-    /// The number as a u64 (error on sign/fraction).
+    /// The number as a u64 (error on sign/fraction/overflow).
     pub fn as_u64(&self) -> Result<u64> {
         let f = self.as_f64()?;
-        if f < 0.0 || f.fract() != 0.0 {
+        if f < 0.0 || f.fract() != 0.0 || f >= u64::MAX as f64 {
             return Err(Error::Json(format!("expected u64, got {f}")));
         }
         Ok(f as u64)

@@ -15,7 +15,9 @@
 //! * [`bench`] — benchmark harness (replaces `criterion`);
 //! * [`prop`] — property-testing helper (replaces `proptest`);
 //! * [`tempdir`] — scoped temp dirs for tests (replaces `tempfile`);
-//! * [`logging`] — leveled stderr logging (replaces `tracing`).
+//! * [`logging`] — leveled stderr logging (replaces `tracing`);
+//! * [`seed_domains`] — the central registry of RNG seed-domain tags
+//!   (the only module allowed to spell a `0xC4A2_AC7E_*` literal).
 
 pub mod bench;
 pub mod clock;
@@ -26,6 +28,7 @@ pub mod metrics;
 pub mod pool;
 pub mod prop;
 pub mod rng;
+pub mod seed_domains;
 pub mod stats;
 pub mod tempdir;
 

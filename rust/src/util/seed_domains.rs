@@ -1,0 +1,80 @@
+//! Central registry of RNG seed-domain tags (ISSUE 8).
+//!
+//! Every subsystem that splits per-item RNG streams from a user seed
+//! first XORs the seed with a *domain tag* so that two subsystems
+//! handed the same `--seed` can never walk the same stream (a
+//! characterization run and a replay run with seed 42 must not share
+//! random draws — that would correlate their noise and silently bias
+//! comparisons). The tags all share the `0xC4A2_AC7E` prefix so a
+//! misplaced literal is easy to grep for, and they differ in the low
+//! bits so they are pairwise distinct.
+//!
+//! This module is the **only** place a `0xC4A2_AC7E_*` literal may
+//! appear — `ecopt lint` rule `seed-domain` (R1) enforces that every
+//! such literal lives here, that the values are pairwise unique, and
+//! that each constant is listed in DESIGN.md's registry table.
+//! Subsystems re-export their tag from here (e.g.
+//! `crate::sim::SIM_SEED_DOMAIN`) so public paths are unchanged.
+
+/// Characterization campaign streams (`characterize::run_characterization`):
+/// one stream per (frequency, cores, input) grid cell.
+pub const CHAR_SEED_DOMAIN: u64 = 0xC4A2_AC7E_0000_0001;
+
+/// Ondemand-vs-optimal comparison streams (`compare::run_comparison`):
+/// one stream per (input, repetition) pair.
+pub const CMP_SEED_DOMAIN: u64 = 0xC4A2_AC7E_0000_0002;
+
+/// Fleet-experiment member streams (`coordinator::run_fleet`): one
+/// stream per fleet member index.
+pub const FLEET_SEED_DOMAIN: u64 = 0xC4A2_AC7E_0000_0003;
+
+/// Phase-replay harness streams (`coordinator::replay`): one stream
+/// per (workload, governor) replay lane.
+pub const REPLAY_SEED_DOMAIN: u64 = 0xC4A2_AC7E_0000_0004;
+
+/// `ecoptd` service streams (`service`): deterministic loadgen request
+/// schedules and daemon-side training draws.
+pub const SERVICE_SEED_DOMAIN: u64 = 0xC4A2_AC7E_0000_0005;
+
+/// Fleet-simulator streams (`sim::engine`): one stream per simulated
+/// node id.
+pub const SIM_SEED_DOMAIN: u64 = 0xC4A2_AC7E_0000_0006;
+
+/// Scenario-fuzzer streams (`sim::fuzz`): one stream per mutant index,
+/// split from the committed scenario's own seed.
+pub const FUZZ_SEED_DOMAIN: u64 = 0xC4A2_AC7E_0000_0007;
+
+/// Every registered domain tag with the subsystem it belongs to.
+/// The uniqueness test below (and its integration-test twin in
+/// `rust/tests/lint_rules.rs`) iterates this table, so adding a
+/// constant without registering it here fails the build review loop.
+pub const ALL_SEED_DOMAINS: [(&str, u64); 7] = [
+    ("characterize", CHAR_SEED_DOMAIN),
+    ("compare", CMP_SEED_DOMAIN),
+    ("fleet", FLEET_SEED_DOMAIN),
+    ("replay", REPLAY_SEED_DOMAIN),
+    ("service", SERVICE_SEED_DOMAIN),
+    ("sim", SIM_SEED_DOMAIN),
+    ("fuzz", FUZZ_SEED_DOMAIN),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::ALL_SEED_DOMAINS;
+
+    #[test]
+    fn seed_domains_are_pairwise_unique() {
+        for (i, (name_a, a)) in ALL_SEED_DOMAINS.iter().enumerate() {
+            for (name_b, b) in ALL_SEED_DOMAINS.iter().skip(i + 1) {
+                assert_ne!(a, b, "domains `{name_a}` and `{name_b}` collide");
+            }
+        }
+    }
+
+    #[test]
+    fn seed_domains_share_the_grep_prefix() {
+        for (name, tag) in ALL_SEED_DOMAINS {
+            assert_eq!(tag >> 32, 0xC4A2_AC7E, "domain `{name}` lost the prefix");
+        }
+    }
+}

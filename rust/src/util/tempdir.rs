@@ -13,18 +13,24 @@ pub struct TempDir {
 
 impl TempDir {
     /// Create a fresh unique directory.
+    ///
+    /// Uniqueness comes from (pid, process-local counter) plus a
+    /// `create_dir` that *fails* on an existing path — not from a
+    /// wall-clock read, so the module stays clean under lint rule R2
+    /// and two calls in the same nanosecond can never share a
+    /// directory. A stale leftover from a crashed earlier run with the
+    /// same pid just advances the counter.
     pub fn new() -> std::io::Result<TempDir> {
-        let n = COUNTER.fetch_add(1, Ordering::SeqCst);
-        let path = std::env::temp_dir().join(format!(
-            "ecopt-{}-{}-{n}",
-            std::process::id(),
-            std::time::SystemTime::now()
-                .duration_since(std::time::UNIX_EPOCH)
-                .map(|d| d.subsec_nanos())
-                .unwrap_or(0)
-        ));
-        std::fs::create_dir_all(&path)?;
-        Ok(TempDir { path })
+        let pid = std::process::id();
+        loop {
+            let n = COUNTER.fetch_add(1, Ordering::SeqCst);
+            let path = std::env::temp_dir().join(format!("ecopt-{pid}-{n}"));
+            match std::fs::create_dir(&path) {
+                Ok(()) => return Ok(TempDir { path }),
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => continue,
+                Err(e) => return Err(e),
+            }
+        }
     }
 
     /// The directory's path (valid until drop).
