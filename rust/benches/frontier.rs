@@ -1,0 +1,78 @@
+//! ISSUE 5 hot path: exact Pareto-frontier extraction of
+//! `(energy, exec-time, peak-power)` from one batched surface pass,
+//! plus the per-objective argmins the daemon's `optimize` requests pay
+//! for.
+//!
+//! Writes `BENCH_frontier.json` (override with `ECOPT_BENCH_JSON`) in
+//! the stable `ecopt-bench-v1` schema — CI compares it against the
+//! committed baseline and fails on regression (ISSUE 9 satellite).
+
+use std::path::Path;
+
+use ecopt::config::{CampaignSpec, NodeSpec, SvrSpec};
+use ecopt::energy::{config_grid, Constraints, EnergyModel, Objective};
+use ecopt::powermodel::PowerModel;
+use ecopt::svr::{SvrModel, TrainSample};
+use ecopt::util::bench::Bench;
+
+fn fixture_model() -> EnergyModel {
+    let mut samples = Vec::new();
+    for f in (1200u32..=2200).step_by(200) {
+        for p in [1usize, 2, 4, 8, 16, 24, 32] {
+            for n in 1..=3u32 {
+                let t = 120.0 * n as f64 * (0.06 + 0.94 / p as f64) * 2200.0 / f as f64;
+                samples.push(TrainSample { f_mhz: f, cores: p, input: n, time_s: t });
+            }
+        }
+    }
+    let svr = SvrModel::train(&samples, &SvrSpec::default()).unwrap();
+    EnergyModel::new(PowerModel::paper_eq9(), svr, NodeSpec::default())
+}
+
+fn main() {
+    let mut b = Bench::new("frontier");
+    let em = fixture_model();
+    let grid = config_grid(&CampaignSpec::default(), &NodeSpec::default());
+
+    // One surface pass + exact frontier extraction over the full grid.
+    let mut frontier_len = 0usize;
+    b.bench("frontier_352pts", || {
+        let front = em.frontier(&grid, 2, &Constraints::default()).unwrap();
+        assert!(!front.is_empty());
+        frontier_len = front.len();
+    });
+    b.metric("frontier_points", frontier_len as f64);
+
+    // Per-objective argmins off one precomputed frontier (the consult
+    // fast path: the frontier amortizes, the argmin is the hot part).
+    let front = em.frontier(&grid, 2, &Constraints::default()).unwrap();
+    b.bench("frontier_argmin_3objectives", || {
+        for obj in [Objective::Energy, Objective::Edp, Objective::Ed2p] {
+            assert!(front.argmin(obj).is_some());
+        }
+    });
+
+    // Full optimize (surface + scalarization) per objective, the shape
+    // an `ecoptd` optimize request pays cold.
+    b.bench("optimize_energy_352pts", || {
+        let o = em.optimize(&grid, 2, &Constraints::default()).unwrap();
+        assert!(o.pred_energy_j > 0.0);
+    });
+    b.bench("optimize_edp_352pts", || {
+        let o = em
+            .optimize(
+                &grid,
+                2,
+                &Constraints {
+                    objective: Objective::Edp,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        assert!(o.pred_energy_j > 0.0);
+    });
+
+    let out = std::env::var("ECOPT_BENCH_JSON").unwrap_or_else(|_| "BENCH_frontier.json".into());
+    b.write_json(Path::new(&out)).unwrap();
+    println!("wrote {out}");
+}

@@ -5,6 +5,11 @@
 //! The outputs are bit-identical across thread counts (asserted here too,
 //! cheaply, via sample counts — the strict byte-level check lives in
 //! `tests/determinism.rs`); only wall time may differ.
+//!
+//! Writes `BENCH_pipeline.json` (override with `ECOPT_BENCH_JSON`) in
+//! the stable `ecopt-bench-v1` schema, including the headline speedup
+//! metrics — CI compares it against the committed baseline and fails on
+//! regression (ISSUE 9 satellite).
 
 use ecopt::characterize::characterize;
 use ecopt::config::{CampaignSpec, ExperimentConfig, NodeSpec, SvrSpec};
@@ -75,10 +80,15 @@ fn main() {
         let speedup = |a: usize, b: usize| {
             r[a].mean.as_secs_f64() / r[b].mean.as_secs_f64().max(1e-12)
         };
-        println!(
-            "characterize speedup 1t -> {hw}t: {:.2}x",
-            speedup(0, 1)
-        );
-        println!("pipeline    speedup 1t -> {hw}t: {:.2}x", speedup(2, 3));
+        let char_speedup = speedup(0, 1);
+        let pipe_speedup = speedup(2, 3);
+        println!("characterize speedup 1t -> {hw}t: {char_speedup:.2}x");
+        println!("pipeline    speedup 1t -> {hw}t: {pipe_speedup:.2}x");
+        b.metric("characterize_speedup_x", char_speedup);
+        b.metric("pipeline_speedup_x", pipe_speedup);
     }
+
+    let out = std::env::var("ECOPT_BENCH_JSON").unwrap_or_else(|_| "BENCH_pipeline.json".into());
+    b.write_json(std::path::Path::new(&out)).unwrap();
+    println!("wrote {out}");
 }

@@ -29,10 +29,13 @@
 //! embedded [`Ondemand`] instead of actuating garbage. The replay
 //! harness (`coordinator::replay`) surfaces the fallback counter.
 
+use std::sync::Arc;
+
 use crate::config::Mhz;
 use crate::energy::{Constraints, EnergyModel, Objective};
 use crate::governors::{Governor, Ondemand};
 use crate::node::Node;
+use crate::obs::metrics::{global, Counter};
 use crate::Result;
 
 /// Tunables of the model-in-the-loop governor.
@@ -102,6 +105,17 @@ pub struct EcoptGovernor {
     decisions: u64,
     switches: u64,
     fallback_samples: u64,
+    /// Process-wide telemetry (ISSUE 9): handles into
+    /// [`crate::obs::metrics::global`], cached at construction so the
+    /// sampling hot path pays one relaxed atomic add per event instead
+    /// of a registry map lookup. Monotonic across resets by design —
+    /// [`Governor::reset`] zeroes the per-run diagnostics above, never
+    /// these.
+    obs_decisions: Arc<Counter>,
+    obs_switches: Arc<Counter>,
+    obs_fallbacks: Arc<Counter>,
+    obs_consults: Arc<Counter>,
+    obs_transitions: Arc<Counter>,
 }
 
 impl EcoptGovernor {
@@ -154,6 +168,11 @@ impl EcoptGovernor {
             decisions: 0,
             switches: 0,
             fallback_samples: 0,
+            obs_decisions: global().counter("governor.decisions"),
+            obs_switches: global().counter("governor.switches"),
+            obs_fallbacks: global().counter("governor.fallback_samples"),
+            obs_consults: global().counter("governor.consults"),
+            obs_transitions: global().counter("governor.regime_transitions"),
         }
     }
 
@@ -222,6 +241,7 @@ impl EcoptGovernor {
                 if let Some(c) = self.busy_cfg {
                     return Ok(c);
                 }
+                self.obs_consults.inc();
                 let opt = self.model.optimize(
                     &self.grid,
                     self.input,
@@ -243,6 +263,7 @@ impl EcoptGovernor {
                 // cores still pay for themselves (capped at the busy
                 // count — a stalled phase never needs more).
                 let (_, busy_p) = self.config_for(Regime::Busy)?;
+                self.obs_consults.inc();
                 let opt = self.model.optimize(
                     &self.grid,
                     self.input,
@@ -266,6 +287,7 @@ impl EcoptGovernor {
         node.set_online_cores(cfg.1)?;
         if self.current.is_some() {
             self.switches += 1;
+            self.obs_switches.inc();
         }
         self.current = Some(cfg);
         Ok(())
@@ -297,6 +319,7 @@ impl Governor for EcoptGovernor {
         }
         if self.stale.is_some() {
             self.fallback_samples += 1;
+            self.obs_fallbacks.inc();
             if self.fallback.is_none() {
                 self.fallback = Some(Ondemand::new(node.ladder()));
             }
@@ -313,6 +336,7 @@ impl Governor for EcoptGovernor {
         }
         let load = if online > 0 { load / online as f64 } else { 0.0 };
         self.decisions += 1;
+        self.obs_decisions.inc();
 
         let target = self.classify(load);
         let confirmed = match self.regime {
@@ -346,12 +370,16 @@ impl Governor for EcoptGovernor {
                 // makes the model unusable: degrade, don't crash the run.
                 self.stale = Some(format!("model consult failed: {e}"));
                 self.fallback_samples += 1;
+                self.obs_fallbacks.inc();
                 if self.fallback.is_none() {
                     self.fallback = Some(Ondemand::new(node.ladder()));
                 }
                 return self.fallback.as_mut().expect("fallback built").sample(node);
             }
         };
+        if self.regime != Some(target) {
+            self.obs_transitions.inc();
+        }
         self.regime = Some(target);
         if self.current != Some(cfg) {
             self.apply(cfg, node)?;

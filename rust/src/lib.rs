@@ -54,6 +54,15 @@
 //! (global power cap, post-fault reconvergence) from TOML scenario files
 //! (`ecopt sim`), byte-identical at any thread count.
 //!
+//! Since ISSUE 9 the system **observes itself**: `obs` is a std-only
+//! telemetry layer — a registry of named counters/gauges/log-linear
+//! histograms on lock-free atomics, a bounded ring-buffer tracer whose
+//! timestamps go exclusively through the `util::clock` Clock trait
+//! (real nanoseconds in the daemon, virtual ticks in the simulator, so
+//! sim traces merge byte-identically across thread counts), and
+//! exposition as a `kind:"metrics"` protocol request, Prometheus text,
+//! and Chrome `trace_event` JSON (`ecopt trace`).
+//!
 //! See `DESIGN.md` for the system inventory, the determinism contract,
 //! and the kernel-cache design.
 
@@ -77,6 +86,7 @@ pub mod error;
 pub mod governors;
 pub mod lint;
 pub mod node;
+pub mod obs;
 pub mod persist;
 pub mod powermodel;
 pub mod report;

@@ -1,12 +1,14 @@
-//! The determinism-invariant rules (R1–R7).
+//! The determinism-invariant rules (R1–R8).
 //!
 //! Each rule is grounded in a regression this repo actually paid for
 //! (see DESIGN.md §13 for the catalog): seed-domain collisions,
 //! wall-clock reads in deterministic paths, unordered iteration feeding
 //! serialized bytes, lossy float formatting, panics in request/tick
-//! paths, truncating `as` casts in parsers, and untested public
-//! contract constants. Rules match on the [`scan`](super::scan) views,
-//! so tokens inside strings, comments, or doc examples never trip them.
+//! paths, truncating `as` casts in parsers, untested public contract
+//! constants, and raw `println!`/`eprintln!` that bypass the leveled
+//! `util::logging` layer. Rules match on the [`scan`](super::scan)
+//! views, so tokens inside strings, comments, or doc examples never
+//! trip them.
 
 use super::scan::SourceFile;
 
@@ -30,7 +32,7 @@ pub struct Finding {
 /// `--explain`; this table *is* the explanation, mirrored in DESIGN.md
 /// §13). The two `allow-*` ids are hygiene findings produced by the
 /// allowlist layer itself.
-pub const RULES: [(&str, &str); 9] = [
+pub const RULES: [(&str, &str); 10] = [
     (
         "seed-domain",
         "0xC4A2_AC7E_* seed-domain literals live only in util::seed_domains, unique, listed in DESIGN.md",
@@ -58,6 +60,10 @@ pub const RULES: [(&str, &str); 9] = [
     (
         "untested-const",
         "every pub seed-domain/golden constant is referenced by at least one test under rust/tests",
+    ),
+    (
+        "raw-print",
+        "no println!/eprintln! in library code outside report/, main.rs, util/logging.rs — output goes through util::logging (levels, swappable sink)",
     ),
     (
         "allow-unused",
@@ -100,6 +106,17 @@ fn scope_cast(p: &str) -> bool {
     p == "rust/src/service/protocol.rs"
         || p.starts_with("rust/src/config")
         || p == "rust/src/util/json.rs"
+}
+
+/// R8 scope: all library code. `report/` renders artifacts to stdout by
+/// design, `main.rs` is the CLI's user interface, and `util/logging.rs`
+/// is the sanctioned sink — everything else must log through the
+/// leveled layer so `ECOPT_LOG` and test sinks actually govern it.
+fn scope_raw_print(p: &str) -> bool {
+    p.starts_with("rust/src/")
+        && !p.starts_with("rust/src/report")
+        && p != "rust/src/main.rs"
+        && p != "rust/src/util/logging.rs"
 }
 
 // ---------------------------------------------------------------------------
@@ -201,6 +218,23 @@ pub fn lint_file(sf: &SourceFile) -> Vec<Finding> {
                     "lossy-cast",
                     format!("`as {ty}` can truncate silently — use {ty}::try_from with a ranged error"),
                 );
+            }
+        }
+
+        // R8: raw prints in library code. Test code is exempt (tests
+        // print through the harness's captured stdout by design).
+        if scope_raw_print(p) && !line.in_test {
+            for token in ["println!", "eprintln!"] {
+                if line.code.contains(token) {
+                    push(
+                        &mut out,
+                        "raw-print",
+                        format!(
+                            "`{token}` in library code — use the util::logging macros (leveled, sink-capturable)"
+                        ),
+                    );
+                    break;
+                }
             }
         }
     }
@@ -489,6 +523,22 @@ mod tests {
         assert!(findings(
             "rust/src/sim/whatever.rs",
             "#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n}\n"
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn raw_print_scope_and_exemptions() {
+        let f = findings("rust/src/svr/mod.rs", "println!(\"x\");\n");
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "raw-print");
+        // Exempt homes and test regions stay quiet.
+        assert!(findings("rust/src/report/sim.rs", "println!(\"x\");\n").is_empty());
+        assert!(findings("rust/src/main.rs", "eprintln!(\"x\");\n").is_empty());
+        assert!(findings("rust/src/util/logging.rs", "eprintln!(\"x\");\n").is_empty());
+        assert!(findings(
+            "rust/src/svr/mod.rs",
+            "#[cfg(test)]\nmod tests {\n    fn t() { println!(\"x\"); }\n}\n"
         )
         .is_empty());
     }

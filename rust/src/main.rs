@@ -32,6 +32,8 @@ use ecopt::config::ExperimentConfig;
 use ecopt::coordinator::replay::{run_replay, ReplayOptions};
 use ecopt::coordinator::{run_fleet_cached, Coordinator, ExperimentResults};
 use ecopt::energy::{config_grid_arch, Constraints, EnergyModel, Objective};
+use ecopt::obs::expose::{render_prometheus, snapshot_from_json};
+use ecopt::obs::trace::{chrome_trace_string, TraceEvent};
 use ecopt::persist::ModelCache;
 use ecopt::report;
 use ecopt::runtime::PjrtRuntime;
@@ -39,6 +41,7 @@ use ecopt::service::loadgen::request_once;
 use ecopt::service::protocol::{line_is_ok, Request};
 use ecopt::service::{run_loadgen, EcoptServer, LoadgenOptions, ServiceConfig};
 use ecopt::sim::{run_scenario, Scenario, SimOptions};
+use ecopt::util::json::Json;
 use ecopt::workloads::app_by_name;
 use ecopt::workloads::runner::RunConfig;
 
@@ -72,6 +75,7 @@ COMMANDS:
                                 the model-in-the-loop ecopt governor, vs the
                                 static oracle (warm model cache trains zero)
   sim <SCENARIO.toml> [--quick] [--out FILE] [--threads N] [--fuzz N]
+      [--trace FILE]
                                 tick-accurate fleet simulation with fault
                                 injection: thousands of heterogeneous nodes
                                 under their governors while sensors black out,
@@ -92,7 +96,13 @@ COMMANDS:
   query <KIND> [--addr HOST:PORT] [ARGS]
                                 one request to a running ecoptd; KIND =
                                 predict | optimize | train | status |
-                                registry | stats | shutdown
+                                registry | stats | metrics | trace |
+                                shutdown (--prom renders a metrics
+                                response as Prometheus text)
+  trace <OUT.json> [--addr HOST:PORT]
+                                fetch a running ecoptd's event trace and
+                                write it as Chrome trace_event JSON
+                                (open at chrome://tracing or perfetto)
   loadgen [--addr HOST:PORT] [--requests N] [--connections N] [--seed S]
           [--quick] [--out FILE] [--report FILE] [--stats FILE]
                                 deterministic seeded request mix against a
@@ -234,7 +244,7 @@ const COMMANDS: &[CmdSpec] = &[
     CmdSpec {
         name: "sim",
         usage: "USAGE: ecopt sim <SCENARIO.toml> [--quick] [--out FILE] [--threads N]\n\
-                       [--fuzz N]\n\n\
+                       [--fuzz N] [--trace FILE]\n\n\
                 Run a tick-accurate fleet simulation with fault injection. The\n\
                 scenario file declares the fleet (arch-registry profiles x\n\
                 counts, each group under its own governor and phased\n\
@@ -251,8 +261,12 @@ const COMMANDS: &[CmdSpec] = &[
                 so the mutant set is reproducible), each of which must\n\
                 either be rejected with a positioned parse/validation error\n\
                 or run byte-identically at 1 vs 4 threads. Any panic,\n\
-                unpositioned error, or thread-count divergence exits 1.",
-        value_flags: &["out", "threads", "fuzz"],
+                unpositioned error, or thread-count divergence exits 1.\n\n\
+                --trace FILE additionally records the merged per-node event\n\
+                trace (faults, cap checks, on virtual tick time — identical\n\
+                for any --threads value) and writes it as Chrome trace_event\n\
+                JSON.",
+        value_flags: &["out", "threads", "fuzz", "trace"],
         bool_flags: &["quick"],
         max_positionals: 1,
         input_alias: false,
@@ -292,15 +306,31 @@ const COMMANDS: &[CmdSpec] = &[
                             | deadline:S)\n\
                   train    --app NAME [--arch A]      (async; returns a job id)\n\
                   status   --job ID\n\
-                  registry | stats | shutdown\n\
-                Exits 0 on an ok response, 1 otherwise.",
+                  registry | stats | metrics | trace | shutdown\n\
+                metrics returns the daemon's full counter/gauge/histogram\n\
+                snapshot (one JSON line; --prom re-renders it as Prometheus\n\
+                text instead); trace returns the reactor's retained event\n\
+                ring. Exits 0 on an ok response, 1 otherwise.",
         value_flags: &[
             "addr", "app", "arch", "tag", "freq", "cores", "input", "job", "max-f", "min-f",
             "max-cores", "min-cores", "max-time", "objective",
         ],
-        bool_flags: &[],
+        bool_flags: &["prom"],
         max_positionals: 1,
         input_alias: true,
+    },
+    CmdSpec {
+        name: "trace",
+        usage: "USAGE: ecopt trace <OUT.json> [--addr HOST:PORT]\n\n\
+                Fetch the event trace of a running ecoptd (the reactor's\n\
+                bounded ring of tick/batch events, timestamped through the\n\
+                daemon's clock) and write it as Chrome trace_event JSON —\n\
+                load the file at chrome://tracing or https://ui.perfetto.dev.\n\
+                Exits 0 on success, 1 on an error response.",
+        value_flags: &["addr"],
+        bool_flags: &[],
+        max_positionals: 1,
+        input_alias: false,
     },
     CmdSpec {
         name: "loadgen",
@@ -832,9 +862,11 @@ fn main() -> anyhow::Result<()> {
                 return Ok(());
             }
             let scenario = Scenario::load(std::path::Path::new(&path))?;
+            let trace_out = args.get("trace").filter(|p| !p.is_empty()).map(str::to_string);
             let opts = SimOptions {
                 threads: args.num("threads", 0),
                 quick: args.has("quick"),
+                trace: trace_out.is_some(),
             };
             eprintln!(
                 "sim: scenario '{}' — {} nodes, {:.0} s simulated{}",
@@ -851,6 +883,15 @@ fn main() -> anyhow::Result<()> {
                     eprintln!("sim report written to {out}");
                 }
                 _ => println!("{rendered}"),
+            }
+            if let Some(tp) = &trace_out {
+                let mut doc = chrome_trace_string(&sim_res.trace)?;
+                doc.push('\n');
+                std::fs::write(tp, doc)?;
+                eprintln!(
+                    "sim: {} trace event(s) written to {tp} (Chrome trace_event JSON)",
+                    sim_res.trace.len()
+                );
             }
             for p in sim_res.properties.iter().filter(|p| !p.pass) {
                 eprintln!("sim: property '{}' FAILED: {}", p.name, p.details);
@@ -948,14 +989,49 @@ fn main() -> anyhow::Result<()> {
                 },
                 "registry" => Request::Registry,
                 "stats" => Request::Stats,
+                "metrics" => Request::Metrics,
+                "trace" => Request::Trace,
                 "shutdown" => Request::Shutdown,
                 other => usage_exit(args.spec.usage, &format!("unknown query kind '{other}'")),
             };
             let resp = request_once(&addr, &req.to_line()?)?;
-            println!("{resp}");
+            if kind == "metrics" && args.has("prom") && line_is_ok(&resp) {
+                // Re-render the snapshot as Prometheus text exposition.
+                let snap = snapshot_from_json(&Json::parse(&resp)?)?;
+                print!("{}", render_prometheus(&snap));
+            } else {
+                println!("{resp}");
+            }
             if !line_is_ok(&resp) {
                 std::process::exit(1);
             }
+        }
+        "trace" => {
+            let out = match args.positional.first() {
+                Some(p) => p.clone(),
+                None => usage_exit(args.spec.usage, "an output file is required"),
+            };
+            let addr = args.get("addr").unwrap_or("127.0.0.1:4017").to_string();
+            let resp = request_once(&addr, &Request::Trace.to_line()?)?;
+            if !line_is_ok(&resp) {
+                eprintln!("{resp}");
+                std::process::exit(1);
+            }
+            let parsed = Json::parse(&resp)?;
+            let events: Vec<TraceEvent> = parsed
+                .get("events")?
+                .as_arr()?
+                .iter()
+                .map(TraceEvent::from_json)
+                .collect::<ecopt::Result<_>>()?;
+            let dropped = parsed.get("dropped")?.as_u64()?;
+            let mut doc = chrome_trace_string(&events)?;
+            doc.push('\n');
+            std::fs::write(&out, doc)?;
+            eprintln!(
+                "trace: {} event(s) written to {out} ({dropped} older events already evicted)",
+                events.len()
+            );
         }
         "loadgen" => {
             let mut opts = LoadgenOptions::default();

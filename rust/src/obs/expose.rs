@@ -1,0 +1,243 @@
+//! Exposition formats for [`MetricsSnapshot`]: canonical JSON (the
+//! daemon's `kind:"metrics"` wire form), Prometheus text format, and a
+//! flat `name -> u64` view for embedding in reports.
+//!
+//! The JSON form round-trips bit-identically: `to -> dump -> parse ->
+//! from -> to -> dump` yields the same bytes (sorted keys, exact
+//! numbers through [`crate::util::json`]). Histogram buckets serialize
+//! sparsely as `[index, count]` pairs in ascending index order, so an
+//! idle 496-bucket histogram costs a few bytes, not a few kilobytes.
+//!
+//! Values are carried as JSON numbers (f64): exact below 2^53, which
+//! covers every realistic counter. The Prometheus rendering maps the
+//! dot-separated instrument names to `ecopt_`-prefixed underscore
+//! names; histograms render as summaries (p50/p95/p99 + sum + count).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::obs::metrics::{HistogramSnapshot, MetricsSnapshot, BUCKETS};
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+fn map_to_json(m: &BTreeMap<String, u64>) -> Json {
+    Json::Obj(
+        m.iter()
+            .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+            .collect(),
+    )
+}
+
+fn map_from_json(j: &Json) -> Result<BTreeMap<String, u64>> {
+    let mut out = BTreeMap::new();
+    for (k, v) in j.as_obj()? {
+        out.insert(k.clone(), v.as_u64()?);
+    }
+    Ok(out)
+}
+
+fn hist_to_json(h: &HistogramSnapshot) -> Json {
+    let buckets: Vec<Json> = h
+        .counts
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| **c > 0)
+        .map(|(i, c)| Json::Arr(vec![Json::Num(i as f64), Json::Num(*c as f64)]))
+        .collect();
+    Json::obj(vec![
+        ("buckets", Json::Arr(buckets)),
+        ("count", Json::Num(h.count as f64)),
+        ("sum", Json::Num(h.sum as f64)),
+    ])
+}
+
+fn hist_from_json(j: &Json) -> Result<HistogramSnapshot> {
+    let mut h = HistogramSnapshot::empty();
+    for pair in j.get("buckets")?.as_arr()? {
+        let pair = pair.as_arr()?;
+        let (i, c) = match pair {
+            [i, c] => (i.as_usize()?, c.as_u64()?),
+            _ => return Err(Error::Json("histogram bucket is not [index, count]".into())),
+        };
+        if i >= BUCKETS {
+            return Err(Error::Json(format!("histogram bucket index {i} out of range")));
+        }
+        h.counts[i] = c;
+    }
+    h.count = j.get("count")?.as_u64()?;
+    h.sum = j.get("sum")?.as_u64()?;
+    let tallied: u64 = h.counts.iter().sum();
+    if tallied != h.count {
+        return Err(Error::Json(format!(
+            "histogram count {} disagrees with bucket total {tallied}",
+            h.count
+        )));
+    }
+    Ok(h)
+}
+
+/// The canonical JSON form of a snapshot:
+/// `{"counters":{...},"gauges":{...},"histograms":{...}}`.
+pub fn snapshot_to_json(s: &MetricsSnapshot) -> Json {
+    Json::obj(vec![
+        ("counters", map_to_json(&s.counters)),
+        ("gauges", map_to_json(&s.gauges)),
+        (
+            "histograms",
+            Json::Obj(
+                s.histograms
+                    .iter()
+                    .map(|(k, h)| (k.clone(), hist_to_json(h)))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Parse the [`snapshot_to_json`] form.
+pub fn snapshot_from_json(j: &Json) -> Result<MetricsSnapshot> {
+    let mut histograms = BTreeMap::new();
+    for (k, v) in j.get("histograms")?.as_obj()? {
+        histograms.insert(k.clone(), hist_from_json(v)?);
+    }
+    Ok(MetricsSnapshot {
+        counters: map_from_json(j.get("counters")?)?,
+        gauges: map_from_json(j.get("gauges")?)?,
+        histograms,
+    })
+}
+
+/// A Prometheus metric name from an instrument name: `ecopt_` prefix,
+/// every non-alphanumeric character mapped to `_`.
+fn prom_name(name: &str) -> String {
+    let mapped: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect();
+    format!("ecopt_{mapped}")
+}
+
+/// Render a snapshot in the Prometheus text exposition format.
+/// Counters and gauges map directly; histograms render as summaries
+/// (p50/p95/p99 quantiles plus `_sum` and `_count` — empty histograms
+/// emit only the zero `_sum`/`_count` rows).
+pub fn render_prometheus(s: &MetricsSnapshot) -> String {
+    let mut out = String::new();
+    for (name, v) in &s.counters {
+        let n = prom_name(name);
+        let _ = writeln!(out, "# TYPE {n} counter");
+        let _ = writeln!(out, "{n} {v}");
+    }
+    for (name, v) in &s.gauges {
+        let n = prom_name(name);
+        let _ = writeln!(out, "# TYPE {n} gauge");
+        let _ = writeln!(out, "{n} {v}");
+    }
+    for (name, h) in &s.histograms {
+        let n = prom_name(name);
+        let _ = writeln!(out, "# TYPE {n} summary");
+        if h.count > 0 {
+            for (q, p) in [("0.5", 50.0), ("0.95", 95.0), ("0.99", 99.0)] {
+                if let Ok(v) = h.percentile(p) {
+                    let _ = writeln!(out, "{n}{{quantile=\"{q}\"}} {v}");
+                }
+            }
+        }
+        let _ = writeln!(out, "{n}_sum {}", h.sum);
+        let _ = writeln!(out, "{n}_count {}", h.count);
+    }
+    out
+}
+
+/// Flatten a snapshot to one sorted `name -> u64` map: counters and
+/// gauges verbatim, histograms as `<name>.count`, `<name>.sum`, and
+/// (when non-empty) `<name>.p50` / `<name>.p95` / `<name>.p99`. This is
+/// the form the simulator embeds in [`crate::sim::SimReport`].
+pub fn flatten(s: &MetricsSnapshot) -> BTreeMap<String, u64> {
+    let mut out = BTreeMap::new();
+    for (k, v) in &s.counters {
+        out.insert(k.clone(), *v);
+    }
+    for (k, v) in &s.gauges {
+        out.insert(k.clone(), *v);
+    }
+    for (k, h) in &s.histograms {
+        out.insert(format!("{k}.count"), h.count);
+        out.insert(format!("{k}.sum"), h.sum);
+        if h.count > 0 {
+            for (tag, p) in [("p50", 50.0), ("p95", 95.0), ("p99", 99.0)] {
+                if let Ok(v) = h.percentile(p) {
+                    out.insert(format!("{k}.{tag}"), v);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::MetricsRegistry;
+
+    fn sample() -> MetricsSnapshot {
+        let reg = MetricsRegistry::new();
+        reg.counter("server.served").add(42);
+        reg.counter("server.shed").add(3);
+        reg.gauge("server.queue_depth").set(7);
+        let h = reg.histogram("server.tick_ns");
+        for v in [100u64, 200, 300, 40_000] {
+            h.record(v);
+        }
+        reg.histogram("server.idle"); // registered, never recorded
+        reg.snapshot()
+    }
+
+    #[test]
+    fn json_round_trip_is_bit_identical() {
+        let s = sample();
+        let bytes = snapshot_to_json(&s).dump().unwrap();
+        let back = snapshot_from_json(&Json::parse(&bytes).unwrap()).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(snapshot_to_json(&back).dump().unwrap(), bytes);
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_histograms() {
+        let bad = Json::parse(
+            r#"{"counters":{},"gauges":{},"histograms":{"h":{"buckets":[[0,1]],"count":2,"sum":0}}}"#,
+        )
+        .unwrap();
+        assert!(snapshot_from_json(&bad).is_err(), "count/bucket mismatch");
+        let oob = Json::parse(
+            r#"{"counters":{},"gauges":{},"histograms":{"h":{"buckets":[[9999,1]],"count":1,"sum":0}}}"#,
+        )
+        .unwrap();
+        assert!(snapshot_from_json(&oob).is_err(), "bucket index out of range");
+    }
+
+    #[test]
+    fn prometheus_rendering_shape() {
+        let text = render_prometheus(&sample());
+        assert!(text.contains("# TYPE ecopt_server_served counter"));
+        assert!(text.contains("ecopt_server_served 42"));
+        assert!(text.contains("# TYPE ecopt_server_queue_depth gauge"));
+        assert!(text.contains("# TYPE ecopt_server_tick_ns summary"));
+        assert!(text.contains("ecopt_server_tick_ns{quantile=\"0.5\"}"));
+        assert!(text.contains("ecopt_server_tick_ns_count 4"));
+        // Empty histogram: zero rows, no quantiles.
+        assert!(text.contains("ecopt_server_idle_count 0"));
+        assert!(!text.contains("ecopt_server_idle{"));
+    }
+
+    #[test]
+    fn flatten_has_percentiles_for_nonempty_only() {
+        let flat = flatten(&sample());
+        assert_eq!(flat["server.served"], 42);
+        assert_eq!(flat["server.queue_depth"], 7);
+        assert_eq!(flat["server.tick_ns.count"], 4);
+        assert!(flat.contains_key("server.tick_ns.p99"));
+        assert_eq!(flat["server.idle.count"], 0);
+        assert!(!flat.contains_key("server.idle.p50"));
+    }
+}

@@ -1,0 +1,477 @@
+//! Named instruments behind a [`MetricsRegistry`]: counters, gauges,
+//! and log-linear-bucket histograms.
+//!
+//! # Naming scheme (DESIGN.md §14)
+//!
+//! Instrument names are lowercase dot-separated paths,
+//! `<layer>.<thing>[.<detail>]` — e.g. `server.shed`,
+//! `registry.shard003.hits`, `svr.fit_ns`. A name identifies exactly one
+//! instrument of exactly one kind per registry; reusing a name across
+//! kinds is a caller bug (the snapshot would not be able to tell them
+//! apart in flat renderings) and is rejected by debug assertions.
+//!
+//! # Hot-path cost
+//!
+//! [`Counter`], [`Gauge`], and [`Histogram`] are plain atomics with
+//! `Relaxed` ordering — one `fetch_add`/`store` per event, no locks.
+//! Callers on hot paths hold `Arc` handles obtained once (get-or-create
+//! via [`MetricsRegistry::counter`] etc.) instead of looking names up
+//! per event. The registry's internal maps are `BTreeMap` behind a
+//! `Mutex`, touched only at registration and snapshot time.
+//!
+//! # Histogram layout
+//!
+//! Log-linear buckets with 8 sub-buckets per power of two (3 sub-bucket
+//! bits): values `0..8` get exact unit buckets, every octave above is
+//! split into 8 linear sub-buckets, up to `u64::MAX` — [`BUCKETS`]
+//! (= 496) fixed buckets total, so merge is elementwise addition and
+//! therefore associative and thread-count independent. Relative error of
+//! a bucket floor is < 12.5%. Percentiles use the same nearest-rank
+//! convention as [`crate::util::stats::percentile`], returning the floor
+//! of the bucket holding the rank-th recorded value.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use crate::{Error, Result};
+
+// ---------------------------------------------------------------------------
+// Instruments
+// ---------------------------------------------------------------------------
+
+/// A monotone event count (lock-free; `Relaxed` atomics).
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    /// A zeroed counter.
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    /// Count one event.
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count `n` events at once.
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-write-wins level (queue depth, live connections, …).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    /// A zeroed gauge.
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    /// Set the level.
+    pub fn set(&self, v: u64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    /// Current level.
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Number of sub-buckets per octave (2^3 = 8).
+const SUB_BITS: u32 = 3;
+/// Fixed bucket count: 8 unit buckets + 61 octaves x 8 sub-buckets.
+pub const BUCKETS: usize = 8 + 61 * 8;
+
+/// The bucket index holding value `v` (total order, surjective onto
+/// `0..BUCKETS`; `bucket_index(u64::MAX) == BUCKETS - 1`).
+pub fn bucket_index(v: u64) -> usize {
+    if v < 8 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros(); // >= SUB_BITS since v >= 8
+    let octave = msb - SUB_BITS;
+    let sub = ((v >> octave) - 8) as usize; // 0..8
+    8 + (octave as usize) * 8 + sub
+}
+
+/// The smallest value mapping to bucket `idx` (inverse floor of
+/// [`bucket_index`]): `bucket_index(bucket_floor(i)) == i` for every
+/// valid index. Out-of-range indices clamp to the last bucket.
+pub fn bucket_floor(idx: usize) -> u64 {
+    let idx = idx.min(BUCKETS - 1);
+    if idx < 8 {
+        return idx as u64;
+    }
+    let octave = ((idx - 8) / 8) as u32;
+    let sub = ((idx - 8) % 8) as u64;
+    (8 + sub) << octave
+}
+
+/// A log-linear-bucket histogram (lock-free; `Relaxed` atomics).
+///
+/// Recording is one `fetch_add` on the value's bucket plus one on the
+/// running sum. Snapshots are weakly consistent under concurrent
+/// writers (the bucket reads and the sum read are not one atomic
+/// operation); all determinism-pinned users populate histograms from
+/// sequential sections.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    /// An empty histogram ([`BUCKETS`] zeroed buckets).
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation.
+    pub fn record(&self, v: u64) {
+        if let Some(b) = self.buckets.get(bucket_index(v)) {
+            b.fetch_add(1, Ordering::Relaxed);
+        }
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// A point-in-time copy of the bucket counts and running sum.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let count = counts.iter().sum();
+        HistogramSnapshot {
+            counts,
+            count,
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// An immutable copy of a [`Histogram`]: mergeable, serializable, and
+/// queryable for percentiles.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    /// Per-bucket observation counts (`counts[i]` = observations whose
+    /// [`bucket_index`] is `i`; always [`BUCKETS`] entries).
+    pub counts: Vec<u64>,
+    /// Total observations (sum of `counts`, precomputed).
+    pub count: u64,
+    /// Sum of all recorded values (wrapping at `u64::MAX`).
+    pub sum: u64,
+}
+
+impl Default for HistogramSnapshot {
+    fn default() -> Self {
+        HistogramSnapshot::empty()
+    }
+}
+
+impl HistogramSnapshot {
+    /// A snapshot with zero observations.
+    pub fn empty() -> HistogramSnapshot {
+        HistogramSnapshot {
+            counts: vec![0; BUCKETS],
+            count: 0,
+            sum: 0,
+        }
+    }
+
+    /// Fold `other` into `self` (elementwise bucket addition — merge is
+    /// commutative and associative, so any merge tree over per-thread
+    /// histograms yields identical bytes).
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        if self.counts.len() < other.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (dst, src) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *dst += src;
+        }
+        self.count += other.count;
+        self.sum = self.sum.wrapping_add(other.sum);
+    }
+
+    /// Nearest-rank percentile over the bucketed observations, returned
+    /// as the holding bucket's floor. Exactly
+    /// [`crate::util::stats::percentile`] applied to the bucket-floored
+    /// sample multiset: rank `ceil(p/100 * count)` (1-based, clamped),
+    /// same `Error::Data` on empty input or `p` outside `[0, 100]`.
+    pub fn percentile(&self, p: f64) -> Result<u64> {
+        if self.count == 0 {
+            return Err(Error::Data("percentile of an empty histogram".into()));
+        }
+        if !(0.0..=100.0).contains(&p) {
+            return Err(Error::Data(format!("percentile {p} outside [0, 100]")));
+        }
+        let rank = ((p / 100.0 * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Ok(bucket_floor(i));
+            }
+        }
+        // Unreachable while count == sum(counts); tolerate a weakly
+        // consistent live snapshot by answering with the last occupied
+        // bucket instead of failing.
+        let last = self.counts.iter().rposition(|&c| c > 0).unwrap_or(0);
+        Ok(bucket_floor(last))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// A named collection of instruments.
+///
+/// Get-or-create lookups hand out `Arc` handles; hot paths hold the
+/// handle, so the internal locks are touched only at registration and
+/// snapshot time. Locks recover from poisoning (a panicked writer can
+/// at worst lose its own increments — the maps only ever grow).
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl MetricsRegistry {
+    /// An empty registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Get-or-create the counter `name`.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        Arc::clone(
+            relock(&self.counters)
+                .entry(name.to_string())
+                .or_insert_with(|| Arc::new(Counter::new())),
+        )
+    }
+
+    /// Get-or-create the gauge `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        Arc::clone(
+            relock(&self.gauges)
+                .entry(name.to_string())
+                .or_insert_with(|| Arc::new(Gauge::new())),
+        )
+    }
+
+    /// Get-or-create the histogram `name`.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        Arc::clone(
+            relock(&self.histograms)
+                .entry(name.to_string())
+                .or_insert_with(|| Arc::new(Histogram::new())),
+        )
+    }
+
+    /// Adopt an externally-created counter under `name` (used by owners
+    /// of pre-built instruments, e.g. the model registry's per-shard
+    /// counters). Re-registering a name replaces the handle.
+    pub fn register_counter(&self, name: &str, c: Arc<Counter>) {
+        relock(&self.counters).insert(name.to_string(), c);
+    }
+
+    /// Adopt an externally-created gauge under `name`.
+    pub fn register_gauge(&self, name: &str, g: Arc<Gauge>) {
+        relock(&self.gauges).insert(name.to_string(), g);
+    }
+
+    /// Adopt an externally-created histogram under `name`.
+    pub fn register_histogram(&self, name: &str, h: Arc<Histogram>) {
+        relock(&self.histograms).insert(name.to_string(), h);
+    }
+
+    /// A point-in-time copy of every instrument.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            counters: relock(&self.counters)
+                .iter()
+                .map(|(k, v)| (k.clone(), v.get()))
+                .collect(),
+            gauges: relock(&self.gauges)
+                .iter()
+                .map(|(k, v)| (k.clone(), v.get()))
+                .collect(),
+            histograms: relock(&self.histograms)
+                .iter()
+                .map(|(k, v)| (k.clone(), v.snapshot()))
+                .collect(),
+        }
+    }
+}
+
+/// An immutable copy of a whole [`MetricsRegistry`]. Serialized forms
+/// live in [`crate::obs::expose`].
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct MetricsSnapshot {
+    /// Counter values by name.
+    pub counters: BTreeMap<String, u64>,
+    /// Gauge levels by name.
+    pub gauges: BTreeMap<String, u64>,
+    /// Histogram snapshots by name.
+    pub histograms: BTreeMap<String, HistogramSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// Fold `other` into `self`: counters add, gauges last-write-wins
+    /// (`other` overwrites), histograms merge elementwise. Callers
+    /// merging registries with overlapping gauge names should prefer
+    /// disjoint naming — the daemon merges its own `server.*` registry
+    /// with the process [`global`] registry, whose names are disjoint
+    /// by the naming scheme.
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+        for (k, h) in &other.histograms {
+            self.histograms
+                .entry(k.clone())
+                .or_insert_with(HistogramSnapshot::empty)
+                .merge(h);
+        }
+    }
+}
+
+/// The process-wide registry: pipeline-layer instruments (SVR training,
+/// governor decisions) that have no natural owner object register here.
+/// Values are cumulative over the process lifetime; concurrent runs sum
+/// order-independently (atomic adds), so totals stay deterministic even
+/// when the work is parallel.
+pub fn global() -> &'static MetricsRegistry {
+    static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+    GLOBAL.get_or_init(MetricsRegistry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_unit_and_octaves() {
+        for v in 0..8u64 {
+            assert_eq!(bucket_index(v), v as usize);
+        }
+        assert_eq!(bucket_index(8), 8);
+        assert_eq!(bucket_index(15), 15);
+        assert_eq!(bucket_index(16), 16);
+        assert_eq!(bucket_index(17), 16); // linear sub-bucket of width 2
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn bucket_floor_inverts_index() {
+        for idx in 0..BUCKETS {
+            assert_eq!(bucket_index(bucket_floor(idx)), idx, "idx {idx}");
+        }
+        // Floors are the smallest member: one less lands one bucket down.
+        for idx in 1..BUCKETS {
+            assert_eq!(bucket_index(bucket_floor(idx) - 1), idx - 1, "idx {idx}");
+        }
+    }
+
+    #[test]
+    fn bucket_relative_error_is_bounded() {
+        // Any value's bucket floor is within 12.5% below it.
+        for v in [9u64, 100, 1000, 12_345, 1 << 40, u64::MAX] {
+            let floor = bucket_floor(bucket_index(v));
+            assert!(floor <= v);
+            assert!((v - floor) as f64 / v as f64 < 0.125, "v {v} floor {floor}");
+        }
+    }
+
+    #[test]
+    fn histogram_records_and_snapshots() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 7, 8, 100, 100, 1000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 7);
+        assert_eq!(s.sum, 1216);
+        assert_eq!(s.counts[bucket_index(100)], 2);
+        assert_eq!(s.percentile(0.0).unwrap(), 0);
+        assert_eq!(s.percentile(100.0).unwrap(), bucket_floor(bucket_index(1000)));
+    }
+
+    #[test]
+    fn percentile_matches_stats_convention() {
+        let h = Histogram::new();
+        // Exact-bucket values (< 8) so flooring is the identity.
+        for v in [1u64, 2, 3, 4] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.percentile(50.0).unwrap(), 2); // nearest-rank p50 of 4 = rank 2
+        assert_eq!(s.percentile(51.0).unwrap(), 3);
+        assert!(s.percentile(-0.1).is_err());
+        assert!(s.percentile(100.1).is_err());
+        assert!(HistogramSnapshot::empty().percentile(50.0).is_err());
+    }
+
+    #[test]
+    fn registry_handles_are_shared() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter("x.count");
+        let b = reg.counter("x.count");
+        a.inc();
+        b.add(2);
+        assert_eq!(reg.counter("x.count").get(), 3);
+        reg.gauge("x.depth").set(9);
+        reg.histogram("x.lat").record(5);
+        let s = reg.snapshot();
+        assert_eq!(s.counters["x.count"], 3);
+        assert_eq!(s.gauges["x.depth"], 9);
+        assert_eq!(s.histograms["x.lat"].count, 1);
+    }
+
+    #[test]
+    fn snapshot_merge_semantics() {
+        let a = MetricsRegistry::new();
+        a.counter("c").add(2);
+        a.gauge("g").set(1);
+        a.histogram("h").record(4);
+        let b = MetricsRegistry::new();
+        b.counter("c").add(3);
+        b.gauge("g").set(7);
+        b.histogram("h").record(5);
+        let mut m = a.snapshot();
+        m.merge(&b.snapshot());
+        assert_eq!(m.counters["c"], 5);
+        assert_eq!(m.gauges["g"], 7);
+        assert_eq!(m.histograms["h"].count, 2);
+        assert_eq!(m.histograms["h"].sum, 9);
+    }
+}

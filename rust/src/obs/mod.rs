@@ -1,0 +1,36 @@
+//! `obs/` — the observability subsystem (ISSUE 9): metrics, tracing,
+//! and exposition for the service, the simulator, and the pipeline.
+//!
+//! The paper's methodology stands on *measurement*; this layer gives the
+//! reproduction the same discipline about itself. Three std-only
+//! modules:
+//!
+//! * [`metrics`] — a [`metrics::MetricsRegistry`] of named counters,
+//!   gauges, and log-linear-bucket histograms. Counters and histograms
+//!   are lock-free atomics on the hot path; the registry's own maps are
+//!   only locked at get-or-create and snapshot time. Histogram
+//!   percentiles use the same nearest-rank convention as
+//!   [`crate::util::stats::percentile`].
+//! * [`trace`] — a bounded ring-buffer span/event recorder whose
+//!   timestamps come **exclusively** through the
+//!   [`crate::util::clock::Clock`] trait (lint rule R2 stays clean):
+//!   real time in the daemon, virtual ticks in `sim::engine`. Buffers
+//!   merge in deterministic `(ts, lane, seq)` order and export as Chrome
+//!   `trace_event` JSON (`ecopt trace <out.json>`).
+//! * [`expose`] — the exposition formats: the canonical JSON form served
+//!   by the daemon's `kind:"metrics"` protocol request (round-trips
+//!   bit-identically through [`crate::util::json`]), a Prometheus
+//!   text-format rendering, and a flat `name -> u64` view the simulator
+//!   embeds in its reports.
+//!
+//! **Determinism contract:** nothing in this module feeds existing
+//! serialized surfaces. All v1 wire bytes, same-seed loadgen
+//! transcripts, sim reports, and golden optima are byte-identical with
+//! instrumentation compiled in; the *new* surfaces (metrics snapshots,
+//! merged sim traces) are themselves byte-identical across thread
+//! counts when populated from sequential sections or per-lane buffers.
+//! DESIGN.md §14 states the argument.
+
+pub mod expose;
+pub mod metrics;
+pub mod trace;

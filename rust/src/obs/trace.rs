@@ -1,0 +1,284 @@
+//! Bounded ring-buffer event/span recording with Clock-sourced
+//! timestamps, deterministic merging, and Chrome `trace_event` export.
+//!
+//! # Clock sourcing (lint rule R2)
+//!
+//! Timestamps enter a [`TraceBuffer`] only two ways, both rooted in the
+//! [`Clock`] trait: [`TraceBuffer::record`] reads the injected clock
+//! itself, and [`TraceBuffer::record_at`] takes a timestamp the caller
+//! already read from its clock (the reactor's one-read-per-tick
+//! invariant means the tick loop must not read twice). The daemon
+//! records real nanoseconds ([`crate::util::clock::SystemClock`]); the
+//! simulator records virtual tick nanoseconds through a
+//! [`crate::util::clock::VirtualClock`], which is what makes sim traces
+//! byte-identical across thread counts.
+//!
+//! # Merge order
+//!
+//! Each buffer belongs to one *lane* (one recording thread or one
+//! simulated node) and stamps its events with a per-buffer sequence
+//! number. [`merge`] sorts the union by `(ts_ns, lane, seq)` — a total
+//! order as long as each lane has a single writer — so the merged trace
+//! is independent of buffer iteration order and of how work was
+//! scheduled across threads.
+
+use std::collections::VecDeque;
+
+use crate::util::clock::Clock;
+use crate::util::json::Json;
+use crate::Result;
+
+/// One recorded event (a point event when `dur_ns == 0`, a span
+/// otherwise).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Start timestamp in clock nanoseconds.
+    pub ts_ns: u64,
+    /// Span duration in nanoseconds (0 = instantaneous event).
+    pub dur_ns: u64,
+    /// Recording lane (thread id in the daemon, node index in the sim).
+    pub lane: u32,
+    /// Per-lane sequence number (assigned by the buffer, never reused).
+    pub seq: u64,
+    /// Event name (e.g. `tick`, `fault`, `cap_check`).
+    pub name: String,
+    /// One free-form scalar payload (batch size, fault code, …).
+    pub arg: u64,
+}
+
+impl TraceEvent {
+    /// The wire form served by the daemon's `kind:"trace"` request
+    /// (sorted keys via [`crate::util::json`]). Values round-trip
+    /// exactly while below 2^53 — origin-relative nanoseconds stay
+    /// exact for ~104 days of uptime.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("arg", Json::Num(self.arg as f64)),
+            ("dur_ns", Json::Num(self.dur_ns as f64)),
+            ("lane", Json::Num(f64::from(self.lane))),
+            ("name", Json::Str(self.name.clone())),
+            ("seq", Json::Num(self.seq as f64)),
+            ("ts_ns", Json::Num(self.ts_ns as f64)),
+        ])
+    }
+
+    /// Parse the [`TraceEvent::to_json`] form.
+    pub fn from_json(j: &Json) -> Result<TraceEvent> {
+        Ok(TraceEvent {
+            ts_ns: j.get("ts_ns")?.as_u64()?,
+            dur_ns: j.get("dur_ns")?.as_u64()?,
+            lane: j.get("lane")?.as_u32()?,
+            seq: j.get("seq")?.as_u64()?,
+            name: j.get("name")?.as_str()?.to_string(),
+            arg: j.get("arg")?.as_u64()?,
+        })
+    }
+}
+
+/// A bounded single-writer ring buffer of [`TraceEvent`]s. When full,
+/// the OLDEST event is dropped and counted — recent history survives,
+/// and [`TraceBuffer::dropped`] says exactly how much was lost.
+#[derive(Debug)]
+pub struct TraceBuffer {
+    lane: u32,
+    cap: usize,
+    events: VecDeque<TraceEvent>,
+    dropped: u64,
+    next_seq: u64,
+}
+
+impl TraceBuffer {
+    /// A buffer for `lane` holding at most `cap` events (min 1).
+    pub fn new(lane: u32, cap: usize) -> TraceBuffer {
+        TraceBuffer {
+            lane,
+            cap: cap.max(1),
+            events: VecDeque::new(),
+            dropped: 0,
+            next_seq: 0,
+        }
+    }
+
+    /// Record an event timestamped by `clock` right now.
+    pub fn record(&mut self, clock: &dyn Clock, name: &str, dur_ns: u64, arg: u64) {
+        let ts = clock.now_ns();
+        self.record_at(ts, name, dur_ns, arg);
+    }
+
+    /// Record an event at a timestamp the caller already read from its
+    /// clock this step (the reactor reads its clock exactly once per
+    /// tick; re-reading here would break that invariant).
+    pub fn record_at(&mut self, ts_ns: u64, name: &str, dur_ns: u64, arg: u64) {
+        self.events.push_back(TraceEvent {
+            ts_ns,
+            dur_ns,
+            lane: self.lane,
+            seq: self.next_seq,
+            name: name.to_string(),
+            arg,
+        });
+        self.next_seq += 1;
+        while self.events.len() > self.cap {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+    }
+
+    /// This buffer's lane id.
+    pub fn lane(&self) -> u32 {
+        self.lane
+    }
+
+    /// Events currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Whether nothing has been retained.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events evicted to stay within capacity.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// A copy of the retained events, oldest first.
+    pub fn to_vec(&self) -> Vec<TraceEvent> {
+        self.events.iter().cloned().collect()
+    }
+
+    /// Consume the buffer, yielding its retained events oldest first.
+    pub fn into_events(self) -> Vec<TraceEvent> {
+        self.events.into_iter().collect()
+    }
+}
+
+/// Merge per-lane event lists into one deterministic stream ordered by
+/// `(ts_ns, lane, seq)`. The result is independent of `lanes` ordering
+/// and of scheduling, provided each lane had a single writer.
+pub fn merge(lanes: Vec<Vec<TraceEvent>>) -> Vec<TraceEvent> {
+    let mut all: Vec<TraceEvent> = lanes.into_iter().flatten().collect();
+    all.sort_by_key(|e| (e.ts_ns, e.lane, e.seq));
+    all
+}
+
+/// Render events as a Chrome `trace_event` JSON document (load it at
+/// `chrome://tracing` or <https://ui.perfetto.dev>). Timestamps and
+/// durations are microseconds per the format; each lane becomes a
+/// `tid`, the whole trace is `pid` 1.
+pub fn chrome_trace(events: &[TraceEvent]) -> Json {
+    let rows: Vec<Json> = events
+        .iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("args", Json::obj(vec![("v", Json::Num(e.arg as f64))])),
+                ("dur", Json::Num(e.dur_ns as f64 / 1e3)),
+                ("name", Json::Str(e.name.clone())),
+                ("ph", Json::Str(if e.dur_ns == 0 { "i" } else { "X" }.into())),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(f64::from(e.lane))),
+                ("ts", Json::Num(e.ts_ns as f64 / 1e3)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("traceEvents", Json::Arr(rows))])
+}
+
+/// Serialize [`chrome_trace`] to its canonical one-line byte form.
+pub fn chrome_trace_string(events: &[TraceEvent]) -> Result<String> {
+    chrome_trace(events).dump()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::VirtualClock;
+
+    #[test]
+    fn records_through_the_clock() {
+        let vc = VirtualClock::new();
+        let mut b = TraceBuffer::new(0, 8);
+        vc.set_ns(100);
+        b.record(&vc, "a", 0, 1);
+        vc.advance_ns(50);
+        b.record(&vc, "b", 10, 2);
+        let ev = b.to_vec();
+        assert_eq!(ev.len(), 2);
+        assert_eq!(ev[0].ts_ns, 100);
+        assert_eq!(ev[1].ts_ns, 150);
+        assert_eq!(ev[1].seq, 1);
+        assert_eq!(b.dropped(), 0);
+    }
+
+    #[test]
+    fn overflow_drops_oldest_and_counts() {
+        let vc = VirtualClock::new();
+        let mut b = TraceBuffer::new(3, 4);
+        for i in 0..10u64 {
+            vc.set_ns(i);
+            b.record(&vc, "e", 0, i);
+        }
+        assert_eq!(b.len(), 4);
+        assert_eq!(b.dropped(), 6);
+        let ev = b.to_vec();
+        // Oldest dropped: the newest 4 survive, seq still monotone.
+        assert_eq!(ev[0].ts_ns, 6);
+        assert_eq!(ev[0].seq, 6);
+        assert_eq!(ev[3].ts_ns, 9);
+    }
+
+    #[test]
+    fn merge_orders_by_ts_lane_seq() {
+        let mk = |ts: u64, lane: u32, seq: u64| TraceEvent {
+            ts_ns: ts,
+            dur_ns: 0,
+            lane,
+            seq,
+            name: "e".into(),
+            arg: 0,
+        };
+        let a = vec![mk(5, 1, 0), mk(7, 1, 1)];
+        let b = vec![mk(5, 0, 0), mk(5, 0, 1), mk(9, 0, 2)];
+        let m1 = merge(vec![a.clone(), b.clone()]);
+        let m2 = merge(vec![b, a]);
+        assert_eq!(m1, m2, "merge must not depend on lane order");
+        let key: Vec<(u64, u32, u64)> = m1.iter().map(|e| (e.ts_ns, e.lane, e.seq)).collect();
+        assert_eq!(key, vec![(5, 0, 0), (5, 0, 1), (5, 1, 0), (7, 1, 1), (9, 0, 2)]);
+    }
+
+    #[test]
+    fn wire_json_round_trips() {
+        let e = TraceEvent {
+            ts_ns: 123_456_789,
+            dur_ns: 42,
+            lane: 3,
+            seq: 7,
+            name: "tick".into(),
+            arg: 16,
+        };
+        let j = e.to_json();
+        let back = TraceEvent::from_json(&j).unwrap();
+        assert_eq!(back, e);
+        assert_eq!(back.to_json().dump().unwrap(), j.dump().unwrap());
+    }
+
+    #[test]
+    fn chrome_trace_is_canonical_json() {
+        let vc = VirtualClock::new();
+        let mut b = TraceBuffer::new(0, 8);
+        vc.set_ns(2_000_000);
+        b.record(&vc, "tick", 1_000_000, 3);
+        b.record(&vc, "mark", 0, 0);
+        let s = chrome_trace_string(&b.to_vec()).unwrap();
+        let parsed = Json::parse(&s).unwrap();
+        assert_eq!(parsed.dump().unwrap(), s);
+        let rows = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(rows[0].get("ts").unwrap().as_f64().unwrap(), 2000.0);
+        assert_eq!(rows[0].get("dur").unwrap().as_f64().unwrap(), 1000.0);
+        assert_eq!(rows[1].get("ph").unwrap().as_str().unwrap(), "i");
+    }
+}

@@ -24,6 +24,8 @@
 //! | `status`   | job                                                   |
 //! | `registry` | — (list loaded models)                                |
 //! | `stats`    | — (served/shed/error counters, registry accounting)   |
+//! | `metrics`  | — (full `obs` snapshot: counters/gauges/histograms)   |
+//! | `trace`    | — (the reactor's retained ring-buffer trace events)   |
 //! | `shutdown` | — (graceful stop; the response is sent first)         |
 //!
 //! Since ISSUE 5, `optimize` accepts an optional top-level `"objective"`
@@ -130,6 +132,14 @@ pub enum Request {
     Registry,
     /// Service counters.
     Stats,
+    /// Full observability snapshot (ISSUE 9): every registered counter,
+    /// gauge, and histogram in the canonical `obs::expose` JSON form.
+    /// Additive — the v1 wire bytes of every other kind are unchanged.
+    Metrics,
+    /// The reactor's retained trace events (bounded ring buffer; see
+    /// `obs::trace`), renderable as Chrome `trace_event` JSON by
+    /// `ecopt trace`.
+    Trace,
     /// Opt in to response batching on this connection (see the module
     /// docs); `batch: 0` opts back out.
     Negotiate {
@@ -151,6 +161,8 @@ impl Request {
             Request::Status { .. } => "status",
             Request::Registry => "registry",
             Request::Stats => "stats",
+            Request::Metrics => "metrics",
+            Request::Trace => "trace",
             Request::Negotiate { .. } => "negotiate",
             Request::Shutdown => "shutdown",
         }
@@ -215,7 +227,8 @@ impl Request {
             }
             Request::Status { job } => fields.push(("job", Json::Num(*job as f64))),
             Request::Negotiate { batch } => fields.push(("batch", Json::Num(*batch as f64))),
-            Request::Registry | Request::Stats | Request::Shutdown => {}
+            Request::Registry | Request::Stats | Request::Metrics | Request::Trace
+            | Request::Shutdown => {}
         }
         Json::obj(fields)
     }
@@ -287,6 +300,8 @@ impl Request {
             }),
             "registry" => Ok(Request::Registry),
             "stats" => Ok(Request::Stats),
+            "metrics" => Ok(Request::Metrics),
+            "trace" => Ok(Request::Trace),
             "negotiate" => Ok(Request::Negotiate {
                 batch: j.get("batch")?.as_usize()?,
             }),
@@ -513,6 +528,8 @@ mod tests {
             Request::Status { job: 7 },
             Request::Registry,
             Request::Stats,
+            Request::Metrics,
+            Request::Trace,
             Request::Negotiate { batch: 16 },
             Request::Negotiate { batch: 0 },
             Request::Shutdown,

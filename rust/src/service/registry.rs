@@ -33,6 +33,7 @@ use std::sync::{Arc, Mutex, RwLock};
 use crate::arch::ArchProfile;
 use crate::config::Mhz;
 use crate::energy::{Constraints, EnergyModel, OptimalConfig};
+use crate::obs::metrics::{Counter, MetricsRegistry as Instruments};
 use crate::persist::{config_digest, CachedModel, ModelCache, ModelKey};
 use crate::Result;
 
@@ -55,6 +56,16 @@ pub struct ModelEntry {
 struct Shard {
     entries: HashMap<String, Arc<ModelEntry>>,
     bytes: u64,
+}
+
+/// Per-shard lookup instruments (ISSUE 9): shared `Arc<Counter>`s so
+/// [`ModelRegistry::register_into`] can publish the live handles into a
+/// [`crate::obs::metrics::MetricsRegistry`] without double bookkeeping.
+#[derive(Default)]
+struct ShardCounters {
+    hits: Arc<Counter>,
+    misses: Arc<Counter>,
+    evictions: Arc<Counter>,
 }
 
 /// Registry counters (monotonic; `stats` surfaces them).
@@ -97,12 +108,13 @@ pub struct ModelRegistry {
     byte_budget: u64,
     clock: AtomicU64,
     disk: Option<ModelCache>,
-    hits: AtomicU64,
-    misses: AtomicU64,
-    inserts: AtomicU64,
-    evictions: AtomicU64,
-    consults: AtomicU64,
-    consult_memo_hits: AtomicU64,
+    shard_counters: Vec<ShardCounters>,
+    hits: Arc<Counter>,
+    misses: Arc<Counter>,
+    inserts: Arc<Counter>,
+    evictions: Arc<Counter>,
+    consults: Arc<Counter>,
+    consult_memo_hits: Arc<Counter>,
 }
 
 fn digest_of(key: &ModelKey) -> String {
@@ -126,12 +138,56 @@ impl ModelRegistry {
             byte_budget: byte_budget as u64,
             clock: AtomicU64::new(0),
             disk,
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-            inserts: AtomicU64::new(0),
-            evictions: AtomicU64::new(0),
-            consults: AtomicU64::new(0),
-            consult_memo_hits: AtomicU64::new(0),
+            shard_counters: (0..shards).map(|_| ShardCounters::default()).collect(),
+            hits: Arc::new(Counter::new()),
+            misses: Arc::new(Counter::new()),
+            inserts: Arc::new(Counter::new()),
+            evictions: Arc::new(Counter::new()),
+            consults: Arc::new(Counter::new()),
+            consult_memo_hits: Arc::new(Counter::new()),
+        }
+    }
+
+    /// Publish this registry's live counter handles into a metrics
+    /// registry (ISSUE 9): registry-wide counters as `registry.<name>`,
+    /// per-shard lookup counters as `registry.shard<NNN>.<name>`. The
+    /// handles are shared `Arc`s — the daemon's `kind:"metrics"`
+    /// snapshot sees exactly what [`ModelRegistry::stats`] reports, with
+    /// no second bookkeeping path to drift.
+    pub fn register_into(&self, reg: &Instruments) {
+        reg.register_counter("registry.hits", Arc::clone(&self.hits));
+        reg.register_counter("registry.misses", Arc::clone(&self.misses));
+        reg.register_counter("registry.inserts", Arc::clone(&self.inserts));
+        reg.register_counter("registry.evictions", Arc::clone(&self.evictions));
+        reg.register_counter("registry.consults", Arc::clone(&self.consults));
+        reg.register_counter(
+            "registry.consult_memo_hits",
+            Arc::clone(&self.consult_memo_hits),
+        );
+        for (i, sc) in self.shard_counters.iter().enumerate() {
+            reg.register_counter(&format!("registry.shard{i:03}.hits"), Arc::clone(&sc.hits));
+            reg.register_counter(
+                &format!("registry.shard{i:03}.misses"),
+                Arc::clone(&sc.misses),
+            );
+            reg.register_counter(
+                &format!("registry.shard{i:03}.evictions"),
+                Arc::clone(&sc.evictions),
+            );
+        }
+    }
+
+    fn shard_hit(&self, idx: usize) {
+        self.hits.inc();
+        if let Some(sc) = self.shard_counters.get(idx) {
+            sc.hits.inc();
+        }
+    }
+
+    fn shard_miss(&self, idx: usize) {
+        self.misses.inc();
+        if let Some(sc) = self.shard_counters.get(idx) {
+            sc.misses.inc();
         }
     }
 
@@ -170,13 +226,14 @@ impl ModelRegistry {
         });
         let mut evicted: Vec<ModelKey> = Vec::new();
         {
-            let shard = &self.shards[self.shard_index(&digest)];
+            let idx = self.shard_index(&digest);
+            let shard = &self.shards[idx];
             let mut s = shard.write().expect("registry shard poisoned");
             if let Some(old) = s.entries.insert(digest.clone(), Arc::clone(&entry)) {
                 s.bytes -= old.bytes;
             }
             s.bytes += entry.bytes;
-            self.inserts.fetch_add(1, Ordering::Relaxed);
+            self.inserts.inc();
             // Evict LRU (never the entry just inserted) until under budget.
             while s.bytes > self.budget_per_shard && s.entries.len() > 1 {
                 let victim = s
@@ -190,7 +247,10 @@ impl ModelRegistry {
                         if let Some(e) = s.entries.remove(&d) {
                             s.bytes -= e.bytes;
                             evicted.push(e.key.clone());
-                            self.evictions.fetch_add(1, Ordering::Relaxed);
+                            self.evictions.inc();
+                            if let Some(sc) = self.shard_counters.get(idx) {
+                                sc.evictions.inc();
+                            }
                         }
                     }
                     None => break,
@@ -245,16 +305,17 @@ impl ModelRegistry {
     /// Exact-key lookup (read lock + LRU bump).
     pub fn get(&self, key: &ModelKey) -> Option<Arc<ModelEntry>> {
         let digest = digest_of(key);
-        let shard = &self.shards[self.shard_index(&digest)];
+        let idx = self.shard_index(&digest);
+        let shard = &self.shards[idx];
         let s = shard.read().expect("registry shard poisoned");
         match s.entries.get(&digest) {
             Some(e) if e.key == *key => {
                 e.last_used.store(self.tick(), Ordering::Relaxed);
-                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.shard_hit(idx);
                 Some(Arc::clone(e))
             }
             _ => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
+                self.shard_miss(idx);
                 None
             }
         }
@@ -276,19 +337,25 @@ impl ModelRegistry {
                 None => tags.values().next().cloned(),
             })
         };
-        let found = digest.and_then(|d| {
-            let shard = &self.shards[self.shard_index(&d)];
-            let s = shard.read().expect("registry shard poisoned");
+        // A miss with no index entry never touched a shard — it counts
+        // registry-wide but is not attributed to any shard lane.
+        let Some(d) = digest else {
+            self.misses.inc();
+            return None;
+        };
+        let idx = self.shard_index(&d);
+        let found = {
+            let s = self.shards[idx].read().expect("registry shard poisoned");
             s.entries.get(&d).cloned()
-        });
+        };
         match found {
             Some(e) => {
                 e.last_used.store(self.tick(), Ordering::Relaxed);
-                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.shard_hit(idx);
                 Some(e)
             }
             None => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
+                self.shard_miss(idx);
                 None
             }
         }
@@ -321,7 +388,7 @@ impl ModelRegistry {
         input: u32,
         constraints: &Constraints,
     ) -> Result<OptimalConfig> {
-        self.consults.fetch_add(1, Ordering::Relaxed);
+        self.consults.inc();
         let memo_key = format!("n{input}|{}", constraints.canonical());
         if let Some(hit) = entry
             .optima
@@ -329,7 +396,7 @@ impl ModelRegistry {
             .expect("optima memo poisoned")
             .get(&memo_key)
         {
-            self.consult_memo_hits.fetch_add(1, Ordering::Relaxed);
+            self.consult_memo_hits.inc();
             return Ok(*hit);
         }
         // Compute outside the memo lock (argmin over the whole grid);
@@ -358,12 +425,12 @@ impl ModelRegistry {
             bytes,
             shards: self.shards.len(),
             byte_budget: self.byte_budget,
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            inserts: self.inserts.load(Ordering::Relaxed),
-            evictions: self.evictions.load(Ordering::Relaxed),
-            consults: self.consults.load(Ordering::Relaxed),
-            consult_memo_hits: self.consult_memo_hits.load(Ordering::Relaxed),
+            hits: self.hits.get(),
+            misses: self.misses.get(),
+            inserts: self.inserts.get(),
+            evictions: self.evictions.get(),
+            consults: self.consults.get(),
+            consult_memo_hits: self.consult_memo_hits.get(),
         }
     }
 }
@@ -511,6 +578,29 @@ mod tests {
         assert!(reg.resolve("a", "custom-node", None).is_some(), "index restored");
         // A key that never existed is a true miss.
         assert!(reg.admit_from_disk(&key("never")).unwrap().is_none());
+    }
+
+    #[test]
+    fn register_into_shares_live_handles() {
+        let reg = ModelRegistry::new(2, 1 << 20, None);
+        let metrics = Instruments::new();
+        reg.register_into(&metrics);
+        reg.insert(key("app"), toy_bundle(1.0)).unwrap();
+        assert!(reg.get(&key("app")).is_some());
+        assert!(reg.get(&key("nope")).is_none());
+        let snap = metrics.snapshot();
+        assert_eq!(snap.counters["registry.hits"], reg.stats().hits);
+        assert_eq!(snap.counters["registry.misses"], reg.stats().misses);
+        assert_eq!(snap.counters["registry.inserts"], 1);
+        // Per-shard lanes exist and sum to the registry-wide counts.
+        let shard_hits: u64 = (0..2)
+            .map(|i| snap.counters[&format!("registry.shard{i:03}.hits")])
+            .sum();
+        assert_eq!(shard_hits, reg.stats().hits);
+        let shard_misses: u64 = (0..2)
+            .map(|i| snap.counters[&format!("registry.shard{i:03}.misses")])
+            .sum();
+        assert_eq!(shard_misses, reg.stats().misses);
     }
 
     #[test]

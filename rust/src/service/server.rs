@@ -71,6 +71,9 @@ use crate::arch::{profile_by_name, ArchProfile};
 use crate::config::ExperimentConfig;
 use crate::coordinator::Coordinator;
 use crate::energy::{config_grid_arch, predict_point};
+use crate::obs::expose;
+use crate::obs::metrics::{Counter, Gauge, Histogram, MetricsRegistry};
+use crate::obs::trace::TraceBuffer;
 use crate::persist::{ModelCache, ModelKey};
 use crate::service::protocol::{
     self, batch_envelope, err_line, ok_line, Request, CODE_BAD_REQUEST, CODE_INFEASIBLE,
@@ -85,9 +88,14 @@ use crate::workloads::app_by_name;
 use crate::Result;
 
 /// Request kinds, in counter order.
-const KIND_NAMES: [&str; 8] = [
-    "predict", "optimize", "train", "status", "registry", "stats", "negotiate", "shutdown",
+const KIND_NAMES: [&str; 10] = [
+    "predict", "optimize", "train", "status", "registry", "stats", "metrics", "trace",
+    "negotiate", "shutdown",
 ];
+
+/// Reactor trace ring-buffer capacity (oldest events dropped + counted
+/// beyond this — see `obs::trace`).
+const TRACE_CAP: usize = 4096;
 
 /// Per-connection output-buffer bound: once a client lets this many
 /// unread response bytes pile up, dispatching (and reading) for that
@@ -142,11 +150,28 @@ impl JobState {
 
 struct ServerState {
     shutdown: AtomicBool,
-    served: AtomicU64,
-    shed: AtomicU64,
-    shed_write_failures: AtomicU64,
-    errors: AtomicU64,
-    by_kind: [AtomicU64; KIND_NAMES.len()],
+    /// The daemon's own instrument registry (ISSUE 9): every counter
+    /// below is registered here under a `server.*` name, and the
+    /// `metrics` request kind serves its snapshot (merged with the
+    /// process-wide `obs::metrics::global()` registry).
+    metrics: MetricsRegistry,
+    served: Arc<Counter>,
+    shed: Arc<Counter>,
+    shed_write_failures: Arc<Counter>,
+    errors: Arc<Counter>,
+    by_kind: Vec<Arc<Counter>>,
+    /// Tick-to-tick reactor latency (delta between consecutive per-tick
+    /// timestamps — the loop still reads its clock exactly once a tick).
+    tick_ns: Arc<Histogram>,
+    /// Request lines per dispatched batch.
+    batch_occupancy: Arc<Histogram>,
+    /// Open connections, sampled once per reactor tick.
+    connections: Arc<Gauge>,
+    /// Batches in flight on dispatch workers, sampled once per tick.
+    inflight_batches: Arc<Gauge>,
+    /// The reactor's bounded trace ring (lane 0; real-time stamps from
+    /// the reactor clock). Served by the `trace` request kind.
+    trace: Mutex<TraceBuffer>,
     jobs: Mutex<BTreeMap<u64, JobState>>,
     next_job: AtomicU64,
     /// key label → job id, so a duplicate `train` joins the in-flight
@@ -226,24 +251,36 @@ impl EcoptServer {
         let warm_loaded = registry.warm_load()?;
         let listener = TcpListener::bind(svc.addr.as_str())?;
         let addr = listener.local_addr()?;
+        let metrics = MetricsRegistry::new();
+        registry.register_into(&metrics);
+        let state = ServerState {
+            shutdown: AtomicBool::new(false),
+            served: metrics.counter("server.served"),
+            shed: metrics.counter("server.shed"),
+            shed_write_failures: metrics.counter("server.shed_write_failures"),
+            errors: metrics.counter("server.errors"),
+            by_kind: KIND_NAMES
+                .iter()
+                .map(|k| metrics.counter(&format!("server.requests.{k}")))
+                .collect(),
+            tick_ns: metrics.histogram("server.tick_ns"),
+            batch_occupancy: metrics.histogram("server.batch_occupancy"),
+            connections: metrics.gauge("server.connections"),
+            inflight_batches: metrics.gauge("server.inflight_batches"),
+            trace: Mutex::new(TraceBuffer::new(0, TRACE_CAP)),
+            metrics,
+            jobs: Mutex::new(BTreeMap::new()),
+            next_job: AtomicU64::new(0),
+            active_trainings: Mutex::new(HashMap::new()),
+            job_handles: Mutex::new(Vec::new()),
+        };
         let ctx = Arc::new(ServiceCtx {
             cfg,
             svc,
             default_arch,
             addr,
             registry,
-            state: ServerState {
-                shutdown: AtomicBool::new(false),
-                served: AtomicU64::new(0),
-                shed: AtomicU64::new(0),
-                shed_write_failures: AtomicU64::new(0),
-                errors: AtomicU64::new(0),
-                by_kind: std::array::from_fn(|_| AtomicU64::new(0)),
-                jobs: Mutex::new(BTreeMap::new()),
-                next_job: AtomicU64::new(0),
-                active_trainings: Mutex::new(HashMap::new()),
-                job_handles: Mutex::new(Vec::new()),
-            },
+            state,
         });
         Ok(EcoptServer {
             listener,
@@ -312,14 +349,14 @@ impl EcoptServer {
         }
         let s = &self.ctx.state;
         Ok(ServiceReport {
-            served: s.served.load(Ordering::Relaxed),
-            shed: s.shed.load(Ordering::Relaxed),
-            shed_write_failures: s.shed_write_failures.load(Ordering::Relaxed),
-            errors: s.errors.load(Ordering::Relaxed),
+            served: s.served.get(),
+            shed: s.shed.get(),
+            shed_write_failures: s.shed_write_failures.get(),
+            errors: s.errors.get(),
             by_kind: KIND_NAMES
                 .iter()
-                .enumerate()
-                .map(|(i, k)| (k.to_string(), s.by_kind[i].load(Ordering::Relaxed)))
+                .zip(s.by_kind.iter())
+                .map(|(k, c)| (k.to_string(), c.get()))
                 .collect(),
         })
     }
@@ -453,11 +490,19 @@ fn reactor_loop(
     let mut tokens: Vec<u64> = Vec::new();
     let mut idle_ticks: u32 = 0;
     let mut draining_deadline_ns: Option<u64> = None;
+    let mut last_tick_ns: Option<u64> = None;
 
     loop {
         // The tick's single timestamp: every deadline below compares
         // against this one reading.
         let now_ns = clock.now_ns();
+        // Tick latency = delta between consecutive tick timestamps —
+        // instrumented WITHOUT a second clock read (the one-timestamp-
+        // per-tick invariant above survives ISSUE 9).
+        if let Some(prev) = last_tick_ns {
+            ctx.state.tick_ns.record(now_ns.saturating_sub(prev));
+        }
+        last_tick_ns = Some(now_ns);
         let mut progress = false;
         let stopping = ctx.state.shutdown.load(Ordering::SeqCst);
 
@@ -473,7 +518,7 @@ fn reactor_loop(
                         let token = next_token;
                         next_token += 1;
                         if active >= ctx.svc.queue_cap {
-                            ctx.state.shed.fetch_add(1, Ordering::Relaxed);
+                            ctx.state.shed.inc();
                             let mut line = err_line(
                                 CODE_OVERLOADED,
                                 "server overloaded: connection cap reached",
@@ -546,8 +591,8 @@ fn reactor_loop(
                                     // Satellite fix: bounded accumulator.
                                     // One 400, then close — a client with
                                     // broken framing gets no more service.
-                                    ctx.state.served.fetch_add(1, Ordering::Relaxed);
-                                    ctx.state.errors.fetch_add(1, Ordering::Relaxed);
+                                    ctx.state.served.inc();
+                                    ctx.state.errors.inc();
                                     let msg = format!(
                                         "request line exceeds the {}-byte limit",
                                         ctx.svc.max_line_bytes
@@ -675,10 +720,25 @@ fn reactor_loop(
                         active = active.saturating_sub(1);
                     }
                     if action.shed_failed {
-                        ctx.state.shed_write_failures.fetch_add(1, Ordering::Relaxed);
+                        ctx.state.shed_write_failures.inc();
                     }
                 }
             }
+        }
+
+        // --- 3e. per-tick telemetry ------------------------------------
+        ctx.state.connections.set(conns.len() as u64);
+        ctx.state
+            .inflight_batches
+            .set(conns.values().filter(|c| c.in_flight).count() as u64);
+        if progress {
+            // Trace only productive ticks (idle spinning would churn the
+            // ring for nothing), at the tick's single timestamp.
+            ctx.state
+                .trace
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .record_at(now_ns, "tick", 0, conns.len() as u64);
         }
 
         // --- 4. shutdown drain -----------------------------------------
@@ -743,6 +803,7 @@ fn flush_group(group: &mut Vec<String>, bytes: &mut Vec<u8>, mode: Option<usize>
 
 /// Process one batch of raw request lines into coalesced wire bytes.
 fn process_batch(ctx: &Arc<ServiceCtx>, batch: Batch) -> BatchDone {
+    ctx.state.batch_occupancy.record(batch.lines.len() as u64);
     let mut bytes: Vec<u8> = Vec::new();
     let mut group: Vec<String> = Vec::new();
     let mut mode = batch.mode;
@@ -753,8 +814,8 @@ fn process_batch(ctx: &Arc<ServiceCtx>, batch: Batch) -> BatchDone {
         // Satellite fix: a non-UTF-8 line is rejected with a 400-style
         // response — never lossy-decoded into U+FFFD and "parsed".
         let Ok(text) = std::str::from_utf8(raw) else {
-            ctx.state.served.fetch_add(1, Ordering::Relaxed);
-            ctx.state.errors.fetch_add(1, Ordering::Relaxed);
+            ctx.state.served.inc();
+            ctx.state.errors.inc();
             group.push(err_line(CODE_BAD_REQUEST, "request line is not valid UTF-8"));
             continue;
         };
@@ -762,16 +823,18 @@ fn process_batch(ctx: &Arc<ServiceCtx>, batch: Batch) -> BatchDone {
         if line.is_empty() {
             continue;
         }
-        ctx.state.served.fetch_add(1, Ordering::Relaxed);
+        ctx.state.served.inc();
         let req = match Request::parse(line) {
             Ok(r) => r,
             Err(e) => {
-                ctx.state.errors.fetch_add(1, Ordering::Relaxed);
+                ctx.state.errors.inc();
                 group.push(err_line(CODE_BAD_REQUEST, &e.to_string()));
                 continue;
             }
         };
-        ctx.state.by_kind[kind_index(req.kind())].fetch_add(1, Ordering::Relaxed);
+        if let Some(c) = ctx.state.by_kind.get(kind_index(req.kind())) {
+            c.inc();
+        }
         match req {
             Request::Negotiate { batch: n } => {
                 let clamped = n.min(MAX_NEGOTIATED_BATCH);
@@ -795,7 +858,7 @@ fn process_batch(ctx: &Arc<ServiceCtx>, batch: Batch) -> BatchDone {
             other => {
                 let resp = dispatch_parsed(ctx, &other);
                 if protocol::is_err_line(&resp) {
-                    ctx.state.errors.fetch_add(1, Ordering::Relaxed);
+                    ctx.state.errors.inc();
                 }
                 group.push(resp);
             }
@@ -845,6 +908,8 @@ fn dispatch_parsed(ctx: &Arc<ServiceCtx>, req: &Request) -> String {
         Request::Status { job } => handle_status(ctx, *job),
         Request::Registry => handle_registry(ctx),
         Request::Stats => handle_stats(ctx),
+        Request::Metrics => handle_metrics(ctx),
+        Request::Trace => handle_trace(ctx),
         Request::Negotiate { .. } | Request::Shutdown => {
             err_line(CODE_INTERNAL, "connection-level request reached the dispatcher")
         }
@@ -1121,6 +1186,43 @@ fn handle_registry(ctx: &ServiceCtx) -> String {
     ])
 }
 
+/// The daemon's full observability snapshot: its own `server.*` /
+/// `registry.*` instruments merged with the process-wide
+/// [`crate::obs::metrics::global`] registry (pipeline instruments —
+/// `svr.*`, `governor.*` — recorded by training jobs running in this
+/// process). Names are disjoint by the naming scheme, so the merge is
+/// a plain union.
+fn handle_metrics(ctx: &ServiceCtx) -> String {
+    let mut snap = crate::obs::metrics::global().snapshot();
+    snap.merge(&ctx.state.metrics.snapshot());
+    let Json::Obj(mut parts) = expose::snapshot_to_json(&snap) else {
+        return err_line(CODE_INTERNAL, "metrics snapshot did not serialize to an object");
+    };
+    let mut take = |k: &str| parts.remove(k).unwrap_or_else(|| Json::Obj(BTreeMap::new()));
+    ok_line(vec![
+        ("kind", Json::Str("metrics".into())),
+        ("counters", take("counters")),
+        ("gauges", take("gauges")),
+        ("histograms", take("histograms")),
+    ])
+}
+
+/// The reactor's retained trace ring (lane 0, real-time stamps), plus
+/// how many older events the bounded buffer already evicted.
+fn handle_trace(ctx: &ServiceCtx) -> String {
+    let (events, dropped) = {
+        let tr = ctx.state.trace.lock().unwrap_or_else(|e| e.into_inner());
+        (tr.to_vec(), tr.dropped())
+    };
+    let rows: Vec<Json> = events.iter().map(|e| e.to_json()).collect();
+    ok_line(vec![
+        ("kind", Json::Str("trace".into())),
+        ("count", Json::Num(rows.len() as f64)),
+        ("dropped", Json::Num(dropped as f64)),
+        ("events", Json::Arr(rows)),
+    ])
+}
+
 fn handle_stats(ctx: &ServiceCtx) -> String {
     let r = ctx.registry.stats();
     let jobs = ctx.state.jobs.lock().expect("jobs poisoned");
@@ -1128,24 +1230,19 @@ fn handle_stats(ctx: &ServiceCtx) -> String {
     let by_kind = Json::Obj(
         KIND_NAMES
             .iter()
-            .enumerate()
-            .map(|(i, k)| {
-                (
-                    k.to_string(),
-                    Json::Num(ctx.state.by_kind[i].load(Ordering::Relaxed) as f64),
-                )
-            })
+            .zip(ctx.state.by_kind.iter())
+            .map(|(k, c)| (k.to_string(), Json::Num(c.get() as f64)))
             .collect(),
     );
     ok_line(vec![
         ("kind", Json::Str("stats".into())),
-        ("served", Json::Num(ctx.state.served.load(Ordering::Relaxed) as f64)),
-        ("shed", Json::Num(ctx.state.shed.load(Ordering::Relaxed) as f64)),
+        ("served", Json::Num(ctx.state.served.get() as f64)),
+        ("shed", Json::Num(ctx.state.shed.get() as f64)),
         (
             "shed_write_failures",
-            Json::Num(ctx.state.shed_write_failures.load(Ordering::Relaxed) as f64),
+            Json::Num(ctx.state.shed_write_failures.get() as f64),
         ),
-        ("errors", Json::Num(ctx.state.errors.load(Ordering::Relaxed) as f64)),
+        ("errors", Json::Num(ctx.state.errors.get() as f64)),
         ("by_kind", by_kind),
         (
             "registry",

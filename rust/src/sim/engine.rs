@@ -37,8 +37,12 @@ use crate::coordinator::replay::train_phase_model;
 use crate::energy::{config_grid_arch, EnergyModel, Objective};
 use crate::governors::{by_name, EcoptGovernor, Governor, Pinned};
 use crate::node::{Node, PowerProcess};
+use crate::obs::expose;
+use crate::obs::metrics::MetricsRegistry;
+use crate::obs::trace::{self, TraceBuffer, TraceEvent};
 use crate::powermodel::PowerModel;
 use crate::sensors::IpmiMeter;
+use crate::util::clock::VirtualClock;
 use crate::util::pool::WorkerPool;
 use crate::util::rng::Rng;
 use crate::workloads::phases::{
@@ -52,12 +56,36 @@ use super::event::EventQueue;
 use super::faults::{self, FaultAction};
 use super::properties::{self, CapSample, NodeConvergence, PropertyResult};
 use super::scenario::Scenario;
-use super::{secs_to_ticks, ticks_to_secs, SIM_SEED_DOMAIN};
+use super::{secs_to_ticks, ticks_to_secs, SIM_SEED_DOMAIN, TICKS_PER_S};
 
 /// Multiplicative work-noise amplitude of simulated nodes (matches the
 /// replay harness default, so fleet traces are as noisy as single-node
 /// ones).
 const WORK_NOISE: f64 = 0.01;
+
+/// Virtual nanoseconds per tick — sim trace timestamps live on the same
+/// nanosecond axis as daemon traces, just sourced from the virtual
+/// clock.
+const NS_PER_TICK: u64 = 1_000_000_000 / TICKS_PER_S;
+
+/// Per-lane trace capacity. Quick scenarios stay far below this; a long
+/// run degrades gracefully (oldest events dropped and counted) instead
+/// of growing without bound.
+const TRACE_LANE_CAP: usize = 4096;
+
+/// Stable trace-event name for a fault action.
+fn fault_name(action: &FaultAction) -> &'static str {
+    match action {
+        FaultAction::DropoutStart { .. } => "fault.dropout_start",
+        FaultAction::DropoutEnd { .. } => "fault.dropout_end",
+        FaultAction::DriftStart { .. } => "fault.drift_start",
+        FaultAction::DriftEnd { .. } => "fault.drift_end",
+        FaultAction::StuckStart { .. } => "fault.stuck_start",
+        FaultAction::StuckEnd { .. } => "fault.stuck_end",
+        FaultAction::Crash { .. } => "fault.crash",
+        FaultAction::Rejoin { .. } => "fault.rejoin",
+    }
+}
 
 /// Engine knobs that are NOT part of the scenario (and deliberately not
 /// part of the report, which must be byte-identical across them).
@@ -67,6 +95,12 @@ pub struct SimOptions {
     pub threads: usize,
     /// Cap the timeline at the scenario's `quick_duration_s`.
     pub quick: bool,
+    /// Record a per-node event trace (ISSUE 9). Off by default — a
+    /// large fleet's trace is memory the cap-check hot loop should not
+    /// pay for unless `ecopt sim --trace` asked for it. The trace is
+    /// recorded on virtual tick time in the sequential sections only,
+    /// so it is byte-identical across thread counts like the report.
+    pub trace: bool,
 }
 
 /// Aggregates for one `[[fleet]]` group.
@@ -123,6 +157,16 @@ pub struct SimReport {
     pub cap_trace: Vec<CapSample>,
     /// Property verdicts, in scenario order.
     pub properties: Vec<PropertyResult>,
+    /// Flattened run telemetry (ISSUE 9): counters, gauges, and
+    /// histogram summaries from the run's private metrics registry,
+    /// recorded only in the sequential engine sections — byte-identical
+    /// across thread counts, like everything else here. Deliberately
+    /// NOT rendered by `report::sim_report` (its markdown is pinned).
+    pub metrics: BTreeMap<String, u64>,
+    /// Merged `(ts, lane, seq)`-ordered event trace: one lane per node
+    /// plus an engine lane (`lane == total_nodes`), on virtual tick
+    /// nanoseconds. Empty unless [`SimOptions::trace`] was set.
+    pub trace: Vec<TraceEvent>,
 }
 
 impl SimReport {
@@ -582,6 +626,27 @@ pub fn run_scenario(scenario: &Scenario, opts: &SimOptions) -> Result<SimReport>
     })?;
     let sims: Vec<Mutex<NodeSim>> = sims.into_iter().map(Mutex::new).collect();
 
+    // Run-private telemetry (ISSUE 9). The registry and the trace lanes
+    // are touched ONLY in the sequential apply/observe/harvest sections
+    // below — never inside the parallel advance — so the flattened
+    // metrics and the merged trace inherit the report's byte identity
+    // across thread counts. Timestamps go through a VirtualClock pinned
+    // to the batch tick (the sim's Clock, per the obs contract).
+    let metrics = MetricsRegistry::new();
+    let event_batches = metrics.counter("sim.event_batches");
+    let events_per_batch = metrics.histogram("sim.events_per_batch");
+    let fault_counter = metrics.counter("sim.fault_actions");
+    let cap_checks = metrics.counter("sim.cap_checks");
+    let vclock = VirtualClock::new();
+    // One lane per node plus the engine lane (index sims.len()).
+    let mut lanes: Vec<TraceBuffer> = if opts.trace {
+        (0..=sims.len())
+            .map(|i| TraceBuffer::new(i as u32, TRACE_LANE_CAP))
+            .collect()
+    } else {
+        Vec::new()
+    };
+
     // Compile the schedule: faults first (so same-tick cap checks see
     // the post-fault fleet), then the cap-check cadence, then the end.
     let mut events: EventQueue<SimEvent> = EventQueue::new();
@@ -613,12 +678,19 @@ pub fn run_scenario(scenario: &Scenario, opts: &SimOptions) -> Result<SimReport>
             s.advance_to(t)?;
             Ok(())
         })?;
+        vclock.set_ns(tick.saturating_mul(NS_PER_TICK));
+        event_batches.inc();
+        events_per_batch.record(batch.len() as u64);
         for ev in batch {
             match ev {
                 SimEvent::Fault(action) => {
                     let mut s = sims[action.node()].lock().map_err(|_| poisoned())?;
                     s.apply(&action, t)?;
                     fault_actions += 1;
+                    fault_counter.inc();
+                    if let Some(lane) = lanes.get_mut(action.node()) {
+                        lane.record(&vclock, fault_name(&action), 0, 0);
+                    }
                 }
                 SimEvent::CapCheck => {
                     let mut watts = 0.0;
@@ -629,6 +701,10 @@ pub fn run_scenario(scenario: &Scenario, opts: &SimOptions) -> Result<SimReport>
                         alive += s.alive as usize;
                     }
                     cap_trace.push(CapSample { t_s: t, watts, alive });
+                    cap_checks.inc();
+                    if let Some(lane) = lanes.last_mut() {
+                        lane.record(&vclock, "cap_check", 0, alive as u64);
+                    }
                 }
                 SimEvent::End => {}
             }
@@ -671,6 +747,19 @@ pub fn run_scenario(scenario: &Scenario, opts: &SimOptions) -> Result<SimReport>
     let peak_power_w = cap_trace.iter().map(|s| s.watts).fold(0.0f64, f64::max);
     let properties = properties::check(&scenario.properties, &cap_trace, &convergence);
 
+    // End-of-run telemetry gauges, then flatten the run's registry.
+    metrics.gauge("sim.total_nodes").set(sims.len() as u64);
+    metrics.gauge("sim.final_alive").set(final_alive as u64);
+    metrics
+        .gauge("sim.crashes")
+        .set(groups.iter().map(|g| g.crashes).sum());
+    metrics
+        .gauge("sim.traces_done")
+        .set(groups.iter().map(|g| g.traces_done).sum());
+    metrics
+        .gauge("sim.gov_decisions")
+        .set(groups.iter().map(|g| g.gov_decisions).sum());
+
     Ok(SimReport {
         scenario: scenario.name.clone(),
         description: scenario.description.clone(),
@@ -684,6 +773,8 @@ pub fn run_scenario(scenario: &Scenario, opts: &SimOptions) -> Result<SimReport>
         groups,
         cap_trace,
         properties,
+        metrics: expose::flatten(&metrics.snapshot()),
+        trace: trace::merge(lanes.into_iter().map(TraceBuffer::into_events).collect()),
     })
 }
 
@@ -757,8 +848,8 @@ mod tests {
     #[test]
     fn churn_run_is_deterministic_across_thread_counts() {
         let s = small_scenario();
-        let r1 = run_scenario(&s, &SimOptions { threads: 1, quick: false }).unwrap();
-        let r4 = run_scenario(&s, &SimOptions { threads: 4, quick: false }).unwrap();
+        let r1 = run_scenario(&s, &SimOptions { threads: 1, quick: false, ..Default::default() }).unwrap();
+        let r4 = run_scenario(&s, &SimOptions { threads: 4, quick: false, ..Default::default() }).unwrap();
         assert_eq!(r1.total_energy_j.to_bits(), r4.total_energy_j.to_bits());
         assert_eq!(r1.cap_trace, r4.cap_trace);
         assert_eq!(r1.properties, r4.properties);
@@ -767,7 +858,7 @@ mod tests {
     #[test]
     fn crash_drops_power_and_rejoin_restores_it() {
         let s = small_scenario();
-        let r = run_scenario(&s, &SimOptions { threads: 1, quick: false }).unwrap();
+        let r = run_scenario(&s, &SimOptions { threads: 1, quick: false, ..Default::default() }).unwrap();
         // One node never rejoins.
         assert_eq!(r.final_alive, 5);
         assert_eq!(r.groups[0].crashes, 3);
@@ -801,9 +892,9 @@ mod tests {
             at_s: 0.0,
         }];
         s.properties.truncate(1);
-        let drifted = run_scenario(&s, &SimOptions { threads: 2, quick: false }).unwrap();
+        let drifted = run_scenario(&s, &SimOptions { threads: 2, quick: false, ..Default::default() }).unwrap();
         s.faults.clear();
-        let clean = run_scenario(&s, &SimOptions { threads: 2, quick: false }).unwrap();
+        let clean = run_scenario(&s, &SimOptions { threads: 2, quick: false, ..Default::default() }).unwrap();
         // Ground truth is identical; the measured channel is inflated.
         assert_eq!(
             drifted.total_energy_j.to_bits(),
@@ -821,7 +912,7 @@ mod tests {
             nodes: (0, 3),
             at_s: 2.0,
         }];
-        let r = run_scenario(&s, &SimOptions { threads: 1, quick: false }).unwrap();
+        let r = run_scenario(&s, &SimOptions { threads: 1, quick: false, ..Default::default() }).unwrap();
         let live = &r.properties[1];
         assert!(live.pass, "{}", live.details);
         assert!(live.details.contains("3 disrupted survivors"), "{}", live.details);
@@ -831,7 +922,7 @@ mod tests {
     fn quick_mode_caps_the_timeline_only() {
         let mut s = small_scenario();
         s.quick_duration_s = Some(4.0);
-        let r = run_scenario(&s, &SimOptions { threads: 1, quick: true }).unwrap();
+        let r = run_scenario(&s, &SimOptions { threads: 1, quick: true, ..Default::default() }).unwrap();
         assert_eq!(r.duration_s, 4.0);
         assert_eq!(r.total_nodes, 6);
         assert!((r.cap_trace.last().unwrap().t_s - 4.0).abs() < 1e-9);

@@ -389,6 +389,7 @@ fn check_mutant(text: &str) -> MutantStatus {
             let opts = SimOptions {
                 threads,
                 quick: false,
+                ..Default::default()
             };
             run_scenario(&twin, &opts).map(|r| crate::report::sim_report(&r))
         }))

@@ -17,6 +17,8 @@ pub use gridsearch::{grid_search, GridSearchResult};
 pub use scale::Standardizer;
 
 use crate::config::{mhz_to_ghz, Mhz, SvrSpec};
+use crate::obs::metrics::global;
+use crate::util::clock::{Clock, SystemClock};
 use crate::{Error, Result};
 
 /// Number of features: (frequency GHz, cores, input size).
@@ -92,6 +94,20 @@ fn train_smo_options() -> smo::SmoOptions {
     }
 }
 
+/// Record one completed fit in the process-wide metrics registry
+/// (ISSUE 9): fit count, SMO pair updates, kernel-cache traffic, and
+/// wall time. Purely observational — training results are unaffected,
+/// and the wall-time histogram never feeds any report (reports stay
+/// byte-identical across machines and thread counts).
+fn record_fit(iterations: usize, cache_hits: u64, cache_misses: u64, elapsed_ns: u64) {
+    let m = global();
+    m.counter("svr.fits").inc();
+    m.counter("svr.iterations").add(iterations as u64);
+    m.counter("svr.cache_hits").add(cache_hits);
+    m.counter("svr.cache_misses").add(cache_misses);
+    m.histogram("svr.fit_ns").record(elapsed_ns);
+}
+
 impl SvrModel {
     /// Train on characterization samples with the given hyper-parameters.
     ///
@@ -99,6 +115,8 @@ impl SvrModel {
     /// lazily, each distinct row once) and the SMO solver runs with the
     /// shrinking heuristic; see `smo` for the exactness guarantees.
     pub fn train(samples: &[TrainSample], spec: &SvrSpec) -> Result<SvrModel> {
+        let wall = SystemClock::new();
+        let t0 = wall.now_ns();
         let (raw, y) = collect_features(samples)?;
         let scaler = if spec.scale_features {
             Standardizer::fit(&raw, DIMS)?
@@ -118,6 +136,12 @@ impl SvrModel {
             &train_smo_options(),
         )?;
         let n_support = sol.n_support();
+        record_fit(
+            sol.iterations,
+            cache.hits(),
+            cache.misses(),
+            wall.now_ns().saturating_sub(t0),
+        );
         Ok(SvrModel {
             train_x: x,
             beta: sol.beta,
@@ -159,6 +183,11 @@ impl SvrModel {
                 spec.gamma
             )));
         }
+        let wall = SystemClock::new();
+        let t0 = wall.now_ns();
+        // The shared cache accumulates across folds; charge this fit
+        // only with the traffic it added.
+        let (hits0, misses0) = (cache.hits(), cache.misses());
         let subset: Vec<TrainSample> = idx.iter().map(|&i| all[i]).collect();
         let (raw, y) = collect_features(&subset)?;
         let scaler = Standardizer::identity(DIMS);
@@ -174,6 +203,12 @@ impl SvrModel {
             &train_smo_options(),
         )?;
         let n_support = sol.n_support();
+        record_fit(
+            sol.iterations,
+            cache.hits().saturating_sub(hits0),
+            cache.misses().saturating_sub(misses0),
+            wall.now_ns().saturating_sub(t0),
+        );
         Ok(SvrModel {
             train_x: x,
             beta: sol.beta,

@@ -1,10 +1,16 @@
 //! Leveled stderr logging (replaces `tracing`, unavailable offline).
 //!
 //! Controlled by `ECOPT_LOG` = `error` | `warn` | `info` (default) |
-//! `debug`. Use the [`crate::info!`] / [`crate::warn!`] / [`crate::debug!`]
-//! macros.
+//! `debug`. An unrecognized value falls back to `info` after ONE
+//! stderr warning naming the valid levels (ISSUE 9 satellite — it used
+//! to be swallowed silently). Use the [`crate::info!`] /
+//! [`crate::warn_log!`] / [`crate::debug_log!`] macros.
+//!
+//! Output goes through a swappable [`Sink`] (default: stderr), so tests
+//! can capture exactly what would have printed without scraping the
+//! process's stderr.
 
-use std::sync::OnceLock;
+use std::sync::{OnceLock, RwLock};
 
 /// Log severity, most severe first.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -19,15 +25,49 @@ pub enum Level {
     Debug = 3,
 }
 
-static LEVEL: OnceLock<Level> = OnceLock::new();
+/// Where formatted log lines go. The default sink writes to stderr;
+/// tests install a capturing sink via [`set_sink`].
+pub trait Sink: Send + Sync {
+    /// Deliver one already-formatted line (no trailing newline).
+    fn write_line(&self, line: &str);
+}
 
-/// The configured level (parsed once from `ECOPT_LOG`).
+struct StderrSink;
+
+impl Sink for StderrSink {
+    fn write_line(&self, line: &str) {
+        eprintln!("{line}");
+    }
+}
+
+static LEVEL: OnceLock<Level> = OnceLock::new();
+static SINK: RwLock<Option<Box<dyn Sink>>> = RwLock::new(None);
+
+/// Install a custom sink for every subsequent log line (process-wide).
+/// Passing `None` restores the default stderr sink. Returns the
+/// previously installed custom sink, if any.
+pub fn set_sink(sink: Option<Box<dyn Sink>>) -> Option<Box<dyn Sink>> {
+    let mut slot = SINK.write().unwrap_or_else(|e| e.into_inner());
+    std::mem::replace(&mut *slot, sink)
+}
+
+/// The configured level (parsed once from `ECOPT_LOG`). An unknown
+/// value warns once on stderr — listing the levels that would have
+/// worked — and falls back to `info` instead of silently ignoring the
+/// variable.
 pub fn level() -> Level {
     *LEVEL.get_or_init(|| match std::env::var("ECOPT_LOG").as_deref() {
         Ok("error") => Level::Error,
         Ok("warn") => Level::Warn,
+        Ok("info") => Level::Info,
         Ok("debug") => Level::Debug,
-        _ => Level::Info,
+        Ok(other) => {
+            eprintln!(
+                "[ WARN] ECOPT_LOG='{other}' is not a log level (valid: error, warn, info, debug); using 'info'"
+            );
+            Level::Info
+        }
+        Err(_) => Level::Info,
     })
 }
 
@@ -45,7 +85,12 @@ pub fn emit(l: Level, args: std::fmt::Arguments<'_>) {
             Level::Info => " INFO",
             Level::Debug => "DEBUG",
         };
-        eprintln!("[{tag}] {args}");
+        let line = format!("[{tag}] {args}");
+        let slot = SINK.read().unwrap_or_else(|e| e.into_inner());
+        match &*slot {
+            Some(sink) => sink.write_line(&line),
+            None => StderrSink.write_line(&line),
+        }
     }
 }
 
@@ -70,6 +115,7 @@ macro_rules! debug_log {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::{Arc, Mutex};
 
     #[test]
     fn default_level_is_info() {
@@ -83,5 +129,29 @@ mod tests {
         crate::info!("info {}", 1);
         crate::warn_log!("warn {}", 2);
         crate::debug_log!("debug {}", 3);
+    }
+
+    struct Capture(Arc<Mutex<Vec<String>>>);
+
+    impl Sink for Capture {
+        fn write_line(&self, line: &str) {
+            self.0
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .push(line.to_string());
+        }
+    }
+
+    #[test]
+    fn sink_captures_formatted_lines() {
+        let lines = Arc::new(Mutex::new(Vec::new()));
+        let prev = set_sink(Some(Box::new(Capture(Arc::clone(&lines)))));
+        crate::warn_log!("captured {}", 42);
+        set_sink(prev);
+        let got = lines.lock().unwrap_or_else(|e| e.into_inner());
+        assert!(
+            got.iter().any(|l| l == "[ WARN] captured 42"),
+            "captured lines: {got:?}"
+        );
     }
 }

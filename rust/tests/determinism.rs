@@ -283,6 +283,7 @@ fn sim_report_byte_identical_across_thread_counts() {
         let opts = SimOptions {
             threads,
             quick: false,
+            ..Default::default()
         };
         ecopt::report::sim_report(&run_scenario(&scenario, &opts).unwrap())
     };

@@ -230,6 +230,34 @@ fn r6_truncating_casts_in_parse_layers() {
 }
 
 #[test]
+fn r8_raw_prints_in_library_code() {
+    assert_fires(
+        "rust/src/svr/mod.rs",
+        "fn announce() { println!(\"fit done\"); }\n",
+        "raw-print",
+        1,
+    );
+    assert_fires(
+        "rust/src/sim/engine.rs",
+        "fn moan() { eprintln!(\"tick stalled\"); }\n",
+        "raw-print",
+        1,
+    );
+    // The sanctioned printers: report renderers, the CLI entry point,
+    // and the logging layer itself.
+    assert_clean("rust/src/report/mod.rs", "fn p() { println!(\"table\"); }\n");
+    assert_clean("rust/src/main.rs", "fn p() { eprintln!(\"usage\"); }\n");
+    assert_clean("rust/src/util/logging.rs", "fn p() { eprintln!(\"line\"); }\n");
+    // Test regions print through the harness's captured stdout.
+    assert_clean(
+        "rust/src/svr/mod.rs",
+        "#[cfg(test)]\nmod tests {\n    fn t() { println!(\"dbg\"); }\n}\n",
+    );
+    // The token inside a string literal is content, not a call.
+    assert_clean("rust/src/svr/mod.rs", "let s = \"println!\";\n");
+}
+
+#[test]
 fn r1_r7_tree_rules() {
     let src = scan_file(
         "rust/src/util/seed_domains.rs",

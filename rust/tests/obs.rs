@@ -1,0 +1,282 @@
+//! Integration tests for the `obs/` telemetry subsystem (ISSUE 9):
+//! histogram bucketing agrees with `util::stats::percentile`, merge is
+//! associative (so any per-thread merge tree yields identical bytes),
+//! trace rings drop oldest-first with accounting, the metrics wire form
+//! round-trips bit-identically, and a traced simulation run produces
+//! byte-identical metrics and merged traces at 1, 4, and 16 threads.
+
+use ecopt::obs::expose::{flatten, render_prometheus, snapshot_from_json, snapshot_to_json};
+use ecopt::obs::metrics::{
+    bucket_floor, bucket_index, Histogram, HistogramSnapshot, MetricsRegistry, BUCKETS,
+};
+use ecopt::obs::trace::{chrome_trace_string, merge, TraceBuffer};
+use ecopt::sim::{run_scenario, Scenario, SimOptions};
+use ecopt::util::clock::VirtualClock;
+use ecopt::util::json::Json;
+use ecopt::util::rng::Rng;
+use ecopt::util::stats::percentile;
+
+// ---------------------------------------------------------------------------
+// Histogram: boundaries, merge algebra, percentile agreement.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bucket_boundaries_partition_the_u64_line() {
+    // Every bucket's floor maps to that bucket, and the value just
+    // below it to the previous one — the buckets tile without gaps.
+    for idx in 0..BUCKETS {
+        let floor = bucket_floor(idx);
+        assert_eq!(bucket_index(floor), idx, "floor of bucket {idx}");
+        if idx > 0 {
+            assert_eq!(bucket_index(floor - 1), idx - 1, "below floor of {idx}");
+        }
+    }
+    assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+}
+
+#[test]
+fn histogram_merge_is_associative_and_order_free() {
+    let mut rng = Rng::seed_from_u64(0x0b5);
+    let parts: Vec<HistogramSnapshot> = (0..4)
+        .map(|_| {
+            let h = Histogram::new();
+            for _ in 0..200 {
+                h.record(rng.next_u64() >> (rng.below(60) as u32));
+            }
+            h.snapshot()
+        })
+        .collect();
+
+    // ((a+b)+c)+d  vs  a+((b+c)+d)  vs reversed fold order.
+    let fold = |order: &[usize]| {
+        let mut acc = HistogramSnapshot::empty();
+        for &i in order {
+            acc.merge(&parts[i]);
+        }
+        acc
+    };
+    let left = fold(&[0, 1, 2, 3]);
+    let mut right = HistogramSnapshot::empty();
+    let mut bc = parts[1].clone();
+    bc.merge(&parts[2]);
+    bc.merge(&parts[3]);
+    right.merge(&parts[0]);
+    right.merge(&bc);
+    assert_eq!(left, right, "merge tree shape must not matter");
+    assert_eq!(left, fold(&[3, 2, 1, 0]), "merge order must not matter");
+
+    // Splitting a stream across "threads" and merging equals recording
+    // it all in one histogram.
+    let mut rng = Rng::seed_from_u64(7);
+    let whole = Histogram::new();
+    let shards: Vec<Histogram> = (0..4).map(|_| Histogram::new()).collect();
+    for i in 0..1000u64 {
+        let v = rng.next_u64() >> 40;
+        whole.record(v);
+        shards[(i % 4) as usize].record(v);
+    }
+    let mut merged = HistogramSnapshot::empty();
+    for s in &shards {
+        merged.merge(&s.snapshot());
+    }
+    assert_eq!(merged, whole.snapshot());
+}
+
+#[test]
+fn percentiles_agree_with_util_stats_on_random_samples() {
+    // The histogram answers percentiles over the bucket-floored sample
+    // multiset with exactly the nearest-rank convention of
+    // `util::stats::percentile` — check against the reference on the
+    // floored values directly.
+    for seed in [1u64, 42, 0xec0] {
+        let mut rng = Rng::seed_from_u64(seed);
+        let h = Histogram::new();
+        let mut floored: Vec<u64> = Vec::new();
+        for _ in 0..500 {
+            let v = rng.next_u64() >> (20 + rng.below(40) as u32);
+            h.record(v);
+            floored.push(bucket_floor(bucket_index(v)));
+        }
+        floored.sort_unstable();
+        let s = h.snapshot();
+        for p in [0.0, 1.0, 10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 100.0] {
+            assert_eq!(
+                s.percentile(p).unwrap(),
+                percentile(&floored, p).unwrap(),
+                "seed {seed} p{p}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trace ring: bounded, oldest-first eviction, exact loss accounting.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn trace_ring_overflow_keeps_recent_history() {
+    let vc = VirtualClock::new();
+    let mut b = TraceBuffer::new(2, 16);
+    for i in 0..100u64 {
+        vc.set_ns(i * 10);
+        b.record(&vc, "ev", 0, i);
+    }
+    assert_eq!(b.len(), 16);
+    assert_eq!(b.dropped(), 84);
+    let ev = b.to_vec();
+    assert_eq!(ev.first().map(|e| e.arg), Some(84), "oldest retained");
+    assert_eq!(ev.last().map(|e| e.arg), Some(99), "newest retained");
+    // Sequence numbers keep counting across drops: merge order survives.
+    assert_eq!(ev.first().map(|e| e.seq), Some(84));
+    let merged = merge(vec![b.into_events()]);
+    assert!(merged.windows(2).all(|w| w[0].seq < w[1].seq));
+}
+
+// ---------------------------------------------------------------------------
+// Exposition: the wire form is bit-stable, the renderings agree.
+// ---------------------------------------------------------------------------
+
+fn busy_registry() -> MetricsRegistry {
+    let reg = MetricsRegistry::new();
+    reg.counter("server.served").add(1234);
+    reg.counter("server.shed").inc();
+    reg.gauge("server.connections").set(17);
+    let h = reg.histogram("server.tick_ns");
+    let mut rng = Rng::seed_from_u64(99);
+    for _ in 0..300 {
+        h.record(rng.next_u64() >> 34);
+    }
+    reg.histogram("server.batch_occupancy"); // registered, empty
+    reg
+}
+
+#[test]
+fn metrics_wire_form_round_trips_bit_identically() {
+    let s = busy_registry().snapshot();
+    let bytes = snapshot_to_json(&s).dump().unwrap();
+    // parse -> from -> to -> dump is the identity on the bytes, twice.
+    let back = snapshot_from_json(&Json::parse(&bytes).unwrap()).unwrap();
+    assert_eq!(back, s);
+    let bytes2 = snapshot_to_json(&back).dump().unwrap();
+    assert_eq!(bytes2, bytes);
+    let again = snapshot_from_json(&Json::parse(&bytes2).unwrap()).unwrap();
+    assert_eq!(snapshot_to_json(&again).dump().unwrap(), bytes);
+}
+
+#[test]
+fn renderings_report_the_same_numbers() {
+    let s = busy_registry().snapshot();
+    let flat = flatten(&s);
+    let prom = render_prometheus(&s);
+    assert_eq!(flat["server.served"], 1234);
+    assert!(prom.contains("ecopt_server_served 1234"));
+    assert_eq!(flat["server.tick_ns.count"], 300);
+    assert!(prom.contains("ecopt_server_tick_ns_count 300"));
+    // The summary quantiles in the Prometheus text are the flat p50/p95.
+    assert!(prom.contains(&format!(
+        "ecopt_server_tick_ns{{quantile=\"0.5\"}} {}",
+        flat["server.tick_ns.p50"]
+    )));
+    assert!(prom.contains(&format!(
+        "ecopt_server_tick_ns{{quantile=\"0.95\"}} {}",
+        flat["server.tick_ns.p95"]
+    )));
+    // Empty histograms render zero rows and no quantile lines.
+    assert!(prom.contains("ecopt_server_batch_occupancy_count 0"));
+    assert!(!flat.contains_key("server.batch_occupancy.p50"));
+}
+
+// ---------------------------------------------------------------------------
+// Sim telemetry: byte-identical across thread counts.
+// ---------------------------------------------------------------------------
+
+const TRACED_SCENARIO: &str = r#"[scenario]
+name = "obs-traced"
+seed = 11
+duration_s = 6.0
+cap_check_period_s = 0.5
+dt_s = 0.1
+input = 1
+
+[[fleet]]
+profile = "mobile-biglittle"
+count = 6
+workload = "duty-cycle"
+governor = "ondemand"
+
+[[phases]]
+name = "steady"
+start_s = 0.0
+
+[[faults]]
+phase = "steady"
+kind = "crash"
+nodes = "0..2"
+at_s = 1.0
+rejoin_s = 1.5
+
+[[faults]]
+phase = "steady"
+kind = "sensor_dropout"
+nodes = "2..4"
+at_s = 2.0
+rate = 0.5
+duration_s = 1.0
+
+[[properties]]
+name = "cap"
+kind = "power_cap"
+cap_w = 10000.0
+"#;
+
+#[test]
+fn sim_trace_and_metrics_are_byte_identical_across_thread_counts() {
+    let scenario = Scenario::parse(TRACED_SCENARIO).unwrap();
+    let runs: Vec<_> = [1usize, 4, 16]
+        .iter()
+        .map(|&threads| {
+            run_scenario(
+                &scenario,
+                &SimOptions {
+                    threads,
+                    trace: true,
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+        })
+        .collect();
+
+    let trace_bytes: Vec<String> = runs
+        .iter()
+        .map(|r| chrome_trace_string(&r.trace).unwrap())
+        .collect();
+    assert!(!runs[0].trace.is_empty(), "faults and cap checks must record");
+    assert_eq!(trace_bytes[0], trace_bytes[1], "1t vs 4t trace bytes");
+    assert_eq!(trace_bytes[0], trace_bytes[2], "1t vs 16t trace bytes");
+    assert_eq!(runs[0].metrics, runs[1].metrics, "1t vs 4t metrics");
+    assert_eq!(runs[0].metrics, runs[2].metrics, "1t vs 16t metrics");
+
+    // The counters account for what the scenario actually did.
+    let m = &runs[0].metrics;
+    assert!(m["sim.fault_actions"] >= 4, "2 crashes+rejoins, 2 dropouts: {m:?}");
+    assert!(m["sim.cap_checks"] >= 10, "6 s at 0.5 s period: {m:?}");
+    assert_eq!(m["sim.total_nodes"], 6);
+    assert_eq!(m["sim.final_alive"], 6);
+    assert_eq!(m["sim.events_per_batch.count"], m["sim.event_batches"]);
+
+    // Tracing is an engine knob, not scenario state: the pinned report
+    // stays byte-identical with tracing on vs off.
+    let untraced = run_scenario(&scenario, &SimOptions::default()).unwrap();
+    assert!(untraced.trace.is_empty());
+    assert_eq!(
+        ecopt::report::sim_report(&untraced),
+        ecopt::report::sim_report(&runs[0])
+    );
+
+    // Merged order is the documented (ts, lane, seq) total order.
+    let t = &runs[0].trace;
+    assert!(t
+        .windows(2)
+        .all(|w| (w[0].ts_ns, w[0].lane, w[0].seq) <= (w[1].ts_ns, w[1].lane, w[1].seq)));
+}

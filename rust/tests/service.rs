@@ -198,6 +198,51 @@ fn daemon_roundtrips_predict_optimize_registry_stats() {
         "second optimize must be a memo hit"
     );
 
+    // metrics (ISSUE 9): the snapshot agrees with stats and round-trips
+    // bit-identically through the exposition parser.
+    let served_before = j.get("served").unwrap().as_u64().unwrap();
+    let resp = request_once(&addr, &Request::Metrics.to_line().unwrap()).unwrap();
+    assert!(line_is_ok(&resp), "{resp}");
+    let mj = Json::parse(&resp).unwrap();
+    assert_eq!(mj.get("kind").unwrap().as_str().unwrap(), "metrics");
+    let snap = ecopt::obs::expose::snapshot_from_json(&mj).unwrap();
+    assert!(
+        snap.counters["server.served"] >= served_before,
+        "served counter went backwards: {} < {served_before}",
+        snap.counters["server.served"]
+    );
+    assert!(snap.counters["registry.hits"] >= 1, "{:?}", snap.counters);
+    assert!(
+        snap.histograms.contains_key("server.tick_ns"),
+        "reactor tick histogram missing"
+    );
+    let shard_hits: u64 = snap
+        .counters
+        .iter()
+        .filter(|(k, _)| k.starts_with("registry.shard") && k.ends_with(".hits"))
+        .map(|(_, v)| v)
+        .sum();
+    assert_eq!(shard_hits, snap.counters["registry.hits"], "per-shard accounting");
+    let bytes = ecopt::obs::expose::snapshot_to_json(&snap).dump().unwrap();
+    let back =
+        ecopt::obs::expose::snapshot_from_json(&Json::parse(&bytes).unwrap()).unwrap();
+    assert_eq!(back, snap, "metrics wire form must round-trip exactly");
+
+    // trace: the daemon serves its ring and the events parse back.
+    let resp = request_once(&addr, &Request::Trace.to_line().unwrap()).unwrap();
+    assert!(line_is_ok(&resp), "{resp}");
+    let tj = Json::parse(&resp).unwrap();
+    assert_eq!(tj.get("kind").unwrap().as_str().unwrap(), "trace");
+    let events = tj.get("events").unwrap().as_arr().unwrap();
+    assert_eq!(
+        events.len(),
+        tj.get("count").unwrap().as_usize().unwrap(),
+        "count field matches the event list"
+    );
+    for e in events {
+        ecopt::obs::trace::TraceEvent::from_json(e).unwrap();
+    }
+
     // Pipelined requests on ONE connection: three lines in, three
     // responses out, in order.
     let mut stream = TcpStream::connect(&addr).unwrap();

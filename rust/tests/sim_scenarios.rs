@@ -328,7 +328,7 @@ kind = "reconverge"
 within_s = 2.0
 "#;
     let s = Scenario::parse(text).unwrap();
-    let r = run_scenario(&s, &SimOptions { threads: 2, quick: false }).unwrap();
+    let r = run_scenario(&s, &SimOptions { threads: 2, quick: false, ..Default::default() }).unwrap();
     assert!(!r.all_pass());
     assert!(r.properties[0].pass, "{}", r.properties[0].details);
     assert!(!r.properties[1].pass, "{}", r.properties[1].details);
