@@ -411,6 +411,7 @@ impl Coordinator {
             cv: Some(cv),
             test_mae: Some(test_mae),
             test_pae_pct: Some(test_pae),
+            version: None,
         })
     }
 
@@ -575,6 +576,7 @@ impl Coordinator {
                             cv: Some(m.cv.clone()),
                             test_mae: Some(m.test_mae),
                             test_pae_pct: Some(m.test_pae),
+                            version: None,
                         },
                     )?;
                 }

@@ -378,6 +378,7 @@ pub fn run_replay(
                     cv: None,
                     test_mae: None,
                     test_pae_pct: None,
+                    version: None,
                 };
                 match &opts.cache {
                     Some(cache) => {

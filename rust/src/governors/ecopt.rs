@@ -36,6 +36,7 @@ use crate::energy::{Constraints, EnergyModel, Objective};
 use crate::governors::{Governor, Ondemand};
 use crate::node::Node;
 use crate::obs::metrics::{global, Counter};
+use crate::service::online::{ObservedSample, OnlineManager};
 use crate::Result;
 
 /// Tunables of the model-in-the-loop governor.
@@ -116,6 +117,26 @@ pub struct EcoptGovernor {
     obs_fallbacks: Arc<Counter>,
     obs_consults: Arc<Counter>,
     obs_transitions: Arc<Counter>,
+    /// Optional online-learning tap (ISSUE 10). `None` — the default —
+    /// leaves every pre-online code path (replay transcripts, metric
+    /// name sets) byte-identical.
+    observer: Option<ObserverTap>,
+}
+
+/// The governor's hook into the online-learning loop: completed
+/// executions stream into a shared [`OnlineManager`] under the serving
+/// model's registry label, stamped with a per-governor monotone
+/// sequence so the manager's seq-gated ingest applies them in
+/// completion order whatever thread delivers them.
+#[derive(Debug)]
+struct ObserverTap {
+    online: Arc<OnlineManager>,
+    label: String,
+    seq: u64,
+    /// `governor.observations` — registered lazily here (not at
+    /// governor construction) so unobserved governors add no names to
+    /// the global metrics registry.
+    observations: Arc<Counter>,
 }
 
 impl EcoptGovernor {
@@ -173,7 +194,58 @@ impl EcoptGovernor {
             obs_fallbacks: global().counter("governor.fallback_samples"),
             obs_consults: global().counter("governor.consults"),
             obs_transitions: global().counter("governor.regime_transitions"),
+            observer: None,
         }
+    }
+
+    /// Attach the online-learning tap (ISSUE 10): every subsequent
+    /// [`EcoptGovernor::observe_completion`] call streams into `online`
+    /// under `label` — the serving model's registry label, i.e.
+    /// `ModelKey::label()` — so daemon-side ingest and governor-side
+    /// ingest land in the same per-key reservoir and detector.
+    pub fn attach_observer(&mut self, online: Arc<OnlineManager>, label: impl Into<String>) {
+        self.observer = Some(ObserverTap {
+            online,
+            label: label.into(),
+            seq: 0,
+            observations: global().counter("governor.observations"),
+        });
+    }
+
+    /// Stream one completed execution into the attached online-learning
+    /// loop: the governor computes the prediction residual against its
+    /// own serving model and ingests `(config, load, power, exec_time)`
+    /// with the next sequence number. Returns whether this sample
+    /// tripped the drift detector (so a caller can schedule a refit).
+    /// No-op (returning `false`) without an attached observer or for an
+    /// invalid sample.
+    pub fn observe_completion(
+        &mut self,
+        f_mhz: Mhz,
+        cores: usize,
+        load: f64,
+        power_w: f64,
+        time_s: f64,
+    ) -> bool {
+        let Some(tap) = self.observer.as_mut() else {
+            return false;
+        };
+        let sample = ObservedSample {
+            f_mhz,
+            cores,
+            input: self.input,
+            load,
+            power_w,
+            time_s,
+        };
+        if !sample.is_valid() {
+            return false;
+        }
+        let residual = time_s - self.model.svr.predict_one(f_mhz, cores, self.input);
+        let seq = tap.seq;
+        tap.seq += 1;
+        tap.observations.inc();
+        tap.online.ingest(&tap.label, seq, sample, residual).tripped
     }
 
     /// Whether the governor has degraded to its ondemand fallback.
@@ -574,5 +646,38 @@ mod tests {
         g.reset();
         assert!(g.current_config().is_none());
         assert_eq!(g.counters(), (0, 0, 0));
+    }
+
+    #[test]
+    fn observe_completion_streams_into_the_attached_manager() {
+        use crate::service::online::OnlineConfig;
+
+        let mut g = EcoptGovernor::new(toy_model(), grid(), 1);
+        // Without an observer the tap is a no-op.
+        assert!(!g.observe_completion(2200, 8, 0.9, 150.0, 12.0));
+
+        let online = Arc::new(OnlineManager::new(OnlineConfig::default()));
+        g.attach_observer(Arc::clone(&online), "parsec-blackscholes#deadbeef@custom-node");
+        // Valid samples land in the per-key reservoir with monotone seqs
+        // (no gaps => the seq-gated ingest applies them immediately).
+        for i in 0..5 {
+            let tripped = g.observe_completion(2200, 8, 0.9, 150.0, 12.0 + i as f64 * 0.01);
+            assert!(!tripped, "stationary residuals must not trip the detector");
+        }
+        assert_eq!(
+            online
+                .reservoir_samples("parsec-blackscholes#deadbeef@custom-node")
+                .len(),
+            5
+        );
+        // Invalid samples are rejected before ingest.
+        assert!(!g.observe_completion(2200, 8, 1.5, 150.0, 12.0));
+        assert!(!g.observe_completion(2200, 8, 0.9, 150.0, -1.0));
+        assert_eq!(
+            online
+                .reservoir_samples("parsec-blackscholes#deadbeef@custom-node")
+                .len(),
+            5
+        );
     }
 }

@@ -96,18 +96,20 @@ COMMANDS:
   query <KIND> [--addr HOST:PORT] [ARGS]
                                 one request to a running ecoptd; KIND =
                                 predict | optimize | train | status |
-                                registry | stats | metrics | trace |
-                                shutdown (--prom renders a metrics
-                                response as Prometheus text)
+                                observe | registry | stats | metrics |
+                                trace | shutdown (--prom renders a
+                                metrics response as Prometheus text)
   trace <OUT.json> [--addr HOST:PORT]
                                 fetch a running ecoptd's event trace and
                                 write it as Chrome trace_event JSON
                                 (open at chrome://tracing or perfetto)
   loadgen [--addr HOST:PORT] [--requests N] [--connections N] [--seed S]
-          [--quick] [--out FILE] [--report FILE] [--stats FILE]
+          [--quick] [--drift] [--out FILE] [--report FILE] [--stats FILE]
                                 deterministic seeded request mix against a
                                 running ecoptd; same seed + same registry
                                 state => byte-identical transcript
+                                (--drift: online-learning exerciser with a
+                                mid-run workload shift)
   cache ls|clear [--cache-dir DIR]
                                 inspect / empty the persistent model cache
   arch [--list]                 list the built-in architecture profiles
@@ -306,6 +308,8 @@ const COMMANDS: &[CmdSpec] = &[
                             | deadline:S)\n\
                   train    --app NAME [--arch A]      (async; returns a job id)\n\
                   status   --job ID\n\
+                  observe  --app NAME --freq MHZ --cores P --time S [-n N]\n\
+                           [--load L] [--power W] [--seq N] [--arch A] [--tag T]\n\
                   registry | stats | metrics | trace | shutdown\n\
                 metrics returns the daemon's full counter/gauge/histogram\n\
                 snapshot (one JSON line; --prom re-renders it as Prometheus\n\
@@ -313,7 +317,7 @@ const COMMANDS: &[CmdSpec] = &[
                 ring. Exits 0 on an ok response, 1 otherwise.",
         value_flags: &[
             "addr", "app", "arch", "tag", "freq", "cores", "input", "job", "max-f", "min-f",
-            "max-cores", "min-cores", "max-time", "objective",
+            "max-cores", "min-cores", "max-time", "objective", "time", "load", "power", "seq",
         ],
         bool_flags: &["prom"],
         max_positionals: 1,
@@ -345,12 +349,16 @@ const COMMANDS: &[CmdSpec] = &[
                 (negotiate K-response envelopes, default 0 = off; envelopes are\n\
                 unwrapped before the transcript is built). --report writes the\n\
                 throughput/latency report (markdown), --stats a JSON summary;\n\
-                --quick is the CI smoke sizing.",
+                --quick is the CI smoke sizing. --drift switches to the\n\
+                online-learning exerciser: predict/observe pairs on ONE\n\
+                lockstep connection with a mid-run workload shift that trips\n\
+                the daemon's drift detector and a warm-started refit (same\n\
+                determinism contract against a freshly provisioned daemon).",
         value_flags: &[
             "addr", "requests", "connections", "pipeline", "batch", "seed", "out", "report",
             "stats",
         ],
-        bool_flags: &["quick"],
+        bool_flags: &["quick", "drift"],
         max_positionals: 0,
         input_alias: false,
     },
@@ -987,6 +995,18 @@ fn main() -> anyhow::Result<()> {
                 "status" => Request::Status {
                     job: args.require_num("job"),
                 },
+                "observe" => Request::Observe {
+                    app: args.require("app").to_string(),
+                    arch,
+                    tag,
+                    f_mhz: args.require_num("freq"),
+                    cores: args.require_num("cores"),
+                    input: args.num("input", 1),
+                    load: args.num("load", 1.0),
+                    power_w: args.num("power", 0.0),
+                    time_s: args.require_num("time"),
+                    seq: args.num("seq", 0),
+                },
                 "registry" => Request::Registry,
                 "stats" => Request::Stats,
                 "metrics" => Request::Metrics,
@@ -1046,6 +1066,7 @@ fn main() -> anyhow::Result<()> {
             opts.pipeline = args.num("pipeline", opts.pipeline);
             opts.batch = args.num("batch", opts.batch);
             opts.seed = args.num("seed", opts.seed);
+            opts.drift = args.has("drift");
             let outcome = run_loadgen(&opts)?;
             if let Some(path) = args.get("out") {
                 std::fs::write(path, &outcome.transcript)?;

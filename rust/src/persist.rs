@@ -648,6 +648,12 @@ pub struct CachedModel {
     pub test_mae: Option<f64>,
     /// Held-out test-set percentage absolute error.
     pub test_pae_pct: Option<f64>,
+    /// Online-refit version (ISSUE 10): `None` for an offline-trained
+    /// bundle (byte-compatible with pre-versioning cache files), bumped
+    /// to `Some(n)` by every drift-triggered refit. Folded into the
+    /// registry's optimize memo keys so stale memoized consults cannot
+    /// outlive a refit.
+    pub version: Option<u64>,
 }
 
 impl CachedModel {
@@ -659,7 +665,7 @@ impl CachedModel {
     }
 
     pub(crate) fn to_json_with_key(&self, key: &ModelKey) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("schema", Json::Num(CACHE_SCHEMA)),
             ("app", Json::Str(key.app.clone())),
             ("input", Json::Str(key.input.clone())),
@@ -687,7 +693,13 @@ impl CachedModel {
                     None => Json::Null,
                 },
             ),
-        ])
+        ];
+        // Emitted only when set: offline bundles keep their exact
+        // pre-versioning byte layout on disk.
+        if let Some(v) = self.version {
+            fields.push(("version", Json::Num(v as f64)));
+        }
+        Json::obj(fields)
     }
 
     fn from_json_checked(j: &Json) -> Result<(ModelKey, CachedModel)> {
@@ -717,6 +729,10 @@ impl CachedModel {
             },
             test_mae: opt_num("test_mae")?,
             test_pae_pct: opt_num("test_pae_pct")?,
+            version: match j.opt("version") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_u64()?),
+            },
         };
         Ok((key, model))
     }
@@ -764,6 +780,7 @@ pub struct CacheEntry {
 ///     cv: None,
 ///     test_mae: None,
 ///     test_pae_pct: None,
+///     version: None,
 /// };
 /// let bytes = cache.put(&key, &bundle)?;
 /// assert!(bytes > 0);

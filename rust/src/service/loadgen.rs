@@ -30,6 +30,21 @@
 //! and envelope unwrapping is byte-faithful, so the SAME seed yields
 //! the SAME transcript bytes whatever the pipeline depth or batch size
 //! — which is how the tests pin the reactor's v1 compatibility.
+//!
+//! # Drift mode (ISSUE 10)
+//!
+//! [`LoadgenOptions::drift`] switches the generator to the
+//! online-learning exerciser: one lockstep connection issues
+//! predict/observe pairs over the first listed model, reporting observed
+//! times that track the daemon's own predictions plus seeded noise for
+//! the first half of the run and then stretch by [`DRIFT_SHIFT`] — an
+//! injected mid-run workload shift that steps the prediction residuals,
+//! trips the daemon's CUSUM detector, and triggers a warm-started refit.
+//! The single connection makes arrival order equal `seq` order, and
+//! every byte is a pure function of the seed and the daemon's
+//! (deterministic) responses, so two runs against identically
+//! provisioned daemons produce byte-identical transcripts — the
+//! property the `drift-smoke` CI job locks with `cmp`.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
@@ -63,6 +78,12 @@ pub struct LoadgenOptions {
     /// are unwrapped before the transcript is built, so the transcript
     /// bytes do not depend on this knob.
     pub batch: usize,
+    /// Drift mode (ISSUE 10): exercise the online-learning loop with a
+    /// predict/observe mix carrying an injected mid-run workload shift
+    /// (see the module docs). Forces one lockstep connection so arrival
+    /// order equals `seq` order; `connections`/`pipeline`/`batch` are
+    /// ignored.
+    pub drift: bool,
 }
 
 impl Default for LoadgenOptions {
@@ -74,6 +95,7 @@ impl Default for LoadgenOptions {
             seed: 0xEC0_97,
             pipeline: 1,
             batch: 0,
+            drift: false,
         }
     }
 }
@@ -100,7 +122,8 @@ pub struct LoadgenOutcome {
     pub errors: usize,
     /// 503-style responses (load shedding observed).
     pub shed: usize,
-    /// Requests per kind, in mix order: predict, optimize, registry.
+    /// Requests per kind, in mix order: predict, optimize, registry
+    /// (drift mode: predict, observe).
     pub by_kind: Vec<(String, usize)>,
     /// Wall time of the run, seconds.
     pub elapsed_s: f64,
@@ -238,8 +261,146 @@ fn gen_request(seed: u64, i: usize, targets: &[Target]) -> Request {
     }
 }
 
+/// Drift-mode injected workload shift: the second half of the run
+/// reports observed times stretched by this factor, stepping the
+/// prediction-residual mean well past the daemon's CUSUM threshold.
+pub const DRIFT_SHIFT: f64 = 1.5;
+
+/// Drift-mode measurement noise (seconds, 1σ): small enough that the
+/// detector's calibrated σ makes the injected shift an unmistakable
+/// step, large enough that every reported sample is distinct.
+const DRIFT_NOISE_S: f64 = 0.05;
+
+/// One lockstep request/response exchange.
+fn lockstep(
+    stream: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    line: &str,
+) -> Result<String> {
+    stream.write_all(line.as_bytes())?;
+    stream.write_all(b"\n")?;
+    read_response_line(reader)
+}
+
+/// Drift-mode run (see the module docs): predict/observe pairs over the
+/// first listed model on one lockstep connection, with the shift
+/// injected at the halfway index.
+fn run_drift(opts: &LoadgenOptions) -> Result<LoadgenOutcome> {
+    let targets = fetch_targets(&opts.addr)?;
+    let Some(t) = targets.first() else {
+        return Err(Error::Data(
+            "daemon registry lists no usable models — populate the model cache first \
+             (e.g. `ecopt replay --quick --cache-dir DIR`, then `ecopt serve --cache-dir DIR`)"
+                .into(),
+        ));
+    };
+    let n = opts.requests.max(2);
+    let clock = SystemClock::new();
+    let started = clock.now_ns();
+    let mut stream = TcpStream::connect(&opts.addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut transcript = String::with_capacity(n * 320);
+    transcript.push_str(&format!(
+        "# ecopt loadgen transcript v1 | drift | seed {} | requests {} | connections 1\n",
+        opts.seed, n
+    ));
+    let mut ok = 0;
+    let mut errors = 0;
+    let mut latencies: Vec<u64> = Vec::with_capacity(n * 2);
+    let mut kind_counts = [0usize; 2]; // predict, observe
+    let mut line_no = 0usize;
+    // Observe sequence numbers must be gap-free per model key or the
+    // daemon's reorder buffer would park everything after a hole, so
+    // this counter only advances when an observe is actually sent.
+    let mut seq = 0u64;
+    for i in 0..n {
+        let mut rng = Rng::for_stream(opts.seed ^ SERVICE_SEED_DOMAIN, i as u64);
+        let f_mhz = t.freqs[rng.below(t.freqs.len())];
+        let cores = 1 + rng.below(t.max_cores);
+        let input = 1 + rng.below(3) as u32;
+        let predict = Request::Predict {
+            app: t.app.clone(),
+            arch: Some(t.arch.clone()),
+            tag: None,
+            f_mhz,
+            cores,
+            input,
+        };
+        let pline = predict.to_line()?;
+        let sent = clock.now_ns();
+        let presp = lockstep(&mut stream, &mut reader, &pline)?;
+        latencies.push(clock.now_ns().saturating_sub(sent) / 1_000);
+        transcript.push_str(&format!("{line_no:06} > {pline}\n{line_no:06} < {presp}\n"));
+        line_no += 1;
+        kind_counts[0] += 1;
+        if line_is_ok(&presp) {
+            ok += 1;
+        } else {
+            errors += 1;
+            continue;
+        }
+        let pj = Json::parse(&presp)?;
+        let pred_time_s = pj.get("pred_time_s")?.as_f64()?;
+        let power_w = pj.get("power_w")?.as_f64()?;
+        // The "measured" execution tracks the daemon's own prediction
+        // plus noise until the halfway point, then stretches: a clean
+        // residual step against whatever model is currently serving.
+        let factor = if i >= n / 2 { DRIFT_SHIFT } else { 1.0 };
+        let time_s = (pred_time_s * factor + rng.gaussian() * DRIFT_NOISE_S).max(1e-3);
+        let observe = Request::Observe {
+            app: t.app.clone(),
+            arch: Some(t.arch.clone()),
+            tag: None,
+            f_mhz,
+            cores,
+            input,
+            load: rng.f64(),
+            power_w: power_w.max(0.0),
+            time_s,
+            seq,
+        };
+        seq += 1;
+        let oline = observe.to_line()?;
+        let sent = clock.now_ns();
+        let oresp = lockstep(&mut stream, &mut reader, &oline)?;
+        latencies.push(clock.now_ns().saturating_sub(sent) / 1_000);
+        transcript.push_str(&format!("{line_no:06} > {oline}\n{line_no:06} < {oresp}\n"));
+        line_no += 1;
+        kind_counts[1] += 1;
+        if line_is_ok(&oresp) {
+            ok += 1;
+        } else {
+            errors += 1;
+        }
+    }
+    let elapsed_s = clock.now_ns().saturating_sub(started) as f64 / 1e9;
+    latencies.sort_unstable();
+    let pct = |p: f64| crate::util::stats::percentile(&latencies, p);
+    Ok(LoadgenOutcome {
+        transcript,
+        requests: line_no,
+        ok,
+        errors,
+        shed: 0,
+        by_kind: vec![
+            ("predict".to_string(), kind_counts[0]),
+            ("observe".to_string(), kind_counts[1]),
+        ],
+        elapsed_s,
+        rps: line_no as f64 / elapsed_s.max(1e-9),
+        p50_us: pct(50.0)?,
+        p95_us: pct(95.0)?,
+        p99_us: pct(99.0)?,
+        max_us: pct(100.0)?,
+    })
+}
+
 /// Run the generator against a live daemon.
 pub fn run_loadgen(opts: &LoadgenOptions) -> Result<LoadgenOutcome> {
+    if opts.drift {
+        return run_drift(opts);
+    }
     let targets = fetch_targets(&opts.addr)?;
     if targets.is_empty() {
         return Err(Error::Data(

@@ -26,16 +26,23 @@
 //!   a seeded request mix over the registry's models under
 //!   [`SERVICE_SEED_DOMAIN`], producing a byte-reproducible transcript
 //!   plus a requests/sec + tail-latency report
-//!   (`benches/service_throughput.rs` pins the baseline).
+//!   (`benches/service_throughput.rs` pins the baseline);
+//! * [`online`] — the online-learning loop (ISSUE 10): per-model-key
+//!   deterministic reservoirs fed by `kind:"observe"` requests, a
+//!   one-sided CUSUM drift detector over prediction residuals, and
+//!   warm-started refit bookkeeping.
 //!
-//! See `DESIGN.md` §9 for the full architecture.
+//! See `DESIGN.md` §9 for the full architecture and §15 for the
+//! online-learning loop.
 
 pub mod loadgen;
+pub mod online;
 pub mod protocol;
 pub mod registry;
 pub mod server;
 
 pub use loadgen::{run_loadgen, LoadgenOptions, LoadgenOutcome};
+pub use online::{CusumDetector, ObservedSample, OnlineConfig, OnlineManager, Reservoir};
 pub use protocol::{Request, PROTOCOL_VERSION};
 pub use registry::{ModelRegistry, RegistryStats};
 pub use server::{EcoptServer, ServerHandle, ServiceReport};
@@ -74,6 +81,12 @@ pub struct ServiceConfig {
     /// On-disk model cache to warm-load from and write trained models
     /// back through; `None` serves from memory only.
     pub cache_dir: Option<PathBuf>,
+    /// Online-learning loop knobs (reservoir capacity, CUSUM thresholds,
+    /// ingest seed). The manager itself is created lazily on the first
+    /// `kind:"observe"` request, so a daemon that never sees observe
+    /// traffic registers no `online.*` instruments and keeps its
+    /// `kind:"metrics"` responses byte-identical to pre-ISSUE-10 builds.
+    pub online: OnlineConfig,
 }
 
 impl Default for ServiceConfig {
@@ -86,6 +99,7 @@ impl Default for ServiceConfig {
             shards: 8,
             byte_budget: 64 * 1024 * 1024,
             cache_dir: None,
+            online: OnlineConfig::default(),
         }
     }
 }

@@ -1,0 +1,696 @@
+//! Online learning: deterministic reservoirs, residual drift detection,
+//! and refit bookkeeping (ISSUE 10).
+//!
+//! The fleet streams `(config, load, power, exec_time)` observations at
+//! the advisor (`kind:"observe"` requests, or the governor-side hook in
+//! `governors::ecopt`). Per model key this module maintains:
+//!
+//! 1. a **deterministic reservoir** — a bottom-k-by-priority sample of
+//!    the observed stream under [`ONLINE_SEED_DOMAIN`]. Each sample's
+//!    retention priority is a pure function of the *sample content* and
+//!    the key's split seed, never of arrival order, so the same sample
+//!    multiset retains the same reservoir no matter which connection —
+//!    or thread — delivered it, in `O(capacity)` memory;
+//! 2. a **one-sided CUSUM** over prediction residuals (observed minus
+//!    predicted execution time), standardized against a calibration
+//!    window and thresholded in residual-σ units. Residuals are applied
+//!    in client sequence order (a bounded reorder buffer absorbs
+//!    cross-connection interleaving), so the detector's state after a
+//!    sample set is delivered is byte-identical at any ingest thread
+//!    count;
+//! 3. **refit bookkeeping** — when the CUSUM trips, the server re-fits
+//!    the SVR warm-started from the cached support set plus the
+//!    reservoir (`SvrModel::refit_warm`) and publishes the bumped model
+//!    version; [`OnlineManager::note_refit`] then re-calibrates the
+//!    detector against the fresh model.
+//!
+//! State is exposed through `obs::metrics` (`online.samples`,
+//! `online.residual_cusum` in milli-σ, `online.drift_events`,
+//! `online.refits`), so `kind:"metrics"` reports the loop's health live.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::config::Mhz;
+use crate::obs::metrics::{global, Counter, Gauge};
+use crate::svr::TrainSample;
+use crate::util::rng::Rng;
+use crate::util::seed_domains::ONLINE_SEED_DOMAIN;
+
+/// One observed execution of a configuration, as streamed by the fleet.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ObservedSample {
+    /// Frequency the run executed at, MHz.
+    pub f_mhz: Mhz,
+    /// Active cores the run executed on.
+    pub cores: usize,
+    /// Input size of the run.
+    pub input: u32,
+    /// Mean core load observed during the run, `[0, 1]`.
+    pub load: f64,
+    /// Mean power observed during the run, watts.
+    pub power_w: f64,
+    /// Measured execution time, seconds.
+    pub time_s: f64,
+}
+
+impl ObservedSample {
+    /// The training-sample view of this observation (what a refit
+    /// consumes): the measured time becomes the regression target.
+    pub fn to_train_sample(&self) -> TrainSample {
+        TrainSample {
+            f_mhz: self.f_mhz,
+            cores: self.cores,
+            input: self.input,
+            time_s: self.time_s,
+        }
+    }
+
+    /// All float fields finite, time positive, load in `[0, 1]`.
+    pub fn is_valid(&self) -> bool {
+        self.load.is_finite()
+            && (0.0..=1.0).contains(&self.load)
+            && self.power_w.is_finite()
+            && self.power_w >= 0.0
+            && self.time_s.is_finite()
+            && self.time_s > 0.0
+    }
+}
+
+/// FNV-1a over a byte slice — the stream-id hash shared by key labels
+/// and sample contents (same scheme as `persist::config_digest`, kept
+/// private here because the output is a raw `u64`, not hex).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// The [`ONLINE_SEED_DOMAIN`] stream id of a model-key label.
+pub fn key_stream(label: &str) -> u64 {
+    fnv1a(label.as_bytes())
+}
+
+/// Content hash of a sample: a pure function of its field bit patterns
+/// (exact float bits — two samples hash equal iff they are the same
+/// observation), independent of when or where it arrived.
+fn sample_hash(s: &ObservedSample) -> u64 {
+    let mut bytes = Vec::with_capacity(48);
+    bytes.extend_from_slice(&(s.f_mhz as u64).to_le_bytes());
+    bytes.extend_from_slice(&(s.cores as u64).to_le_bytes());
+    bytes.extend_from_slice(&(s.input as u64).to_le_bytes());
+    bytes.extend_from_slice(&s.load.to_bits().to_le_bytes());
+    bytes.extend_from_slice(&s.power_w.to_bits().to_le_bytes());
+    bytes.extend_from_slice(&s.time_s.to_bits().to_le_bytes());
+    fnv1a(&bytes)
+}
+
+// ---------------------------------------------------------------------------
+// Reservoir
+// ---------------------------------------------------------------------------
+
+/// A deterministic bottom-k reservoir over observed samples.
+///
+/// Instead of classic reservoir sampling (whose retained set depends on
+/// arrival order), each sample gets a **priority**
+/// `split_seed(reservoir_seed, sample_hash)` and the reservoir keeps the
+/// `capacity` samples with the smallest `(priority, hash)` — a pure
+/// function of the sample *set*, so any arrival order over any number of
+/// connections retains identical bytes. Duplicate observations collapse
+/// onto one slot (same content ⇒ same priority key). Memory is
+/// `O(capacity)`: one `BTreeMap` truncated on every insert.
+#[derive(Debug)]
+pub struct Reservoir {
+    seed: u64,
+    capacity: usize,
+    slots: BTreeMap<(u64, u64), ObservedSample>,
+}
+
+impl Reservoir {
+    /// An empty reservoir drawing priorities from `seed` (already
+    /// domain- and key-split by the caller), holding at most
+    /// `capacity` samples (at least 1).
+    pub fn new(seed: u64, capacity: usize) -> Reservoir {
+        Reservoir {
+            seed,
+            capacity: capacity.max(1),
+            slots: BTreeMap::new(),
+        }
+    }
+
+    /// Offer one sample; returns whether it is retained right now
+    /// (it may still be evicted by later lower-priority arrivals).
+    pub fn ingest(&mut self, s: ObservedSample) -> bool {
+        let h = sample_hash(&s);
+        let key = (Rng::split_seed(self.seed, h), h);
+        if self.slots.len() >= self.capacity && !self.slots.contains_key(&key) {
+            // Full: only admit below the current worst, then evict it.
+            match self.slots.keys().next_back().copied() {
+                Some(worst) if key < worst => {
+                    self.slots.insert(key, s);
+                    self.slots.remove(&worst);
+                    true
+                }
+                _ => false,
+            }
+        } else {
+            self.slots.insert(key, s);
+            true
+        }
+    }
+
+    /// Retained samples in priority order (deterministic).
+    pub fn samples(&self) -> Vec<ObservedSample> {
+        self.slots.values().copied().collect()
+    }
+
+    /// Number of retained samples.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Whether nothing has been retained yet.
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Maximum number of retained samples.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CUSUM drift detector
+// ---------------------------------------------------------------------------
+
+/// A one-sided CUSUM over standardized prediction residuals.
+///
+/// The first `min_samples` residuals form a **calibration window**:
+/// their mean/σ (Welford) define the null distribution. After
+/// calibration each residual is standardized,
+/// `z = (r - mean₀) / σ₀`, and the statistic advances as
+/// `S ← max(0, S + z - k)` with allowance `k = drift_sigma`; the
+/// detector trips when `S ≥ threshold_sigma`. Both knobs are in σ
+/// units, so the same thresholds mean the same thing for a model whose
+/// residuals are milliseconds and one whose residuals are minutes.
+/// `reset` (after a refit) discards everything and re-calibrates
+/// against the fresh model's residuals.
+#[derive(Debug, Clone)]
+pub struct CusumDetector {
+    threshold_sigma: f64,
+    drift_sigma: f64,
+    min_samples: u64,
+    count: u64,
+    mean: f64,
+    m2: f64,
+    stat: f64,
+    trips: u64,
+}
+
+impl CusumDetector {
+    /// A fresh detector: trip at `threshold_sigma`, allowance
+    /// `drift_sigma`, calibrating over the first `min_samples`
+    /// residuals (at least 2, for a defined variance).
+    pub fn new(threshold_sigma: f64, drift_sigma: f64, min_samples: usize) -> CusumDetector {
+        CusumDetector {
+            threshold_sigma: threshold_sigma.max(f64::MIN_POSITIVE),
+            drift_sigma: drift_sigma.max(0.0),
+            min_samples: (min_samples.max(2)) as u64,
+            count: 0,
+            mean: 0.0,
+            m2: 0.0,
+            stat: 0.0,
+            trips: 0,
+        }
+    }
+
+    /// Feed one residual; returns `true` when this observation trips
+    /// the detector (the statistic stays tripped until [`reset`]).
+    ///
+    /// [`reset`]: CusumDetector::reset
+    pub fn observe(&mut self, residual: f64) -> bool {
+        if !residual.is_finite() {
+            return false;
+        }
+        if self.count < self.min_samples {
+            // Calibration window: learn the null mean/σ (Welford).
+            self.count += 1;
+            let delta = residual - self.mean;
+            self.mean += delta / self.count as f64;
+            self.m2 += delta * (residual - self.mean);
+            return false;
+        }
+        self.count += 1;
+        let var = self.m2 / (self.min_samples - 1) as f64;
+        // σ floor: a perfectly-fitting calibration window (all-zero
+        // residuals) must not divide by zero — any later deviation is
+        // then standardized against a tiny scale and trips immediately,
+        // which is the right answer for a model that "never missed".
+        let sigma = var.max(0.0).sqrt().max(1e-9);
+        let z = (residual - self.mean) / sigma;
+        self.stat = (self.stat + z - self.drift_sigma).max(0.0);
+        if self.stat >= self.threshold_sigma {
+            self.trips += 1;
+            return true;
+        }
+        false
+    }
+
+    /// Discard all state and re-calibrate (called after a refit: the
+    /// fresh model defines a fresh null distribution). The lifetime
+    /// trip count survives.
+    pub fn reset(&mut self) {
+        self.count = 0;
+        self.mean = 0.0;
+        self.m2 = 0.0;
+        self.stat = 0.0;
+    }
+
+    /// Current statistic, in σ units.
+    pub fn stat(&self) -> f64 {
+        self.stat
+    }
+
+    /// Residuals observed since the last reset (calibration included).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Lifetime trip count (survives resets).
+    pub fn trips(&self) -> u64 {
+        self.trips
+    }
+
+    /// Whether the calibration window is complete.
+    pub fn calibrated(&self) -> bool {
+        self.count >= self.min_samples
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-key state + manager
+// ---------------------------------------------------------------------------
+
+/// Tuning knobs of the online-learning loop.
+#[derive(Debug, Clone)]
+pub struct OnlineConfig {
+    /// Per-key reservoir capacity (samples retained for refits).
+    pub capacity: usize,
+    /// CUSUM trip threshold, residual-σ units.
+    pub threshold_sigma: f64,
+    /// CUSUM allowance (per-sample drift tolerated), residual-σ units.
+    pub drift_sigma: f64,
+    /// Calibration-window length before detection starts.
+    pub min_samples: usize,
+    /// Reorder-buffer bound per key. When out-of-order arrivals exceed
+    /// it the gap is skipped (counted per key); determinism holds
+    /// whenever delivery completes within the bound.
+    pub max_pending: usize,
+    /// Base seed the per-key reservoir seeds are split from (under
+    /// [`ONLINE_SEED_DOMAIN`]).
+    pub seed: u64,
+}
+
+impl Default for OnlineConfig {
+    fn default() -> OnlineConfig {
+        OnlineConfig {
+            capacity: 64,
+            threshold_sigma: 8.0,
+            drift_sigma: 1.0,
+            min_samples: 16,
+            max_pending: 65_536,
+            seed: 0xEC0_97,
+        }
+    }
+}
+
+/// One model key's online state.
+#[derive(Debug)]
+struct KeyState {
+    reservoir: Reservoir,
+    cusum: CusumDetector,
+    /// Next client sequence number the detector will apply.
+    next_seq: u64,
+    /// Out-of-order arrivals parked until their turn: seq → (sample,
+    /// residual at arrival).
+    pending: BTreeMap<u64, (ObservedSample, f64)>,
+    /// Duplicate-seq arrivals ignored (idempotent delivery).
+    duplicates: u64,
+    /// Sequence gaps skipped on reorder-buffer overflow.
+    gaps: u64,
+    /// Samples applied (reservoir + detector) so far.
+    applied: u64,
+}
+
+/// What one ingest call did (all fields are per-key totals, not
+/// per-connection views — callers must not echo order-dependent fields
+/// onto the wire).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IngestOutcome {
+    /// Samples applied to the reservoir/detector by this call (the
+    /// offered sample plus any pending ones it unblocked).
+    pub applied: u64,
+    /// Whether the CUSUM tripped during this call — the caller should
+    /// refit and then [`OnlineManager::note_refit`].
+    pub tripped: bool,
+}
+
+/// The service-wide online-learning state: per-model-key reservoirs and
+/// drift detectors behind one lock, with `online.*` instruments in the
+/// process-wide metrics registry.
+#[derive(Debug)]
+pub struct OnlineManager {
+    cfg: OnlineConfig,
+    keys: Mutex<BTreeMap<String, KeyState>>,
+    samples: Arc<Counter>,
+    drift_events: Arc<Counter>,
+    refits: Arc<Counter>,
+    cusum_milli_sigma: Arc<Gauge>,
+}
+
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl OnlineManager {
+    /// A manager with the given knobs, instruments registered in
+    /// [`global`] (`online.samples/residual_cusum/drift_events/refits`).
+    pub fn new(cfg: OnlineConfig) -> OnlineManager {
+        let m = global();
+        OnlineManager {
+            cfg,
+            keys: Mutex::new(BTreeMap::new()),
+            samples: m.counter("online.samples"),
+            drift_events: m.counter("online.drift_events"),
+            refits: m.counter("online.refits"),
+            cusum_milli_sigma: m.gauge("online.residual_cusum"),
+        }
+    }
+
+    /// The manager's knobs.
+    pub fn config(&self) -> &OnlineConfig {
+        &self.cfg
+    }
+
+    /// Ingest one observation for model-key `label` with client
+    /// sequence number `seq` and its prediction residual (observed
+    /// minus predicted seconds, computed by the caller against the
+    /// model current at arrival).
+    ///
+    /// The sample is parked until every smaller `seq` has arrived, then
+    /// the contiguous run is applied in sequence order — so the
+    /// reservoir *and* detector state after a sample set is delivered
+    /// do not depend on arrival interleaving. Duplicate `seq`s are
+    /// ignored (idempotent retries).
+    pub fn ingest(
+        &self,
+        label: &str,
+        seq: u64,
+        sample: ObservedSample,
+        residual: f64,
+    ) -> IngestOutcome {
+        let mut keys = relock(&self.keys);
+        let state = keys.entry(label.to_string()).or_insert_with(|| KeyState {
+            reservoir: Reservoir::new(
+                Rng::split_seed(self.cfg.seed ^ ONLINE_SEED_DOMAIN, key_stream(label)),
+                self.cfg.capacity,
+            ),
+            cusum: CusumDetector::new(
+                self.cfg.threshold_sigma,
+                self.cfg.drift_sigma,
+                self.cfg.min_samples,
+            ),
+            next_seq: 0,
+            pending: BTreeMap::new(),
+            duplicates: 0,
+            gaps: 0,
+            applied: 0,
+        });
+        if seq < state.next_seq || state.pending.contains_key(&seq) {
+            state.duplicates += 1;
+            return IngestOutcome {
+                applied: 0,
+                tripped: false,
+            };
+        }
+        state.pending.insert(seq, (sample, residual));
+        // Overflowing reorder buffer: skip to the earliest parked seq so
+        // ingest stays live even if a client abandoned a gap.
+        if state.pending.len() > self.cfg.max_pending {
+            if let Some(&first) = state.pending.keys().next() {
+                if first > state.next_seq {
+                    state.gaps += 1;
+                    state.next_seq = first;
+                }
+            }
+        }
+        let mut outcome = IngestOutcome {
+            applied: 0,
+            tripped: false,
+        };
+        while let Some((s, r)) = state.pending.remove(&state.next_seq) {
+            state.next_seq += 1;
+            state.applied += 1;
+            outcome.applied += 1;
+            state.reservoir.ingest(s);
+            if state.cusum.observe(r) {
+                outcome.tripped = true;
+            }
+        }
+        if outcome.applied > 0 {
+            self.samples.add(outcome.applied);
+            self.cusum_milli_sigma
+                .set((state.cusum.stat() * 1000.0).round() as u64);
+        }
+        if outcome.tripped {
+            self.drift_events.inc();
+        }
+        outcome
+    }
+
+    /// The retained reservoir for `label`, in priority order (empty for
+    /// an unknown key).
+    pub fn reservoir_samples(&self, label: &str) -> Vec<ObservedSample> {
+        relock(&self.keys)
+            .get(label)
+            .map(|s| s.reservoir.samples())
+            .unwrap_or_default()
+    }
+
+    /// Record a completed refit for `label`: counts it and resets the
+    /// key's detector so it re-calibrates against the fresh model.
+    pub fn note_refit(&self, label: &str) {
+        if let Some(state) = relock(&self.keys).get_mut(label) {
+            state.cusum.reset();
+        }
+        self.refits.inc();
+        self.cusum_milli_sigma.set(0);
+    }
+
+    /// Reset `label`'s detector WITHOUT counting a refit (drift trip
+    /// that could not be acted on, e.g. too few reservoir samples).
+    pub fn reset_detector(&self, label: &str) {
+        if let Some(state) = relock(&self.keys).get_mut(label) {
+            state.cusum.reset();
+        }
+    }
+
+    /// A deterministic rendering of `label`'s full online state — the
+    /// byte-identity pin of the ingest-thread-count tests. Floats render
+    /// through `{:?}` (exact round-trip), maps in key order.
+    pub fn state_digest(&self, label: &str) -> String {
+        let keys = relock(&self.keys);
+        let Some(s) = keys.get(label) else {
+            return "absent".to_string();
+        };
+        let mut out = format!(
+            "next_seq={} applied={} duplicates={} gaps={} pending={} cusum[count={} mean={:?} m2={:?} stat={:?} trips={}] reservoir[",
+            s.next_seq,
+            s.applied,
+            s.duplicates,
+            s.gaps,
+            s.pending.len(),
+            s.cusum.count(),
+            s.cusum.mean,
+            s.cusum.m2,
+            s.cusum.stat(),
+            s.cusum.trips(),
+        );
+        for r in s.reservoir.samples() {
+            out.push_str(&format!(
+                "({},{},{},{:?},{:?},{:?})",
+                r.f_mhz, r.cores, r.input, r.load, r.power_w, r.time_s
+            ));
+        }
+        out.push(']');
+        out
+    }
+
+    /// Per-key summary rows for status surfaces: `(label, applied,
+    /// reservoir_len, cusum_stat, trips)`, in key order.
+    pub fn summary(&self) -> Vec<(String, u64, usize, f64, u64)> {
+        relock(&self.keys)
+            .iter()
+            .map(|(k, s)| {
+                (
+                    k.clone(),
+                    s.applied,
+                    s.reservoir.len(),
+                    s.cusum.stat(),
+                    s.cusum.trips(),
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(i: u64, t: f64) -> ObservedSample {
+        ObservedSample {
+            f_mhz: 1200 + ((i % 8) as u32) * 100,
+            cores: 1 + (i % 16) as usize,
+            input: 1 + (i % 3) as u32,
+            load: 0.5,
+            power_w: 200.0,
+            time_s: t,
+        }
+    }
+
+    #[test]
+    fn reservoir_is_arrival_order_independent() {
+        let mut fwd = Reservoir::new(9, 8);
+        let mut rev = Reservoir::new(9, 8);
+        let xs: Vec<ObservedSample> = (0..64).map(|i| sample(i, 10.0 + i as f64)).collect();
+        for s in &xs {
+            fwd.ingest(*s);
+        }
+        for s in xs.iter().rev() {
+            rev.ingest(*s);
+        }
+        assert_eq!(fwd.samples(), rev.samples());
+        assert_eq!(fwd.len(), 8);
+    }
+
+    #[test]
+    fn reservoir_bounds_memory_and_dedupes() {
+        let mut r = Reservoir::new(7, 4);
+        for i in 0..1000 {
+            r.ingest(sample(i, 1.0 + i as f64));
+        }
+        assert_eq!(r.len(), 4, "reservoir exceeded its capacity");
+        // Duplicates collapse: re-offering the retained set changes nothing.
+        let before = r.samples();
+        for s in &before {
+            r.ingest(*s);
+        }
+        assert_eq!(r.samples(), before);
+    }
+
+    #[test]
+    fn different_seeds_retain_different_sets() {
+        let xs: Vec<ObservedSample> = (0..64).map(|i| sample(i, 5.0 + i as f64)).collect();
+        let mut a = Reservoir::new(1, 8);
+        let mut b = Reservoir::new(2, 8);
+        for s in &xs {
+            a.ingest(*s);
+            b.ingest(*s);
+        }
+        assert_ne!(a.samples(), b.samples(), "split seeds must decorrelate");
+    }
+
+    #[test]
+    fn cusum_stays_quiet_on_stationary_and_trips_on_step() {
+        let mut d = CusumDetector::new(8.0, 1.0, 16);
+        let mut rng = Rng::seed_from_u64(5);
+        for _ in 0..200 {
+            assert!(!d.observe(rng.gaussian()), "false alarm on stationary noise");
+        }
+        assert!(d.calibrated());
+        // A 10σ step shift must trip within a few samples.
+        let mut tripped_at = None;
+        for i in 0..16 {
+            if d.observe(10.0 + rng.gaussian()) {
+                tripped_at = Some(i);
+                break;
+            }
+        }
+        let at = tripped_at.expect("10σ shift never tripped");
+        assert!(at < 4, "detection took {at} samples");
+        assert_eq!(d.trips(), 1);
+        d.reset();
+        assert_eq!(d.stat(), 0.0);
+        assert!(!d.calibrated());
+        assert_eq!(d.trips(), 1, "lifetime trips survive reset");
+    }
+
+    #[test]
+    fn zero_variance_calibration_does_not_divide_by_zero() {
+        let mut d = CusumDetector::new(8.0, 1.0, 4);
+        for _ in 0..4 {
+            d.observe(1.0);
+        }
+        // Identical residuals keep the statistic at zero...
+        assert!(!d.observe(1.0));
+        assert_eq!(d.stat(), 0.0);
+        // ...and any deviation from a "never missed" model trips fast.
+        assert!(d.observe(1.5));
+    }
+
+    #[test]
+    fn manager_applies_in_seq_order_across_interleavings() {
+        let a = OnlineManager::new(OnlineConfig::default());
+        let b = OnlineManager::new(OnlineConfig::default());
+        let n = 64u64;
+        let xs: Vec<(u64, ObservedSample, f64)> = (0..n)
+            .map(|i| (i, sample(i, 20.0 + i as f64), (i as f64).sin()))
+            .collect();
+        for (seq, s, r) in &xs {
+            a.ingest("k", *seq, *s, *r);
+        }
+        // Reversed arrival: everything parks until seq 0 lands last.
+        for (seq, s, r) in xs.iter().rev() {
+            b.ingest("k", *seq, *s, *r);
+        }
+        assert_eq!(a.state_digest("k"), b.state_digest("k"));
+        // Duplicate delivery is idempotent.
+        let before = a.state_digest("k");
+        a.ingest("k", 3, xs[3].1, xs[3].2);
+        assert_eq!(a.state_digest("k"), before);
+    }
+
+    #[test]
+    fn manager_reports_trip_and_refit_resets() {
+        let mgr = OnlineManager::new(OnlineConfig {
+            min_samples: 4,
+            threshold_sigma: 4.0,
+            drift_sigma: 0.5,
+            ..Default::default()
+        });
+        let mut rng = Rng::seed_from_u64(11);
+        let mut seq = 0u64;
+        for _ in 0..32 {
+            let out = mgr.ingest("m", seq, sample(seq, 30.0), rng.gaussian() * 0.1);
+            assert!(!out.tripped);
+            seq += 1;
+        }
+        let mut tripped = false;
+        for _ in 0..16 {
+            if mgr.ingest("m", seq, sample(seq, 90.0), 5.0).tripped {
+                tripped = true;
+                break;
+            }
+            seq += 1;
+        }
+        assert!(tripped, "injected shift never tripped the manager");
+        mgr.note_refit("m");
+        let digest = mgr.state_digest("m");
+        assert!(digest.contains("stat=0.0"), "reset detector: {digest}");
+    }
+}

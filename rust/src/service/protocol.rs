@@ -20,6 +20,7 @@
 //! |------------|-------------------------------------------------------|
 //! | `predict`  | app, [arch], [tag], f_mhz, cores, input               |
 //! | `optimize` | app, [arch], [tag], input, [constraints], [objective] |
+//! | `observe`  | app, [arch], [tag], f_mhz, cores, input, load, power_w, time_s, seq |
 //! | `train`    | app, [arch] — async; responds with a job id           |
 //! | `status`   | job                                                   |
 //! | `registry` | — (list loaded models)                                |
@@ -35,6 +36,18 @@
 //! byte-identical to the pre-frontier wire behaviour (pinned by
 //! `tests/service.rs`); a non-energy objective is echoed back in the
 //! response so transcripts stay self-describing.
+//!
+//! Since ISSUE 10, fleet members stream measured executions back with
+//! `kind:"observe"` — the online-learning ingest path (`service::online`).
+//! `seq` is the sender's per-model monotone sequence number; the daemon
+//! applies samples in `seq` order so detector state is independent of
+//! connection interleaving. The addition is protocol-v1-additive:
+//! absent observe traffic, every existing kind's bytes are unchanged
+//! (the only delta is the new `observe` key inside `stats`' `by_kind`
+//! object — the same additive precedent as ISSUE 9's `metrics`/`trace`
+//! keys). `predict`/`optimize` responses gain a `model_version` field
+//! only once a refit has actually bumped the model, so pre-refit
+//! transcripts remain byte-identical to pre-ISSUE-10 daemons.
 //!
 //! # Response batching (ISSUE 6, negotiated)
 //!
@@ -116,6 +129,35 @@ pub enum Request {
         /// top-level `"objective"` wire field — see the module docs).
         constraints: Constraints,
     },
+    /// Stream one observed execution into the online-learning loop
+    /// (ISSUE 10): the daemon computes the prediction residual, feeds
+    /// the per-key reservoir + CUSUM drift detector, and refits on a
+    /// trip.
+    Observe {
+        /// Application the observation belongs to.
+        app: String,
+        /// Architecture the run executed on; None = the daemon's
+        /// configured default architecture.
+        arch: Option<String>,
+        /// Exact input-tag; None = deterministic pick (lowest tag).
+        tag: Option<String>,
+        /// Frequency the run executed at, MHz.
+        f_mhz: Mhz,
+        /// Active cores the run executed on.
+        cores: usize,
+        /// Input size of the run.
+        input: u32,
+        /// Mean core load observed during the run, `[0, 1]`.
+        load: f64,
+        /// Mean power observed during the run, watts (0 = unknown).
+        power_w: f64,
+        /// Measured execution time, seconds.
+        time_s: f64,
+        /// Sender's per-model monotone sequence number: the daemon
+        /// applies observations in `seq` order, so detector state does
+        /// not depend on connection interleaving.
+        seq: u64,
+    },
     /// Run characterization + SVR fit for an app (async; job id).
     Train {
         /// Application to train.
@@ -157,6 +199,7 @@ impl Request {
         match self {
             Request::Predict { .. } => "predict",
             Request::Optimize { .. } => "optimize",
+            Request::Observe { .. } => "observe",
             Request::Train { .. } => "train",
             Request::Status { .. } => "status",
             Request::Registry => "registry",
@@ -218,6 +261,33 @@ impl Request {
                 if constraints.objective != Objective::Energy {
                     fields.push(("objective", constraints.objective.to_json()));
                 }
+            }
+            Request::Observe {
+                app,
+                arch,
+                tag,
+                f_mhz,
+                cores,
+                input,
+                load,
+                power_w,
+                time_s,
+                seq,
+            } => {
+                fields.push(("app", Json::Str(app.clone())));
+                if let Some(a) = arch {
+                    fields.push(("arch", Json::Str(a.clone())));
+                }
+                if let Some(t) = tag {
+                    fields.push(("tag", Json::Str(t.clone())));
+                }
+                fields.push(("f_mhz", Json::Num(*f_mhz as f64)));
+                fields.push(("cores", Json::Num(*cores as f64)));
+                fields.push(("input", Json::Num(*input as f64)));
+                fields.push(("load", Json::Num(*load)));
+                fields.push(("power_w", Json::Num(*power_w)));
+                fields.push(("time_s", Json::Num(*time_s)));
+                fields.push(("seq", Json::Num(*seq as f64)));
             }
             Request::Train { app, arch } => {
                 fields.push(("app", Json::Str(app.clone())));
@@ -291,6 +361,18 @@ impl Request {
                     constraints,
                 })
             }
+            "observe" => Ok(Request::Observe {
+                app: j.get("app")?.as_str()?.to_string(),
+                arch: opt_str("arch")?,
+                tag: opt_str("tag")?,
+                f_mhz: j.get("f_mhz")?.as_u32()?,
+                cores: j.get("cores")?.as_usize()?,
+                input: j.get("input")?.as_u32()?,
+                load: j.get("load")?.as_f64()?,
+                power_w: j.get("power_w")?.as_f64()?,
+                time_s: j.get("time_s")?.as_f64()?,
+                seq: j.get("seq")?.as_u64()?,
+            }),
             "train" => Ok(Request::Train {
                 app: j.get("app")?.as_str()?.to_string(),
                 arch: opt_str("arch")?,
@@ -521,6 +603,30 @@ mod tests {
                     ..Default::default()
                 },
             },
+            Request::Observe {
+                app: "swaptions".into(),
+                arch: Some("custom-node".into()),
+                tag: None,
+                f_mhz: 1800,
+                cores: 8,
+                input: 2,
+                load: 0.75,
+                power_w: 212.5,
+                time_s: 14.25,
+                seq: 42,
+            },
+            Request::Observe {
+                app: "raytrace".into(),
+                arch: None,
+                tag: Some("n1#abc".into()),
+                f_mhz: 2200,
+                cores: 32,
+                input: 1,
+                load: 1.0,
+                power_w: 0.0,
+                time_s: 3.5,
+                seq: 0,
+            },
             Request::Train {
                 app: "blackscholes".into(),
                 arch: None,
@@ -559,6 +665,10 @@ mod tests {
         assert!(Request::parse(r#"{"v":1,"kind":"frobnicate"}"#).is_err());
         assert!(Request::parse("not json at all").is_err());
         assert!(Request::parse(r#"{"v":1,"kind":"predict"}"#).is_err(), "missing fields");
+        assert!(
+            Request::parse(r#"{"app":"x","kind":"observe","v":1}"#).is_err(),
+            "observe requires the full sample"
+        );
     }
 
     #[test]

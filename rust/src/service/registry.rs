@@ -22,9 +22,12 @@
 //! pipeline — they share the key scheme).
 //!
 //! **Memoized consults.** `optimize` answers are memoized per
-//! `(entry, input, constraint-set)` under [`crate::energy::Constraints::canonical`]
-//! — the same discipline `EcoptGovernor` applies per regime: the grid
-//! argmin runs once, every later consult is a map hit.
+//! `(entry, model-version, input, constraint-set)` under
+//! [`crate::energy::Constraints::canonical`] — the same discipline
+//! `EcoptGovernor` applies per regime: the grid argmin runs once, every
+//! later consult is a map hit. The model version in the key means a
+//! drift-triggered refit (`publish`) invalidates every pre-refit memo
+//! slot by construction.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -216,13 +219,26 @@ impl ModelRegistry {
 
     /// Insert without touching the disk (warm load / tests).
     fn insert_local(&self, key: ModelKey, model: CachedModel, bytes: u64) -> Arc<ModelEntry> {
+        self.insert_local_with_memo(key, model, bytes, HashMap::new())
+    }
+
+    /// Insert with a pre-seeded consult memo (the refit-publish path
+    /// carries the replaced entry's memo forward — safe because memo
+    /// keys fold the model version).
+    fn insert_local_with_memo(
+        &self,
+        key: ModelKey,
+        model: CachedModel,
+        bytes: u64,
+        memo: HashMap<String, OptimalConfig>,
+    ) -> Arc<ModelEntry> {
         let digest = digest_of(&key);
         let entry = Arc::new(ModelEntry {
             key,
             model,
             bytes,
             last_used: AtomicU64::new(self.tick()),
-            optima: Mutex::new(HashMap::new()),
+            optima: Mutex::new(memo),
         });
         let mut evicted: Vec<ModelKey> = Vec::new();
         {
@@ -285,6 +301,34 @@ impl ModelRegistry {
             None => model.serialized_len(&key)? as u64,
         };
         Ok(self.insert_local(key, model, bytes))
+    }
+
+    /// Publish a refit bundle (ISSUE 10): write-through to the on-disk
+    /// cache first (when configured), then atomically replace the
+    /// resident entry under the same key — every shard lookup and every
+    /// `resolve` issued after this returns sees the new bytes, so
+    /// `predict`/`optimize` flip to the bumped version in one step.
+    ///
+    /// The replaced entry's consult memo is carried into the new entry.
+    /// That is safe *because* memo keys fold the model version
+    /// ([`ModelRegistry::consult`]): a version-bumped refit can never
+    /// hit a pre-refit argmin, while a same-version republish (say, a
+    /// re-admit of identical bytes) keeps its warm consult state.
+    pub fn publish(&self, key: ModelKey, model: CachedModel) -> Result<Arc<ModelEntry>> {
+        let bytes = match &self.disk {
+            Some(disk) => disk.put(&key, &model)?,
+            None => model.serialized_len(&key)? as u64,
+        };
+        let digest = digest_of(&key);
+        let idx = self.shard_index(&digest);
+        let memo = {
+            let s = self.shards[idx].read().expect("registry shard poisoned");
+            s.entries
+                .get(&digest)
+                .map(|e| e.optima.lock().expect("optima memo poisoned").clone())
+                .unwrap_or_default()
+        };
+        Ok(self.insert_local_with_memo(key, model, bytes, memo))
     }
 
     /// Re-admit an entry that is on disk but not resident (evicted, or
@@ -389,7 +433,14 @@ impl ModelRegistry {
         constraints: &Constraints,
     ) -> Result<OptimalConfig> {
         self.consults.inc();
-        let memo_key = format!("n{input}|{}", constraints.canonical());
+        // The model version is part of the memo key (ISSUE 10 bugfix):
+        // the memo map can outlive a refit-publish under the same model
+        // key, and a bumped model must never serve a pre-refit argmin.
+        let memo_key = format!(
+            "v{}|n{input}|{}",
+            entry.model.version.unwrap_or(0),
+            constraints.canonical()
+        );
         if let Some(hit) = entry
             .optima
             .lock()
@@ -456,6 +507,7 @@ mod tests {
             cv: None,
             test_mae: None,
             test_pae_pct: None,
+            version: None,
         }
     }
 
@@ -555,6 +607,39 @@ mod tests {
         let e2 = reg.consult(&entry, &arch, &grid, 1, &c3).unwrap();
         assert_eq!(e2.pred_energy_j, e.pred_energy_j);
         assert_eq!(reg.stats().consult_memo_hits, 2);
+    }
+
+    #[test]
+    fn publish_carries_memo_and_version_invalidates_it() {
+        let reg = ModelRegistry::new(2, 1 << 20, None);
+        reg.insert(key("app"), toy_bundle(60.0)).unwrap();
+        let arch = crate::arch::ArchProfile::from_node_spec(&crate::config::NodeSpec::default());
+        let grid =
+            crate::energy::config_grid_arch(&crate::config::CampaignSpec::default(), &arch);
+        let c = Constraints::default();
+        let e0 = reg.get(&key("app")).unwrap();
+        let a = reg.consult(&e0, &arch, &grid, 1, &c).unwrap();
+
+        // Refit-publish a bundle whose SVR differs and whose version is
+        // bumped: the next consult must re-run the argmin, not serve the
+        // carried memo slot.
+        let mut bumped = toy_bundle(50.0);
+        bumped.version = Some(1);
+        reg.publish(key("app"), bumped).unwrap();
+        let e1 = reg.get(&key("app")).unwrap();
+        assert_eq!(e1.model.version, Some(1));
+        let b = reg.consult(&e1, &arch, &grid, 1, &c).unwrap();
+        assert_ne!(
+            a.pred_time_s, b.pred_time_s,
+            "consult after refit served a stale memoized argmin"
+        );
+
+        // The carried memo still works for the NEW version: the second
+        // post-publish consult is a map hit.
+        let hits0 = reg.stats().consult_memo_hits;
+        let b2 = reg.consult(&e1, &arch, &grid, 1, &c).unwrap();
+        assert_eq!(b2.pred_time_s, b.pred_time_s);
+        assert_eq!(reg.stats().consult_memo_hits, hits0 + 1);
     }
 
     #[test]

@@ -64,7 +64,7 @@ use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Duration;
 
 use crate::arch::{profile_by_name, ArchProfile};
@@ -74,23 +74,26 @@ use crate::energy::{config_grid_arch, predict_point};
 use crate::obs::expose;
 use crate::obs::metrics::{Counter, Gauge, Histogram, MetricsRegistry};
 use crate::obs::trace::TraceBuffer;
-use crate::persist::{ModelCache, ModelKey};
+use crate::persist::{CachedModel, ModelCache, ModelKey};
+use crate::service::online::{ObservedSample, OnlineManager};
 use crate::service::protocol::{
     self, batch_envelope, err_line, ok_line, Request, CODE_BAD_REQUEST, CODE_INFEASIBLE,
     CODE_INTERNAL, CODE_NOT_FOUND, CODE_OVERLOADED, MAX_NEGOTIATED_BATCH,
 };
 use crate::service::registry::ModelRegistry;
 use crate::service::ServiceConfig;
+use crate::svr::SvrModel;
 use crate::util::clock::{Clock, SystemClock};
 use crate::util::json::Json;
 use crate::util::pool::{TaskQueue, WorkerPool};
 use crate::workloads::app_by_name;
 use crate::Result;
 
-/// Request kinds, in counter order.
-const KIND_NAMES: [&str; 10] = [
+/// Request kinds, in counter order. `observe` (ISSUE 10) is appended
+/// last so the pre-existing per-kind counter indices stay stable.
+const KIND_NAMES: [&str; 11] = [
     "predict", "optimize", "train", "status", "registry", "stats", "metrics", "trace",
-    "negotiate", "shutdown",
+    "negotiate", "shutdown", "observe",
 ];
 
 /// Reactor trace ring-buffer capacity (oldest events dropped + counted
@@ -187,6 +190,18 @@ struct ServiceCtx {
     addr: SocketAddr,
     registry: ModelRegistry,
     state: ServerState,
+    /// Online-learning loop (ISSUE 10), created lazily on the first
+    /// `observe` request: a daemon that never sees observe traffic
+    /// registers no `online.*` instruments, so its `kind:"metrics"`
+    /// responses stay byte-identical to pre-online builds.
+    online: OnceLock<OnlineManager>,
+}
+
+impl ServiceCtx {
+    fn online(&self) -> &OnlineManager {
+        self.online
+            .get_or_init(|| OnlineManager::new(self.svc.online.clone()))
+    }
 }
 
 /// End-of-run accounting (`run`'s return value).
@@ -281,6 +296,7 @@ impl EcoptServer {
             addr,
             registry,
             state,
+            online: OnceLock::new(),
         });
         Ok(EcoptServer {
             listener,
@@ -904,6 +920,32 @@ fn dispatch_parsed(ctx: &Arc<ServiceCtx>, req: &Request) -> String {
             input,
             constraints,
         } => handle_optimize(ctx, app, arch.as_deref(), tag.as_deref(), *input, constraints),
+        Request::Observe {
+            app,
+            arch,
+            tag,
+            f_mhz,
+            cores,
+            input,
+            load,
+            power_w,
+            time_s,
+            seq,
+        } => handle_observe(
+            ctx,
+            app,
+            arch.as_deref(),
+            tag.as_deref(),
+            ObservedSample {
+                f_mhz: *f_mhz,
+                cores: *cores,
+                input: *input,
+                load: *load,
+                power_w: *power_w,
+                time_s: *time_s,
+            },
+            *seq,
+        ),
         Request::Train { app, arch } => handle_train(ctx, app, arch.as_deref()),
         Request::Status { job } => handle_status(ctx, *job),
         Request::Registry => handle_registry(ctx),
@@ -948,7 +990,7 @@ fn handle_predict(
     if !pt.pred_time_s.is_finite() || !pt.power_w.is_finite() || !pt.energy_j.is_finite() {
         return err_line(CODE_INTERNAL, "model produced a non-finite prediction");
     }
-    ok_line(vec![
+    let mut fields = vec![
         ("kind", Json::Str("predict".into())),
         ("model", Json::Str(entry.key.label())),
         ("f_mhz", Json::Num(pt.f_mhz as f64)),
@@ -957,7 +999,14 @@ fn handle_predict(
         ("pred_time_s", Json::Num(pt.pred_time_s)),
         ("power_w", Json::Num(pt.power_w)),
         ("energy_j", Json::Num(pt.energy_j)),
-    ])
+    ];
+    // Only refitted models carry a version; offline-trained bundles omit
+    // the field so pre-online responses stay byte-identical (protocol v1
+    // compatibility, pinned by the transcript tests).
+    if let Some(v) = entry.model.version {
+        fields.push(("model_version", Json::Num(v as f64)));
+    }
+    ok_line(fields)
 }
 
 fn handle_optimize(
@@ -999,9 +1048,117 @@ fn handle_optimize(
             if constraints.objective != crate::energy::Objective::Energy {
                 fields.push(("objective", constraints.objective.to_json()));
             }
+            // Same rule as `predict`: the field appears only once a refit
+            // has actually bumped the model.
+            if let Some(v) = entry.model.version {
+                fields.push(("model_version", Json::Num(v as f64)));
+            }
             ok_line(fields)
         }
         Err(e) => err_line(CODE_INFEASIBLE, &e.to_string()),
+    }
+}
+
+fn handle_observe(
+    ctx: &ServiceCtx,
+    app: &str,
+    arch: Option<&str>,
+    tag: Option<&str>,
+    sample: ObservedSample,
+    seq: u64,
+) -> String {
+    let profile = match resolve_arch(ctx, arch) {
+        Ok(p) => p,
+        Err(e) => return err_line(CODE_NOT_FOUND, &e.to_string()),
+    };
+    let Some(entry) = ctx.registry.resolve(app, &profile.name, tag) else {
+        return err_line(
+            CODE_NOT_FOUND,
+            &format!(
+                "no model for app '{app}' on arch '{}' — send a train request first",
+                profile.name
+            ),
+        );
+    };
+    if sample.cores == 0 || sample.cores > profile.total_cores() {
+        return err_line(
+            CODE_BAD_REQUEST,
+            &format!(
+                "cores {} outside this arch's 1..={}",
+                sample.cores,
+                profile.total_cores()
+            ),
+        );
+    }
+    if !sample.is_valid() {
+        return err_line(
+            CODE_BAD_REQUEST,
+            "observe sample rejected: load must be in [0, 1], power_w finite and >= 0, time_s finite and > 0",
+        );
+    }
+    // Residual against the model version the sample was measured under —
+    // the detector watches observed minus predicted execution time.
+    let pt = predict_point(
+        &entry.model.power,
+        &entry.model.svr,
+        &profile,
+        sample.f_mhz,
+        sample.cores,
+        sample.input,
+    );
+    let residual = sample.time_s - pt.pred_time_s;
+    let label = entry.key.label();
+    let outcome = ctx.online().ingest(&label, seq, sample, residual);
+    if outcome.tripped {
+        refit_and_publish(ctx, &entry, &label);
+    }
+    ok_line(vec![
+        ("kind", Json::Str("observe".into())),
+        ("model", Json::Str(label)),
+        ("seq", Json::Num(seq as f64)),
+        ("accepted", Json::Bool(true)),
+    ])
+}
+
+/// Drift tripped for `label`: warm-start a refit from the current model's
+/// support vectors plus the retained reservoir, bump the model version,
+/// and publish write-through (disk + every registry shard) so subsequent
+/// `predict`/`optimize` consults atomically see the new version. On any
+/// failure path the detector is re-armed without counting a refit, so a
+/// bad regime cannot trigger a refit storm.
+fn refit_and_publish(
+    ctx: &ServiceCtx,
+    entry: &Arc<crate::service::registry::ModelEntry>,
+    label: &str,
+) {
+    let samples: Vec<_> = ctx
+        .online()
+        .reservoir_samples(label)
+        .iter()
+        .map(|s| s.to_train_sample())
+        .collect();
+    // `collect_features` needs at least 10 rows; with fewer retained we
+    // re-arm the detector and keep serving the old model.
+    if samples.len() < 10 {
+        ctx.online().reset_detector(label);
+        return;
+    }
+    match SvrModel::refit_warm(&samples, &entry.model.svr, &ctx.cfg.svr) {
+        Ok(svr) => {
+            let model = CachedModel {
+                power: entry.model.power,
+                svr,
+                cv: None,
+                test_mae: None,
+                test_pae_pct: None,
+                version: Some(entry.model.version.unwrap_or(0) + 1),
+            };
+            match ctx.registry.publish(entry.key.clone(), model) {
+                Ok(_) => ctx.online().note_refit(label),
+                Err(_) => ctx.online().reset_detector(label),
+            }
+        }
+        Err(_) => ctx.online().reset_detector(label),
     }
 }
 

@@ -220,6 +220,94 @@ impl SvrModel {
         })
     }
 
+    /// Re-fit on fresh samples, warm-started from a previously trained
+    /// model (the online-learning refit path, ISSUE 10).
+    ///
+    /// The warm model's **scaler and γ are reused, not refit**: an
+    /// online refit must keep the deployed model's kernel geometry so
+    /// the carried-over dual coefficients remain meaningful seeds (and
+    /// so pre/post-refit predictions live on the same feature scale).
+    /// `C`, ε, tol, and the iteration budget come from `spec`;
+    /// `spec.gamma` and `spec.scale_features` are ignored.
+    ///
+    /// Each new scaled row is matched bit-exactly against the warm
+    /// model's training rows; matching rows inherit the warm β,
+    /// unmatched rows seed at zero. Because every SMO pair step
+    /// preserves the dual's equality constraint Σβ = 0 exactly, a seed
+    /// whose partner rows were evicted would pin the solve to a shifted
+    /// affine slice — so any imbalance is drained from the carried
+    /// coefficients (in row order, deterministically) before solving.
+    /// On an unchanged sample set the seed is the converged solution
+    /// itself and the solver terminates almost immediately with
+    /// equivalent support set and predictions (`tests/online.rs` pins
+    /// the tolerance).
+    pub fn refit_warm(
+        samples: &[TrainSample],
+        warm: &SvrModel,
+        spec: &SvrSpec,
+    ) -> Result<SvrModel> {
+        let wall = SystemClock::new();
+        let t0 = wall.now_ns();
+        let (raw, y) = collect_features(samples)?;
+        let scaler = warm.scaler.clone();
+        let x = scaler.transform(&raw);
+        let l_old = warm.beta.len();
+        let mut warm_beta = vec![0.0f64; y.len()];
+        for (i, row) in x.chunks_exact(DIMS).enumerate() {
+            for j in 0..l_old {
+                if warm.beta[j] != 0.0 && row == &warm.train_x[j * DIMS..(j + 1) * DIMS] {
+                    warm_beta[i] = warm.beta[j];
+                    break;
+                }
+            }
+        }
+        let mut imbalance: f64 = warm_beta.iter().sum();
+        if imbalance != 0.0 {
+            for wb in warm_beta.iter_mut() {
+                if imbalance > 0.0 && *wb > 0.0 {
+                    let d = wb.min(imbalance);
+                    *wb -= d;
+                    imbalance -= d;
+                } else if imbalance < 0.0 && *wb < 0.0 {
+                    let d = (-*wb).min(-imbalance);
+                    *wb += d;
+                    imbalance += d;
+                }
+                if imbalance == 0.0 {
+                    break;
+                }
+            }
+        }
+        let mut cache = smo::KernelCache::new(&x, DIMS, warm.gamma, 0);
+        let sol = smo::solve_epsilon_svr_warm(
+            &mut cache,
+            None,
+            &y,
+            &warm_beta,
+            spec.c,
+            spec.epsilon,
+            spec.tol,
+            spec.max_iter,
+            &train_smo_options(),
+        )?;
+        let n_support = sol.n_support();
+        record_fit(
+            sol.iterations,
+            cache.hits(),
+            cache.misses(),
+            wall.now_ns().saturating_sub(t0),
+        );
+        Ok(SvrModel {
+            train_x: x,
+            beta: sol.beta,
+            b: sol.b,
+            gamma: warm.gamma,
+            scaler,
+            iterations: sol.iterations,
+            n_support,
+        })
+    }
+
     /// Predict execution times (seconds) for raw (f, p, N) queries.
     pub fn predict(&self, queries: &[(Mhz, usize, u32)]) -> Vec<f64> {
         let mut q = Vec::with_capacity(queries.len() * DIMS);
@@ -412,6 +500,29 @@ mod tests {
             cache.misses() <= misses_before + idx2.len() as u64,
             "rows recomputed despite cache"
         );
+    }
+
+    #[test]
+    fn refit_warm_on_same_data_is_fast_and_equivalent() {
+        let samples = synthetic_samples();
+        let spec = spec();
+        let cold = SvrModel::train(&samples, &spec).unwrap();
+        let warm = SvrModel::refit_warm(&samples, &cold, &spec).unwrap();
+        assert!(
+            warm.iterations < cold.iterations,
+            "warm refit took {} iterations vs cold {}",
+            warm.iterations,
+            cold.iterations
+        );
+        assert_eq!(warm.gamma, cold.gamma);
+        for s in &samples {
+            let a = cold.predict_one(s.f_mhz, s.cores, s.input);
+            let b = warm.predict_one(s.f_mhz, s.cores, s.input);
+            assert!(
+                (a - b).abs() <= 1e-6 * a.abs().max(1.0),
+                "predictions diverged: {a} vs {b}"
+            );
+        }
     }
 
     #[test]

@@ -44,11 +44,17 @@ pub const SIM_SEED_DOMAIN: u64 = 0xC4A2_AC7E_0000_0006;
 /// split from the committed scenario's own seed.
 pub const FUZZ_SEED_DOMAIN: u64 = 0xC4A2_AC7E_0000_0007;
 
+/// Online-learning ingest streams (`service::online`): one stream per
+/// model key (the stream id is the key label's FNV digest), so every
+/// key's reservoir draws a decorrelated priority sequence no matter
+/// which connection — or arrival order — delivered its samples.
+pub const ONLINE_SEED_DOMAIN: u64 = 0xC4A2_AC7E_0000_0008;
+
 /// Every registered domain tag with the subsystem it belongs to.
 /// The uniqueness test below (and its integration-test twin in
 /// `rust/tests/lint_rules.rs`) iterates this table, so adding a
 /// constant without registering it here fails the build review loop.
-pub const ALL_SEED_DOMAINS: [(&str, u64); 7] = [
+pub const ALL_SEED_DOMAINS: [(&str, u64); 8] = [
     ("characterize", CHAR_SEED_DOMAIN),
     ("compare", CMP_SEED_DOMAIN),
     ("fleet", FLEET_SEED_DOMAIN),
@@ -56,6 +62,7 @@ pub const ALL_SEED_DOMAINS: [(&str, u64); 7] = [
     ("service", SERVICE_SEED_DOMAIN),
     ("sim", SIM_SEED_DOMAIN),
     ("fuzz", FUZZ_SEED_DOMAIN),
+    ("online", ONLINE_SEED_DOMAIN),
 ];
 
 #[cfg(test)]

@@ -296,3 +296,132 @@ fn sim_report_byte_identical_across_thread_counts() {
     assert!(r1.contains("| reconverge | reconverge |"));
     assert!(r1.contains("stuck") || r1.contains("48"), "fleet of 48 nodes ran");
 }
+
+#[test]
+fn online_drift_demo_byte_identical_across_thread_counts_and_refit_improves() {
+    // ISSUE 10 acceptance: the end-to-end drift demo — injected mid-run
+    // sensitivity shift → CUSUM trip → warm-started refit — must render
+    // a byte-identical report whether observations were ingested on 1,
+    // 4, or 16 threads (the seq-gated reservoir/detector make ingest
+    // order immaterial), and the refit model must STRICTLY improve the
+    // mean absolute residual on the shifted regime.
+    use std::sync::Arc;
+
+    use ecopt::service::online::{ObservedSample, OnlineConfig, OnlineManager};
+    use ecopt::svr::{SvrModel, TrainSample};
+    use ecopt::util::rng::Rng;
+    use ecopt::util::seed_domains::ONLINE_SEED_DOMAIN;
+
+    const N: u64 = 400;
+    const SHIFT_AT: u64 = N / 3;
+    const SHIFT: f64 = 1.4;
+    const LABEL: &str = "demo#n1@custom-node";
+
+    /// The workload's true pre-shift execution time (Amdahl-shaped).
+    fn base_time(f_mhz: u32, cores: usize, input: u32) -> f64 {
+        let work = 100.0 * 1.8f64.powi(input as i32 - 1);
+        work * (0.05 + 0.95 / cores as f64) * (2.2 / (f_mhz as f64 / 1000.0))
+    }
+
+    /// Observation `seq` of the demo stream — a pure function of the
+    /// sequence number, so any thread can generate its share. The
+    /// sensitivity shift lands at `SHIFT_AT`: every later execution
+    /// runs `SHIFT`x longer than the trained model believes.
+    fn stream(seq: u64) -> ObservedSample {
+        let mut rng = Rng::for_stream(0x0D0D ^ ONLINE_SEED_DOMAIN, seq);
+        let f_mhz = [1200u32, 1700, 2200][rng.below(3)];
+        let cores = 1 + rng.below(8);
+        let input = 1 + rng.below(3) as u32;
+        let factor = if seq >= SHIFT_AT { SHIFT } else { 1.0 };
+        ObservedSample {
+            f_mhz,
+            cores,
+            input,
+            load: rng.f64(),
+            power_w: 120.0 + 60.0 * rng.f64(),
+            time_s: base_time(f_mhz, cores, input) * factor + rng.gaussian() * 0.05,
+        }
+    }
+
+    // The offline-trained model: fit on the pre-shift truth.
+    let mut train = Vec::new();
+    for fi in 0..6u32 {
+        let f = 1200 + fi * 200;
+        for p in [1usize, 2, 4, 8, 16, 32] {
+            for n in 1..=3u32 {
+                train.push(TrainSample {
+                    f_mhz: f,
+                    cores: p,
+                    input: n,
+                    time_s: base_time(f, p, n),
+                });
+            }
+        }
+    }
+    let sp = SvrSpec {
+        c: 1000.0,
+        epsilon: 0.5,
+        max_iter: 200_000,
+        ..Default::default()
+    };
+    let warm = Arc::new(SvrModel::train(&train, &sp).unwrap());
+
+    let report = |threads: usize| -> String {
+        let m = Arc::new(OnlineManager::new(OnlineConfig {
+            capacity: 96,
+            ..Default::default()
+        }));
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let m = Arc::clone(&m);
+            let model = Arc::clone(&warm);
+            handles.push(std::thread::spawn(move || {
+                let mut seq = t as u64;
+                while seq < N {
+                    let s = stream(seq);
+                    let r = s.time_s - model.predict_one(s.f_mhz, s.cores, s.input);
+                    m.ingest(LABEL, seq, s, r);
+                    seq += threads as u64;
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let digest = m.state_digest(LABEL);
+        assert!(!digest.contains("trips=0"), "the shift never tripped: {digest}");
+
+        // Warm-started refit from the retained reservoir (two thirds of
+        // the stream is post-shift, so the refit tracks the new regime).
+        let retained: Vec<TrainSample> = m
+            .reservoir_samples(LABEL)
+            .iter()
+            .map(|s| s.to_train_sample())
+            .collect();
+        let refit = SvrModel::refit_warm(&retained, &warm, &sp).unwrap();
+        m.note_refit(LABEL);
+
+        // Post-refit mean absolute residual on the shifted regime must
+        // be strictly below the stale model's.
+        let (mut pre, mut post) = (0.0f64, 0.0f64);
+        for seq in SHIFT_AT..N {
+            let s = stream(seq);
+            pre += (s.time_s - warm.predict_one(s.f_mhz, s.cores, s.input)).abs();
+            post += (s.time_s - refit.predict_one(s.f_mhz, s.cores, s.input)).abs();
+        }
+        let k = (N - SHIFT_AT) as f64;
+        let (pre, post) = (pre / k, post / k);
+        assert!(
+            post < pre,
+            "refit must strictly improve the shifted-regime MAE: pre {pre} post {post}"
+        );
+        format!(
+            "{digest}\npre_mae={pre:?} post_mae={post:?}\nrefit_b={:?} refit_iter={}",
+            refit.b, refit.iterations
+        )
+    };
+
+    let r1 = report(1);
+    assert_eq!(r1, report(4), "4-thread drift demo diverged from sequential");
+    assert_eq!(r1, report(16), "16-thread drift demo diverged from sequential");
+}

@@ -14,7 +14,7 @@ use ecopt::lint::{
 };
 use ecopt::util::seed_domains::{
     ALL_SEED_DOMAINS, CHAR_SEED_DOMAIN, CMP_SEED_DOMAIN, FLEET_SEED_DOMAIN, FUZZ_SEED_DOMAIN,
-    REPLAY_SEED_DOMAIN, SERVICE_SEED_DOMAIN, SIM_SEED_DOMAIN,
+    ONLINE_SEED_DOMAIN, REPLAY_SEED_DOMAIN, SERVICE_SEED_DOMAIN, SIM_SEED_DOMAIN,
 };
 use ecopt::util::tempdir::TempDir;
 
@@ -59,7 +59,7 @@ fn design_md_documents_every_rule() {
 
 // ---------------------------------------------------------------------------
 // The seed-domain registry (this test is also what satisfies R7 for
-// the seven pub constants: the names below ARE the test references).
+// the eight pub constants: the names below ARE the test references).
 // ---------------------------------------------------------------------------
 
 #[test]
@@ -72,6 +72,7 @@ fn seed_domain_registry_is_complete_and_collision_free() {
         ("service", SERVICE_SEED_DOMAIN),
         ("sim", SIM_SEED_DOMAIN),
         ("fuzz", FUZZ_SEED_DOMAIN),
+        ("online", ONLINE_SEED_DOMAIN),
     ];
     assert_eq!(named.len(), ALL_SEED_DOMAINS.len());
     for (name, tag) in named {

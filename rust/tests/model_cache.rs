@@ -56,6 +56,7 @@ fn cache_roundtrip_is_bitwise_exact() {
                 cv: None,
                 test_mae: None,
                 test_pae_pct: None,
+                version: None,
             },
         )
         .unwrap();
@@ -112,6 +113,7 @@ fn entries_and_clear() {
         cv: None,
         test_mae: None,
         test_pae_pct: None,
+        version: None,
     };
     let k1 = ModelKey::new("a", "n1#1", "custom-node");
     let k2 = ModelKey::new("b", "n1#1", "custom-node");
@@ -135,6 +137,7 @@ fn sanitization_collisions_get_distinct_files() {
         cv: None,
         test_mae: None,
         test_pae_pct: None,
+        version: None,
     };
     // "a/b" and "a:b" sanitize identically, but the raw-key digest in
     // the file name keeps them apart: putting one must not clobber (or
@@ -182,6 +185,7 @@ fn concurrent_writers_same_key_never_produce_a_torn_file() {
             cv: None,
             test_mae: None,
             test_pae_pct: None,
+            version: None,
         }
     }
 

@@ -1,0 +1,376 @@
+//! Online-learning loop property sweep (ISSUE 10 satellites).
+//!
+//! Locks down the four contracts the drift loop rests on:
+//!
+//! 1. **CUSUM guarantees** — zero false alarms on stationary residual
+//!    streams across many seeds, detection within a few samples of an
+//!    injected step shift, and byte-identical detector/reservoir state
+//!    whether samples arrive on 1, 4, or 16 ingest threads.
+//! 2. **Warm-start equivalence** — a refit warm-started from the cached
+//!    support vectors converges on the same data to the same strong
+//!    support set and equivalent predictions as a cold fit, in fewer
+//!    iterations.
+//! 3. **Reservoir determinism** — the retained set is a pure function
+//!    of the sample multiset (split-seed contract under
+//!    [`ONLINE_SEED_DOMAIN`]), and memory stays O(capacity).
+//! 4. **Version write-through** — after a refit-publish, a registry
+//!    consult must not serve a pre-refit memoized argmin (the ISSUE 10
+//!    memo-key bugfix) and the on-disk cache entry must carry the
+//!    bumped version.
+
+use std::sync::Arc;
+use std::thread;
+
+use ecopt::arch::profile_by_name;
+use ecopt::config::{CampaignSpec, NodeSpec, SvrSpec};
+use ecopt::energy::{config_grid, Constraints};
+use ecopt::persist::{CachedModel, ModelCache, ModelKey};
+use ecopt::powermodel::PowerModel;
+use ecopt::service::online::{
+    CusumDetector, ObservedSample, OnlineConfig, OnlineManager, Reservoir,
+};
+use ecopt::service::ModelRegistry;
+use ecopt::svr::{SvrModel, TrainSample};
+use ecopt::util::rng::Rng;
+use ecopt::util::seed_domains::ONLINE_SEED_DOMAIN;
+use ecopt::util::tempdir::TempDir;
+
+// ---------------------------------------------------------------------------
+// Shared fixtures
+// ---------------------------------------------------------------------------
+
+/// Amdahl-shaped synthetic characterization set (same family the SVR
+/// unit tests train on): smooth in (f, p, n), ~100 rows.
+fn synthetic_samples() -> Vec<TrainSample> {
+    let mut out = Vec::new();
+    for fi in 0..6u32 {
+        let f = 1200 + fi * 200;
+        for p in [1usize, 2, 4, 8, 16, 32] {
+            for n in 1..=3u32 {
+                let work = 100.0 * 1.8f64.powi(n as i32 - 1);
+                let t = work * (0.05 + 0.95 / p as f64) * (2.2 / (f as f64 / 1000.0));
+                out.push(TrainSample {
+                    f_mhz: f,
+                    cores: p,
+                    input: n,
+                    time_s: t,
+                });
+            }
+        }
+    }
+    out
+}
+
+fn spec() -> SvrSpec {
+    SvrSpec {
+        c: 1000.0,
+        gamma: 0.5,
+        epsilon: 0.5,
+        max_iter: 200_000,
+        ..Default::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1. CUSUM property sweep
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cusum_false_alarm_rate_is_zero_on_stationary_streams() {
+    // 32 seeded stationary streams x 2000 residuals each: with an 8σ
+    // threshold and a 1σ allowance the in-control ARL is astronomically
+    // larger than the stream, so a single alarm is a regression.
+    for seed in 0..32u64 {
+        let mut det = CusumDetector::new(8.0, 1.0, 16);
+        let mut rng = Rng::seed_from_u64(seed ^ ONLINE_SEED_DOMAIN);
+        for i in 0..2_000 {
+            let r = 3.0 + rng.gaussian() * 0.25;
+            assert!(!det.observe(r), "seed {seed}: false alarm at residual {i}");
+        }
+        assert_eq!(det.trips(), 0, "seed {seed}");
+    }
+}
+
+#[test]
+fn cusum_detects_an_injected_step_within_k_samples() {
+    // A 10σ step must trip within K = 8 post-shift samples, whatever
+    // the calibration stream looked like.
+    const K: usize = 8;
+    for seed in 0..32u64 {
+        let mut det = CusumDetector::new(8.0, 1.0, 16);
+        let mut rng = Rng::seed_from_u64(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        for _ in 0..200 {
+            assert!(!det.observe(1.0 + rng.gaussian() * 0.1), "seed {seed}");
+        }
+        let mut tripped = false;
+        for _ in 0..K {
+            if det.observe(2.0 + rng.gaussian() * 0.1) {
+                tripped = true;
+                break;
+            }
+        }
+        assert!(tripped, "seed {seed}: no detection within {K} shifted samples");
+        assert_eq!(det.trips(), 1, "seed {seed}");
+    }
+}
+
+/// Stream length for the thread-identity sweep (shift injected halfway).
+const STREAM_N: u64 = 600;
+
+/// Sample `seq` of the synthetic observation stream — a pure function
+/// of the sequence number, so any thread can generate its share.
+fn stream_sample(seq: u64) -> (ObservedSample, f64) {
+    let mut rng = Rng::for_stream(0xD1F7 ^ ONLINE_SEED_DOMAIN, seq);
+    let time_base = 5.0 + rng.gaussian() * 0.2;
+    let time_s = if seq >= STREAM_N / 2 {
+        time_base * 1.5
+    } else {
+        time_base
+    };
+    let s = ObservedSample {
+        f_mhz: [1200u32, 1700, 2200][rng.below(3)],
+        cores: 1 + rng.below(16),
+        input: 1 + rng.below(3) as u32,
+        load: rng.f64(),
+        power_w: 80.0 + 40.0 * rng.f64(),
+        time_s,
+    };
+    (s, time_s - 5.0)
+}
+
+#[test]
+fn detector_state_is_byte_identical_across_1_4_16_ingest_threads() {
+    let digest_for = |threads: usize| {
+        let m = Arc::new(OnlineManager::new(OnlineConfig::default()));
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let m = Arc::clone(&m);
+            handles.push(thread::spawn(move || {
+                let mut seq = t as u64;
+                while seq < STREAM_N {
+                    let (s, r) = stream_sample(seq);
+                    m.ingest("app#tag@arch", seq, s, r);
+                    seq += threads as u64;
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        m.state_digest("app#tag@arch")
+    };
+    let d1 = digest_for(1);
+    let d4 = digest_for(4);
+    let d16 = digest_for(16);
+    // The digest renders every float with full `{:?}` precision, so
+    // string equality is byte equality of the whole online state:
+    // reservoir contents, CUSUM calibration, statistic, and trip count.
+    assert_eq!(d1, d4, "4-thread ingest diverged from sequential");
+    assert_eq!(d1, d16, "16-thread ingest diverged from sequential");
+    // The injected halfway shift must have tripped the detector in all
+    // three runs (the lifetime trip count is part of the shared digest;
+    // without a refit-reset the statistic stays tripped, so the exact
+    // count is large but identical everywhere).
+    assert!(!d1.contains("trips=0"), "shift never tripped: {d1}");
+}
+
+// ---------------------------------------------------------------------------
+// 2. Warm-start equivalence
+// ---------------------------------------------------------------------------
+
+#[test]
+fn warm_refit_matches_cold_fit_on_the_same_data() {
+    let samples = synthetic_samples();
+    let sp = spec();
+    let cold = SvrModel::train(&samples, &sp).unwrap();
+    let warm = SvrModel::refit_warm(&samples, &cold, &sp).unwrap();
+
+    // Seeding the solver at the cold optimum must cost almost nothing.
+    assert!(
+        warm.iterations < cold.iterations,
+        "warm {} vs cold {} iterations",
+        warm.iterations,
+        cold.iterations
+    );
+    assert_eq!(warm.gamma.to_bits(), cold.gamma.to_bits());
+
+    // Same strong support set: every vector carrying more than 5% of
+    // the largest coefficient magnitude in either model must be a
+    // support vector in both (marginal ~0 coefficients may legally
+    // flicker between two KKT-optimal points within tol).
+    let strong = |m: &SvrModel| {
+        let max = m.beta.iter().fold(0.0f64, |a, b| a.max(b.abs()));
+        m.beta
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.abs() > 0.05 * max)
+            .map(|(i, _)| i)
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(strong(&cold), strong(&warm), "strong support sets differ");
+
+    // Equivalent predictions over the whole grid (documented tolerance:
+    // 1e-6 relative — bit-equality is not promised because the warm
+    // path may stop at a different KKT-optimal point within tol).
+    for s in &samples {
+        let a = cold.predict_one(s.f_mhz, s.cores, s.input);
+        let b = warm.predict_one(s.f_mhz, s.cores, s.input);
+        assert!(
+            (a - b).abs() <= 1e-6 * a.abs().max(1.0),
+            "({}, {}, {}): cold {a} vs warm {b}",
+            s.f_mhz,
+            s.cores,
+            s.input
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. Reservoir determinism + eviction bound
+// ---------------------------------------------------------------------------
+
+/// A distinct synthetic observation per index (times all differ).
+fn obs(i: usize) -> ObservedSample {
+    ObservedSample {
+        f_mhz: 1200 + 200 * (i as u32 % 6),
+        cores: 1 + i % 32,
+        input: 1 + (i as u32 % 3),
+        load: (i % 100) as f64 / 100.0,
+        power_w: 90.0 + (i % 7) as f64,
+        time_s: 1.0 + i as f64 * 1e-3,
+    }
+}
+
+#[test]
+fn same_seed_reservoir_retains_identical_set_for_any_arrival_order() {
+    let mut order: Vec<ObservedSample> = (0..500).map(obs).collect();
+    let retained = |order: &[ObservedSample]| {
+        let mut res = Reservoir::new(0xAB ^ ONLINE_SEED_DOMAIN, 32);
+        for s in order {
+            res.ingest(*s);
+        }
+        res.samples()
+    };
+    let forward = retained(&order);
+    assert_eq!(forward.len(), 32);
+
+    order.reverse();
+    assert_eq!(forward, retained(&order), "reversed arrival changed the set");
+
+    let mut rng = Rng::seed_from_u64(7);
+    rng.shuffle(&mut order);
+    assert_eq!(forward, retained(&order), "shuffled arrival changed the set");
+
+    // Different split seeds retain different sets from the same stream
+    // (the per-key seed split is what makes keys independent).
+    let mut other = Reservoir::new(0xAC ^ ONLINE_SEED_DOMAIN, 32);
+    for s in &order {
+        other.ingest(*s);
+    }
+    assert_ne!(forward, other.samples());
+}
+
+#[test]
+fn reservoir_memory_stays_bounded_by_capacity() {
+    let mut res = Reservoir::new(0x5EED, 16);
+    for i in 0..10_000 {
+        res.ingest(obs(i));
+        assert!(res.len() <= res.capacity(), "overflow at sample {i}");
+    }
+    assert_eq!(res.len(), 16);
+    // Duplicates collapse instead of occupying extra slots.
+    let before = res.samples();
+    for s in &before {
+        res.ingest(*s);
+    }
+    assert_eq!(res.samples(), before);
+}
+
+// ---------------------------------------------------------------------------
+// 4. Version bump: memo invalidation + disk write-through
+// ---------------------------------------------------------------------------
+
+#[test]
+fn refit_publish_bumps_version_invalidates_memo_and_writes_through() {
+    let dir = TempDir::new().unwrap();
+    let registry = ModelRegistry::new(
+        4,
+        64 * 1024 * 1024,
+        Some(ModelCache::open(dir.path()).unwrap()),
+    );
+    let key = ModelKey::new("probe", "n1#cafe", "custom-node");
+    let samples = synthetic_samples();
+    let sp = spec();
+    let cold = SvrModel::train(&samples, &sp).unwrap();
+    registry
+        .insert(
+            key.clone(),
+            CachedModel {
+                power: PowerModel::paper_eq9(),
+                svr: cold.clone(),
+                cv: None,
+                test_mae: None,
+                test_pae_pct: None,
+                version: None,
+            },
+        )
+        .unwrap();
+
+    let arch = profile_by_name("custom-node").unwrap();
+    let grid = config_grid(&CampaignSpec::default(), &NodeSpec::default());
+    let entry = registry.resolve("probe", "custom-node", None).expect("inserted");
+    let before = registry
+        .consult(&entry, &arch, &grid, 1, &Constraints::default())
+        .unwrap();
+
+    // The workload shifted: refit (warm) on 1.5x times and publish with
+    // a bumped version.
+    let shifted: Vec<TrainSample> = samples
+        .iter()
+        .map(|s| TrainSample {
+            time_s: s.time_s * 1.5,
+            ..*s
+        })
+        .collect();
+    let refit = SvrModel::refit_warm(&shifted, &cold, &sp).unwrap();
+    registry
+        .publish(
+            key.clone(),
+            CachedModel {
+                power: PowerModel::paper_eq9(),
+                svr: refit,
+                cv: None,
+                test_mae: None,
+                test_pae_pct: None,
+                version: Some(1),
+            },
+        )
+        .unwrap();
+
+    // A consult after the publish must see the refit model. Before the
+    // ISSUE 10 memo-key fix this returned `before` verbatim: the memo
+    // map survives the publish (by design — constraint sets are
+    // version-independent work) but the key did not include the model
+    // version, so the stale argmin kept serving.
+    let bumped = registry.resolve("probe", "custom-node", None).expect("still listed");
+    assert_eq!(bumped.model.version, Some(1));
+    let after = registry
+        .consult(&bumped, &arch, &grid, 1, &Constraints::default())
+        .unwrap();
+    assert_ne!(
+        before.pred_time_s.to_bits(),
+        after.pred_time_s.to_bits(),
+        "consult served a pre-refit memoized prediction"
+    );
+
+    // Write-through: a second cache handle on the same directory reads
+    // the bumped bundle back bit-for-bit.
+    let on_disk = ModelCache::open(dir.path())
+        .unwrap()
+        .get(&key)
+        .unwrap()
+        .expect("published entry on disk");
+    assert_eq!(on_disk.version, Some(1));
+    assert_eq!(on_disk.svr.beta, bumped.model.svr.beta);
+    assert_eq!(on_disk.svr.b.to_bits(), bumped.model.svr.b.to_bits());
+}

@@ -52,6 +52,7 @@ fn trained_bundle() -> CachedModel {
         cv: None,
         test_mae: None,
         test_pae_pct: None,
+        version: None,
     }
 }
 
